@@ -1,0 +1,63 @@
+//! Tuning-grid sweep through the coordinator (the paper's §5 workflow:
+//! "running HP-CONCORD on a single (λ1, λ2) pair took ≈37 minutes", so
+//! the 88-point grid is an embarrassingly parallel scheduling problem).
+//! Demonstrates the leader/worker queue, per-job statistics, and
+//! density-targeted model selection.
+//!
+//! ```bash
+//! cargo run --release --example grid_sweep
+//! ```
+
+use hpconcord::concord::{ConcordConfig, Variant};
+use hpconcord::coordinator::{run_sweep, select_by_density, GridSpec};
+use hpconcord::metrics::support_metrics;
+use hpconcord::prelude::*;
+use hpconcord::util::Table;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let problem = gen::random_problem(96, 120, 6, &mut rng);
+    let true_density =
+        (problem.omega0.nnz() - 96) as f64 / (96.0 * 95.0);
+
+    let grid = GridSpec {
+        lambda1: vec![0.15, 0.25, 0.35, 0.5, 0.7],
+        lambda2: vec![0.0, 0.1, 0.25],
+    };
+    let base = ConcordConfig {
+        tol: 1e-4,
+        max_iter: 150,
+        variant: Variant::Cov,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let out = run_sweep(&problem.x, &grid, &base, 4);
+    println!(
+        "{} jobs on {} workers in {:.2}s",
+        out.results.len(),
+        out.workers,
+        t0.elapsed().as_secs_f64()
+    );
+
+    let mut table = Table::new(&["λ1", "λ2", "iters", "density%", "PPV%", "recall%"]);
+    for r in &out.results {
+        let m = support_metrics(&r.fit.omega, &problem.omega0, 1e-8);
+        table.row(vec![
+            format!("{:.2}", r.job.cfg.lambda1),
+            format!("{:.2}", r.job.cfg.lambda2),
+            format!("{}", r.fit.iterations),
+            format!("{:.2}", 100.0 * r.density),
+            format!("{:.1}", 100.0 * m.ppv),
+            format!("{:.1}", 100.0 * m.recall),
+        ]);
+    }
+    print!("{table}");
+
+    let chosen = select_by_density(&out, true_density).unwrap();
+    println!(
+        "density-matched selection (target {:.2}%): λ1 = {}, λ2 = {}",
+        100.0 * true_density,
+        chosen.job.cfg.lambda1,
+        chosen.job.cfg.lambda2
+    );
+}

@@ -1,0 +1,122 @@
+"""AOT lowering: JAX/Pallas (L2+L1) -> HLO *text* artifacts for the Rust
+runtime (L3).
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (graph, shape) plus ``manifest.txt``,
+a line-per-artifact key=value index the Rust runtime parses:
+
+    name=trial_p256 kind=trial p=256 file=trial_p256.hlo.txt
+
+The artifact set covers the single-node hot path (fused line-search trial,
+gradient+objective, gram) at canonical sizes, and plain GEMMs at the
+distributed algorithm's local-block shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+DTYPE = jnp.float64
+
+# Canonical single-node problem sizes (p) and gram shapes (n, p).
+TRIAL_SIZES = (64, 128, 256)
+GRAM_SHAPES = ((100, 256), (50, 128))
+MATMUL_SHAPES = ((128, 128, 128), (256, 256, 256))
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def artifact_plan():
+    """Yields (name, manifest_extras, fn, arg_specs)."""
+    for p in TRIAL_SIZES:
+        pp = _spec(p, p)
+        one = _spec(1)
+        yield (
+            f"trial_p{p}",
+            {"kind": "trial", "p": p},
+            model.concord_trial,
+            (pp, pp, pp, one, one, one, one),
+        )
+        yield (
+            f"gradobj_p{p}",
+            {"kind": "gradobj", "p": p},
+            model.gradient_obj,
+            (pp, pp, one),
+        )
+    for n, p in GRAM_SHAPES:
+        yield (
+            f"gram_n{n}_p{p}",
+            {"kind": "gram", "n": n, "p": p},
+            model.gram,
+            (_spec(n, p),),
+        )
+    for m, k, n in MATMUL_SHAPES:
+        yield (
+            f"matmul_{m}x{k}x{n}",
+            {"kind": "matmul", "m": m, "k": k, "n": n},
+            model.matmul,
+            (_spec(m, k), _spec(k, n)),
+        )
+
+
+def emit(out_dir: str, verbose: bool = True) -> int:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    count = 0
+    for name, extras, fn, specs in artifact_plan():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        kv = " ".join(f"{k}={v}" for k, v in extras.items())
+        manifest_lines.append(f"name={name} {kv} file={fname}")
+        count += 1
+        if verbose:
+            print(f"  {fname}  ({len(text)} chars)", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return count
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args()
+    n = emit(args.out, verbose=not args.quiet)
+    print(f"wrote {n} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

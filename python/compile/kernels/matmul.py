@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: tiled local matrix multiplication.
+
+This is the MKL-replacement local GEMM under HP-CONCORD's distributed
+algorithm, re-thought for a TPU-like memory hierarchy (DESIGN.md
+§Hardware-Adaptation):
+
+- the (bm, bk) x (bk, bn) tiles are the HBM->VMEM working set, expressed
+  with ``BlockSpec`` index maps instead of threadblock indexing;
+- the K loop is the innermost grid dimension so the output tile stays
+  resident in VMEM as an accumulator across K steps (double-buffered input
+  streams on real hardware);
+- the default 128x128 tile matches the MXU systolic array shape.
+
+``interpret=True`` is mandatory on this image: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+both the python tests and the Rust runtime can run bit-identically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Grid point (i, j, l): accumulate X[i,l] @ Y[l,j] into O[i,j].
+
+    The accumulator initialisation is guarded on l == 0 so O[i,j] lives in
+    VMEM across the whole K sweep.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return (v + b - 1) // b * b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 128, bk: int = 128,
+           bn: int = 128) -> jnp.ndarray:
+    """C = X @ Y with (bm, bk, bn) VMEM tiling.
+
+    Inputs whose dimensions are not multiples of the tile shape are
+    zero-padded (zeros contribute nothing to the accumulation) and the
+    result is sliced back, so any shape is accepted.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm_, bk_, bn_ = min(bm, _ceil_to(m, 8)), min(bk, _ceil_to(k, 8)), min(bn, _ceil_to(n, 8))
+    mp, kp, np_ = _ceil_to(m, bm_), _ceil_to(k, bk_), _ceil_to(n, bn_)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm_, np_ // bn_, kp // bk_),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def gram(x: jnp.ndarray, *, bm: int = 128, bk: int = 128,
+         bn: int = 128) -> jnp.ndarray:
+    """S = (1/n) X^T X through the tiled kernel (paper §2, Cov variant)."""
+    n = x.shape[0]
+    return matmul(x.T, x, bm=bm, bk=bk, bn=bn) / n
+
+
+def vmem_footprint_bytes(bm: int, bk: int, bn: int, itemsize: int = 8) -> int:
+    """Estimated VMEM working set of one grid step: one X tile, one Y tile,
+    one resident output accumulator tile (double-buffering of the two input
+    streams doubles their share on real hardware).
+    """
+    return itemsize * (2 * (bm * bk + bk * bn) + bm * bn)
+
+
+def mxu_utilization_estimate(bm: int, bk: int, bn: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes kept busy by a (bm, bk, bn) tile: each matmul
+    dimension is utilized ceil-free as dim/ceil(dim/mxu)/mxu.
+    """
+
+    def eff(d: int) -> float:
+        import math
+
+        return d / (math.ceil(d / mxu) * mxu)
+
+    return eff(bm) * eff(bk) * eff(bn)

@@ -1,0 +1,128 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in ``matmul.py`` and ``concord.py`` has a reference here,
+written with plain ``jax.numpy`` so the semantics are unambiguous. The
+pytest suite (``python/tests``) sweeps shapes/values with hypothesis and
+asserts ``assert_allclose`` between kernel and reference.
+
+These functions are also the executable specification of the CONCORD /
+PseudoNet math (Algorithm 1 of the paper): the Rust solver implements the
+same formulas and its unit tests pin the same closed-form cases.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """C = X @ Y."""
+    return x @ y
+
+
+def gram(x: jnp.ndarray) -> jnp.ndarray:
+    """Sample covariance S = (1/n) X^T X for X in R^{n x p} (paper §2)."""
+    n = x.shape[0]
+    return (x.T @ x) / n
+
+
+def soft_threshold(z: jnp.ndarray, alpha) -> jnp.ndarray:
+    """Elementwise soft-thresholding operator S_alpha (paper eq. (2))."""
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - alpha, 0.0)
+
+
+def gradient(omega: jnp.ndarray, w: jnp.ndarray, lam2) -> jnp.ndarray:
+    """Smooth-part gradient (Algorithm 2, line 6):
+
+        G = -(Omega_D)^{-1} + (W + W^T)/2 + lam2 * Omega,
+
+    where W = Omega @ S and Omega_D is the diagonal part of Omega.
+    """
+    d = jnp.diag(omega)
+    return -jnp.diag(1.0 / d) + 0.5 * (w + w.T) + lam2 * omega
+
+
+def prox_step(omega: jnp.ndarray, g: jnp.ndarray, tau, lam1) -> jnp.ndarray:
+    """Proximal step (Algorithm 2, line 9):
+
+        Omega' = S_{tau*lam1}(Omega - tau*G)   off the diagonal,
+        Omega' = Omega - tau*G                 on the diagonal.
+
+    The l1 penalty applies to Omega_X (off-diagonal entries) only, so the
+    diagonal is not thresholded.
+    """
+    z = omega - tau * g
+    off = soft_threshold(z, tau * lam1)
+    p = omega.shape[0]
+    eye = jnp.eye(p, dtype=omega.dtype)
+    return off * (1.0 - eye) + z * eye
+
+
+def objective_smooth(omega: jnp.ndarray, w: jnp.ndarray, lam2):
+    """Smooth part of the CONCORD/PseudoNet objective:
+
+        g(Omega) = -sum_i log(Omega_ii) + tr(W Omega)/2 + lam2/2 ||Omega||_F^2
+
+    with W = Omega @ S, so tr(W Omega) = tr(Omega S Omega); Omega stays
+    symmetric through the iteration, hence tr(W Omega) = sum(W * Omega).
+
+    NOTE: this is the function whose exact gradient is Algorithm 2's
+        G = -(Omega_D)^{-1} + (W + W^T)/2 + lam2*Omega.
+    The paper's line 7 prints the doubled log/trace form, which is
+    inconsistent with its own gradient line (it would need 2x the log and
+    trace gradients but 1x the lam2 term); using the consistent pair keeps
+    the backtracking line search textbook-valid, and only reparametrizes
+    (lam1, lam2) by a factor of 2 relative to criterion (1) — harmless, as
+    every experiment sweeps the lambda grid. See DESIGN.md.
+    """
+    d = jnp.diag(omega)
+    return (
+        -jnp.sum(jnp.log(d))
+        + 0.5 * jnp.sum(w * omega)
+        + 0.5 * lam2 * jnp.sum(omega * omega)
+    )
+
+
+def objective_smooth_obs(omega: jnp.ndarray, y: jnp.ndarray, n, lam2):
+    """Obs-variant smooth objective (Algorithm 3 analogue):
+
+        g(Omega) = -sum_i log(Omega_ii) + (1/2n)||Y||_F^2
+                   + lam2/2 ||Omega||_F^2,
+
+    with Y = Omega @ X^T (un-normalized; the 1/n shows up here), since
+    tr(Omega S Omega) = ||Omega X^T||_F^2 / n. Same consistent-gradient
+    normalization as ``objective_smooth``.
+    """
+    d = jnp.diag(omega)
+    return (
+        -jnp.sum(jnp.log(d))
+        + 0.5 * jnp.sum(y * y) / n
+        + 0.5 * lam2 * jnp.sum(omega * omega)
+    )
+
+
+def linesearch_rhs(omega, omega_new, g_val, grad, tau):
+    """Sufficient-decrease RHS (Algorithm 2, line 12):
+
+        g(Omega) - tr((Omega - Omega')^T G) + 1/(2 tau) ||Omega - Omega'||_F^2
+    """
+    diff = omega - omega_new
+    return (
+        g_val
+        - jnp.sum(diff * grad)
+        + jnp.sum(diff * diff) / (2.0 * tau)
+    )
+
+
+def concord_trial(omega, grad, s, g_prev, tau, lam1, lam2):
+    """One fused line-search trial for the Cov variant: proximal step, new
+    W = Omega' S, new objective, and the sufficient-decrease RHS.
+
+    Returns (omega_new, w_new, g_new, rhs); the trial is accepted when
+    g_new <= rhs.
+    """
+    omega_new = prox_step(omega, grad, tau, lam1)
+    w_new = omega_new @ s
+    g_new = objective_smooth(omega_new, w_new, lam2)
+    rhs = linesearch_rhs(omega, omega_new, g_prev, grad, tau)
+    return omega_new, w_new, g_new, rhs

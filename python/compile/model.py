@@ -1,0 +1,119 @@
+"""L2: CONCORD/PseudoNet compute graphs in JAX, composed from the L1
+Pallas kernels (``kernels.matmul``, ``kernels.concord``).
+
+These functions are the *build-time* definition of the math the Rust
+coordinator drives at runtime. ``aot.py`` lowers each of them, for a grid
+of canonical shapes, to HLO text artifacts that the Rust runtime loads via
+PJRT. Python never runs on the request path.
+
+Scalar-ish inputs (tau, lam1, lam2, g_prev) are passed as shape-(1,)
+arrays: rank-1 literals are the simplest common denominator between jax
+lowering and the ``xla`` crate's Literal constructors.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import concord as k
+from .kernels import matmul as mm
+
+
+def gram(x: jnp.ndarray) -> jnp.ndarray:
+    """S = (1/n) X^T X (Algorithm 2, line 2), via the tiled Pallas GEMM."""
+    return mm.gram(x)
+
+
+def w_step(omega: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """W = Omega @ S (Algorithm 2, lines 3/10)."""
+    return mm.matmul(omega, s)
+
+
+def gradient_obj(omega: jnp.ndarray, w: jnp.ndarray, lam2: jnp.ndarray):
+    """Start-of-iteration fused graph (Algorithm 2, lines 6-7):
+
+    returns (G, g(Omega)) from the current iterate and W = Omega S.
+    """
+    lam2s = lam2[0]
+    g_mat = k.gradient(omega, w, lam2s)
+    parts = k.objective_parts(omega, w)
+    g_val = -parts[0] + 0.5 * parts[1] + 0.5 * lam2s * parts[2]
+    return g_mat, g_val.reshape((1,))
+
+
+def concord_trial(
+    omega: jnp.ndarray,
+    grad: jnp.ndarray,
+    s: jnp.ndarray,
+    g_prev: jnp.ndarray,
+    tau: jnp.ndarray,
+    lam1: jnp.ndarray,
+    lam2: jnp.ndarray,
+):
+    """One fused line-search trial (Algorithm 2, lines 9-12), Cov variant:
+
+        Omega' = S_{tau lam1}(Omega - tau G)      (Pallas prox kernel)
+        W'     = Omega' S                          (Pallas GEMM)
+        g'     = -sum log diag + tr(W'Omega')/2 + lam2/2 ||Omega'||_F^2
+        rhs    = g - tr((Omega-Omega')^T G) + ||Omega-Omega'||_F^2 / (2 tau)
+
+    Returns (Omega', W', g', rhs, accept) with accept = 1.0 iff g' <= rhs.
+    The L3 coordinator halves tau and re-invokes until accept.
+    """
+    taus, lam1s, lam2s = tau[0], lam1[0], lam2[0]
+    omega_new = k.prox(omega, grad, taus, lam1s)
+    w_new = mm.matmul(omega_new, s)
+    parts = k.objective_parts(omega_new, w_new)
+    g_new = -parts[0] + 0.5 * parts[1] + 0.5 * lam2s * parts[2]
+    ls = k.linesearch_parts(omega, omega_new, grad)
+    rhs = g_prev[0] - ls[0] + ls[1] / (2.0 * taus)
+    accept = (g_new <= rhs).astype(omega.dtype)
+    return (
+        omega_new,
+        w_new,
+        g_new.reshape((1,)),
+        rhs.reshape((1,)),
+        accept.reshape((1,)),
+    )
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain tiled GEMM artifact (the distributed algorithm's local-block
+    multiply; also used by the runtime micro-benchmarks)."""
+    return mm.matmul(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Reference (pure-jnp) composition used by the python test-suite to check
+# the kernel-backed graphs end to end.
+# ---------------------------------------------------------------------------
+
+def concord_fit_reference(x: jnp.ndarray, lam1: float, lam2: float,
+                          tol: float = 1e-6, max_iter: int = 500):
+    """Reference CONCORD solver (Algorithm 1) in pure jnp; ground truth for
+    both the python tests and the Rust solver's golden-value tests."""
+    from .kernels import ref
+
+    n, p = x.shape
+    s = ref.gram(x)
+    omega = jnp.eye(p, dtype=x.dtype)
+    w = omega @ s
+    iters = 0
+    for it in range(max_iter):
+        iters = it + 1
+        grad = ref.gradient(omega, w, lam2)
+        g_val = ref.objective_smooth(omega, w, lam2)
+        tau = 1.0
+        while True:
+            omega_new, w_new, g_new, rhs = ref.concord_trial(
+                omega, grad, s, g_val, tau, lam1, lam2
+            )
+            if g_new <= rhs or tau < 1e-12:
+                break
+            tau *= 0.5
+        delta = jnp.max(jnp.abs(omega_new - omega))
+        omega, w = omega_new, w_new
+        if delta < tol:
+            break
+    return omega, iters

@@ -1,0 +1,7 @@
+"""Pytest root conftest: enable f64 before any kernel module is imported
+(the artifacts and the Rust runtime are double precision, matching the
+paper's Edison runs)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

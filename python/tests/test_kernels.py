@@ -1,0 +1,204 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, seeds, block sizes, and dtypes; every kernel is
+asserted allclose against its reference. These run at build time — the
+artifacts are only emitted once this suite is green (`make test`).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import concord as k
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape, dtype=np.float64):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def _spd_omega(rng, p, dtype=np.float64):
+    """A symmetric iterate with a strictly positive diagonal, as the
+    CONCORD iterates are (diagonal entries enter through log)."""
+    a = rng.standard_normal((p, p)) * 0.1
+    a = (a + a.T) / 2
+    np.fill_diagonal(a, 1.0 + rng.random(p))
+    return jnp.asarray(a, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul / gram
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    kk=st.integers(1, 40),
+    n=st.integers(1, 40),
+    bm=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_matmul_matches_ref(m, kk, n, bm, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, m, kk), _rand(rng, kk, n)
+    got = mm.matmul(x, y, bm=bm, bk=bm, bn=bm)
+    assert_allclose(np.asarray(got), np.asarray(ref.matmul(x, y)),
+                    rtol=1e-12, atol=1e-12)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 30),
+    p=st.integers(1, 30),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_gram_matches_ref(n, p, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, p)
+    assert_allclose(np.asarray(mm.gram(x)), np.asarray(ref.gram(x)),
+                    rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_matmul_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x, y = _rand(rng, 17, 9, dtype=dtype), _rand(rng, 9, 23, dtype=dtype)
+    got = mm.matmul(x, y)
+    assert got.dtype == x.dtype
+    tol = 1e-5 if dtype == np.float32 else 1e-12
+    assert_allclose(np.asarray(got), np.asarray(ref.matmul(x, y)),
+                    rtol=tol, atol=tol)
+
+
+def test_matmul_identity():
+    x = jnp.eye(16, dtype=jnp.float64)
+    assert_allclose(np.asarray(mm.matmul(x, x)), np.eye(16))
+
+
+def test_vmem_and_mxu_estimates():
+    # 128^3 f64 tiles: 2*(128*128*8)*2 inputs + one output tile.
+    assert mm.vmem_footprint_bytes(128, 128, 128) == 8 * (4 * 128 * 128 + 128 * 128)
+    assert mm.mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mm.mxu_utilization_estimate(64, 128, 128) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# gradient
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    p=st.sampled_from([2, 3, 8, 16, 24]),
+    block=st.sampled_from([4, 8, 128]),
+    lam2=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_gradient_matches_ref(p, block, lam2, seed):
+    rng = np.random.default_rng(seed)
+    omega = _spd_omega(rng, p)
+    w = _rand(rng, p, p)
+    got = k.gradient(omega, w, lam2, block=block)
+    want = ref.gradient(omega, w, lam2)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+def test_gradient_symmetry():
+    """G is symmetric whenever Omega is (drives iterate symmetry)."""
+    rng = np.random.default_rng(7)
+    omega = _spd_omega(rng, 12)
+    w = _rand(rng, 12, 12)
+    g = np.asarray(k.gradient(omega, w, 0.5))
+    assert_allclose(g, g.T, rtol=0, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# prox
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    p=st.sampled_from([2, 5, 8, 16]),
+    tau=st.floats(1e-3, 1.0),
+    lam1=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_prox_matches_ref(p, tau, lam1, seed):
+    rng = np.random.default_rng(seed)
+    omega, g = _spd_omega(rng, p), _rand(rng, p, p)
+    got = k.prox(omega, g, tau, lam1, block=8)
+    want = ref.prox_step(omega, g, tau, lam1)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+def test_prox_diagonal_not_thresholded():
+    """The l1 penalty is on Omega_X only: diagonal passes through
+    un-thresholded even with a huge lam1."""
+    p = 6
+    omega = jnp.eye(p, dtype=jnp.float64) * 3.0
+    g = jnp.zeros((p, p), dtype=jnp.float64)
+    out = np.asarray(k.prox(omega, g, 1.0, 100.0))
+    assert_allclose(np.diag(out), 3.0 * np.ones(p))
+    assert_allclose(out - np.diag(np.diag(out)), 0.0)
+
+
+def test_prox_kills_small_offdiagonals():
+    rng = np.random.default_rng(3)
+    p = 8
+    omega = _spd_omega(rng, p) * 0.01 + jnp.eye(p)
+    g = jnp.zeros((p, p), dtype=jnp.float64)
+    out = np.asarray(k.prox(omega, g, 1.0, 1.0))
+    off = out - np.diag(np.diag(out))
+    assert np.all(off == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# objective / line-search reductions
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    p=st.sampled_from([2, 4, 8, 16, 24]),
+    block=st.sampled_from([4, 8, 128]),
+    lam2=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_objective_matches_ref(p, block, lam2, seed):
+    rng = np.random.default_rng(seed)
+    omega, w = _spd_omega(rng, p), _rand(rng, p, p)
+    parts = np.asarray(k.objective_parts(omega, w, block=block))
+    got = -parts[0] + 0.5 * parts[1] + 0.5 * lam2 * parts[2]
+    want = float(ref.objective_smooth(omega, w, lam2))
+    assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.sampled_from([2, 4, 8, 16]),
+    tau=st.floats(1e-3, 1.0),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_linesearch_matches_ref(p, tau, seed):
+    rng = np.random.default_rng(seed)
+    omega, new, g = _spd_omega(rng, p), _spd_omega(rng, p), _rand(rng, p, p)
+    parts = np.asarray(k.linesearch_parts(omega, new, g, block=8))
+    g_val = 1.234
+    got = g_val - parts[0] + parts[1] / (2.0 * tau)
+    want = float(ref.linesearch_rhs(omega, new, g_val, g, tau))
+    assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_objective_identity_omega():
+    """Closed form: Omega = I gives g = tr(S)/2 + lam2*p/2."""
+    p = 8
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 20, p)
+    s = ref.gram(x)
+    omega = jnp.eye(p, dtype=jnp.float64)
+    parts = np.asarray(k.objective_parts(omega, omega @ s))
+    got = -parts[0] + 0.5 * parts[1] + 0.5 * 0.4 * parts[2]
+    assert_allclose(got, float(jnp.trace(s)) / 2 + 0.4 * p / 2, rtol=1e-12)

@@ -1,0 +1,92 @@
+//! **Figure 2 reproduction**: Cov vs Obs runtimes as n grows, on chain
+//! and random graphs (paper: p = 40k, 16 nodes, n ∈ {100 … 12,800};
+//! here: p scaled to 256, 16 simulated ranks, n swept over 5 octaves,
+//! with a cost-model extrapolation row at the paper's scale).
+//!
+//! Expected shape (paper §4): Obs grows linearly in n, Cov stays flat;
+//! Cov needs more iterations at tiny n; the measured crossover comes
+//! *later* than Lemma 3.1 predicts because γ_sparse ≫ γ_dense.
+//!
+//! Run: `cargo bench --bench fig2_cov_vs_obs`
+
+use hpconcord::concord::{fit_distributed, ConcordConfig, Variant};
+use hpconcord::cost::model::{cov_cost, cov_is_cheaper_flops, obs_cost};
+use hpconcord::cost::{ProblemShape, ReplicationChoice};
+use hpconcord::prelude::*;
+use hpconcord::util::Table;
+
+fn main() {
+    let ranks = 16;
+    let machine = MachineParams::edison_like();
+    let p = 256usize;
+
+    for (graph, deg) in [("chain", 0usize), ("random", 8)] {
+        println!("\n=== Fig. 2 ({graph} graph, p={p}, {ranks} simulated ranks) ===");
+        let mut table = Table::new(&[
+            "n",
+            "Cov iters",
+            "Obs iters",
+            "T_Cov (model s)",
+            "T_Obs (model s)",
+            "winner",
+            "Lemma 3.1",
+        ]);
+        for n in [16usize, 32, 64, 128, 256, 512] {
+            let mut rng = Rng::new(0xF16 + n as u64);
+            let problem = if graph == "chain" {
+                gen::chain_problem(p, n, &mut rng)
+            } else {
+                gen::random_problem(p, n, deg, &mut rng)
+            };
+            let cfg = ConcordConfig {
+                lambda1: 0.35,
+                tol: 1e-4,
+                max_iter: 120,
+                ..Default::default()
+            };
+            let fit = |variant| {
+                let mut c = cfg;
+                c.variant = variant;
+                fit_distributed(&problem.x, &c, ranks, 2, 2, machine)
+            };
+            let cov = fit(Variant::Cov);
+            let obs = fit(Variant::Obs);
+            let shape = ProblemShape {
+                p: p as f64,
+                n: n as f64,
+                s: cov.fit.iterations as f64,
+                t: cov.fit.mean_linesearch.max(1.0),
+                d: cov.fit.mean_row_nnz,
+            };
+            table.row(vec![
+                n.to_string(),
+                cov.fit.iterations.to_string(),
+                obs.fit.iterations.to_string(),
+                format!("{:.4}", cov.cost.time),
+                format!("{:.4}", obs.cost.time),
+                (if cov.cost.time < obs.cost.time { "Cov" } else { "Obs" }).to_string(),
+                (if cov_is_cheaper_flops(&shape) { "Cov" } else { "Obs" }).to_string(),
+            ]);
+        }
+        print!("{table}");
+    }
+
+    // Extrapolation to the paper's scale via the analytic model
+    // (p = 40k, 16 nodes × 2 procs, chain statistics from Table 1).
+    println!("\n=== Extrapolation to paper scale (p=40k, P=32 procs, chain) ===");
+    let rep = ReplicationChoice { p_procs: 32, c_x: 2, c_omega: 2 };
+    let mut table = Table::new(&["n", "T_Cov (model s)", "T_Obs (model s)", "winner"]);
+    for n in [100.0, 400.0, 1600.0, 6400.0, 12800.0] {
+        let shape = ProblemShape { p: 40_000.0, n, s: 37.0, t: 10.0, d: 3.0 };
+        let tc = cov_cost(&shape, &rep).time(&machine, 32);
+        let to = obs_cost(&shape, &rep).time(&machine, 32);
+        table.row(vec![
+            format!("{n}"),
+            format!("{tc:.2}"),
+            format!("{to:.2}"),
+            (if tc < to { "Cov" } else { "Obs" }).to_string(),
+        ]);
+    }
+    print!("{table}");
+    println!("(paper Fig. 2: Obs linear in n, Cov flat; crossover ~n in the thousands)");
+}

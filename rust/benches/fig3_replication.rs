@@ -1,0 +1,127 @@
+//! **Figure 3 reproduction**: Obs runtime over the full (c_X, c_Ω)
+//! replication grid (paper: 256 nodes × 2 procs, chain p = 40k, n = 100,
+//! best cell 5× faster than c_X = c_Ω = 1; here: 32 simulated ranks,
+//! p = 256, n = 32, fixed iteration budget so the comparison isolates
+//! communication, plus the analytic grid at the paper's exact scale).
+//!
+//! Run: `cargo bench --bench fig3_replication`
+
+use hpconcord::concord::{fit_distributed, ConcordConfig, Variant};
+use hpconcord::cost::model::obs_cost;
+use hpconcord::cost::{ProblemShape, ReplicationChoice};
+use hpconcord::prelude::*;
+use hpconcord::util::Table;
+
+fn measured_grid(ranks: usize, p: usize, n: usize) {
+    println!("\n=== Fig. 3 measured (simulated {ranks} ranks, chain p={p}, n={n}) ===");
+    let mut rng = Rng::new(0xF3);
+    let problem = gen::chain_problem(p, n, &mut rng);
+    let cfg = ConcordConfig {
+        lambda1: 0.35,
+        tol: 0.0,
+        max_iter: 8, // fixed budget: isolate per-iteration communication
+        variant: Variant::Obs,
+        ..Default::default()
+    };
+    let machine = MachineParams::edison_like();
+
+    let mut cxs = Vec::new();
+    let mut cx = 1;
+    while cx <= ranks {
+        cxs.push(cx);
+        cx *= 2;
+    }
+    let header: Vec<String> = std::iter::once("c_Ω \\ c_X".to_string())
+        .chain(cxs.iter().map(|c| c.to_string()))
+        .collect();
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr);
+
+    let mut baseline = f64::NAN;
+    let mut best = (f64::INFINITY, 1, 1);
+    let mut co = 1;
+    while co <= ranks {
+        let mut row = vec![co.to_string()];
+        for &cx in &cxs {
+            if cx * co > ranks {
+                row.push("-".into());
+                continue;
+            }
+            let out = fit_distributed(&problem.x, &cfg, ranks, cx, co, machine);
+            let t = out.cost.time;
+            if cx == 1 && co == 1 {
+                baseline = t;
+            }
+            if t < best.0 {
+                best = (t, cx, co);
+            }
+            row.push(format!("{:.5}", t));
+        }
+        table.row(row);
+        co *= 2;
+    }
+    print!("{table}");
+    println!(
+        "worst (1,1) {baseline:.5}s → best (c_X={}, c_Ω={}) {:.5}s: {:.2}× speedup",
+        best.1,
+        best.2,
+        best.0,
+        baseline / best.0
+    );
+}
+
+fn analytic_grid_paper_scale() {
+    // The paper's exact cell: 256 nodes × 2 MPI procs = 512, p=40k, n=100.
+    println!("\n=== Fig. 3 analytic at paper scale (P=512, chain p=40k, n=100) ===");
+    let machine = MachineParams::edison_like();
+    let shape = ProblemShape { p: 40_000.0, n: 100.0, s: 37.0, t: 10.0, d: 3.0 };
+    let procs = 512;
+    let mut cxs = Vec::new();
+    let mut cx = 1;
+    while cx <= procs {
+        cxs.push(cx);
+        cx *= 2;
+    }
+    let header: Vec<String> = std::iter::once("c_Ω \\ c_X".to_string())
+        .chain(cxs.iter().map(|c| c.to_string()))
+        .collect();
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr);
+    let mut baseline = f64::NAN;
+    let mut best = (f64::INFINITY, 1, 1);
+    let mut co = 1;
+    while co <= procs {
+        let mut row = vec![co.to_string()];
+        for &cx in &cxs {
+            if cx * co > procs {
+                row.push("-".into());
+                continue;
+            }
+            let rep = ReplicationChoice { p_procs: procs, c_x: cx, c_omega: co };
+            let t = obs_cost(&shape, &rep).time(&machine, procs);
+            if cx == 1 && co == 1 {
+                baseline = t;
+            }
+            if t < best.0 {
+                best = (t, cx, co);
+            }
+            row.push(format!("{:.2}", t));
+        }
+        table.row(row);
+        co *= 2;
+    }
+    print!("{table}");
+    println!(
+        "worst (1,1) {baseline:.2}s → best (c_X={}, c_Ω={}) {:.2}s: {:.2}× speedup \
+         (paper: best at c_X=8, c_Ω=16, 5×)",
+        best.1,
+        best.2,
+        best.0,
+        baseline / best.0
+    );
+}
+
+fn main() {
+    measured_grid(32, 256, 32);
+    analytic_grid_paper_scale();
+}

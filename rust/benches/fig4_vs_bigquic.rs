@@ -1,0 +1,165 @@
+//! **Figure 4 reproduction**: HP-CONCORD vs BigQUIC runtimes vs p, on
+//! (a) chain graphs n = 100, (b) random graphs n = 100, (c) random
+//! graphs n = p/4 (paper: p from 10k to 1.28M, 1–1024 nodes; here: p
+//! over 4 octaves single-node measured, plus simulated-distributed
+//! modeled scaling and a cost-model extrapolation to the paper's sizes).
+//!
+//! Expected shape: single-node HP-CONCORD matches/beats BigQUIC and the
+//! gap widens with p (the paper reports ~an order of magnitude on the
+//! random graphs); adding ranks scales the distributed variant down.
+//!
+//! Run: `cargo bench --bench fig4_vs_bigquic`
+
+use hpconcord::bigquic::{fit_bigquic_data, QuicConfig};
+use hpconcord::concord::{fit_distributed, fit_single_node, ConcordConfig, Variant};
+use hpconcord::coordinator::{run_sweep, select_by_density, GridSpec};
+use hpconcord::cost::ProblemShape;
+use hpconcord::prelude::*;
+use hpconcord::util::Table;
+use std::time::Instant;
+
+/// Tune each method to the problem's true density (the paper equalizes
+/// sparsity before timing), then time the fit at the chosen λ.
+fn equal_sparsity_lambdas(problem: &gen::Problem, variant: Variant) -> (f64, f64) {
+    let p = problem.x.cols();
+    let target = (problem.omega0.nnz() - p) as f64 / (p * p - p) as f64;
+    // CONCORD: quick sweep, density-matched selection.
+    let base = ConcordConfig { tol: 1e-3, max_iter: 40, variant, ..Default::default() };
+    let grid = GridSpec { lambda1: vec![0.2, 0.3, 0.45, 0.65, 0.9], lambda2: vec![0.1] };
+    let out = run_sweep(&problem.x, &grid, &base, 2);
+    let concord_l1 = select_by_density(&out, target).unwrap().job.cfg.lambda1;
+    // BigQUIC: bisection on its own λ to the same density.
+    let mut lo = 0.01;
+    let mut hi = 1.5;
+    for _ in 0..8 {
+        let mid = 0.5 * (lo + hi);
+        let fit = fit_bigquic_data(
+            &problem.x,
+            &QuicConfig { lambda: mid, tol: 1e-4, max_iter: 20, ..Default::default() },
+        )
+        .unwrap();
+        let d = (fit.omega.nnz() - p) as f64 / (p * p - p) as f64;
+        if d > target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    (concord_l1, 0.5 * (lo + hi))
+}
+
+fn head_to_head(title: &str, mk: impl Fn(usize, &mut Rng) -> gen::Problem, variant: Variant) {
+    println!("\n=== Fig. 4 {title} ===");
+    let mut table = Table::new(&[
+        "p",
+        "BigQUIC iters",
+        "BigQUIC (s)",
+        "CONCORD iters",
+        "CONCORD-1 (s)",
+        "speedup",
+        "Dist-8 model (s)",
+    ]);
+    for p in [64usize, 128, 256, 512] {
+        let mut rng = Rng::new(0xF4 + p as u64);
+        let problem = mk(p, &mut rng);
+        let (l1, lq) = equal_sparsity_lambdas(&problem, variant);
+
+        let t0 = Instant::now();
+        let quic = fit_bigquic_data(
+            &problem.x,
+            &QuicConfig { lambda: lq, tol: 1e-5, max_iter: 30, ..Default::default() },
+        )
+        .unwrap();
+        let t_quic = t0.elapsed().as_secs_f64();
+
+        let cfg = ConcordConfig {
+            lambda1: l1,
+            lambda2: 0.1,
+            tol: 1e-4,
+            max_iter: 400,
+            variant,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let concord = fit_single_node(&problem.x, &cfg).unwrap();
+        let t_concord = t0.elapsed().as_secs_f64();
+
+        // Simulated distributed run, modeled at Edison-like constants.
+        let dist = fit_distributed(&problem.x, &cfg, 8, 2, 2, MachineParams::edison_like());
+
+        table.row(vec![
+            p.to_string(),
+            quic.iterations.to_string(),
+            format!("{t_quic:.3}"),
+            concord.iterations.to_string(),
+            format!("{t_concord:.3}"),
+            format!("{:.1}×", t_quic / t_concord),
+            format!("{:.4}", dist.cost.time),
+        ]);
+    }
+    print!("{table}");
+}
+
+fn extrapolation() {
+    println!("\n=== Fig. 4a extrapolation (chain, n=100; model at paper scale) ===");
+    println!("(replication chosen by the optimizer per cell; iterations from Table 1)");
+    let machine = MachineParams::edison_like();
+    let mut table = Table::new(&["p", "nodes", "procs", "variant", "c_X", "c_Ω", "T model (s)"]);
+    // (p, nodes, measured-iterations from the paper's Table 1 chain row)
+    for (p, nodes, s_iters) in [
+        (10_000.0, 1usize, 25.0),
+        (40_000.0, 16, 37.0),
+        (80_000.0, 1024, 36.0),
+        (320_000.0, 256, 51.0),
+        (1_280_000.0, 1024, 57.0),
+    ] {
+        let procs = nodes * 2;
+        let shape = ProblemShape { p, n: 100.0, s: s_iters, t: 10.0, d: 3.0 };
+        let best = hpconcord::cost::optimize_replication(
+            &shape,
+            procs,
+            Variant::Auto,
+            &machine,
+            f64::INFINITY,
+        )
+        .expect("feasible configuration");
+        table.row(vec![
+            format!("{p}"),
+            nodes.to_string(),
+            procs.to_string(),
+            format!("{:?}", best.variant),
+            best.choice.c_x.to_string(),
+            best.choice.c_omega.to_string(),
+            format!("{:.1}", best.time),
+        ]);
+    }
+    print!("{table}");
+    println!(
+        "(paper: p=1.28M in ≈17 min on 1024 nodes; p=80k in <4 s on 1024 nodes —\n\
+         our per-process γ is ~10× Edison's per-node rate, so absolute times scale up;\n\
+         the who-wins/scaling shape is the claim under test)"
+    );
+}
+
+fn main() {
+    // (a) chain graphs, n = 100.
+    head_to_head(
+        "(a) chain, n=100",
+        |p, rng| gen::chain_problem(p, 100, rng),
+        Variant::Obs,
+    );
+    // (b) random graphs, n = 100 (degree scaled with p as the paper
+    // scales its degree-60 graphs down).
+    head_to_head(
+        "(b) random, n=100",
+        |p, rng| gen::random_problem(p, 100, 4, rng),
+        Variant::Obs,
+    );
+    // (c) random graphs, n = p/4: large n → Cov.
+    head_to_head(
+        "(c) random, n=p/4",
+        |p, rng| gen::random_problem(p, p / 4, 4, rng),
+        Variant::Cov,
+    );
+    extrapolation();
+}

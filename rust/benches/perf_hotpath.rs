@@ -1,0 +1,148 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): local GEMM
+//! throughput (the MKL-replacement kernel under everything), sparse
+//! SpMM, the fused CONCORD elementwise passes, the distributed transpose,
+//! and PJRT-artifact vs native fused-trial latency.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use hpconcord::concord::ops;
+use hpconcord::linalg::{Csr, Mat};
+use hpconcord::prelude::*;
+use hpconcord::runtime::{native, Engine};
+use hpconcord::util::{time_fn, Table};
+
+fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn main() {
+    let mut rng = Rng::new(0xBE);
+
+    // --- Dense GEMM ----------------------------------------------------
+    println!("=== L3 local GEMM (the paper's MKL substitute) ===");
+    let mut table = Table::new(&["size", "median (ms)", "GFLOP/s"]);
+    for p in [128usize, 256, 512] {
+        let a = random_mat(&mut rng, p, p);
+        let b = random_mat(&mut rng, p, p);
+        let (stats, _) = time_fn(1, 5, || a.matmul(&b));
+        let gflops = 2.0 * (p as f64).powi(3) / stats.median / 1e9;
+        table.row(vec![
+            format!("{p}³"),
+            format!("{:.2}", stats.median * 1e3),
+            format!("{gflops:.2}"),
+        ]);
+    }
+    print!("{table}");
+
+    // --- Sparse-dense SpMM (Cov's W = Ω·S) ------------------------------
+    println!("\n=== sparse·dense SpMM (γ_sparse path) ===");
+    let mut table = Table::new(&["p", "density", "median (ms)", "GFLOP/s (nnz)"]);
+    for (p, density) in [(512usize, 0.02), (512, 0.1), (1024, 0.02)] {
+        let dense = Mat::from_fn(p, p, |i, j| {
+            if i == j {
+                2.0
+            } else if rng.uniform() < density {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let omega = Csr::from_dense(&dense, 0.0);
+        let s = random_mat(&mut rng, p, p);
+        let (stats, _) = time_fn(1, 5, || omega.spmm(&s));
+        let gflops = omega.spmm_flops(p) as f64 / stats.median / 1e9;
+        table.row(vec![
+            p.to_string(),
+            format!("{density}"),
+            format!("{:.2}", stats.median * 1e3),
+            format!("{gflops:.2}"),
+        ]);
+    }
+    print!("{table}");
+
+    // --- Fused elementwise passes ---------------------------------------
+    println!("\n=== fused CONCORD passes (per-element ns) ===");
+    let p = 512;
+    let omega = {
+        let mut m = random_mat(&mut rng, p, p);
+        m.symmetrize();
+        for i in 0..p {
+            m.set(i, i, 2.0 + rng.uniform());
+        }
+        m
+    };
+    let w = random_mat(&mut rng, p, p);
+    let wt = w.transpose();
+    let g = ops::gradient_block(&omega, &w, &wt, 0, 0.1);
+    let mut table = Table::new(&["pass", "median (ms)", "ns/element"]);
+    let elems = (p * p) as f64;
+    let mut bench = |name: &str, f: &mut dyn FnMut()| {
+        let (stats, _) = time_fn(1, 5, || f());
+        table.row(vec![
+            name.to_string(),
+            format!("{:.3}", stats.median * 1e3),
+            format!("{:.2}", stats.median / elems * 1e9),
+        ]);
+    };
+    bench("gradient", &mut || {
+        std::hint::black_box(ops::gradient_block(&omega, &w, &wt, 0, 0.1));
+    });
+    bench("prox", &mut || {
+        std::hint::black_box(ops::prox_block(&omega, &g, 0, 0.5, 0.3));
+    });
+    let mut out = Mat::zeros(p, p);
+    bench("prox (in-place)", &mut || {
+        ops::prox_block_into(&omega, &g, 0, 0.5, 0.3, &mut out);
+    });
+    bench("objective", &mut || {
+        std::hint::black_box(ops::objective_parts_block(&omega, &w, 0));
+    });
+    bench("linesearch", &mut || {
+        std::hint::black_box(ops::linesearch_parts_block(&omega, &w, &g));
+    });
+    print!("{table}");
+
+    // --- Whole fused trial: native vs PJRT artifact ----------------------
+    println!("\n=== fused line-search trial: native vs PJRT (p=256) ===");
+    let mut rng2 = Rng::new(1);
+    let prob = gen::chain_problem(256, 100, &mut rng2);
+    let s = native::gram(&prob.x);
+    let om = Mat::eye(256);
+    let w0 = native::w_step(&om, &s);
+    let (grad, g0) = native::gradobj(&om, &w0, 0.1);
+    let (nat, _) = time_fn(1, 5, || native::trial(&om, &grad, &s, g0, 0.5, 0.3, 0.1));
+    println!("native trial   : {nat}");
+    match Engine::load("artifacts") {
+        Ok(mut engine) if engine.has_trial(256) => {
+            let (pj, _) =
+                time_fn(1, 5, || engine.trial(&om, &grad, &s, g0, 0.5, 0.3, 0.1).unwrap());
+            println!("PJRT trial     : {pj}");
+            println!(
+                "PJRT/native    : {:.2}× (XLA fuses the elementwise chain; includes FFI copies)",
+                pj.median / nat.median
+            );
+        }
+        _ => println!("PJRT trial     : artifacts/ not built — run `make artifacts`"),
+    }
+
+    // --- Distributed transpose ------------------------------------------
+    println!("\n=== distributed transpose (16 ranks, c=2, 512×512) ===");
+    let grid = hpconcord::dist::RepGrid::new(16, 2);
+    let layout = hpconcord::dist::Layout1D::new(512, grid.teams());
+    let full = std::sync::Arc::new(random_mat(&mut rng, 512, 512));
+    let (stats, run) = time_fn(1, 3, || {
+        let full = full.clone();
+        Fabric::new(16).run(move |comm| {
+            let (s, e) = layout.range(grid.team_of(comm.rank()));
+            let local = full.row_block(s, e);
+            hpconcord::dist::transpose_block_rows(comm, &grid, 0, &local, &layout);
+        })
+    });
+    let summary = run.summary();
+    println!(
+        "wallclock {stats}; per-rank max: {} msgs, {} words (modeled {:.2} ms)",
+        summary.max_per_rank.messages,
+        summary.max_per_rank.words,
+        summary.comm_time * 1e3,
+    );
+}

@@ -1,0 +1,140 @@
+//! **Table 1 reproduction**: iterations-to-convergence for BigQUIC vs
+//! HP-CONCORD on chain (n = 100) and random (n = 100, n = p/4) graphs,
+//! plus PPV/FDR for the n = p/4 random rows (the paper's support
+//! recovery comparison).
+//!
+//! Expected shape: BigQUIC (second order) converges in ~5–6 outer
+//! iterations at every size; HP-CONCORD needs tens (chain) to hundreds
+//! (random) of proximal steps but each is vastly cheaper; HP-CONCORD's
+//! PPV ≥ BigQUIC's at matched sparsity.
+//!
+//! Run: `cargo bench --bench table1_iterations`
+
+use hpconcord::bigquic::{fit_bigquic_data, QuicConfig};
+use hpconcord::concord::{fit_single_node, ConcordConfig, Variant};
+use hpconcord::metrics::support_metrics;
+use hpconcord::prelude::*;
+use hpconcord::util::Table;
+
+fn concord_cfg(l1: f64) -> ConcordConfig {
+    ConcordConfig {
+        lambda1: l1,
+        lambda2: 0.1,
+        tol: 1e-4,
+        max_iter: 600,
+        variant: Variant::Auto,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let sizes = [64usize, 128, 256];
+
+    println!("\n=== Table 1: iterations to convergence ===");
+    let mut table = Table::new(&["graph", "method", "p (small)", "p (mid)", "p (large)"]);
+    println!("(chain/random n=100 rows: p = 64/128/256; n=p/4 rows: p = 128/256/512)");
+
+    // Chain, n = 100.
+    let mut bq_row = vec!["chain (n=100)".to_string(), "BigQUIC".to_string()];
+    let mut cc_row = vec!["chain (n=100)".to_string(), "HP-CONCORD".to_string()];
+    for &p in &sizes {
+        let mut rng = Rng::new(0x71 + p as u64);
+        let prob = gen::chain_problem(p, 100, &mut rng);
+        let bq = fit_bigquic_data(&prob.x, &QuicConfig { lambda: 0.25, ..Default::default() })
+            .unwrap();
+        let cc = fit_single_node(&prob.x, &concord_cfg(0.4)).unwrap();
+        bq_row.push(bq.iterations.to_string());
+        cc_row.push(cc.iterations.to_string());
+    }
+    table.row(bq_row);
+    table.row(cc_row);
+
+    // Random, n = 100 (degree 4 ≈ the paper's degree-60 graphs scaled to
+    // these p; see DESIGN.md).
+    let mut bq_row = vec!["random (n=100)".to_string(), "BigQUIC".to_string()];
+    let mut cc_row = vec!["random (n=100)".to_string(), "HP-CONCORD".to_string()];
+    for &p in &sizes {
+        let mut rng = Rng::new(0x72 + p as u64);
+        let prob = gen::random_problem(p, 100, 4, &mut rng);
+        let bq = fit_bigquic_data(&prob.x, &QuicConfig { lambda: 0.3, ..Default::default() })
+            .unwrap();
+        let cc = fit_single_node(&prob.x, &concord_cfg(0.35)).unwrap();
+        bq_row.push(bq.iterations.to_string());
+        cc_row.push(cc.iterations.to_string());
+    }
+    table.row(bq_row);
+    table.row(cc_row);
+
+    // Random, n = p/4, with PPV/FDR. Support recovery needs absolute
+    // sample counts, so this row uses the larger sizes (the paper's
+    // n = p/4 means n ≥ 2500; at our scale p/4 only becomes informative
+    // from p ≈ 256 up — expect PPV to climb with p).
+    let sizes = [128usize, 256, 512];
+    let mut bq_row = vec!["random (n=p/4)".to_string(), "BigQUIC".to_string()];
+    let mut cc_row = vec!["random (n=p/4)".to_string(), "HP-CONCORD".to_string()];
+    let mut metrics_rows: Vec<Vec<String>> = vec![
+        vec!["random (n=p/4)".to_string(), "• BigQUIC PPV/FDR %".to_string()],
+        vec!["random (n=p/4)".to_string(), "• CONCORD PPV/FDR %".to_string()],
+    ];
+    for &p in &sizes {
+        let mut rng = Rng::new(0x73 + p as u64);
+        let prob = gen::random_problem(p, p / 4, 4, &mut rng);
+        // Density-match both methods to the truth, as the paper does.
+        let target = (prob.omega0.nnz() - p) as f64 / (p * p - p) as f64;
+        let bq_lambda = {
+            let (mut lo, mut hi) = (0.01, 1.2);
+            for _ in 0..8 {
+                let mid = 0.5 * (lo + hi);
+                let f = fit_bigquic_data(
+                    &prob.x,
+                    &QuicConfig { lambda: mid, max_iter: 15, ..Default::default() },
+                )
+                .unwrap();
+                let d = (f.omega.nnz() - p) as f64 / (p * p - p) as f64;
+                if d > target {
+                    lo = mid
+                } else {
+                    hi = mid
+                }
+            }
+            0.5 * (lo + hi)
+        };
+        let bq = fit_bigquic_data(&prob.x, &QuicConfig { lambda: bq_lambda, ..Default::default() })
+            .unwrap();
+        let cc_lambda = {
+            // density-matched CONCORD λ1 by bisection too
+            let (mut lo, mut hi) = (0.05, 1.5);
+            for _ in 0..8 {
+                let mid = 0.5 * (lo + hi);
+                let mut c = concord_cfg(mid);
+                c.max_iter = 60;
+                c.tol = 1e-3;
+                let f = fit_single_node(&prob.x, &c).unwrap();
+                let d = (f.omega.nnz() - p) as f64 / (p * p - p) as f64;
+                if d > target {
+                    lo = mid
+                } else {
+                    hi = mid
+                }
+            }
+            0.5 * (lo + hi)
+        };
+        let cc = fit_single_node(&prob.x, &concord_cfg(cc_lambda)).unwrap();
+        let mb = support_metrics(&bq.omega, &prob.omega0, 1e-6);
+        let mc = support_metrics(&cc.omega, &prob.omega0, 1e-6);
+        bq_row.push(bq.iterations.to_string());
+        cc_row.push(cc.iterations.to_string());
+        metrics_rows[0].push(format!("{:.1}/{:.1}", 100.0 * mb.ppv, 100.0 * mb.fdr));
+        metrics_rows[1].push(format!("{:.1}/{:.1}", 100.0 * mc.ppv, 100.0 * mc.fdr));
+    }
+    table.row(bq_row);
+    table.row(cc_row);
+    for r in metrics_rows {
+        table.row(r);
+    }
+    print!("{table}");
+    println!(
+        "(paper Table 1: BigQUIC 5-6 iters everywhere; CONCORD 25-69 chain, 114-330 random,\n\
+         16-35 at n=p/4; CONCORD PPV ≥ BigQUIC PPV at matched sparsity)"
+    );
+}

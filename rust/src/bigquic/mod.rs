@@ -1,0 +1,21 @@
+//! The BigQUIC-style baseline: ℓ₁-penalized Gaussian maximum likelihood
+//! by a QUIC-style second-order method (Hsieh et al. [25]).
+//!
+//! The paper compares HP-CONCORD against BigQUIC (Figure 4, Table 1) —
+//! a *second-order* method on the Gaussian likelihood
+//!
+//! ```text
+//!   f(Ω) = −log det Ω + tr(SΩ) + λ‖Ω_X‖₁,
+//! ```
+//!
+//! which converges in very few outer iterations (the paper reports 5–6)
+//! but pays an O(p³) Newton solve per iteration and, "by design, only
+//! runs on 1 node". No BigQUIC binary exists in this environment, so we
+//! implement the method itself (DESIGN.md substitutions): Newton
+//! coordinate descent over an active set with an Armijo line search and
+//! positive-definiteness safeguard — the QUIC algorithm, sized for the
+//! single-node problems of the head-to-head benches.
+
+pub mod quic;
+
+pub use quic::{fit_bigquic, fit_bigquic_data, QuicConfig, QuicFit};

@@ -1,0 +1,297 @@
+//! QUIC: quadratic approximation (Newton) coordinate descent for the
+//! ℓ₁-penalized Gaussian MLE.
+//!
+//! Outer iteration k:
+//! 1. W = Ω⁻¹ (Cholesky), gradient of the smooth part G = S − W.
+//! 2. Free set F = {(i,j) : |G_ij| > λ or Ω_ij ≠ 0} ∪ diagonal
+//!    (the active-set fixed-point heuristic that makes QUIC scale).
+//! 3. Newton direction D: coordinate descent on the quadratic model
+//!      min_D  tr(G D) + ½ tr(W D W D) + λ‖(Ω + D)_X‖₁
+//!    maintaining U = D·W so each coordinate update is O(p).
+//! 4. Armijo backtracking on Ω + αD with a positive-definite safeguard.
+//!
+//! Matches BigQUIC's convergence profile: a handful of outer iterations
+//! (Table 1 reports 5–6), each far more expensive than a CONCORD
+//! proximal step.
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::{cholesky, solve_lower, solve_lower_transpose, Mat};
+
+/// QUIC configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct QuicConfig {
+    /// ℓ₁ penalty λ on off-diagonal entries.
+    pub lambda: f64,
+    /// Stop when the relative objective decrease falls below this.
+    pub tol: f64,
+    pub max_iter: usize,
+    /// Coordinate-descent sweeps per Newton direction.
+    pub cd_sweeps: usize,
+    /// Armijo slope parameter σ.
+    pub sigma: f64,
+}
+
+impl Default for QuicConfig {
+    fn default() -> Self {
+        QuicConfig { lambda: 0.3, tol: 1e-6, max_iter: 100, cd_sweeps: 6, sigma: 1e-3 }
+    }
+}
+
+/// A fitted QUIC estimate.
+#[derive(Debug, Clone)]
+pub struct QuicFit {
+    pub omega: Mat,
+    /// Newton (outer) iterations — the numbers Table 1 compares.
+    pub iterations: usize,
+    pub objective: f64,
+    pub converged: bool,
+}
+
+/// Fit from a sample covariance matrix S.
+pub fn fit_bigquic(s: &Mat, cfg: &QuicConfig) -> Result<QuicFit> {
+    let p = s.rows();
+    if s.cols() != p {
+        return Err(anyhow!("S must be square"));
+    }
+    let mut omega = Mat::eye(p);
+    let mut f_curr = objective(&omega, s, cfg.lambda)
+        .ok_or_else(|| anyhow!("initial iterate not PD"))?;
+    let mut converged = false;
+    let mut iters = 0;
+
+    for _k in 0..cfg.max_iter {
+        iters += 1;
+        let w = inverse_spd(&omega)?;
+
+        // Free set from the gradient fixed-point condition.
+        let lam = cfg.lambda;
+        let mut free: Vec<(usize, usize)> = Vec::new();
+        for i in 0..p {
+            for j in i..p {
+                let g = s.get(i, j) - w.get(i, j);
+                if i == j || omega.get(i, j) != 0.0 || g.abs() > lam {
+                    free.push((i, j));
+                }
+            }
+        }
+
+        // Newton direction by coordinate descent; U = D·W.
+        let mut d = Mat::zeros(p, p);
+        let mut u = Mat::zeros(p, p);
+        for _sweep in 0..cfg.cd_sweeps {
+            for &(i, j) in &free {
+                // Quadratic coefficients (Hsieh et al., eq. for QUIC).
+                let wij = w.get(i, j);
+                let a = if i == j {
+                    wij * wij
+                } else {
+                    wij * wij + w.get(i, i) * w.get(j, j)
+                };
+                // (W D W)_ij = Σ_k W_ik U_kj with U = D W.
+                let mut wdw = 0.0;
+                for k in 0..p {
+                    wdw += w.get(i, k) * u.get(k, j);
+                }
+                let b = s.get(i, j) - wij + wdw;
+                let c = omega.get(i, j) + d.get(i, j);
+                let mu = if i == j {
+                    -b / a
+                } else {
+                    // Soft-threshold minimizer of ½a μ² + b μ + λ|c + μ|.
+                    let z = c - b / a;
+                    let soft = z.signum() * (z.abs() - lam / a).max(0.0);
+                    soft - c
+                };
+                if mu != 0.0 {
+                    d.set(i, j, d.get(i, j) + mu);
+                    if i != j {
+                        d.set(j, i, d.get(j, i) + mu);
+                    }
+                    // U rows i and j pick up the symmetric D update.
+                    for k in 0..p {
+                        u.set(i, k, u.get(i, k) + mu * w.get(j, k));
+                    }
+                    if i != j {
+                        for k in 0..p {
+                            u.set(j, k, u.get(j, k) + mu * w.get(i, k));
+                        }
+                    }
+                }
+            }
+        }
+
+        // Armijo: f(Ω+αD) ≤ f(Ω) + σα·δ with
+        // δ = tr(G D) + λ(‖Ω+D‖₁ − ‖Ω‖₁).
+        let mut delta = 0.0;
+        for i in 0..p {
+            for j in 0..p {
+                delta += (s.get(i, j) - w.get(i, j)) * d.get(i, j);
+                if i != j {
+                    delta += lam * ((omega.get(i, j) + d.get(i, j)).abs()
+                        - omega.get(i, j).abs());
+                }
+            }
+        }
+        let mut alpha = 1.0;
+        let mut stepped = false;
+        for _ in 0..30 {
+            let mut cand = omega.clone();
+            cand.add_scaled(alpha, &d);
+            if let Some(f_new) = objective(&cand, s, lam) {
+                if f_new <= f_curr + cfg.sigma * alpha * delta {
+                    let rel = (f_curr - f_new).abs() / f_curr.abs().max(1.0);
+                    omega = cand;
+                    f_curr = f_new;
+                    stepped = true;
+                    if rel < cfg.tol {
+                        converged = true;
+                    }
+                    break;
+                }
+            }
+            alpha *= 0.5;
+        }
+        if !stepped || converged {
+            converged = converged || !stepped;
+            break;
+        }
+    }
+
+    Ok(QuicFit { omega, iterations: iters, objective: f_curr, converged })
+}
+
+/// Fit from raw observations (forms S = XᵀX/n first).
+pub fn fit_bigquic_data(x: &Mat, cfg: &QuicConfig) -> Result<QuicFit> {
+    let s = crate::runtime::native::gram(x);
+    fit_bigquic(&s, cfg)
+}
+
+/// f(Ω) = −log det Ω + tr(SΩ) + λ‖Ω_X‖₁; None when Ω is not PD.
+fn objective(omega: &Mat, s: &Mat, lambda: f64) -> Option<f64> {
+    let p = omega.rows();
+    let l = cholesky(omega).ok()?;
+    let logdet: f64 = (0..p).map(|i| l.get(i, i).ln()).sum::<f64>() * 2.0;
+    let mut tr = 0.0;
+    let mut l1 = 0.0;
+    for i in 0..p {
+        for j in 0..p {
+            tr += s.get(i, j) * omega.get(i, j);
+            if i != j {
+                l1 += omega.get(i, j).abs();
+            }
+        }
+    }
+    Some(-logdet + tr + lambda * l1)
+}
+
+/// Dense SPD inverse via Cholesky column solves.
+fn inverse_spd(a: &Mat) -> Result<Mat> {
+    let p = a.rows();
+    let l = cholesky(a)?;
+    let mut inv = Mat::zeros(p, p);
+    for j in 0..p {
+        let mut e = vec![0.0; p];
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let col = solve_lower_transpose(&l, &y);
+        for i in 0..p {
+            inv.set(i, j, col[i]);
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::metrics::support_metrics;
+    use crate::rng::Rng;
+
+    #[test]
+    fn identity_covariance_gives_identity() {
+        // S = I: optimum of −log det Ω + tr(Ω) is Ω = I (off-diagonals
+        // killed by any λ > 0).
+        let s = Mat::eye(8);
+        let fit = fit_bigquic(&s, &QuicConfig { lambda: 0.2, ..Default::default() }).unwrap();
+        assert!(fit.omega.max_abs_diff(&Mat::eye(8)) < 1e-6);
+        assert!(fit.converged);
+    }
+
+    #[test]
+    fn kkt_conditions_hold_at_solution() {
+        let mut rng = Rng::new(1);
+        let prob = gen::chain_problem(12, 300, &mut rng);
+        let cfg = QuicConfig { lambda: 0.15, tol: 1e-9, ..Default::default() };
+        let fit = fit_bigquic_data(&prob.x, &cfg).unwrap();
+        let w = inverse_spd(&fit.omega).unwrap();
+        let s = crate::runtime::native::gram(&prob.x);
+        for i in 0..12 {
+            for j in 0..12 {
+                let g = s.get(i, j) - w.get(i, j);
+                if i == j {
+                    assert!(g.abs() < 1e-4, "diag KKT ({i},{j}): {g}");
+                } else if fit.omega.get(i, j) != 0.0 {
+                    let r = g + cfg.lambda * fit.omega.get(i, j).signum();
+                    assert!(r.abs() < 1e-4, "active KKT ({i},{j}): {r}");
+                } else {
+                    assert!(g.abs() <= cfg.lambda + 1e-4, "inactive KKT ({i},{j}): {g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn converges_in_few_newton_iterations() {
+        // Second-order behaviour: the paper's Table 1 shows BigQUIC at
+        // 5-6 iterations where CONCORD needs tens-hundreds.
+        let mut rng = Rng::new(2);
+        let prob = gen::chain_problem(16, 200, &mut rng);
+        let fit = fit_bigquic_data(
+            &prob.x,
+            &QuicConfig { lambda: 0.2, tol: 1e-7, ..Default::default() },
+        )
+        .unwrap();
+        assert!(fit.converged);
+        assert!(fit.iterations <= 12, "iterations {}", fit.iterations);
+    }
+
+    #[test]
+    fn recovers_chain_support_reasonably() {
+        let mut rng = Rng::new(3);
+        let prob = gen::chain_problem(20, 2000, &mut rng);
+        let fit = fit_bigquic_data(
+            &prob.x,
+            &QuicConfig { lambda: 0.1, ..Default::default() },
+        )
+        .unwrap();
+        let m = support_metrics(&fit.omega, &prob.omega0, 1e-6);
+        assert!(m.recall > 0.9, "recall {}", m.recall);
+        assert!(m.ppv > 0.5, "ppv {}", m.ppv);
+    }
+
+    #[test]
+    fn estimate_is_positive_definite_and_symmetric() {
+        let mut rng = Rng::new(4);
+        let prob = gen::random_problem(14, 60, 4, &mut rng);
+        let fit = fit_bigquic_data(
+            &prob.x,
+            &QuicConfig { lambda: 0.25, ..Default::default() },
+        )
+        .unwrap();
+        assert!(cholesky(&fit.omega).is_ok());
+        assert!(fit.omega.max_abs_diff(&fit.omega.transpose()) < 1e-10);
+    }
+
+    #[test]
+    fn larger_lambda_sparser() {
+        let mut rng = Rng::new(5);
+        let prob = gen::random_problem(12, 100, 4, &mut rng);
+        let lo = fit_bigquic_data(&prob.x, &QuicConfig { lambda: 0.05, ..Default::default() })
+            .unwrap();
+        let hi = fit_bigquic_data(&prob.x, &QuicConfig { lambda: 0.6, ..Default::default() })
+            .unwrap();
+        assert!(hi.omega.nnz() <= lo.omega.nnz());
+    }
+}

@@ -1,0 +1,152 @@
+//! Hand-rolled CLI (clap is not vendored offline): `--key value` /
+//! `--flag` options plus positional arguments, with typed accessors.
+//! The launcher subcommands live in `main.rs` and are built from these
+//! parts plus [`crate::config::Config`] files.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order (subcommand first).
+    pub positional: Vec<String>,
+    /// `--key value` options and bare `--flag`s (value "true").
+    options: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse an argv tail (without the program name). An option takes a
+    /// value unless the next token is another option or absent.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                let takes_value = argv
+                    .get(i + 1)
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false);
+                if takes_value {
+                    out.options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.options.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(tok.clone());
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.options.contains_key(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad number {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    /// Comma-separated f64 list.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.options.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<f64>().map_err(|_| anyhow!("--{key}: bad list {v:?}")))
+                .collect(),
+        }
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+hpconcord — communication-avoiding sparse inverse covariance estimation
+
+USAGE: hpconcord <COMMAND> [OPTIONS]
+
+COMMANDS:
+  solve    Fit one problem (single-node or simulated-distributed)
+           --workload chain|random  --p N --n N [--deg N] [--seed S]
+           --lambda1 F --lambda2 F [--tol F] [--max-iter N]
+           --mode single|dist  [--ranks P --cx C --comega C]
+           [--variant cov|obs|auto]  [--config FILE]  [--artifacts DIR]
+  sweep    (λ1, λ2) grid sweep via the coordinator
+           --l1 a,b,c --l2 a,b  [--workers N]  + workload options
+  cost     Analytic cost model (Lemmas 3.1–3.5) over replication grid
+           --p N --n N --s F --t F --d F --procs P [--variant cov|obs]
+  fmri     Synthetic-cortex parcellation pipeline (paper §5, scaled)
+           [--p-hemi N] [--parcels K] [--samples N] [--seed S]
+  engine   List and smoke-run the AOT artifacts through PJRT
+           [--artifacts DIR]
+  help     Show this message
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_and_flags() {
+        let a = Args::parse(&argv("solve --p 128 --workload chain --verbose"));
+        assert_eq!(a.subcommand(), Some("solve"));
+        assert_eq!(a.usize_or("p", 0).unwrap(), 128);
+        assert_eq!(a.str_or("workload", "x"), "chain");
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = Args::parse(&argv("solve --p abc"));
+        assert!(a.usize_or("p", 0).is_err());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = Args::parse(&argv("sweep --l1 0.1,0.2,0.5"));
+        assert_eq!(a.f64_list_or("l1", &[]).unwrap(), vec![0.1, 0.2, 0.5]);
+        assert_eq!(a.f64_list_or("l2", &[9.0]).unwrap(), vec![9.0]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv("cost"));
+        assert_eq!(a.f64_or("t", 10.0).unwrap(), 10.0);
+        assert_eq!(a.u64_or("seed", 7).unwrap(), 7);
+    }
+}

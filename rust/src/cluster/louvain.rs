@@ -1,0 +1,232 @@
+//! The Louvain community-detection method (Blondel et al. [13]):
+//! greedy modularity optimization with graph aggregation.
+//!
+//! Phase 1 repeatedly moves single vertices to the neighbouring
+//! community with the largest modularity gain; phase 2 contracts each
+//! community to a vertex and repeats. Each aggregation level yields a
+//! clustering — the paper's §S.3.6 evaluates both "k = 0" (the final,
+//! coarsest level) and "k = max # clusters from Louvain" (the finest
+//! level), so [`louvain_levels`] returns all of them.
+
+use super::graph::Graph;
+
+/// All aggregation levels, finest first; each is a label vector over the
+/// original vertices.
+pub fn louvain_levels(g: &Graph) -> Vec<Vec<usize>> {
+    let mut levels: Vec<Vec<usize>> = Vec::new();
+    // Mapping from original vertex to current-level vertex.
+    let mut mapping: Vec<usize> = (0..g.n()).collect();
+    let mut current = g.clone();
+    // Self-loop weight per current-level vertex (intra-community weight
+    // accumulated by aggregation; counts toward degrees and m2).
+    let mut selfw = vec![0.0f64; g.n()];
+    loop {
+        let (labels, improved) = one_level(&current, &selfw);
+        let communities = renumber(&labels);
+        let n_comms = communities.iter().copied().max().map_or(0, |m| m + 1);
+        // Compose with the running mapping to label original vertices.
+        let level_labels: Vec<usize> =
+            mapping.iter().map(|&cv| communities[cv]).collect();
+        if !improved && !levels.is_empty() {
+            break;
+        }
+        levels.push(level_labels.clone());
+        if n_comms == current.n() {
+            break; // no contraction possible
+        }
+        let (agg, agg_selfw) = aggregate(&current, &selfw, &communities, n_comms);
+        current = agg;
+        selfw = agg_selfw;
+        mapping = level_labels;
+        if n_comms <= 1 {
+            break;
+        }
+    }
+    levels
+}
+
+/// Final (coarsest) Louvain clustering.
+pub fn louvain(g: &Graph) -> Vec<usize> {
+    louvain_levels(g).pop().expect("at least one level")
+}
+
+/// One local-move phase; returns (community of each vertex, improved?).
+/// `selfw[v]` is v's self-loop weight (from prior aggregations): it adds
+/// to v's degree and to m2 but can never be moved away from v.
+fn one_level(g: &Graph, selfw: &[f64]) -> (Vec<usize>, bool) {
+    let n = g.n();
+    let m2 = 2.0 * g.total_weight() + selfw.iter().sum::<f64>();
+    if m2 == 0.0 {
+        return ((0..n).collect(), false);
+    }
+    let k: Vec<f64> = g
+        .degrees()
+        .iter()
+        .zip(selfw)
+        .map(|(d, s)| d + s)
+        .collect();
+    let mut comm: Vec<usize> = (0..n).collect();
+    let mut sigma_tot: Vec<f64> = k.clone(); // total degree per community
+    let mut improved_any = false;
+    // Deterministic sweep order; repeat until a full pass makes no move.
+    for _pass in 0..n.max(8) {
+        let mut moved = false;
+        for v in 0..n {
+            let cv = comm[v];
+            // Weights from v to each neighbouring community.
+            let mut links: std::collections::HashMap<usize, f64> =
+                std::collections::HashMap::new();
+            for &(u, w) in &g.adj[v] {
+                if u != v {
+                    *links.entry(comm[u]).or_insert(0.0) += w;
+                }
+            }
+            let w_own = links.get(&cv).copied().unwrap_or(0.0);
+            // Remove v from its community.
+            sigma_tot[cv] -= k[v];
+            // Best gain: ΔQ ∝ w_vc − k_v·Σ_tot(c)/m2.
+            let mut best_c = cv;
+            let mut best_gain = w_own - k[v] * sigma_tot[cv] / m2;
+            for (&c, &w_vc) in &links {
+                if c == cv {
+                    continue;
+                }
+                let gain = w_vc - k[v] * sigma_tot[c] / m2;
+                if gain > best_gain + 1e-12 {
+                    best_gain = gain;
+                    best_c = c;
+                }
+            }
+            sigma_tot[best_c] += k[v];
+            if best_c != cv {
+                comm[v] = best_c;
+                moved = true;
+                improved_any = true;
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+    (comm, improved_any)
+}
+
+/// Renumber arbitrary labels to 0..k (first-seen order).
+fn renumber(labels: &[usize]) -> Vec<usize> {
+    let mut map = std::collections::HashMap::new();
+    labels
+        .iter()
+        .map(|&l| {
+            let next = map.len();
+            *map.entry(l).or_insert(next)
+        })
+        .collect()
+}
+
+/// Contract communities into vertices, summing parallel edge weights;
+/// intra-community weight (and existing self-loops) becomes the new
+/// vertices' self-loop weight (doubled, per the modularity convention).
+fn aggregate(
+    g: &Graph,
+    selfw: &[f64],
+    comm: &[usize],
+    n_comms: usize,
+) -> (Graph, Vec<f64>) {
+    let mut weights: std::collections::HashMap<(usize, usize), f64> =
+        std::collections::HashMap::new();
+    let mut new_selfw = vec![0.0f64; n_comms];
+    for v in 0..g.n() {
+        new_selfw[comm[v]] += selfw[v];
+        for &(u, w) in &g.adj[v] {
+            if v < u {
+                let (a, b) = (comm[v].min(comm[u]), comm[v].max(comm[u]));
+                if a != b {
+                    *weights.entry((a, b)).or_insert(0.0) += w;
+                } else {
+                    new_selfw[a] += 2.0 * w;
+                }
+            }
+        }
+    }
+    let mut out = Graph::new(n_comms);
+    for ((a, b), w) in weights {
+        out.add_edge(a, b, w);
+    }
+    (out, new_selfw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two k-cliques joined by one weak edge.
+    fn two_cliques(k: usize) -> Graph {
+        let mut g = Graph::new(2 * k);
+        for off in [0, k] {
+            for i in 0..k {
+                for j in (i + 1)..k {
+                    g.add_edge(off + i, off + j, 1.0);
+                }
+            }
+        }
+        g.add_edge(0, k, 0.1);
+        g
+    }
+
+    #[test]
+    fn separates_two_cliques() {
+        let g = two_cliques(6);
+        let labels = louvain(&g);
+        // All of clique 1 in one community, clique 2 in another.
+        for i in 1..6 {
+            assert_eq!(labels[i], labels[0]);
+            assert_eq!(labels[6 + i], labels[6]);
+        }
+        assert_ne!(labels[0], labels[6]);
+    }
+
+    #[test]
+    fn levels_get_coarser() {
+        let g = two_cliques(5);
+        let levels = louvain_levels(&g);
+        assert!(!levels.is_empty());
+        let count = |ls: &Vec<usize>| {
+            let mut v = ls.clone();
+            v.sort_unstable();
+            v.dedup();
+            v.len()
+        };
+        for w in levels.windows(2) {
+            assert!(count(&w[1]) <= count(&w[0]), "levels must coarsen");
+        }
+    }
+
+    #[test]
+    fn empty_graph_is_singletons() {
+        let g = Graph::new(5);
+        let labels = louvain(&g);
+        let mut sorted = labels.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 5);
+    }
+
+    #[test]
+    fn ring_of_cliques_finds_cliques() {
+        // 4 triangles in a ring, weakly connected.
+        let mut g = Graph::new(12);
+        for c in 0..4 {
+            let b = 3 * c;
+            g.add_edge(b, b + 1, 1.0);
+            g.add_edge(b, b + 2, 1.0);
+            g.add_edge(b + 1, b + 2, 1.0);
+            g.add_edge(b + 2, (b + 3) % 12, 0.05);
+        }
+        let labels = louvain(&g);
+        for c in 0..4 {
+            let b = 3 * c;
+            assert_eq!(labels[b], labels[b + 1]);
+            assert_eq!(labels[b], labels[b + 2]);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Graph clustering for the fMRI case study (paper §5): the partial
+//! correlation graph from an HP-CONCORD estimate is clustered with
+//! either the Louvain method [13] or the persistent-homology watershed
+//! of §S.3.4, and compared against a reference parcellation with the
+//! modified Jaccard score ([`crate::metrics::jaccard`]).
+
+pub mod graph;
+pub mod louvain;
+pub mod watershed;
+
+pub use graph::Graph;
+pub use louvain::{louvain, louvain_levels};
+pub use watershed::{smooth_field, watershed_persistence};

@@ -1,0 +1,237 @@
+//! Persistent-homology watershed parcellation (paper §S.3.4).
+//!
+//! The vertex degree of the partial-correlation graph is mapped onto the
+//! cortical "surface" (here: the voxel neighbourhood graph standing in
+//! for the triangulation), and a watershed sweep from highest to lowest
+//! value grows one label per local maximum. The resulting
+//! over-segmentation is coarsened with persistence: when two label
+//! components meet at a vertex v, the dual-graph edge between them gets
+//! the value `min(a₁, a₂) − f(v)` (a_i = max f over the component —
+//! exactly the persistence of v), and components joined by edges with
+//! value ≤ ε are merged. Raising ε coarsens the parcellation.
+
+use super::graph::Graph;
+
+/// Watershed + persistence merge. `surface` is the neighbourhood graph
+/// (mesh substitute), `f` the per-vertex function (degree in the partial
+/// correlation graph), `epsilon` the persistence simplification
+/// threshold. Returns per-vertex parcel labels (0..k).
+pub fn watershed_persistence(surface: &Graph, f: &[f64], epsilon: f64) -> Vec<usize> {
+    let n = surface.n();
+    assert_eq!(f.len(), n);
+    // Sweep order: decreasing f (ties by index for determinism).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| f[b].partial_cmp(&f[a]).unwrap().then(a.cmp(&b)));
+
+    let mut label = vec![usize::MAX; n];
+    let mut births: Vec<f64> = Vec::new(); // birth (max f) per raw label
+    let mut uf = UnionFind::new(0);
+
+    for &v in &order {
+        // Labelled neighbours (already swept).
+        let mut seen: Vec<usize> = surface.adj[v]
+            .iter()
+            .filter_map(|&(u, _)| (label[u] != usize::MAX).then(|| uf.find(label[u])))
+            .collect();
+        seen.sort_unstable();
+        seen.dedup();
+        match seen.len() {
+            0 => {
+                // Local maximum: start a new label.
+                let l = births.len();
+                births.push(f[v]);
+                uf.push();
+                label[v] = l;
+            }
+            1 => {
+                label[v] = seen[0];
+            }
+            _ => {
+                // Components meet at v: propagate the label with maximum
+                // starting value; record/merge dual edges by persistence.
+                let best = *seen
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        uf.birth(a, &births)
+                            .partial_cmp(&uf.birth(b, &births))
+                            .unwrap()
+                    })
+                    .unwrap();
+                label[v] = best;
+                for &other in &seen {
+                    if other == best {
+                        continue;
+                    }
+                    let persistence =
+                        uf.birth(best, &births).min(uf.birth(other, &births)) - f[v];
+                    if persistence <= epsilon {
+                        uf.union(best, other);
+                    }
+                }
+            }
+        }
+    }
+
+    // Final labels through the union-find, renumbered densely.
+    let mut map = std::collections::HashMap::new();
+    (0..n)
+        .map(|v| {
+            let root = uf.find(label[v]);
+            let next = map.len();
+            *map.entry(root).or_insert(next)
+        })
+        .collect()
+}
+
+/// Neighbourhood-average smoothing of a vertex field (`rounds` passes of
+/// f(v) ← mean over {v} ∪ N(v)). The §S.3.4 degree field is integer-
+/// quantized at small scales; a little smoothing de-plateaus it so the
+/// watershed basins follow regional density rather than single-vertex
+/// ties. Used by the fMRI pipeline before [`watershed_persistence`].
+pub fn smooth_field(surface: &Graph, f: &[f64], rounds: usize) -> Vec<f64> {
+    let mut cur = f.to_vec();
+    for _ in 0..rounds {
+        let mut next = vec![0.0; cur.len()];
+        for v in 0..surface.n() {
+            let mut sum = cur[v];
+            let mut cnt = 1.0;
+            for &(u, _) in &surface.adj[v] {
+                sum += cur[u];
+                cnt += 1.0;
+            }
+            next[v] = sum / cnt;
+        }
+        cur = next;
+    }
+    cur
+}
+
+/// Union-find over raw watershed labels, tracking per-component max birth.
+struct UnionFind {
+    parent: Vec<usize>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n).collect() }
+    }
+
+    fn push(&mut self) {
+        let l = self.parent.len();
+        self.parent.push(l);
+    }
+
+    fn find(&mut self, x: usize) -> usize {
+        if self.parent[x] != x {
+            let root = self.find(self.parent[x]);
+            self.parent[x] = root;
+        }
+        self.parent[x]
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            // Root at the lower index: keeps the oldest (highest-birth
+            // first-created) label as representative deterministically.
+            let (lo, hi) = (ra.min(rb), ra.max(rb));
+            self.parent[hi] = lo;
+        }
+    }
+
+    /// Max birth over the component of x (birth vector indexed by raw
+    /// label; components are created in decreasing birth order, so the
+    /// root — lowest index — has the max birth).
+    fn birth(&mut self, x: usize, births: &[f64]) -> f64 {
+        let r = self.find(x);
+        births[r]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A path graph 0-1-...-(n-1).
+    fn path(n: usize) -> Graph {
+        let mut g = Graph::new(n);
+        for i in 0..n - 1 {
+            g.add_edge(i, i + 1, 1.0);
+        }
+        g
+    }
+
+    #[test]
+    fn two_peaks_two_parcels_at_zero_epsilon() {
+        // f: peak at 2 (value 5), valley at 4 (1), peak at 6 (4).
+        let f = vec![2.0, 3.0, 5.0, 2.0, 1.0, 3.0, 4.0, 2.0];
+        let g = path(8);
+        let labels = watershed_persistence(&g, &f, 0.0);
+        assert_eq!(labels[2], labels[1]);
+        assert_eq!(labels[6], labels[5]);
+        assert_ne!(labels[2], labels[6], "{labels:?}");
+    }
+
+    #[test]
+    fn large_epsilon_merges_everything() {
+        let f = vec![2.0, 3.0, 5.0, 2.0, 1.0, 3.0, 4.0, 2.0];
+        let g = path(8);
+        let labels = watershed_persistence(&g, &f, 100.0);
+        assert!(labels.iter().all(|&l| l == labels[0]), "{labels:?}");
+    }
+
+    #[test]
+    fn epsilon_between_persistences_merges_weak_peak_only() {
+        // Peaks: v2 (5), v6 (4), v10 (4.8); valleys v4 (1), v8 (3.5).
+        // Persistence of the v6 peak against v10: min(4, 4.8) - 3.5 = 0.5.
+        // Persistence of the merged right blob against v2: much larger.
+        let f = vec![2.0, 3.0, 5.0, 2.0, 1.0, 3.0, 4.0, 3.6, 3.5, 4.0, 4.8, 3.0];
+        let g = path(12);
+        let labels = watershed_persistence(&g, &f, 1.0);
+        assert_eq!(labels[6], labels[10], "weak peak merged: {labels:?}");
+        assert_ne!(labels[2], labels[6], "strong split kept: {labels:?}");
+    }
+
+    #[test]
+    fn monotone_in_epsilon() {
+        let f: Vec<f64> = (0..30)
+            .map(|i| ((i as f64) * 0.9).sin() * 3.0 + (i as f64 * 0.13).cos())
+            .collect();
+        let g = path(30);
+        let count = |eps: f64| {
+            let l = watershed_persistence(&g, &f, eps);
+            let mut s = l.clone();
+            s.sort_unstable();
+            s.dedup();
+            s.len()
+        };
+        let (c0, c1, c2) = (count(0.0), count(1.0), count(10.0));
+        assert!(c0 >= c1 && c1 >= c2, "{c0} {c1} {c2}");
+        assert!(c0 >= 2);
+        assert_eq!(c2, 1);
+    }
+
+    #[test]
+    fn smoothing_preserves_mean_and_flattens() {
+        let g = path(10);
+        let f = vec![0.0, 10.0, 0.0, 10.0, 0.0, 10.0, 0.0, 10.0, 0.0, 10.0];
+        let s = smooth_field(&g, &f, 3);
+        let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+        // Mean roughly preserved, variance strictly reduced.
+        assert!((mean(&s) - mean(&f)).abs() < 1.5);
+        let var = |xs: &[f64]| {
+            let m = mean(xs);
+            xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+        };
+        assert!(var(&s) < var(&f) / 2.0);
+        // Zero rounds is the identity.
+        assert_eq!(smooth_field(&g, &f, 0), f);
+    }
+
+    #[test]
+    fn constant_function_single_parcel() {
+        let g = path(10);
+        let labels = watershed_persistence(&g, &vec![1.0; 10], 0.0);
+        assert!(labels.iter().all(|&l| l == labels[0]));
+    }
+}

@@ -1,0 +1,268 @@
+//! **Algorithm 2** — the Cov variant of HP-CONCORD, as a rank program
+//! for the simulated fabric.
+//!
+//! Cov pays the one-time cost of S = XᵀX/n (1.5D concat-mode multiply,
+//! rotating Xᵀ row slabs over the c_X grid), then computes W⁽ᵏ⁾ = Ω⁽ᵏ⁾S
+//! per line-search trial by rotating the *sparse iterate* over the c_Ω
+//! grid against the stationary dense S column blocks — the sparse-dense
+//! shift that can beat 2D/2.5D/3D algorithms by orders of magnitude
+//! (paper §3, citing [29]).
+//!
+//! Layouts (paper Fig. 1, left): S and W live in 1D block *columns* over
+//! the c_X grid's teams; Ω rotates in 1D block rows over the c_Ω grid.
+//! After the global transpose of W, the gradient/prox run in the X
+//! grid's block-row layout, and the new iterate is redistributed back to
+//! the Ω grid ("converts Ω back to 1D block row layout"); when
+//! c_X = c_Ω the redistribution is free.
+
+use std::sync::Arc;
+
+use crate::dist::{
+    mult_concat, redistribute_rows, transpose_block_rows, Block, ConcatAxis, Layout1D, RepGrid,
+};
+use crate::linalg::{Csr, Mat};
+use crate::simnet::Comm;
+
+use super::dist_common::{combine_objective, global_max, global_sum, RankFit, TagGen};
+use super::ops;
+use super::{ConcordConfig, SolveStats};
+
+/// Run Cov on this rank; see [`super::fit_distributed`].
+pub fn fit_cov_rank(
+    comm: &mut Comm,
+    x: &Arc<Mat>,
+    cfg: &ConcordConfig,
+    c_x: usize,
+    c_omega: usize,
+) -> RankFit {
+    let p_ranks = comm.size();
+    let (n, p) = x.shape();
+    let grid_x = RepGrid::new(p_ranks, c_x);
+    let grid_o = RepGrid::new(p_ranks, c_omega);
+    let lx = Layout1D::new(p, grid_x.teams()); // S/W cols, G/Ω rows in X layout
+    let lo = Layout1D::new(p, grid_o.teams()); // Ω rotation parts
+    let rank = comm.rank();
+    let my_x = grid_x.team_of(rank);
+    let my_o = grid_o.team_of(rank);
+    let x_layer_group = grid_x.layer_members(grid_x.layer_of(rank));
+    let mut tags = TagGen::new();
+
+    let (cs, ce) = lx.range(my_x); // my column range (and X-layout row range)
+    let width = ce - cs;
+    let (ors, ore) = lo.range(my_o); // my Ω rotation part rows
+
+    // One-time: S(:, cs..ce) = XᵀX/n via rotated Xᵀ row slabs.
+    let xt_slab = Block::Dense(x.col_block(cs, ce).transpose()); // my Xᵀ rows (width × n)
+    let x_fixed = x.col_block(cs, ce); // n × width
+    let mut s_cols = mult_concat(
+        comm,
+        &grid_x,
+        &grid_x,
+        tags.next(10_000),
+        &xt_slab,
+        ConcatAxis::Rows,
+        &lx,
+        width,
+        |comm, _idx, blk| {
+            let a = blk.as_dense();
+            comm.count_flops_dense(2 * (a.rows() * n * width) as u64);
+            a.matmul(&x_fixed)
+        },
+    );
+    s_cols.scale(1.0 / n as f64); // p × width
+
+    // Iterate, in both layouts: X-layout block rows (for G/prox/objective)
+    // and Ω-grid rotation part (for the W multiply).
+    let mut omega_x = Mat::from_fn(width, p, |i, j| f64::from(cs + i == j));
+    // The Ω-grid copy is only needed to seed the first W multiply; the
+    // line-search trials redistribute each candidate themselves.
+    let omega_o = Mat::from_fn(ore - ors, p, |i, j| f64::from(ors + i == j));
+
+    // W(:, my cols) = Ω·S via rotated sparse Ω parts (Algorithm 2 l. 3/10).
+    let w_step = |comm: &mut Comm, tags: &mut TagGen, om_part: &Mat| -> Mat {
+        let part = Block::Sparse(Csr::from_dense(om_part, 0.0));
+        mult_concat(
+            comm,
+            &grid_o,
+            &grid_x,
+            tags.next(10_000),
+            &part,
+            ConcatAxis::Rows,
+            &lo,
+            width,
+            |comm, _idx, blk| {
+                let (out, fd, fs) = blk.matmul(&s_cols);
+                comm.count_flops_dense(fd);
+                comm.count_flops_sparse(fs);
+                out
+            },
+        )
+    };
+
+    // Objective from X-layout pieces: tr(WΩ) = Σ W(:,cols)∘Ω(:,cols) and
+    // Ω(:,cols) = Ω(cols,:)ᵀ by symmetry of the iterate.
+    let objective = |comm: &mut Comm, tags: &mut TagGen, om_x: &Mat, w_cols: &Mat| -> f64 {
+        let parts = match ops::diag_fro_parts_block(om_x, cs) {
+            Some([logd, fro]) => {
+                let tr = w_cols.dot_elem(&om_x.transpose());
+                vec![0.0, logd, tr, fro]
+            }
+            None => vec![1.0, 0.0, 0.0, 0.0],
+        };
+        let global = global_sum(comm, &x_layer_group, tags.next(10), parts);
+        combine_objective(&global, cfg.lambda2)
+    };
+
+    let mut w_cols = w_step(comm, &mut tags, &omega_o); // p × width
+    let mut stats = SolveStats::default();
+    let mut converged = false;
+    let mut g_final = f64::INFINITY;
+
+    for _it in 0..cfg.max_iter {
+        stats.iters += 1;
+
+        // Global transpose of W (Algorithm 2 line 5): our storage of the
+        // column block is Wᵀ's block rows, so one distributed transpose
+        // yields W's block rows; both slabs then live in the X layout.
+        let wt_rows = w_cols.transpose(); // Wᵀ(cols,:) = my block rows of Wᵀ
+        let (w_rows, _) = transpose_block_rows(comm, &grid_x, tags.next(10), &wt_rows, &lx);
+
+        let grad = ops::gradient_block(&omega_x, &w_rows, &wt_rows, cs, cfg.lambda2);
+        let g_prev = objective(comm, &mut tags, &omega_x, &w_cols);
+
+        // Line search (Algorithm 2 lines 8-12).
+        let mut tau = 1.0;
+        let mut accepted = None;
+        for _ls in 0..cfg.max_linesearch {
+            stats.trials += 1;
+            let omega_x_new = ops::prox_block(&omega_x, &grad, cs, tau, cfg.lambda1);
+            // Back to the Ω grid for the rotation (free when c_X = c_Ω).
+            let omega_o_new = redistribute_rows(
+                comm,
+                tags.next(100),
+                &omega_x_new,
+                &grid_x,
+                &lx,
+                &grid_o,
+                &lo,
+            );
+            let w_new = w_step(comm, &mut tags, &omega_o_new);
+            let g_new = objective(comm, &mut tags, &omega_x_new, &w_new);
+            let ls_local = ops::linesearch_parts_block(&omega_x, &omega_x_new, &grad);
+            let ls = global_sum(comm, &x_layer_group, tags.next(10), ls_local.to_vec());
+            let _ = &omega_o_new; // candidate lives only within the trial
+            if ops::accepts(g_new, g_prev, [ls[0], ls[1]], tau) {
+                accepted = Some((omega_x_new, w_new, g_new));
+                break;
+            }
+            accepted = Some((omega_x_new, w_new, g_new));
+            tau *= 0.5;
+        }
+        let (omega_x_new, w_new, g_new) = accepted.expect("at least one trial");
+
+        let delta_local = omega_x.max_abs_diff(&omega_x_new);
+        let delta = global_max(comm, &x_layer_group, tags.next(10), delta_local);
+        omega_x = omega_x_new;
+        w_cols = w_new;
+        g_final = g_new;
+
+        let nnz = global_sum(
+            comm,
+            &x_layer_group,
+            tags.next(10),
+            vec![omega_x.nnz() as f64],
+        )[0] as u64;
+        stats.nnz_samples += p as u64;
+        stats.nnz_total += nnz;
+
+        if delta < cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    RankFit {
+        row_start: cs,
+        omega_block: omega_x,
+        primary: grid_x.layer_of(rank) == 0,
+        stats,
+        objective: g_final,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::concord::dist_common::assemble_fit;
+    use crate::concord::single_node::fit_single_node;
+    use crate::concord::Variant;
+    use crate::rng::Rng;
+    use crate::simnet::Fabric;
+
+    fn test_cfg() -> ConcordConfig {
+        ConcordConfig {
+            lambda1: 0.25,
+            lambda2: 0.1,
+            tol: 1e-6,
+            max_iter: 200,
+            max_linesearch: 40,
+            variant: Variant::Cov,
+        }
+    }
+
+    #[test]
+    fn cov_matches_single_node_across_configs() {
+        let mut rng = Rng::new(31);
+        let (n, p) = (20usize, 16usize);
+        let x = Mat::from_fn(n, p, |_, _| rng.normal());
+        let cfg = test_cfg();
+        let reference = fit_single_node(&x, &cfg).unwrap();
+
+        // Cov's gram step rotates Xᵀ against X on the same c_X grid, so
+        // it additionally needs c_X² ≤ P (the paper's L_Cov = P/c_X² + …
+        // term presumes the same).
+        for &(pr, cx, co) in &[
+            (1usize, 1usize, 1usize),
+            (4, 1, 1),
+            (4, 2, 2),
+            (4, 2, 1),
+            (4, 1, 2),
+            (8, 2, 4),
+            (16, 4, 2),
+        ] {
+            let x = Arc::new(x.clone());
+            let run = Fabric::new(pr).run(move |comm| fit_cov_rank(comm, &x, &cfg, cx, co));
+            let fit = assemble_fit(run.results);
+            assert_eq!(fit.iterations, reference.iterations, "P={pr} cx={cx} co={co}");
+            assert!(
+                fit.omega.max_abs_diff(&reference.omega) < 1e-8,
+                "P={pr} cx={cx} co={co}: {}",
+                fit.omega.max_abs_diff(&reference.omega)
+            );
+        }
+    }
+
+    /// Cov and Obs are two factorizations of the same math: their
+    /// estimates must agree.
+    #[test]
+    fn cov_and_obs_agree_distributed() {
+        let mut rng = Rng::new(32);
+        let (n, p) = (10usize, 16usize);
+        let xm = Mat::from_fn(n, p, |_, _| rng.normal());
+        let cfg = test_cfg();
+        let x1 = Arc::new(xm.clone());
+        let cov = assemble_fit(
+            Fabric::new(4)
+                .run(move |comm| fit_cov_rank(comm, &x1, &cfg, 2, 2))
+                .results,
+        );
+        let x2 = Arc::new(xm);
+        let obs = assemble_fit(
+            Fabric::new(4)
+                .run(move |comm| super::super::obs::fit_obs_rank(comm, &x2, &cfg, 2, 2))
+                .results,
+        );
+        assert!(cov.omega.max_abs_diff(&obs.omega) < 1e-7);
+    }
+}

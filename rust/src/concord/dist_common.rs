@@ -1,0 +1,155 @@
+//! Shared machinery for the distributed Cov/Obs rank programs: global
+//! scalar reductions over layer groups, tag management, per-rank fit
+//! fragments and their assembly.
+
+use crate::linalg::Mat;
+use crate::simnet::Comm;
+
+use super::{ConcordFit, SolveStats};
+
+/// Monotone tag allocator. Every rank advances it identically (the
+/// solver control flow is globally deterministic), so matching calls on
+/// different ranks agree on tags without coordination.
+#[derive(Debug, Clone, Copy)]
+pub struct TagGen(u64);
+
+impl TagGen {
+    pub fn new() -> Self {
+        TagGen(1)
+    }
+
+    /// Reserve a range of `stride` tags; returns its base.
+    pub fn next(&mut self, stride: u64) -> u64 {
+        let t = self.0;
+        self.0 += stride;
+        t
+    }
+}
+
+impl Default for TagGen {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Elementwise sum over a layer group (one rank per team — every block
+/// counted exactly once), with every rank of the world participating in
+/// its own layer's reduction so all ranks end with the global value.
+pub fn global_sum(comm: &mut Comm, group: &[usize], tag: u64, vals: Vec<f64>) -> Vec<f64> {
+    if group.len() <= 1 {
+        vals
+    } else {
+        comm.sum_reduce(group, tag, vals)
+    }
+}
+
+/// Max over a layer group.
+pub fn global_max(comm: &mut Comm, group: &[usize], tag: u64, val: f64) -> f64 {
+    if group.len() <= 1 {
+        return val;
+    }
+    comm.allgather(group, tag, vec![val])
+        .into_iter()
+        .map(|v| v[0])
+        .fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Objective-piece accumulator carried through the global reduction:
+/// `[bad_diag_flag, logd, trace_term, fro]`. A positive flag anywhere
+/// poisons the objective to +∞ (non-positive diagonal ⇒ reject trial).
+pub fn combine_objective(parts: &[f64], lam2: f64) -> f64 {
+    if parts[0] > 0.0 {
+        f64::INFINITY
+    } else {
+        -parts[1] + 0.5 * parts[2] + 0.5 * lam2 * parts[3]
+    }
+}
+
+/// One rank's share of a finished fit.
+#[derive(Debug, Clone)]
+pub struct RankFit {
+    /// Global row offset of `omega_block`.
+    pub row_start: usize,
+    /// This rank's block rows of the estimate.
+    pub omega_block: Mat,
+    /// True on exactly one replica per block (layer 0).
+    pub primary: bool,
+    pub stats: SolveStats,
+    pub objective: f64,
+    pub converged: bool,
+}
+
+/// Stitch the per-rank fragments into a full [`ConcordFit`].
+pub fn assemble_fit(mut results: Vec<RankFit>) -> ConcordFit {
+    results.retain(|r| r.primary);
+    assert!(!results.is_empty(), "no primary rank fragments");
+    results.sort_by_key(|r| r.row_start);
+    let stats = results[0].stats;
+    let objective = results[0].objective;
+    let converged = results[0].converged;
+    let blocks: Vec<Mat> = results.into_iter().map(|r| r.omega_block).collect();
+    let omega = Mat::vstack(&blocks);
+    ConcordFit {
+        omega,
+        iterations: stats.iters,
+        mean_linesearch: stats.mean_linesearch(),
+        mean_row_nnz: stats.mean_row_nnz(),
+        objective,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::Fabric;
+
+    #[test]
+    fn tag_gen_reserves_disjoint_ranges() {
+        let mut t = TagGen::new();
+        let a = t.next(100);
+        let b = t.next(10);
+        let c = t.next(1);
+        assert!(a + 100 <= b);
+        assert!(b + 10 <= c);
+    }
+
+    #[test]
+    fn global_max_across_group() {
+        let run = Fabric::new(4).run(|comm| {
+            let group: Vec<usize> = (0..comm.size()).collect();
+            global_max(comm, &group, 3, comm.rank() as f64)
+        });
+        assert!(run.results.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn combine_objective_poisoned_by_flag() {
+        assert!(combine_objective(&[1.0, 0.0, 0.0, 0.0], 0.0).is_infinite());
+        // -logd + tr/2 + (lam2/2)*fro = -2 + 2.5 + 1.
+        let v = combine_objective(&[0.0, 2.0, 5.0, 4.0], 0.5);
+        assert!((v - (-2.0 + 2.5 + 1.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn assemble_orders_and_filters() {
+        let frag = |start: usize, val: f64, primary| RankFit {
+            row_start: start,
+            omega_block: Mat::from_vec(1, 2, vec![val, val]),
+            primary,
+            stats: SolveStats { iters: 3, trials: 6, nnz_samples: 2, nnz_total: 4 },
+            objective: 1.5,
+            converged: true,
+        };
+        let fit = assemble_fit(vec![
+            frag(1, 2.0, true),
+            frag(0, 1.0, true),
+            frag(0, 9.0, false), // replica, dropped
+        ]);
+        assert_eq!(fit.omega.rows(), 2);
+        assert_eq!(fit.omega.get(0, 0), 1.0);
+        assert_eq!(fit.omega.get(1, 0), 2.0);
+        assert_eq!(fit.iterations, 3);
+        assert_eq!(fit.mean_linesearch, 2.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! The CONCORD/PseudoNet estimator (paper §2) and the HP-CONCORD
+//! proximal gradient solvers (paper §3).
+//!
+//! The estimate is the minimizer of
+//!
+//! ```text
+//!   -log det(Ω_D²) + tr(Ω S Ω) + λ₁‖Ω_X‖₁ + (λ₂/2)‖Ω‖_F²        (1)
+//! ```
+//!
+//! solved by proximal gradient with backtracking line search
+//! (Algorithm 1). Three drivers share the same block-level math
+//! ([`ops`]):
+//!
+//! - [`single_node::fit_single_node`] — the shared-memory path (the
+//!   BigQUIC head-to-head setting), optionally running its fused
+//!   line-search trials on the AOT-compiled JAX/Pallas artifacts via
+//!   PJRT ([`crate::runtime`]);
+//! - [`cov::fit_cov_rank`] — **Algorithm 2** (Cov): computes S = XᵀX/n
+//!   once, then W = ΩS per trial via the 1.5D multiply;
+//! - [`obs::fit_obs_rank`] — **Algorithm 3** (Obs): never forms S;
+//!   computes Y = ΩXᵀ per trial and Z = YX/n per iteration.
+//!
+//! [`fit_distributed`] wraps either rank program in a [`Fabric`] run and
+//! returns the assembled estimate plus the metered communication costs.
+
+pub mod cov;
+pub mod dist_common;
+pub mod obs;
+pub mod ops;
+pub mod screening;
+pub mod single_node;
+
+pub use screening::{fit_with_screening, ScreenedFit};
+pub use single_node::fit_single_node;
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::simnet::{cost::CostSummary, Fabric, MachineParams};
+use std::sync::Arc;
+
+/// Which HP-CONCORD variant to run (paper §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Compute S = XᵀX/n once; W = ΩS per trial. Wins when d/p is small
+    /// relative to n/(p−n)·1/t (Lemma 3.1).
+    Cov,
+    /// Never form S; Y = ΩXᵀ per trial, Z = YX/n per iteration. Wins in
+    /// the n ≪ p, denser-iterate regime.
+    Obs,
+    /// Choose by Lemma 3.1's crossover rule with a pilot estimate of d.
+    Auto,
+}
+
+/// Solver configuration (tuning parameters of problem (1) + controls).
+#[derive(Debug, Clone, Copy)]
+pub struct ConcordConfig {
+    /// ℓ₁ penalty λ₁ on the off-diagonal entries.
+    pub lambda1: f64,
+    /// Squared-Frobenius penalty λ₂ (λ₂ = 0 recovers plain CONCORD).
+    pub lambda2: f64,
+    /// Convergence tolerance ε on max |Ω⁽ᵏ⁺¹⁾ − Ω⁽ᵏ⁾|.
+    pub tol: f64,
+    /// Cap on proximal gradient iterations.
+    pub max_iter: usize,
+    /// Cap on line-search halvings per iteration.
+    pub max_linesearch: usize,
+    pub variant: Variant,
+}
+
+impl Default for ConcordConfig {
+    fn default() -> Self {
+        ConcordConfig {
+            lambda1: 0.3,
+            lambda2: 0.0,
+            tol: 1e-5,
+            max_iter: 500,
+            max_linesearch: 40,
+            variant: Variant::Auto,
+        }
+    }
+}
+
+/// A fitted estimate plus the solver statistics the paper's cost model
+/// needs (s = iterations, t = mean line-search trials, d = mean nnz/row).
+#[derive(Debug, Clone)]
+pub struct ConcordFit {
+    /// Estimate Ω̂ (symmetric; exactly sparse off the diagonal).
+    pub omega: Mat,
+    /// Proximal gradient iterations taken (the paper's s).
+    pub iterations: usize,
+    /// Mean line-search trials per iteration (the paper's t).
+    pub mean_linesearch: f64,
+    /// Mean nonzeros per row of the iterates (the paper's d).
+    pub mean_row_nnz: f64,
+    /// Final smooth objective value g(Ω̂).
+    pub objective: f64,
+    pub converged: bool,
+}
+
+/// Running tally of (s, t, d) across an optimization.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SolveStats {
+    pub iters: usize,
+    pub trials: usize,
+    pub nnz_samples: u64,
+    pub nnz_total: u64,
+}
+
+impl SolveStats {
+    pub fn mean_linesearch(&self) -> f64 {
+        if self.iters == 0 {
+            0.0
+        } else {
+            self.trials as f64 / self.iters as f64
+        }
+    }
+
+    pub fn mean_row_nnz(&self) -> f64 {
+        if self.nnz_samples == 0 {
+            0.0
+        } else {
+            self.nnz_total as f64 / self.nnz_samples as f64
+        }
+    }
+}
+
+/// Pick Cov vs Obs by Lemma 3.1: Cov wins iff d/p < n/(p−n) · 1/t.
+/// `d_est` is a pilot estimate of the mean iterate row-density, `t_est`
+/// of line-search trials (the paper observed 5–15 per prox iteration).
+pub fn choose_variant(n: usize, p: usize, d_est: f64, t_est: f64) -> Variant {
+    if n >= p {
+        return Variant::Cov;
+    }
+    let lhs = d_est / p as f64;
+    let rhs = (n as f64 / (p - n) as f64) / t_est;
+    if lhs < rhs {
+        Variant::Cov
+    } else {
+        Variant::Obs
+    }
+}
+
+/// Result of a distributed fit: the estimate plus metered costs.
+#[derive(Debug)]
+pub struct DistFit {
+    pub fit: ConcordFit,
+    pub cost: CostSummary,
+    pub variant: Variant,
+}
+
+/// Run HP-CONCORD on a simulated P-rank machine with replication factors
+/// `c_x` (data operands) and `c_omega` (iterate). The observation matrix
+/// is shared read-only with the ranks, which slice out their own parts —
+/// standing in for the paper's pre-distributed data. Requires
+/// c_x·c_omega ≤ P (powers of two) and p divisible by the team counts.
+pub fn fit_distributed(
+    x: &Mat,
+    cfg: &ConcordConfig,
+    p_ranks: usize,
+    c_x: usize,
+    c_omega: usize,
+    machine: MachineParams,
+) -> DistFit {
+    let variant = match cfg.variant {
+        Variant::Auto => {
+            let mut rng = Rng::new(0x5eed);
+            let d_est = pilot_density(x, cfg, &mut rng);
+            choose_variant(x.rows(), x.cols(), d_est, 10.0)
+        }
+        v => v,
+    };
+    let x = Arc::new(x.clone());
+    let cfg = *cfg;
+    let fabric = Fabric::with_machine(p_ranks, machine);
+    match variant {
+        Variant::Cov => {
+            let run = fabric.run(move |comm| cov::fit_cov_rank(comm, &x, &cfg, c_x, c_omega));
+            let cost = run.summary();
+            DistFit { fit: dist_common::assemble_fit(run.results), cost, variant }
+        }
+        Variant::Obs | Variant::Auto => {
+            let run = fabric.run(move |comm| obs::fit_obs_rank(comm, &x, &cfg, c_x, c_omega));
+            let cost = run.summary();
+            DistFit { fit: dist_common::assemble_fit(run.results), cost, variant }
+        }
+    }
+}
+
+/// Cheap pilot estimate of the iterate density d: a few prox iterations
+/// on a column-subsampled problem.
+fn pilot_density(x: &Mat, cfg: &ConcordConfig, rng: &mut Rng) -> f64 {
+    let p = x.cols();
+    let sample_p = p.min(128);
+    let cols = rng.sample_indices(p, sample_p);
+    let xs = Mat::from_fn(x.rows(), sample_p, |i, j| x.get(i, cols[j]));
+    let mut sub_cfg = *cfg;
+    sub_cfg.max_iter = 3;
+    sub_cfg.variant = Variant::Cov;
+    let fit = single_node::fit_single_node(&xs, &sub_cfg).expect("pilot fit");
+    fit.mean_row_nnz * (p as f64 / sample_p as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lemma31_crossover_rule() {
+        // d/p < n/(p-n)/t → Cov. Supplementary S.1 examples: with t=10,
+        // r_obs=0.1 the threshold is r_nnz ≈ 0.011.
+        let p = 1000;
+        let n = 100;
+        assert_eq!(choose_variant(n, p, 5.0, 10.0), Variant::Cov); // 0.005 < 0.011
+        assert_eq!(choose_variant(n, p, 50.0, 10.0), Variant::Obs); // 0.05 > 0.011
+        assert_eq!(choose_variant(2000, 1000, 999.0, 10.0), Variant::Cov);
+    }
+
+    #[test]
+    fn stats_means() {
+        let s = SolveStats { iters: 4, trials: 10, nnz_samples: 8, nnz_total: 24 };
+        assert_eq!(s.mean_linesearch(), 2.5);
+        assert_eq!(s.mean_row_nnz(), 3.0);
+    }
+}

@@ -1,0 +1,261 @@
+//! **Algorithm 3** — the Obs variant of HP-CONCORD, as a rank program
+//! for the simulated fabric.
+//!
+//! Obs never forms the covariance matrix: per line-search trial it
+//! computes Y⁽ᵏ⁾ = Ω⁽ᵏ⁾Xᵀ (1.5D sum-mode multiply, rotating the Xᵀ
+//! slabs over the c_X grid while the sparse iterate stays put on the
+//! c_Ω grid), and once per proximal iteration Z⁽ᵏ⁾ = Y⁽ᵏ⁾X/n (1.5D
+//! concat-mode) plus a distributed transpose of Z. Everything else —
+//! gradient, prox, objective, line-search — is embarrassingly parallel
+//! over the iterate's block rows, with scalar reductions over layer
+//! groups.
+//!
+//! Layouts (paper Fig. 1, right): Ω, Y, Z, G all live in 1D block rows
+//! over the c_Ω grid's teams; Xᵀ row-slabs / X column-slabs live on the
+//! c_X grid and rotate.
+
+use std::sync::Arc;
+
+use crate::dist::{
+    mult_concat, mult_sum, transpose_block_rows, Block, ConcatAxis, Layout1D, RepGrid,
+};
+use crate::linalg::{Csr, Mat};
+use crate::simnet::Comm;
+
+use super::dist_common::{combine_objective, global_max, global_sum, RankFit, TagGen};
+use super::ops;
+use super::{ConcordConfig, SolveStats};
+
+/// Run Obs on this rank. `x` is the full observation matrix (each rank
+/// slices its own parts — the simulation stand-in for pre-distributed
+/// data). Returns this rank's fragment of the fit.
+pub fn fit_obs_rank(
+    comm: &mut Comm,
+    x: &Arc<Mat>,
+    cfg: &ConcordConfig,
+    c_x: usize,
+    c_omega: usize,
+) -> RankFit {
+    let p_ranks = comm.size();
+    let (n, p) = x.shape();
+    let grid_x = RepGrid::new(p_ranks, c_x);
+    let grid_o = RepGrid::new(p_ranks, c_omega);
+    let lx = Layout1D::new(p, grid_x.teams()); // Xᵀ rows / X cols over X teams
+    let lo = Layout1D::new(p, grid_o.teams()); // Ω/Y/Z rows over Ω teams
+    let rank = comm.rank();
+    let my_x = grid_x.team_of(rank);
+    let my_o = grid_o.team_of(rank);
+    let o_layer_group = grid_o.layer_members(grid_o.layer_of(rank));
+    let mut tags = TagGen::new();
+
+    // My rotated operands: Xᵀ slab (k-rows) and X column slab.
+    let (xs, xe) = lx.range(my_x);
+    let x_cols = x.col_block(xs, xe); // n × len
+    let xt_slab = Block::Dense(x_cols.transpose()); // len × n
+    let x_slab = Block::Dense(x_cols); // n × len (rotates for Z)
+
+    // Iterate block rows.
+    let (os, oe) = lo.range(my_o);
+    let my_rows = oe - os;
+    let mut omega = Mat::from_fn(my_rows, p, |i, j| f64::from(os + i == j));
+
+    // Y = Ω Xᵀ for a given iterate block (sparse·dense over rotated Xᵀ).
+    let y_step = |comm: &mut Comm, tags: &mut TagGen, om: &Mat| -> Mat {
+        let om_sparse = Csr::from_dense(om, 0.0);
+        mult_sum(
+            comm,
+            &grid_x,
+            &grid_o,
+            tags.next(10_000),
+            &xt_slab,
+            my_rows,
+            n,
+            |comm, idx, blk| {
+                let (ks, ke) = lx.range(idx);
+                let slab = blk.as_dense();
+                let mut out = Mat::zeros(my_rows, n);
+                let mut nnz_used = 0u64;
+                for i in 0..my_rows {
+                    let (cols, vals) = om_sparse.row(i);
+                    let orow = out.row_mut(i);
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        if j >= ks && j < ke {
+                            nnz_used += 1;
+                            let srow = slab.row(j - ks);
+                            for t in 0..n {
+                                orow[t] += v * srow[t];
+                            }
+                        }
+                    }
+                }
+                comm.count_flops_sparse(2 * nnz_used * n as u64);
+                out
+            },
+        )
+    };
+
+    // Objective for a candidate iterate: g = −2Σlog + ‖Y‖²/n + λ₂/2‖Ω‖².
+    let objective = |comm: &mut Comm,
+                     tags: &mut TagGen,
+                     om: &Mat,
+                     y: &Mat|
+     -> f64 {
+        let parts = match ops::diag_fro_parts_block(om, os) {
+            Some([logd, fro]) => vec![0.0, logd, y.fro2() / n as f64, fro],
+            None => vec![1.0, 0.0, 0.0, 0.0],
+        };
+        let global = global_sum(comm, &o_layer_group, tags.next(10), parts);
+        combine_objective(&global, cfg.lambda2)
+    };
+
+    let mut y = y_step(comm, &mut tags, &omega);
+    let mut stats = SolveStats::default();
+    let mut converged = false;
+    let mut g_final = f64::INFINITY;
+
+    for _it in 0..cfg.max_iter {
+        stats.iters += 1;
+
+        // Z = Y·X/n over rotated X column slabs, then Zᵀ.
+        let y_fixed = y.clone();
+        let mut z = mult_concat(
+            comm,
+            &grid_x,
+            &grid_o,
+            tags.next(10_000),
+            &x_slab,
+            ConcatAxis::Cols,
+            &lx,
+            my_rows,
+            |comm, _idx, blk| {
+                let xb = blk.as_dense();
+                comm.count_flops_dense(2 * (my_rows * n * xb.cols()) as u64);
+                y_fixed.matmul(&xb)
+            },
+        );
+        z.scale(1.0 / n as f64);
+        let (zt, _) = transpose_block_rows(comm, &grid_o, tags.next(10), &z, &lo);
+
+        // Gradient and current objective.
+        let grad = ops::gradient_block(&omega, &z, &zt, os, cfg.lambda2);
+        let g_prev = objective(comm, &mut tags, &omega, &y);
+
+        // Backtracking line search (Algorithm 3 lines 8-12).
+        let mut tau = 1.0;
+        let mut accepted = None;
+        for _ls in 0..cfg.max_linesearch {
+            stats.trials += 1;
+            let omega_new = ops::prox_block(&omega, &grad, os, tau, cfg.lambda1);
+            let y_new = y_step(comm, &mut tags, &omega_new);
+            let g_new = objective(comm, &mut tags, &omega_new, &y_new);
+            let ls_local = ops::linesearch_parts_block(&omega, &omega_new, &grad);
+            let ls = global_sum(comm, &o_layer_group, tags.next(10), ls_local.to_vec());
+            if ops::accepts(g_new, g_prev, [ls[0], ls[1]], tau) {
+                accepted = Some((omega_new, y_new, g_new));
+                break;
+            }
+            tau *= 0.5;
+            accepted = Some((omega_new, y_new, g_new)); // keep last if cap hit
+        }
+        let (omega_new, y_new, g_new) = accepted.expect("at least one trial");
+
+        let delta_local = omega.max_abs_diff(&omega_new);
+        let delta = global_max(comm, &o_layer_group, tags.next(10), delta_local);
+        omega = omega_new;
+        y = y_new;
+        g_final = g_new;
+
+        let nnz = global_sum(
+            comm,
+            &o_layer_group,
+            tags.next(10),
+            vec![omega.nnz() as f64],
+        )[0] as u64;
+        stats.nnz_samples += p as u64;
+        stats.nnz_total += nnz;
+
+        if delta < cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    RankFit {
+        row_start: os,
+        omega_block: omega,
+        primary: grid_o.layer_of(rank) == 0,
+        stats,
+        objective: g_final,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::concord::dist_common::assemble_fit;
+    use crate::concord::single_node::fit_single_node;
+    use crate::concord::Variant;
+    use crate::rng::Rng;
+    use crate::simnet::Fabric;
+
+    fn test_cfg() -> ConcordConfig {
+        ConcordConfig {
+            lambda1: 0.25,
+            lambda2: 0.1,
+            tol: 1e-6,
+            max_iter: 200,
+            max_linesearch: 40,
+            variant: Variant::Obs,
+        }
+    }
+
+    /// The distributed Obs solver must match the single-node solver to
+    /// near machine precision for every replication configuration.
+    #[test]
+    fn obs_matches_single_node_across_configs() {
+        let mut rng = Rng::new(21);
+        let (n, p) = (12usize, 16usize);
+        let x = Mat::from_fn(n, p, |_, _| rng.normal());
+        let cfg = test_cfg();
+        let reference = fit_single_node(&x, &cfg).unwrap();
+
+        for &(pr, cx, co) in &[(1usize, 1usize, 1usize), (4, 1, 1), (4, 2, 1), (4, 1, 2), (4, 2, 2), (8, 2, 4), (8, 4, 2)] {
+            let x = Arc::new(x.clone());
+            let run = Fabric::new(pr)
+                .run(move |comm| fit_obs_rank(comm, &x, &cfg, cx, co));
+            let fit = assemble_fit(run.results);
+            assert_eq!(fit.iterations, reference.iterations, "P={pr} cx={cx} co={co}");
+            assert!(
+                fit.omega.max_abs_diff(&reference.omega) < 1e-8,
+                "P={pr} cx={cx} co={co}: {}",
+                fit.omega.max_abs_diff(&reference.omega)
+            );
+            assert!((fit.objective - reference.objective).abs() < 1e-8);
+        }
+    }
+
+    /// Replication reduces the words moved per rank (the whole point of
+    /// communication avoidance): c_X = 2 must move fewer words than
+    /// c_X = 1 at equal P.
+    #[test]
+    fn replication_reduces_bandwidth() {
+        let mut rng = Rng::new(22);
+        let (n, p) = (10usize, 16usize);
+        let x = Mat::from_fn(n, p, |_, _| rng.normal());
+        let mut cfg = test_cfg();
+        cfg.max_iter = 5;
+        cfg.tol = 0.0;
+        let words = |cx: usize, co: usize| {
+            let x = Arc::new(x.clone());
+            let run = Fabric::new(8).run(move |comm| fit_obs_rank(comm, &x, &cfg, cx, co));
+            run.summary().max_per_rank.words
+        };
+        let w11 = words(1, 1);
+        let w42 = words(4, 2);
+        assert!(
+            w42 < w11,
+            "replication should cut per-rank words: {w42} !< {w11}"
+        );
+    }
+}

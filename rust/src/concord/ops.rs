@@ -1,0 +1,312 @@
+//! Block-level CONCORD math, shared by the single-node and distributed
+//! drivers. Every function operates on a horizontal slab of rows
+//! `row_offset .. row_offset + block.rows()` of the global p×p iterate,
+//! so the same code serves the full matrix (offset 0) and any 1D
+//! block-row partition. These are the Rust twins of the L1 Pallas
+//! kernels in `python/compile/kernels/concord.py`; the python test-suite
+//! pins both against the same `ref.py` oracle semantics.
+
+use crate::linalg::Mat;
+
+/// Gradient slab (Algorithm 2 line 6):
+/// G = −(Ω_D)⁻¹ + (W + Wᵀ)/2 + λ₂Ω, restricted to a row slab. `w` and
+/// `wt` are the matching slabs of W and Wᵀ.
+pub fn gradient_block(omega: &Mat, w: &Mat, wt: &Mat, row_offset: usize, lam2: f64) -> Mat {
+    let (rows, p) = omega.shape();
+    debug_assert_eq!(w.shape(), (rows, p));
+    debug_assert_eq!(wt.shape(), (rows, p));
+    let mut g = Mat::zeros(rows, p);
+    for i in 0..rows {
+        let orow = omega.row(i);
+        let wrow = w.row(i);
+        let wtrow = wt.row(i);
+        let grow = g.row_mut(i);
+        for j in 0..p {
+            grow[j] = 0.5 * (wrow[j] + wtrow[j]) + lam2 * orow[j];
+        }
+        let dcol = row_offset + i;
+        if dcol < p {
+            grow[dcol] -= 1.0 / orow[dcol];
+        }
+    }
+    g
+}
+
+/// Proximal step slab (Algorithm 2 line 9): soft-threshold Ω − τG at
+/// τλ₁ off the diagonal; the diagonal passes through un-thresholded
+/// (the ℓ₁ penalty is on Ω_X only).
+pub fn prox_block(omega: &Mat, g: &Mat, row_offset: usize, tau: f64, lam1: f64) -> Mat {
+    let (rows, p) = omega.shape();
+    debug_assert_eq!(g.shape(), (rows, p));
+    let thresh = tau * lam1;
+    let mut out = Mat::zeros(rows, p);
+    for i in 0..rows {
+        let orow = omega.row(i);
+        let grow = g.row(i);
+        let dst = out.row_mut(i);
+        for j in 0..p {
+            let z = orow[j] - tau * grow[j];
+            dst[j] = soft(z, thresh);
+        }
+        let dcol = row_offset + i;
+        if dcol < p {
+            dst[dcol] = orow[dcol] - tau * grow[dcol];
+        }
+    }
+    out
+}
+
+/// In-place fused prox (hot-path variant: no allocation). Writes into
+/// `out`, which must be pre-sized.
+pub fn prox_block_into(
+    omega: &Mat,
+    g: &Mat,
+    row_offset: usize,
+    tau: f64,
+    lam1: f64,
+    out: &mut Mat,
+) {
+    let (rows, p) = omega.shape();
+    debug_assert_eq!(out.shape(), (rows, p));
+    let thresh = tau * lam1;
+    for i in 0..rows {
+        let orow = omega.row(i);
+        let grow = g.row(i);
+        let dst = out.row_mut(i);
+        for j in 0..p {
+            dst[j] = soft(orow[j] - tau * grow[j], thresh);
+        }
+        let dcol = row_offset + i;
+        if dcol < p {
+            dst[dcol] = orow[dcol] - tau * grow[dcol];
+        }
+    }
+}
+
+#[inline]
+fn soft(z: f64, a: f64) -> f64 {
+    if z > a {
+        z - a
+    } else if z < -a {
+        z + a
+    } else {
+        0.0
+    }
+}
+
+/// Objective pieces over a row slab: (Σ log Ω_ii, Σ W∘Ω, ‖Ω‖_F²) for the
+/// diagonal entries/elements inside the slab. Returns `None` when any
+/// in-slab diagonal entry is non-positive (objective undefined; the line
+/// search treats this as an automatic reject).
+///
+/// The caller combines the global sums into the smooth objective
+/// g(Ω) = −Σlog + tr/2 + (λ₂/2)·fro (Cov), or swaps the trace term for
+/// ‖Y‖²_F/n (Obs). This is the function whose exact gradient is
+/// Algorithm 2's G (the paper's line 7 prints a doubled log/trace form
+/// inconsistent with its own gradient line; see ref.py and DESIGN.md —
+/// the change only rescales the λ grid).
+pub fn objective_parts_block(omega: &Mat, w: &Mat, row_offset: usize) -> Option<[f64; 3]> {
+    let (rows, p) = omega.shape();
+    debug_assert_eq!(w.shape(), (rows, p));
+    let mut logd = 0.0;
+    let mut tr = 0.0;
+    let mut fro = 0.0;
+    for i in 0..rows {
+        let orow = omega.row(i);
+        let wrow = w.row(i);
+        for j in 0..p {
+            tr += wrow[j] * orow[j];
+            fro += orow[j] * orow[j];
+        }
+        let dcol = row_offset + i;
+        if dcol < p {
+            let d = orow[dcol];
+            if d <= 0.0 {
+                return None;
+            }
+            logd += d.ln();
+        }
+    }
+    Some([logd, tr, fro])
+}
+
+/// Diagonal-and-Frobenius pieces only (Obs objective, where the trace
+/// term comes from ‖Y‖²_F instead of W∘Ω).
+pub fn diag_fro_parts_block(omega: &Mat, row_offset: usize) -> Option<[f64; 2]> {
+    let (rows, p) = omega.shape();
+    let mut logd = 0.0;
+    let mut fro = 0.0;
+    for i in 0..rows {
+        let orow = omega.row(i);
+        for &v in orow {
+            fro += v * v;
+        }
+        let dcol = row_offset + i;
+        if dcol < p {
+            let d = orow[dcol];
+            if d <= 0.0 {
+                return None;
+            }
+            logd += d.ln();
+        }
+    }
+    Some([logd, fro])
+}
+
+/// Line-search pieces over a slab: (tr((Ω−Ω′)ᵀG), ‖Ω−Ω′‖_F²).
+pub fn linesearch_parts_block(omega: &Mat, omega_new: &Mat, g: &Mat) -> [f64; 2] {
+    let (rows, p) = omega.shape();
+    debug_assert_eq!(omega_new.shape(), (rows, p));
+    debug_assert_eq!(g.shape(), (rows, p));
+    let mut dot = 0.0;
+    let mut fro = 0.0;
+    for i in 0..rows {
+        let o = omega.row(i);
+        let on = omega_new.row(i);
+        let gr = g.row(i);
+        for j in 0..p {
+            let diff = o[j] - on[j];
+            dot += diff * gr[j];
+            fro += diff * diff;
+        }
+    }
+    [dot, fro]
+}
+
+/// Sufficient-decrease check (Algorithm 2 line 12):
+/// accept iff g(Ω′) ≤ g(Ω) − tr((Ω−Ω′)ᵀG) + ‖Ω−Ω′‖²/(2τ).
+pub fn accepts(g_new: f64, g_prev: f64, ls_parts: [f64; 2], tau: f64) -> bool {
+    g_new <= g_prev - ls_parts[0] + ls_parts[1] / (2.0 * tau)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn symmetric_posdiag(rng: &mut Rng, p: usize) -> Mat {
+        let mut m = Mat::from_fn(p, p, |_, _| 0.1 * rng.normal());
+        m.symmetrize();
+        for i in 0..p {
+            m.set(i, i, 1.0 + rng.uniform());
+        }
+        m
+    }
+
+    /// Full-matrix references (the ref.py formulas, transliterated).
+    fn ref_gradient(omega: &Mat, w: &Mat, lam2: f64) -> Mat {
+        let p = omega.rows();
+        let wt = w.transpose();
+        Mat::from_fn(p, p, |i, j| {
+            let mut v = 0.5 * (w.get(i, j) + wt.get(i, j)) + lam2 * omega.get(i, j);
+            if i == j {
+                v -= 1.0 / omega.get(i, i);
+            }
+            v
+        })
+    }
+
+    fn ref_prox(omega: &Mat, g: &Mat, tau: f64, lam1: f64) -> Mat {
+        let p = omega.rows();
+        Mat::from_fn(p, p, |i, j| {
+            let z = omega.get(i, j) - tau * g.get(i, j);
+            if i == j {
+                z
+            } else {
+                soft(z, tau * lam1)
+            }
+        })
+    }
+
+    #[test]
+    fn gradient_block_matches_full() {
+        let mut rng = Rng::new(1);
+        let p = 12;
+        let omega = symmetric_posdiag(&mut rng, p);
+        let w = Mat::from_fn(p, p, |_, _| rng.normal());
+        let full = ref_gradient(&omega, &w, 0.4);
+        // Split into two slabs and compare.
+        let wt = w.transpose();
+        for (r0, r1) in [(0, 5), (5, 12)] {
+            let blk = gradient_block(
+                &omega.row_block(r0, r1),
+                &w.row_block(r0, r1),
+                &wt.row_block(r0, r1),
+                r0,
+                0.4,
+            );
+            assert!(blk.max_abs_diff(&full.row_block(r0, r1)) < 1e-14);
+        }
+    }
+
+    #[test]
+    fn prox_block_matches_full_and_into_variant() {
+        let mut rng = Rng::new(2);
+        let p = 10;
+        let omega = symmetric_posdiag(&mut rng, p);
+        let g = Mat::from_fn(p, p, |_, _| rng.normal());
+        let full = ref_prox(&omega, &g, 0.5, 0.7);
+        for (r0, r1) in [(0, 3), (3, 10)] {
+            let ob = omega.row_block(r0, r1);
+            let gb = g.row_block(r0, r1);
+            let blk = prox_block(&ob, &gb, r0, 0.5, 0.7);
+            assert!(blk.max_abs_diff(&full.row_block(r0, r1)) < 1e-14);
+            let mut out = Mat::zeros(r1 - r0, p);
+            prox_block_into(&ob, &gb, r0, 0.5, 0.7, &mut out);
+            assert!(out.max_abs_diff(&blk) == 0.0);
+        }
+    }
+
+    #[test]
+    fn prox_diagonal_untouched_by_threshold() {
+        let p = 5;
+        let omega = Mat::eye(p);
+        let g = Mat::zeros(p, p);
+        let out = prox_block(&omega, &g, 0, 1.0, 100.0);
+        assert!(out.max_abs_diff(&Mat::eye(p)) == 0.0);
+    }
+
+    #[test]
+    fn objective_parts_sum_over_slabs() {
+        let mut rng = Rng::new(3);
+        let p = 9;
+        let omega = symmetric_posdiag(&mut rng, p);
+        let w = Mat::from_fn(p, p, |_, _| rng.normal());
+        let full = objective_parts_block(&omega, &w, 0).unwrap();
+        let a = objective_parts_block(&omega.row_block(0, 4), &w.row_block(0, 4), 0).unwrap();
+        let b = objective_parts_block(&omega.row_block(4, 9), &w.row_block(4, 9), 4).unwrap();
+        for k in 0..3 {
+            assert!((full[k] - (a[k] + b[k])).abs() < 1e-11, "part {k}");
+        }
+    }
+
+    #[test]
+    fn objective_rejects_nonpositive_diagonal() {
+        let mut omega = Mat::eye(3);
+        omega.set(1, 1, -0.5);
+        assert!(objective_parts_block(&omega, &Mat::zeros(3, 3), 0).is_none());
+        assert!(diag_fro_parts_block(&omega, 0).is_none());
+        // But a slab that excludes the bad diagonal entry is fine.
+        assert!(objective_parts_block(&omega.row_block(0, 1), &Mat::zeros(1, 3), 0).is_some());
+    }
+
+    #[test]
+    fn linesearch_parts_closed_form() {
+        // Ω − Ω′ = E (all ones): dot = ΣG, fro = p².
+        let p = 4;
+        let omega = Mat::from_fn(p, p, |_, _| 2.0);
+        let omega_new = Mat::from_fn(p, p, |_, _| 1.0);
+        let g = Mat::from_fn(p, p, |i, j| (i + j) as f64);
+        let [dot, fro] = linesearch_parts_block(&omega, &omega_new, &g);
+        let gsum: f64 = (0..p).flat_map(|i| (0..p).map(move |j| (i + j) as f64)).sum();
+        assert_eq!(dot, gsum);
+        assert_eq!(fro, (p * p) as f64);
+    }
+
+    #[test]
+    fn accepts_inequality() {
+        assert!(accepts(1.0, 1.0, [0.0, 0.0], 1.0));
+        assert!(!accepts(2.0, 1.0, [0.5, 0.5], 1.0)); // 2 > 1 - 0.5 + 0.25
+        assert!(accepts(0.9, 1.0, [0.5, 1.0], 1.0)); // 0.9 <= 1 - 0.5 + 0.5
+    }
+}

@@ -1,0 +1,203 @@
+//! Single-node (shared-memory) HP-CONCORD — the setting of the BigQUIC
+//! head-to-head (paper Figure 4, "Obs-1"/"Cov-1" curves).
+//!
+//! Runs Algorithm 1 with the fused native kernels ([`crate::runtime::native`])
+//! at any problem size; [`fit_single_node_with_engine`] routes the fused
+//! line-search trial through the AOT-compiled JAX/Pallas artifact when
+//! one matches the problem size, keeping Python off the request path
+//! while exercising the L1/L2 layers end to end.
+
+use anyhow::Result;
+
+use crate::linalg::Mat;
+use crate::runtime::{native, Engine};
+
+use super::{ConcordConfig, ConcordFit, SolveStats};
+
+/// Fit CONCORD/PseudoNet on one node with the native kernels.
+pub fn fit_single_node(x: &Mat, cfg: &ConcordConfig) -> Result<ConcordFit> {
+    fit_impl(x, cfg, None)
+}
+
+/// Fit with the PJRT engine when it has a `trial_p{p}` artifact for this
+/// size; silently falls back to the native kernels otherwise.
+pub fn fit_single_node_with_engine(
+    x: &Mat,
+    cfg: &ConcordConfig,
+    engine: &mut Engine,
+) -> Result<ConcordFit> {
+    fit_impl(x, cfg, Some(engine))
+}
+
+fn fit_impl(x: &Mat, cfg: &ConcordConfig, mut engine: Option<&mut Engine>) -> Result<ConcordFit> {
+    let p = x.cols();
+    let use_engine = engine.as_ref().map(|e| e.has_trial(p)).unwrap_or(false);
+
+    let s = native::gram(x);
+    let mut omega = Mat::eye(p);
+    let mut w = native::w_step(&omega, &s);
+    let mut stats = SolveStats::default();
+    let mut converged = false;
+    let mut g_final = f64::INFINITY;
+
+    for _it in 0..cfg.max_iter {
+        stats.iters += 1;
+        let (grad, g_prev) = native::gradobj(&omega, &w, cfg.lambda2);
+
+        let mut tau = 1.0;
+        let mut last: Option<native::Trial> = None;
+        for _ls in 0..cfg.max_linesearch {
+            stats.trials += 1;
+            let t = if use_engine {
+                let e = engine.as_deref_mut().expect("engine");
+                let out =
+                    e.trial(&omega, &grad, &s, g_prev, tau, cfg.lambda1, cfg.lambda2)?;
+                native::Trial {
+                    omega_new: out.omega_new,
+                    w_new: out.w_new,
+                    g_new: out.g_new,
+                    rhs: out.rhs,
+                    accept: out.accept,
+                }
+            } else {
+                native::trial(&omega, &grad, &s, g_prev, tau, cfg.lambda1, cfg.lambda2)
+            };
+            let ok = t.accept;
+            last = Some(t);
+            if ok {
+                break;
+            }
+            tau *= 0.5;
+        }
+        let t = last.expect("at least one trial");
+        let delta = omega.max_abs_diff(&t.omega_new);
+        omega = t.omega_new;
+        w = t.w_new;
+        g_final = t.g_new;
+        stats.nnz_samples += p as u64;
+        stats.nnz_total += omega.nnz() as u64;
+
+        if delta < cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    Ok(ConcordFit {
+        omega,
+        iterations: stats.iters,
+        mean_linesearch: stats.mean_linesearch(),
+        mean_row_nnz: stats.mean_row_nnz(),
+        objective: g_final,
+        converged,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::concord::Variant;
+    use crate::rng::Rng;
+
+    /// S = I (orthonormalized columns): optimum is diagonal with entries
+    /// 1/sqrt(1+λ₂) — same closed form as the python test-suite pins.
+    #[test]
+    fn identity_covariance_closed_form() {
+        let p = 6;
+        let n = 64;
+        let mut rng = Rng::new(0);
+        // Gram-Schmidt to unit columns, then scale by sqrt(n) so that
+        // Xᵀ X / n = I exactly.
+        let mut cols: Vec<Vec<f64>> = (0..p).map(|_| rng.normal_vec(n)).collect();
+        for j in 0..p {
+            for k in 0..j {
+                let d: f64 = (0..n).map(|i| cols[j][i] * cols[k][i]).sum();
+                for i in 0..n {
+                    cols[j][i] -= d * cols[k][i];
+                }
+            }
+            let nrm: f64 = cols[j].iter().map(|v| v * v).sum::<f64>().sqrt();
+            for v in cols[j].iter_mut() {
+                *v /= nrm;
+            }
+        }
+        let x = Mat::from_fn(n, p, |i, j| cols[j][i] * (n as f64).sqrt());
+        // tol: near the optimum the sufficient-decrease test goes
+        // numerically blind (objective differences ~e^2 drop below the
+        // f64 ulp of g), so max|dOmega| floors around ~1e-8; 1e-7 is the
+        // tightest honest tolerance here.
+        let cfg = ConcordConfig {
+            lambda1: 2.0,
+            lambda2: 0.5,
+            tol: 1e-7,
+            variant: Variant::Cov,
+            ..Default::default()
+        };
+        let fit = fit_single_node(&x, &cfg).unwrap();
+        assert!(fit.converged);
+        let want = (1.0f64 / 1.5).sqrt();
+        for i in 0..p {
+            assert!(
+                (fit.omega.get(i, i) - want).abs() < 1e-6,
+                "diag {i}: got {} want {want} (iters {}, converged {})",
+                fit.omega.get(i, i),
+                fit.iterations,
+                fit.converged
+            );
+            for j in 0..p {
+                if i != j {
+                    assert_eq!(fit.omega.get(i, j), 0.0, "offdiag ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn objective_decreases_monotonically_via_linesearch() {
+        // Run two fits with different iteration caps: more iterations
+        // must not increase the objective.
+        let mut rng = Rng::new(5);
+        let x = Mat::from_fn(40, 12, |_, _| rng.normal());
+        let base = ConcordConfig { lambda1: 0.2, tol: 0.0, variant: Variant::Cov, ..Default::default() };
+        let short = ConcordConfig { max_iter: 3, ..base };
+        let long = ConcordConfig { max_iter: 30, ..base };
+        let f1 = fit_single_node(&x, &short).unwrap();
+        let f2 = fit_single_node(&x, &long).unwrap();
+        assert!(f2.objective <= f1.objective + 1e-12);
+    }
+
+    #[test]
+    fn estimate_is_symmetric() {
+        let mut rng = Rng::new(6);
+        let x = Mat::from_fn(50, 10, |_, _| rng.normal());
+        let cfg = ConcordConfig { lambda1: 0.3, tol: 1e-7, ..Default::default() };
+        let fit = fit_single_node(&x, &cfg).unwrap();
+        let omega_t = fit.omega.transpose();
+        assert!(fit.omega.max_abs_diff(&omega_t) < 1e-9);
+    }
+
+    #[test]
+    fn larger_lambda1_gives_sparser_estimate() {
+        let mut rng = Rng::new(7);
+        let x = Mat::from_fn(60, 15, |_, _| rng.normal());
+        let mk = |l1| ConcordConfig { lambda1: l1, tol: 1e-6, ..Default::default() };
+        let sparse = fit_single_node(&x, &mk(0.8)).unwrap();
+        let dense = fit_single_node(&x, &mk(0.05)).unwrap();
+        assert!(sparse.omega.nnz() < dense.omega.nnz());
+    }
+
+    #[test]
+    fn huge_lambda1_gives_diagonal() {
+        let mut rng = Rng::new(8);
+        let x = Mat::from_fn(30, 8, |_, _| rng.normal());
+        let cfg = ConcordConfig { lambda1: 50.0, tol: 1e-8, ..Default::default() };
+        let fit = fit_single_node(&x, &cfg).unwrap();
+        for i in 0..8 {
+            for j in 0..8 {
+                if i != j {
+                    assert_eq!(fit.omega.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Minimal TOML-subset configuration (serde/toml are not vendored in
+//! this offline image).
+//!
+//! Supported: `[section]` headers, `key = value` with integer, float,
+//! boolean, quoted-string and flat numeric-array values, `#` comments.
+//! That covers every run configuration the launcher needs; see
+//! `examples/configs/*.toml`.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<f64>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Int(i) => Ok(*i as f64),
+            Value::Float(f) => Ok(*f),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[f64]> {
+        match self {
+            Value::Array(a) => Ok(a),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+}
+
+/// Parsed config: `section.key` → value (top-level keys use section "").
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: HashMap<String, Value>,
+}
+
+impl Config {
+    /// Parse the TOML subset.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            values.insert(full_key, parse_value(val.trim(), lineno + 1)?);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config {path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.values.get(key).map(|v| v.as_f64()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        self.values.get(key).map(|v| v.as_usize()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str> {
+        self.values.get(key).map(|v| v.as_str()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn array_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.values.get(key) {
+            Some(v) => Ok(v.as_array()?.to_vec()),
+            None => Ok(default.to_vec()),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(Value::Str(body.to_string()));
+    }
+    if let Some(body) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let mut arr = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            arr.push(
+                part.parse::<f64>()
+                    .map_err(|_| anyhow!("line {lineno}: bad array element {part:?}"))?,
+            );
+        }
+        return Ok(Value::Array(arr));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run configuration
+workload = "chain"   # graph type
+p = 1024
+
+[solver]
+lambda1 = 0.3
+lambda2 = 0.0
+grid = [0.1, 0.2, 0.3]
+verbose = true
+
+[fabric]
+ranks = 16
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("workload"), Some(&Value::Str("chain".into())));
+        assert_eq!(c.get("p"), Some(&Value::Int(1024)));
+        assert_eq!(c.get("solver.lambda1"), Some(&Value::Float(0.3)));
+        assert_eq!(c.get("solver.verbose"), Some(&Value::Bool(true)));
+        assert_eq!(c.get("fabric.ranks"), Some(&Value::Int(16)));
+        assert_eq!(
+            c.get("solver.grid"),
+            Some(&Value::Array(vec![0.1, 0.2, 0.3]))
+        );
+    }
+
+    #[test]
+    fn defaults_and_typed_accessors() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.f64_or("solver.lambda2", 9.0).unwrap(), 0.0);
+        assert_eq!(c.f64_or("solver.missing", 9.0).unwrap(), 9.0);
+        assert_eq!(c.usize_or("fabric.ranks", 1).unwrap(), 16);
+        assert_eq!(c.str_or("workload", "x").unwrap(), "chain");
+        assert_eq!(c.array_or("solver.grid", &[]).unwrap(), vec![0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert!(c.get("workload").unwrap().as_f64().is_err());
+        assert!(c.get("p").unwrap().as_bool().is_err());
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let c = Config::parse("name = \"a # b\"").unwrap();
+        assert_eq!(c.get("name"), Some(&Value::Str("a # b".into())));
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("no equals sign").is_err());
+        assert!(Config::parse("x = what").is_err());
+    }
+}

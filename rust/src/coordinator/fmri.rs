@@ -1,0 +1,307 @@
+//! The §5 case study as a reusable pipeline: synthetic cortex →
+//! (λ₁, λ₂) sweep → density-targeted model selection → per-hemisphere
+//! clustering (persistence watershed, Louvain, covariance-threshold
+//! baseline) → modified-Jaccard scores against the ground-truth
+//! parcellation (the Glasser-et-al. role).
+//!
+//! Used by `hpconcord fmri`, `examples/fmri_parcellation.rs` (the
+//! end-to-end driver) and `benches/fmri_table2.rs` (Table 2 / S.9–S.16
+//! reproduction).
+
+use crate::cluster::{louvain, louvain_levels, smooth_field, watershed_persistence, Graph};
+use crate::concord::ConcordConfig;
+use crate::gen::{synthetic_cortex, Cortex};
+use crate::linalg::Mat;
+use crate::metrics::jaccard_similarity;
+use crate::rng::Rng;
+use crate::runtime::native;
+
+use super::sweep::{run_sweep, select_by_density, GridSpec};
+
+/// Pipeline parameters (paper-scaled defaults live in `Default`).
+#[derive(Debug, Clone)]
+pub struct FmriParams {
+    pub p_hemi: usize,
+    pub parcels: usize,
+    /// kNN connectivity of the ground-truth precision and the surface
+    /// mesh substitute.
+    pub knn: usize,
+    pub samples: usize,
+    pub seed: u64,
+    pub lambda1_grid: Vec<f64>,
+    pub lambda2_grid: Vec<f64>,
+    /// Persistence simplification thresholds to evaluate (paper: ε ∈
+    /// {0, 3} for more/fewer clusters).
+    pub epsilons: Vec<f64>,
+    pub workers: usize,
+}
+
+impl Default for FmriParams {
+    fn default() -> Self {
+        FmriParams {
+            p_hemi: 96,
+            parcels: 5,
+            knn: 6,
+            samples: 200,
+            seed: 7,
+            lambda1_grid: vec![0.15, 0.22, 0.3, 0.4, 0.55, 0.75],
+            lambda2_grid: vec![0.0, 0.1],
+            epsilons: vec![0.0, 3.0],
+            workers: 2,
+        }
+    }
+}
+
+/// One clustering's evaluation.
+#[derive(Debug, Clone)]
+pub struct MethodScore {
+    pub hemisphere: u8,
+    pub method: String,
+    pub clusters: usize,
+    pub jaccard: f64,
+}
+
+/// The study's outcome.
+#[derive(Debug)]
+pub struct FmriOutcome {
+    pub scores: Vec<MethodScore>,
+    /// Selected tuning parameters (density-matched to the truth).
+    pub lambda1: f64,
+    pub lambda2: f64,
+    /// Off-diagonal density of the chosen estimate vs the truth's.
+    pub density: f64,
+    pub target_density: f64,
+    /// Fraction of the estimate's off-diagonal mass that crosses
+    /// hemispheres (paper §S.3.3: should be ≈ 0 — block-diagonal).
+    pub cross_hemisphere_fraction: f64,
+    pub cortex: Cortex,
+    /// The chosen estimate (for downstream analyses / plots).
+    pub omega: Mat,
+}
+
+/// kNN neighbourhood graph over one hemisphere's voxel coordinates — the
+/// triangulated-surface substitute that the watershed sweeps.
+pub fn hemisphere_mesh(cortex: &Cortex, h: u8, k: usize) -> Graph {
+    let idx = cortex.hemi_indices(h);
+    let mut g = Graph::new(idx.len());
+    for (a, &i) in idx.iter().enumerate() {
+        let mut cands: Vec<(f64, usize)> = idx
+            .iter()
+            .enumerate()
+            .filter(|&(b, _)| b != a)
+            .map(|(b, &j)| {
+                let d: f64 = (0..3)
+                    .map(|c| (cortex.coords[i][c] - cortex.coords[j][c]).powi(2))
+                    .sum();
+                (d, b)
+            })
+            .collect();
+        cands.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        for &(_, b) in cands.iter().take(k) {
+            if !g.adj[a].iter().any(|&(n, _)| n == b) {
+                g.add_edge(a, b, 1.0);
+            }
+        }
+    }
+    g
+}
+
+fn cluster_count(labels: &[usize]) -> usize {
+    let mut s = labels.to_vec();
+    s.sort_unstable();
+    s.dedup();
+    s.len()
+}
+
+/// Run the full study.
+pub fn run_fmri_study(params: &FmriParams) -> FmriOutcome {
+    let mut rng = Rng::new(params.seed);
+    let cortex = synthetic_cortex(params.p_hemi, params.parcels, params.knn, params.samples, &mut rng);
+    let p = cortex.p();
+
+    // Target density: the ground truth's off-diagonal density (the paper
+    // tunes until estimates are "equally sparse").
+    let target_density = (cortex.omega0.nnz() - p) as f64 / (p * p - p) as f64;
+
+    // Sweep the grid and select the density-matched estimate.
+    let base = ConcordConfig { tol: 1e-4, max_iter: 150, ..Default::default() };
+    let grid = GridSpec {
+        lambda1: params.lambda1_grid.clone(),
+        lambda2: params.lambda2_grid.clone(),
+    };
+    let outcome = run_sweep(&cortex.x, &grid, &base, params.workers);
+    let chosen = select_by_density(&outcome, target_density).expect("non-empty sweep");
+    let omega = chosen.fit.omega.clone();
+
+    // Block-diagonal check (paper §S.3.3).
+    let mut cross = 0usize;
+    let mut total = 0usize;
+    for i in 0..p {
+        for j in 0..p {
+            if i != j && omega.get(i, j) != 0.0 {
+                total += 1;
+                if cortex.hemisphere[i] != cortex.hemisphere[j] {
+                    cross += 1;
+                }
+            }
+        }
+    }
+    let cross_fraction = if total == 0 { 0.0 } else { cross as f64 / total as f64 };
+
+    // Covariance-threshold baseline: keep the largest-|S_ij| entries at
+    // the same density (paper's marginal-correlation baseline row).
+    let s = native::gram(&cortex.x);
+    let baseline = threshold_to_density(&s, target_density);
+
+    let graph = Graph::from_sparsity(&omega, 1e-12);
+    let base_graph = Graph::from_sparsity(&baseline, 1e-12);
+
+    let mut scores = Vec::new();
+    for h in 0..2u8 {
+        let idx = cortex.hemi_indices(h);
+        let truth = cortex.hemi_parcels(h);
+        let mesh = hemisphere_mesh(&cortex, h, params.knn);
+        let sub = graph.subgraph(&idx);
+        // Smooth the quantized degree field so watershed basins track
+        // regional density (see cluster::watershed::smooth_field).
+        let f = smooth_field(&mesh, &sub.edge_counts(), 2);
+
+        for &eps in &params.epsilons {
+            let labels = watershed_persistence(&mesh, &f, eps);
+            scores.push(MethodScore {
+                hemisphere: h,
+                method: format!("persistence ε={eps}"),
+                clusters: cluster_count(&labels),
+                jaccard: jaccard_similarity(&labels, &truth),
+            });
+        }
+
+        let levels = louvain_levels(&sub);
+        if let Some(coarse) = levels.last() {
+            scores.push(MethodScore {
+                hemisphere: h,
+                method: "louvain k=0".to_string(),
+                clusters: cluster_count(coarse),
+                jaccard: jaccard_similarity(coarse, &truth),
+            });
+        }
+        if levels.len() > 1 {
+            let fine = &levels[0];
+            scores.push(MethodScore {
+                hemisphere: h,
+                method: "louvain k=max".to_string(),
+                clusters: cluster_count(fine),
+                jaccard: jaccard_similarity(fine, &truth),
+            });
+        }
+
+        // Baseline: Louvain on the thresholded-covariance graph.
+        let bsub = base_graph.subgraph(&idx);
+        let blabels = louvain(&bsub);
+        scores.push(MethodScore {
+            hemisphere: h,
+            method: "cov-threshold".to_string(),
+            clusters: cluster_count(&blabels),
+            jaccard: jaccard_similarity(&blabels, &truth),
+        });
+    }
+
+    FmriOutcome {
+        scores,
+        lambda1: chosen.job.cfg.lambda1,
+        lambda2: chosen.job.cfg.lambda2,
+        density: chosen.density,
+        target_density,
+        cross_hemisphere_fraction: cross_fraction,
+        cortex,
+        omega,
+    }
+}
+
+/// Zero all but the top-magnitude off-diagonal entries of `m`, keeping
+/// approximately the requested off-diagonal density (symmetric pairs).
+pub fn threshold_to_density(m: &Mat, density: f64) -> Mat {
+    let p = m.rows();
+    let keep_pairs = ((density * (p * p - p) as f64) / 2.0).round() as usize;
+    let mut mags: Vec<(f64, usize, usize)> = Vec::with_capacity(p * (p - 1) / 2);
+    for i in 0..p {
+        for j in (i + 1)..p {
+            mags.push((m.get(i, j).abs(), i, j));
+        }
+    }
+    mags.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut out = Mat::zeros(p, p);
+    for i in 0..p {
+        out.set(i, i, m.get(i, i));
+    }
+    for &(_, i, j) in mags.iter().take(keep_pairs) {
+        out.set(i, j, m.get(i, j));
+        out.set(j, i, m.get(j, i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> FmriParams {
+        FmriParams {
+            p_hemi: 32,
+            parcels: 3,
+            knn: 4,
+            samples: 150,
+            seed: 11,
+            lambda1_grid: vec![0.2, 0.3, 0.45, 0.65],
+            lambda2_grid: vec![0.1],
+            epsilons: vec![0.0, 3.0],
+            workers: 2,
+        }
+    }
+
+    #[test]
+    fn pipeline_runs_and_is_block_diagonal() {
+        let out = run_fmri_study(&tiny_params());
+        assert!(!out.scores.is_empty());
+        // Density selection lands in the right ballpark.
+        assert!(out.density > 0.0 && out.density < 4.0 * out.target_density + 0.1);
+        // Hemisphere block structure mostly recovered (§S.3.3).
+        assert!(
+            out.cross_hemisphere_fraction < 0.2,
+            "cross fraction {}",
+            out.cross_hemisphere_fraction
+        );
+    }
+
+    #[test]
+    fn clusterings_beat_trivial_and_scores_in_range() {
+        let out = run_fmri_study(&tiny_params());
+        for s in &out.scores {
+            assert!((0.0..=1.0).contains(&s.jaccard), "{s:?}");
+            assert!(s.clusters >= 1);
+        }
+        // At least one method per hemisphere does clearly better than a
+        // single-cluster baseline would.
+        for h in 0..2u8 {
+            let best = out
+                .scores
+                .iter()
+                .filter(|s| s.hemisphere == h)
+                .map(|s| s.jaccard)
+                .fold(0.0, f64::max);
+            let truth = out.cortex.hemi_parcels(h);
+            let trivial = jaccard_similarity(&vec![0; truth.len()], &truth);
+            assert!(best > trivial, "h={h}: best {best} !> trivial {trivial}");
+        }
+    }
+
+    #[test]
+    fn threshold_to_density_hits_target() {
+        let mut rng = crate::rng::Rng::new(3);
+        let m = Mat::from_fn(20, 20, |_, _| rng.normal());
+        let out = threshold_to_density(&m, 0.2);
+        let off_nnz = out.nnz() - 20;
+        let density = off_nnz as f64 / (20.0 * 19.0);
+        assert!((density - 0.2).abs() < 0.05, "density {density}");
+    }
+}

@@ -1,0 +1,20 @@
+//! The tuning-grid coordinator: HP-CONCORD's §5 workflow as a runtime.
+//!
+//! The fMRI case study fits the estimator over an 11×8 (λ₁, λ₂) grid —
+//! the resampling/model-selection workload the paper's introduction
+//! flags as "prohibitive" without a scalable solver. This module is the
+//! leader/worker runtime for such sweeps: a leader owns the job queue,
+//! workers claim (λ₁, λ₂) jobs, fit them, and stream results back;
+//! model-selection helpers pick estimates by density targets or scores.
+//!
+//! Each job is internally solved by the single-node path or the
+//! simulated-distributed path ([`crate::concord::fit_distributed`]),
+//! making the coordinator the top of the full three-layer stack.
+
+pub mod fmri;
+pub mod stability;
+pub mod sweep;
+
+pub use fmri::{run_fmri_study, FmriOutcome, FmriParams, MethodScore};
+pub use stability::{stability_selection, StabilityConfig, StabilityOutcome};
+pub use sweep::{run_sweep, select_by_density, GridSpec, SweepJob, SweepOutcome, SweepResult};

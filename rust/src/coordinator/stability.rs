@@ -1,0 +1,176 @@
+//! Stability selection (Meinshausen & Bühlmann [37], cited by the paper
+//! as the resampling workload that makes scalability "prohibitive"
+//! without HP-CONCORD): fit the estimator on many row subsamples and
+//! keep the edges selected in at least a `threshold` fraction of them.
+//!
+//! This is the second first-class coordinator workload (after the λ
+//! grid): B independent fits batched over the worker pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::concord::{fit_single_node, ConcordConfig};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Stability-selection configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct StabilityConfig {
+    /// Number of subsample fits B.
+    pub subsamples: usize,
+    /// Fraction of rows per subsample (M&B use 0.5).
+    pub fraction: f64,
+    /// Selection frequency threshold π (M&B recommend 0.6–0.9).
+    pub threshold: f64,
+    pub seed: u64,
+    pub workers: usize,
+}
+
+impl Default for StabilityConfig {
+    fn default() -> Self {
+        StabilityConfig { subsamples: 20, fraction: 0.5, threshold: 0.7, seed: 0, workers: 2 }
+    }
+}
+
+/// Result: per-edge selection frequencies and the stable edge set.
+#[derive(Debug)]
+pub struct StabilityOutcome {
+    /// Selection frequency of each (i, j) pair, i < j, in [0, 1];
+    /// row-major upper triangle.
+    pub frequency: Mat,
+    /// Stable edges (frequency ≥ threshold).
+    pub edges: Vec<(usize, usize)>,
+    pub subsamples: usize,
+}
+
+/// Run stability selection with the worker pool.
+pub fn stability_selection(
+    x: &Mat,
+    base: &ConcordConfig,
+    cfg: &StabilityConfig,
+) -> StabilityOutcome {
+    let (n, p) = x.shape();
+    let m = ((n as f64) * cfg.fraction).round().max(2.0) as usize;
+    let x = Arc::new(x.clone());
+    let base = *base;
+    let scfg = *cfg;
+    let next = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = mpsc::channel::<Mat>();
+
+    let mut handles = Vec::new();
+    for _ in 0..cfg.workers.max(1) {
+        let x = Arc::clone(&x);
+        let next = Arc::clone(&next);
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let b = next.fetch_add(1, Ordering::SeqCst);
+            if b >= scfg.subsamples {
+                break;
+            }
+            // Independent, reproducible subsample per index.
+            let mut rng = Rng::new(scfg.seed ^ (0x5AB1E ^ (b as u64) << 20));
+            let rows = rng.sample_indices(n, m);
+            let sub = Mat::from_fn(m, p, |i, j| x.get(rows[i], j));
+            let fit = fit_single_node(&sub, &base).expect("stability fit");
+            // Indicator of selected off-diagonal support.
+            let mut ind = Mat::zeros(p, p);
+            for i in 0..p {
+                for j in 0..p {
+                    if i != j && fit.omega.get(i, j) != 0.0 {
+                        ind.set(i, j, 1.0);
+                    }
+                }
+            }
+            tx.send(ind).expect("leader gone");
+        }));
+    }
+    drop(tx);
+
+    let mut freq = Mat::zeros(p, p);
+    for ind in rx {
+        freq.add_scaled(1.0 / cfg.subsamples as f64, &ind);
+    }
+    for h in handles {
+        h.join().expect("stability worker panicked");
+    }
+
+    let mut edges = Vec::new();
+    for i in 0..p {
+        for j in (i + 1)..p {
+            if freq.get(i, j) >= cfg.threshold {
+                edges.push((i, j));
+            }
+        }
+    }
+    StabilityOutcome { frequency: freq, edges, subsamples: cfg.subsamples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::concord::Variant;
+    use crate::gen;
+    use crate::metrics;
+    use crate::rng::Rng;
+
+    fn base_cfg() -> ConcordConfig {
+        ConcordConfig {
+            lambda1: 0.3,
+            lambda2: 0.05,
+            tol: 1e-4,
+            max_iter: 120,
+            variant: Variant::Cov,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn frequencies_are_probabilities_and_symmetricish() {
+        let mut rng = Rng::new(1);
+        let prob = gen::chain_problem(12, 200, &mut rng);
+        let out = stability_selection(
+            &prob.x,
+            &base_cfg(),
+            &StabilityConfig { subsamples: 8, workers: 3, ..Default::default() },
+        );
+        for i in 0..12 {
+            for j in 0..12 {
+                let f = out.frequency.get(i, j);
+                assert!((0.0..=1.0 + 1e-12).contains(&f));
+            }
+        }
+        // Estimates are symmetric, so frequencies are too.
+        assert!(out.frequency.max_abs_diff(&out.frequency.transpose()) < 1e-12);
+    }
+
+    #[test]
+    fn stable_edges_favor_true_support() {
+        let mut rng = Rng::new(2);
+        let prob = gen::chain_problem(14, 600, &mut rng);
+        let out = stability_selection(
+            &prob.x,
+            &base_cfg(),
+            &StabilityConfig { subsamples: 12, threshold: 0.8, workers: 2, ..Default::default() },
+        );
+        assert!(!out.edges.is_empty(), "no stable edges found");
+        // Build the stable-support estimate and score it.
+        let mut est = Mat::eye(14);
+        for &(i, j) in &out.edges {
+            est.set(i, j, 1.0);
+            est.set(j, i, 1.0);
+        }
+        let m = metrics::support_metrics(&est, &prob.omega0, 0.5);
+        assert!(m.ppv > 0.9, "stability PPV {}", m.ppv);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(3);
+        let prob = gen::chain_problem(10, 120, &mut rng);
+        let cfg = StabilityConfig { subsamples: 6, workers: 3, seed: 9, ..Default::default() };
+        let a = stability_selection(&prob.x, &base_cfg(), &cfg);
+        let b = stability_selection(&prob.x, &base_cfg(), &cfg);
+        assert!(a.frequency.max_abs_diff(&b.frequency) == 0.0);
+        assert_eq!(a.edges, b.edges);
+    }
+}

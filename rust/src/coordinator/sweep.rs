@@ -1,0 +1,232 @@
+//! Leader/worker (λ₁, λ₂)-grid sweeps.
+//!
+//! The leader pushes every grid point into a shared queue; `workers`
+//! worker threads claim jobs, fit CONCORD, and send results back over a
+//! channel. Estimates are returned with their jobs so downstream stages
+//! (clustering, stability selection) can consume them; results are
+//! re-ordered by job id, so the output is deterministic regardless of
+//! scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::concord::{fit_single_node, ConcordConfig, ConcordFit};
+use crate::linalg::Mat;
+
+/// A (λ₁, λ₂) grid specification.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    pub lambda1: Vec<f64>,
+    pub lambda2: Vec<f64>,
+}
+
+impl GridSpec {
+    /// All grid points, λ₂-major (the paper's table layout).
+    pub fn jobs(&self, base: &ConcordConfig) -> Vec<SweepJob> {
+        let mut jobs = Vec::with_capacity(self.lambda1.len() * self.lambda2.len());
+        for (i, &l1) in self.lambda1.iter().enumerate() {
+            for (j, &l2) in self.lambda2.iter().enumerate() {
+                let mut cfg = *base;
+                cfg.lambda1 = l1;
+                cfg.lambda2 = l2;
+                jobs.push(SweepJob { id: jobs.len(), grid_pos: (i, j), cfg });
+            }
+        }
+        jobs
+    }
+}
+
+/// One grid point to fit.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepJob {
+    pub id: usize,
+    /// (λ₁ index, λ₂ index) in the grid.
+    pub grid_pos: (usize, usize),
+    pub cfg: ConcordConfig,
+}
+
+/// A fitted grid point.
+#[derive(Debug)]
+pub struct SweepResult {
+    pub job: SweepJob,
+    pub fit: ConcordFit,
+    /// Off-diagonal density of the estimate in [0, 1].
+    pub density: f64,
+    /// Which worker fitted it (observability; scheduling-dependent).
+    pub worker: usize,
+}
+
+/// Aggregate outcome of a sweep.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// Results sorted by job id (grid order) — deterministic.
+    pub results: Vec<SweepResult>,
+    pub workers: usize,
+}
+
+/// Run the sweep with a worker pool. Every job is fitted exactly once;
+/// results come back in grid order.
+pub fn run_sweep(
+    x: &Mat,
+    grid: &GridSpec,
+    base: &ConcordConfig,
+    workers: usize,
+) -> SweepOutcome {
+    assert!(workers >= 1);
+    let jobs = Arc::new(grid.jobs(base));
+    let x = Arc::new(x.clone());
+    let next = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = mpsc::channel::<SweepResult>();
+
+    let mut handles = Vec::new();
+    for worker in 0..workers {
+        let jobs = Arc::clone(&jobs);
+        let x = Arc::clone(&x);
+        let next = Arc::clone(&next);
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || {
+            loop {
+                let idx = next.fetch_add(1, Ordering::SeqCst);
+                if idx >= jobs.len() {
+                    break;
+                }
+                let job = jobs[idx];
+                let fit = fit_single_node(&x, &job.cfg).expect("sweep fit failed");
+                let p = fit.omega.rows();
+                let offdiag_nnz = fit.omega.nnz().saturating_sub(p);
+                let density = offdiag_nnz as f64 / (p * p - p) as f64;
+                tx.send(SweepResult { job, fit, density, worker }).expect("leader gone");
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut results: Vec<SweepResult> = rx.into_iter().collect();
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    results.sort_by_key(|r| r.job.id);
+    SweepOutcome { results, workers }
+}
+
+/// Model selection: the result whose off-diagonal density is closest to
+/// `target` (the paper tunes until estimates are "equally sparse" as the
+/// comparison method / the expected graph degree).
+pub fn select_by_density(outcome: &SweepOutcome, target: f64) -> Option<&SweepResult> {
+    outcome
+        .results
+        .iter()
+        .min_by(|a, b| {
+            (a.density - target)
+                .abs()
+                .partial_cmp(&(b.density - target).abs())
+                .unwrap()
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::concord::Variant;
+    use crate::gen;
+    use crate::rng::Rng;
+    use crate::util::proptest::check;
+
+    fn small_problem(seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        gen::chain_problem(10, 40, &mut rng).x
+    }
+
+    fn base_cfg() -> ConcordConfig {
+        ConcordConfig { max_iter: 60, tol: 1e-4, variant: Variant::Cov, ..Default::default() }
+    }
+
+    #[test]
+    fn every_job_completed_exactly_once_in_grid_order() {
+        let x = small_problem(1);
+        let grid = GridSpec { lambda1: vec![0.1, 0.3, 0.6], lambda2: vec![0.0, 0.2] };
+        let out = run_sweep(&x, &grid, &base_cfg(), 3);
+        assert_eq!(out.results.len(), 6);
+        for (i, r) in out.results.iter().enumerate() {
+            assert_eq!(r.job.id, i);
+        }
+        // Grid positions bijective.
+        let mut pos: Vec<(usize, usize)> = out.results.iter().map(|r| r.job.grid_pos).collect();
+        pos.sort_unstable();
+        pos.dedup();
+        assert_eq!(pos.len(), 6);
+    }
+
+    #[test]
+    fn results_independent_of_worker_count() {
+        let x = small_problem(2);
+        let grid = GridSpec { lambda1: vec![0.2, 0.5], lambda2: vec![0.0, 0.3] };
+        let a = run_sweep(&x, &grid, &base_cfg(), 1);
+        let b = run_sweep(&x, &grid, &base_cfg(), 4);
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            assert_eq!(ra.job.id, rb.job.id);
+            assert_eq!(ra.fit.iterations, rb.fit.iterations);
+            assert!(ra.fit.omega.max_abs_diff(&rb.fit.omega) == 0.0);
+        }
+    }
+
+    #[test]
+    fn density_decreases_along_lambda1() {
+        let x = small_problem(3);
+        let grid = GridSpec { lambda1: vec![0.05, 0.9], lambda2: vec![0.1] };
+        let out = run_sweep(&x, &grid, &base_cfg(), 2);
+        assert!(out.results[0].density >= out.results[1].density);
+    }
+
+    #[test]
+    fn select_by_density_picks_closest() {
+        let x = small_problem(4);
+        let grid = GridSpec { lambda1: vec![0.02, 0.3, 2.0], lambda2: vec![0.0] };
+        let out = run_sweep(&x, &grid, &base_cfg(), 2);
+        // Huge lambda -> density 0; selecting target 0 picks it.
+        let sel = select_by_density(&out, 0.0).unwrap();
+        assert_eq!(sel.job.grid_pos.0, 2);
+        // Target the densest fit.
+        let dmax = out.results.iter().map(|r| r.density).fold(0.0, f64::max);
+        let sel = select_by_density(&out, 1.0).unwrap();
+        assert_eq!(sel.density, dmax);
+    }
+
+    /// Property: for random grids and worker counts, the sweep completes
+    /// all jobs exactly once with correct (λ₁, λ₂) wiring.
+    #[test]
+    fn prop_sweep_invariants() {
+        check(42, 6, |rng| {
+            let n1 = 1 + rng.below(3) as usize;
+            let n2 = 1 + rng.below(2) as usize;
+            let workers = 1 + rng.below(4) as usize;
+            let grid = GridSpec {
+                lambda1: (0..n1).map(|i| 0.1 + 0.2 * i as f64).collect(),
+                lambda2: (0..n2).map(|i| 0.1 * i as f64).collect(),
+            };
+            let x = small_problem(rng.next_u64());
+            let mut cfg = base_cfg();
+            cfg.max_iter = 10;
+            let out = run_sweep(&x, &grid, &cfg, workers);
+            crate::prop_assert!(
+                out.results.len() == n1 * n2,
+                "missing jobs: {} != {}",
+                out.results.len(),
+                n1 * n2
+            );
+            for r in &out.results {
+                let (i, j) = r.job.grid_pos;
+                crate::prop_assert!(
+                    (r.job.cfg.lambda1 - grid.lambda1[i]).abs() < 1e-15,
+                    "λ1 wiring broken"
+                );
+                crate::prop_assert!(
+                    (r.job.cfg.lambda2 - grid.lambda2[j]).abs() < 1e-15,
+                    "λ2 wiring broken"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! Analytic cost model: Lemmas 3.1–3.5 in executable form, plus the
+//! replication optimizer.
+//!
+//! The paper prices a run as `T = F·γ + L·α + W·β` with per-variant
+//! closed forms (Lemma 3.5). This module implements those forms exactly
+//! — they drive the runtime curves of Figures 2–4 and the
+//! extrapolations to the paper's (p up to 1.28M, P up to 2048 processes)
+//! scales — and an optimizer that searches the (c_X, c_Ω) grid subject
+//! to c_X·c_Ω ≤ P and the memory bounds M_Cov/M_Obs (paper §3, "Space
+//! complexity").
+//!
+//! The measured counters from [`crate::simnet`] cross-check these
+//! formulas in `rust/tests/lemma_counts.rs`.
+
+pub mod model;
+pub mod optimizer;
+
+pub use model::{CostBreakdown, ProblemShape, ReplicationChoice};
+pub use optimizer::{optimize_replication, OptimizerResult};
+
+pub use crate::simnet::cost::{CostModel, MachineParams};

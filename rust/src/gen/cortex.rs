@@ -1,0 +1,247 @@
+//! Synthetic cortex: the stand-in for the Human Connectome Project fMRI
+//! covariance of paper §5 (see DESIGN.md §1 substitutions).
+//!
+//! Two hemispheres of `p_hemi` "voxels" each, placed on unit spheres by
+//! a Fibonacci lattice. A ground-truth parcellation (the Glasser et al.
+//! reference role) assigns each voxel to its nearest of `k` random seed
+//! parcels. The ground-truth precision matrix connects each voxel to its
+//! `m` nearest neighbours — strongly within a parcel, weakly across —
+//! and never across hemispheres, reproducing the block-diagonal
+//! hemisphere structure the paper observes in its estimates (§S.3.3).
+//! Sampling the resulting Gaussian gives synthetic "BOLD" data whose
+//! partial-correlation graph carries recoverable parcel structure.
+
+use crate::linalg::{Csr, Mat};
+use crate::rng::Rng;
+
+use super::graphs::sample_dense;
+
+/// The synthetic cortex: geometry, ground truth, and data.
+#[derive(Debug, Clone)]
+pub struct Cortex {
+    /// 3D coordinates of every voxel (unit sphere per hemisphere).
+    pub coords: Vec<[f64; 3]>,
+    /// 0 = left hemisphere, 1 = right.
+    pub hemisphere: Vec<u8>,
+    /// Ground-truth parcel label per voxel (globally indexed).
+    pub parcels: Vec<usize>,
+    /// Number of parcels per hemisphere.
+    pub k_per_hemi: usize,
+    /// Ground-truth precision matrix Ω⁰ (block-diagonal by hemisphere).
+    pub omega0: Csr,
+    /// Synthetic observations, n × p.
+    pub x: Mat,
+}
+
+impl Cortex {
+    /// Total voxels p.
+    pub fn p(&self) -> usize {
+        self.coords.len()
+    }
+
+    /// Voxel indices of one hemisphere.
+    pub fn hemi_indices(&self, h: u8) -> Vec<usize> {
+        (0..self.p()).filter(|&i| self.hemisphere[i] == h).collect()
+    }
+
+    /// Ground-truth labels restricted to one hemisphere (reference
+    /// clustering for the Jaccard comparison).
+    pub fn hemi_parcels(&self, h: u8) -> Vec<usize> {
+        self.hemi_indices(h).iter().map(|&i| self.parcels[i]).collect()
+    }
+}
+
+/// Fibonacci sphere lattice: `n` well-spread points on the unit sphere.
+fn fibonacci_sphere(n: usize) -> Vec<[f64; 3]> {
+    let golden = std::f64::consts::PI * (3.0 - 5.0f64.sqrt());
+    (0..n)
+        .map(|i| {
+            let y = 1.0 - 2.0 * (i as f64 + 0.5) / n as f64;
+            let r = (1.0 - y * y).sqrt();
+            let th = golden * i as f64;
+            [r * th.cos(), y, r * th.sin()]
+        })
+        .collect()
+}
+
+fn dist2(a: &[f64; 3], b: &[f64; 3]) -> f64 {
+    (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2) + (a[2] - b[2]).powi(2)
+}
+
+/// Build a synthetic cortex with `p_hemi` voxels and `k` parcels per
+/// hemisphere, `m`-nearest-neighbour connectivity, and `n` samples.
+/// Adds a global BOLD-like confound (see [`synthetic_cortex_confound`])
+/// at the default strength 0.6.
+pub fn synthetic_cortex(p_hemi: usize, k: usize, m: usize, n: usize, rng: &mut Rng) -> Cortex {
+    synthetic_cortex_confound(p_hemi, k, m, n, 0.6, rng)
+}
+
+/// As [`synthetic_cortex`], with an explicit global-confound strength.
+///
+/// Resting-state BOLD data carries a *global signal* shared by every
+/// voxel; it inflates all marginal correlations (so magnitude-thresholding
+/// the covariance picks spurious cross-parcel edges) while the partial
+/// correlation structure — the inverse covariance — absorbs it as a
+/// rank-one perturbation spread thinly over all entries. This is exactly
+/// the marginal-vs-partial contrast the paper's §5 baseline comparison
+/// probes, so the generator models it: each sample gets `confound · g`
+/// added to every coordinate, g ~ N(0, 1).
+pub fn synthetic_cortex_confound(
+    p_hemi: usize,
+    k: usize,
+    m: usize,
+    n: usize,
+    confound: f64,
+    rng: &mut Rng,
+) -> Cortex {
+    assert!(k >= 1 && m >= 1 && p_hemi > m);
+    let p = 2 * p_hemi;
+    let sphere = fibonacci_sphere(p_hemi);
+    let mut coords = Vec::with_capacity(p);
+    let mut hemisphere = Vec::with_capacity(p);
+    for h in 0..2u8 {
+        // Offset hemispheres along x so geometry stays distinct.
+        let dx = if h == 0 { -2.0 } else { 2.0 };
+        for c in &sphere {
+            coords.push([c[0] + dx, c[1], c[2]]);
+            hemisphere.push(h);
+        }
+    }
+
+    // Ground-truth parcels: nearest of k random seeds, per hemisphere.
+    let mut parcels = vec![0usize; p];
+    for h in 0..2u8 {
+        let idx: Vec<usize> = (0..p).filter(|&i| hemisphere[i] == h).collect();
+        let seeds = rng.sample_indices(idx.len(), k);
+        for &i in &idx {
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for (s, &sv) in seeds.iter().enumerate() {
+                let d = dist2(&coords[i], &coords[idx[sv]]);
+                if d < bd {
+                    bd = d;
+                    best = s;
+                }
+            }
+            parcels[i] = h as usize * k + best;
+        }
+    }
+
+    // Precision: m nearest neighbours within the hemisphere; intra-parcel
+    // edges strong, inter-parcel weak. Symmetrized union of kNN edges.
+    let mut edges: std::collections::HashMap<(usize, usize), f64> = std::collections::HashMap::new();
+    for i in 0..p {
+        let mut cands: Vec<(f64, usize)> = (0..p)
+            .filter(|&j| j != i && hemisphere[j] == hemisphere[i])
+            .map(|j| (dist2(&coords[i], &coords[j]), j))
+            .collect();
+        cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for &(_, j) in cands.iter().take(m) {
+            let key = (i.min(j), i.max(j));
+            let w = if parcels[i] == parcels[j] { -0.9 } else { -0.15 };
+            edges.insert(key, w);
+        }
+    }
+    let mut row_mass = vec![0.0f64; p];
+    let mut tri: Vec<(usize, usize, f64)> = Vec::with_capacity(2 * edges.len() + p);
+    for (&(i, j), &w) in &edges {
+        tri.push((i, j, w));
+        tri.push((j, i, w));
+        row_mass[i] += w.abs();
+        row_mass[j] += w.abs();
+    }
+    for (i, &mass) in row_mass.iter().enumerate() {
+        tri.push((i, i, mass + 0.5));
+    }
+    let omega0 = Csr::from_triplets(p, p, &mut tri);
+    let mut x = sample_dense(&omega0, n, rng);
+    if confound != 0.0 {
+        for i in 0..n {
+            let g = confound * rng.normal();
+            for v in x.row_mut(i) {
+                *v += g;
+            }
+        }
+    }
+    Cortex { coords, hemisphere, parcels, k_per_hemi: k, omega0, x }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fibonacci_points_on_unit_sphere() {
+        for pt in fibonacci_sphere(50) {
+            let r2 = pt[0] * pt[0] + pt[1] * pt[1] + pt[2] * pt[2];
+            assert!((r2 - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cortex_is_block_diagonal_by_hemisphere() {
+        let mut rng = Rng::new(1);
+        let cx = synthetic_cortex(30, 3, 4, 20, &mut rng);
+        let d = cx.omega0.to_dense();
+        for i in 0..cx.p() {
+            for j in 0..cx.p() {
+                if cx.hemisphere[i] != cx.hemisphere[j] {
+                    assert_eq!(d.get(i, j), 0.0, "cross-hemisphere edge ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cortex_shapes_and_parcels() {
+        let mut rng = Rng::new(2);
+        let cx = synthetic_cortex(25, 4, 3, 15, &mut rng);
+        assert_eq!(cx.p(), 50);
+        assert_eq!(cx.x.shape(), (15, 50));
+        assert_eq!(cx.hemi_indices(0).len(), 25);
+        // Parcel ids: left in [0, 4), right in [4, 8).
+        for &i in &cx.hemi_indices(0) {
+            assert!(cx.parcels[i] < 4);
+        }
+        for &i in &cx.hemi_indices(1) {
+            assert!((4..8).contains(&cx.parcels[i]));
+        }
+        // Every hemisphere has at least 2 distinct parcels realized.
+        let mut left: Vec<usize> = cx.hemi_parcels(0);
+        left.sort_unstable();
+        left.dedup();
+        assert!(left.len() >= 2);
+    }
+
+    #[test]
+    fn precision_is_positive_definite() {
+        let mut rng = Rng::new(3);
+        let cx = synthetic_cortex(20, 3, 3, 5, &mut rng);
+        assert!(crate::linalg::cholesky(&cx.omega0.to_dense()).is_ok());
+    }
+
+    #[test]
+    fn intra_parcel_edges_stronger() {
+        let mut rng = Rng::new(4);
+        let cx = synthetic_cortex(40, 3, 4, 5, &mut rng);
+        let d = cx.omega0.to_dense();
+        let mut intra: Vec<f64> = Vec::new();
+        let mut inter: Vec<f64> = Vec::new();
+        for i in 0..cx.p() {
+            for j in (i + 1)..cx.p() {
+                let v = d.get(i, j);
+                if v != 0.0 {
+                    if cx.parcels[i] == cx.parcels[j] {
+                        intra.push(v.abs());
+                    } else {
+                        inter.push(v.abs());
+                    }
+                }
+            }
+        }
+        assert!(!intra.is_empty() && !inter.is_empty());
+        let ai = intra.iter().sum::<f64>() / intra.len() as f64;
+        let bi = inter.iter().sum::<f64>() / inter.len() as f64;
+        assert!(ai > bi * 2.0);
+    }
+}

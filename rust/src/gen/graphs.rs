@@ -1,0 +1,194 @@
+//! Chain and random-graph precision matrices + Gaussian samplers
+//! (paper §4: "banded and random strictly diagonally dominant Ω⁰'s,
+//! corresponding to chain and random graphs, ... average degree 2 for
+//! the chain graphs and 60 for the random graphs").
+
+use crate::linalg::{banded_cholesky, cholesky, solve_lower_transpose, Csr, Mat};
+use crate::rng::Rng;
+
+/// A generated problem: data, ground truth, and provenance.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    /// Observations, n × p.
+    pub x: Mat,
+    /// Ground-truth precision matrix Ω⁰ (sparse).
+    pub omega0: Csr,
+    /// Average vertex degree of the ground-truth graph.
+    pub avg_degree: f64,
+}
+
+/// Chain-graph precision: tridiagonal, 1.25 on the diagonal and −0.5 on
+/// the first off-diagonals (strictly diagonally dominant ⇒ positive
+/// definite; average degree 2).
+pub fn chain_precision(p: usize) -> Csr {
+    let mut tri = Vec::with_capacity(3 * p);
+    for i in 0..p {
+        tri.push((i, i, 1.25));
+        if i + 1 < p {
+            tri.push((i, i + 1, -0.5));
+            tri.push((i + 1, i, -0.5));
+        }
+    }
+    Csr::from_triplets(p, p, &mut tri)
+}
+
+/// Random-graph precision with target average degree `deg`: symmetric
+/// support with uniform ±[0.2, 0.6] off-diagonal weights, diagonal set
+/// to row ℓ₁ mass + 0.5 (strict diagonal dominance).
+pub fn random_precision(p: usize, deg: usize, rng: &mut Rng) -> Csr {
+    assert!(deg < p, "degree must be < p");
+    let n_edges = p * deg / 2;
+    let mut edges = std::collections::HashSet::new();
+    let mut tri: Vec<(usize, usize, f64)> = Vec::with_capacity(2 * n_edges + p);
+    let mut row_mass = vec![0.0f64; p];
+    while edges.len() < n_edges {
+        let i = rng.below(p as u64) as usize;
+        let j = rng.below(p as u64) as usize;
+        if i == j {
+            continue;
+        }
+        let key = (i.min(j), i.max(j));
+        if !edges.insert(key) {
+            continue;
+        }
+        let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        let w = sign * (0.2 + 0.4 * rng.uniform());
+        tri.push((key.0, key.1, w));
+        tri.push((key.1, key.0, w));
+        row_mass[key.0] += w.abs();
+        row_mass[key.1] += w.abs();
+    }
+    for (i, &m) in row_mass.iter().enumerate() {
+        tri.push((i, i, m + 0.5));
+    }
+    Csr::from_triplets(p, p, &mut tri)
+}
+
+/// Sample n rows of N(0, (Ω⁰)⁻¹) via a dense Cholesky of Ω⁰
+/// (appropriate for the random graphs; O(p³) once).
+pub fn sample_dense(omega0: &Csr, n: usize, rng: &mut Rng) -> Mat {
+    let p = omega0.rows();
+    let l = cholesky(&omega0.to_dense()).expect("precision must be PD");
+    let mut x = Mat::zeros(n, p);
+    for i in 0..n {
+        let z = rng.normal_vec(p);
+        let xi = solve_lower_transpose(&l, &z);
+        x.row_mut(i).copy_from_slice(&xi);
+    }
+    x
+}
+
+/// Sample n rows of N(0, (Ω⁰)⁻¹) for a banded Ω⁰ with bandwidth `bw`
+/// (chain: bw = 1). O(n·p·bw) after an O(p·bw²) factorization.
+pub fn sample_banded(omega0: &Csr, bw: usize, n: usize, rng: &mut Rng) -> Mat {
+    let p = omega0.rows();
+    let dense_entry = |i: usize, j: usize| -> f64 {
+        let (idx, vals) = omega0.row(i);
+        match idx.binary_search(&j) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    };
+    let l = banded_cholesky(p, bw, dense_entry).expect("precision must be PD");
+    let mut x = Mat::zeros(n, p);
+    for i in 0..n {
+        let z = rng.normal_vec(p);
+        let xi = l.solve_transpose(&z);
+        x.row_mut(i).copy_from_slice(&xi);
+    }
+    x
+}
+
+/// Chain problem (paper Fig. 2/4a setting).
+pub fn chain_problem(p: usize, n: usize, rng: &mut Rng) -> Problem {
+    let omega0 = chain_precision(p);
+    let x = sample_banded(&omega0, 1, n, rng);
+    let avg = (omega0.nnz() - p) as f64 / p as f64;
+    Problem { x, omega0, avg_degree: avg }
+}
+
+/// Random-graph problem (paper Fig. 2/4b/4c setting; the paper's
+/// degree-60 default is scaled by the caller alongside p).
+pub fn random_problem(p: usize, n: usize, deg: usize, rng: &mut Rng) -> Problem {
+    let omega0 = random_precision(p, deg, rng);
+    let x = sample_dense(&omega0, n, rng);
+    let avg = (omega0.nnz() - p) as f64 / p as f64;
+    Problem { x, omega0, avg_degree: avg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_precision_structure() {
+        let c = chain_precision(6);
+        assert_eq!(c.nnz(), 6 + 2 * 5);
+        let d = c.to_dense();
+        assert_eq!(d.get(0, 0), 1.25);
+        assert_eq!(d.get(2, 3), -0.5);
+        assert_eq!(d.get(0, 2), 0.0);
+    }
+
+    #[test]
+    fn random_precision_degree_and_dominance() {
+        let mut rng = Rng::new(1);
+        let p = 60;
+        let deg = 8;
+        let omega = random_precision(p, deg, &mut rng);
+        let avg = (omega.nnz() - p) as f64 / p as f64;
+        assert!((avg - deg as f64).abs() < 1.0, "avg degree {avg}");
+        // Strict diagonal dominance on every row.
+        let d = omega.to_dense();
+        for i in 0..p {
+            let off: f64 = (0..p).filter(|&j| j != i).map(|j| d.get(i, j).abs()).sum();
+            assert!(d.get(i, i) > off, "row {i} not dominant");
+        }
+        // Symmetry.
+        assert!(d.max_abs_diff(&d.transpose()) == 0.0);
+    }
+
+    #[test]
+    fn banded_and_dense_samplers_agree_in_distribution() {
+        // Same seed streams differ, so compare sample covariances of the
+        // chain model against the true covariance loosely.
+        let p = 6;
+        let n = 30_000;
+        let omega0 = chain_precision(p);
+        let mut rng = Rng::new(2);
+        let x = sample_banded(&omega0, 1, n, &mut rng);
+        // Empirical covariance ≈ (Ω⁰)⁻¹.
+        let l = cholesky(&omega0.to_dense()).unwrap();
+        let mut truth = Mat::zeros(p, p);
+        for j in 0..p {
+            let mut e = vec![0.0; p];
+            e[j] = 1.0;
+            let y = crate::linalg::solve_lower(&l, &e);
+            let col = solve_lower_transpose(&l, &y);
+            for i in 0..p {
+                truth.set(i, j, col[i]);
+            }
+        }
+        let mut emp = Mat::zeros(p, p);
+        for r in 0..n {
+            for i in 0..p {
+                for j in 0..p {
+                    emp.set(i, j, emp.get(i, j) + x.get(r, i) * x.get(r, j));
+                }
+            }
+        }
+        emp.scale(1.0 / n as f64);
+        assert!(emp.max_abs_diff(&truth) < 0.05, "{}", emp.max_abs_diff(&truth));
+    }
+
+    #[test]
+    fn problems_have_consistent_shapes() {
+        let mut rng = Rng::new(3);
+        let pr = chain_problem(20, 15, &mut rng);
+        assert_eq!(pr.x.shape(), (15, 20));
+        assert_eq!(pr.omega0.rows(), 20);
+        assert!((pr.avg_degree - 2.0).abs() < 0.2);
+        let pr = random_problem(24, 10, 4, &mut rng);
+        assert_eq!(pr.x.shape(), (10, 24));
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic data generation: the paper's evaluation workloads.
+//!
+//! §4 uses banded ("chain", average degree 2) and random (average degree
+//! 60) strictly diagonally dominant precision matrices Ω⁰ with Gaussian
+//! samples; §5 uses an fMRI covariance we replace with a synthetic
+//! cortex ([`cortex`], see DESIGN.md substitutions). Sampling never
+//! forms Σ = (Ω⁰)⁻¹: with Ω⁰ = LLᵀ, x = L⁻ᵀz for z ~ N(0, I) has
+//! covariance (Ω⁰)⁻¹ (banded Cholesky makes chain sampling O(p)).
+
+pub mod cortex;
+pub mod graphs;
+
+pub use cortex::{synthetic_cortex, Cortex};
+pub use graphs::{chain_precision, chain_problem, random_precision, random_problem, Problem};

@@ -1,0 +1,67 @@
+//! # HP-CONCORD
+//!
+//! A production-quality reproduction of *"Communication-Avoiding
+//! Optimization Methods for Distributed Massive-Scale Sparse Inverse
+//! Covariance Estimation"* (Koanantakool et al., 2017): the HP-CONCORD
+//! communication-avoiding distributed proximal gradient method for the
+//! CONCORD/PseudoNet estimator, plus every substrate its evaluation
+//! depends on.
+//!
+//! ## Architecture (three layers)
+//!
+//! - **L3 (this crate)** — the coordinator and distributed runtime: the
+//!   1.5D communication-avoiding matrix multiplication (paper Algorithm 4)
+//!   over a simulated message-passing fabric ([`simnet`]) with exact
+//!   α-β-γ cost accounting, the Cov/Obs proximal-gradient drivers (paper
+//!   Algorithms 2 and 3, [`concord`]), the analytic cost model (Lemmas
+//!   3.1–3.5, [`cost`]), the QUIC-style second-order baseline
+//!   ([`bigquic`]), data generators, clustering and metrics for the fMRI
+//!   case study, and a tuning-grid sweep coordinator ([`coordinator`]).
+//! - **L2 (python/compile/model.py)** — CONCORD step graphs in JAX,
+//!   AOT-lowered once to HLO text artifacts.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels (tiled GEMM, fused
+//!   gradient/prox/objective passes) called by L2.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT CPU
+//! client (`xla` crate) so Python never runs on the request path; a pure
+//! Rust fallback covers arbitrary shapes.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries don't get the xla rpath link flag,
+//! # // so they can't locate libxla_extension's bundled libstdc++ at runtime.
+//! use hpconcord::prelude::*;
+//! use hpconcord::concord::{self, ConcordConfig};
+//!
+//! let mut rng = Rng::new(42);
+//! let problem = gen::chain_problem(64, 200, &mut rng);
+//! let cfg = ConcordConfig { lambda1: 0.2, ..Default::default() };
+//! let fit = concord::fit_single_node(&problem.x, &cfg).unwrap();
+//! println!("converged in {} iterations", fit.iterations);
+//! ```
+
+pub mod bigquic;
+pub mod cli;
+pub mod cluster;
+pub mod concord;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod dist;
+pub mod gen;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod simnet;
+pub mod util;
+
+/// Convenient glob-import surface for examples and downstream users.
+pub mod prelude {
+    pub use crate::gen;
+    pub use crate::linalg::{Csr, Mat};
+    pub use crate::metrics;
+    pub use crate::rng::Rng;
+    pub use crate::simnet::{Fabric, MachineParams};
+}

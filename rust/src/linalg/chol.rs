@@ -1,0 +1,270 @@
+//! Cholesky factorizations: dense and banded.
+//!
+//! Used by the data generators ([`crate::gen`]) to sample
+//! X ~ N(0, (Ω⁰)⁻¹) without ever forming the covariance: factor
+//! Ω⁰ = L Lᵀ, draw z ~ N(0, I), and solve Lᵀ x = z — then
+//! Cov(x) = L⁻ᵀ L⁻¹ = (Ω⁰)⁻¹. The banded variant makes chain-graph
+//! sampling O(p·b²) so the large-p benchmark rows (Fig 4a) stay cheap.
+
+use anyhow::{bail, Result};
+
+use super::dense::Mat;
+
+/// Dense lower-triangular Cholesky: A = L Lᵀ for symmetric positive
+/// definite A. Returns L (full storage, upper part zeroed).
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("cholesky: matrix not square");
+    }
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // dot of rows i and j of L over 0..j
+            let mut s = a.get(i, j);
+            let li = l.row(i);
+            let lj = l.row(j);
+            for k in 0..j {
+                s -= li[k] * lj[k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("cholesky: matrix not positive definite (pivot {i}: {s})");
+                }
+                l.set(i, i, s.sqrt());
+            } else {
+                l.set(i, j, s / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        let row = l.row(i);
+        for k in 0..i {
+            s -= row[k] * y[k];
+        }
+        y[i] = s / row[i];
+    }
+    y
+}
+
+/// Solve Lᵀ x = b for lower-triangular L (backward substitution).
+pub fn solve_lower_transpose(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= l.get(k, i) * x[k];
+        }
+        x[i] = s / l.get(i, i);
+    }
+    x
+}
+
+/// Banded lower Cholesky factor: row i stores L[i][i-bw..=i] in a
+/// (bw+1)-wide band (column-offset layout).
+#[derive(Debug, Clone)]
+pub struct BandedChol {
+    n: usize,
+    bw: usize,
+    /// band[i * (bw+1) + k] = L[i][i - bw + k], entries with i-bw+k < 0 unused.
+    band: Vec<f64>,
+}
+
+impl BandedChol {
+    #[inline]
+    fn get(&self, i: usize, j: usize) -> f64 {
+        // j in [i-bw, i]
+        self.band[i * (self.bw + 1) + (j + self.bw - i)]
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.band[i * (self.bw + 1) + (j + self.bw - i)] = v;
+    }
+
+    /// Solve Lᵀ x = b (the sampling transform).
+    pub fn solve_transpose(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            let kmax = (i + self.bw).min(n - 1);
+            for k in (i + 1)..=kmax {
+                s -= self.get(k, i) * x[k];
+            }
+            x[i] = s / self.get(i, i);
+        }
+        x
+    }
+}
+
+/// Banded Cholesky of a symmetric positive definite matrix given as a
+/// band accessor: `a(i, j)` for |i-j| <= bw (callers expose their sparse
+/// or functional representation). O(n·bw²).
+pub fn banded_cholesky(n: usize, bw: usize, a: impl Fn(usize, usize) -> f64) -> Result<BandedChol> {
+    let mut l = BandedChol { n, bw, band: vec![0.0; n * (bw + 1)] };
+    for i in 0..n {
+        let jmin = i.saturating_sub(bw);
+        for j in jmin..=i {
+            let mut s = a(i, j);
+            let kmin = jmin.max(j.saturating_sub(bw));
+            for k in kmin..j {
+                s -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("banded_cholesky: not positive definite (pivot {i}: {s})");
+                }
+                l.set(i, i, s.sqrt());
+            } else {
+                l.set(i, j, s / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Mat {
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + n as f64);
+        }
+        a
+    }
+
+    #[test]
+    fn dense_cholesky_reconstructs() {
+        let mut rng = Rng::new(1);
+        let a = random_spd(&mut rng, 12);
+        let l = cholesky(&a).unwrap();
+        let recon = l.matmul(&l.transpose());
+        assert!(recon.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn dense_cholesky_rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn triangular_solves_invert() {
+        let mut rng = Rng::new(2);
+        let a = random_spd(&mut rng, 9);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        // Solve A x = b via L y = b, Lᵀ x = y; check residual.
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_transpose(&l, &y);
+        for i in 0..9 {
+            let mut s = 0.0;
+            for j in 0..9 {
+                s += a.get(i, j) * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn banded_matches_dense_on_tridiagonal() {
+        let n = 30;
+        // Chain precision: 1.25 on diagonal, -0.5 off.
+        let a = Mat::from_fn(n, n, |i, j| {
+            if i == j {
+                1.25
+            } else if i.abs_diff(j) == 1 {
+                -0.5
+            } else {
+                0.0
+            }
+        });
+        let dense_l = cholesky(&a).unwrap();
+        let band_l = banded_cholesky(n, 1, |i, j| a.get(i, j)).unwrap();
+        for i in 0..n {
+            for j in i.saturating_sub(1)..=i {
+                assert!((band_l.get(i, j) - dense_l.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn banded_solve_transpose_matches_dense() {
+        let n = 20;
+        let a = Mat::from_fn(n, n, |i, j| {
+            if i == j {
+                2.0
+            } else if i.abs_diff(j) <= 2 {
+                -0.3
+            } else {
+                0.0
+            }
+        });
+        let mut rng = Rng::new(3);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let dense_l = cholesky(&a).unwrap();
+        let band_l = banded_cholesky(n, 2, |i, j| a.get(i, j)).unwrap();
+        let want = solve_lower_transpose(&dense_l, &b);
+        let got = band_l.solve_transpose(&b);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn sampling_covariance_is_inverse_precision() {
+        // Empirical check: x = L^-T z has covariance A^{-1}.
+        let n = 4;
+        let a = Mat::from_fn(n, n, |i, j| {
+            if i == j {
+                2.0
+            } else if i.abs_diff(j) == 1 {
+                -0.8
+            } else {
+                0.0
+            }
+        });
+        let l = cholesky(&a).unwrap();
+        let mut rng = Rng::new(4);
+        let trials = 60_000;
+        let mut cov = Mat::zeros(n, n);
+        for _ in 0..trials {
+            let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let x = solve_lower_transpose(&l, &z);
+            for i in 0..n {
+                for j in 0..n {
+                    cov.set(i, j, cov.get(i, j) + x[i] * x[j]);
+                }
+            }
+        }
+        cov.scale(1.0 / trials as f64);
+        // Compare against A^{-1} computed by solving for unit vectors.
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let y = solve_lower(&l, &e);
+            let col = solve_lower_transpose(&l, &y);
+            for i in 0..n {
+                assert!((cov.get(i, j) - col[i]).abs() < 0.05);
+            }
+        }
+    }
+}

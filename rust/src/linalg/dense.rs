@@ -1,0 +1,463 @@
+//! Row-major dense f64 matrices and a cache-blocked GEMM microkernel.
+//!
+//! The microkernel ([`Mat::matmul`]) is the hot path of the whole stack:
+//! every local block multiply of the distributed 1.5D algorithm and every
+//! single-node CONCORD iteration lands here (unless routed to a PJRT
+//! artifact). It uses an i-k-j loop order (stream both B rows and C rows
+//! sequentially), k-blocking for L1/L2 residency, and an unrolled
+//! 4-accumulator inner loop that LLVM autovectorizes. Perf numbers and
+//! the optimization log live in EXPERIMENTS.md §Perf.
+
+use std::fmt;
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 64 {
+            for i in 0..self.rows {
+                write!(f, "\n  {:?}", &self.data[i * self.cols..(i + 1) * self.cols])?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Immutable view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Sub-matrix of rows `r0..r1` (cheap copy of contiguous storage).
+    pub fn row_block(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Sub-matrix of columns `c0..c1`.
+    pub fn col_block(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let w = c1 - c0;
+        let mut data = Vec::with_capacity(self.rows * w);
+        for i in 0..self.rows {
+            data.extend_from_slice(&self.row(i)[c0..c1]);
+        }
+        Mat { rows: self.rows, cols: w, data }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Block the transpose for cache locality on large matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// C = A · B via the blocked microkernel.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(self.rows, b.cols);
+        self.matmul_into(b, &mut c);
+        c
+    }
+
+    /// C += A · B (C must be zeroed by the caller for a plain product).
+    ///
+    /// i-k-j order with k-blocking and a 4×k-unrolled update: each pass
+    /// over the contiguous C row folds in four B rows at once (4 fused
+    /// multiply-adds per C element per load/store pair instead of one),
+    /// unit-stride everywhere, autovectorizable (AVX2/FMA with the
+    /// repo's `-C target-cpu=native`). §Perf step L3-2.
+    pub fn matmul_into(&self, b: &Mat, c: &mut Mat) {
+        assert_eq!(self.cols, b.rows, "inner dimension mismatch");
+        assert_eq!(c.rows, self.rows);
+        assert_eq!(c.cols, b.cols);
+        let (m, kk, n) = (self.rows, self.cols, b.cols);
+        const KC: usize = 256; // k-panel kept hot in L1/L2
+        for k0 in (0..kk).step_by(KC) {
+            let k1 = (k0 + KC).min(kk);
+            // 2 C-rows per pass (§Perf step L3-3): each loaded B row
+            // feeds two accumulator rows, halving B bandwidth. (A 4-row
+            // variant measured *slower* — register pressure; §Perf L3-4.)
+            let mut i = 0;
+            while i + 2 <= m {
+                let (chead, ctail) = c.data.split_at_mut((i + 1) * n);
+                let c0 = &mut chead[i * n..];
+                let c1 = &mut ctail[..n];
+                let ar0 = &self.data[i * kk..(i + 1) * kk];
+                let ar1 = &self.data[(i + 1) * kk..(i + 2) * kk];
+                let mut k = k0;
+                while k + 4 <= k1 {
+                    let (p0, p1, p2, p3) = (ar0[k], ar0[k + 1], ar0[k + 2], ar0[k + 3]);
+                    let (q0, q1, q2, q3) = (ar1[k], ar1[k + 1], ar1[k + 2], ar1[k + 3]);
+                    let b0 = &b.data[k * n..(k + 1) * n];
+                    let b1 = &b.data[(k + 1) * n..(k + 2) * n];
+                    let b2 = &b.data[(k + 2) * n..(k + 3) * n];
+                    let b3 = &b.data[(k + 3) * n..(k + 4) * n];
+                    for j in 0..n {
+                        let (v0, v1, v2, v3) = (b0[j], b1[j], b2[j], b3[j]);
+                        c0[j] += p0 * v0 + p1 * v1 + p2 * v2 + p3 * v3;
+                        c1[j] += q0 * v0 + q1 * v1 + q2 * v2 + q3 * v3;
+                    }
+                    k += 4;
+                }
+                for k in k..k1 {
+                    let brow = &b.data[k * n..(k + 1) * n];
+                    if ar0[k] != 0.0 {
+                        axpy(ar0[k], brow, c0);
+                    }
+                    if ar1[k] != 0.0 {
+                        axpy(ar1[k], brow, &mut c1[..n]);
+                    }
+                }
+                i += 2;
+            }
+            // Remainder row: 4×k-unrolled single-row update.
+            for i in i..m {
+                let arow = &self.data[i * kk..(i + 1) * kk];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                let mut k = k0;
+                while k + 4 <= k1 {
+                    let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        k += 4; // free sparsity win for thresholded iterates
+                        continue;
+                    }
+                    let b0 = &b.data[k * n..(k + 1) * n];
+                    let b1 = &b.data[(k + 1) * n..(k + 2) * n];
+                    let b2 = &b.data[(k + 2) * n..(k + 3) * n];
+                    let b3 = &b.data[(k + 3) * n..(k + 4) * n];
+                    for j in 0..n {
+                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    k += 4;
+                }
+                for k in k..k1 {
+                    let aik = arow[k];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[k * n..(k + 1) * n];
+                    axpy(aik, brow, crow);
+                }
+            }
+        }
+    }
+
+    /// C = A · Bᵀ (used where the transposed layout is already at hand).
+    pub fn matmul_bt(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "inner dimension mismatch (B is transposed)");
+        let (m, kk, n) = (self.rows, self.cols, b.rows);
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * kk..(i + 1) * kk];
+            for j in 0..n {
+                let brow = &b.data[j * kk..(j + 1) * kk];
+                c.data[i * n + j] = dot(arow, brow);
+            }
+        }
+        c
+    }
+
+    /// Elementwise: self += alpha * other.
+    pub fn add_scaled(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale all entries.
+    pub fn scale(&mut self, alpha: f64) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Frobenius norm squared.
+    pub fn fro2(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Elementwise dot: sum_ij A_ij B_ij.
+    pub fn dot_elem(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        dot(&self.data, &other.data)
+    }
+
+    /// Diagonal as a vector (square matrices).
+    pub fn diag(&self) -> Vec<f64> {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self.data[i * self.cols + i]).collect()
+    }
+
+    /// Number of nonzero entries (exact zero test — iterates are exactly
+    /// sparse after soft-thresholding).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Symmetrize in place: A <- (A + Aᵀ)/2.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self.data[i * self.cols + j] + self.data[j * self.cols + i]);
+                self.data[i * self.cols + j] = v;
+                self.data[j * self.cols + i] = v;
+            }
+        }
+    }
+
+    /// Stack a list of row blocks (all with equal `cols`) vertically.
+    pub fn vstack(blocks: &[Mat]) -> Mat {
+        assert!(!blocks.is_empty());
+        let cols = blocks[0].cols;
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for b in blocks {
+            assert_eq!(b.cols, cols);
+            data.extend_from_slice(&b.data);
+        }
+        Mat { rows, cols, data }
+    }
+}
+
+/// y += a * x over contiguous slices; 4-way unrolled for autovectorization.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4 * 4;
+    let (x4, xr) = x.split_at(chunks);
+    let (y4, yr) = y.split_at_mut(chunks);
+    for (xc, yc) in x4.chunks_exact(4).zip(y4.chunks_exact_mut(4)) {
+        yc[0] += a * xc[0];
+        yc[1] += a * xc[1];
+        yc[2] += a * xc[2];
+        yc[3] += a * xc[3];
+    }
+    for (xi, yi) in xr.iter().zip(yr.iter_mut()) {
+        *yi += a * xi;
+    }
+}
+
+/// Dot product over contiguous slices; 4 independent accumulators.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = x.len() / 4 * 4;
+    for (xc, yc) in x[..chunks].chunks_exact(4).zip(y[..chunks].chunks_exact(4)) {
+        acc[0] += xc[0] * yc[0];
+        acc[1] += xc[1] * yc[1];
+        acc[2] += xc[2] * yc[2];
+        acc[3] += xc[3] * yc[3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_many_shapes() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 23), (64, 64, 64), (33, 70, 11)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let c = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&want) < 1e-10, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul() {
+        let mut rng = Rng::new(2);
+        let a = random_mat(&mut rng, 13, 7);
+        let b = random_mat(&mut rng, 7, 9);
+        let bt = b.transpose();
+        assert!(a.matmul_bt(&bt).max_abs_diff(&a.matmul(&b)) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = random_mat(&mut rng, 41, 67);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(4);
+        let a = random_mat(&mut rng, 12, 12);
+        let i = Mat::eye(12);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-14);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn blocks_roundtrip() {
+        let mut rng = Rng::new(5);
+        let a = random_mat(&mut rng, 10, 6);
+        let top = a.row_block(0, 4);
+        let bot = a.row_block(4, 10);
+        assert_eq!(Mat::vstack(&[top, bot]), a);
+        let left = a.col_block(0, 2);
+        assert_eq!(left.get(3, 1), a.get(3, 1));
+    }
+
+    #[test]
+    fn symmetrize_and_diag() {
+        let mut rng = Rng::new(6);
+        let mut a = random_mat(&mut rng, 8, 8);
+        a.symmetrize();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(a.get(i, j), a.get(j, i));
+            }
+        }
+        let d = a.diag();
+        assert_eq!(d.len(), 8);
+        assert_eq!(d[3], a.get(3, 3));
+    }
+
+    #[test]
+    fn fro_and_dot_elem() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.fro2(), 30.0);
+        let b = Mat::eye(2);
+        assert_eq!(a.dot_elem(&b), 5.0);
+    }
+
+    #[test]
+    fn nnz_counts_exact_zeros() {
+        let a = Mat::from_vec(2, 2, vec![0.0, 2.0, 0.0, 4.0]);
+        assert_eq!(a.nnz(), 2);
+    }
+}

@@ -1,0 +1,23 @@
+//! Node-local linear algebra: the MKL-replacement substrate.
+//!
+//! The paper calls threaded MKL for every node-local matrix product; this
+//! module is that substrate, in Rust:
+//!
+//! - [`dense`]: row-major f64 matrices with a cache-blocked GEMM
+//!   microkernel (the distributed algorithm's local dense-dense multiply),
+//! - [`sparse`]: CSR matrices with sparse·dense SpMM (the local
+//!   `Ω_block · S_block` multiply — γ_sparse in the paper's cost model),
+//! - [`chol`]: dense and banded Cholesky factorizations (used by the data
+//!   generators to sample X ~ N(0, (Ω⁰)⁻¹) without ever forming Σ).
+//!
+//! The PJRT-backed path in [`crate::runtime`] offers AOT-compiled
+//! alternatives at canonical shapes; everything here works at any shape
+//! and is what the simulated ranks run.
+
+pub mod chol;
+pub mod dense;
+pub mod sparse;
+
+pub use chol::{banded_cholesky, cholesky, solve_lower, solve_lower_transpose, BandedChol};
+pub use dense::Mat;
+pub use sparse::Csr;

@@ -1,0 +1,219 @@
+//! CSR sparse matrices and sparse·dense multiplication.
+//!
+//! HP-CONCORD's Cov variant multiplies the (sparse, soft-thresholded)
+//! iterate Ω against the dense covariance S on every line-search
+//! iteration; the Obs variant multiplies Ω against Xᵀ. Both are
+//! sparse·dense SpMM with the sparse operand on the left — the case the
+//! paper's 1.5D algorithm is designed around (shift the small sparse
+//! operand, not the dense one). The paper's cost model charges these at
+//! γ_sparse > γ_dense per flop; [`crate::simnet`] meters them separately.
+
+use super::dense::{axpy, Mat};
+
+/// Compressed sparse row matrix (f64 values).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from a dense matrix, keeping entries with |v| > threshold.
+    pub fn from_dense(m: &Mat, threshold: f64) -> Self {
+        let (rows, cols) = m.shape();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for i in 0..rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v.abs() > threshold {
+                    indices.push(j);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Build from explicit triplets (must not contain duplicates).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &mut Vec<(usize, usize, f64)>,
+    ) -> Self {
+        triplets.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        for &(i, j, v) in triplets.iter() {
+            assert!(i < rows && j < cols);
+            indptr[i + 1] += 1;
+            indices.push(j);
+            values.push(v);
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Average nonzeros per row — the paper's `d`.
+    pub fn avg_row_nnz(&self) -> f64 {
+        self.nnz() as f64 / self.rows as f64
+    }
+
+    /// (column indices, values) of row `i`.
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    /// Dense copy.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                m.set(i, j, v);
+            }
+        }
+        m
+    }
+
+    /// C = self · B  (sparse·dense). Row-at-a-time: each nonzero a_ik
+    /// scales the contiguous row k of B into the contiguous row i of C —
+    /// the same unit-stride axpy kernel as the dense path.
+    pub fn spmm(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows(), "inner dimension mismatch");
+        let n = b.cols();
+        let mut c = Mat::zeros(self.rows, n);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            let crow = c.row_mut(i);
+            for (&k, &a) in idx.iter().zip(vals) {
+                axpy(a, b.row(k), crow);
+            }
+        }
+        c
+    }
+
+    /// Flop count of `spmm` against an n-column dense operand: 2·nnz·n.
+    pub fn spmm_flops(&self, n: usize) -> u64 {
+        2 * self.nnz() as u64 * n as u64
+    }
+
+    /// Transposed copy (CSR of the transpose).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &j in &self.indices {
+            counts[j + 1] += 1;
+        }
+        for j in 0..self.cols {
+            counts[j + 1] += counts[j];
+        }
+        let mut indptr = counts.clone();
+        let mut indices = vec![0usize; self.nnz()];
+        let mut values = vec![0.0f64; self.nnz()];
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                let pos = indptr[j];
+                indices[pos] = i;
+                values[pos] = v;
+                indptr[j] += 1;
+            }
+        }
+        // indptr was advanced; rebuild from counts.
+        Csr { rows: self.cols, cols: self.rows, indptr: counts, indices, values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, r: usize, c: usize, density: f64) -> Csr {
+        let dense = Mat::from_fn(r, c, |_, _| {
+            if rng.uniform() < density {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        Csr::from_dense(&dense, 0.0)
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::new(1);
+        let a = random_sparse(&mut rng, 13, 9, 0.3);
+        assert_eq!(Csr::from_dense(&a.to_dense(), 0.0), a);
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let mut rng = Rng::new(2);
+        for &(m, k, n, d) in &[(5, 7, 3, 0.4), (20, 20, 20, 0.1), (1, 8, 2, 1.0)] {
+            let a = random_sparse(&mut rng, m, k, d);
+            let b = Mat::from_fn(k, n, |_, _| rng.normal());
+            let got = a.spmm(&b);
+            let want = a.to_dense().matmul(&b);
+            assert!(got.max_abs_diff(&want) < 1e-12, "{m}x{k}x{n} d={d}");
+        }
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        let mut rng = Rng::new(3);
+        let a = random_sparse(&mut rng, 11, 17, 0.25);
+        let got = a.transpose().to_dense();
+        let want = a.to_dense().transpose();
+        assert!(got.max_abs_diff(&want) == 0.0);
+    }
+
+    #[test]
+    fn from_triplets_matches_from_dense() {
+        let mut tri = vec![(1usize, 2usize, 3.0), (0, 0, 1.0), (2, 1, -2.0)];
+        let a = Csr::from_triplets(3, 3, &mut tri);
+        let mut d = Mat::zeros(3, 3);
+        d.set(0, 0, 1.0);
+        d.set(1, 2, 3.0);
+        d.set(2, 1, -2.0);
+        assert_eq!(a.to_dense(), d);
+        assert_eq!(a.nnz(), 3);
+        assert!((a.avg_row_nnz() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn threshold_drops_small_entries() {
+        let d = Mat::from_vec(2, 2, vec![0.05, 1.0, -0.01, -2.0]);
+        let a = Csr::from_dense(&d, 0.1);
+        assert_eq!(a.nnz(), 2);
+    }
+
+    #[test]
+    fn spmm_flops_formula() {
+        let mut rng = Rng::new(4);
+        let a = random_sparse(&mut rng, 10, 10, 0.5);
+        assert_eq!(a.spmm_flops(7), 2 * a.nnz() as u64 * 7);
+    }
+}

@@ -1,0 +1,268 @@
+//! The `hpconcord` launcher: the L3 leader entrypoint.
+//!
+//! Subcommands (see `hpconcord help`): `solve` (single problem, single
+//! node or simulated distributed), `sweep` (tuning-grid coordinator),
+//! `cost` (analytic Lemma 3.1–3.5 model + replication optimizer),
+//! `fmri` (the §5 synthetic-cortex pipeline), `engine` (PJRT artifact
+//! smoke runs). Python never runs here — artifacts are pre-built by
+//! `make artifacts`.
+
+use anyhow::{anyhow, Result};
+
+use hpconcord::cli::{Args, USAGE};
+use hpconcord::concord::{
+    fit_distributed, fit_single_node, ConcordConfig, Variant,
+};
+use hpconcord::config::Config;
+use hpconcord::coordinator::{run_sweep, GridSpec};
+use hpconcord::cost::{optimize_replication, ProblemShape};
+use hpconcord::gen;
+use hpconcord::linalg::Mat;
+use hpconcord::metrics::support_metrics;
+use hpconcord::rng::Rng;
+use hpconcord::runtime::Engine;
+use hpconcord::simnet::MachineParams;
+use hpconcord::util::Table;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let code = match args.subcommand() {
+        Some("solve") => run(cmd_solve(&args)),
+        Some("sweep") => run(cmd_sweep(&args)),
+        Some("cost") => run(cmd_cost(&args)),
+        Some("fmri") => run(cmd_fmri(&args)),
+        Some("engine") => run(cmd_engine(&args)),
+        Some("help") | None => {
+            print!("{USAGE}");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+/// Build the workload named by --workload/--p/--n/--deg/--seed (or a
+/// --config file; CLI flags win).
+fn load_problem(args: &Args) -> Result<gen::Problem> {
+    let cfg = match args.str_or("config", "").as_str() {
+        "" => Config::default(),
+        path => Config::load(path)?,
+    };
+    let workload = args.str_or("workload", cfg.str_or("workload", "chain")?);
+    let p = args.usize_or("p", cfg.usize_or("p", 256)?)?;
+    let n = args.usize_or("n", cfg.usize_or("n", 100)?)?;
+    let deg = args.usize_or("deg", cfg.usize_or("deg", 8)?)?;
+    let seed = args.u64_or("seed", 42)?;
+    let mut rng = Rng::new(seed);
+    match workload.as_str() {
+        "chain" => Ok(gen::chain_problem(p, n, &mut rng)),
+        "random" => Ok(gen::random_problem(p, n, deg, &mut rng)),
+        other => Err(anyhow!("unknown workload {other:?} (chain|random)")),
+    }
+}
+
+fn solver_config(args: &Args) -> Result<ConcordConfig> {
+    Ok(ConcordConfig {
+        lambda1: args.f64_or("lambda1", 0.3)?,
+        lambda2: args.f64_or("lambda2", 0.0)?,
+        tol: args.f64_or("tol", 1e-5)?,
+        max_iter: args.usize_or("max-iter", 500)?,
+        max_linesearch: args.usize_or("max-linesearch", 40)?,
+        variant: match args.str_or("variant", "auto").as_str() {
+            "cov" => Variant::Cov,
+            "obs" => Variant::Obs,
+            _ => Variant::Auto,
+        },
+    })
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let problem = load_problem(args)?;
+    let cfg = solver_config(args)?;
+    let mode = args.str_or("mode", "single");
+    let t0 = std::time::Instant::now();
+
+    let (fit, cost_line) = match mode.as_str() {
+        "single" => {
+            let artifacts = args.str_or("artifacts", "artifacts");
+            let fit = match Engine::load(&artifacts) {
+                Ok(mut engine) if engine.has_trial(problem.x.cols()) => {
+                    eprintln!("using PJRT artifact trial_p{}", problem.x.cols());
+                    hpconcord::concord::single_node::fit_single_node_with_engine(
+                        &problem.x, &cfg, &mut engine,
+                    )?
+                }
+                _ => fit_single_node(&problem.x, &cfg)?,
+            };
+            (fit, String::new())
+        }
+        "dist" => {
+            let ranks = args.usize_or("ranks", 8)?;
+            let c_x = args.usize_or("cx", 1)?;
+            let c_o = args.usize_or("comega", 1)?;
+            let out = fit_distributed(&problem.x, &cfg, ranks, c_x, c_o, MachineParams::default());
+            let s = out.cost;
+            let line = format!(
+                "variant {:?}  modeled time {:.4}s (comm {:.4}s)  max/rank: {} msgs, {} words",
+                out.variant, s.time, s.comm_time, s.max_per_rank.messages, s.max_per_rank.words
+            );
+            (out.fit, line)
+        }
+        other => return Err(anyhow!("unknown --mode {other:?} (single|dist)")),
+    };
+
+    let wall = t0.elapsed().as_secs_f64();
+    let m = support_metrics(&fit.omega, &problem.omega0, 1e-8);
+    println!(
+        "p={} n={} λ1={} λ2={}  iters={} (t̄={:.1})  d̄={:.1}  obj={:.6}  converged={}",
+        problem.x.cols(),
+        problem.x.rows(),
+        cfg.lambda1,
+        cfg.lambda2,
+        fit.iterations,
+        fit.mean_linesearch,
+        fit.mean_row_nnz,
+        fit.objective,
+        fit.converged
+    );
+    println!(
+        "support: PPV={:.2}%  FDR={:.2}%  recall={:.2}%   wallclock {:.3}s",
+        100.0 * m.ppv,
+        100.0 * m.fdr,
+        100.0 * m.recall,
+        wall
+    );
+    if !cost_line.is_empty() {
+        println!("{cost_line}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let problem = load_problem(args)?;
+    let base = solver_config(args)?;
+    let grid = GridSpec {
+        lambda1: args.f64_list_or("l1", &[0.2, 0.3, 0.45])?,
+        lambda2: args.f64_list_or("l2", &[0.0, 0.1])?,
+    };
+    let workers = args.usize_or("workers", 4)?;
+    let out = run_sweep(&problem.x, &grid, &base, workers);
+    let mut table = Table::new(&["λ1", "λ2", "iters", "density%", "PPV%", "FDR%"]);
+    for r in &out.results {
+        let m = support_metrics(&r.fit.omega, &problem.omega0, 1e-8);
+        table.row(vec![
+            format!("{:.3}", r.job.cfg.lambda1),
+            format!("{:.3}", r.job.cfg.lambda2),
+            format!("{}", r.fit.iterations),
+            format!("{:.2}", 100.0 * r.density),
+            format!("{:.2}", 100.0 * m.ppv),
+            format!("{:.2}", 100.0 * m.fdr),
+        ]);
+    }
+    print!("{table}");
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let shape = ProblemShape {
+        p: args.f64_or("p", 40_000.0)?,
+        n: args.f64_or("n", 100.0)?,
+        s: args.f64_or("s", 40.0)?,
+        t: args.f64_or("t", 10.0)?,
+        d: args.f64_or("d", 10.0)?,
+    };
+    let procs = args.usize_or("procs", 512)?;
+    let variant = match args.str_or("variant", "auto").as_str() {
+        "cov" => Variant::Cov,
+        "obs" => Variant::Obs,
+        _ => Variant::Auto,
+    };
+    let machine = MachineParams::default();
+    let best = optimize_replication(&shape, procs, variant, &machine, f64::INFINITY)
+        .ok_or_else(|| anyhow!("no feasible configuration"))?;
+    println!(
+        "best: {:?} with c_X={} c_Ω={} → modeled {:.4}s (mem {:.1} MWords/proc)",
+        best.variant,
+        best.choice.c_x,
+        best.choice.c_omega,
+        best.time,
+        best.cost.memory_words / 1e6
+    );
+    let naive = hpconcord::cost::optimizer::evaluate(
+        &shape,
+        &hpconcord::cost::ReplicationChoice { p_procs: procs, c_x: 1, c_omega: 1 },
+        best.variant,
+    )
+    .time(&machine, procs);
+    println!("vs c_X=c_Ω=1: {:.4}s → replication speedup {:.2}×", naive, naive / best.time);
+    Ok(())
+}
+
+fn cmd_fmri(args: &Args) -> Result<()> {
+    let params = hpconcord::coordinator::FmriParams {
+        p_hemi: args.usize_or("p-hemi", 96)?,
+        parcels: args.usize_or("parcels", 5)?,
+        samples: args.usize_or("samples", 200)?,
+        seed: args.u64_or("seed", 7)?,
+        ..Default::default()
+    };
+    let out = hpconcord::coordinator::run_fmri_study(&params);
+    println!(
+        "selected λ1={} λ2={} (density {:.4} vs target {:.4}); cross-hemisphere nnz fraction {:.4}",
+        out.lambda1, out.lambda2, out.density, out.target_density, out.cross_hemisphere_fraction
+    );
+    let mut table = Table::new(&["hemisphere", "method", "clusters", "Jaccard vs truth"]);
+    for s in &out.scores {
+        table.row(vec![
+            (if s.hemisphere == 0 { "left" } else { "right" }).to_string(),
+            s.method.clone(),
+            format!("{}", s.clusters),
+            format!("{:.4}", s.jaccard),
+        ]);
+    }
+    print!("{table}");
+    Ok(())
+}
+
+fn cmd_engine(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let mut engine = Engine::load(&dir)?;
+    let mut names = engine.names().into_iter().map(String::from).collect::<Vec<_>>();
+    names.sort();
+    println!("{} artifacts in {dir}:", names.len());
+    for n in &names {
+        println!("  {n}");
+    }
+    // Smoke: run a trial artifact against the native twin.
+    if let Some(&p) = engine.trial_sizes().first() {
+        let mut rng = Rng::new(1);
+        let prob = gen::chain_problem(p, 50, &mut rng);
+        let s = hpconcord::runtime::native::gram(&prob.x);
+        let omega = Mat::eye(p);
+        let w = hpconcord::runtime::native::w_step(&omega, &s);
+        let (grad, g0) = hpconcord::runtime::native::gradobj(&omega, &w, 0.1);
+        let pjrt = engine.trial(&omega, &grad, &s, g0, 0.5, 0.3, 0.1)?;
+        let native = hpconcord::runtime::native::trial(&omega, &grad, &s, g0, 0.5, 0.3, 0.1);
+        let diff = pjrt.omega_new.max_abs_diff(&native.omega_new);
+        println!("trial_p{p} PJRT vs native: max |Δ| = {diff:.3e}");
+        if diff > 1e-9 {
+            return Err(anyhow!("PJRT/native mismatch"));
+        }
+        println!("engine smoke OK");
+    }
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! The modified Jaccard clustering similarity (supplementary §S.3.5):
+//!
+//! ```text
+//! Sim(C₁, C₂) = (1/max(k, ℓ)) · Σ_{(i,j) ∈ E} W_ij,
+//! W_ij = |A_i ∩ B_j| / |A_i ∪ B_j|,
+//! ```
+//!
+//! with E a maximum-weight edge *cover* of the complete bipartite graph
+//! between the clusters of the two clusterings — the cover (rather than
+//! a matching) resolves comparisons between clusterings of different
+//! sizes. The paper computes the cover with the algorithm of Azad et
+//! al. [6]; we use the classic greedy construction (every vertex keeps
+//! its heaviest incident edge), which yields a valid cover and a
+//! ½-approximation of the maximum weight — identical scoring semantics
+//! for ranking λ-grids, which is how the paper uses the score.
+
+use std::collections::HashSet;
+
+/// Pairwise Jaccard weights between the clusters of two labelings.
+/// Labels may be arbitrary usize ids; clusters are their equivalence
+/// classes. Returns (W, k, ℓ).
+pub fn pairwise_jaccard(a: &[usize], b: &[usize]) -> (Vec<Vec<f64>>, usize, usize) {
+    assert_eq!(a.len(), b.len(), "clusterings must label the same items");
+    let amap = relabel(a);
+    let bmap = relabel(b);
+    let k = amap.iter().copied().max().map_or(0, |m| m + 1);
+    let l = bmap.iter().copied().max().map_or(0, |m| m + 1);
+    let mut inter = vec![vec![0usize; l]; k];
+    let mut asz = vec![0usize; k];
+    let mut bsz = vec![0usize; l];
+    for i in 0..a.len() {
+        inter[amap[i]][bmap[i]] += 1;
+        asz[amap[i]] += 1;
+        bsz[bmap[i]] += 1;
+    }
+    let w = (0..k)
+        .map(|i| {
+            (0..l)
+                .map(|j| {
+                    let inx = inter[i][j];
+                    if inx == 0 {
+                        0.0
+                    } else {
+                        inx as f64 / (asz[i] + bsz[j] - inx) as f64
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    (w, k, l)
+}
+
+fn relabel(xs: &[usize]) -> Vec<usize> {
+    let mut map = std::collections::HashMap::new();
+    xs.iter()
+        .map(|&x| {
+            let next = map.len();
+            *map.entry(x).or_insert(next)
+        })
+        .collect()
+}
+
+/// Modified Jaccard similarity (S.3) between two clusterings.
+pub fn jaccard_similarity(a: &[usize], b: &[usize]) -> f64 {
+    let (w, k, l) = pairwise_jaccard(a, b);
+    if k == 0 || l == 0 {
+        return 0.0;
+    }
+    // Greedy maximum-weight edge cover: every vertex on both sides keeps
+    // its heaviest incident edge; the union (deduplicated) covers all
+    // vertices.
+    let mut cover: HashSet<(usize, usize)> = HashSet::new();
+    for (i, row) in w.iter().enumerate() {
+        let j = argmax(row);
+        cover.insert((i, j));
+    }
+    for j in 0..l {
+        // First maximum (lowest index) — the same tie-break as `argmax`,
+        // which makes the cover invariant under transposing W, i.e. the
+        // score symmetric in (a, b).
+        let mut i = 0;
+        for cand in 0..k {
+            if w[cand][j] > w[i][j] {
+                i = cand;
+            }
+        }
+        cover.insert((i, j));
+    }
+    let total: f64 = cover.iter().map(|&(i, j)| w[i][j]).sum();
+    total / k.max(l) as f64
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_clusterings_score_one() {
+        let a = vec![0, 0, 1, 1, 2, 2, 2];
+        assert!((jaccard_similarity(&a, &a) - 1.0).abs() < 1e-12);
+        // Label permutation doesn't matter.
+        let b = vec![5, 5, 9, 9, 1, 1, 1];
+        assert!((jaccard_similarity(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_refinement_scores_below_one() {
+        let coarse = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let fine = vec![0, 0, 1, 1, 2, 2, 3, 3];
+        let s = jaccard_similarity(&coarse, &fine);
+        assert!(s > 0.0 && s < 1.0, "score {s}");
+    }
+
+    #[test]
+    fn single_cluster_vs_singletons_is_small() {
+        let n = 10;
+        let one = vec![0usize; n];
+        let each: Vec<usize> = (0..n).collect();
+        let s = jaccard_similarity(&one, &each);
+        assert!(s < 0.2, "score {s}");
+    }
+
+    #[test]
+    fn symmetric_enough() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![0, 1, 1, 2, 2, 2];
+        let s1 = jaccard_similarity(&a, &b);
+        let s2 = jaccard_similarity(&b, &a);
+        assert!((s1 - s2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weights_are_jaccard_of_sets() {
+        let a = vec![0, 0, 0, 1, 1];
+        let b = vec![0, 0, 1, 1, 1];
+        let (w, k, l) = pairwise_jaccard(&a, &b);
+        assert_eq!((k, l), (2, 2));
+        // A0 = {0,1,2}, B0 = {0,1}: |∩| = 2, |∪| = 3.
+        assert!((w[0][0] - 2.0 / 3.0).abs() < 1e-12);
+        // A1 = {3,4}, B1 = {2,3,4}: |∩| = 2, |∪| = 3.
+        assert!((w[1][1] - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn better_agreement_scores_higher() {
+        let truth = vec![0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let close = vec![0, 0, 1, 1, 1, 1, 2, 2, 2]; // one item moved
+        let far = vec![0, 1, 2, 0, 1, 2, 0, 1, 2]; // systematic scramble
+        assert!(jaccard_similarity(&truth, &close) > jaccard_similarity(&truth, &far));
+    }
+}

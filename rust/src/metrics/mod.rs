@@ -1,0 +1,8 @@
+//! Evaluation metrics: support recovery (Table 1's PPV/FDR) and the
+//! modified Jaccard clustering score (supplementary §S.3.5).
+
+pub mod jaccard;
+pub mod support;
+
+pub use jaccard::{jaccard_similarity, pairwise_jaccard};
+pub use support::{support_metrics, SupportMetrics};

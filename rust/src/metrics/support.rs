@@ -1,0 +1,111 @@
+//! Support-recovery metrics against the ground-truth sparsity pattern
+//! (paper Table 1: positive predictive value and false discovery rate,
+//! "computed by looking at the differences between the estimated and
+//! true sparsity patterns"). Diagonals are excluded — the penalty, and
+//! hence the recovered graph, lives on the off-diagonal entries.
+
+use crate::linalg::{Csr, Mat};
+
+/// Confusion counts and derived rates over off-diagonal support.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SupportMetrics {
+    pub true_pos: usize,
+    pub false_pos: usize,
+    pub false_neg: usize,
+    /// PPV = TP / (TP + FP), in [0, 1]; 1.0 when nothing is selected.
+    pub ppv: f64,
+    /// FDR = FP / (TP + FP) = 1 − PPV.
+    pub fdr: f64,
+    /// Recall = TP / (TP + FN).
+    pub recall: f64,
+}
+
+/// Compare an estimate's off-diagonal support (|entry| > `tol`) against
+/// the true pattern.
+pub fn support_metrics(estimate: &Mat, truth: &Csr, tol: f64) -> SupportMetrics {
+    let p = estimate.rows();
+    assert_eq!(estimate.cols(), p);
+    assert_eq!(truth.rows(), p);
+    let t = truth.to_dense();
+    let mut tp = 0;
+    let mut fp = 0;
+    let mut fneg = 0;
+    for i in 0..p {
+        for j in 0..p {
+            if i == j {
+                continue;
+            }
+            let est = estimate.get(i, j).abs() > tol;
+            let tru = t.get(i, j) != 0.0;
+            match (est, tru) {
+                (true, true) => tp += 1,
+                (true, false) => fp += 1,
+                (false, true) => fneg += 1,
+                _ => {}
+            }
+        }
+    }
+    let sel = tp + fp;
+    let ppv = if sel == 0 { 1.0 } else { tp as f64 / sel as f64 };
+    let rec = if tp + fneg == 0 { 1.0 } else { tp as f64 / (tp + fneg) as f64 };
+    SupportMetrics { true_pos: tp, false_pos: fp, false_neg: fneg, ppv, fdr: 1.0 - ppv, recall: rec }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn truth_chain(p: usize) -> Csr {
+        crate::gen::chain_precision(p)
+    }
+
+    #[test]
+    fn perfect_recovery() {
+        let p = 8;
+        let truth = truth_chain(p);
+        let m = support_metrics(&truth.to_dense(), &truth, 1e-12);
+        assert_eq!(m.false_pos, 0);
+        assert_eq!(m.false_neg, 0);
+        assert_eq!(m.ppv, 1.0);
+        assert_eq!(m.fdr, 0.0);
+        assert_eq!(m.recall, 1.0);
+    }
+
+    #[test]
+    fn diagonal_only_estimate_has_zero_recall_but_unit_ppv() {
+        let p = 6;
+        let truth = truth_chain(p);
+        let m = support_metrics(&Mat::eye(p), &truth, 1e-12);
+        assert_eq!(m.true_pos, 0);
+        assert_eq!(m.false_pos, 0);
+        assert_eq!(m.ppv, 1.0); // nothing selected, nothing wrong
+        assert_eq!(m.recall, 0.0);
+    }
+
+    #[test]
+    fn dense_estimate_counts_false_positives() {
+        let p = 5;
+        let truth = truth_chain(p);
+        let dense = Mat::from_fn(p, p, |_, _| 1.0);
+        let m = support_metrics(&dense, &truth, 1e-12);
+        // Off-diagonal entries: p(p-1) = 20; true edges: 2(p-1) = 8.
+        assert_eq!(m.true_pos, 8);
+        assert_eq!(m.false_pos, 12);
+        assert_eq!(m.false_neg, 0);
+        assert!((m.ppv - 0.4).abs() < 1e-12);
+        assert!((m.fdr - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tol_filters_small_entries() {
+        let p = 4;
+        let truth = truth_chain(p);
+        let mut est = truth.to_dense();
+        est.set(0, 3, 1e-9);
+        est.set(3, 0, 1e-9);
+        let strict = support_metrics(&est, &truth, 1e-8);
+        assert_eq!(strict.false_pos, 0);
+        let loose = support_metrics(&est, &truth, 0.0);
+        assert_eq!(loose.false_pos, 2);
+    }
+}

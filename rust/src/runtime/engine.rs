@@ -1,0 +1,224 @@
+//! PJRT engine: load the AOT HLO-text artifacts and execute them.
+//!
+//! The interchange format is HLO **text** — jax ≥ 0.5 serializes
+//! HloModuleProto with 64-bit instruction ids which the image's
+//! xla_extension 0.5.1 rejects; `HloModuleProto::from_text_file`
+//! re-parses and reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Executables are compiled lazily (first use per artifact) and cached.
+//! All artifacts are lowered with `return_tuple=True`, so outputs are
+//! unpacked with `to_tuple`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::Mat;
+
+/// Parsed manifest entry.
+#[derive(Debug, Clone)]
+struct ArtifactMeta {
+    kind: String,
+    file: PathBuf,
+    dims: HashMap<String, usize>,
+}
+
+/// PJRT-backed executor over the artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, ArtifactMeta>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Outputs of the fused `concord_trial` artifact.
+#[derive(Debug, Clone)]
+pub struct TrialOutput {
+    pub omega_new: Mat,
+    pub w_new: Mat,
+    pub g_new: f64,
+    pub rhs: f64,
+    pub accept: bool,
+}
+
+impl Engine {
+    /// Load the manifest from an artifact directory (built by
+    /// `make artifacts`). Fails if the directory or manifest is missing;
+    /// callers treat that as "run the native fallback".
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut artifacts = HashMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let mut name = None;
+            let mut kind = None;
+            let mut file = None;
+            let mut dims = HashMap::new();
+            for kv in line.split_whitespace() {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("bad manifest token {kv:?}"))?;
+                match k {
+                    "name" => name = Some(v.to_string()),
+                    "kind" => kind = Some(v.to_string()),
+                    "file" => file = Some(dir.join(v)),
+                    _ => {
+                        dims.insert(k.to_string(), v.parse::<usize>()?);
+                    }
+                }
+            }
+            let name = name.ok_or_else(|| anyhow!("manifest line missing name: {line}"))?;
+            artifacts.insert(
+                name,
+                ArtifactMeta {
+                    kind: kind.ok_or_else(|| anyhow!("missing kind"))?,
+                    file: file.ok_or_else(|| anyhow!("missing file"))?,
+                    dims,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, artifacts, compiled: HashMap::new() })
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Problem sizes p with a fused-trial artifact.
+    pub fn trial_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "trial")
+            .filter_map(|a| a.dims.get("p").copied())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let meta = self
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+            let path = meta
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?
+                .to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// One fused line-search trial via the `trial_p{p}` artifact.
+    #[allow(clippy::too_many_arguments)]
+    pub fn trial(
+        &mut self,
+        omega: &Mat,
+        grad: &Mat,
+        s: &Mat,
+        g_prev: f64,
+        tau: f64,
+        lam1: f64,
+        lam2: f64,
+    ) -> Result<TrialOutput> {
+        let p = omega.rows();
+        let name = format!("trial_p{p}");
+        let inputs = vec![
+            mat_literal(omega)?,
+            mat_literal(grad)?,
+            mat_literal(s)?,
+            scalar1(g_prev),
+            scalar1(tau),
+            scalar1(lam1),
+            scalar1(lam2),
+        ];
+        let outs = self.execute(&name, &inputs)?;
+        if outs.len() != 5 {
+            bail!("trial artifact returned {} outputs, want 5", outs.len());
+        }
+        let omega_new = literal_mat(&outs[0], p, p)?;
+        let w_new = literal_mat(&outs[1], p, p)?;
+        let g_new = literal_scalar(&outs[2])?;
+        let rhs = literal_scalar(&outs[3])?;
+        let accept = literal_scalar(&outs[4])? != 0.0;
+        Ok(TrialOutput { omega_new, w_new, g_new, rhs, accept })
+    }
+
+    /// (G, g(Ω)) via the `gradobj_p{p}` artifact.
+    pub fn gradobj(&mut self, omega: &Mat, w: &Mat, lam2: f64) -> Result<(Mat, f64)> {
+        let p = omega.rows();
+        let name = format!("gradobj_p{p}");
+        let outs = self.execute(&name, &[mat_literal(omega)?, mat_literal(w)?, scalar1(lam2)])?;
+        Ok((literal_mat(&outs[0], p, p)?, literal_scalar(&outs[1])?))
+    }
+
+    /// S = XᵀX/n via the `gram_n{n}_p{p}` artifact (exact-shape only).
+    pub fn gram(&mut self, x: &Mat) -> Result<Mat> {
+        let (n, p) = x.shape();
+        let name = format!("gram_n{n}_p{p}");
+        let outs = self.execute(&name, &[mat_literal(x)?])?;
+        literal_mat(&outs[0], p, p)
+    }
+
+    /// C = A·B via the `matmul_{m}x{k}x{n}` artifact (exact-shape only).
+    pub fn matmul(&mut self, a: &Mat, b: &Mat) -> Result<Mat> {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let name = format!("matmul_{m}x{k}x{n}");
+        let outs = self.execute(&name, &[mat_literal(a)?, mat_literal(b)?])?;
+        literal_mat(&outs[0], m, n)
+    }
+
+    /// True when a fused trial artifact exists for size p.
+    pub fn has_trial(&self, p: usize) -> bool {
+        self.artifacts.contains_key(&format!("trial_p{p}"))
+    }
+}
+
+fn mat_literal(m: &Mat) -> Result<xla::Literal> {
+    xla::Literal::vec1(m.data())
+        .reshape(&[m.rows() as i64, m.cols() as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+fn scalar1(v: f64) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+fn literal_mat(l: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v = l.to_vec::<f64>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    if v.len() != rows * cols {
+        bail!("literal size {} != {rows}x{cols}", v.len());
+    }
+    Ok(Mat::from_vec(rows, cols, v))
+}
+
+fn literal_scalar(l: &xla::Literal) -> Result<f64> {
+    let v = l.to_vec::<f64>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}

@@ -1,0 +1,18 @@
+//! Runtime execution of the AOT-compiled JAX/Pallas artifacts (L2+L1)
+//! from Rust (L3) — plus a pure-Rust twin of every artifact op.
+//!
+//! `make artifacts` runs `python/compile/aot.py` **once**, lowering the
+//! CONCORD step graphs to HLO *text* (`artifacts/*.hlo.txt` + a
+//! `manifest.txt` index). This module loads that text through the `xla`
+//! crate's PJRT CPU client (`HloModuleProto::from_text_file` →
+//! `XlaComputation` → `compile` → `execute`), so Python never runs on
+//! the request path.
+//!
+//! [`native`] implements the same operations in pure Rust at any shape;
+//! it is both the fallback when no artifact matches and the oracle for
+//! the engine-vs-native equivalence tests (`rust/tests/`).
+
+pub mod engine;
+pub mod native;
+
+pub use engine::{Engine, TrialOutput};

@@ -1,0 +1,156 @@
+//! Pure-Rust implementations of the AOT artifact operations.
+//!
+//! Shape-for-shape, value-for-value twins of `python/compile/model.py`'s
+//! graphs: the single-node solver runs on these at arbitrary p, and the
+//! integration tests assert the PJRT-executed artifacts agree with them
+//! to near machine precision.
+
+use crate::concord::ops;
+use crate::linalg::{Csr, Mat};
+
+/// S = (1/n)·XᵀX (model.gram).
+pub fn gram(x: &Mat) -> Mat {
+    let n = x.rows();
+    let xt = x.transpose();
+    let mut s = xt.matmul(x);
+    s.scale(1.0 / n as f64);
+    s
+}
+
+/// W = Ω·S (model.w_step). Exploits the iterate's exact sparsity via a
+/// CSR pass when it pays (density below ~40%), matching the paper's
+/// sparse-dense local multiply.
+pub fn w_step(omega: &Mat, s: &Mat) -> Mat {
+    let p = omega.rows();
+    let density = omega.nnz() as f64 / (p * p) as f64;
+    if density < 0.4 {
+        Csr::from_dense(omega, 0.0).spmm(s)
+    } else {
+        omega.matmul(s)
+    }
+}
+
+/// (G, g(Ω)) from the iterate and W = ΩS (model.gradient_obj). Returns
+/// g = +∞ when the diagonal is non-positive.
+pub fn gradobj(omega: &Mat, w: &Mat, lam2: f64) -> (Mat, f64) {
+    let wt = w.transpose();
+    let g_mat = ops::gradient_block(omega, w, &wt, 0, lam2);
+    let g_val = match ops::objective_parts_block(omega, w, 0) {
+        Some([logd, tr, fro]) => -logd + 0.5 * tr + 0.5 * lam2 * fro,
+        None => f64::INFINITY,
+    };
+    (g_mat, g_val)
+}
+
+/// Output bundle of one fused line-search trial.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub omega_new: Mat,
+    pub w_new: Mat,
+    pub g_new: f64,
+    pub rhs: f64,
+    pub accept: bool,
+}
+
+/// One fused line-search trial (model.concord_trial): prox step, new W,
+/// new objective, sufficient-decrease RHS, accept flag.
+pub fn trial(
+    omega: &Mat,
+    grad: &Mat,
+    s: &Mat,
+    g_prev: f64,
+    tau: f64,
+    lam1: f64,
+    lam2: f64,
+) -> Trial {
+    let omega_new = ops::prox_block(omega, grad, 0, tau, lam1);
+    let w_new = w_step(&omega_new, s);
+    let g_new = match ops::objective_parts_block(&omega_new, &w_new, 0) {
+        Some([logd, tr, fro]) => -logd + 0.5 * tr + 0.5 * lam2 * fro,
+        None => f64::INFINITY,
+    };
+    let ls = ops::linesearch_parts_block(omega, &omega_new, grad);
+    let rhs = g_prev - ls[0] + ls[1] / (2.0 * tau);
+    Trial { omega_new, w_new, g_new, rhs, accept: g_new <= rhs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn gram_matches_definition() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(7, 5, |_, _| rng.normal());
+        let s = gram(&x);
+        for i in 0..5 {
+            for j in 0..5 {
+                let mut want = 0.0;
+                for k in 0..7 {
+                    want += x.get(k, i) * x.get(k, j);
+                }
+                want /= 7.0;
+                assert!((s.get(i, j) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn w_step_sparse_and_dense_paths_agree() {
+        let mut rng = Rng::new(2);
+        let p = 20;
+        // Sparse iterate (density ~0.1) exercises the CSR path.
+        let omega = Mat::from_fn(p, p, |i, j| {
+            if i == j {
+                1.5
+            } else if rng.uniform() < 0.1 {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let s = Mat::from_fn(p, p, |_, _| rng.normal());
+        let got = w_step(&omega, &s);
+        let want = omega.matmul(&s);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn trial_accept_consistency() {
+        let mut rng = Rng::new(3);
+        let p = 8;
+        let x = Mat::from_fn(30, p, |_, _| rng.normal());
+        let s = gram(&x);
+        let omega = Mat::eye(p);
+        let w = w_step(&omega, &s);
+        let (grad, g0) = gradobj(&omega, &w, 0.1);
+        // Small enough tau must accept (Lipschitz smooth part).
+        let mut tau = 1.0;
+        let mut accepted = false;
+        for _ in 0..60 {
+            let t = trial(&omega, &grad, &s, g0, tau, 0.3, 0.1);
+            assert_eq!(t.accept, t.g_new <= t.rhs);
+            if t.accept {
+                accepted = true;
+                assert!(t.g_new.is_finite());
+                break;
+            }
+            tau *= 0.5;
+        }
+        assert!(accepted);
+    }
+
+    #[test]
+    fn trial_infinite_objective_on_bad_diagonal() {
+        // A huge tau drives the diagonal negative; g_new must be +inf
+        // and the trial rejected.
+        let p = 4;
+        let omega = Mat::eye(p);
+        let grad = Mat::from_fn(p, p, |i, j| if i == j { 100.0 } else { 0.0 });
+        let s = Mat::eye(p);
+        let t = trial(&omega, &grad, &s, 0.0, 1.0, 0.1, 0.0);
+        assert!(t.g_new.is_infinite());
+        assert!(!t.accept);
+    }
+}

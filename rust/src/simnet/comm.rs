@@ -1,0 +1,346 @@
+//! Per-rank communicator: metered point-to-point sends and the
+//! collectives HP-CONCORD needs (team allgather, team sum-reduce, direct
+//! and Bruck all-to-all, barrier).
+//!
+//! Every payload is a `Vec<f64>`; messages carry a `(src, tag)` header
+//! and out-of-order arrivals are parked in a mailbox so tag-matched
+//! receives behave like MPI. Sends are counted into [`Counters`] at the
+//! sender (the paper's convention: L and W count *sent* messages/words).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+use super::cost::Counters;
+
+/// A point-to-point message.
+pub(crate) struct Msg {
+    pub src: usize,
+    pub tag: u64,
+    pub payload: Vec<f64>,
+}
+
+/// Handle a rank's program uses to communicate. One per thread.
+pub struct Comm {
+    rank: usize,
+    size: usize,
+    senders: Vec<Sender<Msg>>,
+    receiver: Receiver<Msg>,
+    mailbox: HashMap<(usize, u64), Vec<Vec<f64>>>,
+    barrier: Arc<Barrier>,
+    /// Global monotone tag source for internally generated collectives.
+    tag_source: Arc<AtomicU64>,
+    pub counters: Counters,
+}
+
+impl Comm {
+    pub(crate) fn new(
+        rank: usize,
+        size: usize,
+        senders: Vec<Sender<Msg>>,
+        receiver: Receiver<Msg>,
+        barrier: Arc<Barrier>,
+        tag_source: Arc<AtomicU64>,
+    ) -> Self {
+        Comm {
+            rank,
+            size,
+            senders,
+            receiver,
+            mailbox: HashMap::new(),
+            barrier,
+            tag_source,
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Send `payload` to `dest` under `tag`. Metered: 1 message,
+    /// `payload.len()` words. Self-sends are delivered but *not* metered
+    /// (no network traversal), matching the convention in the paper's
+    /// counts where a processor's own block needs no communication.
+    pub fn send(&mut self, dest: usize, tag: u64, payload: Vec<f64>) {
+        let words = payload.len() as u64;
+        self.send_with_words(dest, tag, payload, words);
+    }
+
+    /// Send with an explicit word count. Used by the operand-block paths:
+    /// the paper's bandwidth model counts *matrix elements* (nnz for
+    /// sparse), not wire encodings, so block shifts meter
+    /// [`crate::dist::Block::words`] rather than the CSR envelope.
+    pub fn send_with_words(&mut self, dest: usize, tag: u64, payload: Vec<f64>, words: u64) {
+        if dest != self.rank {
+            self.counters.messages += 1;
+            self.counters.words += words;
+        }
+        self.senders[dest]
+            .send(Msg { src: self.rank, tag, payload })
+            .expect("simnet: receiver hung up");
+    }
+
+    /// Blocking tag-matched receive from `src`.
+    pub fn recv(&mut self, src: usize, tag: u64) -> Vec<f64> {
+        if let Some(q) = self.mailbox.get_mut(&(src, tag)) {
+            if !q.is_empty() {
+                return q.remove(0);
+            }
+        }
+        loop {
+            let msg = self.receiver.recv().expect("simnet: channel closed");
+            if msg.src == src && msg.tag == tag {
+                return msg.payload;
+            }
+            self.mailbox.entry((msg.src, msg.tag)).or_default().push(msg.payload);
+        }
+    }
+
+    /// Simultaneous send+receive (ring shifts). Channels are unbounded,
+    /// so send-then-recv cannot deadlock.
+    pub fn sendrecv(
+        &mut self,
+        dest: usize,
+        src: usize,
+        tag: u64,
+        payload: Vec<f64>,
+    ) -> Vec<f64> {
+        self.send(dest, tag, payload);
+        self.recv(src, tag)
+    }
+
+    /// Full-world barrier.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// Count local compute against the metered model.
+    pub fn count_flops_dense(&mut self, flops: u64) {
+        self.counters.flops_dense += flops;
+    }
+
+    pub fn count_flops_sparse(&mut self, flops: u64) {
+        self.counters.flops_sparse += flops;
+    }
+
+    /// Fresh tag for an internally generated collective round. All ranks
+    /// must call collectives in the same order, so per-call explicit tags
+    /// keep rounds separated without global coordination.
+    fn fresh_tag(&self) -> u64 {
+        // One shared atomic would desynchronize ranks (each rank bumps it
+        // independently); instead reserve the high bit and let callers'
+        // explicit tags stay below it.
+        const COLLECTIVE_BASE: u64 = 1 << 62;
+        COLLECTIVE_BASE + self.tag_source.load(Ordering::Relaxed)
+    }
+
+    /// Team all-gather: every member ends with every member's
+    /// contribution, indexed by team position. `team` must list the same
+    /// ranks in the same order on every member. Direct exchange:
+    /// (|team|-1) messages per rank.
+    pub fn allgather(&mut self, team: &[usize], tag: u64, mine: Vec<f64>) -> Vec<Vec<f64>> {
+        let me = team.iter().position(|&r| r == self.rank).expect("not in team");
+        let mut out: Vec<Vec<f64>> = vec![Vec::new(); team.len()];
+        for (i, &r) in team.iter().enumerate() {
+            if i != me {
+                self.send(r, tag, mine.clone());
+            }
+        }
+        out[me] = mine;
+        for (i, &r) in team.iter().enumerate() {
+            if i != me {
+                out[i] = self.recv(r, tag);
+            }
+        }
+        out
+    }
+
+    /// Team elementwise sum-reduce with result on every member
+    /// (allreduce); Algorithm 4 line 8.
+    ///
+    /// Power-of-two teams use a recursive-doubling butterfly: log2(c)
+    /// rounds of full-vector exchange (words = len·log2(c) per rank vs
+    /// len·(c−1) for the naive gather). Additions are ordered lower-half
+    /// + upper-half at every level, so every member computes the
+    /// bit-identical result — the distributed solvers rely on globally
+    /// identical line-search decisions.
+    pub fn sum_reduce(&mut self, team: &[usize], tag: u64, mine: Vec<f64>) -> Vec<f64> {
+        let c = team.len();
+        if c > 1 && c.is_power_of_two() {
+            let me = team.iter().position(|&r| r == self.rank).expect("not in team");
+            let mut acc = mine;
+            let rounds = c.trailing_zeros();
+            for k in 0..rounds {
+                let bit = 1usize << k;
+                let partner = team[me ^ bit];
+                let theirs = self.sendrecv(partner, partner, tag + k as u64, acc.clone());
+                debug_assert_eq!(theirs.len(), acc.len());
+                // Deterministic order: lower block + upper block.
+                if me & bit == 0 {
+                    for (a, v) in acc.iter_mut().zip(&theirs) {
+                        *a += v;
+                    }
+                } else {
+                    let mut new = theirs;
+                    for (v, a) in new.iter_mut().zip(&acc) {
+                        *v += a;
+                    }
+                    acc = new;
+                }
+            }
+            return acc;
+        }
+        // General teams: gather-and-sum (deterministic team order).
+        let n = mine.len();
+        let parts = self.allgather(team, tag, mine);
+        let mut acc = vec![0.0; n];
+        for p in parts {
+            debug_assert_eq!(p.len(), n);
+            for (a, v) in acc.iter_mut().zip(&p) {
+                *a += v;
+            }
+        }
+        acc
+    }
+
+    /// Direct (pairwise) all-to-all within a team: `parts[i]` goes to
+    /// team member i; returns what each member sent to us. (|team|-1)
+    /// messages per rank.
+    pub fn alltoall_direct(
+        &mut self,
+        team: &[usize],
+        tag: u64,
+        mut parts: Vec<Vec<f64>>,
+    ) -> Vec<Vec<f64>> {
+        assert_eq!(parts.len(), team.len());
+        let me = team.iter().position(|&r| r == self.rank).expect("not in team");
+        let mut out: Vec<Vec<f64>> = vec![Vec::new(); team.len()];
+        out[me] = std::mem::take(&mut parts[me]);
+        for i in 0..team.len() {
+            if i != me {
+                self.send(team[i], tag, std::mem::take(&mut parts[i]));
+            }
+        }
+        for (i, &r) in team.iter().enumerate() {
+            if i != me {
+                out[i] = self.recv(r, tag);
+            }
+        }
+        out
+    }
+
+    /// Bruck all-to-all within a team of power-of-two size with
+    /// equal-length parts: ⌈log₂ Q⌉ messages per rank, each carrying
+    /// Q/2 blocks — the O(log Q) messages / O(w·Q·log Q) words schedule
+    /// the paper's transpose analysis (Lemma 3.2 / §S.2.4) assumes.
+    pub fn alltoall_bruck(
+        &mut self,
+        team: &[usize],
+        tag: u64,
+        parts: Vec<Vec<f64>>,
+    ) -> Vec<Vec<f64>> {
+        let q = team.len();
+        assert_eq!(parts.len(), q);
+        assert!(q.is_power_of_two(), "bruck requires power-of-two team");
+        if q == 1 {
+            return parts;
+        }
+        let w = parts[0].len();
+        assert!(parts.iter().all(|p| p.len() == w), "bruck requires equal parts");
+        let me = team.iter().position(|&r| r == self.rank).expect("not in team");
+
+        // Phase 1: local rotation so block b holds data for (me + b) mod q.
+        let mut blocks: Vec<Vec<f64>> = (0..q).map(|b| parts[(me + b) % q].clone()).collect();
+
+        // Phase 2: log2(q) exchange rounds.
+        let rounds = q.trailing_zeros();
+        for k in 0..rounds {
+            let bit = 1usize << k;
+            let dest = team[(me + bit) % q];
+            let src = team[(me + q - bit) % q];
+            // Pack blocks whose index has bit k set.
+            let send_idx: Vec<usize> = (0..q).filter(|b| b & bit != 0).collect();
+            let mut buf = Vec::with_capacity(send_idx.len() * w);
+            for &b in &send_idx {
+                buf.extend_from_slice(&blocks[b]);
+            }
+            let recvd = self.sendrecv(dest, src, tag + k as u64, buf);
+            for (slot, &b) in send_idx.iter().enumerate() {
+                blocks[b] = recvd[slot * w..(slot + 1) * w].to_vec();
+            }
+        }
+
+        // Phase 3: inverse rotation — after the exchanges, block b holds
+        // the data *from* member (me - b) mod q.
+        let mut out = vec![Vec::new(); q];
+        for (b, block) in blocks.into_iter().enumerate() {
+            out[(me + q - b) % q] = block;
+        }
+        out
+    }
+
+    /// Exchange with an irregular partner set: send `outgoing[(dest,
+    /// payload)]`, receive one message from each rank in `expect_from`.
+    /// Returns `(src, payload)` pairs. Used by the distributed transpose,
+    /// where the partner set is the Lemma 3.2 neighbourhood.
+    pub fn exchange(
+        &mut self,
+        tag: u64,
+        outgoing: Vec<(usize, Vec<f64>)>,
+        expect_from: &[usize],
+    ) -> Vec<(usize, Vec<f64>)> {
+        let mut keep = Vec::new();
+        for (dest, payload) in outgoing {
+            if dest == self.rank {
+                keep.push((self.rank, payload));
+            } else {
+                self.send(dest, tag, payload);
+            }
+        }
+        let mut out = keep;
+        for &src in expect_from {
+            if src != self.rank {
+                out.push((src, self.recv(src, tag)));
+            }
+        }
+        out
+    }
+
+    #[allow(dead_code)]
+    pub(crate) fn noop_tag(&self) -> u64 {
+        self.fresh_tag()
+    }
+}
+
+/// A team-scoped convenience wrapper: fixes the member list and provides
+/// position-indexed operations.
+pub struct TeamComm<'a> {
+    pub comm: &'a mut Comm,
+    pub members: Vec<usize>,
+}
+
+impl<'a> TeamComm<'a> {
+    pub fn new(comm: &'a mut Comm, members: Vec<usize>) -> Self {
+        debug_assert!(members.contains(&comm.rank()));
+        TeamComm { comm, members }
+    }
+
+    pub fn position(&self) -> usize {
+        let r = self.comm.rank();
+        self.members.iter().position(|&m| m == r).unwrap()
+    }
+
+    pub fn allgather(&mut self, tag: u64, mine: Vec<f64>) -> Vec<Vec<f64>> {
+        self.comm.allgather(&self.members, tag, mine)
+    }
+
+    pub fn sum_reduce(&mut self, tag: u64, mine: Vec<f64>) -> Vec<f64> {
+        self.comm.sum_reduce(&self.members, tag, mine)
+    }
+}

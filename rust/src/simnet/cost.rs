@@ -1,0 +1,158 @@
+//! The α-β-γ machine model and per-rank cost counters.
+//!
+//! `T = F·γ + L·α + W·β` (paper §3, "Final computation and communication
+//! costs"): F flops at γ seconds each, L messages at α seconds latency,
+//! W words at β seconds each. The paper distinguishes γ_sparse ≫ γ_dense
+//! ("most of Cov's cost comes from sparse-dense matrix multiplications,
+//! which have higher time per flop") — that distinction is what delays
+//! the Cov/Obs crossover past Lemma 3.1's prediction in Figure 2, so we
+//! model it explicitly.
+
+/// Machine constants: seconds per flop / message / word.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MachineParams {
+    /// Seconds to initiate one message (latency), the paper's α.
+    pub alpha: f64,
+    /// Seconds to transfer one word (8-byte f64), the paper's β.
+    pub beta: f64,
+    /// Seconds per flop in dense-dense multiplication.
+    pub gamma_dense: f64,
+    /// Seconds per flop in sparse-dense multiplication (≫ γ_dense).
+    pub gamma_sparse: f64,
+}
+
+impl MachineParams {
+    /// Edison-like defaults, per MPI process (2 processes/node on two
+    /// 12-core Xeon E5-2695v2): ~10 GFLOP/s effective dense rate per
+    /// process, ~8× worse per-flop rate for irregular sparse-dense,
+    /// ~1 µs MPI latency, ~8 GB/s injection bandwidth (1 ns per 8-byte
+    /// word). Ratios, not absolutes, drive every figure's shape.
+    pub fn edison_like() -> Self {
+        MachineParams {
+            alpha: 1.0e-6,
+            beta: 1.0e-9,
+            gamma_dense: 1.0e-10,
+            gamma_sparse: 8.0e-10,
+        }
+    }
+
+    /// Calibrate γ_dense from a measured local GEMM rate (flops/sec) on
+    /// this host, keeping the Edison-like α/β/γ_sparse ratios.
+    pub fn calibrated(dense_flops_per_sec: f64) -> Self {
+        let gamma_dense = 1.0 / dense_flops_per_sec;
+        MachineParams {
+            alpha: 1.0e-6,
+            beta: 1.0e-9,
+            gamma_dense,
+            gamma_sparse: 8.0 * gamma_dense,
+        }
+    }
+}
+
+impl Default for MachineParams {
+    fn default() -> Self {
+        Self::edison_like()
+    }
+}
+
+/// Per-rank tallies of the four cost components.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// Messages sent by this rank (the paper's per-processor L).
+    pub messages: u64,
+    /// Words (f64 elements) sent by this rank (the paper's W).
+    pub words: u64,
+    /// Dense-dense flops executed by this rank.
+    pub flops_dense: u64,
+    /// Sparse-dense flops executed by this rank.
+    pub flops_sparse: u64,
+}
+
+impl Counters {
+    /// Modeled wall time of this rank: F·γ + L·α + W·β.
+    pub fn modeled_time(&self, m: &MachineParams) -> f64 {
+        self.flops_dense as f64 * m.gamma_dense
+            + self.flops_sparse as f64 * m.gamma_sparse
+            + self.messages as f64 * m.alpha
+            + self.words as f64 * m.beta
+    }
+
+    /// Communication-only modeled time (L·α + W·β).
+    pub fn comm_time(&self, m: &MachineParams) -> f64 {
+        self.messages as f64 * m.alpha + self.words as f64 * m.beta
+    }
+
+    /// Component-wise sum.
+    pub fn add(&mut self, other: &Counters) {
+        self.messages += other.messages;
+        self.words += other.words;
+        self.flops_dense += other.flops_dense;
+        self.flops_sparse += other.flops_sparse;
+    }
+}
+
+/// Aggregate view over all ranks of a run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostSummary {
+    /// Critical-path modeled time: max over ranks.
+    pub time: f64,
+    /// Communication-only critical path.
+    pub comm_time: f64,
+    /// Totals across ranks (the quantities in the paper's lemmas).
+    pub total: Counters,
+    /// Per-rank maxima (per-processor critical-path counts).
+    pub max_per_rank: Counters,
+}
+
+impl CostSummary {
+    pub fn from_counters(per_rank: &[Counters], m: &MachineParams) -> Self {
+        let mut s = CostSummary::default();
+        for c in per_rank {
+            s.time = s.time.max(c.modeled_time(m));
+            s.comm_time = s.comm_time.max(c.comm_time(m));
+            s.total.add(c);
+            s.max_per_rank.messages = s.max_per_rank.messages.max(c.messages);
+            s.max_per_rank.words = s.max_per_rank.words.max(c.words);
+            s.max_per_rank.flops_dense = s.max_per_rank.flops_dense.max(c.flops_dense);
+            s.max_per_rank.flops_sparse = s.max_per_rank.flops_sparse.max(c.flops_sparse);
+        }
+        s
+    }
+}
+
+/// Re-export for `CostModel` naming used in docs/examples.
+pub type CostModel = MachineParams;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modeled_time_is_linear_combination() {
+        let m = MachineParams { alpha: 2.0, beta: 3.0, gamma_dense: 5.0, gamma_sparse: 7.0 };
+        let c = Counters { messages: 1, words: 10, flops_dense: 100, flops_sparse: 1000 };
+        assert_eq!(c.modeled_time(&m), 2.0 + 30.0 + 500.0 + 7000.0);
+        assert_eq!(c.comm_time(&m), 32.0);
+    }
+
+    #[test]
+    fn summary_takes_max_and_total() {
+        let m = MachineParams { alpha: 1.0, beta: 0.0, gamma_dense: 0.0, gamma_sparse: 0.0 };
+        let a = Counters { messages: 4, words: 1, flops_dense: 0, flops_sparse: 0 };
+        let b = Counters { messages: 2, words: 9, flops_dense: 3, flops_sparse: 0 };
+        let s = CostSummary::from_counters(&[a, b], &m);
+        assert_eq!(s.time, 4.0);
+        assert_eq!(s.total.messages, 6);
+        assert_eq!(s.total.words, 10);
+        assert_eq!(s.max_per_rank.messages, 4);
+        assert_eq!(s.max_per_rank.words, 9);
+    }
+
+    #[test]
+    fn edison_like_ordering() {
+        let m = MachineParams::edison_like();
+        assert!(m.gamma_dense < m.gamma_sparse);
+        assert!(m.gamma_sparse < m.beta);
+        assert!(m.beta < m.alpha);
+    }
+}

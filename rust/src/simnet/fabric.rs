@@ -1,0 +1,250 @@
+//! Fabric: spawn P simulated ranks, run a rank program on each, join, and
+//! collect results + metered costs.
+
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier};
+
+use super::comm::{Comm, Msg};
+use super::cost::{CostSummary, Counters, MachineParams};
+
+/// A P-rank simulated machine.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    p: usize,
+    machine: MachineParams,
+}
+
+/// Results of one fabric run: per-rank return values and counters.
+#[derive(Debug)]
+pub struct SimRun<T> {
+    pub results: Vec<T>,
+    pub counters: Vec<Counters>,
+    pub machine: MachineParams,
+}
+
+impl<T> SimRun<T> {
+    /// Critical-path modeled time and totals under the run's machine.
+    pub fn summary(&self) -> CostSummary {
+        CostSummary::from_counters(&self.counters, &self.machine)
+    }
+
+    /// Summary under a different machine (re-pricing the same counts).
+    pub fn summary_with(&self, m: &MachineParams) -> CostSummary {
+        CostSummary::from_counters(&self.counters, m)
+    }
+}
+
+impl Fabric {
+    pub fn new(p: usize) -> Self {
+        Fabric { p, machine: MachineParams::default() }
+    }
+
+    pub fn with_machine(p: usize, machine: MachineParams) -> Self {
+        Fabric { p, machine }
+    }
+
+    pub fn size(&self) -> usize {
+        self.p
+    }
+
+    pub fn machine(&self) -> MachineParams {
+        self.machine
+    }
+
+    /// Run `program(comm) -> T` on every rank concurrently; returns
+    /// rank-indexed results and counters. The program receives a
+    /// [`Comm`] wired to all other ranks.
+    ///
+    /// Ranks are OS threads with channel links: numerics are genuinely
+    /// distributed (data is partitioned; nothing is shared), while the
+    /// single-host execution keeps the runs deterministic and portable.
+    pub fn run<T, F>(&self, program: F) -> SimRun<T>
+    where
+        T: Send + 'static,
+        F: Fn(&mut Comm) -> T + Send + Sync + 'static,
+    {
+        let p = self.p;
+        let (senders, receivers): (Vec<_>, Vec<_>) = (0..p).map(|_| mpsc::channel::<Msg>()).unzip();
+        let barrier = Arc::new(Barrier::new(p));
+        let tags = Arc::new(AtomicU64::new(0));
+        let program = Arc::new(program);
+
+        let mut handles = Vec::with_capacity(p);
+        for (rank, receiver) in receivers.into_iter().enumerate() {
+            let senders = senders.clone();
+            let barrier = barrier.clone();
+            let tags = tags.clone();
+            let program = program.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rank-{rank}"))
+                    .stack_size(8 << 20)
+                    .spawn(move || {
+                        let mut comm = Comm::new(rank, p, senders, receiver, barrier, tags);
+                        let out = program(&mut comm);
+                        (out, comm.counters)
+                    })
+                    .expect("spawn rank thread"),
+            );
+        }
+        drop(senders);
+
+        let mut results = Vec::with_capacity(p);
+        let mut counters = Vec::with_capacity(p);
+        for h in handles {
+            let (out, c) = h.join().expect("rank panicked");
+            results.push(out);
+            counters.push(c);
+        }
+        SimRun { results, counters, machine: self.machine }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_shift_delivers_and_meters() {
+        let p = 4;
+        let run = Fabric::new(p).run(move |comm| {
+            let r = comm.rank();
+            let next = (r + 1) % comm.size();
+            let prev = (r + comm.size() - 1) % comm.size();
+            let got = comm.sendrecv(next, prev, 7, vec![r as f64; 3]);
+            got[0] as usize
+        });
+        // Everyone receives their left neighbour's rank.
+        for (r, &got) in run.results.iter().enumerate() {
+            assert_eq!(got, (r + p - 1) % p);
+        }
+        for c in &run.counters {
+            assert_eq!(c.messages, 1);
+            assert_eq!(c.words, 3);
+        }
+    }
+
+    #[test]
+    fn self_send_not_metered() {
+        let run = Fabric::new(2).run(|comm| {
+            let r = comm.rank();
+            let got = comm.sendrecv(r, r, 1, vec![42.0]);
+            got[0]
+        });
+        assert!(run.results.iter().all(|&v| v == 42.0));
+        assert!(run.counters.iter().all(|c| c.messages == 0 && c.words == 0));
+    }
+
+    #[test]
+    fn out_of_order_tags_are_buffered() {
+        let run = Fabric::new(2).run(|comm| {
+            if comm.rank() == 0 {
+                comm.send(1, 10, vec![1.0]);
+                comm.send(1, 20, vec![2.0]);
+                0.0
+            } else {
+                // Receive in reverse tag order.
+                let b = comm.recv(0, 20);
+                let a = comm.recv(0, 10);
+                a[0] * 10.0 + b[0]
+            }
+        });
+        assert_eq!(run.results[1], 12.0);
+    }
+
+    #[test]
+    fn allgather_collects_in_team_order() {
+        let run = Fabric::new(4).run(|comm| {
+            let team = vec![0, 1, 2, 3];
+            let parts = comm.allgather(&team, 5, vec![comm.rank() as f64]);
+            parts.iter().map(|p| p[0]).collect::<Vec<_>>()
+        });
+        for res in &run.results {
+            assert_eq!(res, &[0.0, 1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn sum_reduce_sums_elementwise() {
+        let run = Fabric::new(3).run(|comm| {
+            let team = vec![0, 1, 2];
+            comm.sum_reduce(&team, 9, vec![comm.rank() as f64, 1.0])
+        });
+        for res in &run.results {
+            assert_eq!(res, &vec![3.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn subteam_collectives_do_not_cross() {
+        let run = Fabric::new(4).run(|comm| {
+            let team = if comm.rank() < 2 { vec![0, 1] } else { vec![2, 3] };
+            comm.sum_reduce(&team, 11, vec![comm.rank() as f64])
+        });
+        assert_eq!(run.results[0], vec![1.0]);
+        assert_eq!(run.results[3], vec![5.0]);
+    }
+
+    #[test]
+    fn bruck_matches_direct() {
+        for p in [2usize, 4, 8] {
+            let run = Fabric::new(p).run(move |comm| {
+                let team: Vec<usize> = (0..comm.size()).collect();
+                let r = comm.rank() as f64;
+                // parts[i] = [100*me + i] * 2
+                let parts: Vec<Vec<f64>> =
+                    (0..p).map(|i| vec![100.0 * r + i as f64, -1.0]).collect();
+                let got = comm.alltoall_bruck(&team, 50, parts.clone());
+                let direct = comm.alltoall_direct(&team, 500, parts);
+                (got, direct)
+            });
+            for (r, (got, direct)) in run.results.iter().enumerate() {
+                assert_eq!(got, direct, "p={p} rank={r}");
+                for (src, blk) in got.iter().enumerate() {
+                    assert_eq!(blk[0], 100.0 * src as f64 + r as f64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bruck_message_count_is_log2() {
+        let p = 8;
+        let run = Fabric::new(p).run(move |comm| {
+            let team: Vec<usize> = (0..comm.size()).collect();
+            let parts: Vec<Vec<f64>> = (0..p).map(|i| vec![i as f64; 4]).collect();
+            comm.alltoall_bruck(&team, 1, parts);
+        });
+        for c in &run.counters {
+            assert_eq!(c.messages, 3, "log2(8) rounds");
+            // Each round carries q/2 = 4 blocks of 4 words.
+            assert_eq!(c.words, 3 * 4 * 4);
+        }
+    }
+
+    #[test]
+    fn exchange_irregular() {
+        let run = Fabric::new(3).run(|comm| {
+            // Ring: everyone sends to (r+1)%3, expects from (r+2)%3.
+            let r = comm.rank();
+            let to = (r + 1) % 3;
+            let from = (r + 2) % 3;
+            let got = comm.exchange(77, vec![(to, vec![r as f64])], &[from]);
+            got[0].1[0]
+        });
+        assert_eq!(run.results, vec![2.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn flop_counting() {
+        let run = Fabric::new(2).run(|comm| {
+            comm.count_flops_dense(100);
+            comm.count_flops_sparse(7);
+        });
+        for c in &run.counters {
+            assert_eq!(c.flops_dense, 100);
+            assert_eq!(c.flops_sparse, 7);
+        }
+    }
+}

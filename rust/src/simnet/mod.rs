@@ -1,0 +1,29 @@
+//! Simulated message-passing fabric — the MPI-over-Cray substitute.
+//!
+//! The paper's experiments ran MPI on Cray XC30 supercomputers; none of
+//! that hardware exists here, and the paper's *claims* (Lemmas 3.1–3.5,
+//! Figures 2–4) are statements about message, word, and flop counts under
+//! the classic `T = F·γ + L·α + W·β` model. This module therefore gives
+//! each simulated rank a real OS thread and real channel-based
+//! communication (distributed numerics are genuinely exercised, not
+//! faked), while **every send is metered** into per-rank α/β/γ counters:
+//!
+//! - [`cost::MachineParams`] — α (per message), β (per word),
+//!   γ_dense/γ_sparse (per flop, matching the paper's observation that
+//!   γ_sparse ≫ γ_dense drives the Cov/Obs crossover);
+//! - [`cost::Counters`] — per-rank tallies; modeled runtime is the max
+//!   over ranks of `F·γ + L·α + W·β` (critical path), totals are also
+//!   reported (the paper quotes totals in its lemmas).
+//!
+//! Collectives are built from point-to-point sends so their costs accrue
+//! naturally; the all-to-all used by the distributed transpose has both a
+//! direct pairwise variant and a Bruck log-round variant (the paper's
+//! transpose analysis assumes the latter: `log₂ Q` messages).
+
+pub mod comm;
+pub mod cost;
+pub mod fabric;
+
+pub use comm::{Comm, TeamComm};
+pub use cost::{Counters, MachineParams};
+pub use fabric::{Fabric, SimRun};

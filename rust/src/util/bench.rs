@@ -1,0 +1,84 @@
+//! Measurement helpers for the `harness = false` benches (criterion is
+//! not vendored in this offline image): warmup + repeated timing with
+//! min/median/mean reporting.
+
+use std::time::Instant;
+
+/// Summary of repeated timings, in seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub max: f64,
+    pub reps: usize,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> BenchStats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        BenchStats {
+            min: samples[0],
+            median: samples[n / 2],
+            mean: samples.iter().sum::<f64>() / n as f64,
+            max: samples[n - 1],
+            reps: n,
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "min {:.4}s  median {:.4}s  mean {:.4}s  (n={})",
+            self.min, self.median, self.mean, self.reps
+        )
+    }
+}
+
+/// Time `f` `reps` times after `warmup` unmeasured runs. The closure's
+/// result is returned from the last rep to keep the work observable.
+pub fn time_fn<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> (BenchStats, T) {
+    assert!(reps > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    let mut last = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let out = std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        last = Some(out);
+    }
+    (BenchStats::from_samples(samples), last.unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = BenchStats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn time_fn_runs_and_returns() {
+        let mut count = 0;
+        let (stats, out) = time_fn(1, 3, || {
+            count += 1;
+            count
+        });
+        assert_eq!(stats.reps, 3);
+        assert_eq!(out, 4); // 1 warmup + 3 reps
+        assert!(stats.min >= 0.0);
+    }
+}

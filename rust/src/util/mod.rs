@@ -1,0 +1,11 @@
+//! Small self-contained utilities standing in for crates unavailable in
+//! this offline environment: benchmark timing/statistics (no criterion),
+//! an ASCII table printer for the paper-figure benches, and a property
+//! testing harness (no proptest).
+
+pub mod bench;
+pub mod proptest;
+pub mod table;
+
+pub use bench::{time_fn, BenchStats};
+pub use table::Table;

@@ -1,0 +1,57 @@
+//! A tiny property-testing harness (proptest is not vendored offline):
+//! run a property over many seeded random cases, report the first
+//! failing seed for reproduction. Used by the invariant tests on
+//! routing/layout/solver state.
+
+use crate::rng::Rng;
+
+/// Run `prop(case_rng)` for `cases` independent seeds derived from
+/// `seed`; panics with the failing case's seed on the first violation.
+pub fn check(seed: u64, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let mut meta = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed on case {case} (seed {case_seed}): {msg}");
+        }
+    }
+}
+
+/// Assert helper producing a `Result` for [`check`] properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(1, 25, |_rng| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(2, 10, |rng| {
+            let v = rng.uniform();
+            if v >= 0.0 {
+                Err("always fails".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

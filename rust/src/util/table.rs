@@ -1,0 +1,75 @@
+//! Minimal ASCII table printer: the benches print the same rows/series
+//! the paper's tables and figures report.
+
+/// Column-aligned ASCII table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |f: &mut std::fmt::Formatter<'_>, cells: &[String]| -> std::fmt::Result {
+            for (c, cell) in cells.iter().enumerate() {
+                write!(f, "| {:width$} ", cell, width = widths[c])?;
+            }
+            writeln!(f, "|")
+        };
+        line(f, &self.header)?;
+        for (c, w) in widths.iter().enumerate() {
+            write!(f, "|{:-<width$}", "", width = w + 2)?;
+            if c + 1 == ncol {
+                writeln!(f, "|")?;
+            }
+        }
+        for row in &self.rows {
+            line(f, row)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["p", "time"]);
+        t.row(vec!["10".into(), "1.5".into()]);
+        t.row(vec!["1000".into(), "12.25".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| p    | time  |"), "{s}");
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_rows() {
+        Table::new(&["a"]).row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,104 @@
+//! PJRT-executed AOT artifacts vs their native Rust twins: the L1/L2
+//! layers (Pallas kernels lowered through JAX) must agree with the L3
+//! fallback to near machine precision for every artifact in the
+//! manifest. Skips (with a notice) when `make artifacts` has not run.
+
+use hpconcord::concord::{fit_single_node, single_node::fit_single_node_with_engine, ConcordConfig, Variant};
+use hpconcord::linalg::Mat;
+use hpconcord::prelude::*;
+use hpconcord::runtime::{native, Engine};
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(_) => {
+            eprintln!("skipping PJRT tests: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn trial_artifacts_match_native_at_every_size() {
+    let Some(mut engine) = engine() else { return };
+    for p in engine.trial_sizes() {
+        let mut rng = Rng::new(p as u64);
+        let prob = gen::chain_problem(p, 50, &mut rng);
+        let s = native::gram(&prob.x);
+        let mut omega = Mat::eye(p);
+        // Take one genuine prox step first so the trial sees a non-trivial
+        // sparse iterate.
+        let w = native::w_step(&omega, &s);
+        let (grad, g0) = native::gradobj(&omega, &w, 0.1);
+        omega = native::trial(&omega, &grad, &s, g0, 0.25, 0.3, 0.1).omega_new;
+        let w = native::w_step(&omega, &s);
+        let (grad, g0) = native::gradobj(&omega, &w, 0.1);
+
+        for tau in [1.0, 0.5, 0.125] {
+            let nat = native::trial(&omega, &grad, &s, g0, tau, 0.3, 0.1);
+            let pjrt = engine.trial(&omega, &grad, &s, g0, tau, 0.3, 0.1).unwrap();
+            assert!(
+                pjrt.omega_new.max_abs_diff(&nat.omega_new) < 1e-10,
+                "p={p} tau={tau}: omega mismatch"
+            );
+            assert!(pjrt.w_new.max_abs_diff(&nat.w_new) < 1e-9, "p={p}: w mismatch");
+            assert!((pjrt.g_new - nat.g_new).abs() < 1e-8, "p={p}: g mismatch");
+            assert!((pjrt.rhs - nat.rhs).abs() < 1e-8, "p={p}: rhs mismatch");
+            assert_eq!(pjrt.accept, nat.accept, "p={p}: accept mismatch");
+        }
+    }
+}
+
+#[test]
+fn gradobj_artifacts_match_native() {
+    let Some(mut engine) = engine() else { return };
+    for p in engine.trial_sizes() {
+        let mut rng = Rng::new(100 + p as u64);
+        let prob = gen::chain_problem(p, 40, &mut rng);
+        let s = native::gram(&prob.x);
+        let omega = Mat::eye(p);
+        let w = native::w_step(&omega, &s);
+        let (g_nat, v_nat) = native::gradobj(&omega, &w, 0.2);
+        let (g_pjrt, v_pjrt) = engine.gradobj(&omega, &w, 0.2).unwrap();
+        assert!(g_pjrt.max_abs_diff(&g_nat) < 1e-10, "p={p}");
+        assert!((v_pjrt - v_nat).abs() < 1e-9, "p={p}");
+    }
+}
+
+#[test]
+fn gram_and_matmul_artifacts_match_native() {
+    let Some(mut engine) = engine() else { return };
+    // gram_n100_p256 (canonical shape from the manifest).
+    let mut rng = Rng::new(1);
+    let x = Mat::from_fn(100, 256, |_, _| rng.normal());
+    if let Ok(s_pjrt) = engine.gram(&x) {
+        assert!(s_pjrt.max_abs_diff(&native::gram(&x)) < 1e-10);
+    }
+    let a = Mat::from_fn(128, 128, |_, _| rng.normal());
+    let b = Mat::from_fn(128, 128, |_, _| rng.normal());
+    if let Ok(c_pjrt) = engine.matmul(&a, &b) {
+        assert!(c_pjrt.max_abs_diff(&a.matmul(&b)) < 1e-9);
+    }
+}
+
+/// The whole single-node solve, engine-backed vs native: identical
+/// iterate sequences (the fused trial is the entire inner loop).
+#[test]
+fn engine_backed_solve_matches_native_solve() {
+    let Some(mut engine) = engine() else { return };
+    let Some(&p) = engine.trial_sizes().first() else { return };
+    let mut rng = Rng::new(2);
+    let prob = gen::chain_problem(p, 80, &mut rng);
+    let cfg = ConcordConfig {
+        lambda1: 0.35,
+        lambda2: 0.1,
+        tol: 1e-5,
+        max_iter: 50,
+        variant: Variant::Cov,
+        ..Default::default()
+    };
+    let native_fit = fit_single_node(&prob.x, &cfg).unwrap();
+    let engine_fit = fit_single_node_with_engine(&prob.x, &cfg, &mut engine).unwrap();
+    assert_eq!(native_fit.iterations, engine_fit.iterations);
+    assert!(native_fit.omega.max_abs_diff(&engine_fit.omega) < 1e-9);
+}

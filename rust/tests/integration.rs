@@ -1,0 +1,146 @@
+//! Cross-module integration: generators → solvers → metrics →
+//! coordinator → clustering, at small but realistic sizes.
+
+use hpconcord::bigquic::{fit_bigquic_data, QuicConfig};
+use hpconcord::concord::{fit_distributed, fit_single_node, ConcordConfig, Variant};
+use hpconcord::coordinator::{run_sweep, select_by_density, GridSpec};
+use hpconcord::metrics::support_metrics;
+use hpconcord::prelude::*;
+
+/// Chain-graph support recovery end to end, with the distributed solver.
+#[test]
+fn distributed_fit_recovers_chain_support() {
+    let mut rng = Rng::new(10);
+    let problem = gen::chain_problem(64, 400, &mut rng);
+    let cfg = ConcordConfig {
+        lambda1: 0.3,
+        lambda2: 0.05,
+        tol: 1e-5,
+        variant: Variant::Auto,
+        ..Default::default()
+    };
+    let out = fit_distributed(&problem.x, &cfg, 8, 2, 2, MachineParams::edison_like());
+    let m = support_metrics(&out.fit.omega, &problem.omega0, 1e-8);
+    assert!(m.ppv > 0.85, "ppv {}", m.ppv);
+    assert!(m.recall > 0.85, "recall {}", m.recall);
+    assert!(out.cost.time > 0.0);
+}
+
+/// Cov and Obs agree with each other and the single-node path on a
+/// random-graph problem (three routes to the same estimator).
+#[test]
+fn three_solver_paths_agree_on_random_graph() {
+    let mut rng = Rng::new(11);
+    let problem = gen::random_problem(32, 64, 4, &mut rng);
+    let mk = |variant| ConcordConfig {
+        lambda1: 0.3,
+        lambda2: 0.1,
+        tol: 1e-6,
+        variant,
+        ..Default::default()
+    };
+    let single = fit_single_node(&problem.x, &mk(Variant::Cov)).unwrap();
+    let cov = fit_distributed(&problem.x, &mk(Variant::Cov), 4, 2, 2, MachineParams::default());
+    let obs = fit_distributed(&problem.x, &mk(Variant::Obs), 4, 1, 4, MachineParams::default());
+    assert!(single.omega.max_abs_diff(&cov.fit.omega) < 1e-8);
+    assert!(single.omega.max_abs_diff(&obs.fit.omega) < 1e-7);
+}
+
+/// BigQUIC and CONCORD, density-matched, both recover an easy chain; the
+/// second-order method uses far fewer (outer) iterations — Table 1's
+/// qualitative content.
+#[test]
+fn bigquic_vs_concord_iteration_profile() {
+    let mut rng = Rng::new(12);
+    let problem = gen::chain_problem(48, 600, &mut rng);
+    let bq = fit_bigquic_data(
+        &problem.x,
+        &QuicConfig { lambda: 0.12, tol: 1e-7, ..Default::default() },
+    )
+    .unwrap();
+    let cc = fit_single_node(
+        &problem.x,
+        &ConcordConfig { lambda1: 0.2, tol: 1e-5, ..Default::default() },
+    )
+    .unwrap();
+    assert!(bq.iterations < cc.iterations, "{} !< {}", bq.iterations, cc.iterations);
+    let mb = support_metrics(&bq.omega, &problem.omega0, 1e-6);
+    let mc = support_metrics(&cc.omega, &problem.omega0, 1e-6);
+    assert!(mb.recall > 0.9 && mc.recall > 0.9);
+}
+
+/// Sweep + model selection finds a λ with high PPV on a well-sampled
+/// problem (the §5 workflow in miniature).
+#[test]
+fn sweep_then_select_gives_good_estimate() {
+    let mut rng = Rng::new(13);
+    let problem = gen::chain_problem(40, 500, &mut rng);
+    let p = 40;
+    let target = (problem.omega0.nnz() - p) as f64 / ((p * p - p) as f64);
+    let grid = GridSpec { lambda1: vec![0.1, 0.2, 0.35, 0.55, 0.8], lambda2: vec![0.05] };
+    let base = ConcordConfig { tol: 1e-4, max_iter: 200, ..Default::default() };
+    let out = run_sweep(&problem.x, &grid, &base, 3);
+    let sel = select_by_density(&out, target).unwrap();
+    let m = support_metrics(&sel.fit.omega, &problem.omega0, 1e-8);
+    assert!(m.ppv > 0.8, "ppv {}", m.ppv);
+    assert!(m.recall > 0.8, "recall {}", m.recall);
+}
+
+/// Failure injection: degenerate inputs must not panic and must keep the
+/// estimator well-defined.
+#[test]
+fn degenerate_inputs_are_handled() {
+    // (a) constant column: its sample variance is 0, but the iterate's
+    // diagonal stays positive through the line search.
+    let mut x = Mat::zeros(20, 6);
+    let mut rng = Rng::new(14);
+    for i in 0..20 {
+        for j in 0..5 {
+            x.set(i, j, rng.normal());
+        }
+        x.set(i, 5, 3.0); // constant
+    }
+    let fit = fit_single_node(
+        &x,
+        &ConcordConfig { lambda1: 0.3, max_iter: 50, ..Default::default() },
+    )
+    .unwrap();
+    assert!(fit.omega.diag().iter().all(|&d| d > 0.0));
+    assert!(fit.objective.is_finite());
+
+    // (b) single sample.
+    let x1 = Mat::from_fn(1, 5, |_, j| j as f64 + 1.0);
+    let fit = fit_single_node(
+        &x1,
+        &ConcordConfig { lambda1: 0.5, max_iter: 30, ..Default::default() },
+    )
+    .unwrap();
+    assert!(fit.objective.is_finite());
+
+    // (c) duplicated (perfectly collinear) features.
+    let mut xd = Mat::zeros(30, 4);
+    for i in 0..30 {
+        let v = rng.normal();
+        xd.set(i, 0, v);
+        xd.set(i, 1, v);
+        xd.set(i, 2, rng.normal());
+        xd.set(i, 3, rng.normal());
+    }
+    let fit = fit_single_node(
+        &xd,
+        &ConcordConfig { lambda1: 0.2, max_iter: 80, ..Default::default() },
+    )
+    .unwrap();
+    assert!(fit.omega.diag().iter().all(|&d| d.is_finite() && d > 0.0));
+}
+
+/// Lemma 3.1's Auto selection reacts to the sample/dimension regime.
+#[test]
+fn auto_variant_switches_with_regime() {
+    let mut rng = Rng::new(15);
+    // Plenty of samples → Cov.
+    let many = gen::chain_problem(32, 256, &mut rng);
+    let cfg = ConcordConfig { lambda1: 0.3, max_iter: 30, variant: Variant::Auto, ..Default::default() };
+    let out = fit_distributed(&many.x, &cfg, 4, 1, 1, MachineParams::default());
+    assert_eq!(out.variant, Variant::Cov);
+}

@@ -1,0 +1,123 @@
+//! Integration tests: the simulated fabric's *measured* message/word
+//! counters against the paper's closed forms (Lemmas 3.2–3.4).
+//! The unit tests in `dist::mult15d` pin the single-multiply counts
+//! (Lemma 3.3) exactly; these tests check the solver-level scaling laws
+//! that Figures 2–3 rely on.
+
+use std::sync::Arc;
+
+use hpconcord::concord::{obs::fit_obs_rank, ConcordConfig, Variant};
+use hpconcord::dist::{rotate_parts, Block, RepGrid};
+use hpconcord::linalg::Mat;
+use hpconcord::prelude::*;
+
+fn fixed_budget_cfg() -> ConcordConfig {
+    ConcordConfig {
+        lambda1: 0.35,
+        lambda2: 0.1,
+        tol: 0.0,
+        max_iter: 6,
+        max_linesearch: 40,
+        variant: Variant::Obs,
+    }
+}
+
+fn obs_words_per_rank(p_ranks: usize, c_x: usize, c_o: usize, x: &Mat) -> u64 {
+    let x = Arc::new(x.clone());
+    let cfg = fixed_budget_cfg();
+    let run = Fabric::new(p_ranks).run(move |comm| fit_obs_rank(comm, &x, &cfg, c_x, c_o));
+    run.summary().max_per_rank.words
+}
+
+/// Lemma 3.4: Obs's dominant rotation-bandwidth term is s(t+1)·np/c_Ω —
+/// raising c_Ω cuts per-rank words. (The p²·c_Xc_Ω/P transpose term
+/// *grows* with replication in the paper's own model, so heavy combined
+/// replication is judged on modeled time, not raw words — see Fig. 3.)
+#[test]
+fn obs_bandwidth_scales_inversely_with_replication() {
+    let mut rng = Rng::new(1);
+    let problem = gen::chain_problem(64, 32, &mut rng);
+    let w11 = obs_words_per_rank(8, 1, 1, &problem.x);
+    let w12 = obs_words_per_rank(8, 1, 2, &problem.x);
+    assert!(w12 < w11, "c_Ω=2 should cut words: {w12} !< {w11}");
+}
+
+/// Lemma 3.3 at the operation level, large configuration: per-rank
+/// messages ≤ P/(c_R·c_F) and words ≤ nnz(R)/c_F exactly.
+#[test]
+fn lemma33_bounds_hold_at_scale() {
+    let p_ranks = 32;
+    for (c_r, c_f) in [(1usize, 1usize), (2, 4), (4, 2), (4, 8), (8, 4), (16, 2), (1, 32)] {
+        if c_r * c_f > p_ranks {
+            continue;
+        }
+        let grid_r = RepGrid::new(p_ranks, c_r);
+        let grid_f = RepGrid::new(p_ranks, c_f);
+        let elems = 12usize; // 3x4 part
+        let run = Fabric::new(p_ranks).run(move |comm| {
+            let my = Block::Dense(Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f64));
+            rotate_parts(comm, &grid_r, &grid_f, 0, &my, |_c, _i, _b| {});
+        });
+        let rounds = (p_ranks / (c_r * c_f)) as u64;
+        let nnz_r = (grid_r.teams() * elems) as u64;
+        for c in &run.counters {
+            assert!(c.messages <= rounds, "messages {} > {rounds} (c_R={c_r}, c_F={c_f})", c.messages);
+            assert!(
+                c.words <= nnz_r / c_f as u64,
+                "words {} > nnz(R)/c_F = {} (c_R={c_r}, c_F={c_f})",
+                c.words,
+                nnz_r / c_f as u64
+            );
+        }
+    }
+}
+
+/// Lemma 3.2: replication limits the transpose's *latency* — the
+/// cross-team exchange shrinks to log₂(T) partners (messages), which is
+/// the term the paper's analysis optimizes. (Per-rank words grow with c
+/// in the paper's model too: each replica holds, and must receive, a
+/// c×-larger block.)
+#[test]
+fn transpose_messages_shrink_with_replication() {
+    use hpconcord::dist::{transpose_block_rows, Layout1D};
+    let rows = 64;
+    let msgs = |c: usize| {
+        let grid = RepGrid::new(16, c);
+        let layout = Layout1D::new(rows, grid.teams());
+        let full = Arc::new(Mat::from_fn(rows, rows, |i, j| (i * rows + j) as f64));
+        let run = Fabric::new(16).run(move |comm| {
+            let (s, e) = layout.range(grid.team_of(comm.rank()));
+            let local = full.row_block(s, e);
+            transpose_block_rows(comm, &grid, 0, &local, &layout);
+        });
+        run.summary().max_per_rank.messages
+    };
+    let m1 = msgs(1); // log2(16) = 4 exchange messages
+    let m4 = msgs(4); // log2(4) + 3 allgather = 5... compare to m1 via exchange only
+    // The c=1 all-to-all group is 16 ranks; at c=4 it is 4 ranks. With
+    // Bruck both are logarithmic: 4 vs 2 (+3 team-sync messages).
+    assert_eq!(m1, 4, "log2(16) Bruck rounds");
+    assert_eq!(m4, 2 + 3, "log2(4) Bruck rounds + (c-1) allgather");
+}
+
+/// The end-to-end modeled time improves when the replication optimizer's
+/// choice is used instead of (1, 1) — the Figure 3 effect, measured.
+#[test]
+fn optimizer_choice_beats_naive_on_measured_counters() {
+    let mut rng = Rng::new(5);
+    let problem = gen::chain_problem(64, 16, &mut rng);
+    let machine = MachineParams::edison_like();
+    let run_cfg = |c_x: usize, c_o: usize| {
+        let x = Arc::new(problem.x.clone());
+        let cfg = fixed_budget_cfg();
+        let run = Fabric::with_machine(16, machine)
+            .run(move |comm| fit_obs_rank(comm, &x, &cfg, c_x, c_o));
+        run.summary().comm_time
+    };
+    let naive = run_cfg(1, 1);
+    let replicated = run_cfg(2, 4);
+    assert!(
+        replicated < naive,
+        "replicated comm time {replicated} !< naive {naive}"
+    );
+}
