@@ -41,7 +41,8 @@ fn main() {
         out.lambda1, out.lambda2, out.density, out.target_density
     );
     println!(
-        "hemisphere block structure: {:.2}% of estimated edges cross hemispheres (paper §S.3.3: ≈ 0)",
+        "hemisphere block structure: {:.2}% of estimated edges cross hemispheres \
+         (paper §S.3.3: ≈ 0)",
         100.0 * out.cross_hemisphere_fraction
     );
 

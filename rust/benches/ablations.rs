@@ -43,7 +43,9 @@ fn ablation_alltoall() {
         }
     }
     print!("{table}");
-    println!("(Bruck: log₂(P) messages at ~P/2·log₂(P)/(P-1)× the words — wins when α dominates)");
+    println!(
+        "(Bruck: log₂(P) messages at ~P/2·log₂(P)/(P-1)× the words — wins when α dominates)"
+    );
 }
 
 fn ablation_wstep() {

@@ -25,7 +25,11 @@ fn main() {
     // --- Table 2: best clusterings per method -------------------------
     let params = FmriParams::default();
     let out = run_fmri_study(&params);
-    println!("=== Table 2 (best clusterings; synthetic cortex, p={}, n={}) ===", 2 * params.p_hemi, params.samples);
+    println!(
+        "=== Table 2 (best clusterings; synthetic cortex, p={}, n={}) ===",
+        2 * params.p_hemi,
+        params.samples
+    );
     println!(
         "selected λ1={} λ2={}; density {:.4} (target {:.4}); cross-hemisphere edges {:.2}%",
         out.lambda1,
@@ -53,7 +57,8 @@ fn main() {
         (vec![0.2, 0.3, 0.45], vec![0.0, 0.1])
     };
     let mut rng = Rng::new(params.seed);
-    let cortex = synthetic_cortex(params.p_hemi, params.parcels, params.knn, params.samples, &mut rng);
+    let cortex =
+        synthetic_cortex(params.p_hemi, params.parcels, params.knn, params.samples, &mut rng);
     let base = ConcordConfig { tol: 1e-4, max_iter: 150, ..Default::default() };
     let sweep = run_sweep(
         &cortex.x,
@@ -62,7 +67,11 @@ fn main() {
         2,
     );
 
-    for (method_name, eps) in [("persistence ε=0", Some(0.0)), ("persistence ε=3", Some(3.0)), ("louvain k=0", None)] {
+    for (method_name, eps) in [
+        ("persistence ε=0", Some(0.0)),
+        ("persistence ε=3", Some(3.0)),
+        ("louvain k=0", None),
+    ] {
         for h in 0..2u8 {
             println!(
                 "\n=== S-table: {method_name}, {} hemisphere — Jaccard over (λ1, λ2) ===",
@@ -107,5 +116,7 @@ fn main() {
             print!("{t}");
         }
     }
-    println!("\n(paper S.9-S.16: scores peak at moderate λ and collapse to '—' at the sparse corner)");
+    println!(
+        "\n(paper S.9-S.16: scores peak at moderate λ and collapse to '—' at the sparse corner)"
+    );
 }

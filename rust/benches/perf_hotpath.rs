@@ -1,11 +1,12 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): local GEMM
-//! throughput (the MKL-replacement kernel under everything), sparse
-//! SpMM, the fused CONCORD elementwise passes, the distributed transpose,
-//! and PJRT-artifact vs native fused-trial latency.
+//! throughput (the MKL-replacement kernel under everything) serial and
+//! multithreaded, sparse SpMM, the fused CONCORD elementwise passes,
+//! the single-node solver at several thread counts, the distributed
+//! transpose, and PJRT-artifact vs native fused-trial latency.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 
-use hpconcord::concord::ops;
+use hpconcord::concord::{fit_single_node, ops, ConcordConfig, Variant};
 use hpconcord::linalg::{Csr, Mat};
 use hpconcord::prelude::*;
 use hpconcord::runtime::{native, Engine};
@@ -17,6 +18,7 @@ fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
 
 fn main() {
     let mut rng = Rng::new(0xBE);
+    let host_threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
 
     // --- Dense GEMM ----------------------------------------------------
     println!("=== L3 local GEMM (the paper's MKL substitute) ===");
@@ -31,6 +33,30 @@ fn main() {
             format!("{:.2}", stats.median * 1e3),
             format!("{gflops:.2}"),
         ]);
+    }
+    print!("{table}");
+
+    // --- Dense GEMM, node-local threads (the paper's per-node t) --------
+    println!("\n=== GEMM, intra-node threads (host has {host_threads}) ===");
+    let mut table = Table::new(&["size", "t", "median (ms)", "GFLOP/s", "vs t=1"]);
+    for p in [512usize, 1024] {
+        let a = random_mat(&mut rng, p, p);
+        let b = random_mat(&mut rng, p, p);
+        let mut t1_median = 0.0;
+        for threads in [1usize, 2, 4] {
+            let (stats, _) = time_fn(1, 5, || a.matmul_mt(&b, threads));
+            if threads == 1 {
+                t1_median = stats.median;
+            }
+            let gflops = 2.0 * (p as f64).powi(3) / stats.median / 1e9;
+            table.row(vec![
+                format!("{p}³"),
+                threads.to_string(),
+                format!("{:.2}", stats.median * 1e3),
+                format!("{gflops:.2}"),
+                format!("{:.2}×", t1_median / stats.median),
+            ]);
+        }
     }
     print!("{table}");
 
@@ -57,6 +83,37 @@ fn main() {
             format!("{:.2}", stats.median * 1e3),
             format!("{gflops:.2}"),
         ]);
+    }
+    print!("{table}");
+
+    // --- SpMM, node-local threads --------------------------------------
+    println!("\n=== SpMM, intra-node threads (p=1024, density 0.05) ===");
+    let mut table = Table::new(&["t", "median (ms)", "vs t=1"]);
+    {
+        let p = 1024usize;
+        let dense = Mat::from_fn(p, p, |i, j| {
+            if i == j {
+                2.0
+            } else if rng.uniform() < 0.05 {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let omega = Csr::from_dense(&dense, 0.0);
+        let s = random_mat(&mut rng, p, p);
+        let mut t1_median = 0.0;
+        for threads in [1usize, 2, 4] {
+            let (stats, _) = time_fn(1, 5, || omega.spmm_mt(&s, threads));
+            if threads == 1 {
+                t1_median = stats.median;
+            }
+            table.row(vec![
+                threads.to_string(),
+                format!("{:.2}", stats.median * 1e3),
+                format!("{:.2}×", t1_median / stats.median),
+            ]);
+        }
     }
     print!("{table}");
 
@@ -124,6 +181,37 @@ fn main() {
         }
         _ => println!("PJRT trial     : artifacts/ not built — run `make artifacts`"),
     }
+
+    // --- Single-node solver across thread counts -------------------------
+    println!("\n=== single-node solver, intra-node threads (chain p=512, fixed 3 iters) ===");
+    let mut table = Table::new(&["t", "median (s)", "vs t=1"]);
+    {
+        let mut rng3 = Rng::new(0x7E);
+        let problem = gen::chain_problem(512, 200, &mut rng3);
+        let mut t1_median = 0.0;
+        for threads in [1usize, 2, 4] {
+            let cfg = ConcordConfig {
+                lambda1: 0.3,
+                lambda2: 0.1,
+                tol: 0.0,
+                max_iter: 3, // fixed budget: isolate per-iteration cost
+                variant: Variant::Cov,
+                threads,
+                ..Default::default()
+            };
+            let (stats, fit) = time_fn(0, 3, || fit_single_node(&problem.x, &cfg).unwrap());
+            if threads == 1 {
+                t1_median = stats.median;
+            }
+            assert_eq!(fit.iterations, 3);
+            table.row(vec![
+                threads.to_string(),
+                format!("{:.3}", stats.median),
+                format!("{:.2}×", t1_median / stats.median),
+            ]);
+        }
+    }
+    print!("{table}");
 
     // --- Distributed transpose ------------------------------------------
     println!("\n=== distributed transpose (16 ranks, c=2, 512×512) ===");

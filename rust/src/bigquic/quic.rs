@@ -30,11 +30,15 @@ pub struct QuicConfig {
     pub cd_sweeps: usize,
     /// Armijo slope parameter σ.
     pub sigma: f64,
+    /// Node-local worker threads for the per-iteration W = Ω⁻¹ column
+    /// solves and the gram step (the coordinate-descent sweep itself is
+    /// inherently sequential). Results are identical at any value.
+    pub threads: usize,
 }
 
 impl Default for QuicConfig {
     fn default() -> Self {
-        QuicConfig { lambda: 0.3, tol: 1e-6, max_iter: 100, cd_sweeps: 6, sigma: 1e-3 }
+        QuicConfig { lambda: 0.3, tol: 1e-6, max_iter: 100, cd_sweeps: 6, sigma: 1e-3, threads: 1 }
     }
 }
 
@@ -62,7 +66,7 @@ pub fn fit_bigquic(s: &Mat, cfg: &QuicConfig) -> Result<QuicFit> {
 
     for _k in 0..cfg.max_iter {
         iters += 1;
-        let w = inverse_spd(&omega)?;
+        let w = inverse_spd_mt(&omega, cfg.threads)?;
 
         // Free set from the gradient fixed-point condition.
         let lam = cfg.lambda;
@@ -163,7 +167,7 @@ pub fn fit_bigquic(s: &Mat, cfg: &QuicConfig) -> Result<QuicFit> {
 
 /// Fit from raw observations (forms S = XᵀX/n first).
 pub fn fit_bigquic_data(x: &Mat, cfg: &QuicConfig) -> Result<QuicFit> {
-    let s = crate::runtime::native::gram(x);
+    let s = crate::runtime::native::gram_mt(x, cfg.threads.max(1));
     fit_bigquic(&s, cfg)
 }
 
@@ -186,17 +190,50 @@ fn objective(omega: &Mat, s: &Mat, lambda: f64) -> Option<f64> {
 }
 
 /// Dense SPD inverse via Cholesky column solves.
+#[cfg_attr(not(test), allow(dead_code))]
 fn inverse_spd(a: &Mat) -> Result<Mat> {
+    inverse_spd_mt(a, 1)
+}
+
+/// [`inverse_spd`] with the column solves fanned out over `threads`
+/// node-local workers. The factorization is sequential; each of the p
+/// column solves is an independent run of the serial substitution
+/// kernels, so the inverse is bit-identical at any thread count.
+fn inverse_spd_mt(a: &Mat, threads: usize) -> Result<Mat> {
     let p = a.rows();
     let l = cholesky(a)?;
-    let mut inv = Mat::zeros(p, p);
-    for j in 0..p {
+    let solve_col = |j: usize| {
         let mut e = vec![0.0; p];
         e[j] = 1.0;
         let y = solve_lower(&l, &e);
-        let col = solve_lower_transpose(&l, &y);
-        for i in 0..p {
-            inv.set(i, j, col[i]);
+        solve_lower_transpose(&l, &y)
+    };
+    let mut inv = Mat::zeros(p, p);
+    // p³ solve work; below the spawn cutoff the column loop stays serial.
+    if threads <= 1 || p < 2 || p * p * p < crate::util::pool::SPAWN_MIN_WORK {
+        // Serial: write each solved column straight into the output.
+        for j in 0..p {
+            let col = solve_col(j);
+            for i in 0..p {
+                inv.set(i, j, col[i]);
+            }
+        }
+    } else {
+        // Parallel: workers return per-chunk column bundles (at most
+        // one chunk of columns buffered per worker), scattered into
+        // the row-major output in deterministic column order.
+        let ranges = crate::util::pool::chunk_ranges(p, threads, 1);
+        let chunks = crate::util::pool::par_map(&ranges, |_i, s, e| {
+            (s..e).map(solve_col).collect::<Vec<_>>()
+        });
+        let mut j = 0;
+        for chunk in chunks {
+            for col in chunk {
+                for i in 0..p {
+                    inv.set(i, j, col[i]);
+                }
+                j += 1;
+            }
         }
     }
     Ok(inv)
@@ -282,6 +319,20 @@ mod tests {
         .unwrap();
         assert!(cholesky(&fit.omega).is_ok());
         assert!(fit.omega.max_abs_diff(&fit.omega.transpose()) < 1e-10);
+    }
+
+    #[test]
+    fn threaded_fit_is_byte_identical_to_serial() {
+        let mut rng = Rng::new(6);
+        let prob = gen::chain_problem(10, 120, &mut rng);
+        let base = QuicConfig { lambda: 0.2, ..Default::default() };
+        let t1 = fit_bigquic_data(&prob.x, &base).unwrap();
+        for threads in [2usize, 4] {
+            let tn = fit_bigquic_data(&prob.x, &QuicConfig { threads, ..base }).unwrap();
+            assert_eq!(t1.iterations, tn.iterations, "threads={threads}");
+            assert!(t1.omega.max_abs_diff(&tn.omega) == 0.0, "threads={threads}");
+            assert_eq!(t1.objective.to_bits(), tn.objective.to_bits());
+        }
     }
 
     #[test]

@@ -100,11 +100,13 @@ COMMANDS:
            --workload chain|random  --p N --n N [--deg N] [--seed S]
            --lambda1 F --lambda2 F [--tol F] [--max-iter N]
            --mode single|dist  [--ranks P --cx C --comega C]
+           [--threads N|auto]  (node-local worker threads, the paper's t)
            [--variant cov|obs|auto]  [--config FILE]  [--artifacts DIR]
   sweep    (λ1, λ2) grid sweep via the coordinator
            --l1 a,b,c --l2 a,b  [--workers N]  + workload options
   cost     Analytic cost model (Lemmas 3.1–3.5) over replication grid
-           --p N --n N --s F --t F --d F --procs P [--variant cov|obs]
+           --p N --n N --s F --t F --d F --procs P [--threads N]
+           [--variant cov|obs]
   fmri     Synthetic-cortex parcellation pipeline (paper §5, scaled)
            [--p-hemi N] [--parcels K] [--samples N] [--seed S]
   engine   List and smoke-run the AOT artifacts through PJRT

@@ -46,6 +46,10 @@ pub fn fit_cov_rank(
     let my_o = grid_o.team_of(rank);
     let x_layer_group = grid_x.layer_members(grid_x.layer_of(rank));
     let mut tags = TagGen::new();
+    // Node-local threads (the paper's per-node t): every local multiply
+    // and fused pass below fans out over this many workers; results are
+    // bit-identical at any value, and the metered L/W never change.
+    let threads = cfg.threads.max(1);
 
     let (cs, ce) = lx.range(my_x); // my column range (and X-layout row range)
     let width = ce - cs;
@@ -66,7 +70,7 @@ pub fn fit_cov_rank(
         |comm, _idx, blk| {
             let a = blk.as_dense();
             comm.count_flops_dense(2 * (a.rows() * n * width) as u64);
-            a.matmul(&x_fixed)
+            a.matmul_mt(&x_fixed, threads)
         },
     );
     s_cols.scale(1.0 / n as f64); // p × width
@@ -91,7 +95,7 @@ pub fn fit_cov_rank(
             &lo,
             width,
             |comm, _idx, blk| {
-                let (out, fd, fs) = blk.matmul(&s_cols);
+                let (out, fd, fs) = blk.matmul_mt(&s_cols, threads);
                 comm.count_flops_dense(fd);
                 comm.count_flops_sparse(fs);
                 out
@@ -102,7 +106,7 @@ pub fn fit_cov_rank(
     // Objective from X-layout pieces: tr(WΩ) = Σ W(:,cols)∘Ω(:,cols) and
     // Ω(:,cols) = Ω(cols,:)ᵀ by symmetry of the iterate.
     let objective = |comm: &mut Comm, tags: &mut TagGen, om_x: &Mat, w_cols: &Mat| -> f64 {
-        let parts = match ops::diag_fro_parts_block(om_x, cs) {
+        let parts = match ops::diag_fro_parts_block_mt(om_x, cs, threads) {
             Some([logd, fro]) => {
                 let tr = w_cols.dot_elem(&om_x.transpose());
                 vec![0.0, logd, tr, fro]
@@ -127,7 +131,7 @@ pub fn fit_cov_rank(
         let wt_rows = w_cols.transpose(); // Wᵀ(cols,:) = my block rows of Wᵀ
         let (w_rows, _) = transpose_block_rows(comm, &grid_x, tags.next(10), &wt_rows, &lx);
 
-        let grad = ops::gradient_block(&omega_x, &w_rows, &wt_rows, cs, cfg.lambda2);
+        let grad = ops::gradient_block_mt(&omega_x, &w_rows, &wt_rows, cs, cfg.lambda2, threads);
         let g_prev = objective(comm, &mut tags, &omega_x, &w_cols);
 
         // Line search (Algorithm 2 lines 8-12).
@@ -135,7 +139,7 @@ pub fn fit_cov_rank(
         let mut accepted = None;
         for _ls in 0..cfg.max_linesearch {
             stats.trials += 1;
-            let omega_x_new = ops::prox_block(&omega_x, &grad, cs, tau, cfg.lambda1);
+            let omega_x_new = ops::prox_block_mt(&omega_x, &grad, cs, tau, cfg.lambda1, threads);
             // Back to the Ω grid for the rotation (free when c_X = c_Ω).
             let omega_o_new = redistribute_rows(
                 comm,
@@ -148,7 +152,7 @@ pub fn fit_cov_rank(
             );
             let w_new = w_step(comm, &mut tags, &omega_o_new);
             let g_new = objective(comm, &mut tags, &omega_x_new, &w_new);
-            let ls_local = ops::linesearch_parts_block(&omega_x, &omega_x_new, &grad);
+            let ls_local = ops::linesearch_parts_block_mt(&omega_x, &omega_x_new, &grad, threads);
             let ls = global_sum(comm, &x_layer_group, tags.next(10), ls_local.to_vec());
             let _ = &omega_o_new; // candidate lives only within the trial
             if ops::accepts(g_new, g_prev, [ls[0], ls[1]], tau) {
@@ -208,6 +212,7 @@ mod tests {
             max_iter: 200,
             max_linesearch: 40,
             variant: Variant::Cov,
+            threads: 1,
         }
     }
 

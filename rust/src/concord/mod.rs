@@ -65,6 +65,13 @@ pub struct ConcordConfig {
     /// Cap on line-search halvings per iteration.
     pub max_linesearch: usize,
     pub variant: Variant,
+    /// Node-local worker threads for every local kernel (the paper's
+    /// per-node `t`: §4 runs threaded MKL on 24 cores per node). Applies
+    /// to the single-node solver and to each simulated rank's local
+    /// multiplies and fused passes. Results are bit-identical at any
+    /// value — threading only changes wall-clock, never the estimate or
+    /// the metered communication (see `rust/tests/parallel_determinism.rs`).
+    pub threads: usize,
 }
 
 impl Default for ConcordConfig {
@@ -76,6 +83,7 @@ impl Default for ConcordConfig {
             max_iter: 500,
             max_linesearch: 40,
             variant: Variant::Auto,
+            threads: 1,
         }
     }
 }

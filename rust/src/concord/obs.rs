@@ -47,6 +47,10 @@ pub fn fit_obs_rank(
     let my_o = grid_o.team_of(rank);
     let o_layer_group = grid_o.layer_members(grid_o.layer_of(rank));
     let mut tags = TagGen::new();
+    // Node-local threads (the paper's per-node t): local multiplies and
+    // fused passes fan out over this many workers; bit-identical at any
+    // value, and the metered L/W never change.
+    let threads = cfg.threads.max(1);
 
     // My rotated operands: Xᵀ slab (k-rows) and X column slab.
     let (xs, xe) = lx.range(my_x);
@@ -74,20 +78,46 @@ pub fn fit_obs_rank(
                 let (ks, ke) = lx.range(idx);
                 let slab = blk.as_dense();
                 let mut out = Mat::zeros(my_rows, n);
-                let mut nnz_used = 0u64;
-                for i in 0..my_rows {
-                    let (cols, vals) = om_sparse.row(i);
-                    let orow = out.row_mut(i);
-                    for (&j, &v) in cols.iter().zip(vals) {
-                        if j >= ks && j < ke {
-                            nnz_used += 1;
-                            let srow = slab.row(j - ks);
-                            for t in 0..n {
-                                orow[t] += v * srow[t];
+                // Row-partitioned over the node-local pool: each output
+                // row is one serial run of the scatter kernel, so the
+                // result is bit-identical at any thread count; the nnz
+                // tally is an exact integer sum in chunk order.
+                let body = |s: usize, e: usize, orows: &mut [f64]| -> u64 {
+                    let mut nnz_used = 0u64;
+                    for i in s..e {
+                        let (cols, vals) = om_sparse.row(i);
+                        let orow = &mut orows[(i - s) * n..(i - s + 1) * n];
+                        for (&j, &v) in cols.iter().zip(vals) {
+                            if j >= ks && j < ke {
+                                nnz_used += 1;
+                                let srow = slab.row(j - ks);
+                                for t in 0..n {
+                                    orow[t] += v * srow[t];
+                                }
                             }
                         }
                     }
-                }
+                    nnz_used
+                };
+                let nnz_used: u64 = if threads <= 1
+                    || my_rows < 2
+                    || om_sparse.nnz() * n < crate::util::pool::SPAWN_MIN_WORK
+                {
+                    body(0, my_rows, out.data_mut())
+                } else {
+                    use std::sync::atomic::{AtomicU64, Ordering};
+                    let tally = AtomicU64::new(0);
+                    let ranges = crate::util::pool::chunk_ranges(my_rows, threads, 1);
+                    crate::util::pool::par_rows_mut(
+                        out.data_mut(),
+                        n,
+                        &ranges,
+                        |_i, s, e, orows| {
+                            tally.fetch_add(body(s, e, orows), Ordering::Relaxed);
+                        },
+                    );
+                    tally.load(Ordering::Relaxed)
+                };
                 comm.count_flops_sparse(2 * nnz_used * n as u64);
                 out
             },
@@ -100,7 +130,7 @@ pub fn fit_obs_rank(
                      om: &Mat,
                      y: &Mat|
      -> f64 {
-        let parts = match ops::diag_fro_parts_block(om, os) {
+        let parts = match ops::diag_fro_parts_block_mt(om, os, threads) {
             Some([logd, fro]) => vec![0.0, logd, y.fro2() / n as f64, fro],
             None => vec![1.0, 0.0, 0.0, 0.0],
         };
@@ -130,14 +160,14 @@ pub fn fit_obs_rank(
             |comm, _idx, blk| {
                 let xb = blk.as_dense();
                 comm.count_flops_dense(2 * (my_rows * n * xb.cols()) as u64);
-                y_fixed.matmul(&xb)
+                y_fixed.matmul_mt(xb, threads)
             },
         );
         z.scale(1.0 / n as f64);
         let (zt, _) = transpose_block_rows(comm, &grid_o, tags.next(10), &z, &lo);
 
         // Gradient and current objective.
-        let grad = ops::gradient_block(&omega, &z, &zt, os, cfg.lambda2);
+        let grad = ops::gradient_block_mt(&omega, &z, &zt, os, cfg.lambda2, threads);
         let g_prev = objective(comm, &mut tags, &omega, &y);
 
         // Backtracking line search (Algorithm 3 lines 8-12).
@@ -145,10 +175,10 @@ pub fn fit_obs_rank(
         let mut accepted = None;
         for _ls in 0..cfg.max_linesearch {
             stats.trials += 1;
-            let omega_new = ops::prox_block(&omega, &grad, os, tau, cfg.lambda1);
+            let omega_new = ops::prox_block_mt(&omega, &grad, os, tau, cfg.lambda1, threads);
             let y_new = y_step(comm, &mut tags, &omega_new);
             let g_new = objective(comm, &mut tags, &omega_new, &y_new);
-            let ls_local = ops::linesearch_parts_block(&omega, &omega_new, &grad);
+            let ls_local = ops::linesearch_parts_block_mt(&omega, &omega_new, &grad, threads);
             let ls = global_sum(comm, &o_layer_group, tags.next(10), ls_local.to_vec());
             if ops::accepts(g_new, g_prev, [ls[0], ls[1]], tau) {
                 accepted = Some((omega_new, y_new, g_new));
@@ -207,6 +237,7 @@ mod tests {
             max_iter: 200,
             max_linesearch: 40,
             variant: Variant::Obs,
+            threads: 1,
         }
     }
 
@@ -220,7 +251,15 @@ mod tests {
         let cfg = test_cfg();
         let reference = fit_single_node(&x, &cfg).unwrap();
 
-        for &(pr, cx, co) in &[(1usize, 1usize, 1usize), (4, 1, 1), (4, 2, 1), (4, 1, 2), (4, 2, 2), (8, 2, 4), (8, 4, 2)] {
+        for &(pr, cx, co) in &[
+            (1usize, 1usize, 1usize),
+            (4, 1, 1),
+            (4, 2, 1),
+            (4, 1, 2),
+            (4, 2, 2),
+            (8, 2, 4),
+            (8, 4, 2),
+        ] {
             let x = Arc::new(x.clone());
             let run = Fabric::new(pr)
                 .run(move |comm| fit_obs_rank(comm, &x, &cfg, cx, co));

@@ -7,57 +7,67 @@
 //! pins both against the same `ref.py` oracle semantics.
 
 use crate::linalg::Mat;
+use crate::util::pool::{chunk_ranges, par_map, par_rows_mut};
+
+/// Fixed reduction granularity for the multithreaded scalar passes.
+///
+/// The `_mt` reductions accumulate serially *within* 64-row blocks and
+/// then fold the block partials in ascending block order — a grouping
+/// that depends only on the slab shape, never on the thread count. That
+/// makes every `_mt` scalar result (objective, line-search pieces)
+/// **identical at any thread count**, which is what lets the solvers'
+/// line-search decisions — and therefore whole fits — be byte-for-byte
+/// reproducible as `threads` varies (see the determinism suite in
+/// `rust/tests/parallel_determinism.rs`).
+pub const REDUCE_BLOCK_ROWS: usize = 64;
+
+/// Per-block partials for a `rows`×`row_width` slab, computed on up to
+/// `threads` workers, returned in ascending block order. Slabs below
+/// the spawn cutoff run on the caller thread — with the identical
+/// block-ordered fold, so the value never depends on the path taken.
+fn block_partials<T: Send>(
+    rows: usize,
+    row_width: usize,
+    threads: usize,
+    per_block: impl Fn(usize, usize) -> T + Sync,
+) -> Vec<T> {
+    let nblocks = rows.div_ceil(REDUCE_BLOCK_ROWS).max(1);
+    let t = if rows * row_width < crate::util::pool::SPAWN_MIN_WORK {
+        1
+    } else {
+        threads.max(1)
+    };
+    let ranges = chunk_ranges(nblocks, t, 1);
+    let nested: Vec<Vec<T>> = par_map(&ranges, |_i, bs, be| {
+        (bs..be)
+            .map(|blk| {
+                let s = blk * REDUCE_BLOCK_ROWS;
+                let e = (s + REDUCE_BLOCK_ROWS).min(rows);
+                per_block(s, e.max(s))
+            })
+            .collect()
+    });
+    nested.into_iter().flatten().collect()
+}
 
 /// Gradient slab (Algorithm 2 line 6):
 /// G = −(Ω_D)⁻¹ + (W + Wᵀ)/2 + λ₂Ω, restricted to a row slab. `w` and
-/// `wt` are the matching slabs of W and Wᵀ.
+/// `wt` are the matching slabs of W and Wᵀ. Serial form of
+/// [`gradient_block_mt`] (same kernel, one worker).
 pub fn gradient_block(omega: &Mat, w: &Mat, wt: &Mat, row_offset: usize, lam2: f64) -> Mat {
-    let (rows, p) = omega.shape();
-    debug_assert_eq!(w.shape(), (rows, p));
-    debug_assert_eq!(wt.shape(), (rows, p));
-    let mut g = Mat::zeros(rows, p);
-    for i in 0..rows {
-        let orow = omega.row(i);
-        let wrow = w.row(i);
-        let wtrow = wt.row(i);
-        let grow = g.row_mut(i);
-        for j in 0..p {
-            grow[j] = 0.5 * (wrow[j] + wtrow[j]) + lam2 * orow[j];
-        }
-        let dcol = row_offset + i;
-        if dcol < p {
-            grow[dcol] -= 1.0 / orow[dcol];
-        }
-    }
-    g
+    gradient_block_mt(omega, w, wt, row_offset, lam2, 1)
 }
 
 /// Proximal step slab (Algorithm 2 line 9): soft-threshold Ω − τG at
 /// τλ₁ off the diagonal; the diagonal passes through un-thresholded
-/// (the ℓ₁ penalty is on Ω_X only).
+/// (the ℓ₁ penalty is on Ω_X only). Serial form of [`prox_block_mt`].
 pub fn prox_block(omega: &Mat, g: &Mat, row_offset: usize, tau: f64, lam1: f64) -> Mat {
-    let (rows, p) = omega.shape();
-    debug_assert_eq!(g.shape(), (rows, p));
-    let thresh = tau * lam1;
-    let mut out = Mat::zeros(rows, p);
-    for i in 0..rows {
-        let orow = omega.row(i);
-        let grow = g.row(i);
-        let dst = out.row_mut(i);
-        for j in 0..p {
-            let z = orow[j] - tau * grow[j];
-            dst[j] = soft(z, thresh);
-        }
-        let dcol = row_offset + i;
-        if dcol < p {
-            dst[dcol] = orow[dcol] - tau * grow[dcol];
-        }
-    }
-    out
+    prox_block_mt(omega, g, row_offset, tau, lam1, 1)
 }
 
 /// In-place fused prox (hot-path variant: no allocation). Writes into
-/// `out`, which must be pre-sized.
+/// `out`, which must be pre-sized. Serial form of
+/// [`prox_block_into_mt`].
 pub fn prox_block_into(
     omega: &Mat,
     g: &Mat,
@@ -66,21 +76,240 @@ pub fn prox_block_into(
     lam1: f64,
     out: &mut Mat,
 ) {
+    prox_block_into_mt(omega, g, row_offset, tau, lam1, out, 1)
+}
+
+/// [`gradient_block`] on `threads` node-local workers. Rows are
+/// independent, so the result is bit-identical at any thread count.
+pub fn gradient_block_mt(
+    omega: &Mat,
+    w: &Mat,
+    wt: &Mat,
+    row_offset: usize,
+    lam2: f64,
+    threads: usize,
+) -> Mat {
     let (rows, p) = omega.shape();
+    debug_assert_eq!(w.shape(), (rows, p));
+    debug_assert_eq!(wt.shape(), (rows, p));
+    let mut g = Mat::zeros(rows, p);
+    let body = |s: usize, e: usize, grows: &mut [f64]| {
+        for i in s..e {
+            let orow = omega.row(i);
+            let wrow = w.row(i);
+            let wtrow = wt.row(i);
+            let grow = &mut grows[(i - s) * p..(i - s + 1) * p];
+            for j in 0..p {
+                grow[j] = 0.5 * (wrow[j] + wtrow[j]) + lam2 * orow[j];
+            }
+            let dcol = row_offset + i;
+            if dcol < p {
+                grow[dcol] -= 1.0 / orow[dcol];
+            }
+        }
+    };
+    if threads <= 1 || rows < 2 || rows * p < crate::util::pool::SPAWN_MIN_WORK {
+        body(0, rows, g.data_mut());
+        return g;
+    }
+    let ranges = chunk_ranges(rows, threads, 1);
+    par_rows_mut(g.data_mut(), p, &ranges, |_i, s, e, grows| body(s, e, grows));
+    g
+}
+
+/// [`prox_block`] on `threads` node-local workers (bit-identical).
+pub fn prox_block_mt(
+    omega: &Mat,
+    g: &Mat,
+    row_offset: usize,
+    tau: f64,
+    lam1: f64,
+    threads: usize,
+) -> Mat {
+    let (rows, p) = omega.shape();
+    let mut out = Mat::zeros(rows, p);
+    prox_block_into_mt(omega, g, row_offset, tau, lam1, &mut out, threads);
+    out
+}
+
+/// [`prox_block_into`] on `threads` node-local workers (bit-identical).
+#[allow(clippy::too_many_arguments)]
+pub fn prox_block_into_mt(
+    omega: &Mat,
+    g: &Mat,
+    row_offset: usize,
+    tau: f64,
+    lam1: f64,
+    out: &mut Mat,
+    threads: usize,
+) {
+    let (rows, p) = omega.shape();
+    debug_assert_eq!(g.shape(), (rows, p));
     debug_assert_eq!(out.shape(), (rows, p));
     let thresh = tau * lam1;
-    for i in 0..rows {
+    let body = |s: usize, e: usize, orows: &mut [f64]| {
+        for i in s..e {
+            let orow = omega.row(i);
+            let grow = g.row(i);
+            let dst = &mut orows[(i - s) * p..(i - s + 1) * p];
+            for j in 0..p {
+                dst[j] = soft(orow[j] - tau * grow[j], thresh);
+            }
+            let dcol = row_offset + i;
+            if dcol < p {
+                dst[dcol] = orow[dcol] - tau * grow[dcol];
+            }
+        }
+    };
+    if threads <= 1 || rows < 2 || rows * p < crate::util::pool::SPAWN_MIN_WORK {
+        body(0, rows, out.data_mut());
+        return;
+    }
+    let ranges = chunk_ranges(rows, threads, 1);
+    par_rows_mut(out.data_mut(), p, &ranges, |_i, s, e, orows| body(s, e, orows));
+}
+
+/// [`objective_parts_block`] over a sub-range of slab rows (absolute
+/// diagonal offsets still come from `row_offset + i`).
+fn objective_parts_range(
+    omega: &Mat,
+    w: &Mat,
+    row_offset: usize,
+    r0: usize,
+    r1: usize,
+) -> Option<[f64; 3]> {
+    let p = omega.cols();
+    let mut logd = 0.0;
+    let mut tr = 0.0;
+    let mut fro = 0.0;
+    for i in r0..r1 {
         let orow = omega.row(i);
-        let grow = g.row(i);
-        let dst = out.row_mut(i);
+        let wrow = w.row(i);
         for j in 0..p {
-            dst[j] = soft(orow[j] - tau * grow[j], thresh);
+            tr += wrow[j] * orow[j];
+            fro += orow[j] * orow[j];
         }
         let dcol = row_offset + i;
         if dcol < p {
-            dst[dcol] = orow[dcol] - tau * grow[dcol];
+            let d = orow[dcol];
+            if d <= 0.0 {
+                return None;
+            }
+            logd += d.ln();
         }
     }
+    Some([logd, tr, fro])
+}
+
+/// [`objective_parts_block`] on `threads` workers, with the fixed
+/// [`REDUCE_BLOCK_ROWS`] reduction order: the returned value is a
+/// function of the slab only — identical at every thread count.
+pub fn objective_parts_block_mt(
+    omega: &Mat,
+    w: &Mat,
+    row_offset: usize,
+    threads: usize,
+) -> Option<[f64; 3]> {
+    let (rows, p) = omega.shape();
+    debug_assert_eq!(w.shape(), (rows, p));
+    let partials = block_partials(rows, p, threads, |s, e| {
+        objective_parts_range(omega, w, row_offset, s, e)
+    });
+    let mut acc = [0.0f64; 3];
+    for part in partials {
+        let part = part?;
+        for k in 0..3 {
+            acc[k] += part[k];
+        }
+    }
+    Some(acc)
+}
+
+/// [`diag_fro_parts_block`] over a sub-range of slab rows.
+fn diag_fro_parts_range(
+    omega: &Mat,
+    row_offset: usize,
+    r0: usize,
+    r1: usize,
+) -> Option<[f64; 2]> {
+    let p = omega.cols();
+    let mut logd = 0.0;
+    let mut fro = 0.0;
+    for i in r0..r1 {
+        let orow = omega.row(i);
+        for &v in orow {
+            fro += v * v;
+        }
+        let dcol = row_offset + i;
+        if dcol < p {
+            let d = orow[dcol];
+            if d <= 0.0 {
+                return None;
+            }
+            logd += d.ln();
+        }
+    }
+    Some([logd, fro])
+}
+
+/// [`diag_fro_parts_block`] on `threads` workers (fixed-block order,
+/// thread-count invariant).
+pub fn diag_fro_parts_block_mt(
+    omega: &Mat,
+    row_offset: usize,
+    threads: usize,
+) -> Option<[f64; 2]> {
+    let rows = omega.rows();
+    let partials = block_partials(rows, omega.cols(), threads, |r0, r1| {
+        diag_fro_parts_range(omega, row_offset, r0, r1)
+    });
+    let mut acc = [0.0f64; 2];
+    for part in partials {
+        let part = part?;
+        acc[0] += part[0];
+        acc[1] += part[1];
+    }
+    Some(acc)
+}
+
+/// [`linesearch_parts_block`] over a sub-range of slab rows.
+fn linesearch_parts_range(omega: &Mat, omega_new: &Mat, g: &Mat, r0: usize, r1: usize) -> [f64; 2] {
+    let p = omega.cols();
+    let mut dot = 0.0;
+    let mut fro = 0.0;
+    for i in r0..r1 {
+        let o = omega.row(i);
+        let on = omega_new.row(i);
+        let gr = g.row(i);
+        for j in 0..p {
+            let diff = o[j] - on[j];
+            dot += diff * gr[j];
+            fro += diff * diff;
+        }
+    }
+    [dot, fro]
+}
+
+/// [`linesearch_parts_block`] on `threads` workers (fixed-block order,
+/// thread-count invariant).
+pub fn linesearch_parts_block_mt(
+    omega: &Mat,
+    omega_new: &Mat,
+    g: &Mat,
+    threads: usize,
+) -> [f64; 2] {
+    let (rows, p) = omega.shape();
+    debug_assert_eq!(omega_new.shape(), (rows, p));
+    debug_assert_eq!(g.shape(), (rows, p));
+    let partials = block_partials(rows, p, threads, |r0, r1| {
+        linesearch_parts_range(omega, omega_new, g, r0, r1)
+    });
+    let mut acc = [0.0f64; 2];
+    for part in partials {
+        acc[0] += part[0];
+        acc[1] += part[1];
+    }
+    acc
 }
 
 #[inline]
@@ -108,49 +337,13 @@ fn soft(z: f64, a: f64) -> f64 {
 pub fn objective_parts_block(omega: &Mat, w: &Mat, row_offset: usize) -> Option<[f64; 3]> {
     let (rows, p) = omega.shape();
     debug_assert_eq!(w.shape(), (rows, p));
-    let mut logd = 0.0;
-    let mut tr = 0.0;
-    let mut fro = 0.0;
-    for i in 0..rows {
-        let orow = omega.row(i);
-        let wrow = w.row(i);
-        for j in 0..p {
-            tr += wrow[j] * orow[j];
-            fro += orow[j] * orow[j];
-        }
-        let dcol = row_offset + i;
-        if dcol < p {
-            let d = orow[dcol];
-            if d <= 0.0 {
-                return None;
-            }
-            logd += d.ln();
-        }
-    }
-    Some([logd, tr, fro])
+    objective_parts_range(omega, w, row_offset, 0, rows)
 }
 
 /// Diagonal-and-Frobenius pieces only (Obs objective, where the trace
 /// term comes from ‖Y‖²_F instead of W∘Ω).
 pub fn diag_fro_parts_block(omega: &Mat, row_offset: usize) -> Option<[f64; 2]> {
-    let (rows, p) = omega.shape();
-    let mut logd = 0.0;
-    let mut fro = 0.0;
-    for i in 0..rows {
-        let orow = omega.row(i);
-        for &v in orow {
-            fro += v * v;
-        }
-        let dcol = row_offset + i;
-        if dcol < p {
-            let d = orow[dcol];
-            if d <= 0.0 {
-                return None;
-            }
-            logd += d.ln();
-        }
-    }
-    Some([logd, fro])
+    diag_fro_parts_range(omega, row_offset, 0, omega.rows())
 }
 
 /// Line-search pieces over a slab: (tr((Ω−Ω′)ᵀG), ‖Ω−Ω′‖_F²).
@@ -158,19 +351,7 @@ pub fn linesearch_parts_block(omega: &Mat, omega_new: &Mat, g: &Mat) -> [f64; 2]
     let (rows, p) = omega.shape();
     debug_assert_eq!(omega_new.shape(), (rows, p));
     debug_assert_eq!(g.shape(), (rows, p));
-    let mut dot = 0.0;
-    let mut fro = 0.0;
-    for i in 0..rows {
-        let o = omega.row(i);
-        let on = omega_new.row(i);
-        let gr = g.row(i);
-        for j in 0..p {
-            let diff = o[j] - on[j];
-            dot += diff * gr[j];
-            fro += diff * diff;
-        }
-    }
-    [dot, fro]
+    linesearch_parts_range(omega, omega_new, g, 0, rows)
 }
 
 /// Sufficient-decrease check (Algorithm 2 line 12):
@@ -254,6 +435,81 @@ mod tests {
             let mut out = Mat::zeros(r1 - r0, p);
             prox_block_into(&ob, &gb, r0, 0.5, 0.7, &mut out);
             assert!(out.max_abs_diff(&blk) == 0.0);
+        }
+    }
+
+    #[test]
+    fn mt_matrix_passes_bitwise_match_serial() {
+        let mut rng = Rng::new(0xC1);
+        // rows·p above pool::SPAWN_MIN_WORK so the parallel path really
+        // fans out (smaller slabs legitimately stay serial).
+        let rows = 300;
+        let p = 300;
+        let omega = {
+            let mut m = Mat::from_fn(rows, p, |_, _| 0.1 * rng.normal());
+            for i in 0..rows {
+                m.set(i, (3 + i).min(p - 1), 1.5 + rng.uniform());
+            }
+            m
+        };
+        let w = Mat::from_fn(rows, p, |_, _| rng.normal());
+        let wt = Mat::from_fn(rows, p, |_, _| rng.normal());
+        let g_serial = gradient_block(&omega, &w, &wt, 3, 0.2);
+        let prox_serial = prox_block(&omega, &g_serial, 3, 0.5, 0.3);
+        for threads in 1..=8 {
+            let g = gradient_block_mt(&omega, &w, &wt, 3, 0.2, threads);
+            assert!(g.max_abs_diff(&g_serial) == 0.0, "gradient t={threads}");
+            let px = prox_block_mt(&omega, &g, 3, 0.5, 0.3, threads);
+            assert!(px.max_abs_diff(&prox_serial) == 0.0, "prox t={threads}");
+            let mut out = Mat::zeros(rows, p);
+            prox_block_into_mt(&omega, &g, 3, 0.5, 0.3, &mut out, threads);
+            assert!(out.max_abs_diff(&prox_serial) == 0.0, "prox-into t={threads}");
+        }
+    }
+
+    #[test]
+    fn mt_scalar_passes_invariant_in_thread_count() {
+        let mut rng = Rng::new(0xC2);
+        // Spans several reduction blocks AND exceeds the spawn cutoff
+        // (rows·p ≥ pool::SPAWN_MIN_WORK) so the fold genuinely runs on
+        // multiple workers.
+        let rows = 6 * REDUCE_BLOCK_ROWS + 17;
+        let p = rows;
+        let omega = symmetric_posdiag(&mut rng, p).row_block(0, rows);
+        let w = Mat::from_fn(rows, p, |_, _| rng.normal());
+        let omega_new = prox_block(&omega, &w, 0, 0.1, 0.2);
+        let obj1 = objective_parts_block_mt(&omega, &w, 0, 1).unwrap();
+        let df1 = diag_fro_parts_block_mt(&omega, 0, 1).unwrap();
+        let ls1 = linesearch_parts_block_mt(&omega, &omega_new, &w, 1);
+        for threads in 2..=8 {
+            let obj = objective_parts_block_mt(&omega, &w, 0, threads).unwrap();
+            let df = diag_fro_parts_block_mt(&omega, 0, threads).unwrap();
+            let ls = linesearch_parts_block_mt(&omega, &omega_new, &w, threads);
+            for k in 0..3 {
+                assert_eq!(obj[k].to_bits(), obj1[k].to_bits(), "objective[{k}] t={threads}");
+            }
+            for k in 0..2 {
+                assert_eq!(df[k].to_bits(), df1[k].to_bits(), "diag_fro[{k}] t={threads}");
+                assert_eq!(ls[k].to_bits(), ls1[k].to_bits(), "linesearch[{k}] t={threads}");
+            }
+        }
+        // And the blocked values agree with the serial reference to fp
+        // accuracy (the grouping differs, the math does not).
+        let serial = objective_parts_block(&omega, &w, 0).unwrap();
+        for k in 0..3 {
+            let scale = serial[k].abs().max(1.0);
+            assert!((obj1[k] - serial[k]).abs() / scale < 1e-12, "part {k}");
+        }
+    }
+
+    #[test]
+    fn mt_objective_poisons_on_bad_diagonal_everywhere() {
+        let mut omega = Mat::eye(REDUCE_BLOCK_ROWS + 5);
+        omega.set(REDUCE_BLOCK_ROWS + 2, REDUCE_BLOCK_ROWS + 2, -1.0);
+        let w = Mat::zeros(REDUCE_BLOCK_ROWS + 5, REDUCE_BLOCK_ROWS + 5);
+        for threads in 1..=4 {
+            assert!(objective_parts_block_mt(&omega, &w, 0, threads).is_none());
+            assert!(diag_fro_parts_block_mt(&omega, 0, threads).is_none());
         }
     }
 

@@ -32,17 +32,18 @@ pub fn fit_single_node_with_engine(
 fn fit_impl(x: &Mat, cfg: &ConcordConfig, mut engine: Option<&mut Engine>) -> Result<ConcordFit> {
     let p = x.cols();
     let use_engine = engine.as_ref().map(|e| e.has_trial(p)).unwrap_or(false);
+    let threads = cfg.threads.max(1);
 
-    let s = native::gram(x);
+    let s = native::gram_mt(x, threads);
     let mut omega = Mat::eye(p);
-    let mut w = native::w_step(&omega, &s);
+    let mut w = native::w_step_mt(&omega, &s, threads);
     let mut stats = SolveStats::default();
     let mut converged = false;
     let mut g_final = f64::INFINITY;
 
     for _it in 0..cfg.max_iter {
         stats.iters += 1;
-        let (grad, g_prev) = native::gradobj(&omega, &w, cfg.lambda2);
+        let (grad, g_prev) = native::gradobj_mt(&omega, &w, cfg.lambda2, threads);
 
         let mut tau = 1.0;
         let mut last: Option<native::Trial> = None;
@@ -60,7 +61,9 @@ fn fit_impl(x: &Mat, cfg: &ConcordConfig, mut engine: Option<&mut Engine>) -> Re
                     accept: out.accept,
                 }
             } else {
-                native::trial(&omega, &grad, &s, g_prev, tau, cfg.lambda1, cfg.lambda2)
+                native::trial_mt(
+                    &omega, &grad, &s, g_prev, tau, cfg.lambda1, cfg.lambda2, threads,
+                )
             };
             let ok = t.accept;
             last = Some(t);
@@ -158,7 +161,8 @@ mod tests {
         // must not increase the objective.
         let mut rng = Rng::new(5);
         let x = Mat::from_fn(40, 12, |_, _| rng.normal());
-        let base = ConcordConfig { lambda1: 0.2, tol: 0.0, variant: Variant::Cov, ..Default::default() };
+        let base =
+            ConcordConfig { lambda1: 0.2, tol: 0.0, variant: Variant::Cov, ..Default::default() };
         let short = ConcordConfig { max_iter: 3, ..base };
         let long = ConcordConfig { max_iter: 30, ..base };
         let f1 = fit_single_node(&x, &short).unwrap();

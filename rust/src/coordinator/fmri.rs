@@ -116,7 +116,8 @@ fn cluster_count(labels: &[usize]) -> usize {
 /// Run the full study.
 pub fn run_fmri_study(params: &FmriParams) -> FmriOutcome {
     let mut rng = Rng::new(params.seed);
-    let cortex = synthetic_cortex(params.p_hemi, params.parcels, params.knn, params.samples, &mut rng);
+    let cortex =
+        synthetic_cortex(params.p_hemi, params.parcels, params.knn, params.samples, &mut rng);
     let p = cortex.p();
 
     // Target density: the ground truth's off-diagonal density (the paper

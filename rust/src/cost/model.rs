@@ -61,11 +61,25 @@ impl CostBreakdown {
     /// Flops are divided by P (perfectly parallelized work — the
     /// lemma counts totals).
     pub fn time(&self, m: &MachineParams, p_procs: usize) -> f64 {
-        let p = p_procs as f64;
-        self.flops_dense / p * m.gamma_dense
-            + self.flops_sparse / p * m.gamma_sparse
+        self.time_with_threads(m, p_procs, 1)
+    }
+
+    /// Lemma 3.5 with intra-node threading: the paper's model of a node
+    /// is "threaded MKL on t cores" (§4 uses t = 24), so the flop terms
+    /// divide by P·t while the α/β communication terms are untouched —
+    /// threading moves the Lemma-predicted Cov/Obs and replication
+    /// crossovers exactly the way adding cores did on Edison.
+    pub fn time_with_threads(&self, m: &MachineParams, p_procs: usize, threads: usize) -> f64 {
+        let div = (p_procs * threads.max(1)) as f64;
+        self.flops_dense / div * m.gamma_dense
+            + self.flops_sparse / div * m.gamma_sparse
             + self.messages * m.alpha
             + self.words * m.beta
+    }
+
+    /// Communication-only part (L·α + W·β) — invariant in `threads`.
+    pub fn comm_time(&self, m: &MachineParams) -> f64 {
+        self.messages * m.alpha + self.words * m.beta
     }
 }
 
@@ -210,5 +224,41 @@ mod tests {
     fn q_clamps_at_one() {
         assert_eq!(rep(4, 4, 1).q(), 4.0);
         assert_eq!(rep(4, 2, 2).q(), 1.0);
+    }
+
+    #[test]
+    fn threads_scale_flop_time_only() {
+        let s = shape();
+        let r = rep(64, 2, 2);
+        let m = MachineParams::edison_like();
+        let c = cov_cost(&s, &r);
+        let t1 = c.time_with_threads(&m, 64, 1);
+        let t24 = c.time_with_threads(&m, 64, 24);
+        let comm = c.comm_time(&m);
+        // Exactly the flop part shrinks by 24×; communication is fixed.
+        assert!((t1 - comm - 24.0 * (t24 - comm)).abs() / t1 < 1e-12);
+        assert_eq!(c.time(&m, 64), t1);
+    }
+
+    #[test]
+    fn threads_move_the_priced_crossover() {
+        // A shape in the delayed-crossover region: flop-dominated at
+        // t = 1 (γ_sparse makes Obs win), communication-dominated at
+        // large t. Intra-node threading shrinks only the flop terms, so
+        // the Cov-vs-Obs *priced* winner can flip with t — the Lemma
+        // 3.5 behaviour the paper's Fig. 2 discussion describes.
+        let m = MachineParams::edison_like();
+        let s = ProblemShape { p: 10_000.0, n: 2_500.0, s: 17.0, t: 10.0, d: 60.0 };
+        let r = rep(1, 1, 1);
+        let (c, o) = (cov_cost(&s, &r), obs_cost(&s, &r));
+        assert!(o.time_with_threads(&m, 1, 1) < c.time_with_threads(&m, 1, 1));
+        let ratio_t1 = c.time_with_threads(&m, 1, 1) / o.time_with_threads(&m, 1, 1);
+        let ratio_t64 = c.time_with_threads(&m, 1, 64) / o.time_with_threads(&m, 1, 64);
+        // With flops deflated 64×, Cov's γ_sparse handicap fades: the
+        // ratio must move toward (or past) parity.
+        assert!(
+            ratio_t64 < ratio_t1,
+            "threading must move the crossover: {ratio_t64} !< {ratio_t1}"
+        );
     }
 }

@@ -1,0 +1,174 @@
+//! Operand parts shifted by the 1.5D schedule: dense or CSR, with the
+//! paper's bandwidth accounting (a shifted part costs its *element*
+//! count — nnz for sparse — not its wire envelope).
+
+use crate::linalg::{Csr, Mat};
+
+/// Concatenation axis for [`super::mult_concat`] results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConcatAxis {
+    /// Piece `q` supplies the output's block rows `layout.range(q)`.
+    Rows,
+    /// Piece `q` supplies the output's block columns `layout.range(q)`.
+    Cols,
+}
+
+/// One operand part: a dense block or an exactly-sparse CSR block.
+#[derive(Debug, Clone)]
+pub enum Block {
+    Dense(Mat),
+    Sparse(Csr),
+}
+
+impl Block {
+    pub fn rows(&self) -> usize {
+        match self {
+            Block::Dense(m) => m.rows(),
+            Block::Sparse(c) => c.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Block::Dense(m) => m.cols(),
+            Block::Sparse(c) => c.cols(),
+        }
+    }
+
+    /// Words moved when this part is shifted (paper's W convention:
+    /// matrix elements; nnz for sparse parts).
+    pub fn words(&self) -> u64 {
+        match self {
+            Block::Dense(m) => (m.rows() * m.cols()) as u64,
+            Block::Sparse(c) => c.nnz() as u64,
+        }
+    }
+
+    /// Dense view; panics on sparse blocks (callers know their layouts).
+    pub fn as_dense(&self) -> &Mat {
+        match self {
+            Block::Dense(m) => m,
+            Block::Sparse(_) => panic!("expected dense block"),
+        }
+    }
+
+    /// C = self · B with the flop split the cost model prices:
+    /// returns (product, dense flops, sparse flops).
+    pub fn matmul(&self, b: &Mat) -> (Mat, u64, u64) {
+        self.matmul_mt(b, 1)
+    }
+
+    /// [`Block::matmul`] on `threads` node-local threads (bit-identical
+    /// to the serial product at any thread count).
+    pub fn matmul_mt(&self, b: &Mat, threads: usize) -> (Mat, u64, u64) {
+        match self {
+            Block::Dense(m) => {
+                let flops = 2 * (m.rows() * m.cols() * b.cols()) as u64;
+                (m.matmul_mt(b, threads), flops, 0)
+            }
+            Block::Sparse(c) => {
+                let flops = c.spmm_flops(b.cols());
+                (c.spmm_mt(b, threads), 0, flops)
+            }
+        }
+    }
+
+    /// Flatten to an f64 wire payload (prefixed with kind + shape).
+    pub fn encode(&self) -> Vec<f64> {
+        match self {
+            Block::Dense(m) => {
+                let mut v = Vec::with_capacity(3 + m.rows() * m.cols());
+                v.push(0.0);
+                v.push(m.rows() as f64);
+                v.push(m.cols() as f64);
+                v.extend_from_slice(m.data());
+                v
+            }
+            Block::Sparse(c) => {
+                let mut v = Vec::with_capacity(4 + c.rows() + 1 + 2 * c.nnz());
+                v.push(1.0);
+                v.push(c.rows() as f64);
+                v.push(c.cols() as f64);
+                v.push(c.nnz() as f64);
+                v.extend(c.indptr().iter().map(|&i| i as f64));
+                v.extend(c.indices().iter().map(|&j| j as f64));
+                v.extend_from_slice(c.values());
+                v
+            }
+        }
+    }
+
+    /// Inverse of [`Block::encode`].
+    pub fn decode(buf: &[f64]) -> Block {
+        assert!(buf.len() >= 3, "block payload too short");
+        let kind = buf[0];
+        let rows = buf[1] as usize;
+        let cols = buf[2] as usize;
+        if kind == 0.0 {
+            assert_eq!(buf.len(), 3 + rows * cols, "dense payload size");
+            Block::Dense(Mat::from_vec(rows, cols, buf[3..].to_vec()))
+        } else {
+            let nnz = buf[3] as usize;
+            let mut off = 4;
+            let indptr: Vec<usize> = buf[off..off + rows + 1].iter().map(|&v| v as usize).collect();
+            off += rows + 1;
+            let indices: Vec<usize> = buf[off..off + nnz].iter().map(|&v| v as usize).collect();
+            off += nnz;
+            let values = buf[off..off + nnz].to_vec();
+            assert_eq!(off + nnz, buf.len(), "sparse payload size");
+            Block::Sparse(Csr::from_raw(rows, cols, indptr, indices, values))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn dense_roundtrip_and_words() {
+        let mut rng = Rng::new(1);
+        let m = rand_mat(&mut rng, 3, 5);
+        let b = Block::Dense(m.clone());
+        assert_eq!(b.words(), 15);
+        match Block::decode(&b.encode()) {
+            Block::Dense(d) => assert_eq!(d, m),
+            _ => panic!("kind flipped"),
+        }
+    }
+
+    #[test]
+    fn sparse_roundtrip_counts_nnz() {
+        let mut rng = Rng::new(2);
+        let dense = Mat::from_fn(6, 4, |_, _| if rng.uniform() < 0.3 { rng.normal() } else { 0.0 });
+        let c = Csr::from_dense(&dense, 0.0);
+        let b = Block::Sparse(c.clone());
+        assert_eq!(b.words(), c.nnz() as u64);
+        match Block::decode(&b.encode()) {
+            Block::Sparse(d) => assert_eq!(d, c),
+            _ => panic!("kind flipped"),
+        }
+    }
+
+    #[test]
+    fn matmul_matches_dense_reference_and_flop_split() {
+        let mut rng = Rng::new(3);
+        let a = rand_mat(&mut rng, 4, 6);
+        let b = rand_mat(&mut rng, 6, 3);
+        let (c_dense, fd, fs) = Block::Dense(a.clone()).matmul(&b);
+        assert_eq!(fd, 2 * 4 * 6 * 3);
+        assert_eq!(fs, 0);
+        assert!(c_dense.max_abs_diff(&a.matmul(&b)) == 0.0);
+
+        let sp = Csr::from_dense(&a, 0.0);
+        let (c_sp, fd2, fs2) = Block::Sparse(sp.clone()).matmul(&b);
+        assert_eq!(fd2, 0);
+        assert_eq!(fs2, sp.spmm_flops(3));
+        assert!(c_sp.max_abs_diff(&a.matmul(&b)) < 1e-12);
+    }
+}

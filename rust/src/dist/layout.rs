@@ -1,0 +1,197 @@
+//! Process grids and 1D block layouts.
+//!
+//! A [`RepGrid`] arranges `P` ranks as `c` replication *layers* ×
+//! `T = P/c` *teams* (rank = layer·T + team). Every team owns one part
+//! of the partitioned operand and its `c` replicas (one per layer) hold
+//! identical copies. A *layer group* (one rank per team) covers every
+//! part exactly once — it is the group the solvers' global reductions
+//! run over. [`Layout1D`] is the balanced contiguous partition of `p`
+//! rows (or columns) over the grid's teams.
+
+/// A `c`-way replicated process grid over `P` ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RepGrid {
+    p: usize,
+    c: usize,
+}
+
+impl RepGrid {
+    /// `p_ranks` ranks with replication factor `c` (must divide evenly).
+    pub fn new(p_ranks: usize, c: usize) -> Self {
+        assert!(c >= 1, "replication factor must be >= 1");
+        assert!(p_ranks >= c, "need at least c ranks (P={p_ranks}, c={c})");
+        assert_eq!(p_ranks % c, 0, "c must divide P (P={p_ranks}, c={c})");
+        RepGrid { p: p_ranks, c }
+    }
+
+    /// Total ranks P.
+    pub fn size(&self) -> usize {
+        self.p
+    }
+
+    /// Replication factor c (number of layers).
+    pub fn layers(&self) -> usize {
+        self.c
+    }
+
+    /// Number of teams T = P/c (distinct operand parts).
+    pub fn teams(&self) -> usize {
+        self.p / self.c
+    }
+
+    /// Team index of a rank.
+    pub fn team_of(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.p);
+        rank % self.teams()
+    }
+
+    /// Layer index of a rank.
+    pub fn layer_of(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.p);
+        rank / self.teams()
+    }
+
+    /// Rank at (layer, team).
+    pub fn rank_at(&self, layer: usize, team: usize) -> usize {
+        debug_assert!(layer < self.c && team < self.teams());
+        layer * self.teams() + team
+    }
+
+    /// All ranks in a layer, ascending team order (one rank per team).
+    pub fn layer_members(&self, layer: usize) -> Vec<usize> {
+        (0..self.teams()).map(|t| self.rank_at(layer, t)).collect()
+    }
+
+    /// All replicas of a team, ascending layer order (`c` ranks).
+    pub fn team_members(&self, team: usize) -> Vec<usize> {
+        (0..self.c).map(|l| self.rank_at(l, team)).collect()
+    }
+}
+
+/// Balanced contiguous 1D partition of `total` indices over `parts`
+/// slots: the first `total % parts` slots get one extra index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Layout1D {
+    total: usize,
+    parts: usize,
+}
+
+impl Layout1D {
+    pub fn new(total: usize, parts: usize) -> Self {
+        assert!(parts >= 1, "need at least one part");
+        Layout1D { total, parts }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn parts(&self) -> usize {
+        self.parts
+    }
+
+    /// Half-open index range of part `i`.
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        assert!(i < self.parts, "part {i} out of {} parts", self.parts);
+        let base = self.total / self.parts;
+        let rem = self.total % self.parts;
+        let start = i * base + i.min(rem);
+        let len = base + usize::from(i < rem);
+        (start, start + len)
+    }
+
+    /// Length of part `i`.
+    pub fn len(&self, i: usize) -> usize {
+        let (s, e) = self.range(i);
+        e - s
+    }
+
+    /// True when some part is empty (total < parts).
+    pub fn is_empty(&self) -> bool {
+        self.total < self.parts
+    }
+
+    /// The part owning global index `idx`.
+    pub fn owner_of(&self, idx: usize) -> usize {
+        assert!(idx < self.total);
+        let base = self.total / self.parts;
+        let rem = self.total % self.parts;
+        let fat = rem * (base + 1); // indices covered by the fat parts
+        if idx < fat {
+            idx / (base + 1)
+        } else {
+            rem + (idx - fat) / base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_indexing_roundtrips() {
+        let g = RepGrid::new(16, 4);
+        assert_eq!(g.teams(), 4);
+        assert_eq!(g.layers(), 4);
+        for rank in 0..16 {
+            assert_eq!(g.rank_at(g.layer_of(rank), g.team_of(rank)), rank);
+        }
+        assert_eq!(g.layer_members(1), vec![4, 5, 6, 7]);
+        assert_eq!(g.team_members(2), vec![2, 6, 10, 14]);
+    }
+
+    #[test]
+    fn layer_groups_partition_ranks() {
+        let g = RepGrid::new(12, 3);
+        let mut seen = vec![false; 12];
+        for l in 0..g.layers() {
+            for r in g.layer_members(l) {
+                assert!(!seen[r]);
+                seen[r] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn grid_rejects_nondividing_c() {
+        RepGrid::new(10, 3);
+    }
+
+    #[test]
+    fn layout_ranges_cover_exactly() {
+        for (total, parts) in [(16usize, 4usize), (17, 4), (3, 4), (0, 2), (7, 1)] {
+            let l = Layout1D::new(total, parts);
+            let mut next = 0;
+            for i in 0..parts {
+                let (s, e) = l.range(i);
+                assert_eq!(s, next, "total={total} parts={parts} i={i}");
+                assert!(e >= s);
+                next = e;
+            }
+            assert_eq!(next, total);
+        }
+    }
+
+    #[test]
+    fn layout_owner_matches_ranges() {
+        for (total, parts) in [(16usize, 4usize), (17, 5), (9, 2)] {
+            let l = Layout1D::new(total, parts);
+            for idx in 0..total {
+                let o = l.owner_of(idx);
+                let (s, e) = l.range(o);
+                assert!(s <= idx && idx < e, "total={total} parts={parts} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn layout_balance_within_one() {
+        let l = Layout1D::new(23, 4);
+        let lens: Vec<usize> = (0..4).map(|i| l.len(i)).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 23);
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+    }
+}

@@ -1,0 +1,39 @@
+//! The 1.5D communication-avoiding distribution layer (paper §3 and
+//! Algorithm 4, after Koanantakool et al. 2016 [29]).
+//!
+//! HP-CONCORD's multiplies always pair a **small, often sparse, rotating
+//! operand** (the iterate Ω, or an Xᵀ slab) with a **large stationary
+//! operand** (S's column blocks, X's column slabs, a rank's Y). The 1.5D
+//! schedule replicates both sides — `c_R` copies of the rotating
+//! operand's teams ([`RepGrid`]) and `c_F` copies of the stationary
+//! side's — and lets each stationary replica visit only `T_R/c_F` of the
+//! rotating parts, so per-rank latency drops to `P/(c_R·c_F)` messages
+//! and bandwidth to `nnz(R)/c_F` words (Lemma 3.3; pinned by the unit
+//! tests in [`mult15d`] and `rust/tests/lemma_counts.rs`).
+//!
+//! Pieces:
+//!
+//! - [`RepGrid`]/[`Layout1D`]: the `(layer, team)` process grid and the
+//!   balanced 1D block-row (or column) partition;
+//! - [`Block`]: a dense or CSR operand part; shifted parts are metered
+//!   at their *element* count (nnz for sparse) per the paper's W;
+//! - [`rotate_parts`]: the designated-source part shift (Lemma 3.3);
+//! - [`mult_concat`]/[`mult_sum`]: the concat-mode (Algorithm 2's
+//!   W = Ω·S, Algorithm 3's Z = Y·X) and sum-mode (Algorithm 3's
+//!   Y = Ω·Xᵀ) 1.5D multiplies, combining over the stationary grid's
+//!   replica teams;
+//! - [`transpose_block_rows`]: the distributed transpose (Lemma 3.2):
+//!   layer-split Bruck all-to-all + replica-team allgather, giving the
+//!   `log₂(T) + (c−1)` message profile the paper's analysis assumes;
+//! - [`redistribute_rows`]: 1D block-row re-layout between grids (free
+//!   when the two grids coincide, as in Algorithm 2 with c_X = c_Ω).
+
+pub mod block;
+pub mod layout;
+pub mod mult15d;
+pub mod transpose;
+
+pub use block::{Block, ConcatAxis};
+pub use layout::{Layout1D, RepGrid};
+pub use mult15d::{mult_concat, mult_sum, rotate_parts};
+pub use transpose::{redistribute_rows, transpose_block_rows};

@@ -1,0 +1,369 @@
+//! The 1.5D multiply schedule (paper Algorithm 4 / Lemma 3.3).
+//!
+//! [`rotate_parts`] moves the rotating operand's parts with a
+//! designated-source schedule: part `q`'s `c_R` replicas split the
+//! `P/c_F` ranks that need it, so every rank sends at most
+//! `P/(c_R·c_F)` messages of `nnz(part)` words — i.e. `nnz(R)/c_F`
+//! words total — exactly Lemma 3.3's per-processor counts (pinned in
+//! the tests below and cross-checked at solver level in
+//! `rust/tests/lemma_counts.rs`).
+//!
+//! [`mult_concat`] and [`mult_sum`] wrap the rotation with the result
+//! combine over the *stationary* grid's replica teams: the `c_F`
+//! replicas of a stationary part each process a disjoint `T_R/c_F`
+//! chunk of the rotating parts, then allgather (concat mode) or
+//! sum-reduce (sum mode) so every rank ends with the full product.
+
+use super::block::{Block, ConcatAxis};
+use super::layout::{Layout1D, RepGrid};
+use crate::linalg::Mat;
+use crate::simnet::Comm;
+
+/// Visit `T_R/c_F` rotating parts on every rank (ascending part order),
+/// shifting each from a deterministic source replica. `mine` is this
+/// rank's own part (its R-team's). The visitor receives the global part
+/// index and the part itself.
+///
+/// Schedule invariants (Lemma 3.3):
+/// - the `c_F` stationary layers partition the `T_R` parts into
+///   contiguous chunks, so a stationary team's replicas jointly see
+///   every part exactly once;
+/// - per-rank sends ≤ `P/(c_R·c_F)` messages and
+///   ≤ `nnz(part)·P/(c_R·c_F) = nnz(R)/c_F` words;
+/// - ranks that already hold a part never receive it (replicas serve
+///   only non-holders).
+pub fn rotate_parts(
+    comm: &mut Comm,
+    grid_r: &RepGrid,
+    grid_f: &RepGrid,
+    tag: u64,
+    mine: &Block,
+    mut visit: impl FnMut(&mut Comm, usize, &Block),
+) {
+    let p = comm.size();
+    assert_eq!(grid_r.size(), p, "rotating grid size mismatch");
+    assert_eq!(grid_f.size(), p, "stationary grid size mismatch");
+    let t_r = grid_r.teams();
+    let c_r = grid_r.layers();
+    let t_f = grid_f.teams();
+    let c_f = grid_f.layers();
+    assert_eq!(
+        t_r % c_f,
+        0,
+        "1.5D schedule needs c_F | T_R (T_R = {t_r}, c_F = {c_f}; require c_R·c_F ≤ P)"
+    );
+    let chunk = t_r / c_f;
+    let rank = comm.rank();
+    let my_r_team = grid_r.team_of(rank);
+    let my_r_layer = grid_r.layer_of(rank);
+
+    // Phase 1 — serve: my part belongs to exactly one stationary layer's
+    // chunk; among that layer's ranks, those whose in-layer position maps
+    // to my replica layer fetch from me. All sends are posted before any
+    // receive (channels are unbounded, so this cannot deadlock).
+    let consumer_layer = my_r_team / chunk;
+    let payload = mine.encode();
+    let words = mine.words();
+    for pos in 0..t_f {
+        let dest = consumer_layer * t_f + pos;
+        if dest == rank || grid_r.team_of(dest) == my_r_team {
+            continue; // self, or a fellow replica that already holds it
+        }
+        if pos % c_r == my_r_layer {
+            comm.send_with_words(dest, tag + my_r_team as u64, payload.clone(), words);
+        }
+    }
+
+    // Phase 2 — visit my chunk in ascending part order.
+    let my_f_layer = grid_f.layer_of(rank);
+    let my_pos = rank % t_f; // position within my stationary layer
+    for q in (my_f_layer * chunk)..((my_f_layer + 1) * chunk) {
+        if q == my_r_team {
+            visit(comm, q, mine);
+        } else {
+            let src = (my_pos % c_r) * t_r + q;
+            let buf = comm.recv(src, tag + q as u64);
+            let blk = Block::decode(&buf);
+            visit(comm, q, &blk);
+        }
+    }
+}
+
+/// 1.5D concat-mode multiply: every rank computes `local(q, part_q)` for
+/// its chunk of rotating parts, then the stationary replica team
+/// allgathers the pieces so each rank ends with all `T_R` pieces
+/// concatenated along `axis` in part order. `other_dim` is the pieces'
+/// shared non-concatenated dimension.
+#[allow(clippy::too_many_arguments)]
+pub fn mult_concat(
+    comm: &mut Comm,
+    grid_r: &RepGrid,
+    grid_f: &RepGrid,
+    tag: u64,
+    mine: &Block,
+    axis: ConcatAxis,
+    layout_r: &Layout1D,
+    other_dim: usize,
+    mut local: impl FnMut(&mut Comm, usize, &Block) -> Mat,
+) -> Mat {
+    let t_r = grid_r.teams();
+    assert_eq!(layout_r.parts(), t_r, "rotation layout must match the rotating grid");
+    let mut pieces: Vec<(usize, Mat)> = Vec::new();
+    rotate_parts(comm, grid_r, grid_f, tag, mine, |comm, q, blk| {
+        let out = local(comm, q, blk);
+        let want = match axis {
+            ConcatAxis::Rows => (layout_r.len(q), other_dim),
+            ConcatAxis::Cols => (other_dim, layout_r.len(q)),
+        };
+        assert_eq!(out.shape(), want, "piece {q} has the wrong shape");
+        pieces.push((q, out));
+    });
+
+    let rank = comm.rank();
+    let c_f = grid_f.layers();
+    let total = layout_r.total();
+    let mut out = match axis {
+        ConcatAxis::Rows => Mat::zeros(total, other_dim),
+        ConcatAxis::Cols => Mat::zeros(other_dim, total),
+    };
+    let mut place = |q: usize, data: &[f64]| {
+        let (s, e) = layout_r.range(q);
+        match axis {
+            ConcatAxis::Rows => {
+                let w = other_dim;
+                for r in s..e {
+                    out.row_mut(r)[..w].copy_from_slice(&data[(r - s) * w..(r - s + 1) * w]);
+                }
+            }
+            ConcatAxis::Cols => {
+                let w = e - s;
+                for i in 0..other_dim {
+                    out.row_mut(i)[s..e].copy_from_slice(&data[i * w..(i + 1) * w]);
+                }
+            }
+        }
+    };
+
+    if c_f == 1 {
+        // My chunk is all of them; no combine needed.
+        for (q, m) in &pieces {
+            place(*q, m.data());
+        }
+        return out;
+    }
+
+    // Bundle my pieces (ascending q), allgather over the stationary
+    // replica team (ordered by layer — i.e. by chunk), then place every
+    // layer's pieces by its chunk's shapes.
+    let chunk = t_r / c_f;
+    let mut bundle = Vec::new();
+    for (_, m) in &pieces {
+        bundle.extend_from_slice(m.data());
+    }
+    let group = grid_f.team_members(grid_f.team_of(rank));
+    let all = comm.allgather(&group, tag + grid_r.size() as u64 + 1, bundle);
+    for (layer, data) in all.iter().enumerate() {
+        let mut off = 0;
+        for q in (layer * chunk)..((layer + 1) * chunk) {
+            let n = layout_r.len(q) * other_dim;
+            place(q, &data[off..off + n]);
+            off += n;
+        }
+        assert_eq!(off, data.len(), "bundle size from layer {layer}");
+    }
+    out
+}
+
+/// 1.5D sum-mode multiply: every rank accumulates `local(q, part_q)`
+/// over its chunk (ascending part order), then the stationary replica
+/// team sum-reduces, leaving the full `out_rows × out_cols` sum on every
+/// rank. The reduction is the deterministic butterfly in
+/// [`Comm::sum_reduce`], so results are identical across runs.
+#[allow(clippy::too_many_arguments)]
+pub fn mult_sum(
+    comm: &mut Comm,
+    grid_r: &RepGrid,
+    grid_f: &RepGrid,
+    tag: u64,
+    mine: &Block,
+    out_rows: usize,
+    out_cols: usize,
+    mut local: impl FnMut(&mut Comm, usize, &Block) -> Mat,
+) -> Mat {
+    let mut acc = Mat::zeros(out_rows, out_cols);
+    rotate_parts(comm, grid_r, grid_f, tag, mine, |comm, q, blk| {
+        let part = local(comm, q, blk);
+        assert_eq!(part.shape(), (out_rows, out_cols), "partial {q} has the wrong shape");
+        acc.add_scaled(1.0, &part);
+    });
+    let group = grid_f.team_members(grid_f.team_of(comm.rank()));
+    if group.len() <= 1 {
+        return acc;
+    }
+    let data = comm.sum_reduce(&group, tag + grid_r.size() as u64 + 1, acc.data().to_vec());
+    Mat::from_vec(out_rows, out_cols, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Csr;
+    use crate::rng::Rng;
+    use crate::simnet::Fabric;
+    use std::sync::Arc;
+
+    /// Lemma 3.3, pinned: per-rank messages ≤ P/(c_R·c_F) and words ≤
+    /// nnz(R)/c_F, with equality when no requester is itself a holder.
+    #[test]
+    fn rotation_counts_match_lemma33() {
+        let p_ranks = 16;
+        for (c_r, c_f) in [(1usize, 1usize), (1, 2), (2, 2), (2, 4), (4, 2), (1, 16)] {
+            let grid_r = RepGrid::new(p_ranks, c_r);
+            let grid_f = RepGrid::new(p_ranks, c_f);
+            let elems = 6u64; // 2×3 dense part
+            let run = Fabric::new(p_ranks).run(move |comm| {
+                let mine = Block::Dense(Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64));
+                let mut seen = Vec::new();
+                rotate_parts(comm, &grid_r, &grid_f, 0, &mine, |_c, q, _b| seen.push(q));
+                seen
+            });
+            let bound_msgs = (p_ranks / (c_r * c_f)) as u64;
+            let bound_words = (grid_r.teams() as u64 * elems) / c_f as u64;
+            for (rank, c) in run.counters.iter().enumerate() {
+                assert!(
+                    c.messages <= bound_msgs,
+                    "rank {rank}: {} msgs > {bound_msgs} (c_R={c_r}, c_F={c_f})",
+                    c.messages
+                );
+                assert!(
+                    c.words <= bound_words,
+                    "rank {rank}: {} words > {bound_words} (c_R={c_r}, c_F={c_f})",
+                    c.words
+                );
+            }
+            // Coverage: each stationary team's replicas see every part
+            // exactly once, in ascending order.
+            let t_r = grid_r.teams();
+            for team in 0..grid_f.teams() {
+                let mut all: Vec<usize> = grid_f
+                    .team_members(team)
+                    .iter()
+                    .flat_map(|&r| run.results[r].clone())
+                    .collect();
+                all.sort_unstable();
+                assert_eq!(all, (0..t_r).collect::<Vec<_>>(), "c_R={c_r} c_F={c_f}");
+            }
+        }
+    }
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    /// Concat-mode W = Ω·S against the serial product, dense and sparse
+    /// rotating operands, across replication configurations.
+    #[test]
+    fn mult_concat_matches_serial_product() {
+        let p_dim = 12;
+        let width = 5;
+        let mut rng = Rng::new(7);
+        let omega = {
+            let mut m = rand_mat(&mut rng, p_dim, p_dim);
+            // sparsify to exercise the CSR path
+            for i in 0..p_dim {
+                for j in 0..p_dim {
+                    if (i + j) % 3 == 0 && i != j {
+                        m.set(i, j, 0.0);
+                    }
+                }
+            }
+            m
+        };
+        let s = Arc::new(rand_mat(&mut rng, p_dim, width));
+        let want = omega.matmul(&s);
+        let omega = Arc::new(omega);
+
+        for (p_ranks, c_r, c_f) in
+            [(4usize, 1usize, 1usize), (4, 2, 1), (4, 1, 2), (8, 2, 2), (8, 2, 4)]
+        {
+            let grid_r = RepGrid::new(p_ranks, c_r);
+            let grid_f = RepGrid::new(p_ranks, c_f);
+            let layout = Layout1D::new(p_dim, grid_r.teams());
+            let omega = omega.clone();
+            let s = s.clone();
+            let run = Fabric::new(p_ranks).run(move |comm| {
+                let (rs, re) = layout.range(grid_r.team_of(comm.rank()));
+                let mine = Block::Sparse(Csr::from_dense(&omega.row_block(rs, re), 0.0));
+                mult_concat(
+                    comm,
+                    &grid_r,
+                    &grid_f,
+                    10,
+                    &mine,
+                    ConcatAxis::Rows,
+                    &layout,
+                    width,
+                    |_c, _q, blk| blk.matmul(&s).0,
+                )
+            });
+            for (rank, got) in run.results.iter().enumerate() {
+                assert!(
+                    got.max_abs_diff(&want) < 1e-12,
+                    "P={p_ranks} c_R={c_r} c_F={c_f} rank={rank}"
+                );
+            }
+        }
+    }
+
+    /// Sum-mode Y = Ω·Xᵀ against the serial product.
+    #[test]
+    fn mult_sum_matches_serial_product() {
+        let p_dim = 8;
+        let n = 6;
+        let mut rng = Rng::new(8);
+        let omega = rand_mat(&mut rng, p_dim, p_dim);
+        let xt = Arc::new(rand_mat(&mut rng, p_dim, n)); // Xᵀ: p × n
+        let want = omega.matmul(&xt);
+        let omega = Arc::new(omega);
+
+        for (p_ranks, c_x, c_o) in [(4usize, 1usize, 1usize), (4, 2, 2), (8, 2, 4), (8, 4, 2)] {
+            let grid_x = RepGrid::new(p_ranks, c_x);
+            let grid_o = RepGrid::new(p_ranks, c_o);
+            let lx = Layout1D::new(p_dim, grid_x.teams());
+            let lo = Layout1D::new(p_dim, grid_o.teams());
+            let omega = omega.clone();
+            let xt = xt.clone();
+            let run = Fabric::new(p_ranks).run(move |comm| {
+                let rank = comm.rank();
+                // My rotating part: Xᵀ's block rows on the X grid.
+                let (ks, ke) = lx.range(grid_x.team_of(rank));
+                let mine = Block::Dense(xt.row_block(ks, ke));
+                // My stationary rows of Ω on the Ω grid.
+                let (os, oe) = lo.range(grid_o.team_of(rank));
+                let om_rows = omega.row_block(os, oe);
+                let y = mult_sum(
+                    comm,
+                    &grid_x,
+                    &grid_o,
+                    20,
+                    &mine,
+                    oe - os,
+                    n,
+                    |_c, q, blk| {
+                        let (s, e) = lx.range(q);
+                        om_rows.col_block(s, e).matmul(blk.as_dense())
+                    },
+                );
+                (os, y)
+            });
+            for (rank, (os, y)) in run.results.iter().enumerate() {
+                let rows = y.rows();
+                let want_block = want.row_block(*os, os + rows);
+                assert!(
+                    y.max_abs_diff(&want_block) < 1e-12,
+                    "P={p_ranks} c_X={c_x} c_Ω={c_o} rank={rank}"
+                );
+            }
+        }
+    }
+}

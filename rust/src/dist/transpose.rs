@@ -1,0 +1,304 @@
+//! Distributed transpose and block-row redistribution (Lemma 3.2).
+//!
+//! [`transpose_block_rows`] turns a 1D block-row distribution of a
+//! square matrix into the block rows of its transpose. The work is
+//! layer-split: replica layer ℓ of each team exchanges only its 1/c
+//! row-slice in a within-layer all-to-all (Bruck when the team count is
+//! a power of two — `log₂(T)` messages per rank), then the replica team
+//! allgathers the c column-slices (`c − 1` messages). That is the
+//! `log₂(T) + (c−1)` per-rank message profile the paper's transpose
+//! analysis assumes; `rust/tests/lemma_counts.rs` pins it.
+//!
+//! [`redistribute_rows`] re-layouts block rows from one grid onto
+//! another with a designated-source schedule (each destination receives
+//! every needed row exactly once); when the grids and layouts coincide
+//! it degenerates to a local copy — Algorithm 2's "converts Ω back to
+//! 1D block row layout" is free when c_X = c_Ω.
+
+use super::layout::{Layout1D, RepGrid};
+use crate::linalg::Mat;
+use crate::simnet::Comm;
+
+/// Global row range of replica layer `layer`'s slice of team `team`'s
+/// block (the block's rows split evenly over the grid's layers).
+fn layer_slice(layout: &Layout1D, layers: usize, team: usize, layer: usize) -> (usize, usize) {
+    let (s, e) = layout.range(team);
+    let sub = Layout1D::new(e - s, layers);
+    let (a, b) = sub.range(layer);
+    (s + a, s + b)
+}
+
+/// Distributed transpose of a square matrix in 1D block-row layout:
+/// `local` is this rank's team's rows `layout.range(team)` (all
+/// columns); returns this team's block rows of the transpose plus the
+/// words this rank sent. Pure data movement — the result is bit-exact.
+pub fn transpose_block_rows(
+    comm: &mut Comm,
+    grid: &RepGrid,
+    tag: u64,
+    local: &Mat,
+    layout: &Layout1D,
+) -> (Mat, u64) {
+    let p_total = layout.total();
+    assert_eq!(layout.parts(), grid.teams(), "layout must match the grid's teams");
+    assert_eq!(local.cols(), p_total, "local block must span all columns");
+    let rank = comm.rank();
+    let t = grid.teams();
+    let c = grid.layers();
+    let my_team = grid.team_of(rank);
+    let my_layer = grid.layer_of(rank);
+    let (rs, re) = layout.range(my_team);
+    let my_rows = re - rs;
+    assert_eq!(local.rows(), my_rows, "local block must be this team's rows");
+    let words_before = comm.counters.words;
+
+    // Part for destination team u: (A[my layer-slice rows, range(u)])ᵀ,
+    // i.e. a (len(u) × slice) row-major block of Aᵀ.
+    let (ms, me) = layer_slice(layout, c, my_team, my_layer);
+    let slice_rows = me - ms;
+    let mut parts: Vec<Vec<f64>> = Vec::with_capacity(t);
+    for u in 0..t {
+        let (us, ue) = layout.range(u);
+        let mut part = Vec::with_capacity((ue - us) * slice_rows);
+        for col in us..ue {
+            for row in ms..me {
+                part.push(local.get(row - rs, col));
+            }
+        }
+        parts.push(part);
+    }
+
+    let layer_group = grid.layer_members(my_layer);
+    let equal_parts = parts.windows(2).all(|w| w[0].len() == w[1].len());
+    let received = if t == 1 {
+        parts
+    } else if t.is_power_of_two() && equal_parts {
+        comm.alltoall_bruck(&layer_group, tag, parts)
+    } else {
+        comm.alltoall_direct(&layer_group, tag, parts)
+    };
+
+    // received[u] = (A[u's layer-slice rows, my range])ᵀ: my_rows ×
+    // slice(u) — the transpose's columns at u's layer-ℓ slice.
+    let mut out = Mat::zeros(my_rows, p_total);
+    {
+        let mut fill = |u: usize, layer: usize, data: &[f64]| {
+            let (cs, ce) = layer_slice(layout, c, u, layer);
+            let w = ce - cs;
+            assert_eq!(data.len(), my_rows * w, "transpose piece size (u={u}, layer={layer})");
+            for i in 0..my_rows {
+                out.row_mut(i)[cs..ce].copy_from_slice(&data[i * w..(i + 1) * w]);
+            }
+        };
+        for (u, piece) in received.iter().enumerate() {
+            fill(u, my_layer, piece);
+        }
+
+        // Replica-team allgather: each layer contributes its column
+        // slices so every member ends with all columns.
+        if c > 1 {
+            let team_group = grid.team_members(my_team);
+            let mut bundle = Vec::new();
+            for piece in &received {
+                bundle.extend_from_slice(piece);
+            }
+            let all = comm.allgather(&team_group, tag + t as u64 + 1, bundle);
+            for (layer, data) in all.iter().enumerate() {
+                if layer == my_layer {
+                    continue;
+                }
+                let mut off = 0;
+                for u in 0..t {
+                    let (cs, ce) = layer_slice(layout, c, u, layer);
+                    let n = my_rows * (ce - cs);
+                    fill(u, layer, &data[off..off + n]);
+                    off += n;
+                }
+                assert_eq!(off, data.len(), "allgather bundle from layer {layer}");
+            }
+        }
+    }
+    (out, comm.counters.words - words_before)
+}
+
+/// Move 1D block rows from (`grid_from`, `layout_from`) to (`grid_to`,
+/// `layout_to`). `mat` is this rank's from-rows; returns its to-rows.
+/// Each destination row is fetched exactly once, from the from-replica
+/// whose layer matches the destination layer (mod c_from) — so
+/// identical grids/layouts move zero bytes.
+pub fn redistribute_rows(
+    comm: &mut Comm,
+    tag: u64,
+    mat: &Mat,
+    grid_from: &RepGrid,
+    layout_from: &Layout1D,
+    grid_to: &RepGrid,
+    layout_to: &Layout1D,
+) -> Mat {
+    let p = comm.size();
+    assert_eq!(grid_from.size(), p);
+    assert_eq!(grid_to.size(), p);
+    assert_eq!(layout_from.total(), layout_to.total(), "row universes differ");
+    assert_eq!(layout_from.parts(), grid_from.teams());
+    assert_eq!(layout_to.parts(), grid_to.teams());
+    let w = mat.cols();
+    let rank = comm.rank();
+    let my_from_team = grid_from.team_of(rank);
+    let my_from_layer = grid_from.layer_of(rank);
+    let (fs, fe) = layout_from.range(my_from_team);
+    assert_eq!(mat.rows(), fe - fs, "mat must be this rank's from-rows");
+    let c_from = grid_from.layers();
+    let t_from = grid_from.teams();
+
+    // Send to every destination whose to-range overlaps my rows and
+    // whose designated source layer is mine.
+    for dest in 0..p {
+        if dest == rank || grid_to.layer_of(dest) % c_from != my_from_layer {
+            continue;
+        }
+        let (ts, te) = layout_to.range(grid_to.team_of(dest));
+        let (os, oe) = (ts.max(fs), te.min(fe));
+        if os >= oe {
+            continue;
+        }
+        let mut payload = Vec::with_capacity((oe - os) * w);
+        for r in os..oe {
+            payload.extend_from_slice(mat.row(r - fs));
+        }
+        comm.send(dest, tag + my_from_team as u64, payload);
+    }
+
+    // Assemble my to-rows from the overlapping from-teams.
+    let (ts, te) = layout_to.range(grid_to.team_of(rank));
+    let src_layer = grid_to.layer_of(rank) % c_from;
+    let mut out = Mat::zeros(te - ts, w);
+    for ft in 0..t_from {
+        let (s, e) = layout_from.range(ft);
+        let (os, oe) = (ts.max(s), te.min(e));
+        if os >= oe {
+            continue;
+        }
+        let src = src_layer * t_from + ft;
+        if src == rank {
+            for r in os..oe {
+                out.row_mut(r - ts).copy_from_slice(mat.row(r - fs));
+            }
+        } else {
+            let payload = comm.recv(src, tag + ft as u64);
+            assert_eq!(payload.len(), (oe - os) * w, "redistribute payload from team {ft}");
+            for r in os..oe {
+                out.row_mut(r - ts)
+                    .copy_from_slice(&payload[(r - os) * w..(r - os + 1) * w]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::simnet::Fabric;
+    use std::sync::Arc;
+
+    #[test]
+    fn transpose_is_exact_across_replication() {
+        let p_dim = 24;
+        let mut rng = Rng::new(11);
+        let a = Arc::new(Mat::from_fn(p_dim, p_dim, |_, _| rng.normal()));
+        let at = a.transpose();
+        for (p_ranks, c) in [(4usize, 1usize), (8, 2), (8, 4), (16, 4), (6, 2)] {
+            let grid = RepGrid::new(p_ranks, c);
+            let layout = Layout1D::new(p_dim, grid.teams());
+            let a = a.clone();
+            let run = Fabric::new(p_ranks).run(move |comm| {
+                let team = grid.team_of(comm.rank());
+                let (s, e) = layout.range(team);
+                let local = a.row_block(s, e);
+                let (t, _) = transpose_block_rows(comm, &grid, 3, &local, &layout);
+                (s, t)
+            });
+            for (rank, (s, t)) in run.results.iter().enumerate() {
+                let want = at.row_block(*s, s + t.rows());
+                assert!(
+                    t.max_abs_diff(&want) == 0.0,
+                    "P={p_ranks} c={c} rank={rank}: transpose not exact"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_message_profile_is_log_t_plus_c_minus_1() {
+        let p_dim = 32;
+        let a = Arc::new(Mat::from_fn(p_dim, p_dim, |i, j| (i * p_dim + j) as f64));
+        for (p_ranks, c) in [(8usize, 1usize), (8, 2), (16, 4)] {
+            let grid = RepGrid::new(p_ranks, c);
+            let layout = Layout1D::new(p_dim, grid.teams());
+            let a = a.clone();
+            let run = Fabric::new(p_ranks).run(move |comm| {
+                let (s, e) = layout.range(grid.team_of(comm.rank()));
+                let local = a.row_block(s, e);
+                transpose_block_rows(comm, &grid, 5, &local, &layout);
+            });
+            let t = grid.teams() as u64;
+            let want = t.trailing_zeros() as u64 + (c as u64 - 1);
+            for counters in &run.counters {
+                assert_eq!(
+                    counters.messages, want,
+                    "P={p_ranks} c={c}: log2({t}) Bruck + (c-1) allgather"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn redistribute_between_grids_is_exact() {
+        let p_dim = 16;
+        let width = 7;
+        let mut rng = Rng::new(12);
+        let a = Arc::new(Mat::from_fn(p_dim, width, |_, _| rng.normal()));
+        for (p_ranks, c_from, c_to) in
+            [(8usize, 2usize, 1usize), (8, 1, 2), (8, 2, 4), (8, 4, 2), (4, 1, 1)]
+        {
+            let gf = RepGrid::new(p_ranks, c_from);
+            let gt = RepGrid::new(p_ranks, c_to);
+            let lf = Layout1D::new(p_dim, gf.teams());
+            let lt = Layout1D::new(p_dim, gt.teams());
+            let a = a.clone();
+            let run = Fabric::new(p_ranks).run(move |comm| {
+                let (s, e) = lf.range(gf.team_of(comm.rank()));
+                let mine = a.row_block(s, e);
+                let out = redistribute_rows(comm, 9, &mine, &gf, &lf, &gt, &lt);
+                (lt.range(gt.team_of(comm.rank())).0, out)
+            });
+            for (rank, (s, out)) in run.results.iter().enumerate() {
+                let want = a.row_block(*s, s + out.rows());
+                assert!(
+                    out.max_abs_diff(&want) == 0.0,
+                    "P={p_ranks} c_from={c_from} c_to={c_to} rank={rank}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn redistribute_identical_grids_moves_nothing() {
+        let p_dim = 12;
+        let a = Arc::new(Mat::from_fn(p_dim, 3, |i, j| (i * 3 + j) as f64));
+        let grid = RepGrid::new(8, 2);
+        let layout = Layout1D::new(p_dim, grid.teams());
+        let run = Fabric::new(8).run(move |comm| {
+            let (s, e) = layout.range(grid.team_of(comm.rank()));
+            let mine = a.row_block(s, e);
+            let out = redistribute_rows(comm, 4, &mine, &grid, &layout, &grid, &layout);
+            out.max_abs_diff(&mine)
+        });
+        assert!(run.results.iter().all(|&d| d == 0.0));
+        for c in &run.counters {
+            assert_eq!(c.messages, 0, "same-grid redistribution must be free");
+            assert_eq!(c.words, 0);
+        }
+    }
+}

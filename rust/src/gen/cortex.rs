@@ -129,7 +129,8 @@ pub fn synthetic_cortex_confound(
 
     // Precision: m nearest neighbours within the hemisphere; intra-parcel
     // edges strong, inter-parcel weak. Symmetrized union of kNN edges.
-    let mut edges: std::collections::HashMap<(usize, usize), f64> = std::collections::HashMap::new();
+    let mut edges: std::collections::HashMap<(usize, usize), f64> =
+        std::collections::HashMap::new();
     for i in 0..p {
         let mut cands: Vec<(f64, usize)> = (0..p)
             .filter(|&j| j != i && hemisphere[j] == hemisphere[i])

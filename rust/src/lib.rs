@@ -10,11 +10,11 @@
 //! ## Architecture (three layers)
 //!
 //! - **L3 (this crate)** — the coordinator and distributed runtime: the
-//!   1.5D communication-avoiding matrix multiplication (paper Algorithm 4)
-//!   over a simulated message-passing fabric ([`simnet`]) with exact
-//!   α-β-γ cost accounting, the Cov/Obs proximal-gradient drivers (paper
-//!   Algorithms 2 and 3, [`concord`]), the analytic cost model (Lemmas
-//!   3.1–3.5, [`cost`]), the QUIC-style second-order baseline
+//!   1.5D communication-avoiding matrix multiplication (paper Algorithm 4,
+//!   [`dist`]) over a simulated message-passing fabric ([`simnet`]) with
+//!   exact α-β-γ cost accounting, the Cov/Obs proximal-gradient drivers
+//!   (paper Algorithms 2 and 3, [`concord`]), the analytic cost model
+//!   (Lemmas 3.1–3.5, [`cost`]), the QUIC-style second-order baseline
 //!   ([`bigquic`]), data generators, clustering and metrics for the fMRI
 //!   case study, and a tuning-grid sweep coordinator ([`coordinator`]).
 //! - **L2 (python/compile/model.py)** — CONCORD step graphs in JAX,
@@ -23,8 +23,28 @@
 //!   gradient/prox/objective passes) called by L2.
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT CPU
-//! client (`xla` crate) so Python never runs on the request path; a pure
-//! Rust fallback covers arbitrary shapes.
+//! client (`xla` crate, behind the non-default `pjrt` feature) so Python
+//! never runs on the request path; a pure Rust fallback covers arbitrary
+//! shapes and is the only path in the default offline build.
+//!
+//! ## Node-local parallelism (the paper's per-node `t`)
+//!
+//! The paper models each node as threaded MKL on 24 cores: every
+//! node-local multiply runs on `t` threads and the Lemma 3.1–3.5 flop
+//! terms divide by `t`. This crate mirrors that with a deterministic
+//! scoped pool ([`util::pool`], no external deps): `Mat::matmul_mt` /
+//! `Mat::matmul_bt_mt` / `Csr::spmm_mt` and the fused CONCORD passes
+//! (`concord::ops::*_mt`) partition rows on aligned boundaries and run
+//! the unmodified serial inner loops, so results are **bit-for-bit
+//! identical at every thread count** — scalar reductions use a fixed
+//! 64-row block order ([`concord::ops::REDUCE_BLOCK_ROWS`]) for the
+//! same reason. The knob is `ConcordConfig::threads` /
+//! `QuicConfig::threads` (CLI `--threads N|auto`); it accelerates the
+//! single-node solver, every simulated rank's local kernels, and the
+//! BigQUIC baseline, while the metered message/word counts are
+//! provably untouched (`rust/tests/parallel_determinism.rs`,
+//! `rust/tests/lemma_counts.rs`). The cost model prices threading via
+//! `CostBreakdown::time_with_threads` (flops/(P·t)).
 //!
 //! ## Quick start
 //!

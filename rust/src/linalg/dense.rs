@@ -147,6 +147,13 @@ impl Mat {
         c
     }
 
+    /// C = A · B on `threads` node-local workers ([`Mat::matmul_into_mt`]).
+    pub fn matmul_mt(&self, b: &Mat, threads: usize) -> Mat {
+        let mut c = Mat::zeros(self.rows, b.cols);
+        self.matmul_into_mt(b, &mut c, threads);
+        c
+    }
+
     /// C += A · B (C must be zeroed by the caller for a plain product).
     ///
     /// i-k-j order with k-blocking and a 4×k-unrolled update: each pass
@@ -158,90 +165,66 @@ impl Mat {
         assert_eq!(self.cols, b.rows, "inner dimension mismatch");
         assert_eq!(c.rows, self.rows);
         assert_eq!(c.cols, b.cols);
+        gemm_rows(&self.data, self.cols, &b.data, b.cols, &mut c.data);
+    }
+
+    /// [`Mat::matmul_into`] on `threads` node-local workers.
+    ///
+    /// Rows are partitioned into contiguous chunks with boundaries
+    /// aligned to the kernel's 2-row pairing, so each chunk runs the
+    /// unmodified serial microkernel over the same row pairs in the same
+    /// k-block order — the result is **bit-for-bit identical** to the
+    /// serial product at every thread count (the parallel-equivalence
+    /// property tests pin this).
+    pub fn matmul_into_mt(&self, b: &Mat, c: &mut Mat, threads: usize) {
+        assert_eq!(self.cols, b.rows, "inner dimension mismatch");
+        assert_eq!(c.rows, self.rows);
+        assert_eq!(c.cols, b.cols);
         let (m, kk, n) = (self.rows, self.cols, b.cols);
-        const KC: usize = 256; // k-panel kept hot in L1/L2
-        for k0 in (0..kk).step_by(KC) {
-            let k1 = (k0 + KC).min(kk);
-            // 2 C-rows per pass (§Perf step L3-3): each loaded B row
-            // feeds two accumulator rows, halving B bandwidth. (A 4-row
-            // variant measured *slower* — register pressure; §Perf L3-4.)
-            let mut i = 0;
-            while i + 2 <= m {
-                let (chead, ctail) = c.data.split_at_mut((i + 1) * n);
-                let c0 = &mut chead[i * n..];
-                let c1 = &mut ctail[..n];
-                let ar0 = &self.data[i * kk..(i + 1) * kk];
-                let ar1 = &self.data[(i + 1) * kk..(i + 2) * kk];
-                let mut k = k0;
-                while k + 4 <= k1 {
-                    let (p0, p1, p2, p3) = (ar0[k], ar0[k + 1], ar0[k + 2], ar0[k + 3]);
-                    let (q0, q1, q2, q3) = (ar1[k], ar1[k + 1], ar1[k + 2], ar1[k + 3]);
-                    let b0 = &b.data[k * n..(k + 1) * n];
-                    let b1 = &b.data[(k + 1) * n..(k + 2) * n];
-                    let b2 = &b.data[(k + 2) * n..(k + 3) * n];
-                    let b3 = &b.data[(k + 3) * n..(k + 4) * n];
-                    for j in 0..n {
-                        let (v0, v1, v2, v3) = (b0[j], b1[j], b2[j], b3[j]);
-                        c0[j] += p0 * v0 + p1 * v1 + p2 * v2 + p3 * v3;
-                        c1[j] += q0 * v0 + q1 * v1 + q2 * v2 + q3 * v3;
-                    }
-                    k += 4;
-                }
-                for k in k..k1 {
-                    let brow = &b.data[k * n..(k + 1) * n];
-                    if ar0[k] != 0.0 {
-                        axpy(ar0[k], brow, c0);
-                    }
-                    if ar1[k] != 0.0 {
-                        axpy(ar1[k], brow, &mut c1[..n]);
-                    }
-                }
-                i += 2;
-            }
-            // Remainder row: 4×k-unrolled single-row update.
-            for i in i..m {
-                let arow = &self.data[i * kk..(i + 1) * kk];
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                let mut k = k0;
-                while k + 4 <= k1 {
-                    let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
-                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
-                        k += 4; // free sparsity win for thresholded iterates
-                        continue;
-                    }
-                    let b0 = &b.data[k * n..(k + 1) * n];
-                    let b1 = &b.data[(k + 1) * n..(k + 2) * n];
-                    let b2 = &b.data[(k + 2) * n..(k + 3) * n];
-                    let b3 = &b.data[(k + 3) * n..(k + 4) * n];
-                    for j in 0..n {
-                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                    }
-                    k += 4;
-                }
-                for k in k..k1 {
-                    let aik = arow[k];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.data[k * n..(k + 1) * n];
-                    axpy(aik, brow, crow);
-                }
-            }
+        if threads <= 1 || m < 2 || m * kk * n < crate::util::pool::SPAWN_MIN_WORK {
+            gemm_rows(&self.data, kk, &b.data, n, &mut c.data);
+            return;
         }
+        let ranges = crate::util::pool::chunk_ranges(m, threads, 2);
+        let a = &self.data;
+        let bd = &b.data;
+        crate::util::pool::par_rows_mut(&mut c.data, n, &ranges, |_i, s, e, crows| {
+            gemm_rows(&a[s * kk..e * kk], kk, bd, n, crows);
+        });
     }
 
     /// C = A · Bᵀ (used where the transposed layout is already at hand).
     pub fn matmul_bt(&self, b: &Mat) -> Mat {
+        self.matmul_bt_mt(b, 1)
+    }
+
+    /// [`Mat::matmul_bt`] on `threads` node-local workers. Each output
+    /// row is one independent run of the serial dot kernel, so the
+    /// result is bit-identical at any thread count.
+    pub fn matmul_bt_mt(&self, b: &Mat, threads: usize) -> Mat {
         assert_eq!(self.cols, b.cols, "inner dimension mismatch (B is transposed)");
         let (m, kk, n) = (self.rows, self.cols, b.rows);
         let mut c = Mat::zeros(m, n);
-        for i in 0..m {
-            let arow = &self.data[i * kk..(i + 1) * kk];
-            for j in 0..n {
-                let brow = &b.data[j * kk..(j + 1) * kk];
-                c.data[i * n + j] = dot(arow, brow);
+        let a = &self.data;
+        let bd = &b.data;
+        let body = |s: usize, e: usize, crows: &mut [f64]| {
+            for i in s..e {
+                let arow = &a[i * kk..(i + 1) * kk];
+                let crow = &mut crows[(i - s) * n..(i - s + 1) * n];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    let brow = &bd[j * kk..(j + 1) * kk];
+                    *cj = dot(arow, brow);
+                }
             }
+        };
+        if threads <= 1 || m < 2 || m * kk * n < crate::util::pool::SPAWN_MIN_WORK {
+            body(0, m, &mut c.data);
+            return c;
         }
+        let ranges = crate::util::pool::chunk_ranges(m, threads, 1);
+        crate::util::pool::par_rows_mut(&mut c.data, n, &ranges, |_i, s, e, crows| {
+            body(s, e, crows)
+        });
         c
     }
 
@@ -323,6 +306,88 @@ impl Mat {
     }
 }
 
+/// The GEMM microkernel over a contiguous row range: `c += a · b` where
+/// `a` holds `r` rows of length `kk` and `c` the matching `r` rows of
+/// length `n` (row-major, `b` is `kk × n`). This is the single code
+/// path behind both the serial and the multithreaded matmul — workers
+/// call it on disjoint even-aligned row chunks, which preserves the
+/// 2-row pairing and k-block order and therefore produces bit-identical
+/// results at every thread count.
+fn gemm_rows(a: &[f64], kk: usize, b: &[f64], n: usize, c: &mut [f64]) {
+    debug_assert_eq!(a.len() % kk.max(1), 0);
+    let m = if kk == 0 { c.len() / n.max(1) } else { a.len() / kk };
+    debug_assert_eq!(c.len(), m * n);
+    const KC: usize = 256; // k-panel kept hot in L1/L2
+    for k0 in (0..kk).step_by(KC) {
+        let k1 = (k0 + KC).min(kk);
+        // 2 C-rows per pass (§Perf step L3-3): each loaded B row
+        // feeds two accumulator rows, halving B bandwidth. (A 4-row
+        // variant measured *slower* — register pressure; §Perf L3-4.)
+        let mut i = 0;
+        while i + 2 <= m {
+            let (chead, ctail) = c.split_at_mut((i + 1) * n);
+            let c0 = &mut chead[i * n..];
+            let c1 = &mut ctail[..n];
+            let ar0 = &a[i * kk..(i + 1) * kk];
+            let ar1 = &a[(i + 1) * kk..(i + 2) * kk];
+            let mut k = k0;
+            while k + 4 <= k1 {
+                let (p0, p1, p2, p3) = (ar0[k], ar0[k + 1], ar0[k + 2], ar0[k + 3]);
+                let (q0, q1, q2, q3) = (ar1[k], ar1[k + 1], ar1[k + 2], ar1[k + 3]);
+                let b0 = &b[k * n..(k + 1) * n];
+                let b1 = &b[(k + 1) * n..(k + 2) * n];
+                let b2 = &b[(k + 2) * n..(k + 3) * n];
+                let b3 = &b[(k + 3) * n..(k + 4) * n];
+                for j in 0..n {
+                    let (v0, v1, v2, v3) = (b0[j], b1[j], b2[j], b3[j]);
+                    c0[j] += p0 * v0 + p1 * v1 + p2 * v2 + p3 * v3;
+                    c1[j] += q0 * v0 + q1 * v1 + q2 * v2 + q3 * v3;
+                }
+                k += 4;
+            }
+            for k in k..k1 {
+                let brow = &b[k * n..(k + 1) * n];
+                if ar0[k] != 0.0 {
+                    axpy(ar0[k], brow, c0);
+                }
+                if ar1[k] != 0.0 {
+                    axpy(ar1[k], brow, &mut c1[..n]);
+                }
+            }
+            i += 2;
+        }
+        // Remainder row: 4×k-unrolled single-row update.
+        for i in i..m {
+            let arow = &a[i * kk..(i + 1) * kk];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut k = k0;
+            while k + 4 <= k1 {
+                let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+                if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                    k += 4; // free sparsity win for thresholded iterates
+                    continue;
+                }
+                let b0 = &b[k * n..(k + 1) * n];
+                let b1 = &b[(k + 1) * n..(k + 2) * n];
+                let b2 = &b[(k + 2) * n..(k + 3) * n];
+                let b3 = &b[(k + 3) * n..(k + 4) * n];
+                for j in 0..n {
+                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                k += 4;
+            }
+            for k in k..k1 {
+                let aik = arow[k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[k * n..(k + 1) * n];
+                axpy(aik, brow, crow);
+            }
+        }
+    }
+}
+
 /// y += a * x over contiguous slices; 4-way unrolled for autovectorization.
 #[inline]
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
@@ -394,6 +459,54 @@ mod tests {
             let want = naive_matmul(&a, &b);
             assert!(c.max_abs_diff(&want) < 1e-10, "{m}x{k}x{n}");
         }
+    }
+
+    fn bits(m: &Mat) -> Vec<u64> {
+        m.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn matmul_mt_bitwise_matches_serial() {
+        let mut rng = Rng::new(0xA1);
+        for &(m, k, n) in
+            &[(1usize, 1usize, 1usize), (2, 3, 4), (17, 9, 23), (64, 300, 5), (33, 70, 11)]
+        {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let serial = a.matmul(&b);
+            for threads in 1..=8 {
+                let par = a.matmul_mt(&b, threads);
+                assert_eq!(bits(&serial), bits(&par), "{m}x{k}x{n} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_bt_mt_bitwise_matches_serial() {
+        let mut rng = Rng::new(0xA2);
+        // Small case stays on the serial cutoff path; the large one
+        // (m·k·n > pool::SPAWN_MIN_WORK) actually fans out.
+        for &(m, k, n) in &[(21usize, 13usize, 9usize), (120, 90, 70)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, n, k);
+            let serial = a.matmul_bt(&b);
+            for threads in 1..=6 {
+                assert_eq!(bits(&serial), bits(&a.matmul_bt_mt(&b, threads)), "{m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_mt_handles_degenerate_shapes() {
+        let a = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 3);
+        assert_eq!(a.matmul_mt(&b, 4).shape(), (0, 3));
+        let a = Mat::zeros(4, 0);
+        let b = Mat::zeros(0, 3);
+        assert_eq!(a.matmul_mt(&b, 4), Mat::zeros(4, 3));
+        let a = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Mat::from_vec(2, 1, vec![3.0, 4.0]);
+        assert_eq!(a.matmul_mt(&b, 8).get(0, 0), 11.0);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use hpconcord::concord::{
 };
 use hpconcord::config::Config;
 use hpconcord::coordinator::{run_sweep, GridSpec};
-use hpconcord::cost::{optimize_replication, ProblemShape};
+use hpconcord::cost::ProblemShape;
 use hpconcord::gen;
 use hpconcord::linalg::Mat;
 use hpconcord::metrics::support_metrics;
@@ -55,13 +55,17 @@ fn run(r: Result<()>) -> i32 {
     }
 }
 
-/// Build the workload named by --workload/--p/--n/--deg/--seed (or a
+/// Parse the --config file once per command (empty Config when absent).
+fn load_config(args: &Args) -> Result<Config> {
+    match args.str_or("config", "").as_str() {
+        "" => Ok(Config::default()),
+        path => Config::load(path),
+    }
+}
+
+/// Build the workload named by --workload/--p/--n/--deg/--seed (or the
 /// --config file; CLI flags win).
-fn load_problem(args: &Args) -> Result<gen::Problem> {
-    let cfg = match args.str_or("config", "").as_str() {
-        "" => Config::default(),
-        path => Config::load(path)?,
-    };
+fn load_problem(args: &Args, cfg: &Config) -> Result<gen::Problem> {
     let workload = args.str_or("workload", cfg.str_or("workload", "chain")?);
     let p = args.usize_or("p", cfg.usize_or("p", 256)?)?;
     let n = args.usize_or("n", cfg.usize_or("n", 100)?)?;
@@ -75,24 +79,46 @@ fn load_problem(args: &Args) -> Result<gen::Problem> {
     }
 }
 
-fn solver_config(args: &Args) -> Result<ConcordConfig> {
+fn solver_config(args: &Args, cfg: &Config) -> Result<ConcordConfig> {
     Ok(ConcordConfig {
-        lambda1: args.f64_or("lambda1", 0.3)?,
-        lambda2: args.f64_or("lambda2", 0.0)?,
-        tol: args.f64_or("tol", 1e-5)?,
-        max_iter: args.usize_or("max-iter", 500)?,
-        max_linesearch: args.usize_or("max-linesearch", 40)?,
-        variant: match args.str_or("variant", "auto").as_str() {
+        lambda1: args.f64_or("lambda1", cfg.f64_or("solver.lambda1", 0.3)?)?,
+        lambda2: args.f64_or("lambda2", cfg.f64_or("solver.lambda2", 0.0)?)?,
+        tol: args.f64_or("tol", cfg.f64_or("solver.tol", 1e-5)?)?,
+        max_iter: args.usize_or("max-iter", cfg.usize_or("solver.max_iter", 500)?)?,
+        max_linesearch: args
+            .usize_or("max-linesearch", cfg.usize_or("solver.max_linesearch", 40)?)?,
+        variant: match args.str_or("variant", cfg.str_or("solver.variant", "auto")?).as_str() {
             "cov" => Variant::Cov,
             "obs" => Variant::Obs,
             _ => Variant::Auto,
         },
+        threads: node_threads(args, cfg)?,
+    })
+}
+
+/// The node-local thread count (the paper's per-node t): `--threads N`,
+/// else the config file's `solver.threads`, else `--threads auto` /
+/// `solver.threads = 0` picks the host's available parallelism.
+fn node_threads(args: &Args, cfg: &Config) -> Result<usize> {
+    let raw = args.str_or("threads", "");
+    let n = if raw == "auto" {
+        0
+    } else if raw.is_empty() {
+        cfg.usize_or("solver.threads", 1)?
+    } else {
+        args.usize_or("threads", 1)?
+    };
+    Ok(if n == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        n
     })
 }
 
 fn cmd_solve(args: &Args) -> Result<()> {
-    let problem = load_problem(args)?;
-    let cfg = solver_config(args)?;
+    let file_cfg = load_config(args)?;
+    let problem = load_problem(args, &file_cfg)?;
+    let cfg = solver_config(args, &file_cfg)?;
     let mode = args.str_or("mode", "single");
     let t0 = std::time::Instant::now();
 
@@ -111,9 +137,9 @@ fn cmd_solve(args: &Args) -> Result<()> {
             (fit, String::new())
         }
         "dist" => {
-            let ranks = args.usize_or("ranks", 8)?;
-            let c_x = args.usize_or("cx", 1)?;
-            let c_o = args.usize_or("comega", 1)?;
+            let ranks = args.usize_or("ranks", file_cfg.usize_or("fabric.ranks", 8)?)?;
+            let c_x = args.usize_or("cx", file_cfg.usize_or("fabric.cx", 1)?)?;
+            let c_o = args.usize_or("comega", file_cfg.usize_or("fabric.comega", 1)?)?;
             let out = fit_distributed(&problem.x, &cfg, ranks, c_x, c_o, MachineParams::default());
             let s = out.cost;
             let line = format!(
@@ -153,8 +179,9 @@ fn cmd_solve(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let problem = load_problem(args)?;
-    let base = solver_config(args)?;
+    let file_cfg = load_config(args)?;
+    let problem = load_problem(args, &file_cfg)?;
+    let base = solver_config(args, &file_cfg)?;
     let grid = GridSpec {
         lambda1: args.f64_list_or("l1", &[0.2, 0.3, 0.45])?,
         lambda2: args.f64_list_or("l2", &[0.0, 0.1])?,
@@ -186,16 +213,25 @@ fn cmd_cost(args: &Args) -> Result<()> {
         d: args.f64_or("d", 10.0)?,
     };
     let procs = args.usize_or("procs", 512)?;
+    let threads = node_threads(args, &Config::default())?;
     let variant = match args.str_or("variant", "auto").as_str() {
         "cov" => Variant::Cov,
         "obs" => Variant::Obs,
         _ => Variant::Auto,
     };
     let machine = MachineParams::default();
-    let best = optimize_replication(&shape, procs, variant, &machine, f64::INFINITY)
-        .ok_or_else(|| anyhow!("no feasible configuration"))?;
+    let best = hpconcord::cost::optimizer::optimize_replication_threaded(
+        &shape,
+        procs,
+        variant,
+        &machine,
+        f64::INFINITY,
+        threads,
+    )
+    .ok_or_else(|| anyhow!("no feasible configuration"))?;
     println!(
-        "best: {:?} with c_X={} c_Ω={} → modeled {:.4}s (mem {:.1} MWords/proc)",
+        "best: {:?} with c_X={} c_Ω={} (t={threads} node threads) → modeled {:.4}s \
+         (mem {:.1} MWords/proc)",
         best.variant,
         best.choice.c_x,
         best.choice.c_omega,
@@ -207,7 +243,7 @@ fn cmd_cost(args: &Args) -> Result<()> {
         &hpconcord::cost::ReplicationChoice { p_procs: procs, c_x: 1, c_omega: 1 },
         best.variant,
     )
-    .time(&machine, procs);
+    .time_with_threads(&machine, procs, threads);
     println!("vs c_X=c_Ω=1: {:.4}s → replication speedup {:.2}×", naive, naive / best.time);
     Ok(())
 }
@@ -222,7 +258,8 @@ fn cmd_fmri(args: &Args) -> Result<()> {
     };
     let out = hpconcord::coordinator::run_fmri_study(&params);
     println!(
-        "selected λ1={} λ2={} (density {:.4} vs target {:.4}); cross-hemisphere nnz fraction {:.4}",
+        "selected λ1={} λ2={} (density {:.4} vs target {:.4}); \
+         cross-hemisphere nnz fraction {:.4}",
         out.lambda1, out.lambda2, out.density, out.target_density, out.cross_hemisphere_fraction
     );
     let mut table = Table::new(&["hemisphere", "method", "clusters", "Jaccard vs truth"]);

@@ -48,7 +48,14 @@ pub fn support_metrics(estimate: &Mat, truth: &Csr, tol: f64) -> SupportMetrics 
     let sel = tp + fp;
     let ppv = if sel == 0 { 1.0 } else { tp as f64 / sel as f64 };
     let rec = if tp + fneg == 0 { 1.0 } else { tp as f64 / (tp + fneg) as f64 };
-    SupportMetrics { true_pos: tp, false_pos: fp, false_neg: fneg, ppv, fdr: 1.0 - ppv, recall: rec }
+    SupportMetrics {
+        true_pos: tp,
+        false_pos: fp,
+        false_neg: fneg,
+        ppv,
+        fdr: 1.0 - ppv,
+        recall: rec,
+    }
 }
 
 #[cfg(test)]

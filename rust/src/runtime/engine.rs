@@ -8,28 +8,18 @@
 //! Executables are compiled lazily (first use per artifact) and cached.
 //! All artifacts are lowered with `return_tuple=True`, so outputs are
 //! unpacked with `to_tuple`.
-
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow, bail, Context, Result};
+//!
+//! ## Feature gating
+//!
+//! The real engine needs the `xla` crate and a `libxla_extension`
+//! install, neither of which exists in the default offline image. It is
+//! therefore gated behind the non-default `pjrt` cargo feature (add the
+//! `xla` dependency locally before enabling it). Without the feature,
+//! [`Engine`] keeps the identical public API but `Engine::load` always
+//! fails, so every caller takes its native-fallback branch and the PJRT
+//! test-suite (`rust/tests/engine_pjrt.rs`) skips cleanly.
 
 use crate::linalg::Mat;
-
-/// Parsed manifest entry.
-#[derive(Debug, Clone)]
-struct ArtifactMeta {
-    kind: String,
-    file: PathBuf,
-    dims: HashMap<String, usize>,
-}
-
-/// PJRT-backed executor over the artifact directory.
-pub struct Engine {
-    client: xla::PjRtClient,
-    artifacts: HashMap<String, ArtifactMeta>,
-    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
-}
 
 /// Outputs of the fused `concord_trial` artifact.
 #[derive(Debug, Clone)]
@@ -41,184 +31,311 @@ pub struct TrialOutput {
     pub accept: bool,
 }
 
-impl Engine {
-    /// Load the manifest from an artifact directory (built by
-    /// `make artifacts`). Fails if the directory or manifest is missing;
-    /// callers treat that as "run the native fallback".
-    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
-        let dir = dir.as_ref();
-        let manifest = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {}", manifest.display()))?;
-        let mut artifacts = HashMap::new();
-        for line in text.lines().filter(|l| !l.trim().is_empty()) {
-            let mut name = None;
-            let mut kind = None;
-            let mut file = None;
-            let mut dims = HashMap::new();
-            for kv in line.split_whitespace() {
-                let (k, v) = kv
-                    .split_once('=')
-                    .ok_or_else(|| anyhow!("bad manifest token {kv:?}"))?;
-                match k {
-                    "name" => name = Some(v.to_string()),
-                    "kind" => kind = Some(v.to_string()),
-                    "file" => file = Some(dir.join(v)),
-                    _ => {
-                        dims.insert(k.to_string(), v.parse::<usize>()?);
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::TrialOutput;
+    use crate::linalg::Mat;
+
+    /// Stub engine for builds without the `pjrt` feature: the API of the
+    /// real PJRT executor, with a `load` that always reports the runtime
+    /// as unavailable. Callers treat that as "run the native fallback".
+    pub struct Engine {
+        _priv: (),
+    }
+
+    impl Engine {
+        /// Always fails in non-`pjrt` builds.
+        pub fn load(_dir: impl AsRef<Path>) -> Result<Engine> {
+            bail!(
+                "PJRT runtime not available: this binary was built without \
+                 the `pjrt` feature (libxla_extension absent); using the \
+                 native kernels instead"
+            )
+        }
+
+        /// Artifact names available (none).
+        pub fn names(&self) -> Vec<&str> {
+            Vec::new()
+        }
+
+        /// Problem sizes p with a fused-trial artifact (none).
+        pub fn trial_sizes(&self) -> Vec<usize> {
+            Vec::new()
+        }
+
+        /// One fused line-search trial; unreachable (no artifacts).
+        #[allow(clippy::too_many_arguments)]
+        pub fn trial(
+            &mut self,
+            _omega: &Mat,
+            _grad: &Mat,
+            _s: &Mat,
+            _g_prev: f64,
+            _tau: f64,
+            _lam1: f64,
+            _lam2: f64,
+        ) -> Result<TrialOutput> {
+            bail!("PJRT engine not available (built without the `pjrt` feature)")
+        }
+
+        /// (G, g(Ω)); unreachable (no artifacts).
+        pub fn gradobj(&mut self, _omega: &Mat, _w: &Mat, _lam2: f64) -> Result<(Mat, f64)> {
+            bail!("PJRT engine not available (built without the `pjrt` feature)")
+        }
+
+        /// S = XᵀX/n; unreachable (no artifacts).
+        pub fn gram(&mut self, _x: &Mat) -> Result<Mat> {
+            bail!("PJRT engine not available (built without the `pjrt` feature)")
+        }
+
+        /// C = A·B; unreachable (no artifacts).
+        pub fn matmul(&mut self, _a: &Mat, _b: &Mat) -> Result<Mat> {
+            bail!("PJRT engine not available (built without the `pjrt` feature)")
+        }
+
+        /// True when a fused trial artifact exists for size p (never).
+        pub fn has_trial(&self, _p: usize) -> bool {
+            false
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{anyhow, bail, Context, Result};
+
+    use super::TrialOutput;
+    use crate::linalg::Mat;
+
+    /// Parsed manifest entry.
+    #[derive(Debug, Clone)]
+    struct ArtifactMeta {
+        kind: String,
+        file: PathBuf,
+        dims: HashMap<String, usize>,
+    }
+
+    /// PJRT-backed executor over the artifact directory.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        artifacts: HashMap<String, ArtifactMeta>,
+        compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Engine {
+        /// Load the manifest from an artifact directory (built by
+        /// `make artifacts`). Fails if the directory or manifest is
+        /// missing; callers treat that as "run the native fallback".
+        pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+            let dir = dir.as_ref();
+            let manifest = dir.join("manifest.txt");
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading {}", manifest.display()))?;
+            let mut artifacts = HashMap::new();
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                let mut name = None;
+                let mut kind = None;
+                let mut file = None;
+                let mut dims = HashMap::new();
+                for kv in line.split_whitespace() {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| anyhow!("bad manifest token {kv:?}"))?;
+                    match k {
+                        "name" => name = Some(v.to_string()),
+                        "kind" => kind = Some(v.to_string()),
+                        "file" => file = Some(dir.join(v)),
+                        _ => {
+                            dims.insert(k.to_string(), v.parse::<usize>()?);
+                        }
                     }
                 }
+                let name = name.ok_or_else(|| anyhow!("manifest line missing name: {line}"))?;
+                artifacts.insert(
+                    name,
+                    ArtifactMeta {
+                        kind: kind.ok_or_else(|| anyhow!("missing kind"))?,
+                        file: file.ok_or_else(|| anyhow!("missing file"))?,
+                        dims,
+                    },
+                );
             }
-            let name = name.ok_or_else(|| anyhow!("manifest line missing name: {line}"))?;
-            artifacts.insert(
-                name,
-                ArtifactMeta {
-                    kind: kind.ok_or_else(|| anyhow!("missing kind"))?,
-                    file: file.ok_or_else(|| anyhow!("missing file"))?,
-                    dims,
-                },
-            );
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Engine { client, artifacts, compiled: HashMap::new() })
         }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine { client, artifacts, compiled: HashMap::new() })
-    }
 
-    /// Artifact names available.
-    pub fn names(&self) -> Vec<&str> {
-        self.artifacts.keys().map(|s| s.as_str()).collect()
-    }
+        /// Artifact names available.
+        pub fn names(&self) -> Vec<&str> {
+            self.artifacts.keys().map(|s| s.as_str()).collect()
+        }
 
-    /// Problem sizes p with a fused-trial artifact.
-    pub fn trial_sizes(&self) -> Vec<usize> {
-        let mut v: Vec<usize> = self
-            .artifacts
-            .values()
-            .filter(|a| a.kind == "trial")
-            .filter_map(|a| a.dims.get("p").copied())
-            .collect();
-        v.sort_unstable();
-        v
-    }
-
-    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.compiled.contains_key(name) {
-            let meta = self
+        /// Problem sizes p with a fused-trial artifact.
+        pub fn trial_sizes(&self) -> Vec<usize> {
+            let mut v: Vec<usize> = self
                 .artifacts
-                .get(name)
-                .ok_or_else(|| anyhow!("no artifact named {name}"))?;
-            let path = meta
-                .file
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path"))?
-                .to_string();
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-            self.compiled.insert(name.to_string(), exe);
+                .values()
+                .filter(|a| a.kind == "trial")
+                .filter_map(|a| a.dims.get("p").copied())
+                .collect();
+            v.sort_unstable();
+            v
         }
-        Ok(&self.compiled[name])
-    }
 
-    fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
-    }
-
-    /// One fused line-search trial via the `trial_p{p}` artifact.
-    #[allow(clippy::too_many_arguments)]
-    pub fn trial(
-        &mut self,
-        omega: &Mat,
-        grad: &Mat,
-        s: &Mat,
-        g_prev: f64,
-        tau: f64,
-        lam1: f64,
-        lam2: f64,
-    ) -> Result<TrialOutput> {
-        let p = omega.rows();
-        let name = format!("trial_p{p}");
-        let inputs = vec![
-            mat_literal(omega)?,
-            mat_literal(grad)?,
-            mat_literal(s)?,
-            scalar1(g_prev),
-            scalar1(tau),
-            scalar1(lam1),
-            scalar1(lam2),
-        ];
-        let outs = self.execute(&name, &inputs)?;
-        if outs.len() != 5 {
-            bail!("trial artifact returned {} outputs, want 5", outs.len());
+        fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.compiled.contains_key(name) {
+                let meta = self
+                    .artifacts
+                    .get(name)
+                    .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+                let path = meta
+                    .file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path"))?
+                    .to_string();
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+                self.compiled.insert(name.to_string(), exe);
+            }
+            Ok(&self.compiled[name])
         }
-        let omega_new = literal_mat(&outs[0], p, p)?;
-        let w_new = literal_mat(&outs[1], p, p)?;
-        let g_new = literal_scalar(&outs[2])?;
-        let rhs = literal_scalar(&outs[3])?;
-        let accept = literal_scalar(&outs[4])? != 0.0;
-        Ok(TrialOutput { omega_new, w_new, g_new, rhs, accept })
+
+        fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let exe = self.executable(name)?;
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+            lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+        }
+
+        /// One fused line-search trial via the `trial_p{p}` artifact.
+        #[allow(clippy::too_many_arguments)]
+        pub fn trial(
+            &mut self,
+            omega: &Mat,
+            grad: &Mat,
+            s: &Mat,
+            g_prev: f64,
+            tau: f64,
+            lam1: f64,
+            lam2: f64,
+        ) -> Result<TrialOutput> {
+            let p = omega.rows();
+            let name = format!("trial_p{p}");
+            let inputs = vec![
+                mat_literal(omega)?,
+                mat_literal(grad)?,
+                mat_literal(s)?,
+                scalar1(g_prev),
+                scalar1(tau),
+                scalar1(lam1),
+                scalar1(lam2),
+            ];
+            let outs = self.execute(&name, &inputs)?;
+            if outs.len() != 5 {
+                bail!("trial artifact returned {} outputs, want 5", outs.len());
+            }
+            let omega_new = literal_mat(&outs[0], p, p)?;
+            let w_new = literal_mat(&outs[1], p, p)?;
+            let g_new = literal_scalar(&outs[2])?;
+            let rhs = literal_scalar(&outs[3])?;
+            let accept = literal_scalar(&outs[4])? != 0.0;
+            Ok(TrialOutput { omega_new, w_new, g_new, rhs, accept })
+        }
+
+        /// (G, g(Ω)) via the `gradobj_p{p}` artifact.
+        pub fn gradobj(&mut self, omega: &Mat, w: &Mat, lam2: f64) -> Result<(Mat, f64)> {
+            let p = omega.rows();
+            let name = format!("gradobj_p{p}");
+            let outs =
+                self.execute(&name, &[mat_literal(omega)?, mat_literal(w)?, scalar1(lam2)])?;
+            Ok((literal_mat(&outs[0], p, p)?, literal_scalar(&outs[1])?))
+        }
+
+        /// S = XᵀX/n via the `gram_n{n}_p{p}` artifact (exact-shape only).
+        pub fn gram(&mut self, x: &Mat) -> Result<Mat> {
+            let (n, p) = x.shape();
+            let name = format!("gram_n{n}_p{p}");
+            let outs = self.execute(&name, &[mat_literal(x)?])?;
+            literal_mat(&outs[0], p, p)
+        }
+
+        /// C = A·B via the `matmul_{m}x{k}x{n}` artifact (exact-shape only).
+        pub fn matmul(&mut self, a: &Mat, b: &Mat) -> Result<Mat> {
+            let (m, k) = a.shape();
+            let n = b.cols();
+            let name = format!("matmul_{m}x{k}x{n}");
+            let outs = self.execute(&name, &[mat_literal(a)?, mat_literal(b)?])?;
+            literal_mat(&outs[0], m, n)
+        }
+
+        /// True when a fused trial artifact exists for size p.
+        pub fn has_trial(&self, p: usize) -> bool {
+            self.artifacts.contains_key(&format!("trial_p{p}"))
+        }
     }
 
-    /// (G, g(Ω)) via the `gradobj_p{p}` artifact.
-    pub fn gradobj(&mut self, omega: &Mat, w: &Mat, lam2: f64) -> Result<(Mat, f64)> {
-        let p = omega.rows();
-        let name = format!("gradobj_p{p}");
-        let outs = self.execute(&name, &[mat_literal(omega)?, mat_literal(w)?, scalar1(lam2)])?;
-        Ok((literal_mat(&outs[0], p, p)?, literal_scalar(&outs[1])?))
+    fn mat_literal(m: &Mat) -> Result<xla::Literal> {
+        xla::Literal::vec1(m.data())
+            .reshape(&[m.rows() as i64, m.cols() as i64])
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
     }
 
-    /// S = XᵀX/n via the `gram_n{n}_p{p}` artifact (exact-shape only).
-    pub fn gram(&mut self, x: &Mat) -> Result<Mat> {
-        let (n, p) = x.shape();
-        let name = format!("gram_n{n}_p{p}");
-        let outs = self.execute(&name, &[mat_literal(x)?])?;
-        literal_mat(&outs[0], p, p)
+    fn scalar1(v: f64) -> xla::Literal {
+        xla::Literal::vec1(&[v])
     }
 
-    /// C = A·B via the `matmul_{m}x{k}x{n}` artifact (exact-shape only).
-    pub fn matmul(&mut self, a: &Mat, b: &Mat) -> Result<Mat> {
-        let (m, k) = a.shape();
-        let n = b.cols();
-        let name = format!("matmul_{m}x{k}x{n}");
-        let outs = self.execute(&name, &[mat_literal(a)?, mat_literal(b)?])?;
-        literal_mat(&outs[0], m, n)
+    fn literal_mat(l: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+        let v = l.to_vec::<f64>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+        if v.len() != rows * cols {
+            bail!("literal size {} != {rows}x{cols}", v.len());
+        }
+        Ok(Mat::from_vec(rows, cols, v))
     }
 
-    /// True when a fused trial artifact exists for size p.
-    pub fn has_trial(&self, p: usize) -> bool {
-        self.artifacts.contains_key(&format!("trial_p{p}"))
+    fn literal_scalar(l: &xla::Literal) -> Result<f64> {
+        let v = l.to_vec::<f64>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+        v.first().copied().ok_or_else(|| anyhow!("empty literal"))
     }
 }
 
-fn mat_literal(m: &Mat) -> Result<xla::Literal> {
-    xla::Literal::vec1(m.data())
-        .reshape(&[m.rows() as i64, m.cols() as i64])
-        .map_err(|e| anyhow!("reshape literal: {e:?}"))
-}
+pub use imp::Engine;
 
-fn scalar1(v: f64) -> xla::Literal {
-    xla::Literal::vec1(&[v])
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-fn literal_mat(l: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
-    let v = l.to_vec::<f64>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
-    if v.len() != rows * cols {
-        bail!("literal size {} != {rows}x{cols}", v.len());
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let err = Engine::load("artifacts").unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
     }
-    Ok(Mat::from_vec(rows, cols, v))
-}
 
-fn literal_scalar(l: &xla::Literal) -> Result<f64> {
-    let v = l.to_vec::<f64>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
-    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+    #[test]
+    fn trial_output_is_plain_data() {
+        let t = TrialOutput {
+            omega_new: crate::linalg::Mat::eye(2),
+            w_new: crate::linalg::Mat::eye(2),
+            g_new: 1.0,
+            rhs: 2.0,
+            accept: true,
+        };
+        assert!(t.accept && t.g_new < t.rhs);
+        assert_eq!(t.omega_new.rows(), t.w_new.rows());
+    }
 }

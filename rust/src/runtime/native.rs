@@ -4,15 +4,26 @@
 //! graphs: the single-node solver runs on these at arbitrary p, and the
 //! integration tests assert the PJRT-executed artifacts agree with them
 //! to near machine precision.
+//!
+//! Every operation has a `_mt` form taking the node-local thread count
+//! (the paper's per-node `t`); the plain forms are the serial `t = 1`
+//! case. All `_mt` results are identical at any thread count (matrix
+//! passes bit-for-bit, scalar reductions via the fixed-block order of
+//! [`ops::REDUCE_BLOCK_ROWS`]).
 
 use crate::concord::ops;
 use crate::linalg::{Csr, Mat};
 
 /// S = (1/n)·XᵀX (model.gram).
 pub fn gram(x: &Mat) -> Mat {
+    gram_mt(x, 1)
+}
+
+/// [`gram`] on `threads` node-local workers.
+pub fn gram_mt(x: &Mat, threads: usize) -> Mat {
     let n = x.rows();
     let xt = x.transpose();
-    let mut s = xt.matmul(x);
+    let mut s = xt.matmul_mt(x, threads);
     s.scale(1.0 / n as f64);
     s
 }
@@ -21,21 +32,33 @@ pub fn gram(x: &Mat) -> Mat {
 /// CSR pass when it pays (density below ~40%), matching the paper's
 /// sparse-dense local multiply.
 pub fn w_step(omega: &Mat, s: &Mat) -> Mat {
+    w_step_mt(omega, s, 1)
+}
+
+/// [`w_step`] on `threads` node-local workers. The sparse/dense routing
+/// decision depends only on the iterate's density, so the thread count
+/// never changes which kernel runs — only how its rows are partitioned.
+pub fn w_step_mt(omega: &Mat, s: &Mat, threads: usize) -> Mat {
     let p = omega.rows();
     let density = omega.nnz() as f64 / (p * p) as f64;
     if density < 0.4 {
-        Csr::from_dense(omega, 0.0).spmm(s)
+        Csr::from_dense(omega, 0.0).spmm_mt(s, threads)
     } else {
-        omega.matmul(s)
+        omega.matmul_mt(s, threads)
     }
 }
 
 /// (G, g(Ω)) from the iterate and W = ΩS (model.gradient_obj). Returns
 /// g = +∞ when the diagonal is non-positive.
 pub fn gradobj(omega: &Mat, w: &Mat, lam2: f64) -> (Mat, f64) {
+    gradobj_mt(omega, w, lam2, 1)
+}
+
+/// [`gradobj`] on `threads` node-local workers.
+pub fn gradobj_mt(omega: &Mat, w: &Mat, lam2: f64, threads: usize) -> (Mat, f64) {
     let wt = w.transpose();
-    let g_mat = ops::gradient_block(omega, w, &wt, 0, lam2);
-    let g_val = match ops::objective_parts_block(omega, w, 0) {
+    let g_mat = ops::gradient_block_mt(omega, w, &wt, 0, lam2, threads);
+    let g_val = match ops::objective_parts_block_mt(omega, w, 0, threads) {
         Some([logd, tr, fro]) => -logd + 0.5 * tr + 0.5 * lam2 * fro,
         None => f64::INFINITY,
     };
@@ -63,13 +86,28 @@ pub fn trial(
     lam1: f64,
     lam2: f64,
 ) -> Trial {
-    let omega_new = ops::prox_block(omega, grad, 0, tau, lam1);
-    let w_new = w_step(&omega_new, s);
-    let g_new = match ops::objective_parts_block(&omega_new, &w_new, 0) {
+    trial_mt(omega, grad, s, g_prev, tau, lam1, lam2, 1)
+}
+
+/// [`trial`] on `threads` node-local workers.
+#[allow(clippy::too_many_arguments)]
+pub fn trial_mt(
+    omega: &Mat,
+    grad: &Mat,
+    s: &Mat,
+    g_prev: f64,
+    tau: f64,
+    lam1: f64,
+    lam2: f64,
+    threads: usize,
+) -> Trial {
+    let omega_new = ops::prox_block_mt(omega, grad, 0, tau, lam1, threads);
+    let w_new = w_step_mt(&omega_new, s, threads);
+    let g_new = match ops::objective_parts_block_mt(&omega_new, &w_new, 0, threads) {
         Some([logd, tr, fro]) => -logd + 0.5 * tr + 0.5 * lam2 * fro,
         None => f64::INFINITY,
     };
-    let ls = ops::linesearch_parts_block(omega, &omega_new, grad);
+    let ls = ops::linesearch_parts_block_mt(omega, &omega_new, grad, threads);
     let rhs = g_prev - ls[0] + ls[1] / (2.0 * tau);
     Trial { omega_new, w_new, g_new, rhs, accept: g_new <= rhs }
 }
@@ -152,5 +190,32 @@ mod tests {
         let t = trial(&omega, &grad, &s, 0.0, 1.0, 0.1, 0.0);
         assert!(t.g_new.is_infinite());
         assert!(!t.accept);
+    }
+
+    #[test]
+    fn threaded_ops_are_thread_count_invariant() {
+        let mut rng = Rng::new(4);
+        let p = 70; // spans two reduction blocks
+        let x = Mat::from_fn(40, p, |_, _| rng.normal());
+        let s1 = gram_mt(&x, 1);
+        let omega = Mat::eye(p);
+        let w1 = w_step_mt(&omega, &s1, 1);
+        let (g1, v1) = gradobj_mt(&omega, &w1, 0.1, 1);
+        let t1 = trial_mt(&omega, &g1, &s1, v1, 0.5, 0.3, 0.1, 1);
+        for threads in [2usize, 4, 7] {
+            let s = gram_mt(&x, threads);
+            assert!(s.max_abs_diff(&s1) == 0.0, "gram t={threads}");
+            let w = w_step_mt(&omega, &s, threads);
+            assert!(w.max_abs_diff(&w1) == 0.0, "w_step t={threads}");
+            let (g, v) = gradobj_mt(&omega, &w, 0.1, threads);
+            assert!(g.max_abs_diff(&g1) == 0.0, "grad t={threads}");
+            assert_eq!(v.to_bits(), v1.to_bits(), "objective t={threads}");
+            let t = trial_mt(&omega, &g, &s, v, 0.5, 0.3, 0.1, threads);
+            assert!(t.omega_new.max_abs_diff(&t1.omega_new) == 0.0);
+            assert!(t.w_new.max_abs_diff(&t1.w_new) == 0.0);
+            assert_eq!(t.g_new.to_bits(), t1.g_new.to_bits());
+            assert_eq!(t.rhs.to_bits(), t1.rhs.to_bits());
+            assert_eq!(t.accept, t1.accept);
+        }
     }
 }

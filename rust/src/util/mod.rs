@@ -1,9 +1,11 @@
 //! Small self-contained utilities standing in for crates unavailable in
 //! this offline environment: benchmark timing/statistics (no criterion),
-//! an ASCII table printer for the paper-figure benches, and a property
-//! testing harness (no proptest).
+//! an ASCII table printer for the paper-figure benches, a property
+//! testing harness (no proptest), and the deterministic node-local
+//! thread pool (no rayon) that backs the parallel linear algebra layer.
 
 pub mod bench;
+pub mod pool;
 pub mod proptest;
 pub mod table;
 

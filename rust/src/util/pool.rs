@@ -1,0 +1,198 @@
+//! Deterministic scoped thread pool for node-local parallelism — the
+//! paper's "threaded MKL on every node" (§4 runs 24 threads per node;
+//! the Lemma 3.1–3.5 flop terms are divided by the per-node thread
+//! count t).
+//!
+//! Design rules, chosen so every parallel kernel is **bit-for-bit
+//! identical to its serial twin at any thread count**:
+//!
+//! - work is partitioned by contiguous *row ranges* (optionally aligned,
+//!   e.g. to the GEMM kernel's 2-row pairing) and every output element
+//!   is written by exactly one worker running the unmodified serial
+//!   inner loop — no atomics, no reduction races;
+//! - scalar reductions never combine in thread order: callers reduce
+//!   over *fixed-size blocks* (see `ops::REDUCE_BLOCK_ROWS`) whose
+//!   partials are concatenated by block index, so the combination order
+//!   is a function of the problem shape only, never of `threads`;
+//! - workers are `std::thread::scope` threads (no external deps, no
+//!   unsafe); chunk 0 runs on the calling thread.
+//!
+//! The entry points are [`chunk_ranges`] (the partition), [`par_map`]
+//! (gather per-chunk results in chunk order) and [`par_rows_mut`]
+//! (write disjoint row ranges of one output buffer in place).
+
+/// Minimum work (output elements × inner length, or nnz·n for SpMM)
+/// below which the `_mt` kernels stay serial: a scoped spawn+join
+/// cycle costs tens of microseconds, which dwarfs the loop bodies on
+/// the small per-rank slabs the simulated fabric produces (e.g. 4-row
+/// prox slabs run per line-search trial). Serial and parallel paths
+/// are bit-identical, so the cutoff never changes results — only
+/// where the wall-clock win starts.
+pub const SPAWN_MIN_WORK: usize = 1 << 16;
+
+/// Split `items` into at most `threads` contiguous ranges with
+/// boundaries aligned down to multiples of `align` (the trailing range
+/// absorbs the remainder). Ranges may be empty; concatenated in order
+/// they cover `0..items` exactly. The partition depends only on
+/// `(items, threads, align)` — never on data.
+pub fn chunk_ranges(items: usize, threads: usize, align: usize) -> Vec<(usize, usize)> {
+    let t = threads.max(1);
+    let a = align.max(1);
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0usize);
+    for k in 1..t {
+        let ideal = items * k / t;
+        let aligned = ideal / a * a;
+        let prev = *bounds.last().expect("nonempty");
+        bounds.push(aligned.max(prev).min(items));
+    }
+    bounds.push(items);
+    bounds.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+/// Run `f(chunk_index, start, end)` for every non-empty range on its own
+/// scoped thread (chunk 0 on the caller) and return the results in
+/// chunk order. With one usable chunk this is a plain serial call.
+pub fn par_map<T, F>(ranges: &[(usize, usize)], f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize, usize) -> T + Sync,
+{
+    let work: Vec<(usize, usize, usize)> = ranges
+        .iter()
+        .enumerate()
+        .filter(|(_, (s, e))| e > s)
+        .map(|(i, &(s, e))| (i, s, e))
+        .collect();
+    if work.len() <= 1 {
+        return work.into_iter().map(|(i, s, e)| f(i, s, e)).collect();
+    }
+    std::thread::scope(|scope| {
+        let fr = &f;
+        let handles: Vec<_> = work[1..]
+            .iter()
+            .map(|&(i, s, e)| scope.spawn(move || fr(i, s, e)))
+            .collect();
+        let (i0, s0, e0) = work[0];
+        let mut out = vec![fr(i0, s0, e0)];
+        for h in handles {
+            out.push(h.join().expect("pool worker panicked"));
+        }
+        out
+    })
+}
+
+/// Split `out` (a row-major buffer of rows of `row_width` elements) at
+/// the given row ranges and run `f(chunk_index, start_row, end_row,
+/// chunk_rows)` with each chunk's disjoint sub-slice, concurrently.
+/// Ranges must tile `0..out.len()/row_width` (as [`chunk_ranges`]
+/// produces).
+pub fn par_rows_mut<F>(out: &mut [f64], row_width: usize, ranges: &[(usize, usize)], f: F)
+where
+    F: Fn(usize, usize, usize, &mut [f64]) + Sync,
+{
+    let total_rows = ranges.last().map_or(0, |&(_, e)| e);
+    assert_eq!(out.len(), total_rows * row_width, "ranges must tile the buffer");
+    let mut slices: Vec<(usize, usize, usize, &mut [f64])> = Vec::with_capacity(ranges.len());
+    let mut rest = out;
+    for (i, &(s, e)) in ranges.iter().enumerate() {
+        let (head, tail) = rest.split_at_mut((e - s) * row_width);
+        rest = tail;
+        if e > s {
+            slices.push((i, s, e, head));
+        }
+    }
+    if slices.len() <= 1 {
+        for (i, s, e, sl) in slices {
+            f(i, s, e, sl);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let fr = &f;
+        let mut iter = slices.into_iter();
+        let first = iter.next().expect("len > 1");
+        let handles: Vec<_> = iter
+            .map(|(i, s, e, sl)| scope.spawn(move || fr(i, s, e, sl)))
+            .collect();
+        let (i, s, e, sl) = first;
+        fr(i, s, e, sl);
+        for h in handles {
+            h.join().expect("pool worker panicked");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn ranges_tile_and_align() {
+        for items in [0usize, 1, 2, 3, 17, 64, 1023] {
+            for threads in 1..=8 {
+                for align in [1usize, 2, 4] {
+                    let r = chunk_ranges(items, threads, align);
+                    assert_eq!(r.len(), threads);
+                    let mut next = 0;
+                    for (i, &(s, e)) in r.iter().enumerate() {
+                        assert_eq!(s, next, "items={items} t={threads} a={align}");
+                        assert!(e >= s);
+                        if i + 1 < r.len() {
+                            assert_eq!(e % align, 0, "interior boundary must be aligned");
+                        }
+                        next = e;
+                    }
+                    assert_eq!(next, items);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_returns_in_chunk_order() {
+        let ranges = chunk_ranges(100, 4, 1);
+        let out = par_map(&ranges, |i, s, e| (i, s, e));
+        assert_eq!(out.len(), 4);
+        for (k, &(i, s, e)) in out.iter().enumerate() {
+            assert_eq!(k, i);
+            assert_eq!((s, e), ranges[i]);
+        }
+    }
+
+    #[test]
+    fn par_rows_mut_writes_every_row_once() {
+        let rows = 37;
+        let width = 5;
+        let mut buf = vec![0.0f64; rows * width];
+        let touched = AtomicUsize::new(0);
+        for threads in [1usize, 2, 3, 8] {
+            buf.iter_mut().for_each(|v| *v = 0.0);
+            touched.store(0, Ordering::SeqCst);
+            par_rows_mut(&mut buf, width, &chunk_ranges(rows, threads, 2), |_i, s, e, sl| {
+                assert_eq!(sl.len(), (e - s) * width);
+                for (r, row) in sl.chunks_exact_mut(width).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (s + r) as f64 + 1.0;
+                    }
+                }
+                touched.fetch_add(e - s, Ordering::SeqCst);
+            });
+            assert_eq!(touched.load(Ordering::SeqCst), rows, "threads={threads}");
+            for r in 0..rows {
+                for c in 0..width {
+                    assert_eq!(buf[r * width + c], r as f64 + 1.0, "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_work_is_fine() {
+        let r = chunk_ranges(0, 4, 2);
+        assert!(par_map(&r, |_, _, _| 1).is_empty());
+        let mut buf: Vec<f64> = Vec::new();
+        par_rows_mut(&mut buf, 3, &r, |_, _, _, _| panic!("no chunks to run"));
+    }
+}

@@ -140,7 +140,8 @@ fn auto_variant_switches_with_regime() {
     let mut rng = Rng::new(15);
     // Plenty of samples → Cov.
     let many = gen::chain_problem(32, 256, &mut rng);
-    let cfg = ConcordConfig { lambda1: 0.3, max_iter: 30, variant: Variant::Auto, ..Default::default() };
+    let cfg =
+        ConcordConfig { lambda1: 0.3, max_iter: 30, variant: Variant::Auto, ..Default::default() };
     let out = fit_distributed(&many.x, &cfg, 4, 1, 1, MachineParams::default());
     assert_eq!(out.variant, Variant::Cov);
 }

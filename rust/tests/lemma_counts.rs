@@ -19,6 +19,7 @@ fn fixed_budget_cfg() -> ConcordConfig {
         max_iter: 6,
         max_linesearch: 40,
         variant: Variant::Obs,
+        threads: 1,
     }
 }
 
@@ -61,7 +62,11 @@ fn lemma33_bounds_hold_at_scale() {
         let rounds = (p_ranks / (c_r * c_f)) as u64;
         let nnz_r = (grid_r.teams() * elems) as u64;
         for c in &run.counters {
-            assert!(c.messages <= rounds, "messages {} > {rounds} (c_R={c_r}, c_F={c_f})", c.messages);
+            assert!(
+                c.messages <= rounds,
+                "messages {} > {rounds} (c_R={c_r}, c_F={c_f})",
+                c.messages
+            );
             assert!(
                 c.words <= nnz_r / c_f as u64,
                 "words {} > nnz(R)/c_F = {} (c_R={c_r}, c_F={c_f})",
@@ -98,6 +103,42 @@ fn transpose_messages_shrink_with_replication() {
     // Bruck both are logarithmic: 4 vs 2 (+3 team-sync messages).
     assert_eq!(m1, 4, "log2(16) Bruck rounds");
     assert_eq!(m4, 2 + 3, "log2(4) Bruck rounds + (c-1) allgather");
+}
+
+/// Regression: intra-node threading must never touch communication.
+/// The metered per-rank and total L (messages) and W (words) — and the
+/// analytic flop tallies — are identical whether each simulated rank
+/// runs its local kernels on 1 or 4 threads, for both variants and a
+/// replicated configuration. Threading only divides the γ flop *time*
+/// (Lemma 3.5's F/t term); the counts are machine facts.
+#[test]
+fn threading_leaves_message_and_word_counts_unchanged() {
+    use hpconcord::concord::cov::fit_cov_rank;
+    let mut rng = Rng::new(9);
+    let problem = gen::chain_problem(32, 24, &mut rng);
+
+    let run_counts = |variant: Variant, threads: usize| {
+        let x = Arc::new(problem.x.clone());
+        let mut cfg = fixed_budget_cfg();
+        cfg.variant = variant;
+        cfg.threads = threads;
+        let run = Fabric::new(8).run(move |comm| match variant {
+            Variant::Cov => fit_cov_rank(comm, &x, &cfg, 2, 2),
+            _ => fit_obs_rank(comm, &x, &cfg, 2, 2),
+        });
+        (run.counters.clone(), run.summary())
+    };
+
+    for variant in [Variant::Cov, Variant::Obs] {
+        let (per_rank_1, sum_1) = run_counts(variant, 1);
+        let (per_rank_4, sum_4) = run_counts(variant, 4);
+        assert_eq!(per_rank_1, per_rank_4, "{variant:?}: per-rank counters changed");
+        assert_eq!(sum_1.total, sum_4.total, "{variant:?}: totals changed");
+        assert_eq!(
+            sum_1.max_per_rank, sum_4.max_per_rank,
+            "{variant:?}: critical-path counts changed"
+        );
+    }
 }
 
 /// The end-to-end modeled time improves when the replication optimizer's

@@ -1,0 +1,178 @@
+//! The parallel linear algebra layer's contract, enforced end to end:
+//!
+//! 1. **Bit-for-bit kernel equivalence** — the multithreaded
+//!    `matmul_into` / `matmul_bt` / `spmm` are property-tested against
+//!    the serial reference across randomized shapes (empty, 1×n, odd
+//!    remainders) and thread counts 1–8. The parallel kernels partition
+//!    rows on aligned boundaries and run the unmodified serial inner
+//!    loops, so equality here is exact, not approximate.
+//! 2. **Solver determinism** — `fit_distributed` on a fixed seed
+//!    returns a byte-identical estimate and identical metered
+//!    communication/flop counters across `threads ∈ {1, 2, 4}` and
+//!    across repeated runs: intra-node threading must only change
+//!    wall-clock time, never results or the paper's L/W counts.
+
+use hpconcord::concord::{fit_distributed, fit_single_node, ConcordConfig, Variant};
+use hpconcord::linalg::{Csr, Mat};
+use hpconcord::prelude::*;
+use hpconcord::prop_assert;
+use hpconcord::simnet::cost::Counters;
+use hpconcord::util::proptest::check;
+
+fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn bits(m: &Mat) -> Vec<u64> {
+    m.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Shapes that exercise the kernels' edges: empty dims, single rows
+/// (no 2-row pairing), odd remainders against the 2-row/4-k unrolling,
+/// and sizes straddling the k-blocking boundary.
+fn edge_dim(rng: &mut Rng) -> usize {
+    match rng.below(6) {
+        0 => 0,
+        1 => 1,
+        2 => 2 + rng.below(3) as usize,          // tiny
+        3 => 15 + rng.below(4) as usize,         // odd-ish remainders
+        4 => 64,                                 // exact unroll multiples
+        _ => 30 + rng.below(40) as usize,        // general
+    }
+}
+
+#[test]
+fn prop_matmul_mt_bitwise_equals_serial() {
+    check(0xD15E1, 40, |rng| {
+        let (m, k, n) = (edge_dim(rng), edge_dim(rng), edge_dim(rng));
+        let a = random_mat(rng, m, k);
+        let b = random_mat(rng, k, n);
+        let serial = a.matmul(&b);
+        for threads in 1..=8 {
+            let par = a.matmul_mt(&b, threads);
+            prop_assert!(
+                bits(&serial) == bits(&par),
+                "matmul {m}x{k}x{n} differs at threads={threads}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matmul_bt_mt_bitwise_equals_serial() {
+    check(0xD15E2, 40, |rng| {
+        let (m, k, n) = (edge_dim(rng), edge_dim(rng), edge_dim(rng));
+        let a = random_mat(rng, m, k);
+        let bt = random_mat(rng, n, k); // B already transposed: n × k
+        let serial = a.matmul_bt(&bt);
+        for threads in 1..=8 {
+            let par = a.matmul_bt_mt(&bt, threads);
+            prop_assert!(
+                bits(&serial) == bits(&par),
+                "matmul_bt {m}x{k}x{n} differs at threads={threads}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmm_mt_bitwise_equals_serial() {
+    check(0xD15E3, 40, |rng| {
+        let (m, k, n) = (edge_dim(rng), edge_dim(rng), edge_dim(rng));
+        let density = rng.uniform();
+        let dense = Mat::from_fn(m, k, |_, _| {
+            if rng.uniform() < density {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let a = Csr::from_dense(&dense, 0.0);
+        let b = random_mat(rng, k, n);
+        let serial = a.spmm(&b);
+        for threads in 1..=8 {
+            let par = a.spmm_mt(&b, threads);
+            prop_assert!(
+                bits(&serial) == bits(&par),
+                "spmm {m}x{k}x{n} (density {density:.2}) differs at threads={threads}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Shared fixture for the solver determinism tests: a fixed-seed chain
+/// problem solved distributed on 8 ranks with replication.
+fn dist_fixture(variant: Variant, threads: usize) -> (Vec<u64>, usize, Counters, Counters) {
+    let mut rng = Rng::new(0xF1D0);
+    let problem = gen::chain_problem(32, 40, &mut rng);
+    let cfg = ConcordConfig {
+        lambda1: 0.3,
+        lambda2: 0.1,
+        tol: 1e-5,
+        max_iter: 60,
+        variant,
+        threads,
+        ..Default::default()
+    };
+    let out = fit_distributed(&problem.x, &cfg, 8, 2, 2, MachineParams::edison_like());
+    (bits(&out.fit.omega), out.fit.iterations, out.cost.total, out.cost.max_per_rank)
+}
+
+#[test]
+fn fit_distributed_is_byte_identical_across_thread_counts() {
+    for variant in [Variant::Cov, Variant::Obs] {
+        let (omega1, iters1, total1, max1) = dist_fixture(variant, 1);
+        for threads in [2usize, 4] {
+            let (omega, iters, total, max) = dist_fixture(variant, threads);
+            assert_eq!(iters, iters1, "{variant:?}: iterations changed at threads={threads}");
+            assert_eq!(
+                omega, omega1,
+                "{variant:?}: estimate not byte-identical at threads={threads}"
+            );
+            assert_eq!(
+                total, total1,
+                "{variant:?}: total counters changed at threads={threads}"
+            );
+            assert_eq!(
+                max, max1,
+                "{variant:?}: per-rank max counters changed at threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fit_distributed_is_byte_identical_across_repeated_runs() {
+    let first = dist_fixture(Variant::Obs, 2);
+    for _ in 0..2 {
+        let again = dist_fixture(Variant::Obs, 2);
+        assert_eq!(first.0, again.0, "estimate drifted between runs");
+        assert_eq!(first.1, again.1);
+        assert_eq!(first.2, again.2, "counters drifted between runs");
+        assert_eq!(first.3, again.3);
+    }
+}
+
+#[test]
+fn fit_single_node_is_byte_identical_across_thread_counts() {
+    let mut rng = Rng::new(0xF1D1);
+    let problem = gen::chain_problem(48, 60, &mut rng);
+    let base = ConcordConfig {
+        lambda1: 0.25,
+        lambda2: 0.05,
+        tol: 1e-6,
+        max_iter: 80,
+        variant: Variant::Cov,
+        ..Default::default()
+    };
+    let f1 = fit_single_node(&problem.x, &ConcordConfig { threads: 1, ..base }).unwrap();
+    for threads in [2usize, 4, 8] {
+        let ft = fit_single_node(&problem.x, &ConcordConfig { threads, ..base }).unwrap();
+        assert_eq!(f1.iterations, ft.iterations, "threads={threads}");
+        assert_eq!(bits(&f1.omega), bits(&ft.omega), "threads={threads}");
+        assert_eq!(f1.objective.to_bits(), ft.objective.to_bits(), "threads={threads}");
+    }
+}

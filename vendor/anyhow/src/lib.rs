@@ -1,0 +1,180 @@
+//! Offline shim for the subset of the `anyhow` API this repository uses:
+//! [`Error`], [`Result`], the [`anyhow!`] and [`bail!`] macros, and the
+//! [`Context`] extension trait. The real crate is not vendored in the
+//! offline image; this one is API-compatible for our call sites so the
+//! code reads exactly as it would with crates.io `anyhow`.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what allows the blanket
+//! `impl From<E: std::error::Error> for Error` powering `?` conversions.
+
+use std::fmt;
+
+/// A string-chained error: a message plus an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build from anything displayable (the `anyhow!` macro target).
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap `self` under a higher-level context message.
+    pub fn context(self, msg: impl fmt::Display) -> Self {
+        Error { msg: msg.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain, outermost first.
+    fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, colon-separated (anyhow's
+            // convention, used by the launcher's `error: {e:#}`).
+            let mut first = true;
+            for e in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{}", e.msg)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&Error> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {}", c.msg)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // Preserve the std cause chain as message context.
+        let mut msgs = vec![e.to_string()];
+        let mut cause = e.source();
+        while let Some(c) = cause {
+            msgs.push(c.to_string());
+            cause = c.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.expect("at least the top-level message")
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "inner 42");
+        let e = e.context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::num::ParseIntError> =
+            "z".parse::<usize>().map(|_| ());
+        let e = r.context("while parsing").unwrap_err();
+        assert_eq!(format!("{e}"), "while parsing");
+        let o: Option<u8> = None;
+        assert!(o.with_context(|| "missing").is_err());
+    }
+}
