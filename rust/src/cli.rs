@@ -102,8 +102,15 @@ COMMANDS:
            --mode single|dist  [--ranks P --cx C --comega C]
            [--threads N|auto]  (node-local worker threads, the paper's t)
            [--variant cov|obs|auto]  [--config FILE]  [--artifacts DIR]
+           [--screen]  (exact-thresholding screening: split into the
+             connected components of {|S_ij| > λ1}; in dist mode the
+             cost model sizes one fabric per component, --ranks is the
+             budget, and explicit --cx/--comega pin every fabric)
+           [--screen-cutoff N]  (components ≤ N solve single-node; 4)
   sweep    (λ1, λ2) grid sweep via the coordinator
            --l1 a,b,c --l2 a,b  [--workers N]  + workload options
+           [--screen]  (screened sweep: one gram + nested components
+             reused across the whole λ grid)
   cost     Analytic cost model (Lemmas 3.1–3.5) over replication grid
            --p N --n N --s F --t F --d F --procs P [--threads N]
            [--variant cov|obs]

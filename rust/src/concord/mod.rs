@@ -22,20 +22,27 @@
 //!
 //! [`fit_distributed`] wraps either rank program in a [`Fabric`] run and
 //! returns the assembled estimate plus the metered communication costs.
+//! [`screened_dist::fit_screened_distributed`] composes screening with
+//! the distributed layer: a distributed screening pass splits the
+//! problem into connected components, the cost model sizes one fabric
+//! per component ([`crate::cost::schedule`]), and the per-component
+//! estimates are stitched back into the global block-diagonal omega.
 
 pub mod cov;
 pub mod dist_common;
 pub mod obs;
 pub mod ops;
+pub mod screened_dist;
 pub mod screening;
 pub mod single_node;
 
-pub use screening::{fit_with_screening, ScreenedFit};
+pub use screened_dist::{fit_screened_distributed, ScreenedDistFit, ScreenedDistOptions};
+pub use screening::{fit_with_screening, fit_with_screening_on, ComponentStat, ScreenedFit};
 pub use single_node::fit_single_node;
 
 use crate::linalg::Mat;
 use crate::rng::Rng;
-use crate::simnet::{cost::CostSummary, Fabric, MachineParams};
+use crate::simnet::{cost::CostSummary, Counters, Fabric, MachineParams};
 use std::sync::Arc;
 
 /// Which HP-CONCORD variant to run (paper §3).
@@ -156,6 +163,31 @@ pub struct DistFit {
     pub variant: Variant,
 }
 
+/// One fabric execution with the raw per-rank counters retained —
+/// screened runs aggregate several such fabrics, and the lemma tests
+/// pin per-rank L/W inside each component's fabric.
+#[derive(Debug)]
+pub struct DistRun {
+    pub fit: ConcordFit,
+    pub cost: CostSummary,
+    /// Rank-indexed counters of this fabric.
+    pub counters: Vec<Counters>,
+    pub variant: Variant,
+}
+
+/// Resolve [`Variant::Auto`] by Lemma 3.1 with a pilot density estimate;
+/// concrete variants pass through.
+fn resolve_variant(x: &Mat, cfg: &ConcordConfig) -> Variant {
+    match cfg.variant {
+        Variant::Auto => {
+            let mut rng = Rng::new(0x5eed);
+            let d_est = pilot_density(x, cfg, &mut rng);
+            choose_variant(x.rows(), x.cols(), d_est, 10.0)
+        }
+        v => v,
+    }
+}
+
 /// Run HP-CONCORD on a simulated P-rank machine with replication factors
 /// `c_x` (data operands) and `c_omega` (iterate). The observation matrix
 /// is shared read-only with the ranks, which slice out their own parts —
@@ -169,28 +201,37 @@ pub fn fit_distributed(
     c_omega: usize,
     machine: MachineParams,
 ) -> DistFit {
-    let variant = match cfg.variant {
-        Variant::Auto => {
-            let mut rng = Rng::new(0x5eed);
-            let d_est = pilot_density(x, cfg, &mut rng);
-            choose_variant(x.rows(), x.cols(), d_est, 10.0)
-        }
-        v => v,
-    };
+    let run = run_distributed(x, cfg, p_ranks, c_x, c_omega, machine);
+    DistFit { fit: run.fit, cost: run.cost, variant: run.variant }
+}
+
+/// [`fit_distributed`] keeping the rank-indexed [`Counters`] — the
+/// building block the screened distributed solver runs once per
+/// component.
+pub fn run_distributed(
+    x: &Mat,
+    cfg: &ConcordConfig,
+    p_ranks: usize,
+    c_x: usize,
+    c_omega: usize,
+    machine: MachineParams,
+) -> DistRun {
+    let variant = resolve_variant(x, cfg);
     let x = Arc::new(x.clone());
     let cfg = *cfg;
     let fabric = Fabric::with_machine(p_ranks, machine);
-    match variant {
-        Variant::Cov => {
-            let run = fabric.run(move |comm| cov::fit_cov_rank(comm, &x, &cfg, c_x, c_omega));
-            let cost = run.summary();
-            DistFit { fit: dist_common::assemble_fit(run.results), cost, variant }
-        }
+    let run = match variant {
+        Variant::Cov => fabric.run(move |comm| cov::fit_cov_rank(comm, &x, &cfg, c_x, c_omega)),
         Variant::Obs | Variant::Auto => {
-            let run = fabric.run(move |comm| obs::fit_obs_rank(comm, &x, &cfg, c_x, c_omega));
-            let cost = run.summary();
-            DistFit { fit: dist_common::assemble_fit(run.results), cost, variant }
+            fabric.run(move |comm| obs::fit_obs_rank(comm, &x, &cfg, c_x, c_omega))
         }
+    };
+    let cost = run.summary();
+    DistRun {
+        fit: dist_common::assemble_fit(run.results),
+        cost,
+        counters: run.counters,
+        variant,
     }
 }
 

@@ -1,0 +1,377 @@
+//! Screened **distributed** solving: exact thresholding composed with
+//! the 1.5D fabric layer — the paper's §6 divide-and-conquer direction
+//! at the distributed scale.
+//!
+//! Three stages:
+//!
+//! 1. **Distributed screening pass** ([`screen_distributed`]): a fabric
+//!    of up to `total_ranks` ranks, each owning a 1D block of S's rows.
+//!    Every rank forms its own rows of `S = XᵀX/n` locally, runs
+//!    union-find over its rows' thresholded edges, and the per-rank
+//!    labelings (pairs `(i, find(i))`, canonical because roots are
+//!    minimum members) are allgathered and re-unioned — every rank ends
+//!    with the global connected components, and the collective is
+//!    metered like any other.
+//! 2. **Component scheduling**: each non-singleton component gets a
+//!    [`FabricPlan`] from the cost model ([`crate::cost::schedule`]),
+//!    sizing `(P, c_X, c_Ω, variant)` to the component — with `d`
+//!    estimated from the screened graph's mean degree, whose support is
+//!    a superset of the estimate's by the exact thresholding rule.
+//!    Components at or below `small_cutoff` (or whose plan says `P = 1`)
+//!    run on the single-node path; singletons use the closed form.
+//! 3. **Reassembly**: per-component estimates are scattered into the
+//!    global block-diagonal omega through the shared
+//!    [`ScreenAccum`](super::screening::ScreenAccum) (summed iteration
+//!    statistics), and the per-fabric [`CostSummary`]s are folded
+//!    sequentially into one aggregate bill.
+//!
+//! Within each component's fabric the rank programs are byte-for-byte
+//! the ones `fit_distributed` runs on the extracted sub-problem, so the
+//! Lemma 3.2/3.3 per-rank message/word counts are untouched by the
+//! composition (`rust/tests/lemma_counts.rs`) and results are invariant
+//! in the node-local thread count (`rust/tests/parallel_determinism.rs`).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cost::schedule::{plan_component, FabricPlan};
+use crate::cost::ProblemShape;
+use crate::dist::Layout1D;
+use crate::linalg::Mat;
+use crate::simnet::{cost::CostSummary, Comm, Counters, Fabric, MachineParams};
+
+use super::screening::{extract_columns, Components, ComponentStat, ScreenAccum, UnionFind};
+use super::{fit_single_node, run_distributed, ConcordConfig, ConcordFit};
+
+/// Controls for the screened distributed solver.
+#[derive(Debug, Clone, Copy)]
+pub struct ScreenedDistOptions {
+    /// Rank budget: the screening pass uses up to this many ranks, and
+    /// no component fabric exceeds it.
+    pub total_ranks: usize,
+    pub machine: MachineParams,
+    /// Components of at most this many variables skip the fabric and
+    /// run on the single-node path.
+    pub small_cutoff: usize,
+    /// Override the scheduler with a fixed `(ranks, c_X, c_Ω)` for every
+    /// above-cutoff component — equivalence tests and manual control.
+    pub fixed: Option<(usize, usize, usize)>,
+}
+
+impl Default for ScreenedDistOptions {
+    fn default() -> Self {
+        ScreenedDistOptions {
+            total_ranks: 8,
+            machine: MachineParams::default(),
+            small_cutoff: 4,
+            fixed: None,
+        }
+    }
+}
+
+/// One component's solve record.
+#[derive(Debug)]
+pub struct ComponentSolve {
+    /// Ascending global column indices of this component.
+    pub indices: Vec<usize>,
+    /// The fabric it was assigned (`ranks == 1`: single-node path).
+    pub plan: FabricPlan,
+    /// Metered cost of this component's fabric (zero on the single-node
+    /// path, which is not metered — exactly as in the unscreened case).
+    pub cost: CostSummary,
+    /// Rank-indexed counters of this component's fabric (empty on the
+    /// single-node path).
+    pub counters: Vec<Counters>,
+}
+
+/// Outcome of a screened distributed fit.
+#[derive(Debug)]
+pub struct ScreenedDistFit {
+    /// Assembled block-diagonal estimate; iteration statistics are
+    /// summed across components (see [`super::screening::ScreenedFit`]).
+    pub fit: ConcordFit,
+    /// Aggregate bill under a sequential schedule: the screening pass
+    /// plus every component *fabric*, folded with
+    /// [`CostSummary::merge_sequential`]. Counters are machine facts
+    /// from metered fabrics only — components routed to the single-node
+    /// path run unmetered (exactly like the plain single-node solver),
+    /// so compare screened-vs-unscreened bills on fabric components, or
+    /// consult each solve's `plan.modeled_time` for the model's view.
+    pub cost: CostSummary,
+    /// The screening pass's own share of `cost`.
+    pub screen_cost: CostSummary,
+    pub components: usize,
+    pub largest: usize,
+    /// One entry per non-singleton component, in component order —
+    /// aligned with `per_component`.
+    pub solves: Vec<ComponentSolve>,
+    /// Per-component solver statistics (non-singleton components).
+    pub per_component: Vec<ComponentStat>,
+}
+
+/// What the screening fabric hands back to the leader.
+struct ScreenPass {
+    components: Components,
+    /// Thresholded off-diagonal degree of every variable.
+    degrees: Vec<f64>,
+    /// Diagonal of S (singleton closed forms need `s_ii`).
+    diag: Vec<f64>,
+    cost: CostSummary,
+}
+
+/// The distributed screening pass: block-row gram + local union-find,
+/// merged by one allgather of canonical labelings.
+fn screen_distributed(
+    x: &Mat,
+    threshold: f64,
+    p_ranks: usize,
+    machine: MachineParams,
+    threads: usize,
+) -> ScreenPass {
+    let p = x.cols();
+    let layout = Layout1D::new(p, p_ranks);
+    let shared = Arc::new(x.clone());
+    let run = Fabric::with_machine(p_ranks, machine)
+        .run(move |comm| screen_rank(comm, &shared, threshold, &layout, threads));
+    let cost = run.summary();
+
+    let mut degrees = vec![0.0f64; p];
+    let mut diag = vec![0.0f64; p];
+    for (rank, (_, deg, dg)) in run.results.iter().enumerate() {
+        let (rs, re) = layout.range(rank);
+        degrees[rs..re].copy_from_slice(deg);
+        diag[rs..re].copy_from_slice(dg);
+    }
+    // Every rank holds the same merged labeling; rank 0's is canonical.
+    let raw: Vec<usize> = run.results[0].0.iter().map(|&v| v as usize).collect();
+    ScreenPass { components: Components::from_raw_labels(&raw), degrees, diag, cost }
+}
+
+/// One screening rank: local gram rows → local union-find → allgather
+/// and merge. Returns (merged labels, my rows' degrees, my rows' s_ii).
+fn screen_rank(
+    comm: &mut Comm,
+    x: &Arc<Mat>,
+    threshold: f64,
+    layout: &Layout1D,
+    threads: usize,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let p = x.cols();
+    let n = x.rows();
+    let (rs, re) = layout.range(comm.rank());
+    let rows = re - rs;
+
+    // My block rows of S = XᵀX/n.
+    let xt_rows = x.col_block(rs, re).transpose(); // rows × n
+    comm.count_flops_dense(2 * (rows * n * p) as u64);
+    let mut s_rows = xt_rows.matmul_mt(x, threads); // rows × p
+    s_rows.scale(1.0 / n.max(1) as f64);
+
+    // Union-find over my rows' thresholded edges.
+    let mut uf = UnionFind::new(p);
+    let mut degrees = vec![0.0f64; rows];
+    let mut diag = vec![0.0f64; rows];
+    for i in rs..re {
+        diag[i - rs] = s_rows.get(i - rs, i);
+        for j in 0..p {
+            if j != i && s_rows.get(i - rs, j).abs() > threshold {
+                degrees[i - rs] += 1.0;
+                uf.union(i, j);
+            }
+        }
+    }
+
+    // A labeling is fully described by the pairs (i, find(i)); the join
+    // of all ranks' labelings is the connectivity of the union of their
+    // edge sets — i.e. the global components.
+    let local: Vec<f64> = (0..p).map(|i| uf.find(i) as f64).collect();
+    let team: Vec<usize> = (0..comm.size()).collect();
+    let all = comm.allgather(&team, 1, local);
+    let mut merged = UnionFind::new(p);
+    for labels in &all {
+        for (i, &r) in labels.iter().enumerate() {
+            merged.union(i, r as usize);
+        }
+    }
+    let labels: Vec<f64> = (0..p).map(|i| merged.find(i) as f64).collect();
+    (labels, degrees, diag)
+}
+
+/// Fit with screening on the distributed path: screen on a fabric,
+/// schedule one sized fabric per non-trivial component, solve small
+/// components single-node and singletons in closed form, and reassemble
+/// the global block-diagonal estimate with an aggregated cost bill.
+pub fn fit_screened_distributed(
+    x: &Mat,
+    cfg: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<ScreenedDistFit> {
+    let p = x.cols();
+    let n = x.rows();
+    assert!(opts.total_ranks >= 1, "need at least one rank");
+    let threads = cfg.threads.max(1);
+
+    let screen_ranks = opts.total_ranks.min(p.max(1));
+    let screen = screen_distributed(x, cfg.lambda1, screen_ranks, opts.machine, threads);
+    let comps = &screen.components;
+
+    let mut acc = ScreenAccum::new(p);
+    let mut solves = Vec::new();
+    let mut cost = screen.cost;
+    let mut largest = 0usize;
+
+    for c in 0..comps.count {
+        let idx = comps.members(c);
+        largest = largest.max(idx.len());
+        if idx.len() == 1 {
+            acc.add_singleton(idx[0], screen.diag[idx[0]], cfg.lambda2);
+            continue;
+        }
+
+        let plan = if idx.len() <= opts.small_cutoff {
+            FabricPlan::single_node(cfg.variant)
+        } else if let Some((ranks, c_x, c_omega)) = opts.fixed {
+            if ranks <= idx.len() {
+                FabricPlan { ranks, c_x, c_omega, variant: cfg.variant, modeled_time: 0.0 }
+            } else {
+                // A pinned fabric wider than the component would leave
+                // teams empty; degrade to the single-node path.
+                FabricPlan::single_node(cfg.variant)
+            }
+        } else {
+            // d estimated from the screened graph's mean degree: its
+            // support contains the estimate's (exact thresholding).
+            let deg_sum: f64 = idx.iter().map(|&i| screen.degrees[i]).sum();
+            let d_est = 1.0 + deg_sum / idx.len() as f64;
+            let shape = ProblemShape {
+                p: idx.len() as f64,
+                n: n as f64,
+                s: 40.0,
+                t: 10.0,
+                d: d_est.min(idx.len() as f64),
+            };
+            plan_component(&shape, opts.total_ranks, threads, &opts.machine, cfg.variant)
+        };
+
+        let sub_x = extract_columns(x, &idx);
+        if plan.ranks <= 1 {
+            let sub = fit_single_node(&sub_x, cfg)?;
+            acc.add_component(&idx, &sub);
+            solves.push(ComponentSolve {
+                indices: idx,
+                plan,
+                cost: CostSummary::default(),
+                counters: Vec::new(),
+            });
+        } else {
+            let mut sub_cfg = *cfg;
+            sub_cfg.variant = plan.variant;
+            let run = run_distributed(
+                &sub_x,
+                &sub_cfg,
+                plan.ranks,
+                plan.c_x,
+                plan.c_omega,
+                opts.machine,
+            );
+            cost.merge_sequential(&run.cost);
+            acc.add_component(&idx, &run.fit);
+            solves.push(ComponentSolve {
+                indices: idx,
+                plan: FabricPlan { variant: run.variant, ..plan },
+                cost: run.cost,
+                counters: run.counters,
+            });
+        }
+    }
+
+    let screened = acc.finish(comps.count, largest);
+    Ok(ScreenedDistFit {
+        fit: screened.fit,
+        cost,
+        screen_cost: screen.cost,
+        components: comps.count,
+        largest,
+        solves,
+        per_component: screened.per_component,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::concord::screening::gram_components;
+    use crate::gen;
+    use crate::rng::Rng;
+    use crate::runtime::native;
+
+    /// The distributed screening pass must agree with the single-node
+    /// component decomposition at every rank count.
+    #[test]
+    fn distributed_screening_matches_serial_components() {
+        let mut rng = Rng::new(11);
+        let prob = gen::chain_problem(18, 60, &mut rng);
+        let s = native::gram(&prob.x);
+        for threshold in [0.05, 0.2, 0.5, 2.0] {
+            let want = gram_components(&s, threshold);
+            for ranks in [1usize, 2, 3, 4, 8] {
+                let pass = screen_distributed(
+                    &prob.x,
+                    threshold,
+                    ranks,
+                    MachineParams::default(),
+                    1,
+                );
+                assert_eq!(
+                    pass.components, want,
+                    "threshold {threshold} ranks {ranks} disagree"
+                );
+            }
+        }
+    }
+
+    /// Degrees and diagonal come back in global index order whatever
+    /// the rank count; singletons use s_ii exactly.
+    #[test]
+    fn screening_pass_diag_and_degrees_are_rank_count_invariant() {
+        let mut rng = Rng::new(12);
+        let prob = gen::chain_problem(10, 50, &mut rng);
+        let one = screen_distributed(&prob.x, 0.2, 1, MachineParams::default(), 1);
+        let four = screen_distributed(&prob.x, 0.2, 4, MachineParams::default(), 2);
+        assert_eq!(one.diag, four.diag);
+        assert_eq!(one.degrees, four.degrees);
+    }
+
+    /// A rank budget larger than p is clamped rather than spawning
+    /// empty-row ranks.
+    #[test]
+    fn tiny_problem_clamps_rank_budget() {
+        let mut rng = Rng::new(13);
+        let prob = gen::chain_problem(3, 30, &mut rng);
+        let cfg = ConcordConfig { lambda1: 0.3, max_iter: 30, ..Default::default() };
+        let opts = ScreenedDistOptions { total_ranks: 16, ..Default::default() };
+        let out = fit_screened_distributed(&prob.x, &cfg, &opts).unwrap();
+        assert_eq!(out.fit.omega.rows(), 3);
+        assert!(out.components >= 1);
+    }
+
+    /// All-singleton decomposition: closed forms only, no solves, and
+    /// the omega diagonal matches 1/√(s_ii + λ₂).
+    #[test]
+    fn all_singletons_use_closed_form() {
+        let mut rng = Rng::new(14);
+        let prob = gen::chain_problem(8, 40, &mut rng);
+        let cfg = ConcordConfig { lambda1: 50.0, lambda2: 0.25, ..Default::default() };
+        let out =
+            fit_screened_distributed(&prob.x, &cfg, &ScreenedDistOptions::default()).unwrap();
+        assert_eq!(out.components, 8);
+        assert_eq!(out.largest, 1);
+        assert!(out.solves.is_empty());
+        let s = native::gram(&prob.x);
+        for i in 0..8 {
+            let want = 1.0 / (s.get(i, i) + 0.25).sqrt();
+            assert!((out.fit.omega.get(i, i) - want).abs() < 1e-12, "diag {i}");
+        }
+    }
+}

@@ -10,10 +10,30 @@
 //! estimates' hemisphere-block-diagonal structure (§S.3.3) is exactly
 //! this phenomenon surfacing in data.
 //!
-//! `fit_with_screening` runs the decomposition and solves each component
-//! with the single-node solver; singleton components have the diagonal
-//! closed form ω_ii = argmin −log ω + (s_ii/2 + λ₂/2) ω² =
-//! 1/√(s_ii + λ₂).
+//! This module owns the pieces every screened path shares:
+//!
+//! - [`UnionFind`] and [`Components`]: the disjoint-set decomposition
+//!   of the thresholded gram graph ([`gram_components`]), also used by
+//!   the distributed screening pass in [`super::screened_dist`], which
+//!   merges per-rank block-row labelings through the same structure;
+//! - [`nested_components`]: per-threshold components for a λ₁ grid,
+//!   computed by refinement — the threshold graphs are nested, so each
+//!   level only rescans within the previous level's components (the
+//!   reuse the screened sweep in [`crate::coordinator::sweep`] relies
+//!   on);
+//! - [`extract_columns`] / [`scatter_block`] / the singleton closed
+//!   form `ω_ii = 1/√(s_ii + λ₂)`: sub-problem extraction and
+//!   block-diagonal reassembly;
+//! - [`ScreenAccum`]: the reassembly accumulator with **summed**
+//!   iteration statistics — `fit.iterations` is the total across
+//!   components and `mean_linesearch` the trial-weighted mean, so
+//!   `iterations · mean_linesearch` is the total number of line-search
+//!   trials exactly as in the unscreened fits (semantics pinned by
+//!   `rust/tests/screening_equivalence.rs`).
+//!
+//! [`fit_with_screening`] runs the decomposition and solves each
+//! component with the single-node solver; the distributed composition
+//! (one sized fabric per component) lives in [`super::screened_dist`].
 
 use anyhow::Result;
 
@@ -22,96 +42,314 @@ use crate::runtime::native;
 
 use super::{fit_single_node, ConcordConfig, ConcordFit};
 
-/// Connected components of the thresholded covariance graph
-/// `{(i, j) : |S_ij| > threshold, i ≠ j}`. Returns a component id per
-/// variable.
-pub fn covariance_components(s: &Mat, threshold: f64) -> Vec<usize> {
-    let p = s.rows();
-    let mut comp = vec![usize::MAX; p];
-    let mut next = 0;
-    let mut stack = Vec::new();
-    for start in 0..p {
-        if comp[start] != usize::MAX {
-            continue;
+/// Disjoint-set forest with path halving. Union keeps the *smaller*
+/// root, so a set's representative is always its minimum member — which
+/// makes labelings canonical (and mergeable across ranks: a labeling is
+/// fully described by the pairs `(i, find(i))`).
+#[derive(Debug, Clone)]
+pub struct UnionFind {
+    parent: Vec<usize>,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n).collect() }
+    }
+
+    /// Representative (minimum member) of `i`'s set.
+    pub fn find(&mut self, mut i: usize) -> usize {
+        while self.parent[i] != i {
+            self.parent[i] = self.parent[self.parent[i]];
+            i = self.parent[i];
         }
-        comp[start] = next;
-        stack.push(start);
-        while let Some(v) = stack.pop() {
-            for u in 0..p {
-                if u != v && comp[u] == usize::MAX && s.get(v, u).abs() > threshold {
-                    comp[u] = next;
-                    stack.push(u);
-                }
+        i
+    }
+
+    /// Merge the sets of `a` and `b`.
+    pub fn union(&mut self, a: usize, b: usize) {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra != rb {
+            // Attach the larger root under the smaller: representatives
+            // stay minimal, so labels are canonical without a relabel.
+            let (lo, hi) = (ra.min(rb), ra.max(rb));
+            self.parent[hi] = lo;
+        }
+    }
+
+    /// Finish into a dense component labeling.
+    pub fn into_components(mut self) -> Components {
+        let n = self.parent.len();
+        let raw: Vec<usize> = (0..n).map(|i| self.find(i)).collect();
+        Components::from_raw_labels(&raw)
+    }
+}
+
+/// A component labeling of `p` variables: `comp[i]` is variable `i`'s
+/// component id, ids densely numbered `0..count` in order of each
+/// component's smallest member.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Components {
+    pub comp: Vec<usize>,
+    pub count: usize,
+}
+
+impl Components {
+    /// Renumber arbitrary labels densely by first appearance.
+    pub fn from_raw_labels(raw: &[usize]) -> Components {
+        let mut map = std::collections::HashMap::new();
+        let mut comp = Vec::with_capacity(raw.len());
+        for &r in raw {
+            let next = map.len();
+            let id = *map.entry(r).or_insert(next);
+            comp.push(id);
+        }
+        Components { comp, count: map.len() }
+    }
+
+    /// Ascending member indices of component `c`.
+    pub fn members(&self, c: usize) -> Vec<usize> {
+        (0..self.comp.len()).filter(|&i| self.comp[i] == c).collect()
+    }
+
+    /// Member count per component.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.count];
+        for &c in &self.comp {
+            sizes[c] += 1;
+        }
+        sizes
+    }
+
+    /// Size of the largest component (the remaining hard work).
+    pub fn largest(&self) -> usize {
+        self.sizes().into_iter().max().unwrap_or(0)
+    }
+}
+
+/// Connected components of the thresholded covariance graph
+/// `{(i, j) : |S_ij| > threshold, i ≠ j}` via union-find over the
+/// strict upper triangle (`s` is a gram matrix, hence symmetric; both
+/// triangles are consulted anyway for robustness).
+pub fn gram_components(s: &Mat, threshold: f64) -> Components {
+    let p = s.rows();
+    let mut uf = UnionFind::new(p);
+    for i in 0..p {
+        for j in (i + 1)..p {
+            if s.get(i, j).abs() > threshold || s.get(j, i).abs() > threshold {
+                uf.union(i, j);
             }
         }
-        next += 1;
     }
-    comp
+    uf.into_components()
+}
+
+/// [`gram_components`] as a plain label vector (compatibility surface;
+/// numbering is identical: ids ascend with each component's smallest
+/// member).
+pub fn covariance_components(s: &Mat, threshold: f64) -> Vec<usize> {
+    gram_components(s, threshold).comp
+}
+
+/// Components for every threshold of a λ₁ grid (any order, returned
+/// aligned with the input), computed by nested refinement: thresholds
+/// are visited ascending, and each level's edges `{|S_ij| > λ}` are a
+/// subset of the previous level's, so only pairs *inside* an existing
+/// component are rescanned — the screened sweep's cross-grid reuse.
+pub fn nested_components(s: &Mat, thresholds: &[f64]) -> Vec<Components> {
+    let p = s.rows();
+    let mut order: Vec<usize> = (0..thresholds.len()).collect();
+    // total_cmp: a NaN threshold (e.g. user-typed "nan" on the CLI)
+    // sorts last and simply yields all-singleton components instead of
+    // panicking mid-sort.
+    order.sort_by(|&a, &b| thresholds[a].total_cmp(&thresholds[b]));
+    let mut out: Vec<Option<Components>> = vec![None; thresholds.len()];
+    let mut prev: Option<Components> = None;
+    for &k in &order {
+        let thr = thresholds[k];
+        let comps = match &prev {
+            None => gram_components(s, thr),
+            Some(coarse) => {
+                let mut uf = UnionFind::new(p);
+                for c in 0..coarse.count {
+                    let idx = coarse.members(c);
+                    for (a, &i) in idx.iter().enumerate() {
+                        for &j in &idx[a + 1..] {
+                            if s.get(i, j).abs() > thr || s.get(j, i).abs() > thr {
+                                uf.union(i, j);
+                            }
+                        }
+                    }
+                }
+                uf.into_components()
+            }
+        };
+        out[k] = Some(comps.clone());
+        prev = Some(comps);
+    }
+    out.into_iter().map(|o| o.expect("every threshold visited")).collect()
+}
+
+/// The columns of `x` named by `idx`, in order — the sub-problem data
+/// of one component.
+pub fn extract_columns(x: &Mat, idx: &[usize]) -> Mat {
+    Mat::from_fn(x.rows(), idx.len(), |r, k| x.get(r, idx[k]))
+}
+
+/// Scatter a component's estimate back into the global block-diagonal
+/// omega.
+pub fn scatter_block(omega: &mut Mat, idx: &[usize], sub: &Mat) {
+    for (a, &i) in idx.iter().enumerate() {
+        for (b, &j) in idx.iter().enumerate() {
+            omega.set(i, j, sub.get(a, b));
+        }
+    }
+}
+
+/// Singleton closed form: ω = argmin −log ω + (s_ii/2 + λ₂/2)ω² =
+/// 1/√(s_ii + λ₂).
+pub fn singleton_omega(s_ii: f64, lambda2: f64) -> f64 {
+    1.0 / (s_ii + lambda2).sqrt()
+}
+
+/// Objective contribution of a singleton at its closed-form optimum.
+pub fn singleton_objective(s_ii: f64, lambda2: f64) -> f64 {
+    let w = singleton_omega(s_ii, lambda2);
+    -w.ln() + 0.5 * s_ii * w * w + 0.5 * lambda2 * w * w
+}
+
+/// Per-component solver statistics of a screened fit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComponentStat {
+    /// Component size (variables).
+    pub size: usize,
+    /// Proximal gradient iterations this component took.
+    pub iterations: usize,
+    /// Mean line-search trials per iteration within this component.
+    pub mean_linesearch: f64,
+    pub converged: bool,
 }
 
 /// Outcome of a screened fit.
 #[derive(Debug)]
 pub struct ScreenedFit {
+    /// The assembled block-diagonal estimate. `fit.iterations` is the
+    /// **sum** over components and `fit.mean_linesearch` the
+    /// trial-weighted mean, so their product is the total line-search
+    /// trial count (see [`ScreenAccum`]).
     pub fit: ConcordFit,
     /// Number of connected components the problem split into.
     pub components: usize,
     /// Size of the largest component (the remaining hard work).
     pub largest: usize,
+    /// One entry per non-singleton component, in component order.
+    pub per_component: Vec<ComponentStat>,
 }
 
-/// Fit with covariance screening: decompose at `λ₁`, solve each
-/// component independently, and reassemble the block-diagonal estimate.
-pub fn fit_with_screening(x: &Mat, cfg: &ConcordConfig) -> Result<ScreenedFit> {
-    let p = x.cols();
-    let s = native::gram(x);
-    let comp = covariance_components(&s, cfg.lambda1);
-    let n_comp = comp.iter().copied().max().map_or(0, |m| m + 1);
+/// Reassembly accumulator shared by the single-node and distributed
+/// screened paths. Iteration statistics are *summed* across components
+/// (and `mean_linesearch` is the trial-weighted mean), fixing the old
+/// max-iterations/divide-by-max inconsistency; the semantics are pinned
+/// by a regression test in `rust/tests/screening_equivalence.rs`.
+#[derive(Debug)]
+pub(crate) struct ScreenAccum {
+    omega: Mat,
+    iterations: usize,
+    trials: f64,
+    objective: f64,
+    converged: bool,
+    per_component: Vec<ComponentStat>,
+}
 
-    let mut omega = Mat::zeros(p, p);
-    let mut iterations = 0usize;
-    let mut trials = 0.0;
-    let mut objective = 0.0;
-    let mut converged = true;
-    let mut largest = 0usize;
-
-    for c in 0..n_comp {
-        let idx: Vec<usize> = (0..p).filter(|&i| comp[i] == c).collect();
-        largest = largest.max(idx.len());
-        if idx.len() == 1 {
-            // Singleton closed form: ω = 1/√(s_ii + λ₂).
-            let i = idx[0];
-            let w = 1.0 / (s.get(i, i) + cfg.lambda2).sqrt();
-            omega.set(i, i, w);
-            objective += -w.ln() + 0.5 * s.get(i, i) * w * w + 0.5 * cfg.lambda2 * w * w;
-            continue;
-        }
-        // Solve the sub-problem on the component's columns.
-        let sub_x = Mat::from_fn(x.rows(), idx.len(), |r, k| x.get(r, idx[k]));
-        let sub = fit_single_node(&sub_x, cfg)?;
-        iterations = iterations.max(sub.iterations);
-        trials += sub.mean_linesearch * sub.iterations as f64;
-        objective += sub.objective;
-        converged &= sub.converged;
-        for (a, &i) in idx.iter().enumerate() {
-            for (b, &j) in idx.iter().enumerate() {
-                omega.set(i, j, sub.omega.get(a, b));
-            }
+impl ScreenAccum {
+    pub(crate) fn new(p: usize) -> Self {
+        ScreenAccum {
+            omega: Mat::zeros(p, p),
+            iterations: 0,
+            trials: 0.0,
+            objective: 0.0,
+            converged: true,
+            per_component: Vec::new(),
         }
     }
 
-    let nnz = omega.nnz();
-    Ok(ScreenedFit {
-        fit: ConcordFit {
-            omega,
-            iterations,
-            mean_linesearch: if iterations > 0 { trials / iterations as f64 } else { 0.0 },
-            mean_row_nnz: nnz as f64 / p as f64,
-            objective,
-            converged,
-        },
-        components: n_comp,
-        largest,
-    })
+    pub(crate) fn add_singleton(&mut self, i: usize, s_ii: f64, lambda2: f64) {
+        self.omega.set(i, i, singleton_omega(s_ii, lambda2));
+        self.objective += singleton_objective(s_ii, lambda2);
+    }
+
+    pub(crate) fn add_component(&mut self, idx: &[usize], sub: &ConcordFit) {
+        scatter_block(&mut self.omega, idx, &sub.omega);
+        self.iterations += sub.iterations;
+        self.trials += sub.mean_linesearch * sub.iterations as f64;
+        self.objective += sub.objective;
+        self.converged &= sub.converged;
+        self.per_component.push(ComponentStat {
+            size: idx.len(),
+            iterations: sub.iterations,
+            mean_linesearch: sub.mean_linesearch,
+            converged: sub.converged,
+        });
+    }
+
+    pub(crate) fn finish(self, components: usize, largest: usize) -> ScreenedFit {
+        let p = self.omega.rows();
+        let nnz = self.omega.nnz();
+        let iterations = self.iterations;
+        ScreenedFit {
+            fit: ConcordFit {
+                omega: self.omega,
+                iterations,
+                mean_linesearch: if iterations > 0 {
+                    self.trials / iterations as f64
+                } else {
+                    0.0
+                },
+                mean_row_nnz: nnz as f64 / p.max(1) as f64,
+                objective: self.objective,
+                converged: self.converged,
+            },
+            components,
+            largest,
+            per_component: self.per_component,
+        }
+    }
+}
+
+/// Fit with covariance screening: decompose at `λ₁`, solve each
+/// component independently with the single-node solver, and reassemble
+/// the block-diagonal estimate.
+pub fn fit_with_screening(x: &Mat, cfg: &ConcordConfig) -> Result<ScreenedFit> {
+    let s = native::gram_mt(x, cfg.threads.max(1));
+    let comps = gram_components(&s, cfg.lambda1);
+    fit_with_screening_on(x, &s, &comps, cfg)
+}
+
+/// [`fit_with_screening`] on a precomputed gram matrix and component
+/// decomposition — the entry point for sweeps that amortize `S = XᵀX/n`
+/// and the [`nested_components`] refinement across a λ-grid.
+pub fn fit_with_screening_on(
+    x: &Mat,
+    s: &Mat,
+    comps: &Components,
+    cfg: &ConcordConfig,
+) -> Result<ScreenedFit> {
+    let p = x.cols();
+    assert_eq!(comps.comp.len(), p, "component labeling must cover every column");
+    let mut acc = ScreenAccum::new(p);
+    let mut largest = 0usize;
+    for c in 0..comps.count {
+        let idx = comps.members(c);
+        largest = largest.max(idx.len());
+        if idx.len() == 1 {
+            acc.add_singleton(idx[0], s.get(idx[0], idx[0]), cfg.lambda2);
+            continue;
+        }
+        let sub_x = extract_columns(x, &idx);
+        let sub = fit_single_node(&sub_x, cfg)?;
+        acc.add_component(&idx, &sub);
+    }
+    Ok(acc.finish(comps.count, largest))
 }
 
 #[cfg(test)]
@@ -169,6 +407,8 @@ mod tests {
         let out = fit_with_screening(&prob.x, &cfg).unwrap();
         assert_eq!(out.components, 12);
         assert_eq!(out.largest, 1);
+        assert!(out.per_component.is_empty(), "singletons carry no solver stats");
+        assert_eq!(out.fit.iterations, 0);
         let s = native::gram(&prob.x);
         for i in 0..12 {
             let want = 1.0 / (s.get(i, i) + 0.5).sqrt();
@@ -213,5 +453,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn union_find_roots_are_minimum_members() {
+        let mut uf = UnionFind::new(6);
+        uf.union(4, 5);
+        uf.union(1, 4);
+        uf.union(2, 3);
+        assert_eq!(uf.find(5), 1);
+        assert_eq!(uf.find(3), 2);
+        assert_eq!(uf.find(0), 0);
+        let comps = uf.into_components();
+        assert_eq!(comps.count, 3);
+        assert_eq!(comps.comp, vec![0, 1, 2, 2, 1, 1]);
+        assert_eq!(comps.members(1), vec![1, 4, 5]);
+        assert_eq!(comps.sizes(), vec![1, 3, 2]);
+        assert_eq!(comps.largest(), 3);
+    }
+
+    #[test]
+    fn nested_refinement_matches_direct_on_fixture() {
+        let mut s = Mat::eye(5);
+        for (i, j, v) in [(0usize, 1usize, 0.9), (1, 2, 0.4), (3, 4, 0.2)] {
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+        let thresholds = [0.5, 0.1, 0.3];
+        let nested = nested_components(&s, &thresholds);
+        for (k, &thr) in thresholds.iter().enumerate() {
+            assert_eq!(nested[k], gram_components(&s, thr), "threshold {thr}");
+        }
+        // Coarsest level (0.1): {0,1,2} and {3,4}; finest (0.5): only 0–1.
+        assert_eq!(nested[1].count, 2);
+        assert_eq!(nested[0].count, 4);
     }
 }

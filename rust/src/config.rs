@@ -109,6 +109,10 @@ impl Config {
         self.values.get(key).map(|v| v.as_usize()).transpose().map(|o| o.unwrap_or(default))
     }
 
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        self.values.get(key).map(|v| v.as_bool()).transpose().map(|o| o.unwrap_or(default))
+    }
+
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str> {
         self.values.get(key).map(|v| v.as_str()).transpose().map(|o| o.unwrap_or(default))
     }
@@ -210,6 +214,9 @@ ranks = 16
         assert_eq!(c.f64_or("solver.lambda2", 9.0).unwrap(), 0.0);
         assert_eq!(c.f64_or("solver.missing", 9.0).unwrap(), 9.0);
         assert_eq!(c.usize_or("fabric.ranks", 1).unwrap(), 16);
+        assert!(c.bool_or("solver.verbose", false).unwrap());
+        assert!(c.bool_or("solver.absent", true).unwrap());
+        assert!(c.bool_or("p", false).is_err());
         assert_eq!(c.str_or("workload", "x").unwrap(), "chain");
         assert_eq!(c.array_or("solver.grid", &[]).unwrap(), vec![0.1, 0.2, 0.3]);
     }

@@ -17,4 +17,7 @@ pub mod sweep;
 
 pub use fmri::{run_fmri_study, FmriOutcome, FmriParams, MethodScore};
 pub use stability::{stability_selection, StabilityConfig, StabilityOutcome};
-pub use sweep::{run_sweep, select_by_density, GridSpec, SweepJob, SweepOutcome, SweepResult};
+pub use sweep::{
+    run_sweep, run_sweep_screened, select_by_density, GridSpec, ScreenedSweepOutcome, SweepJob,
+    SweepOutcome, SweepResult,
+};

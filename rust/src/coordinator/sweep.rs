@@ -11,8 +11,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
+use crate::concord::screening::{fit_with_screening_on, nested_components, Components};
 use crate::concord::{fit_single_node, ConcordConfig, ConcordFit};
 use crate::linalg::Mat;
+use crate::runtime::native;
 
 /// A (λ₁, λ₂) grid specification.
 #[derive(Debug, Clone)]
@@ -65,24 +67,25 @@ pub struct SweepOutcome {
     pub workers: usize,
 }
 
-/// Run the sweep with a worker pool. Every job is fitted exactly once;
-/// results come back in grid order.
-pub fn run_sweep(
-    x: &Mat,
-    grid: &GridSpec,
-    base: &ConcordConfig,
+/// The shared leader/worker pool: `workers` threads claim jobs off an
+/// atomic cursor, fit them with `fit_job`, and results come back sorted
+/// by job id — deterministic regardless of scheduling. Both the plain
+/// and the screened sweep are thin wrappers over this.
+fn sweep_pool(
+    jobs: Vec<SweepJob>,
     workers: usize,
-) -> SweepOutcome {
+    fit_job: impl Fn(&SweepJob) -> ConcordFit + Send + Sync + 'static,
+) -> Vec<SweepResult> {
     assert!(workers >= 1);
-    let jobs = Arc::new(grid.jobs(base));
-    let x = Arc::new(x.clone());
+    let jobs = Arc::new(jobs);
+    let fit_job = Arc::new(fit_job);
     let next = Arc::new(AtomicUsize::new(0));
     let (tx, rx) = mpsc::channel::<SweepResult>();
 
     let mut handles = Vec::new();
     for worker in 0..workers {
         let jobs = Arc::clone(&jobs);
-        let x = Arc::clone(&x);
+        let fit_job = Arc::clone(&fit_job);
         let next = Arc::clone(&next);
         let tx = tx.clone();
         handles.push(std::thread::spawn(move || {
@@ -92,10 +95,10 @@ pub fn run_sweep(
                     break;
                 }
                 let job = jobs[idx];
-                let fit = fit_single_node(&x, &job.cfg).expect("sweep fit failed");
+                let fit = (*fit_job)(&job);
                 let p = fit.omega.rows();
                 let offdiag_nnz = fit.omega.nnz().saturating_sub(p);
-                let density = offdiag_nnz as f64 / (p * p - p) as f64;
+                let density = offdiag_nnz as f64 / (p * p - p).max(1) as f64;
                 tx.send(SweepResult { job, fit, density, worker }).expect("leader gone");
             }
         }));
@@ -107,7 +110,59 @@ pub fn run_sweep(
         h.join().expect("worker panicked");
     }
     results.sort_by_key(|r| r.job.id);
+    results
+}
+
+/// Run the sweep with a worker pool. Every job is fitted exactly once;
+/// results come back in grid order.
+pub fn run_sweep(
+    x: &Mat,
+    grid: &GridSpec,
+    base: &ConcordConfig,
+    workers: usize,
+) -> SweepOutcome {
+    let x = Arc::new(x.clone());
+    let results = sweep_pool(grid.jobs(base), workers, move |job| {
+        fit_single_node(&x, &job.cfg).expect("sweep fit failed")
+    });
     SweepOutcome { results, workers }
+}
+
+/// Aggregate outcome of a screened sweep.
+#[derive(Debug)]
+pub struct ScreenedSweepOutcome {
+    /// Results sorted by job id (grid order) — deterministic.
+    pub results: Vec<SweepResult>,
+    pub workers: usize,
+    /// Component count at each λ₁ (aligned with the grid's λ₁ list).
+    pub components_per_l1: Vec<usize>,
+}
+
+/// [`run_sweep`] with covariance screening, amortized across the grid:
+/// the gram matrix is formed **once**, and the component decompositions
+/// for the whole λ₁ list come from one nested-refinement pass
+/// ([`nested_components`] — the threshold graphs are nested, so finer
+/// levels only rescan inside coarser components). Workers then solve
+/// each (λ₁, λ₂) job per component via
+/// [`fit_with_screening_on`], sharing the precomputed structure; the
+/// λ₂ axis reuses its λ₁'s decomposition for free. Results are
+/// bit-identical to calling `fit_with_screening` per grid point.
+pub fn run_sweep_screened(
+    x: &Mat,
+    grid: &GridSpec,
+    base: &ConcordConfig,
+    workers: usize,
+) -> ScreenedSweepOutcome {
+    let s = Arc::new(native::gram_mt(x, base.threads.max(1)));
+    let comps: Arc<Vec<Components>> = Arc::new(nested_components(&s, &grid.lambda1));
+    let components_per_l1 = comps.iter().map(|c| c.count).collect();
+    let x = Arc::new(x.clone());
+    let results = sweep_pool(grid.jobs(base), workers, move |job| {
+        fit_with_screening_on(&x, &s, &comps[job.grid_pos.0], &job.cfg)
+            .expect("screened sweep fit failed")
+            .fit
+    });
+    ScreenedSweepOutcome { results, workers, components_per_l1 }
 }
 
 /// Model selection: the result whose off-diagonal density is closest to
@@ -191,6 +246,37 @@ mod tests {
         let dmax = out.results.iter().map(|r| r.density).fold(0.0, f64::max);
         let sel = select_by_density(&out, 1.0).unwrap();
         assert_eq!(sel.density, dmax);
+    }
+
+    /// The screened sweep's amortized structure (one gram + one nested
+    /// component pass) must be invisible in the results: bit-identical
+    /// to per-point `fit_with_screening`, at any worker count.
+    #[test]
+    fn screened_sweep_matches_per_point_screening() {
+        use crate::concord::fit_with_screening;
+        let x = small_problem(7);
+        let grid = GridSpec { lambda1: vec![0.6, 0.15, 0.3], lambda2: vec![0.0, 0.2] };
+        let base = base_cfg();
+        let a = run_sweep_screened(&x, &grid, &base, 1);
+        let b = run_sweep_screened(&x, &grid, &base, 4);
+        assert_eq!(a.results.len(), 6);
+        assert_eq!(a.components_per_l1.len(), 3);
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            assert_eq!(ra.job.id, rb.job.id);
+            assert!(ra.fit.omega.max_abs_diff(&rb.fit.omega) == 0.0, "worker-count drift");
+        }
+        for r in &a.results {
+            let direct = fit_with_screening(&x, &r.job.cfg).unwrap();
+            assert!(
+                r.fit.omega.max_abs_diff(&direct.fit.omega) == 0.0,
+                "job {} differs from direct screening",
+                r.job.id
+            );
+            assert_eq!(r.fit.iterations, direct.fit.iterations);
+        }
+        // Thresholds are nested: a larger λ₁ can only split further.
+        assert!(a.components_per_l1[0] >= a.components_per_l1[2]);
+        assert!(a.components_per_l1[2] >= a.components_per_l1[1]);
     }
 
     /// Property: for random grids and worker counts, the sweep completes

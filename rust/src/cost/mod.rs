@@ -14,8 +14,10 @@
 
 pub mod model;
 pub mod optimizer;
+pub mod schedule;
 
 pub use model::{CostBreakdown, ProblemShape, ReplicationChoice};
 pub use optimizer::{optimize_replication, OptimizerResult};
+pub use schedule::{plan_component, FabricPlan};
 
 pub use crate::simnet::cost::{CostModel, MachineParams};

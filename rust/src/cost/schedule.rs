@@ -1,0 +1,189 @@
+//! Per-component fabric scheduling for screened solving.
+//!
+//! Screening splits one p×p problem into independent components; each
+//! non-trivial component then deserves its *own* machine shape. This
+//! module turns the Lemma 3.1–3.5 closed forms into that decision:
+//! search power-of-two rank counts `P ≤ max_ranks` and every
+//! fabric-runnable replication pair `(c_X, c_Ω)`, price each cell with
+//! [`CostBreakdown::time_with_threads`](super::model::CostBreakdown),
+//! and hand the component the cheapest `(P, c_X, c_Ω, variant)`. Small
+//! components come back with `ranks == 1` — the model itself says the
+//! communication would cost more than the parallelism buys, so they run
+//! on the single-node path.
+
+use crate::concord::Variant;
+use crate::simnet::MachineParams;
+
+use super::model::{CostBreakdown, ProblemShape, ReplicationChoice};
+use super::optimizer::evaluate;
+
+/// The fabric one screened component is assigned. `ranks == 1` means
+/// the single-node path (no fabric is spun up at all).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FabricPlan {
+    pub ranks: usize,
+    pub c_x: usize,
+    pub c_omega: usize,
+    pub variant: Variant,
+    /// Lemma 3.5 modeled time of this cell (flops at `threads` workers
+    /// per rank; comm terms zero when `ranks == 1`).
+    pub modeled_time: f64,
+}
+
+impl FabricPlan {
+    /// The trivial single-node plan (used for components below the
+    /// caller's cutoff, where no model evaluation is needed).
+    pub fn single_node(variant: Variant) -> Self {
+        FabricPlan { ranks: 1, c_x: 1, c_omega: 1, variant, modeled_time: 0.0 }
+    }
+}
+
+/// True when the 1.5D rank programs can actually *run* this cell: every
+/// rotation needs `c_F | T_R` (see `dist::rotate_parts`). Both variants
+/// pair the grids as `(c_X, c_Ω)` and `(c_Ω, c_X)`; Cov's one-time gram
+/// step additionally rotates the Xᵀ slabs against the X grid itself,
+/// pairing `(c_X, c_X)` — i.e. requiring `c_X² ≤ P` for powers of two.
+pub fn runnable_on_fabric(p_ranks: usize, c_x: usize, c_omega: usize, variant: Variant) -> bool {
+    let rep = ReplicationChoice { p_procs: p_ranks, c_x, c_omega };
+    if !rep.valid() {
+        return false;
+    }
+    let pair_ok = |c_r: usize, c_f: usize| (p_ranks / c_r) % c_f == 0;
+    let both = pair_ok(c_x, c_omega) && pair_ok(c_omega, c_x);
+    match variant {
+        Variant::Obs => both,
+        // Auto is priced per concrete variant by the planner; treat it
+        // conservatively so the cell is runnable whichever side wins.
+        Variant::Cov | Variant::Auto => both && pair_ok(c_x, c_x),
+    }
+}
+
+/// Choose the fabric for one screened component of shape `shape`
+/// (`shape.p` is the component size): search power-of-two rank counts
+/// up to `min(max_ranks, size)` (so no team is ever empty) and all
+/// runnable replication pairs, minimizing modeled time under `threads`
+/// node-local workers. Ties prefer fewer ranks, then lower replication.
+pub fn plan_component(
+    shape: &ProblemShape,
+    max_ranks: usize,
+    threads: usize,
+    machine: &MachineParams,
+    variant: Variant,
+) -> FabricPlan {
+    let variants: &[Variant] = match variant {
+        Variant::Auto => &[Variant::Cov, Variant::Obs],
+        Variant::Cov => &[Variant::Cov],
+        Variant::Obs => &[Variant::Obs],
+    };
+    let size = (shape.p as usize).max(1);
+    let threads = threads.max(1);
+    let mut best: Option<FabricPlan> = None;
+    let mut p_ranks = 1usize;
+    while p_ranks <= max_ranks.max(1) && p_ranks <= size {
+        let mut c_x = 1usize;
+        while c_x <= p_ranks {
+            let mut c_o = 1usize;
+            while c_x * c_o <= p_ranks {
+                for &v in variants {
+                    if runnable_on_fabric(p_ranks, c_x, c_o, v) {
+                        let rep = ReplicationChoice { p_procs: p_ranks, c_x, c_omega: c_o };
+                        let time = price(&evaluate(shape, &rep, v), p_ranks, threads, machine);
+                        if best.map(|b| time < b.modeled_time).unwrap_or(true) {
+                            best = Some(FabricPlan {
+                                ranks: p_ranks,
+                                c_x,
+                                c_omega: c_o,
+                                variant: v,
+                                modeled_time: time,
+                            });
+                        }
+                    }
+                }
+                c_o *= 2;
+            }
+            c_x *= 2;
+        }
+        p_ranks *= 2;
+    }
+    best.expect("P = 1, c_X = c_Ω = 1 is always runnable")
+}
+
+/// Price one cell. At P = 1 nothing is sent — the closed forms'
+/// residual L/W terms are rotation bookkeeping that degenerates to
+/// self-sends — so only the flop terms count.
+fn price(cost: &CostBreakdown, p_ranks: usize, threads: usize, machine: &MachineParams) -> f64 {
+    if p_ranks == 1 {
+        let flop_time = cost.flops_dense * machine.gamma_dense
+            + cost.flops_sparse * machine.gamma_sparse;
+        flop_time / threads as f64
+    } else {
+        cost.time_with_threads(machine, p_ranks, threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine() -> MachineParams {
+        MachineParams::edison_like()
+    }
+
+    /// A tiny component: any communication dwarfs its flops, so the
+    /// planner must route it to the single-node path.
+    #[test]
+    fn tiny_component_goes_single_node() {
+        let shape = ProblemShape { p: 8.0, n: 100.0, s: 40.0, t: 10.0, d: 3.0 };
+        let plan = plan_component(&shape, 64, 1, &machine(), Variant::Auto);
+        assert_eq!(plan.ranks, 1);
+        assert_eq!((plan.c_x, plan.c_omega), (1, 1));
+    }
+
+    /// A massive component is flop-bound: the planner should spend the
+    /// whole rank budget on it.
+    #[test]
+    fn huge_component_takes_the_full_budget() {
+        let shape = ProblemShape { p: 40_000.0, n: 100.0, s: 40.0, t: 10.0, d: 10.0 };
+        let plan = plan_component(&shape, 64, 1, &machine(), Variant::Obs);
+        assert_eq!(plan.ranks, 64);
+        assert!(runnable_on_fabric(plan.ranks, plan.c_x, plan.c_omega, plan.variant));
+    }
+
+    /// The rank budget is never exceeded, and fabrics never outnumber
+    /// the component's columns.
+    #[test]
+    fn plans_respect_budget_and_size() {
+        let m = machine();
+        for (p, max_ranks) in [(3.0, 64usize), (100.0, 8), (5_000.0, 16)] {
+            let shape = ProblemShape { p, n: 50.0, s: 30.0, t: 8.0, d: 5.0 };
+            let plan = plan_component(&shape, max_ranks, 4, &m, Variant::Auto);
+            assert!(plan.ranks <= max_ranks);
+            assert!(plan.ranks <= p as usize);
+            assert!(plan.c_x * plan.c_omega <= plan.ranks);
+            assert!(runnable_on_fabric(plan.ranks, plan.c_x, plan.c_omega, plan.variant));
+            assert!(plan.modeled_time.is_finite());
+        }
+    }
+
+    /// Cov plans honour the gram step's extra c_X² ≤ P constraint that
+    /// plain `ReplicationChoice::valid` does not know about.
+    #[test]
+    fn runnable_enforces_cov_gram_constraint() {
+        assert!(!runnable_on_fabric(8, 4, 2, Variant::Cov));
+        assert!(runnable_on_fabric(8, 4, 2, Variant::Obs));
+        assert!(runnable_on_fabric(16, 4, 2, Variant::Cov));
+        assert!(!runnable_on_fabric(8, 4, 4, Variant::Obs), "c_X·c_Ω > P");
+        assert!(runnable_on_fabric(1, 1, 1, Variant::Auto));
+    }
+
+    /// More node-local threads deflate the flop terms, so the threaded
+    /// plan's modeled time can only improve.
+    #[test]
+    fn threads_never_hurt_the_plan() {
+        let shape = ProblemShape { p: 2_000.0, n: 100.0, s: 40.0, t: 10.0, d: 10.0 };
+        let m = machine();
+        let t1 = plan_component(&shape, 32, 1, &m, Variant::Obs);
+        let t8 = plan_component(&shape, 32, 8, &m, Variant::Obs);
+        assert!(t8.modeled_time <= t1.modeled_time);
+    }
+}

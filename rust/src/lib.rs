@@ -27,6 +27,18 @@
 //! never runs on the request path; a pure Rust fallback covers arbitrary
 //! shapes and is the only path in the default offline build.
 //!
+//! ## Screened solving (the paper's §6 divide-and-conquer)
+//!
+//! Exact thresholding (Mazumder–Hastie) splits the problem into the
+//! connected components of `{|S_ij| > λ₁}` losslessly.
+//! [`concord::screening`] owns the decomposition (union-find, nested
+//! per-λ₁ refinement, reassembly); [`concord::screened_dist`] composes
+//! it with the distributed layer — a distributed screening pass, then
+//! one cost-model-sized fabric per component ([`cost::schedule`]) —
+//! and the sweep coordinator reuses one gram + one nested component
+//! pass across a whole λ-grid (`coordinator::sweep::run_sweep_screened`).
+//! CLI: `--screen` / `solver.screen = true`.
+//!
 //! ## Node-local parallelism (the paper's per-node `t`)
 //!
 //! The paper models each node as threaded MKL on 24 cores: every

@@ -11,10 +11,11 @@ use anyhow::{anyhow, Result};
 
 use hpconcord::cli::{Args, USAGE};
 use hpconcord::concord::{
-    fit_distributed, fit_single_node, ConcordConfig, Variant,
+    fit_distributed, fit_screened_distributed, fit_single_node, fit_with_screening,
+    ConcordConfig, ScreenedDistOptions, Variant,
 };
 use hpconcord::config::Config;
-use hpconcord::coordinator::{run_sweep, GridSpec};
+use hpconcord::coordinator::{run_sweep, run_sweep_screened, GridSpec};
 use hpconcord::cost::ProblemShape;
 use hpconcord::gen;
 use hpconcord::linalg::Mat;
@@ -120,9 +121,18 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let problem = load_problem(args, &file_cfg)?;
     let cfg = solver_config(args, &file_cfg)?;
     let mode = args.str_or("mode", "single");
+    let screen = args.has("screen") || file_cfg.bool_or("solver.screen", false)?;
     let t0 = std::time::Instant::now();
 
     let (fit, cost_line) = match mode.as_str() {
+        "single" if screen => {
+            let out = fit_with_screening(&problem.x, &cfg)?;
+            println!(
+                "screening: {} components (largest {}) at λ1={}",
+                out.components, out.largest, cfg.lambda1
+            );
+            (out.fit, String::new())
+        }
         "single" => {
             let artifacts = args.str_or("artifacts", "artifacts");
             let fit = match Engine::load(&artifacts) {
@@ -135,6 +145,65 @@ fn cmd_solve(args: &Args) -> Result<()> {
                 _ => fit_single_node(&problem.x, &cfg)?,
             };
             (fit, String::new())
+        }
+        "dist" if screen => {
+            let ranks = args.usize_or("ranks", file_cfg.usize_or("fabric.ranks", 8)?)?;
+            let c_x = args.usize_or("cx", file_cfg.usize_or("fabric.cx", 1)?)?;
+            let c_o = args.usize_or("comega", file_cfg.usize_or("fabric.comega", 1)?)?;
+            // Explicit --cx/--comega pin every component fabric; otherwise
+            // the cost model sizes each component's fabric on its own.
+            let fixed = if args.has("cx") || args.has("comega") {
+                Some((ranks, c_x, c_o))
+            } else {
+                None
+            };
+            let opts = ScreenedDistOptions {
+                total_ranks: ranks,
+                machine: MachineParams::default(),
+                small_cutoff: args
+                    .usize_or("screen-cutoff", file_cfg.usize_or("screen.cutoff", 4)?)?,
+                fixed,
+            };
+            let out = fit_screened_distributed(&problem.x, &cfg, &opts)?;
+            println!(
+                "screening: {} components (largest {}) at λ1={}; \
+                 screen pass comm {:.6}s",
+                out.components, out.largest, cfg.lambda1, out.screen_cost.comm_time
+            );
+            let mut unmetered = 0usize;
+            for sv in &out.solves {
+                if sv.plan.ranks <= 1 {
+                    unmetered += 1;
+                    println!(
+                        "  component p={:<6} → single-node path (unmetered)",
+                        sv.indices.len()
+                    );
+                } else {
+                    println!(
+                        "  component p={:<6} → P={} c_X={} c_Ω={} {:?}  \
+                         modeled {:.4}s (comm {:.4}s)",
+                        sv.indices.len(),
+                        sv.plan.ranks,
+                        sv.plan.c_x,
+                        sv.plan.c_omega,
+                        sv.plan.variant,
+                        sv.cost.time,
+                        sv.cost.comm_time
+                    );
+                }
+            }
+            let s = out.cost;
+            let note = if unmetered > 0 {
+                format!("  [{unmetered} single-node component(s) excluded]")
+            } else {
+                String::new()
+            };
+            let line = format!(
+                "screened aggregate: modeled time {:.4}s (comm {:.4}s)  \
+                 max/rank: {} msgs, {} words{note}",
+                s.time, s.comm_time, s.max_per_rank.messages, s.max_per_rank.words
+            );
+            (out.fit, line)
         }
         "dist" => {
             let ranks = args.usize_or("ranks", file_cfg.usize_or("fabric.ranks", 8)?)?;
@@ -187,9 +256,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         lambda2: args.f64_list_or("l2", &[0.0, 0.1])?,
     };
     let workers = args.usize_or("workers", 4)?;
-    let out = run_sweep(&problem.x, &grid, &base, workers);
+    let screen = args.has("screen") || file_cfg.bool_or("solver.screen", false)?;
+    let results = if screen {
+        let out = run_sweep_screened(&problem.x, &grid, &base, workers);
+        let comps: Vec<String> = out.components_per_l1.iter().map(|c| c.to_string()).collect();
+        println!("screened sweep: components per λ1 = [{}]", comps.join(", "));
+        out.results
+    } else {
+        run_sweep(&problem.x, &grid, &base, workers).results
+    };
     let mut table = Table::new(&["λ1", "λ2", "iters", "density%", "PPV%", "FDR%"]);
-    for r in &out.results {
+    for r in &results {
         let m = support_metrics(&r.fit.omega, &problem.omega0, 1e-8);
         table.row(vec![
             format!("{:.3}", r.job.cfg.lambda1),

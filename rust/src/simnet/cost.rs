@@ -89,6 +89,15 @@ impl Counters {
         self.flops_dense += other.flops_dense;
         self.flops_sparse += other.flops_sparse;
     }
+
+    /// Component-wise max — folding per-rank critical-path counts
+    /// across independently-run fabrics.
+    pub fn max_elementwise(&mut self, other: &Counters) {
+        self.messages = self.messages.max(other.messages);
+        self.words = self.words.max(other.words);
+        self.flops_dense = self.flops_dense.max(other.flops_dense);
+        self.flops_sparse = self.flops_sparse.max(other.flops_sparse);
+    }
 }
 
 /// Aggregate view over all ranks of a run.
@@ -105,6 +114,18 @@ pub struct CostSummary {
 }
 
 impl CostSummary {
+    /// Fold another fabric's summary into this one under a *sequential*
+    /// schedule (its ranks start after this one's finish): critical-path
+    /// times add, totals add, per-rank maxima take the component-wise
+    /// max. This is how a screened run aggregates its screening pass
+    /// plus one sized fabric per component into a single bill.
+    pub fn merge_sequential(&mut self, other: &CostSummary) {
+        self.time += other.time;
+        self.comm_time += other.comm_time;
+        self.total.add(&other.total);
+        self.max_per_rank.max_elementwise(&other.max_per_rank);
+    }
+
     pub fn from_counters(per_rank: &[Counters], m: &MachineParams) -> Self {
         let mut s = CostSummary::default();
         for c in per_rank {
@@ -146,6 +167,28 @@ mod tests {
         assert_eq!(s.total.words, 10);
         assert_eq!(s.max_per_rank.messages, 4);
         assert_eq!(s.max_per_rank.words, 9);
+    }
+
+    #[test]
+    fn merge_sequential_adds_times_and_totals_maxes_per_rank() {
+        let m = MachineParams { alpha: 1.0, beta: 0.0, gamma_dense: 0.0, gamma_sparse: 0.0 };
+        let a = CostSummary::from_counters(
+            &[Counters { messages: 4, words: 1, flops_dense: 2, flops_sparse: 0 }],
+            &m,
+        );
+        let b = CostSummary::from_counters(
+            &[Counters { messages: 1, words: 9, flops_dense: 5, flops_sparse: 3 }],
+            &m,
+        );
+        let mut s = a;
+        s.merge_sequential(&b);
+        assert_eq!(s.time, a.time + b.time);
+        assert_eq!(s.total.messages, 5);
+        assert_eq!(s.total.words, 10);
+        assert_eq!(s.total.flops_dense, 7);
+        assert_eq!(s.max_per_rank.messages, 4);
+        assert_eq!(s.max_per_rank.words, 9);
+        assert_eq!(s.max_per_rank.flops_sparse, 3);
     }
 
     #[test]

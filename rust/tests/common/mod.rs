@@ -1,0 +1,27 @@
+//! Shared fixtures for the screening test suites.
+
+use hpconcord::linalg::Mat;
+use hpconcord::prelude::*;
+
+/// X whose column blocks are supported on disjoint sample rows: the
+/// cross-block entries of S = XᵀX/n are exactly 0.0, so screening is
+/// *guaranteed* to split between blocks at any λ₁ ≥ 0. Within-block
+/// connectivity margins are analytic (chain adjacent covariances sit
+/// near 0.22 after the disjoint-row halving), so keep `n_each` ≥ 200
+/// for ≥ 4σ clearance over the λ₁ values the suites use.
+pub fn disjoint_blocks(sizes: &[usize], n_each: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let p: usize = sizes.iter().sum();
+    let mut x = Mat::zeros(n_each * sizes.len(), p);
+    let mut col0 = 0;
+    for (b, &sz) in sizes.iter().enumerate() {
+        let prob = gen::chain_problem(sz, n_each, &mut rng);
+        for i in 0..n_each {
+            for j in 0..sz {
+                x.set(b * n_each + i, col0 + j, prob.x.get(i, j));
+            }
+        }
+        col0 += sz;
+    }
+    x
+}

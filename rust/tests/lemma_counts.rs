@@ -6,10 +6,17 @@
 
 use std::sync::Arc;
 
-use hpconcord::concord::{obs::fit_obs_rank, ConcordConfig, Variant};
+use hpconcord::concord::screening::extract_columns;
+use hpconcord::concord::{
+    fit_screened_distributed, obs::fit_obs_rank, run_distributed, ConcordConfig,
+    ScreenedDistOptions, Variant,
+};
 use hpconcord::dist::{rotate_parts, Block, RepGrid};
 use hpconcord::linalg::Mat;
 use hpconcord::prelude::*;
+
+mod common;
+use common::disjoint_blocks;
 
 fn fixed_budget_cfg() -> ConcordConfig {
     ConcordConfig {
@@ -43,12 +50,30 @@ fn obs_bandwidth_scales_inversely_with_replication() {
     assert!(w12 < w11, "c_Ω=2 should cut words: {w12} !< {w11}");
 }
 
-/// Lemma 3.3 at the operation level, large configuration: per-rank
-/// messages ≤ P/(c_R·c_F) and words ≤ nnz(R)/c_F exactly.
+/// Lemma 3.3 at the operation level: per-rank messages ≤ P/(c_R·c_F)
+/// and words ≤ nnz(R)/c_F exactly — at a large configuration and at the
+/// small fabric sizes the screened scheduler hands individual
+/// components (P ∈ {4, 8}).
 #[test]
 fn lemma33_bounds_hold_at_scale() {
-    let p_ranks = 32;
-    for (c_r, c_f) in [(1usize, 1usize), (2, 4), (4, 2), (4, 8), (8, 4), (16, 2), (1, 32)] {
+    for p_ranks in [4usize, 8, 32] {
+        lemma33_bounds_at(p_ranks);
+    }
+}
+
+fn lemma33_bounds_at(p_ranks: usize) {
+    for (c_r, c_f) in [
+        (1usize, 1usize),
+        (2, 1),
+        (1, 4),
+        (2, 2),
+        (2, 4),
+        (4, 2),
+        (4, 8),
+        (8, 4),
+        (16, 2),
+        (1, 32),
+    ] {
         if c_r * c_f > p_ranks {
             continue;
         }
@@ -138,6 +163,46 @@ fn threading_leaves_message_and_word_counts_unchanged() {
             sum_1.max_per_rank, sum_4.max_per_rank,
             "{variant:?}: critical-path counts changed"
         );
+    }
+}
+
+/// Screening composition vs Lemma 3.2/3.3: inside each component's
+/// sized sub-fabric, the per-rank message/word (and flop) counters are
+/// *exactly* what the same sub-problem meters when run standalone —
+/// screening changes which fabrics run, never what happens within one.
+/// Checked for both variants over a replicated sub-fabric configuration.
+#[test]
+fn screening_leaves_subfabric_counts_unchanged() {
+    // Two 12-column blocks on disjoint sample rows: cross-block S
+    // entries are exactly 0.0, so the split is guaranteed.
+    let x = disjoint_blocks(&[12, 12], 200, 0x5EED5);
+
+    let machine = MachineParams::edison_like();
+    for variant in [Variant::Cov, Variant::Obs] {
+        let mut cfg = fixed_budget_cfg();
+        cfg.variant = variant;
+        cfg.lambda1 = 0.02;
+        let opts = ScreenedDistOptions {
+            total_ranks: 8,
+            machine,
+            small_cutoff: 0,
+            fixed: Some((4, 2, 2)),
+        };
+        let screened = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+        assert_eq!(screened.solves.len(), 2, "{variant:?}: expected one fabric per block");
+        for sv in &screened.solves {
+            assert_eq!(sv.counters.len(), 4, "{variant:?}: sized sub-fabric has P = 4");
+            let standalone =
+                run_distributed(&extract_columns(&x, &sv.indices), &cfg, 4, 2, 2, machine);
+            assert_eq!(
+                standalone.counters, sv.counters,
+                "{variant:?}: per-rank counters inside the component fabric differ \
+                 from the standalone run"
+            );
+            // And the summary derived from them is byte-equal too.
+            assert_eq!(standalone.cost.total, sv.cost.total);
+            assert_eq!(standalone.cost.max_per_rank, sv.cost.max_per_rank);
+        }
     }
 }
 

@@ -12,12 +12,18 @@
 //!    across repeated runs: intra-node threading must only change
 //!    wall-clock time, never results or the paper's L/W counts.
 
-use hpconcord::concord::{fit_distributed, fit_single_node, ConcordConfig, Variant};
+use hpconcord::concord::{
+    fit_distributed, fit_screened_distributed, fit_single_node, fit_with_screening,
+    ConcordConfig, ScreenedDistOptions, Variant,
+};
 use hpconcord::linalg::{Csr, Mat};
 use hpconcord::prelude::*;
 use hpconcord::prop_assert;
 use hpconcord::simnet::cost::Counters;
 use hpconcord::util::proptest::check;
+
+mod common;
+use common::disjoint_blocks;
 
 fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
     Mat::from_fn(r, c, |_, _| rng.normal())
@@ -153,6 +159,81 @@ fn fit_distributed_is_byte_identical_across_repeated_runs() {
         assert_eq!(first.1, again.1);
         assert_eq!(first.2, again.2, "counters drifted between runs");
         assert_eq!(first.3, again.3);
+    }
+}
+
+fn screened_base_cfg(threads: usize) -> ConcordConfig {
+    ConcordConfig {
+        lambda1: 0.05,
+        lambda2: 0.1,
+        tol: 1e-5,
+        max_iter: 60,
+        variant: Variant::Cov,
+        threads,
+        ..Default::default()
+    }
+}
+
+/// The screened single-node path (gram + component split + per-block
+/// solves) is bit-identical across node-local thread counts.
+#[test]
+fn fit_with_screening_is_byte_identical_across_thread_counts() {
+    let x = disjoint_blocks(&[10, 8], 300, 0x5C1);
+    let base = fit_with_screening(&x, &screened_base_cfg(1)).unwrap();
+    for threads in [2usize, 4] {
+        let out = fit_with_screening(&x, &screened_base_cfg(threads)).unwrap();
+        assert_eq!(out.components, base.components, "threads={threads}");
+        assert_eq!(out.fit.iterations, base.fit.iterations, "threads={threads}");
+        assert_eq!(
+            bits(&out.fit.omega),
+            bits(&base.fit.omega),
+            "screened estimate not byte-identical at threads={threads}"
+        );
+    }
+}
+
+/// The screened *distributed* composition — screening fabric, one sized
+/// fabric per component, reassembly — is bit-identical across thread
+/// counts, and its metered counters (screening pass included) never
+/// move: threading only divides flop time.
+#[test]
+fn fit_screened_distributed_is_byte_identical_across_thread_counts() {
+    let x = disjoint_blocks(&[12, 12], 300, 0x5C2);
+    let run = |threads: usize| {
+        let cfg = screened_base_cfg(threads);
+        let opts = ScreenedDistOptions {
+            total_ranks: 8,
+            machine: MachineParams::edison_like(),
+            small_cutoff: 4,
+            fixed: Some((4, 2, 2)),
+        };
+        fit_screened_distributed(&x, &cfg, &opts).unwrap()
+    };
+    let base = run(1);
+    assert_eq!(base.components, 2, "fixture must split in two");
+    assert_eq!(base.solves.len(), 2);
+    for threads in [2usize, 4] {
+        let out = run(threads);
+        assert_eq!(out.components, base.components);
+        assert_eq!(
+            bits(&out.fit.omega),
+            bits(&base.fit.omega),
+            "screened-dist estimate not byte-identical at threads={threads}"
+        );
+        assert_eq!(out.fit.iterations, base.fit.iterations);
+        assert_eq!(
+            out.screen_cost.total, base.screen_cost.total,
+            "screening-pass counters changed at threads={threads}"
+        );
+        assert_eq!(
+            out.cost.total, base.cost.total,
+            "aggregate counters changed at threads={threads}"
+        );
+        assert_eq!(out.cost.max_per_rank, base.cost.max_per_rank);
+        for (a, b) in out.solves.iter().zip(&base.solves) {
+            assert_eq!(a.indices, b.indices);
+            assert_eq!(a.counters, b.counters, "per-rank counters changed");
+        }
     }
 }
 

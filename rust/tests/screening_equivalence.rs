@@ -1,0 +1,369 @@
+//! Screened solving: equivalence and property suite.
+//!
+//! - `covariance_components` against a brute-force label-propagation
+//!   reference on randomized symmetric matrices plus edge cases
+//!   (threshold 0 on a dense matrix → one component; threshold above
+//!   max |S_ij| → all singletons; p ∈ {1, 2});
+//! - the ISSUE's acceptance pair: on a *connected* problem the screened
+//!   distributed solver is bit-identical to the unscreened fabric run
+//!   (same rank program, same schedule); on a k-block problem it runs k
+//!   independent fabrics whose summed flop counters are strictly below
+//!   the single-fabric count;
+//! - per-block bitwise equivalence of both screened paths against plain
+//!   `fit_single_node` on the extracted component columns;
+//! - the regression pinning the fixed iteration-statistics semantics:
+//!   `iterations` *sums* across components and `mean_linesearch` is the
+//!   trial-weighted mean (the old code took the max and divided by it).
+
+use hpconcord::concord::screening::{
+    covariance_components, extract_columns, gram_components, nested_components,
+};
+use hpconcord::concord::{
+    fit_distributed, fit_screened_distributed, fit_single_node, fit_with_screening,
+    ConcordConfig, ScreenedDistOptions, Variant,
+};
+use hpconcord::linalg::Mat;
+use hpconcord::prelude::*;
+use hpconcord::prop_assert;
+use hpconcord::runtime::native;
+use hpconcord::util::proptest::check;
+
+mod common;
+use common::disjoint_blocks;
+
+fn bits(m: &Mat) -> Vec<u64> {
+    m.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Brute-force connected-components reference: propagate minimum labels
+/// across thresholded edges until fixpoint, then renumber densely by
+/// first appearance — an algorithm with nothing in common with the
+/// union-find under test.
+fn reference_components(s: &Mat, thr: f64) -> Vec<usize> {
+    let p = s.rows();
+    let mut label: Vec<usize> = (0..p).collect();
+    loop {
+        let mut changed = false;
+        for i in 0..p {
+            for j in 0..p {
+                if i != j && (s.get(i, j).abs() > thr || s.get(j, i).abs() > thr) {
+                    let m = label[i].min(label[j]);
+                    if label[i] != m {
+                        label[i] = m;
+                        changed = true;
+                    }
+                    if label[j] != m {
+                        label[j] = m;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let mut map = std::collections::HashMap::new();
+    label
+        .iter()
+        .map(|&r| {
+            let next = map.len();
+            *map.entry(r).or_insert(next)
+        })
+        .collect()
+}
+
+/// A random symmetric matrix with all off-diagonal magnitudes in
+/// (lo, lo + span) — every entry is nonzero, so threshold 0 must give a
+/// single component.
+fn random_symmetric(rng: &mut Rng, p: usize, lo: f64, span: f64) -> Mat {
+    let mut s = Mat::eye(p);
+    for i in 0..p {
+        for j in (i + 1)..p {
+            let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+            let v = sign * (lo + span * rng.uniform());
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+    }
+    s
+}
+
+#[test]
+fn prop_components_match_brute_force_reference() {
+    check(0x5c4ee, 30, |rng| {
+        let p = match rng.below(5) {
+            0 => 1,
+            1 => 2,
+            _ => 3 + rng.below(14) as usize,
+        };
+        let s = random_symmetric(rng, p, 0.05, 0.9);
+        for _ in 0..3 {
+            let thr = rng.uniform();
+            let got = covariance_components(&s, thr);
+            let want = reference_components(&s, thr);
+            prop_assert!(got == want, "p={p} thr={thr}: {got:?} != {want:?}");
+        }
+        // Edge cases on the same matrix: every off-diagonal exceeds 0,
+        // so threshold 0 is one component; anything above the max
+        // magnitude is all singletons.
+        let zero = covariance_components(&s, 0.0);
+        prop_assert!(zero.iter().all(|&c| c == 0), "threshold 0 must connect: {zero:?}");
+        let hi = covariance_components(&s, 2.0);
+        prop_assert!(
+            hi == (0..p).collect::<Vec<_>>(),
+            "threshold > max must isolate: {hi:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nested_components_match_direct() {
+    check(0x0e57ed, 20, |rng| {
+        let p = 2 + rng.below(12) as usize;
+        let s = random_symmetric(rng, p, 0.0, 1.0);
+        let thresholds: Vec<f64> = (0..1 + rng.below(4) as usize)
+            .map(|_| rng.uniform())
+            .collect();
+        let nested = nested_components(&s, &thresholds);
+        for (k, &thr) in thresholds.iter().enumerate() {
+            let direct = gram_components(&s, thr);
+            prop_assert!(
+                nested[k] == direct,
+                "p={p} thr={thr}: nested {:?} != direct {:?}",
+                nested[k].comp,
+                direct.comp
+            );
+        }
+        Ok(())
+    });
+}
+
+fn screened_cfg() -> ConcordConfig {
+    ConcordConfig {
+        lambda1: 0.05,
+        lambda2: 0.1,
+        tol: 1e-6,
+        max_iter: 60,
+        max_linesearch: 40,
+        variant: Variant::Cov,
+        threads: 1,
+    }
+}
+
+/// Acceptance, part 1: with the threshold below every off-diagonal
+/// |S_ij| the graph is connected — one component spanning everything —
+/// and the screened distributed solver must reproduce the unscreened
+/// fabric run *identically*: same omega bits, same iteration count,
+/// same solve-fabric counters.
+#[test]
+fn connected_problem_screened_dist_identical_to_unscreened() {
+    let mut rng = Rng::new(0xC0DE);
+    let problem = gen::chain_problem(16, 200, &mut rng);
+    let cfg = screened_cfg();
+    let s = native::gram(&problem.x);
+    assert_eq!(
+        gram_components(&s, cfg.lambda1).count,
+        1,
+        "fixture must be connected at λ1 = {}",
+        cfg.lambda1
+    );
+
+    let machine = MachineParams::edison_like();
+    let plain = fit_distributed(&problem.x, &cfg, 4, 2, 2, machine);
+    let opts = ScreenedDistOptions {
+        total_ranks: 4,
+        machine,
+        small_cutoff: 0,
+        fixed: Some((4, 2, 2)),
+    };
+    let screened = fit_screened_distributed(&problem.x, &cfg, &opts).unwrap();
+
+    assert_eq!(screened.components, 1);
+    assert_eq!(screened.solves.len(), 1);
+    assert_eq!(bits(&screened.fit.omega), bits(&plain.fit.omega), "omega must be identical");
+    assert_eq!(screened.fit.iterations, plain.fit.iterations);
+    assert_eq!(screened.fit.objective.to_bits(), plain.fit.objective.to_bits());
+    // The one component fabric metered exactly what the unscreened
+    // fabric metered.
+    assert_eq!(screened.solves[0].cost.total, plain.cost.total);
+    assert_eq!(screened.solves[0].cost.max_per_rank, plain.cost.max_per_rank);
+}
+
+/// Acceptance, part 2: a k-block problem runs k independent fabrics
+/// whose *summed* flop counters are strictly below the single-fabric
+/// count (under an identical fixed iteration budget), and the estimate
+/// is exactly block-diagonal.
+#[test]
+fn k_block_problem_runs_k_smaller_fabrics() {
+    let sizes = [12usize, 12];
+    let x = disjoint_blocks(&sizes, 200, 0xB10C);
+    let mut cfg = screened_cfg();
+    cfg.tol = 0.0; // fixed budget: both paths run exactly max_iter
+    cfg.max_iter = 8;
+
+    let machine = MachineParams::edison_like();
+    let plain = fit_distributed(&x, &cfg, 4, 2, 2, machine);
+    let opts = ScreenedDistOptions {
+        total_ranks: 4,
+        machine,
+        small_cutoff: 0,
+        fixed: Some((4, 2, 2)),
+    };
+    let screened = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+
+    assert_eq!(screened.components, sizes.len());
+    assert_eq!(screened.solves.len(), sizes.len(), "every block gets its own fabric");
+    for sv in &screened.solves {
+        assert_eq!(sv.plan.ranks, 4);
+        assert!(!sv.counters.is_empty());
+    }
+    let screened_flops: u64 = screened
+        .solves
+        .iter()
+        .map(|sv| sv.cost.total.flops_dense + sv.cost.total.flops_sparse)
+        .sum();
+    let plain_flops = plain.cost.total.flops_dense + plain.cost.total.flops_sparse;
+    assert!(
+        screened_flops < plain_flops,
+        "summed per-component flops {screened_flops} must undercut the \
+         single fabric's {plain_flops}"
+    );
+    // Exactly block-diagonal: no cross-component entry was ever touched.
+    for i in 0..sizes[0] {
+        for j in sizes[0]..(sizes[0] + sizes[1]) {
+            assert_eq!(screened.fit.omega.get(i, j), 0.0, "cross entry ({i},{j})");
+            assert_eq!(screened.fit.omega.get(j, i), 0.0, "cross entry ({j},{i})");
+        }
+    }
+}
+
+/// Per-block bitwise equivalence: both screened paths solve each
+/// component by running the plain single-node solver on the extracted
+/// columns, so each block of their omega is bit-for-bit the standalone
+/// `fit_single_node` estimate (screened-dist routed through the
+/// single-node path via `small_cutoff`).
+#[test]
+fn screened_paths_match_single_node_bitwise_per_block() {
+    let sizes = [10usize, 8];
+    let x = disjoint_blocks(&sizes, 400, 0xB17);
+    let cfg = screened_cfg();
+
+    let s = native::gram(&x);
+    let comps = gram_components(&s, cfg.lambda1);
+    assert_eq!(comps.count, 2, "disjoint blocks must split exactly in two");
+
+    let screened = fit_with_screening(&x, &cfg).unwrap();
+    let opts = ScreenedDistOptions {
+        total_ranks: 8,
+        machine: MachineParams::edison_like(),
+        small_cutoff: 64, // force every component onto the single-node path
+        fixed: None,
+    };
+    let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+    assert_eq!(sdist.components, 2);
+    assert_eq!(
+        bits(&screened.fit.omega),
+        bits(&sdist.fit.omega),
+        "single-node and distributed screened paths must agree bitwise"
+    );
+
+    for c in 0..comps.count {
+        let idx = comps.members(c);
+        let sub = fit_single_node(&extract_columns(&x, &idx), &cfg).unwrap();
+        for (a, &i) in idx.iter().enumerate() {
+            for (b, &j) in idx.iter().enumerate() {
+                assert_eq!(
+                    screened.fit.omega.get(i, j).to_bits(),
+                    sub.omega.get(a, b).to_bits(),
+                    "component {c} entry ({i},{j}) is not the standalone solve"
+                );
+            }
+        }
+    }
+}
+
+/// The fabric-backed screened path stays within distributed-vs-serial
+/// tolerance of the standalone per-block solves.
+#[test]
+fn screened_dist_fabric_blocks_match_single_node_closely() {
+    let sizes = [12usize, 12];
+    let x = disjoint_blocks(&sizes, 400, 0xFAB);
+    let cfg = screened_cfg();
+    let opts = ScreenedDistOptions {
+        total_ranks: 4,
+        machine: MachineParams::edison_like(),
+        small_cutoff: 0,
+        fixed: Some((4, 2, 2)),
+    };
+    let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+    assert_eq!(sdist.components, 2);
+    for sv in &sdist.solves {
+        let sub = fit_single_node(&extract_columns(&x, &sv.indices), &cfg).unwrap();
+        for (a, &i) in sv.indices.iter().enumerate() {
+            for (b, &j) in sv.indices.iter().enumerate() {
+                let diff = (sdist.fit.omega.get(i, j) - sub.omega.get(a, b)).abs();
+                assert!(diff < 1e-8, "entry ({i},{j}) off by {diff}");
+            }
+        }
+    }
+}
+
+/// Regression pinning the iteration-statistics semantics: `iterations`
+/// sums across components (the old code took the max while
+/// `mean_linesearch` divided by it), `mean_linesearch` is the
+/// trial-weighted mean, and the per-component stats expose each
+/// block's own counts.
+#[test]
+fn iteration_stats_sum_across_components() {
+    let sizes = [10usize, 6];
+    let x = disjoint_blocks(&sizes, 400, 0x57A7);
+    let mut cfg = screened_cfg();
+    cfg.tol = 1e-5;
+    cfg.max_iter = 150;
+
+    let s = native::gram(&x);
+    let comps = gram_components(&s, cfg.lambda1);
+    assert_eq!(comps.count, 2);
+    let a = fit_single_node(&extract_columns(&x, &comps.members(0)), &cfg).unwrap();
+    let b = fit_single_node(&extract_columns(&x, &comps.members(1)), &cfg).unwrap();
+    assert!(a.iterations >= 1 && b.iterations >= 1);
+
+    let screened = fit_with_screening(&x, &cfg).unwrap();
+    assert_eq!(
+        screened.fit.iterations,
+        a.iterations + b.iterations,
+        "iterations must sum across components"
+    );
+    assert!(
+        screened.fit.iterations > a.iterations.max(b.iterations),
+        "sum semantics must be distinguishable from the old max semantics"
+    );
+    let want_mean = (a.mean_linesearch * a.iterations as f64
+        + b.mean_linesearch * b.iterations as f64)
+        / (a.iterations + b.iterations) as f64;
+    assert!(
+        (screened.fit.mean_linesearch - want_mean).abs() < 1e-12,
+        "mean_linesearch must be the trial-weighted mean: {} vs {want_mean}",
+        screened.fit.mean_linesearch
+    );
+    assert!((screened.fit.objective - (a.objective + b.objective)).abs() < 1e-12);
+
+    assert_eq!(screened.per_component.len(), 2);
+    assert_eq!(screened.per_component[0].size, sizes[0]);
+    assert_eq!(screened.per_component[1].size, sizes[1]);
+    assert_eq!(screened.per_component[0].iterations, a.iterations);
+    assert_eq!(screened.per_component[1].iterations, b.iterations);
+
+    // The distributed composition reports the same summed semantics.
+    let opts = ScreenedDistOptions {
+        total_ranks: 4,
+        machine: MachineParams::edison_like(),
+        small_cutoff: 64,
+        fixed: None,
+    };
+    let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+    assert_eq!(sdist.fit.iterations, a.iterations + b.iterations);
+    assert_eq!(sdist.per_component.len(), 2);
+}
