@@ -1,13 +1,19 @@
-//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): local GEMM
-//! throughput (the MKL-replacement kernel under everything) serial and
-//! multithreaded, sparse SpMM, the fused CONCORD elementwise passes,
-//! the single-node solver at several thread counts, the distributed
-//! transpose, and PJRT-artifact vs native fused-trial latency.
+//! Hot-path microbenchmarks: the blocked packed
+//! GEMM against the retained naive reference (the tentpole win, in
+//! GFLOP/s), kernel thread scaling, blocked SpMM vs the row-at-a-time
+//! reference, the fused CONCORD elementwise passes, the single-node
+//! solver at several thread counts, the distributed transpose, and
+//! PJRT-artifact vs native fused-trial latency.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
+//!
+//! `cargo bench --bench perf_hotpath -- --smoke` runs a fast subset at
+//! small sizes with **bitwise blocked-vs-reference asserts** — the CI
+//! step that makes kernel regressions fail fast. Perf numbers from
+//! smoke mode are meaningless; only the asserts matter there.
 
 use hpconcord::concord::{fit_single_node, ops, ConcordConfig, Variant};
-use hpconcord::linalg::{Csr, Mat};
+use hpconcord::linalg::{Csr, Mat, TileConfig};
 use hpconcord::prelude::*;
 use hpconcord::runtime::{native, Engine};
 use hpconcord::util::{time_fn, Table};
@@ -16,22 +22,49 @@ fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
     Mat::from_fn(r, c, |_, _| rng.normal())
 }
 
+fn bitwise_eq(a: &Mat, b: &Mat) -> bool {
+    a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn gflops(flops: f64, seconds: f64) -> String {
+    format!("{:.2}", flops / seconds / 1e9)
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut rng = Rng::new(0xBE);
     let host_threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+    let reps = if smoke { 2 } else { 5 };
 
-    // --- Dense GEMM ----------------------------------------------------
-    println!("=== L3 local GEMM (the paper's MKL substitute) ===");
-    let mut table = Table::new(&["size", "median (ms)", "GFLOP/s"]);
-    for p in [128usize, 256, 512] {
+    // --- Blocked packed GEMM vs the naive reference ---------------------
+    println!("=== local GEMM: blocked packed kernel vs naive reference ===");
+    let mut table = Table::new(&[
+        "size",
+        "naive (ms)",
+        "naive GF/s",
+        "blocked (ms)",
+        "blocked GF/s",
+        "speedup",
+    ]);
+    let gemm_sizes: &[usize] = if smoke { &[64, 97] } else { &[128, 256, 512, 1024] };
+    for &p in gemm_sizes {
         let a = random_mat(&mut rng, p, p);
         let b = random_mat(&mut rng, p, p);
-        let (stats, _) = time_fn(1, 5, || a.matmul(&b));
-        let gflops = 2.0 * (p as f64).powi(3) / stats.median / 1e9;
+        let flops = 2.0 * (p as f64).powi(3);
+        // The naive kernel is slow by design; don't over-sample it.
+        let naive_reps = if p >= 1024 { 2 } else { reps };
+        let (naive_stats, naive_c) = time_fn(0, naive_reps, || a.matmul_naive(&b));
+        let (blk_stats, blk_c) = time_fn(1, reps, || a.matmul(&b));
+        // The determinism contract, asserted right here in the bench:
+        // the blocked kernel must reproduce the naive bits exactly.
+        assert!(bitwise_eq(&naive_c, &blk_c), "blocked GEMM != naive at p={p}");
         table.row(vec![
             format!("{p}³"),
-            format!("{:.2}", stats.median * 1e3),
-            format!("{gflops:.2}"),
+            format!("{:.2}", naive_stats.median * 1e3),
+            gflops(flops, naive_stats.median),
+            format!("{:.2}", blk_stats.median * 1e3),
+            gflops(flops, blk_stats.median),
+            format!("{:.2}×", naive_stats.median / blk_stats.median),
         ]);
     }
     print!("{table}");
@@ -39,31 +72,40 @@ fn main() {
     // --- Dense GEMM, node-local threads (the paper's per-node t) --------
     println!("\n=== GEMM, intra-node threads (host has {host_threads}) ===");
     let mut table = Table::new(&["size", "t", "median (ms)", "GFLOP/s", "vs t=1"]);
-    for p in [512usize, 1024] {
+    let mt_sizes: &[usize] = if smoke { &[96] } else { &[512, 1024] };
+    for &p in mt_sizes {
         let a = random_mat(&mut rng, p, p);
         let b = random_mat(&mut rng, p, p);
         let mut t1_median = 0.0;
         for threads in [1usize, 2, 4] {
-            let (stats, _) = time_fn(1, 5, || a.matmul_mt(&b, threads));
+            let (stats, _) = time_fn(1, reps, || a.matmul_mt(&b, threads));
             if threads == 1 {
                 t1_median = stats.median;
             }
-            let gflops = 2.0 * (p as f64).powi(3) / stats.median / 1e9;
             table.row(vec![
                 format!("{p}³"),
                 threads.to_string(),
                 format!("{:.2}", stats.median * 1e3),
-                format!("{gflops:.2}"),
+                gflops(2.0 * (p as f64).powi(3), stats.median),
                 format!("{:.2}×", t1_median / stats.median),
             ]);
         }
     }
     print!("{table}");
 
-    // --- Sparse-dense SpMM (Cov's W = Ω·S) ------------------------------
-    println!("\n=== sparse·dense SpMM (γ_sparse path) ===");
-    let mut table = Table::new(&["p", "density", "median (ms)", "GFLOP/s (nnz)"]);
-    for (p, density) in [(512usize, 0.02), (512, 0.1), (1024, 0.02)] {
+    // --- Sparse-dense SpMM (Cov's W = Ω·S): blocked vs reference --------
+    println!("\n=== sparse·dense SpMM (γ_sparse path): column-blocked vs reference ===");
+    let mut table = Table::new(&[
+        "p",
+        "density",
+        "ref (ms)",
+        "blocked (ms)",
+        "blocked GF/s",
+        "speedup",
+    ]);
+    let spmm_cases: &[(usize, f64)] =
+        if smoke { &[(96, 0.1)] } else { &[(512, 0.02), (512, 0.1), (1024, 0.02), (2048, 0.02)] };
+    for &(p, density) in spmm_cases {
         let dense = Mat::from_fn(p, p, |i, j| {
             if i == j {
                 2.0
@@ -75,22 +117,27 @@ fn main() {
         });
         let omega = Csr::from_dense(&dense, 0.0);
         let s = random_mat(&mut rng, p, p);
-        let (stats, _) = time_fn(1, 5, || omega.spmm(&s));
-        let gflops = omega.spmm_flops(p) as f64 / stats.median / 1e9;
+        let flops = omega.spmm_flops(p) as f64;
+        let (ref_stats, ref_c) = time_fn(0, reps, || omega.spmm_reference(&s));
+        let (blk_stats, blk_c) = time_fn(1, reps, || omega.spmm(&s));
+        assert!(bitwise_eq(&ref_c, &blk_c), "blocked SpMM != reference at p={p}");
         table.row(vec![
             p.to_string(),
             format!("{density}"),
-            format!("{:.2}", stats.median * 1e3),
-            format!("{gflops:.2}"),
+            format!("{:.2}", ref_stats.median * 1e3),
+            format!("{:.2}", blk_stats.median * 1e3),
+            gflops(flops, blk_stats.median),
+            format!("{:.2}×", ref_stats.median / blk_stats.median),
         ]);
     }
     print!("{table}");
 
     // --- SpMM, node-local threads --------------------------------------
-    println!("\n=== SpMM, intra-node threads (p=1024, density 0.05) ===");
-    let mut table = Table::new(&["t", "median (ms)", "vs t=1"]);
+    let spmm_mt_p = if smoke { 96 } else { 1024 };
+    println!("\n=== SpMM, intra-node threads (p={spmm_mt_p}, density 0.05) ===");
+    let mut table = Table::new(&["t", "median (ms)", "GFLOP/s", "vs t=1"]);
     {
-        let p = 1024usize;
+        let p = spmm_mt_p;
         let dense = Mat::from_fn(p, p, |i, j| {
             if i == j {
                 2.0
@@ -102,24 +149,55 @@ fn main() {
         });
         let omega = Csr::from_dense(&dense, 0.0);
         let s = random_mat(&mut rng, p, p);
+        let flops = omega.spmm_flops(p) as f64;
         let mut t1_median = 0.0;
         for threads in [1usize, 2, 4] {
-            let (stats, _) = time_fn(1, 5, || omega.spmm_mt(&s, threads));
+            let (stats, _) = time_fn(1, reps, || omega.spmm_mt(&s, threads));
             if threads == 1 {
                 t1_median = stats.median;
             }
             table.row(vec![
                 threads.to_string(),
                 format!("{:.2}", stats.median * 1e3),
+                gflops(flops, stats.median),
                 format!("{:.2}×", t1_median / stats.median),
             ]);
         }
     }
     print!("{table}");
 
+    // --- Tile-shape sweep (blocked kernel only) -------------------------
+    if !smoke {
+        println!("\n=== GEMM tile-shape sweep (p=768, bit-identical results by contract) ===");
+        let mut table = Table::new(&["tile mc,kc,nc", "median (ms)", "GFLOP/s"]);
+        let p = 768usize;
+        let a = random_mat(&mut rng, p, p);
+        let b = random_mat(&mut rng, p, p);
+        let flops = 2.0 * (p as f64).powi(3);
+        for tile in [
+            TileConfig::new(8, 8, 8),
+            TileConfig::new(32, 64, 128),
+            TileConfig::DEFAULT,
+            TileConfig::new(4096, 4096, 4096),
+        ] {
+            let (stats, _) = time_fn(1, reps, || {
+                let mut c = Mat::zeros(p, p);
+                a.matmul_into_with(&b, &mut c, &tile);
+                c
+            });
+            table.row(vec![
+                format!("{},{},{}", tile.mc, tile.kc, tile.nc),
+                format!("{:.2}", stats.median * 1e3),
+                gflops(flops, stats.median),
+            ]);
+        }
+        print!("{table}");
+    }
+
     // --- Fused elementwise passes ---------------------------------------
-    println!("\n=== fused CONCORD passes (per-element ns) ===");
-    let p = 512;
+    let fused_p = if smoke { 128 } else { 512 };
+    println!("\n=== fused CONCORD passes (p={fused_p}) ===");
+    let p = fused_p;
     let omega = {
         let mut m = random_mat(&mut rng, p, p);
         m.symmetrize();
@@ -131,33 +209,39 @@ fn main() {
     let w = random_mat(&mut rng, p, p);
     let wt = w.transpose();
     let g = ops::gradient_block(&omega, &w, &wt, 0, 0.1);
-    let mut table = Table::new(&["pass", "median (ms)", "ns/element"]);
+    let mut table = Table::new(&["pass", "median (ms)", "ns/element", "≈GFLOP/s"]);
     let elems = (p * p) as f64;
-    let mut bench = |name: &str, f: &mut dyn FnMut()| {
-        let (stats, _) = time_fn(1, 5, || f());
+    let mut bench = |name: &str, flops_per_elem: f64, f: &mut dyn FnMut()| {
+        let (stats, _) = time_fn(1, reps, || f());
         table.row(vec![
             name.to_string(),
             format!("{:.3}", stats.median * 1e3),
             format!("{:.2}", stats.median / elems * 1e9),
+            gflops(flops_per_elem * elems, stats.median),
         ]);
     };
-    bench("gradient", &mut || {
+    bench("gradient", 4.0, &mut || {
         std::hint::black_box(ops::gradient_block(&omega, &w, &wt, 0, 0.1));
     });
-    bench("prox", &mut || {
+    bench("prox", 3.0, &mut || {
         std::hint::black_box(ops::prox_block(&omega, &g, 0, 0.5, 0.3));
     });
     let mut out = Mat::zeros(p, p);
-    bench("prox (in-place)", &mut || {
+    bench("prox (in-place)", 3.0, &mut || {
         ops::prox_block_into(&omega, &g, 0, 0.5, 0.3, &mut out);
     });
-    bench("objective", &mut || {
+    bench("objective", 4.0, &mut || {
         std::hint::black_box(ops::objective_parts_block(&omega, &w, 0));
     });
-    bench("linesearch", &mut || {
+    bench("linesearch", 4.0, &mut || {
         std::hint::black_box(ops::linesearch_parts_block(&omega, &w, &g));
     });
     print!("{table}");
+
+    if smoke {
+        println!("\nperf_hotpath --smoke OK (blocked GEMM/SpMM bitwise == reference)");
+        return;
+    }
 
     // --- Whole fused trial: native vs PJRT artifact ----------------------
     println!("\n=== fused line-search trial: native vs PJRT (p=256) ===");

@@ -101,6 +101,9 @@ COMMANDS:
            --lambda1 F --lambda2 F [--tol F] [--max-iter N]
            --mode single|dist  [--ranks P --cx C --comega C]
            [--threads N|auto]  (node-local worker threads, the paper's t)
+           [--tile mc,kc,nc]  (cache-blocking shape of the packed
+             GEMM/SpMM kernels; results are bit-identical at any tile —
+             only throughput moves. Default 128,256,512)
            [--variant cov|obs|auto]  [--config FILE]  [--artifacts DIR]
            [--screen]  (exact-thresholding screening: split into the
              connected components of {|S_ij| > λ1}; in dist mode the
@@ -113,7 +116,8 @@ COMMANDS:
              reused across the whole λ grid)
   cost     Analytic cost model (Lemmas 3.1–3.5) over replication grid
            --p N --n N --s F --t F --d F --procs P [--threads N]
-           [--variant cov|obs]
+           [--variant cov|obs]  [--tile mc,kc,nc]  (prices the dense
+             flops with the tile's cache-reuse term)
   fmri     Synthetic-cortex parcellation pipeline (paper §5, scaled)
            [--p-hemi N] [--parcels K] [--samples N] [--seed S]
   engine   List and smoke-run the AOT artifacts through PJRT

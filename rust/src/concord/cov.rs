@@ -210,9 +210,8 @@ mod tests {
             lambda2: 0.1,
             tol: 1e-6,
             max_iter: 200,
-            max_linesearch: 40,
             variant: Variant::Cov,
-            threads: 1,
+            ..Default::default()
         }
     }
 

@@ -59,6 +59,25 @@ pub enum Variant {
 }
 
 /// Solver configuration (tuning parameters of problem (1) + controls).
+///
+/// Every field has a sensible default, so configs are usually built by
+/// struct update. Changing `threads` or `tile` never changes the
+/// estimate — only wall-clock (the kernel layer's determinism
+/// contract; see `ARCHITECTURE.md`):
+///
+/// ```
+/// use hpconcord::concord::{fit_single_node, ConcordConfig};
+/// use hpconcord::linalg::TileConfig;
+/// use hpconcord::prelude::*;
+///
+/// let mut rng = Rng::new(7);
+/// let problem = gen::chain_problem(24, 80, &mut rng);
+/// let base = ConcordConfig { lambda1: 0.25, max_iter: 50, ..Default::default() };
+/// let fast = ConcordConfig { threads: 4, tile: TileConfig::new(32, 64, 64), ..base };
+/// let a = fit_single_node(&problem.x, &base).unwrap();
+/// let b = fit_single_node(&problem.x, &fast).unwrap();
+/// assert_eq!(a.omega.max_abs_diff(&b.omega), 0.0); // bit-identical
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct ConcordConfig {
     /// ℓ₁ penalty λ₁ on the off-diagonal entries.
@@ -79,6 +98,11 @@ pub struct ConcordConfig {
     /// value — threading only changes wall-clock, never the estimate or
     /// the metered communication (see `rust/tests/parallel_determinism.rs`).
     pub threads: usize,
+    /// Cache-blocking shape of the packed GEMM/SpMM kernel layer
+    /// ([`crate::linalg::tile`]). Installed process-wide when a fit
+    /// starts; like `threads`, it moves wall-clock only — results are
+    /// bit-identical at every tile shape. CLI: `--tile mc,kc,nc`.
+    pub tile: crate::linalg::TileConfig,
 }
 
 impl Default for ConcordConfig {
@@ -91,6 +115,7 @@ impl Default for ConcordConfig {
             max_linesearch: 40,
             variant: Variant::Auto,
             threads: 1,
+            tile: crate::linalg::TileConfig::DEFAULT,
         }
     }
 }
@@ -193,6 +218,21 @@ fn resolve_variant(x: &Mat, cfg: &ConcordConfig) -> Variant {
 /// is shared read-only with the ranks, which slice out their own parts —
 /// standing in for the paper's pre-distributed data. Requires
 /// c_x·c_omega ≤ P (powers of two) and p divisible by the team counts.
+///
+/// Returns the assembled estimate plus the fabric's metered α-β-γ
+/// communication bill:
+///
+/// ```
+/// use hpconcord::concord::{fit_distributed, ConcordConfig, Variant};
+/// use hpconcord::prelude::*;
+///
+/// let mut rng = Rng::new(3);
+/// let problem = gen::chain_problem(16, 60, &mut rng);
+/// let cfg = ConcordConfig { lambda1: 0.3, variant: Variant::Cov, ..Default::default() };
+/// let out = fit_distributed(&problem.x, &cfg, 4, 2, 2, MachineParams::edison_like());
+/// assert_eq!(out.fit.omega.shape(), (16, 16));
+/// assert!(out.cost.max_per_rank.messages > 0); // Lemma 3.3 counts were metered
+/// ```
 pub fn fit_distributed(
     x: &Mat,
     cfg: &ConcordConfig,
@@ -216,6 +256,7 @@ pub fn run_distributed(
     c_omega: usize,
     machine: MachineParams,
 ) -> DistRun {
+    crate::linalg::tile::install(cfg.tile);
     let variant = resolve_variant(x, cfg);
     let x = Arc::new(x.clone());
     let cfg = *cfg;

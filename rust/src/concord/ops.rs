@@ -19,6 +19,11 @@ use crate::util::pool::{chunk_ranges, par_map, par_rows_mut};
 /// line-search decisions — and therefore whole fits — be byte-for-byte
 /// reproducible as `threads` varies (see the determinism suite in
 /// `rust/tests/parallel_determinism.rs`).
+///
+/// This is the scalar-reduction half of the kernel layer's determinism
+/// contract; the matrix half (per-element ascending-k accumulation in
+/// the blocked GEMM/SpMM, invariant to [`crate::linalg::tile`] shapes)
+/// is stated in `ARCHITECTURE.md` alongside it.
 pub const REDUCE_BLOCK_ROWS: usize = 64;
 
 /// Per-block partials for a `rows`×`row_width` slab, computed on up to

@@ -33,9 +33,9 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::cost::schedule::{plan_component, FabricPlan};
+use crate::cost::schedule::{plan_component, runnable_on_fabric, FabricPlan};
 use crate::cost::ProblemShape;
 use crate::dist::Layout1D;
 use crate::linalg::Mat;
@@ -210,6 +210,23 @@ pub fn fit_screened_distributed(
     let p = x.cols();
     let n = x.rows();
     assert!(opts.total_ranks >= 1, "need at least one rank");
+    // Install the blocking shape before any planning: the scheduler's
+    // Lemma 3.5 pricing reads the installed tile's cache-reuse term, so
+    // plans must see this fit's tile — not whatever a previous fit left
+    // behind (and every component is then planned under the same price).
+    crate::linalg::tile::install(cfg.tile);
+    // A pinned fabric must satisfy the same runnability constraints the
+    // scheduler enforces; catch it here as a clean error instead of a
+    // RepGrid panic inside a spawned rank thread.
+    if let Some((ranks, c_x, c_omega)) = opts.fixed {
+        if !runnable_on_fabric(ranks, c_x, c_omega, cfg.variant) {
+            bail!(
+                "pinned fabric P={ranks} c_X={c_x} c_Ω={c_omega} is not runnable \
+                 for {:?} (power-of-two replication with c_X·c_Ω ≤ P required)",
+                cfg.variant
+            );
+        }
+    }
     let threads = cfg.threads.max(1);
 
     let screen_ranks = opts.total_ranks.min(p.max(1));

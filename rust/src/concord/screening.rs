@@ -320,6 +320,9 @@ impl ScreenAccum {
 /// component independently with the single-node solver, and reassemble
 /// the block-diagonal estimate.
 pub fn fit_with_screening(x: &Mat, cfg: &ConcordConfig) -> Result<ScreenedFit> {
+    // Blocking shape for the gram pass (throughput only; the
+    // per-component fits re-install the same value).
+    crate::linalg::tile::install(cfg.tile);
     let s = native::gram_mt(x, cfg.threads.max(1));
     let comps = gram_components(&s, cfg.lambda1);
     fit_with_screening_on(x, &s, &comps, cfg)

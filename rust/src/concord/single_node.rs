@@ -15,6 +15,24 @@ use crate::runtime::{native, Engine};
 use super::{ConcordConfig, ConcordFit, SolveStats};
 
 /// Fit CONCORD/PseudoNet on one node with the native kernels.
+///
+/// `x` is the n×p observation matrix; the returned
+/// [`ConcordFit`](super::ConcordFit) carries the symmetric, exactly
+/// sparse estimate Ω̂ plus the solver statistics the cost model needs
+/// (s, t̄, d̄):
+///
+/// ```
+/// use hpconcord::concord::{fit_single_node, ConcordConfig};
+/// use hpconcord::prelude::*;
+///
+/// let mut rng = Rng::new(42);
+/// let problem = gen::chain_problem(32, 120, &mut rng);
+/// let cfg = ConcordConfig { lambda1: 0.3, ..Default::default() };
+/// let fit = fit_single_node(&problem.x, &cfg).unwrap();
+/// assert_eq!(fit.omega.shape(), (32, 32));
+/// assert!(fit.omega.nnz() < 32 * 32); // ℓ₁ made it exactly sparse
+/// assert!(fit.iterations >= 1 && fit.mean_row_nnz > 0.0);
+/// ```
 pub fn fit_single_node(x: &Mat, cfg: &ConcordConfig) -> Result<ConcordFit> {
     fit_impl(x, cfg, None)
 }
@@ -30,6 +48,7 @@ pub fn fit_single_node_with_engine(
 }
 
 fn fit_impl(x: &Mat, cfg: &ConcordConfig, mut engine: Option<&mut Engine>) -> Result<ConcordFit> {
+    crate::linalg::tile::install(cfg.tile);
     let p = x.cols();
     let use_engine = engine.as_ref().map(|e| e.has_trial(p)).unwrap_or(false);
     let threads = cfg.threads.max(1);

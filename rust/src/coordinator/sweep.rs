@@ -147,12 +147,29 @@ pub struct ScreenedSweepOutcome {
 /// [`fit_with_screening_on`], sharing the precomputed structure; the
 /// λ₂ axis reuses its λ₁'s decomposition for free. Results are
 /// bit-identical to calling `fit_with_screening` per grid point.
+///
+/// ```
+/// use hpconcord::concord::{ConcordConfig, Variant};
+/// use hpconcord::coordinator::{run_sweep_screened, GridSpec};
+/// use hpconcord::prelude::*;
+///
+/// let mut rng = Rng::new(9);
+/// let problem = gen::chain_problem(16, 60, &mut rng);
+/// let grid = GridSpec { lambda1: vec![0.3, 0.5], lambda2: vec![0.0] };
+/// let base = ConcordConfig { max_iter: 60, variant: Variant::Cov, ..Default::default() };
+/// let out = run_sweep_screened(&problem.x, &grid, &base, 2);
+/// assert_eq!(out.results.len(), 2); // one fit per (λ₁, λ₂) grid point
+/// assert_eq!(out.components_per_l1.len(), 2); // one decomposition per λ₁
+/// ```
 pub fn run_sweep_screened(
     x: &Mat,
     grid: &GridSpec,
     base: &ConcordConfig,
     workers: usize,
 ) -> ScreenedSweepOutcome {
+    // Blocking shape for the shared gram pass (throughput only; the
+    // per-job fits re-install the same value).
+    crate::linalg::tile::install(base.tile);
     let s = Arc::new(native::gram_mt(x, base.threads.max(1)));
     let comps: Arc<Vec<Components>> = Arc::new(nested_components(&s, &grid.lambda1));
     let components_per_l1 = comps.iter().map(|c| c.count).collect();

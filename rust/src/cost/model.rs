@@ -1,6 +1,19 @@
 //! Lemmas 3.1–3.5: flop, latency, bandwidth, memory and total-time
 //! closed forms for the Cov and Obs variants.
+//!
+//! Since the kernel layer went cache-blocked, the Lemma 3.5 pricing
+//! carries a **cache-reuse term**: dense flops cost
+//! `γ_dense + w(tile)·β_mem` seconds each, where `w(tile)` is the
+//! blocked kernel's modeled slow-memory words per flop
+//! ([`TileConfig::gemm_words_per_flop`]) and β_mem the node-local
+//! per-word cost ([`MachineParams::beta_mem`]). At the default tile the
+//! term is ~2% of γ_dense (the packed kernel runs near peak); pricing
+//! the naive kernel's ½ word/flop ([`TileConfig::NAIVE_WORDS_PER_FLOP`])
+//! triples the effective γ — which is why `cost::schedule` and the
+//! optimizer consistently see the blocked kernel's machine, not the
+//! naive one, when they trade flops against communication.
 
+use crate::linalg::tile::{self, TileConfig};
 use crate::simnet::MachineParams;
 
 /// Problem characteristics entering the cost model (paper §3).
@@ -68,10 +81,49 @@ impl CostBreakdown {
     /// is "threaded MKL on t cores" (§4 uses t = 24), so the flop terms
     /// divide by P·t while the α/β communication terms are untouched —
     /// threading moves the Lemma-predicted Cov/Obs and replication
-    /// crossovers exactly the way adding cores did on Edison.
+    /// crossovers exactly the way adding cores did on Edison. Dense
+    /// flops are priced at the process-wide installed tile shape
+    /// ([`tile::current`]); see [`CostBreakdown::time_with_tile`].
     pub fn time_with_threads(&self, m: &MachineParams, p_procs: usize, threads: usize) -> f64 {
+        self.time_with_tile(m, p_procs, threads, &tile::current())
+    }
+
+    /// [`CostBreakdown::time_with_threads`] at an explicit tile shape —
+    /// Lemma 3.5 plus the cache-reuse term:
+    ///
+    /// ```text
+    /// T = F_dense·(γ_dense + w(tile)·β_mem)/(P·t)
+    ///   + F_sparse·γ_sparse/(P·t) + L·α + W·β
+    /// ```
+    ///
+    /// The whole per-flop cost (reuse term included) divides by P·t:
+    /// intra-node threads share the node's memory streams in this model
+    /// just as they share its FPUs. `β_mem = 0` recovers the plain
+    /// Lemma 3.5 form exactly.
+    pub fn time_with_tile(
+        &self,
+        m: &MachineParams,
+        p_procs: usize,
+        threads: usize,
+        tile: &TileConfig,
+    ) -> f64 {
         let div = (p_procs * threads.max(1)) as f64;
-        self.flops_dense / div * m.gamma_dense
+        let gamma_eff = m.gamma_dense + tile.gemm_words_per_flop() * m.beta_mem;
+        self.flops_dense / div * gamma_eff
+            + self.flops_sparse / div * m.gamma_sparse
+            + self.messages * m.alpha
+            + self.words * m.beta
+    }
+
+    /// What the same cell would cost if the local GEMM were the naive
+    /// unblocked kernel (½ word of memory traffic per flop instead of
+    /// `w(tile)`). The blocked-vs-naive pricing gap this opens against
+    /// [`CostBreakdown::time_with_tile`] is the modeled single-node win
+    /// the `perf_hotpath` bench measures for real.
+    pub fn time_naive_kernel(&self, m: &MachineParams, p_procs: usize, threads: usize) -> f64 {
+        let div = (p_procs * threads.max(1)) as f64;
+        let gamma_eff = m.gamma_dense + TileConfig::NAIVE_WORDS_PER_FLOP * m.beta_mem;
+        self.flops_dense / div * gamma_eff
             + self.flops_sparse / div * m.gamma_sparse
             + self.messages * m.alpha
             + self.words * m.beta
@@ -150,6 +202,13 @@ mod tests {
         ReplicationChoice { p_procs: p, c_x: cx, c_omega: co }
     }
 
+    /// Edison with β_mem zeroed: exact-relation tests below must not
+    /// depend on the process-global tile shape (other tests install
+    /// tiles concurrently), and β_mem = 0 makes every tile price alike.
+    fn machine_no_mem() -> MachineParams {
+        MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() }
+    }
+
     #[test]
     fn lemma31_exact_flop_forms() {
         let s = shape();
@@ -214,10 +273,37 @@ mod tests {
     fn time_is_monotone_in_machine_params() {
         let s = shape();
         let c = cov_cost(&s, &rep(16, 2, 2));
-        let m1 = MachineParams::edison_like();
+        let m1 = machine_no_mem();
         let mut m2 = m1;
         m2.alpha *= 10.0;
         assert!(c.time(&m2, 16) > c.time(&m1, 16));
+    }
+
+    #[test]
+    fn cache_reuse_term_prices_blocked_below_naive() {
+        let s = shape();
+        let c = cov_cost(&s, &rep(16, 2, 2));
+        let m = MachineParams::edison_like();
+        let tile = TileConfig::DEFAULT;
+        let blocked = c.time_with_tile(&m, 16, 1, &tile);
+        let naive = c.time_naive_kernel(&m, 16, 1);
+        assert!(blocked < naive, "blocked {blocked} !< naive {naive}");
+        // The gap is exactly the traffic difference on the dense flops.
+        let want_gap = c.flops_dense / 16.0
+            * (TileConfig::NAIVE_WORDS_PER_FLOP - tile.gemm_words_per_flop())
+            * m.beta_mem;
+        assert!((naive - blocked - want_gap).abs() / want_gap < 1e-12);
+        // β_mem = 0 recovers the plain Lemma 3.5 pricing: every tile
+        // shape (and the naive kernel) then costs the same.
+        let m0 = machine_no_mem();
+        let t0 = c.time_with_tile(&m0, 16, 1, &TileConfig::new(1, 1, 1));
+        assert_eq!(t0, c.time_with_tile(&m0, 16, 1, &tile));
+        assert_eq!(t0, c.time_naive_kernel(&m0, 16, 1));
+        // Smaller tiles → less reuse → never cheaper.
+        assert!(
+            c.time_with_tile(&m, 16, 1, &TileConfig::new(8, 8, 8))
+                >= c.time_with_tile(&m, 16, 1, &tile)
+        );
     }
 
     #[test]
@@ -232,12 +318,17 @@ mod tests {
         let r = rep(64, 2, 2);
         let m = MachineParams::edison_like();
         let c = cov_cost(&s, &r);
-        let t1 = c.time_with_threads(&m, 64, 1);
-        let t24 = c.time_with_threads(&m, 64, 24);
+        // Explicit tile: the relation below needs both prices computed
+        // at one fixed shape, immune to concurrent tile installs.
+        let tile = TileConfig::DEFAULT;
+        let t1 = c.time_with_tile(&m, 64, 1, &tile);
+        let t24 = c.time_with_tile(&m, 64, 24, &tile);
         let comm = c.comm_time(&m);
-        // Exactly the flop part shrinks by 24×; communication is fixed.
+        // Exactly the flop part (cache-reuse term included) shrinks by
+        // 24×; communication is fixed.
         assert!((t1 - comm - 24.0 * (t24 - comm)).abs() / t1 < 1e-12);
-        assert_eq!(c.time(&m, 64), t1);
+        let m0 = machine_no_mem();
+        assert_eq!(c.time(&m0, 64), c.time_with_tile(&m0, 64, 1, &tile));
     }
 
     #[test]
@@ -247,7 +338,7 @@ mod tests {
         // large t. Intra-node threading shrinks only the flop terms, so
         // the Cov-vs-Obs *priced* winner can flip with t — the Lemma
         // 3.5 behaviour the paper's Fig. 2 discussion describes.
-        let m = MachineParams::edison_like();
+        let m = machine_no_mem();
         let s = ProblemShape { p: 10_000.0, n: 2_500.0, s: 17.0, t: 10.0, d: 60.0 };
         let r = rep(1, 1, 1);
         let (c, o) = (cov_cost(&s, &r), obs_cost(&s, &r));

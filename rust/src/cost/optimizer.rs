@@ -95,6 +95,13 @@ pub fn optimize_replication_threaded(
 mod tests {
     use super::*;
 
+    /// Edison with β_mem zeroed: these tests compare prices across
+    /// separate calls, so they must not depend on the process-global
+    /// tile shape (other tests install tiles concurrently).
+    fn machine() -> MachineParams {
+        MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() }
+    }
+
     fn shape() -> ProblemShape {
         // Fig. 3 regime: chain graph, p = 40k, n = 100.
         ProblemShape { p: 40_000.0, n: 100.0, s: 37.0, t: 10.0, d: 3.0 }
@@ -102,7 +109,7 @@ mod tests {
 
     #[test]
     fn optimizer_beats_no_replication() {
-        let m = MachineParams::edison_like();
+        let m = machine();
         let s = shape();
         let p = 512;
         let best = optimize_replication(&s, p, Variant::Obs, &m, f64::INFINITY).unwrap();
@@ -117,7 +124,7 @@ mod tests {
 
     #[test]
     fn memory_budget_constrains_choice() {
-        let m = MachineParams::edison_like();
+        let m = machine();
         let s = shape();
         let unconstrained =
             optimize_replication(&s, 256, Variant::Obs, &m, f64::INFINITY).unwrap();
@@ -132,7 +139,7 @@ mod tests {
 
     #[test]
     fn auto_variant_picks_cov_when_n_large_and_sparse() {
-        let m = MachineParams::edison_like();
+        let m = machine();
         // n = p/4 regime (Fig. 4c) with sparse iterates: Cov should win
         // even after the γ_sparse ≫ γ_dense penalty.
         let s = ProblemShape { p: 10_000.0, n: 2_500.0, s: 17.0, t: 10.0, d: 10.0 };
@@ -146,7 +153,7 @@ mod tests {
         // *later* than Lemma 3.1 predicts because γ_sparse ≫ γ_dense.
         // Pick a shape where the flop rule says Cov but the priced model
         // says Obs: that is exactly the delayed-crossover region.
-        let m = MachineParams::edison_like();
+        let m = machine();
         let s = ProblemShape { p: 10_000.0, n: 2_500.0, s: 17.0, t: 10.0, d: 60.0 };
         assert!(super::super::model::cov_is_cheaper_flops(&s));
         let rep = ReplicationChoice { p_procs: 1, c_x: 1, c_omega: 1 };
@@ -157,13 +164,13 @@ mod tests {
 
     #[test]
     fn infeasible_budget_returns_none() {
-        let m = MachineParams::edison_like();
+        let m = machine();
         assert!(optimize_replication(&shape(), 16, Variant::Obs, &m, 1.0).is_none());
     }
 
     #[test]
     fn threaded_optimum_is_no_slower_and_flop_share_shrinks() {
-        let m = MachineParams::edison_like();
+        let m = machine();
         let s = shape();
         let t1 = optimize_replication_threaded(&s, 256, Variant::Obs, &m, f64::INFINITY, 1)
             .unwrap();

@@ -110,11 +110,14 @@ pub fn plan_component(
 
 /// Price one cell. At P = 1 nothing is sent — the closed forms'
 /// residual L/W terms are rotation bookkeeping that degenerates to
-/// self-sends — so only the flop terms count.
+/// self-sends — so only the flop terms count (priced at the same
+/// installed-tile effective γ_dense as the fabric cells, so the
+/// blocked-kernel cache-reuse term never biases the P = 1 decision).
 fn price(cost: &CostBreakdown, p_ranks: usize, threads: usize, machine: &MachineParams) -> f64 {
     if p_ranks == 1 {
-        let flop_time = cost.flops_dense * machine.gamma_dense
-            + cost.flops_sparse * machine.gamma_sparse;
+        let gamma_eff = machine.gamma_dense
+            + crate::linalg::tile::current().gemm_words_per_flop() * machine.beta_mem;
+        let flop_time = cost.flops_dense * gamma_eff + cost.flops_sparse * machine.gamma_sparse;
         flop_time / threads as f64
     } else {
         cost.time_with_threads(machine, p_ranks, threads)
@@ -125,8 +128,11 @@ fn price(cost: &CostBreakdown, p_ranks: usize, threads: usize, machine: &Machine
 mod tests {
     use super::*;
 
+    /// Edison with β_mem zeroed: plan comparisons across separate calls
+    /// must not depend on the process-global tile shape (other tests
+    /// install tiles concurrently).
     fn machine() -> MachineParams {
-        MachineParams::edison_like()
+        MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() }
     }
 
     /// A tiny component: any communication dwarfs its flops, so the

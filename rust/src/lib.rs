@@ -39,6 +39,21 @@
 //! pass across a whole λ-grid (`coordinator::sweep::run_sweep_screened`).
 //! CLI: `--screen` / `solver.screen = true`.
 //!
+//! ## The kernel layer: cache-blocked, packed, deterministic
+//!
+//! Every node-local multiply runs on the blocked kernel layer in
+//! [`linalg`]: a BLIS-style `mc × kc × nc` tiling ([`linalg::tile`])
+//! with packed A/B panels and a fixed `MR × NR` register microkernel
+//! for dense GEMM, and column-blocked packed-panel SpMM for the sparse
+//! `Ω·S` products. Blocking shapes come from compile-time defaults,
+//! `ConcordConfig::tile`, or the CLI's `--tile mc,kc,nc` — and are
+//! **throughput knobs only**: every kernel accumulates each output
+//! element in strictly ascending-k order, so the blocked product is
+//! bit-identical to the naive reference (`Mat::matmul_naive`,
+//! `Csr::spmm_reference`) at every tile shape. `ARCHITECTURE.md` states
+//! the layer's determinism rules; `rust/benches/perf_hotpath.rs` has
+//! the blocked-vs-naive GFLOP/s tables.
+//!
 //! ## Node-local parallelism (the paper's per-node `t`)
 //!
 //! The paper models each node as threaded MKL on 24 cores: every
@@ -46,7 +61,7 @@
 //! terms divide by `t`. This crate mirrors that with a deterministic
 //! scoped pool ([`util::pool`], no external deps): `Mat::matmul_mt` /
 //! `Mat::matmul_bt_mt` / `Csr::spmm_mt` and the fused CONCORD passes
-//! (`concord::ops::*_mt`) partition rows on aligned boundaries and run
+//! (`concord::ops::*_mt`) partition rows into contiguous chunks and run
 //! the unmodified serial inner loops, so results are **bit-for-bit
 //! identical at every thread count** — scalar reductions use a fixed
 //! 64-row block order ([`concord::ops::REDUCE_BLOCK_ROWS`]) for the
@@ -56,7 +71,9 @@
 //! BigQUIC baseline, while the metered message/word counts are
 //! provably untouched (`rust/tests/parallel_determinism.rs`,
 //! `rust/tests/lemma_counts.rs`). The cost model prices threading via
-//! `CostBreakdown::time_with_threads` (flops/(P·t)).
+//! `CostBreakdown::time_with_threads` (flops/(P·t)) and the kernel
+//! layer's cache reuse via `CostBreakdown::time_with_tile`
+//! (γ_dense + w(tile)·β_mem per dense flop).
 //!
 //! ## Quick start
 //!

@@ -1,14 +1,32 @@
-//! Row-major dense f64 matrices and a cache-blocked GEMM microkernel.
+//! Row-major dense f64 matrices and the cache-blocked, packed GEMM
+//! kernel layer.
 //!
-//! The microkernel ([`Mat::matmul`]) is the hot path of the whole stack:
-//! every local block multiply of the distributed 1.5D algorithm and every
-//! single-node CONCORD iteration lands here (unless routed to a PJRT
-//! artifact). It uses an i-k-j loop order (stream both B rows and C rows
-//! sequentially), k-blocking for L1/L2 residency, and an unrolled
-//! 4-accumulator inner loop that LLVM autovectorizes. Perf numbers and
-//! the optimization log live in EXPERIMENTS.md §Perf.
+//! The GEMM ([`Mat::matmul_into`]) is the hot path of the whole stack:
+//! every local block multiply of the distributed 1.5D algorithm and
+//! every single-node CONCORD iteration lands here (unless routed to a
+//! PJRT artifact). It is organised BLIS-style around the
+//! [`TileConfig`] blocking shape (see [`crate::linalg::tile`]): `nc`
+//! columns of B are packed into [`NR`]-wide slivers, `kc × nc` k-panels
+//! of that packed B are multiplied against `mc × kc` blocks of A packed
+//! into [`MR`]-row slabs, and a fixed `MR × NR` register microkernel
+//! does the flops with unit-stride loads from both packed operands.
+//!
+//! **Determinism rule** (the layer-wide contract pinned by
+//! `rust/tests/parallel_determinism.rs`): every output element
+//! accumulates in strictly ascending-k order, one `mul` + one `add` per
+//! k — never a fused or reassociated grouping. That makes the blocked
+//! product bit-for-bit identical to the naive triple loop
+//! ([`Mat::matmul_naive`], retained as the oracle and bench baseline)
+//! at every tile shape, and identical across any row partition — so
+//! the `_mt` drop-ins are bitwise equal to serial at every thread
+//! count for free. Tile shapes and threads move wall-clock only.
+//!
+//! Perf numbers live in `rust/benches/perf_hotpath.rs` (the
+//! blocked-vs-naive GFLOP/s and tile-sweep tables).
 
 use std::fmt;
+
+use super::tile::{self, MR, NR, TileConfig};
 
 /// Row-major dense matrix of f64.
 #[derive(Clone, PartialEq)]
@@ -140,10 +158,33 @@ impl Mat {
         t
     }
 
-    /// C = A · B via the blocked microkernel.
+    /// C = A · B via the blocked packed kernel at the installed
+    /// [`tile::current`] shape.
     pub fn matmul(&self, b: &Mat) -> Mat {
         let mut c = Mat::zeros(self.rows, b.cols);
         self.matmul_into(b, &mut c);
+        c
+    }
+
+    /// Reference triple-loop product (ascending k, one multiply-add per
+    /// step) — the kernel the blocked path must match **bit-for-bit**.
+    ///
+    /// Retained on the public surface as the determinism oracle of the
+    /// tile-edge property tests and the baseline of the
+    /// blocked-vs-naive bench table; never used on a hot path.
+    pub fn matmul_naive(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "inner dimension mismatch");
+        let (m, kk, n) = (self.rows, self.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..kk {
+                    s += self.data[i * kk + k] * b.data[k * n + j];
+                }
+                c.data[i * n + j] = s;
+            }
+        }
         c
     }
 
@@ -154,42 +195,50 @@ impl Mat {
         c
     }
 
-    /// C += A · B (C must be zeroed by the caller for a plain product).
-    ///
-    /// i-k-j order with k-blocking and a 4×k-unrolled update: each pass
-    /// over the contiguous C row folds in four B rows at once (4 fused
-    /// multiply-adds per C element per load/store pair instead of one),
-    /// unit-stride everywhere, autovectorizable (AVX2/FMA with the
-    /// repo's `-C target-cpu=native`). §Perf step L3-2.
+    /// C += A · B (C must be zeroed by the caller for a plain product)
+    /// at the installed [`tile::current`] shape.
     pub fn matmul_into(&self, b: &Mat, c: &mut Mat) {
+        self.matmul_into_with(b, c, &tile::current());
+    }
+
+    /// [`Mat::matmul_into`] at an explicit tile shape. The result is
+    /// bitwise invariant in `tile` (see the module docs); tests use
+    /// this to sweep tile shapes without touching the process-global.
+    pub fn matmul_into_with(&self, b: &Mat, c: &mut Mat, tile: &TileConfig) {
         assert_eq!(self.cols, b.rows, "inner dimension mismatch");
         assert_eq!(c.rows, self.rows);
         assert_eq!(c.cols, b.cols);
-        gemm_rows(&self.data, self.cols, &b.data, b.cols, &mut c.data);
+        gemm_rows(&self.data, self.cols, &b.data, b.cols, &mut c.data, tile);
     }
 
     /// [`Mat::matmul_into`] on `threads` node-local workers.
     ///
-    /// Rows are partitioned into contiguous chunks with boundaries
-    /// aligned to the kernel's 2-row pairing, so each chunk runs the
-    /// unmodified serial microkernel over the same row pairs in the same
-    /// k-block order — the result is **bit-for-bit identical** to the
-    /// serial product at every thread count (the parallel-equivalence
-    /// property tests pin this).
+    /// Rows are partitioned into contiguous chunks (boundaries aligned
+    /// to the microkernel height [`MR`] so only the final chunk runs
+    /// ragged slabs — a perf nicety, not a correctness need). Each
+    /// chunk runs the serial blocked kernel, whose per-element
+    /// ascending-k order is row-independent, so the result is
+    /// **bit-for-bit identical** to the serial product at every thread
+    /// count and tile shape (the determinism property tests pin this).
     pub fn matmul_into_mt(&self, b: &Mat, c: &mut Mat, threads: usize) {
+        self.matmul_into_mt_with(b, c, threads, &tile::current());
+    }
+
+    /// [`Mat::matmul_into_mt`] at an explicit tile shape.
+    pub fn matmul_into_mt_with(&self, b: &Mat, c: &mut Mat, threads: usize, tile: &TileConfig) {
         assert_eq!(self.cols, b.rows, "inner dimension mismatch");
         assert_eq!(c.rows, self.rows);
         assert_eq!(c.cols, b.cols);
         let (m, kk, n) = (self.rows, self.cols, b.cols);
         if threads <= 1 || m < 2 || m * kk * n < crate::util::pool::SPAWN_MIN_WORK {
-            gemm_rows(&self.data, kk, &b.data, n, &mut c.data);
+            gemm_rows(&self.data, kk, &b.data, n, &mut c.data, tile);
             return;
         }
-        let ranges = crate::util::pool::chunk_ranges(m, threads, 2);
+        let ranges = crate::util::pool::chunk_ranges(m, threads, MR);
         let a = &self.data;
         let bd = &b.data;
         crate::util::pool::par_rows_mut(&mut c.data, n, &ranges, |_i, s, e, crows| {
-            gemm_rows(&a[s * kk..e * kk], kk, bd, n, crows);
+            gemm_rows(&a[s * kk..e * kk], kk, bd, n, crows, tile);
         });
     }
 
@@ -198,23 +247,33 @@ impl Mat {
         self.matmul_bt_mt(b, 1)
     }
 
-    /// [`Mat::matmul_bt`] on `threads` node-local workers. Each output
-    /// row is one independent run of the serial dot kernel, so the
-    /// result is bit-identical at any thread count.
+    /// [`Mat::matmul_bt`] on `threads` node-local workers.
+    ///
+    /// Each output element is one independent run of the serial [`dot`]
+    /// kernel, whose fixed 4-accumulator grouping never varies — so the
+    /// result is bit-identical at any thread count and row tiling. Rows
+    /// are processed in [`TileConfig::mc`]-high bands with the B-row
+    /// loop outside the band (each streamed B row feeds a whole band of
+    /// dots instead of one), which is a pure loop-order/cache change.
     pub fn matmul_bt_mt(&self, b: &Mat, threads: usize) -> Mat {
         assert_eq!(self.cols, b.cols, "inner dimension mismatch (B is transposed)");
         let (m, kk, n) = (self.rows, self.cols, b.rows);
+        let mc = tile::current().mc.max(1);
         let mut c = Mat::zeros(m, n);
         let a = &self.data;
         let bd = &b.data;
         let body = |s: usize, e: usize, crows: &mut [f64]| {
-            for i in s..e {
-                let arow = &a[i * kk..(i + 1) * kk];
-                let crow = &mut crows[(i - s) * n..(i - s + 1) * n];
-                for (j, cj) in crow.iter_mut().enumerate() {
+            let mut ic = s;
+            while ic < e {
+                let ie = (ic + mc).min(e);
+                for j in 0..n {
                     let brow = &bd[j * kk..(j + 1) * kk];
-                    *cj = dot(arow, brow);
+                    for i in ic..ie {
+                        let arow = &a[i * kk..(i + 1) * kk];
+                        crows[(i - s) * n + j] = dot(arow, brow);
+                    }
                 }
+                ic = ie;
             }
         };
         if threads <= 1 || m < 2 || m * kk * n < crate::util::pool::SPAWN_MIN_WORK {
@@ -306,89 +365,180 @@ impl Mat {
     }
 }
 
-/// The GEMM microkernel over a contiguous row range: `c += a · b` where
-/// `a` holds `r` rows of length `kk` and `c` the matching `r` rows of
-/// length `n` (row-major, `b` is `kk × n`). This is the single code
-/// path behind both the serial and the multithreaded matmul — workers
-/// call it on disjoint even-aligned row chunks, which preserves the
-/// 2-row pairing and k-block order and therefore produces bit-identical
-/// results at every thread count.
-fn gemm_rows(a: &[f64], kk: usize, b: &[f64], n: usize, c: &mut [f64]) {
-    debug_assert_eq!(a.len() % kk.max(1), 0);
-    let m = if kk == 0 { c.len() / n.max(1) } else { a.len() / kk };
-    debug_assert_eq!(c.len(), m * n);
-    const KC: usize = 256; // k-panel kept hot in L1/L2
-    for k0 in (0..kk).step_by(KC) {
-        let k1 = (k0 + KC).min(kk);
-        // 2 C-rows per pass (§Perf step L3-3): each loaded B row
-        // feeds two accumulator rows, halving B bandwidth. (A 4-row
-        // variant measured *slower* — register pressure; §Perf L3-4.)
-        let mut i = 0;
-        while i + 2 <= m {
-            let (chead, ctail) = c.split_at_mut((i + 1) * n);
-            let c0 = &mut chead[i * n..];
-            let c1 = &mut ctail[..n];
-            let ar0 = &a[i * kk..(i + 1) * kk];
-            let ar1 = &a[(i + 1) * kk..(i + 2) * kk];
-            let mut k = k0;
-            while k + 4 <= k1 {
-                let (p0, p1, p2, p3) = (ar0[k], ar0[k + 1], ar0[k + 2], ar0[k + 3]);
-                let (q0, q1, q2, q3) = (ar1[k], ar1[k + 1], ar1[k + 2], ar1[k + 3]);
-                let b0 = &b[k * n..(k + 1) * n];
-                let b1 = &b[(k + 1) * n..(k + 2) * n];
-                let b2 = &b[(k + 2) * n..(k + 3) * n];
-                let b3 = &b[(k + 3) * n..(k + 4) * n];
-                for j in 0..n {
-                    let (v0, v1, v2, v3) = (b0[j], b1[j], b2[j], b3[j]);
-                    c0[j] += p0 * v0 + p1 * v1 + p2 * v2 + p3 * v3;
-                    c1[j] += q0 * v0 + q1 * v1 + q2 * v2 + q3 * v3;
-                }
-                k += 4;
-            }
-            for k in k..k1 {
-                let brow = &b[k * n..(k + 1) * n];
-                if ar0[k] != 0.0 {
-                    axpy(ar0[k], brow, c0);
-                }
-                if ar1[k] != 0.0 {
-                    axpy(ar1[k], brow, &mut c1[..n]);
-                }
-            }
-            i += 2;
+/// The blocked packed GEMM over a contiguous row range: `c += a · b`
+/// where `a` holds `r` rows of length `kk` and `c` the matching `r`
+/// rows of length `n` (row-major, `b` is `kk × n`). This is the single
+/// code path behind the serial and multithreaded matmuls — workers
+/// call it on disjoint row chunks.
+///
+/// Loop nest (BLIS order): `jc` over `nc`-wide B column panels → `pc`
+/// over `kc`-deep k-panels (B panel packed once here, reused by every
+/// row block) → `ic` over `mc`-high A row blocks (A block packed here)
+/// → `NR` slivers × `MR` slabs → microkernel. For a fixed output
+/// element the k-panels are visited in ascending `pc` and the
+/// microkernel walks each panel in ascending k, so the per-element
+/// accumulation order is ascending k regardless of every tile choice —
+/// the bitwise-vs-naive contract of the module docs.
+fn gemm_rows(a: &[f64], kk: usize, b: &[f64], n: usize, c: &mut [f64], tile: &TileConfig) {
+    let m = if kk == 0 {
+        if n == 0 {
+            0
+        } else {
+            c.len() / n
         }
-        // Remainder row: 4×k-unrolled single-row update.
-        for i in i..m {
+    } else {
+        a.len() / kk
+    };
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || kk == 0 {
+        return; // C += 0: nothing to do (matches the naive reference).
+    }
+    // Allocation-free fallback for tiny products (the simulated
+    // fabric's per-rank blocks land here): plain i-k-j, one
+    // multiply-add per (element, k) in ascending k — the exact order
+    // the packed path produces, so the two paths are bitwise
+    // interchangeable and the cutoff can never change results.
+    const SMALL_GEMM_FLOPS: usize = 1 << 15;
+    if m * kk * n < SMALL_GEMM_FLOPS {
+        for i in 0..m {
             let arow = &a[i * kk..(i + 1) * kk];
             let crow = &mut c[i * n..(i + 1) * n];
-            let mut k = k0;
-            while k + 4 <= k1 {
-                let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
-                if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
-                    k += 4; // free sparsity win for thresholded iterates
-                    continue;
-                }
-                let b0 = &b[k * n..(k + 1) * n];
-                let b1 = &b[(k + 1) * n..(k + 2) * n];
-                let b2 = &b[(k + 2) * n..(k + 3) * n];
-                let b3 = &b[(k + 3) * n..(k + 4) * n];
-                for j in 0..n {
-                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                }
-                k += 4;
-            }
-            for k in k..k1 {
-                let aik = arow[k];
-                if aik == 0.0 {
-                    continue;
-                }
+            for (k, &aik) in arow.iter().enumerate() {
                 let brow = &b[k * n..(k + 1) * n];
-                axpy(aik, brow, crow);
+                for (cj, &bj) in crow.iter_mut().zip(brow) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+        return;
+    }
+    let mc = tile.mc.max(1).min(m);
+    let kc = tile.kc.max(1).min(kk);
+    let nc = tile.nc.max(1).min(n);
+    // Packed panels, padded up to whole MR slabs / NR slivers. Pad
+    // lanes are never read (edge kernels bound by irb/jrb), they only
+    // keep the slab/sliver stride uniform.
+    let mut apack = vec![0.0f64; mc.div_ceil(MR) * MR * kc];
+    let mut bpack = vec![0.0f64; nc.div_ceil(NR) * NR * kc];
+    for jc in (0..n).step_by(nc) {
+        let jb = nc.min(n - jc);
+        let nslivers = jb.div_ceil(NR);
+        for pc in (0..kk).step_by(kc) {
+            let kb = kc.min(kk - pc);
+            pack_b(b, n, pc, kb, jc, jb, &mut bpack);
+            for ic in (0..m).step_by(mc) {
+                let ib = mc.min(m - ic);
+                pack_a(a, kk, ic, ib, pc, kb, &mut apack);
+                let nslabs = ib.div_ceil(MR);
+                for t in 0..nslivers {
+                    let jr = t * NR;
+                    let jrb = NR.min(jb - jr);
+                    let bs = &bpack[t * kb * NR..(t + 1) * kb * NR];
+                    for s in 0..nslabs {
+                        let ir = s * MR;
+                        let irb = MR.min(ib - ir);
+                        let aslab = &apack[s * kb * MR..(s + 1) * kb * MR];
+                        let coff = (ic + ir) * n + jc + jr;
+                        if irb == MR && jrb == NR {
+                            micro_full(aslab, bs, kb, &mut c[coff..], n);
+                        } else {
+                            micro_edge(aslab, bs, kb, &mut c[coff..], n, irb, jrb);
+                        }
+                    }
+                }
             }
         }
     }
 }
 
-/// y += a * x over contiguous slices; 4-way unrolled for autovectorization.
+/// Pack rows `i0 .. i0+ib`, k-range `k0 .. k0+kb` of `a` into
+/// [`MR`]-row slabs, k-major inside each slab (`apack[slab·kb·MR +
+/// k·MR + r]`): the microkernel reads one contiguous `MR`-vector per k.
+/// Ragged final slabs are zero-padded.
+fn pack_a(a: &[f64], kk: usize, i0: usize, ib: usize, k0: usize, kb: usize, apack: &mut [f64]) {
+    for s in 0..ib.div_ceil(MR) {
+        let slab = &mut apack[s * kb * MR..(s + 1) * kb * MR];
+        for k in 0..kb {
+            for r in 0..MR {
+                let row = s * MR + r;
+                slab[k * MR + r] = if row < ib { a[(i0 + row) * kk + k0 + k] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack k-range `k0 .. k0+kb`, columns `j0 .. j0+jb` of `b` (`kk × n`
+/// row-major) into [`NR`]-column slivers, k-major inside each sliver
+/// (`bpack[sliver·kb·NR + k·NR + j]`). Ragged final slivers are
+/// zero-padded.
+fn pack_b(b: &[f64], n: usize, k0: usize, kb: usize, j0: usize, jb: usize, bpack: &mut [f64]) {
+    for t in 0..jb.div_ceil(NR) {
+        let sliver = &mut bpack[t * kb * NR..(t + 1) * kb * NR];
+        for k in 0..kb {
+            let brow = &b[(k0 + k) * n..(k0 + k + 1) * n];
+            for j in 0..NR {
+                let col = t * NR + j;
+                sliver[k * NR + j] = if col < jb { brow[j0 + col] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// The register microkernel: a full [`MR`]`×`[`NR`] block of C
+/// (row-stride `ldc`, starting at `c[0]`) accumulates one `kb`-deep
+/// packed panel pair. The `MR × NR` accumulator array is loaded from
+/// C, updated with one multiply-add per (element, k) in ascending k,
+/// and stored back — LLVM keeps the 32 f64 accumulators in vector
+/// registers and autovectorizes the [`NR`]-wide j-loop.
+#[inline]
+fn micro_full(apanel: &[f64], bpanel: &[f64], kb: usize, c: &mut [f64], ldc: usize) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate() {
+        accr.copy_from_slice(&c[r * ldc..r * ldc + NR]);
+    }
+    for k in 0..kb {
+        let av = &apanel[k * MR..(k + 1) * MR];
+        let bv = &bpanel[k * NR..(k + 1) * NR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let ar = av[r];
+            for (j, accj) in accr.iter_mut().enumerate() {
+                *accj += ar * bv[j];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        c[r * ldc..r * ldc + NR].copy_from_slice(accr);
+    }
+}
+
+/// Ragged-edge microkernel: the `irb × jrb` (≤ [`MR`]`×`[`NR`]) corner
+/// of a macro-tile. Scalar, but per-element it performs the exact same
+/// ascending-k multiply-add sequence as [`micro_full`], so edges are
+/// bitwise consistent with interior tiles.
+fn micro_edge(
+    apanel: &[f64],
+    bpanel: &[f64],
+    kb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    irb: usize,
+    jrb: usize,
+) {
+    for r in 0..irb {
+        for j in 0..jrb {
+            let mut acc = c[r * ldc + j];
+            for k in 0..kb {
+                acc += apanel[k * MR + r] * bpanel[k * NR + j];
+            }
+            c[r * ldc + j] = acc;
+        }
+    }
+}
+
+/// y += a * x over contiguous slices; 4-way unrolled for
+/// autovectorization. Each element sees exactly one `y_i += a·x_i`
+/// regardless of slice length or unroll path — the SpMM column-panel
+/// blocking relies on that elementwise invariance.
 #[inline]
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
@@ -408,6 +558,8 @@ pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
 }
 
 /// Dot product over contiguous slices; 4 independent accumulators.
+/// The grouping is fixed (a function of the slice length only), so
+/// every caller — serial or threaded, any tile — gets identical bits.
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
@@ -435,48 +587,85 @@ mod tests {
         Mat::from_fn(r, c, |_, _| rng.normal())
     }
 
-    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
-        let mut c = Mat::zeros(a.rows(), b.cols());
-        for i in 0..a.rows() {
-            for j in 0..b.cols() {
-                let mut s = 0.0;
-                for k in 0..a.cols() {
-                    s += a.get(i, k) * b.get(k, j);
-                }
-                c.set(i, j, s);
-            }
-        }
-        c
-    }
-
-    #[test]
-    fn matmul_matches_naive_many_shapes() {
-        let mut rng = Rng::new(1);
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 23), (64, 64, 64), (33, 70, 11)] {
-            let a = random_mat(&mut rng, m, k);
-            let b = random_mat(&mut rng, k, n);
-            let c = a.matmul(&b);
-            let want = naive_matmul(&a, &b);
-            assert!(c.max_abs_diff(&want) < 1e-10, "{m}x{k}x{n}");
-        }
-    }
-
     fn bits(m: &Mat) -> Vec<u64> {
         m.data().iter().map(|v| v.to_bits()).collect()
     }
 
+    /// Tile shapes from degenerate to larger-than-any-test-matrix.
+    fn tile_zoo() -> Vec<TileConfig> {
+        vec![
+            TileConfig::new(1, 1, 1),
+            TileConfig::new(2, 3, 5),
+            TileConfig::new(MR, 4, NR),
+            TileConfig::new(7, 13, 11), // prime, misaligned with MR/NR
+            TileConfig::DEFAULT,
+            TileConfig::new(4096, 4096, 4096),
+        ]
+    }
+
     #[test]
-    fn matmul_mt_bitwise_matches_serial() {
+    fn blocked_matmul_is_bitwise_naive_across_tiles() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 2),
+            (17, 9, 23),
+            (64, 64, 64),
+            (33, 70, 11),
+            (MR + 1, 2, NR + 1),
+            (129, 257, 65), // one past the default mc/kc boundaries
+        ] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let naive = a.matmul_naive(&b);
+            // The installed-default path…
+            assert_eq!(bits(&a.matmul(&b)), bits(&naive), "{m}x{k}x{n} default");
+            // …and every explicit tile shape.
+            for tile in tile_zoo() {
+                let mut c = Mat::zeros(m, n);
+                a.matmul_into_with(&b, &mut c, &tile);
+                assert_eq!(bits(&c), bits(&naive), "{m}x{k}x{n} tile {tile:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_into_accumulates_into_c() {
+        let mut rng = Rng::new(7);
+        let a = random_mat(&mut rng, 6, 5);
+        let b = random_mat(&mut rng, 5, 9);
+        let c0 = random_mat(&mut rng, 6, 9);
+        // Reference: naive accumulation on top of the same starting C.
+        let mut want = c0.clone();
+        for i in 0..6 {
+            for j in 0..9 {
+                let mut s = want.get(i, j);
+                for k in 0..5 {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                want.set(i, j, s);
+            }
+        }
+        let mut c = c0.clone();
+        a.matmul_into(&b, &mut c);
+        assert_eq!(bits(&c), bits(&want));
+    }
+
+    #[test]
+    fn matmul_mt_bitwise_matches_serial_across_tiles() {
         let mut rng = Rng::new(0xA1);
         for &(m, k, n) in
             &[(1usize, 1usize, 1usize), (2, 3, 4), (17, 9, 23), (64, 300, 5), (33, 70, 11)]
         {
             let a = random_mat(&mut rng, m, k);
             let b = random_mat(&mut rng, k, n);
-            let serial = a.matmul(&b);
-            for threads in 1..=8 {
-                let par = a.matmul_mt(&b, threads);
-                assert_eq!(bits(&serial), bits(&par), "{m}x{k}x{n} t={threads}");
+            let naive = a.matmul_naive(&b);
+            for tile in [TileConfig::new(3, 5, 7), TileConfig::DEFAULT] {
+                for threads in 1..=8 {
+                    let mut par = Mat::zeros(m, n);
+                    a.matmul_into_mt_with(&b, &mut par, threads, &tile);
+                    assert_eq!(bits(&naive), bits(&par), "{m}x{k}x{n} t={threads} {tile:?}");
+                }
             }
         }
     }

@@ -3,12 +3,22 @@
 //! The paper calls threaded MKL for every node-local matrix product; this
 //! module is that substrate, in Rust:
 //!
-//! - [`dense`]: row-major f64 matrices with a cache-blocked GEMM
-//!   microkernel (the distributed algorithm's local dense-dense multiply),
-//! - [`sparse`]: CSR matrices with sparse·dense SpMM (the local
-//!   `Ω_block · S_block` multiply — γ_sparse in the paper's cost model),
+//! - [`dense`]: row-major f64 matrices with a cache-blocked, packed
+//!   GEMM kernel (the distributed algorithm's local dense-dense
+//!   multiply) and the naive reference kernel it must match bitwise,
+//! - [`sparse`]: CSR matrices with column-blocked sparse·dense SpMM
+//!   (the local `Ω_block · S_block` multiply — γ_sparse in the paper's
+//!   cost model),
+//! - [`tile`]: the `mc × kc × nc` blocking shapes both kernels read —
+//!   compile-time defaults, a process-wide override (`--tile` /
+//!   `ConcordConfig::tile`), and the traffic model the cost layer
+//!   prices,
 //! - [`chol`]: dense and banded Cholesky factorizations (used by the data
 //!   generators to sample X ~ N(0, (Ω⁰)⁻¹) without ever forming Σ).
+//!
+//! Every kernel obeys the layer's determinism contract (ascending-k
+//! per-element accumulation; see `ARCHITECTURE.md`): tile shapes and
+//! thread counts move wall-clock, never bits.
 //!
 //! The PJRT-backed path in [`crate::runtime`] offers AOT-compiled
 //! alternatives at canonical shapes; everything here works at any shape
@@ -17,7 +27,9 @@
 pub mod chol;
 pub mod dense;
 pub mod sparse;
+pub mod tile;
 
 pub use chol::{banded_cholesky, cholesky, solve_lower, solve_lower_transpose, BandedChol};
 pub use dense::Mat;
 pub use sparse::Csr;
+pub use tile::TileConfig;

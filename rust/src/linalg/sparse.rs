@@ -7,8 +7,19 @@
 //! paper's 1.5D algorithm is designed around (shift the small sparse
 //! operand, not the dense one). The paper's cost model charges these at
 //! γ_sparse > γ_dense per flop; [`crate::simnet`] meters them separately.
+//!
+//! The SpMM is column-blocked: wide B/C operands are processed in
+//! [`TileConfig::nc`]-wide panels (B panel packed contiguous) so the
+//! active C sub-row stays L1-resident across a CSR row's nonzeros
+//! instead of re-streaming a full p-wide row per nonzero. Like the
+//! dense layer, blocking is a throughput knob only: each C element
+//! accumulates over the row's nonzeros in ascending-k CSR order
+//! whatever the panel width, so the blocked product is bit-for-bit
+//! identical to the retained row-at-a-time reference
+//! ([`Csr::spmm_reference`]) at every tile shape and thread count.
 
 use super::dense::{axpy, Mat};
+use super::tile::{self, TileConfig};
 
 /// Compressed sparse row matrix (f64 values).
 #[derive(Debug, Clone, PartialEq)]
@@ -129,28 +140,80 @@ impl Csr {
         m
     }
 
-    /// C = self · B  (sparse·dense). Row-at-a-time: each nonzero a_ik
-    /// scales the contiguous row k of B into the contiguous row i of C —
-    /// the same unit-stride axpy kernel as the dense path.
+    /// C = self · B  (sparse·dense), column-blocked at the installed
+    /// [`tile::current`] shape.
     pub fn spmm(&self, b: &Mat) -> Mat {
         self.spmm_mt(b, 1)
     }
 
-    /// [`Csr::spmm`] on `threads` node-local workers. Output rows are
-    /// independent (row i reads only CSR row i and the rows of B it
-    /// indexes), so each worker runs the serial row kernel over a
-    /// contiguous chunk and the result is bit-identical to the serial
-    /// product at every thread count.
-    pub fn spmm_mt(&self, b: &Mat, threads: usize) -> Mat {
+    /// Reference row-at-a-time SpMM: each nonzero a_ik scales the full
+    /// contiguous row k of B into the contiguous row i of C.
+    ///
+    /// Retained as the bitwise oracle of the column-blocked kernel (the
+    /// tile-edge property tests) and the bench baseline; also the code
+    /// path the blocked kernel takes when B is no wider than one panel.
+    pub fn spmm_reference(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows(), "inner dimension mismatch");
         let n = b.cols();
         let mut c = Mat::zeros(self.rows, n);
+        self.spmm_rows_direct(b, 0, self.rows, c.data_mut());
+        c
+    }
+
+    /// The reference kernel over rows `s..e`, writing into that chunk's
+    /// rows (`crows` holds `(e - s) · n` elements).
+    fn spmm_rows_direct(&self, b: &Mat, s: usize, e: usize, crows: &mut [f64]) {
+        let n = b.cols();
+        for i in s..e {
+            let (idx, vals) = self.row(i);
+            let crow = &mut crows[(i - s) * n..(i - s + 1) * n];
+            for (&k, &a) in idx.iter().zip(vals) {
+                axpy(a, b.row(k), crow);
+            }
+        }
+    }
+
+    /// [`Csr::spmm`] on `threads` node-local workers.
+    pub fn spmm_mt(&self, b: &Mat, threads: usize) -> Mat {
+        self.spmm_mt_with(b, threads, &tile::current())
+    }
+
+    /// [`Csr::spmm_mt`] at an explicit tile shape.
+    ///
+    /// Output rows are independent (row i reads only CSR row i and the
+    /// rows of B it indexes), so each worker runs the serial kernel
+    /// over a contiguous row chunk; within a chunk the columns are
+    /// processed in `tile.nc`-wide panels with the B panel packed
+    /// contiguous and reused by every row of the chunk. Per element the
+    /// nonzeros still apply in ascending CSR order, so the result is
+    /// bit-identical to [`Csr::spmm_reference`] at every thread count
+    /// and panel width.
+    pub fn spmm_mt_with(&self, b: &Mat, threads: usize, tile: &TileConfig) -> Mat {
+        assert_eq!(self.cols, b.rows(), "inner dimension mismatch");
+        let n = b.cols();
+        let mut c = Mat::zeros(self.rows, n);
+        let nc = tile.nc.max(1);
+        // Packing pays once a panel is a strict subset of B's width and
+        // the nonzeros reuse packed rows at all; either path is bitwise
+        // identical, the predicate only picks the faster one.
+        let pack = n > nc && self.nnz() >= b.rows();
         let body = |s: usize, e: usize, crows: &mut [f64]| {
-            for i in s..e {
-                let (idx, vals) = self.row(i);
-                let crow = &mut crows[(i - s) * n..(i - s + 1) * n];
-                for (&k, &a) in idx.iter().zip(vals) {
-                    axpy(a, b.row(k), crow);
+            if !pack {
+                self.spmm_rows_direct(b, s, e, crows);
+                return;
+            }
+            let mut bpack = vec![0.0f64; b.rows() * nc];
+            for jc in (0..n).step_by(nc) {
+                let jb = nc.min(n - jc);
+                for k in 0..b.rows() {
+                    bpack[k * jb..(k + 1) * jb].copy_from_slice(&b.row(k)[jc..jc + jb]);
+                }
+                for i in s..e {
+                    let (idx, vals) = self.row(i);
+                    let crow = &mut crows[(i - s) * n + jc..(i - s) * n + jc + jb];
+                    for (&k, &a) in idx.iter().zip(vals) {
+                        axpy(a, &bpack[k * jb..(k + 1) * jb], crow);
+                    }
                 }
             }
         };
@@ -234,12 +297,25 @@ mod tests {
         }
     }
 
+    fn bitwise_eq(a: &Mat, b: &Mat) -> bool {
+        a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
     #[test]
-    fn spmm_mt_bitwise_matches_serial() {
+    fn spmm_mt_bitwise_matches_reference_across_tiles() {
         let mut rng = Rng::new(0xB1);
         // The last case's nnz·n exceeds pool::SPAWN_MIN_WORK, so the
         // parallel path genuinely fans out; the small ones cover the
-        // serial-cutoff branch.
+        // serial-cutoff branch. Tiny nc panels force the packed path
+        // (n > nc) with ragged final panels; the huge tile forces the
+        // direct path.
+        let tiles = [
+            TileConfig::new(1, 1, 1),
+            TileConfig::new(2, 2, 3),
+            TileConfig::new(4, 4, 7),
+            TileConfig::DEFAULT,
+            TileConfig::new(4096, 4096, 4096),
+        ];
         for &(m, k, n, d) in &[
             (1usize, 4usize, 3usize, 0.5),
             (23, 17, 9, 0.2),
@@ -248,15 +324,16 @@ mod tests {
         ] {
             let a = random_sparse(&mut rng, m, k, d);
             let b = Mat::from_fn(k, n, |_, _| rng.normal());
-            let serial = a.spmm(&b);
-            for threads in 1..=8 {
-                let par = a.spmm_mt(&b, threads);
-                let same = serial
-                    .data()
-                    .iter()
-                    .zip(par.data())
-                    .all(|(x, y)| x.to_bits() == y.to_bits());
-                assert!(same, "{m}x{k}x{n} d={d} t={threads}");
+            let reference = a.spmm_reference(&b);
+            assert!(bitwise_eq(&reference, &a.spmm(&b)), "{m}x{k}x{n} d={d} default tile");
+            for tile in &tiles {
+                for threads in 1..=8 {
+                    let par = a.spmm_mt_with(&b, threads, tile);
+                    assert!(
+                        bitwise_eq(&reference, &par),
+                        "{m}x{k}x{n} d={d} t={threads} tile {tile:?}"
+                    );
+                }
             }
         }
     }

@@ -1,0 +1,247 @@
+//! Cache-blocking parameters for the packed GEMM/SpMM kernel layer.
+//!
+//! The dense kernel ([`crate::linalg::Mat::matmul_into`]) is organised
+//! BLIS-style around three loop tiles:
+//!
+//! - `nc`: B column-panel width — one packed `kc × nc` B panel is the
+//!   unit of B reuse (streamed from L3/memory once per `kc` panel),
+//! - `kc`: the k-panel depth — an `mc × kc` packed A block and the B
+//!   panel's active slivers stay resident in L2/L1 across the whole
+//!   macro-kernel,
+//! - `mc`: A row-block height — bounds the packed A working set
+//!   (`mc·kc` words) so it fits in L2.
+//!
+//! Inside a macro-tile, a fixed [`MR`]`×`[`NR`] register microkernel
+//! walks the packed panels. The blocked SpMM
+//! ([`crate::linalg::Csr::spmm`]) reuses `nc` as its B/C column-panel
+//! width (CSR row bands × packed B column panels).
+//!
+//! ## Determinism contract
+//!
+//! Tile shapes are a **performance knob only**. Every kernel in the
+//! layer accumulates each output element in strictly ascending-k order,
+//! one fused-free multiply-add per k (see `ARCHITECTURE.md`,
+//! "Determinism rules"), so the result is bit-for-bit identical to the
+//! naive triple-loop reference ([`crate::linalg::Mat::matmul_naive`])
+//! at *every* tile shape and thread count. `--tile 8,8,8` and
+//! `--tile 4096,4096,4096` return byte-identical estimates; only
+//! wall-clock moves. `rust/tests/parallel_determinism.rs` pins this.
+//!
+//! ## Selection
+//!
+//! Compile-time defaults ([`TileConfig::DEFAULT`]) are chosen for a
+//! ~256 KiB-L2 / few-MiB-L3 core. Override per process with
+//! [`install`] (the solvers install `ConcordConfig::tile` on entry; the
+//! CLI exposes `--tile mc,kc,nc`). The cost model prices the active
+//! tile through [`TileConfig::gemm_words_per_flop`] (see
+//! `CostBreakdown::time_with_tile` in [`crate::cost`]).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{anyhow, Result};
+
+/// Register microkernel height: rows of C held in registers, and the
+/// slab height of the packed A panel. With [`NR`] this sizes the
+/// accumulator block at `MR × NR` f64 (4×8 = 4 AVX2 register rows).
+pub const MR: usize = 4;
+
+/// Register microkernel width: columns of C held in registers, and the
+/// sliver width of the packed B panel.
+pub const NR: usize = 8;
+
+const DEFAULT_MC: usize = 128;
+const DEFAULT_KC: usize = 256;
+const DEFAULT_NC: usize = 512;
+
+static TILE_MC: AtomicUsize = AtomicUsize::new(DEFAULT_MC);
+static TILE_KC: AtomicUsize = AtomicUsize::new(DEFAULT_KC);
+static TILE_NC: AtomicUsize = AtomicUsize::new(DEFAULT_NC);
+
+/// The `mc × kc × nc` cache-blocking shape of the packed kernel layer.
+///
+/// Construct one explicitly, parse one from the CLI's `mc,kc,nc` form,
+/// or take [`TileConfig::DEFAULT`]. Results never depend on the values
+/// (see the module docs); the working sets do:
+///
+/// - packed A block: `mc · kc` words,
+/// - packed B panel: `kc · nc` words,
+/// - C macro-tile: `mc · nc` words.
+///
+/// # Examples
+///
+/// ```
+/// use hpconcord::linalg::tile::TileConfig;
+///
+/// let t = TileConfig::parse("64,128,256").unwrap();
+/// assert_eq!((t.mc, t.kc, t.nc), (64, 128, 256));
+/// // Degenerate dims are clamped to 1, never zero.
+/// assert_eq!(TileConfig::new(0, 0, 0), TileConfig::new(1, 1, 1));
+/// // The blocked kernel's modeled memory traffic is far below naive's.
+/// assert!(TileConfig::DEFAULT.gemm_words_per_flop() < TileConfig::NAIVE_WORDS_PER_FLOP / 10.0);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileConfig {
+    /// A row-block height (rows of C per macro-tile).
+    pub mc: usize,
+    /// k-panel depth (inner-dimension block).
+    pub kc: usize,
+    /// B column-panel width (columns of C per panel).
+    pub nc: usize,
+}
+
+impl TileConfig {
+    /// Compile-time defaults: A block 128·256 = 256 KiB-of-f64 ≈ L2,
+    /// B panel 256·512 = 1 MiB-of-f64 ≈ L3 slice, C tile 512 KiB.
+    pub const DEFAULT: TileConfig = TileConfig { mc: DEFAULT_MC, kc: DEFAULT_KC, nc: DEFAULT_NC };
+
+    /// Modeled slow-memory words per naive-kernel flop: the un-blocked
+    /// triple loop re-streams one B word for every multiply-add pair
+    /// (no reuse once p²·8 bytes exceeds cache), i.e. ½ word/flop. The
+    /// cost model uses this as the "what if we hadn't blocked" price.
+    pub const NAIVE_WORDS_PER_FLOP: f64 = 0.5;
+
+    /// A tile shape with every dimension clamped to at least 1.
+    pub fn new(mc: usize, kc: usize, nc: usize) -> TileConfig {
+        TileConfig { mc: mc.max(1), kc: kc.max(1), nc: nc.max(1) }
+    }
+
+    /// Parse the CLI form `mc,kc,nc` (three positive integers).
+    pub fn parse(s: &str) -> Result<TileConfig> {
+        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+        if parts.len() != 3 {
+            return Err(anyhow!("--tile expects mc,kc,nc — got {s:?}"));
+        }
+        let dim = |part: &str| -> Result<usize> {
+            match part.parse::<usize>() {
+                Ok(v) if v >= 1 => Ok(v),
+                _ => Err(anyhow!("--tile dimension must be a positive integer, got {part:?}")),
+            }
+        };
+        Ok(TileConfig { mc: dim(parts[0])?, kc: dim(parts[1])?, nc: dim(parts[2])? })
+    }
+
+    /// Build from a numeric config-file array (`solver.tile = [mc, kc,
+    /// nc]`); every entry must be a positive integer-valued number.
+    pub fn from_f64s(dims: &[f64]) -> Result<TileConfig> {
+        if dims.len() != 3 {
+            return Err(anyhow!("solver.tile expects [mc, kc, nc] — got {} entries", dims.len()));
+        }
+        let dim = |v: f64| -> Result<usize> {
+            if v >= 1.0 && v.fract() == 0.0 && v <= usize::MAX as f64 {
+                Ok(v as usize)
+            } else {
+                Err(anyhow!("solver.tile dimension must be a positive integer, got {v}"))
+            }
+        };
+        Ok(TileConfig { mc: dim(dims[0])?, kc: dim(dims[1])?, nc: dim(dims[2])? })
+    }
+
+    /// Modeled slow-memory words moved per flop by the packed blocked
+    /// kernel. Each `mc×kc` · `kc×nc` macro-tile does `2·mc·kc·nc`
+    /// flops and moves `mc·kc` (pack A) + `kc·nc` (pack B) +
+    /// `2·mc·nc` (C in/out per k-panel) words:
+    ///
+    /// ```text
+    /// w(tile) = 1/(2·nc) + 1/(2·mc) + 1/kc
+    /// ```
+    ///
+    /// → ~0.009 words/flop at the defaults vs the naive kernel's ½
+    /// ([`TileConfig::NAIVE_WORDS_PER_FLOP`]). This is the cache-reuse
+    /// term the Lemma 3.5 pricing charges against γ_dense (see
+    /// `CostBreakdown::time_with_tile` in [`crate::cost`]).
+    pub fn gemm_words_per_flop(&self) -> f64 {
+        let (mc, kc, nc) = (self.mc as f64, self.kc as f64, self.nc as f64);
+        1.0 / (2.0 * nc) + 1.0 / (2.0 * mc) + 1.0 / kc
+    }
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        TileConfig::DEFAULT
+    }
+}
+
+/// Install `cfg` as the process-wide tile shape read by the kernel
+/// entry points without an explicit `_with` tile argument
+/// (`matmul_into`, `spmm`, …) and by the cost model's default pricing.
+///
+/// Solver entry points call this with `ConcordConfig::tile`. Concurrent
+/// installs are benign — last writer wins per dimension, and a reader
+/// racing an install may even see a mix of old and new dimensions —
+/// because results are bitwise invariant to the tile (every dimension
+/// is independently valid); only throughput is at stake. Tests that
+/// need an exact shape pass it explicitly via the `_with` kernel
+/// variants instead of reading [`current`].
+pub fn install(cfg: TileConfig) {
+    let cfg = TileConfig::new(cfg.mc, cfg.kc, cfg.nc);
+    TILE_MC.store(cfg.mc, Ordering::Relaxed);
+    TILE_KC.store(cfg.kc, Ordering::Relaxed);
+    TILE_NC.store(cfg.nc, Ordering::Relaxed);
+}
+
+/// The currently-installed process-wide tile shape.
+pub fn current() -> TileConfig {
+    TileConfig {
+        mc: TILE_MC.load(Ordering::Relaxed),
+        kc: TILE_KC.load(Ordering::Relaxed),
+        nc: TILE_NC.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_cli_form() {
+        let t = TileConfig::parse("32, 64,128").unwrap();
+        assert_eq!(t, TileConfig { mc: 32, kc: 64, nc: 128 });
+        assert!(TileConfig::parse("32,64").is_err());
+        assert!(TileConfig::parse("32,64,0").is_err());
+        assert!(TileConfig::parse("a,b,c").is_err());
+    }
+
+    #[test]
+    fn from_f64s_validates_integers() {
+        assert_eq!(
+            TileConfig::from_f64s(&[8.0, 16.0, 32.0]).unwrap(),
+            TileConfig { mc: 8, kc: 16, nc: 32 }
+        );
+        assert!(TileConfig::from_f64s(&[8.0, 16.0]).is_err());
+        assert!(TileConfig::from_f64s(&[8.5, 16.0, 32.0]).is_err());
+        assert!(TileConfig::from_f64s(&[0.0, 16.0, 32.0]).is_err());
+    }
+
+    #[test]
+    fn new_clamps_to_one() {
+        assert_eq!(TileConfig::new(0, 5, 0), TileConfig { mc: 1, kc: 5, nc: 1 });
+    }
+
+    #[test]
+    fn words_per_flop_closed_form() {
+        let t = TileConfig::new(4, 8, 16);
+        let want = 1.0 / 32.0 + 1.0 / 8.0 + 1.0 / 8.0;
+        assert!((t.gemm_words_per_flop() - want).abs() < 1e-15);
+        // More blocking → less traffic, monotonically.
+        assert!(
+            TileConfig::DEFAULT.gemm_words_per_flop()
+                < TileConfig::new(8, 8, 8).gemm_words_per_flop()
+        );
+        assert!(TileConfig::DEFAULT.gemm_words_per_flop() < TileConfig::NAIVE_WORDS_PER_FLOP);
+    }
+
+    #[test]
+    fn install_sanitizes_and_current_stays_positive() {
+        // Concurrent tests run solver fits that install their own
+        // (default) tiles, so exact-state asserts would race; assert
+        // the invariants instead: current() is always positive in every
+        // dimension, and an install with a zero dimension never
+        // publishes a zero.
+        install(TileConfig { mc: 24, kc: 48, nc: 0 });
+        for _ in 0..8 {
+            let seen = current();
+            assert!(seen.mc >= 1 && seen.kc >= 1 && seen.nc >= 1, "{seen:?}");
+        }
+        install(TileConfig::DEFAULT);
+    }
+}

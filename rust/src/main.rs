@@ -18,7 +18,7 @@ use hpconcord::config::Config;
 use hpconcord::coordinator::{run_sweep, run_sweep_screened, GridSpec};
 use hpconcord::cost::ProblemShape;
 use hpconcord::gen;
-use hpconcord::linalg::Mat;
+use hpconcord::linalg::{tile, Mat, TileConfig};
 use hpconcord::metrics::support_metrics;
 use hpconcord::rng::Rng;
 use hpconcord::runtime::Engine;
@@ -94,7 +94,24 @@ fn solver_config(args: &Args, cfg: &Config) -> Result<ConcordConfig> {
             _ => Variant::Auto,
         },
         threads: node_threads(args, cfg)?,
+        tile: tile_config(args, cfg)?,
     })
+}
+
+/// The kernel layer's cache-blocking shape: `--tile mc,kc,nc`, else the
+/// config file's `solver.tile = [mc, kc, nc]`, else the compile-time
+/// default. Bit-identical results at any value — a throughput knob.
+fn tile_config(args: &Args, cfg: &Config) -> Result<TileConfig> {
+    let raw = args.str_or("tile", "");
+    if !raw.is_empty() {
+        return TileConfig::parse(&raw);
+    }
+    let from_file = cfg.array_or("solver.tile", &[])?;
+    if from_file.is_empty() {
+        Ok(TileConfig::DEFAULT)
+    } else {
+        TileConfig::from_f64s(&from_file)
+    }
 }
 
 /// The node-local thread count (the paper's per-node t): `--threads N`,
@@ -150,13 +167,15 @@ fn cmd_solve(args: &Args) -> Result<()> {
             let ranks = args.usize_or("ranks", file_cfg.usize_or("fabric.ranks", 8)?)?;
             let c_x = args.usize_or("cx", file_cfg.usize_or("fabric.cx", 1)?)?;
             let c_o = args.usize_or("comega", file_cfg.usize_or("fabric.comega", 1)?)?;
-            // Explicit --cx/--comega pin every component fabric; otherwise
-            // the cost model sizes each component's fabric on its own.
-            let fixed = if args.has("cx") || args.has("comega") {
-                Some((ranks, c_x, c_o))
-            } else {
-                None
-            };
+            // Explicit replication — CLI --cx/--comega or the config
+            // file's fabric.cx/fabric.comega — pins every component
+            // fabric; otherwise the cost model sizes each component's
+            // fabric on its own.
+            let pinned = args.has("cx")
+                || args.has("comega")
+                || file_cfg.get("fabric.cx").is_some()
+                || file_cfg.get("fabric.comega").is_some();
+            let fixed = if pinned { Some((ranks, c_x, c_o)) } else { None };
             let opts = ScreenedDistOptions {
                 total_ranks: ranks,
                 machine: MachineParams::default(),
@@ -291,6 +310,8 @@ fn cmd_cost(args: &Args) -> Result<()> {
     };
     let procs = args.usize_or("procs", 512)?;
     let threads = node_threads(args, &Config::default())?;
+    // The Lemma 3.5 pricing reads the installed tile's cache-reuse term.
+    tile::install(tile_config(args, &Config::default())?);
     let variant = match args.str_or("variant", "auto").as_str() {
         "cov" => Variant::Cov,
         "obs" => Variant::Obs,

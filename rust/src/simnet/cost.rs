@@ -15,10 +15,18 @@ pub struct MachineParams {
     pub alpha: f64,
     /// Seconds to transfer one word (8-byte f64), the paper's β.
     pub beta: f64,
-    /// Seconds per flop in dense-dense multiplication.
+    /// Seconds per flop in dense-dense multiplication **at full cache
+    /// reuse** (the packed blocked kernel's rate).
     pub gamma_dense: f64,
     /// Seconds per flop in sparse-dense multiplication (≫ γ_dense).
     pub gamma_sparse: f64,
+    /// Seconds per word of *node-local* memory traffic (the intra-node
+    /// analogue of β). A dense kernel that moves `w` words per flop
+    /// runs at an effective `γ_dense + w·β_mem` seconds per flop —
+    /// the cache-reuse term `CostBreakdown::time_with_tile` charges
+    /// (see `linalg::tile::TileConfig::gemm_words_per_flop`). Zero
+    /// recovers the pre-tile pricing exactly.
+    pub beta_mem: f64,
 }
 
 impl MachineParams {
@@ -26,18 +34,22 @@ impl MachineParams {
     /// 12-core Xeon E5-2695v2): ~10 GFLOP/s effective dense rate per
     /// process, ~8× worse per-flop rate for irregular sparse-dense,
     /// ~1 µs MPI latency, ~8 GB/s injection bandwidth (1 ns per 8-byte
-    /// word). Ratios, not absolutes, drive every figure's shape.
+    /// word), ~5 GWord/s node-local streaming per process (β_mem
+    /// 2·10⁻¹⁰ s/word — at ½ word/flop a naive unblocked GEMM prices
+    /// 2× off dense peak). Ratios, not absolutes, drive every figure's
+    /// shape.
     pub fn edison_like() -> Self {
         MachineParams {
             alpha: 1.0e-6,
             beta: 1.0e-9,
             gamma_dense: 1.0e-10,
             gamma_sparse: 8.0e-10,
+            beta_mem: 2.0e-10,
         }
     }
 
     /// Calibrate γ_dense from a measured local GEMM rate (flops/sec) on
-    /// this host, keeping the Edison-like α/β/γ_sparse ratios.
+    /// this host, keeping the Edison-like α/β/γ_sparse/β_mem ratios.
     pub fn calibrated(dense_flops_per_sec: f64) -> Self {
         let gamma_dense = 1.0 / dense_flops_per_sec;
         MachineParams {
@@ -45,6 +57,7 @@ impl MachineParams {
             beta: 1.0e-9,
             gamma_dense,
             gamma_sparse: 8.0 * gamma_dense,
+            beta_mem: 2.0 * gamma_dense,
         }
     }
 }
@@ -150,7 +163,13 @@ mod tests {
 
     #[test]
     fn modeled_time_is_linear_combination() {
-        let m = MachineParams { alpha: 2.0, beta: 3.0, gamma_dense: 5.0, gamma_sparse: 7.0 };
+        let m = MachineParams {
+            alpha: 2.0,
+            beta: 3.0,
+            gamma_dense: 5.0,
+            gamma_sparse: 7.0,
+            beta_mem: 0.0,
+        };
         let c = Counters { messages: 1, words: 10, flops_dense: 100, flops_sparse: 1000 };
         assert_eq!(c.modeled_time(&m), 2.0 + 30.0 + 500.0 + 7000.0);
         assert_eq!(c.comm_time(&m), 32.0);
@@ -158,7 +177,13 @@ mod tests {
 
     #[test]
     fn summary_takes_max_and_total() {
-        let m = MachineParams { alpha: 1.0, beta: 0.0, gamma_dense: 0.0, gamma_sparse: 0.0 };
+        let m = MachineParams {
+            alpha: 1.0,
+            beta: 0.0,
+            gamma_dense: 0.0,
+            gamma_sparse: 0.0,
+            beta_mem: 0.0,
+        };
         let a = Counters { messages: 4, words: 1, flops_dense: 0, flops_sparse: 0 };
         let b = Counters { messages: 2, words: 9, flops_dense: 3, flops_sparse: 0 };
         let s = CostSummary::from_counters(&[a, b], &m);
@@ -171,7 +196,13 @@ mod tests {
 
     #[test]
     fn merge_sequential_adds_times_and_totals_maxes_per_rank() {
-        let m = MachineParams { alpha: 1.0, beta: 0.0, gamma_dense: 0.0, gamma_sparse: 0.0 };
+        let m = MachineParams {
+            alpha: 1.0,
+            beta: 0.0,
+            gamma_dense: 0.0,
+            gamma_sparse: 0.0,
+            beta_mem: 0.0,
+        };
         let a = CostSummary::from_counters(
             &[Counters { messages: 4, words: 1, flops_dense: 2, flops_sparse: 0 }],
             &m,
@@ -197,5 +228,9 @@ mod tests {
         assert!(m.gamma_dense < m.gamma_sparse);
         assert!(m.gamma_sparse < m.beta);
         assert!(m.beta < m.alpha);
+        // Node-local streaming is slower than a cached flop but faster
+        // than the network: γ_dense < β_mem < β.
+        assert!(m.gamma_dense < m.beta_mem);
+        assert!(m.beta_mem < m.beta);
     }
 }

@@ -7,9 +7,12 @@
 //! identical to its serial twin at any thread count**:
 //!
 //! - work is partitioned by contiguous *row ranges* (optionally aligned,
-//!   e.g. to the GEMM kernel's 2-row pairing) and every output element
-//!   is written by exactly one worker running the unmodified serial
-//!   inner loop — no atomics, no reduction races;
+//!   e.g. to the packed GEMM's microkernel height `linalg::tile::MR` so
+//!   only the trailing chunk runs ragged slabs — a perf nicety; the
+//!   blocked kernels' per-element ascending-k order makes the bits
+//!   partition-independent regardless) and every output element is
+//!   written by exactly one worker running the unmodified serial inner
+//!   loop — no atomics, no reduction races;
 //! - scalar reductions never combine in thread order: callers reduce
 //!   over *fixed-size blocks* (see `ops::REDUCE_BLOCK_ROWS`) whose
 //!   partials are concatenated by block index, so the combination order

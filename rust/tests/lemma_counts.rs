@@ -24,9 +24,8 @@ fn fixed_budget_cfg() -> ConcordConfig {
         lambda2: 0.1,
         tol: 0.0,
         max_iter: 6,
-        max_linesearch: 40,
         variant: Variant::Obs,
-        threads: 1,
+        ..Default::default()
     }
 }
 

@@ -3,20 +3,27 @@
 //! 1. **Bit-for-bit kernel equivalence** — the multithreaded
 //!    `matmul_into` / `matmul_bt` / `spmm` are property-tested against
 //!    the serial reference across randomized shapes (empty, 1×n, odd
-//!    remainders) and thread counts 1–8. The parallel kernels partition
-//!    rows on aligned boundaries and run the unmodified serial inner
-//!    loops, so equality here is exact, not approximate.
-//! 2. **Solver determinism** — `fit_distributed` on a fixed seed
+//!    remainders) and thread counts 1–8. Every kernel accumulates each
+//!    output element in ascending-k order (the kernel layer's
+//!    determinism rule; see ARCHITECTURE.md), so equality here is
+//!    exact, not approximate.
+//! 2. **Tile invariance** — the blocked packed kernels are bitwise
+//!    equal to the retained naive references (`Mat::matmul_naive`,
+//!    `Csr::spmm_reference`) at *every* `mc × kc × nc` tile shape:
+//!    tiny, default, larger-than-matrix, and ragged (dimensions not
+//!    divisible by mc/nc, so final panels are partial).
+//! 3. **Solver determinism** — `fit_distributed` on a fixed seed
 //!    returns a byte-identical estimate and identical metered
-//!    communication/flop counters across `threads ∈ {1, 2, 4}` and
-//!    across repeated runs: intra-node threading must only change
-//!    wall-clock time, never results or the paper's L/W counts.
+//!    communication/flop counters across `threads ∈ {1, 2, 4}`, across
+//!    tile overrides, and across repeated runs: threading and blocking
+//!    must only change wall-clock time, never results or the paper's
+//!    L/W counts.
 
 use hpconcord::concord::{
     fit_distributed, fit_screened_distributed, fit_single_node, fit_with_screening,
     ConcordConfig, ScreenedDistOptions, Variant,
 };
-use hpconcord::linalg::{Csr, Mat};
+use hpconcord::linalg::{Csr, Mat, TileConfig};
 use hpconcord::prelude::*;
 use hpconcord::prop_assert;
 use hpconcord::simnet::cost::Counters;
@@ -34,8 +41,8 @@ fn bits(m: &Mat) -> Vec<u64> {
 }
 
 /// Shapes that exercise the kernels' edges: empty dims, single rows
-/// (no 2-row pairing), odd remainders against the 2-row/4-k unrolling,
-/// and sizes straddling the k-blocking boundary.
+/// (a lone ragged MR-slab), odd remainders against the MR×NR register
+/// grid, and sizes straddling panel boundaries.
 fn edge_dim(rng: &mut Rng) -> usize {
     match rng.below(6) {
         0 => 0,
@@ -109,9 +116,144 @@ fn prop_spmm_mt_bitwise_equals_serial() {
     });
 }
 
+/// Tile shapes from degenerate through default to larger than any test
+/// matrix; a shape-derived ragged tile is added per property case.
+fn tile_zoo(m: usize, k: usize, n: usize) -> Vec<TileConfig> {
+    vec![
+        TileConfig::new(1, 1, 1),
+        TileConfig::new(3, 5, 7),
+        // One below a half-divisor of the actual shape: forces ragged
+        // final panels whenever the dims aren't tiny.
+        TileConfig::new((m / 2).max(1), (k / 2).max(1), (n / 2).max(1)),
+        TileConfig::DEFAULT,
+        TileConfig::new(4096, 4096, 4096),
+    ]
+}
+
+#[test]
+fn prop_blocked_gemm_bitwise_equals_naive_across_tiles() {
+    check(0xD15E4, 25, |rng| {
+        let (m, k, n) = (edge_dim(rng), edge_dim(rng), edge_dim(rng));
+        let a = random_mat(rng, m, k);
+        let b = random_mat(rng, k, n);
+        let naive = a.matmul_naive(&b);
+        for tile in tile_zoo(m, k, n) {
+            for threads in [1usize, 2, 4] {
+                let mut c = Mat::zeros(m, n);
+                a.matmul_into_mt_with(&b, &mut c, threads, &tile);
+                prop_assert!(
+                    bits(&naive) == bits(&c),
+                    "gemm {m}x{k}x{n} tile {tile:?} threads={threads} != naive"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blocked_spmm_bitwise_equals_reference_across_tiles() {
+    check(0xD15E5, 25, |rng| {
+        let (m, k, n) = (edge_dim(rng), edge_dim(rng), edge_dim(rng));
+        let density = rng.uniform();
+        let dense = Mat::from_fn(m, k, |_, _| {
+            if rng.uniform() < density {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let a = Csr::from_dense(&dense, 0.0);
+        let b = random_mat(rng, k, n);
+        let reference = a.spmm_reference(&b);
+        for tile in tile_zoo(m, k, n) {
+            for threads in [1usize, 2, 4] {
+                let c = a.spmm_mt_with(&b, threads, &tile);
+                prop_assert!(
+                    bits(&reference) == bits(&c),
+                    "spmm {m}x{k}x{n} (density {density:.2}) tile {tile:?} \
+                     threads={threads} != reference"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Ragged final panels, deterministically: every dimension sits just
+/// past a tile-dimension multiple (and off the `MR`/`NR` grid), so
+/// each macro loop ends in a partial panel and the microkernel edges
+/// run. Shapes are sized above the kernel's tiny-product cutoff so the
+/// packed path (not the allocation-free fallback) is what's exercised.
+#[test]
+fn gemm_ragged_final_panels_match_naive() {
+    let mut rng = Rng::new(0xD15E6);
+    // (tile, shapes): every dim is coprime-ish with mc/kc/nc and the
+    // MR=4/NR=8 register grid, and every product exceeds 2¹⁵ flops.
+    let cases: &[((usize, usize, usize), [(usize, usize, usize); 3])] = &[
+        ((8, 8, 8), [(33, 33, 33), (39, 51, 37), (99, 98, 7)]),
+        ((16, 32, 24), [(65, 129, 97), (47, 67, 101), (67, 130, 23)]),
+    ];
+    for &((mc, kc, nc), shapes) in cases {
+        let tile = TileConfig::new(mc, kc, nc);
+        for &(m, k, n) in &shapes {
+            assert!(m * k * n >= 1 << 15, "shape under the tiny-product cutoff");
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let naive = a.matmul_naive(&b);
+            for threads in [1usize, 2, 4] {
+                let mut c = Mat::zeros(m, n);
+                a.matmul_into_mt_with(&b, &mut c, threads, &tile);
+                assert_eq!(
+                    bits(&naive),
+                    bits(&c),
+                    "ragged {m}x{k}x{n} tile {mc},{kc},{nc} t={threads}"
+                );
+            }
+        }
+    }
+}
+
+/// Whole fits are byte-identical across tile overrides (tiny, default,
+/// larger-than-matrix) at several thread counts: `ConcordConfig::tile`
+/// is a pure throughput knob end to end.
+#[test]
+fn fit_single_node_is_byte_identical_across_tile_shapes() {
+    let mut rng = Rng::new(0xF1D2);
+    let problem = gen::chain_problem(48, 60, &mut rng);
+    let base = ConcordConfig {
+        lambda1: 0.25,
+        lambda2: 0.05,
+        tol: 1e-6,
+        max_iter: 80,
+        variant: Variant::Cov,
+        ..Default::default()
+    };
+    let reference = fit_single_node(&problem.x, &base).unwrap();
+    let tiles =
+        [TileConfig::new(1, 2, 3), TileConfig::new(8, 8, 8), TileConfig::new(4096, 4096, 4096)];
+    for tile in tiles {
+        for threads in [1usize, 4] {
+            let cfg = ConcordConfig { tile, threads, ..base };
+            let fit = fit_single_node(&problem.x, &cfg).unwrap();
+            assert_eq!(fit.iterations, reference.iterations, "tile {tile:?} t={threads}");
+            assert_eq!(
+                bits(&fit.omega),
+                bits(&reference.omega),
+                "estimate not byte-identical at tile {tile:?} t={threads}"
+            );
+            assert_eq!(fit.objective.to_bits(), reference.objective.to_bits());
+        }
+    }
+}
+
 /// Shared fixture for the solver determinism tests: a fixed-seed chain
 /// problem solved distributed on 8 ranks with replication.
-fn dist_fixture(variant: Variant, threads: usize) -> (Vec<u64>, usize, Counters, Counters) {
+fn dist_fixture(
+    variant: Variant,
+    threads: usize,
+    tile: TileConfig,
+) -> (Vec<u64>, usize, Counters, Counters) {
     let mut rng = Rng::new(0xF1D0);
     let problem = gen::chain_problem(32, 40, &mut rng);
     let cfg = ConcordConfig {
@@ -121,6 +263,7 @@ fn dist_fixture(variant: Variant, threads: usize) -> (Vec<u64>, usize, Counters,
         max_iter: 60,
         variant,
         threads,
+        tile,
         ..Default::default()
     };
     let out = fit_distributed(&problem.x, &cfg, 8, 2, 2, MachineParams::edison_like());
@@ -128,23 +271,31 @@ fn dist_fixture(variant: Variant, threads: usize) -> (Vec<u64>, usize, Counters,
 }
 
 #[test]
-fn fit_distributed_is_byte_identical_across_thread_counts() {
+fn fit_distributed_is_byte_identical_across_thread_counts_and_tiles() {
     for variant in [Variant::Cov, Variant::Obs] {
-        let (omega1, iters1, total1, max1) = dist_fixture(variant, 1);
-        for threads in [2usize, 4] {
-            let (omega, iters, total, max) = dist_fixture(variant, threads);
-            assert_eq!(iters, iters1, "{variant:?}: iterations changed at threads={threads}");
+        let (omega1, iters1, total1, max1) = dist_fixture(variant, 1, TileConfig::DEFAULT);
+        for (threads, tile) in [
+            (2usize, TileConfig::DEFAULT),
+            (4, TileConfig::DEFAULT),
+            (2, TileConfig::new(2, 3, 5)),
+            (1, TileConfig::new(4096, 4096, 4096)),
+        ] {
+            let (omega, iters, total, max) = dist_fixture(variant, threads, tile);
+            assert_eq!(
+                iters, iters1,
+                "{variant:?}: iterations changed at threads={threads} tile {tile:?}"
+            );
             assert_eq!(
                 omega, omega1,
-                "{variant:?}: estimate not byte-identical at threads={threads}"
+                "{variant:?}: estimate not byte-identical at threads={threads} tile {tile:?}"
             );
             assert_eq!(
                 total, total1,
-                "{variant:?}: total counters changed at threads={threads}"
+                "{variant:?}: total counters changed at threads={threads} tile {tile:?}"
             );
             assert_eq!(
                 max, max1,
-                "{variant:?}: per-rank max counters changed at threads={threads}"
+                "{variant:?}: per-rank max counters changed at threads={threads} tile {tile:?}"
             );
         }
     }
@@ -152,9 +303,9 @@ fn fit_distributed_is_byte_identical_across_thread_counts() {
 
 #[test]
 fn fit_distributed_is_byte_identical_across_repeated_runs() {
-    let first = dist_fixture(Variant::Obs, 2);
+    let first = dist_fixture(Variant::Obs, 2, TileConfig::DEFAULT);
     for _ in 0..2 {
-        let again = dist_fixture(Variant::Obs, 2);
+        let again = dist_fixture(Variant::Obs, 2, TileConfig::DEFAULT);
         assert_eq!(first.0, again.0, "estimate drifted between runs");
         assert_eq!(first.1, again.1);
         assert_eq!(first.2, again.2, "counters drifted between runs");

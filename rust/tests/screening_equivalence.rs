@@ -146,9 +146,8 @@ fn screened_cfg() -> ConcordConfig {
         lambda2: 0.1,
         tol: 1e-6,
         max_iter: 60,
-        max_linesearch: 40,
         variant: Variant::Cov,
-        threads: 1,
+        ..Default::default()
     }
 }
 
