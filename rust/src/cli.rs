@@ -107,13 +107,25 @@ COMMANDS:
            [--variant cov|obs|auto]  [--config FILE]  [--artifacts DIR]
            [--screen]  (exact-thresholding screening: split into the
              connected components of {|S_ij| > λ1}; in dist mode the
-             cost model sizes one fabric per component, --ranks is the
-             budget, and explicit --cx/--comega pin every fabric)
+             cost model sizes one fabric per component, --ranks caps
+             each fabric, and explicit --cx/--comega pin every fabric)
            [--screen-cutoff N]  (components ≤ N solve single-node; 4)
+           [--ranks-budget N]  (global concurrent rank budget: screened
+             component fabrics are packed into waves of ≤ N ranks and
+             run at the same time; default --ranks. A fixed budget only
+             reorders launches — results are bit-identical; a budget
+             below a planned fabric shrinks that plan to fit)
+           [--out-omega FILE]  (write the estimate as whitespace-
+             separated rows, full f64 round-trip precision)
   sweep    (λ1, λ2) grid sweep via the coordinator
            --l1 a,b,c --l2 a,b  [--workers N]  + workload options
            [--screen]  (screened sweep: one gram + nested components
              reused across the whole λ grid)
+           [--mode dist]  (requires --screen: every grid point runs the
+             screened distributed solver — per-component fabrics packed
+             into concurrent waves; --ranks/--cx/--comega/--ranks-budget
+             as in solve. --workers is single-node-sweep only: grid
+             points run in order, waves parallelize within each)
   cost     Analytic cost model (Lemmas 3.1–3.5) over replication grid
            --p N --n N --s F --t F --d F --procs P [--threads N]
            [--variant cov|obs]  [--tile mc,kc,nc]  (prices the dense

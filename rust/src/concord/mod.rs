@@ -103,6 +103,18 @@ pub struct ConcordConfig {
     /// starts; like `threads`, it moves wall-clock only — results are
     /// bit-identical at every tile shape. CLI: `--tile mc,kc,nc`.
     pub tile: crate::linalg::TileConfig,
+    /// Global rank budget for the screened solver's concurrent wave
+    /// schedule ([`screened_dist`]): independent component fabrics are
+    /// packed into waves whose rank teams sum to at most this many
+    /// ranks and run at the same time. `0` (the default) means "use the
+    /// fabric's `total_ranks`". A budget below a component's planned
+    /// fabric re-plans it to the cheapest runnable power-of-two that
+    /// fits (which *does* change the component's fabric, like
+    /// passing different `--ranks` would); at any fixed budget the
+    /// wave schedule itself only reorders launches — per-component
+    /// results are bit-identical to running the same plans one after
+    /// another. CLI: `--ranks-budget N`; TOML: `fabric.budget`.
+    pub ranks_budget: usize,
 }
 
 impl Default for ConcordConfig {
@@ -116,6 +128,7 @@ impl Default for ConcordConfig {
             variant: Variant::Auto,
             threads: 1,
             tile: crate::linalg::TileConfig::DEFAULT,
+            ranks_budget: 0,
         }
     }
 }

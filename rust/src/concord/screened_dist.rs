@@ -18,28 +18,45 @@
 //!    estimated from the screened graph's mean degree, whose support is
 //!    a superset of the estimate's by the exact thresholding rule.
 //!    Components at or below `small_cutoff` (or whose plan says `P = 1`)
-//!    run on the single-node path; singletons use the closed form.
+//!    run on the single-node path; singletons use the closed form. The
+//!    fabric plans are then packed into **waves** under the global rank
+//!    budget ([`plan_concurrent`]): within a wave every fabric runs at
+//!    the same time on its own disjoint rank team (launched by the
+//!    deterministic scoped pool), waves run back to back.
 //! 3. **Reassembly**: per-component estimates are scattered into the
 //!    global block-diagonal omega through the shared
 //!    [`ScreenAccum`](super::screening::ScreenAccum) (summed iteration
-//!    statistics), and the per-fabric [`CostSummary`]s are folded
-//!    sequentially into one aggregate bill.
+//!    statistics, accumulated in component order whatever the launch
+//!    order), and the per-fabric [`CostSummary`]s are folded per wave
+//!    with [`CostSummary::merge_concurrent`] (per-wave max of modeled
+//!    and comm time, counters summed) and across waves with
+//!    [`CostSummary::merge_sequential`] — the reported bill is the
+//!    schedule's critical path, not the serial sum.
 //!
 //! Within each component's fabric the rank programs are byte-for-byte
 //! the ones `fit_distributed` runs on the extracted sub-problem, so the
 //! Lemma 3.2/3.3 per-rank message/word counts are untouched by the
 //! composition (`rust/tests/lemma_counts.rs`) and results are invariant
 //! in the node-local thread count (`rust/tests/parallel_determinism.rs`).
+//! Component solves are independent, so at a fixed budget the wave
+//! schedule changes *when* a fabric launches, never what it computes:
+//! per-component omegas and counters are bit-identical to running the
+//! same plans one after another (`rust/tests/concurrent_schedule.rs`,
+//! pinned against [`ScreenedDistOptions::sequential`]).
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::cost::schedule::{plan_component, runnable_on_fabric, FabricPlan};
+use crate::cost::schedule::{
+    plan_component, plan_concurrent, runnable_on_fabric, ConcurrentSchedule, FabricPlan,
+    ScheduledComponent,
+};
 use crate::cost::ProblemShape;
 use crate::dist::Layout1D;
 use crate::linalg::Mat;
 use crate::simnet::{cost::CostSummary, Comm, Counters, Fabric, MachineParams};
+use crate::util::pool::{chunk_ranges, par_map};
 
 use super::screening::{extract_columns, Components, ComponentStat, ScreenAccum, UnionFind};
 use super::{fit_single_node, run_distributed, ConcordConfig, ConcordFit};
@@ -57,6 +74,14 @@ pub struct ScreenedDistOptions {
     /// Override the scheduler with a fixed `(ranks, c_X, c_Ω)` for every
     /// above-cutoff component — equivalence tests and manual control.
     pub fixed: Option<(usize, usize, usize)>,
+    /// Launch the scheduled component fabrics one after another instead
+    /// of wave-concurrently, and bill them with
+    /// [`CostSummary::merge_sequential`]. The *plans* are identical
+    /// either way (the packer still runs, including any budget shrink),
+    /// so results are bit-identical — this is the reference mode the
+    /// concurrent-schedule equivalence tests compare against, and a
+    /// way to read the old serial bill.
+    pub sequential: bool,
 }
 
 impl Default for ScreenedDistOptions {
@@ -66,6 +91,7 @@ impl Default for ScreenedDistOptions {
             machine: MachineParams::default(),
             small_cutoff: 4,
             fixed: None,
+            sequential: false,
         }
     }
 }
@@ -83,6 +109,10 @@ pub struct ComponentSolve {
     /// Rank-indexed counters of this component's fabric (empty on the
     /// single-node path).
     pub counters: Vec<Counters>,
+    /// Which wave of the concurrent schedule launched this component
+    /// (`None`: below-cutoff single-node work that never entered the
+    /// packer, or a sequential-mode run where no waves were launched).
+    pub wave: Option<usize>,
 }
 
 /// Outcome of a screened distributed fit.
@@ -91,16 +121,23 @@ pub struct ScreenedDistFit {
     /// Assembled block-diagonal estimate; iteration statistics are
     /// summed across components (see [`super::screening::ScreenedFit`]).
     pub fit: ConcordFit,
-    /// Aggregate bill under a sequential schedule: the screening pass
-    /// plus every component *fabric*, folded with
-    /// [`CostSummary::merge_sequential`]. Counters are machine facts
-    /// from metered fabrics only — components routed to the single-node
-    /// path run unmetered (exactly like the plain single-node solver),
-    /// so compare screened-vs-unscreened bills on fabric components, or
-    /// consult each solve's `plan.modeled_time` for the model's view.
+    /// Aggregate bill of the screening pass plus every component
+    /// *fabric* under the executed schedule: wave-concurrent by default
+    /// (per-wave [`CostSummary::merge_concurrent`], waves folded with
+    /// [`CostSummary::merge_sequential`] — the critical path), or the
+    /// plain serial fold when [`ScreenedDistOptions::sequential`] is
+    /// set. Counters are machine facts from metered fabrics only —
+    /// components routed to the single-node path run unmetered (exactly
+    /// like the plain single-node solver), so compare
+    /// screened-vs-unscreened bills on fabric components, or consult
+    /// each solve's `plan.modeled_time` for the model's view.
     pub cost: CostSummary,
     /// The screening pass's own share of `cost`.
     pub screen_cost: CostSummary,
+    /// The wave schedule the fabric components ran under (also recorded
+    /// in sequential mode, where it describes the plans but waves were
+    /// launched one component at a time).
+    pub schedule: ConcurrentSchedule,
     pub components: usize,
     pub largest: usize,
     /// One entry per non-singleton component, in component order —
@@ -108,6 +145,19 @@ pub struct ScreenedDistFit {
     pub solves: Vec<ComponentSolve>,
     /// Per-component solver statistics (non-singleton components).
     pub per_component: Vec<ComponentStat>,
+}
+
+impl ScreenedDistFit {
+    /// What the same plans would have billed launched one after another
+    /// (screening pass + serial fold of every fabric) — the baseline
+    /// the concurrent schedule's critical-path `cost` is compared to.
+    pub fn sequential_bill(&self) -> CostSummary {
+        let mut bill = self.screen_cost;
+        for sv in &self.solves {
+            bill.merge_sequential(&sv.cost);
+        }
+        bill
+    }
 }
 
 /// What the screening fabric hands back to the leader.
@@ -198,10 +248,51 @@ fn screen_rank(
     (labels, degrees, diag)
 }
 
-/// Fit with screening on the distributed path: screen on a fabric,
-/// schedule one sized fabric per non-trivial component, solve small
-/// components single-node and singletons in closed form, and reassemble
-/// the global block-diagonal estimate with an aggregated cost bill.
+/// What one scheduled (or below-cutoff) component's solve produced.
+struct SolveOutcome {
+    fit: ConcordFit,
+    plan: FabricPlan,
+    cost: CostSummary,
+    counters: Vec<Counters>,
+    wave: Option<usize>,
+}
+
+/// Solve one component with its final plan: a fabric run for `P > 1`,
+/// the (unmetered) single-node path otherwise — exactly the per-
+/// component body the sequential loop used to run.
+fn solve_component(
+    x: &Mat,
+    idx: &[usize],
+    cfg: &ConcordConfig,
+    plan: FabricPlan,
+    machine: MachineParams,
+    wave: Option<usize>,
+) -> Result<SolveOutcome> {
+    let sub_x = extract_columns(x, idx);
+    if plan.ranks <= 1 {
+        let fit = fit_single_node(&sub_x, cfg)?;
+        Ok(SolveOutcome { fit, plan, cost: CostSummary::default(), counters: Vec::new(), wave })
+    } else {
+        let mut sub_cfg = *cfg;
+        sub_cfg.variant = plan.variant;
+        let run = run_distributed(&sub_x, &sub_cfg, plan.ranks, plan.c_x, plan.c_omega, machine);
+        Ok(SolveOutcome {
+            fit: run.fit,
+            plan: FabricPlan { variant: run.variant, ..plan },
+            cost: run.cost,
+            counters: run.counters,
+            wave,
+        })
+    }
+}
+
+/// Fit with screening on the distributed path: screen on a fabric, give
+/// every non-trivial component a cost-model-sized fabric plan, pack the
+/// plans into waves under the global rank budget, launch each wave's
+/// fabrics concurrently on disjoint rank teams, and reassemble the
+/// global block-diagonal estimate with the schedule's critical-path
+/// bill. Small components solve single-node; singletons use the closed
+/// form.
 pub fn fit_screened_distributed(
     x: &Mat,
     cfg: &ConcordConfig,
@@ -215,6 +306,11 @@ pub fn fit_screened_distributed(
     // plans must see this fit's tile — not whatever a previous fit left
     // behind (and every component is then planned under the same price).
     crate::linalg::tile::install(cfg.tile);
+    // The global concurrent rank budget: waves of component fabrics are
+    // packed under it. Default ("auto", 0) is the fabric's own rank
+    // count, so out of the box a wave may run several planned fabrics
+    // at once but never widens any single one.
+    let budget = if cfg.ranks_budget == 0 { opts.total_ranks } else { cfg.ranks_budget };
     // A pinned fabric must satisfy the same runnability constraints the
     // scheduler enforces; catch it here as a clean error instead of a
     // RepGrid panic inside a spawned rank thread.
@@ -226,6 +322,13 @@ pub fn fit_screened_distributed(
                 cfg.variant
             );
         }
+        // Shrinking would silently violate the pin; refuse instead.
+        if ranks > budget {
+            bail!(
+                "pinned fabric P={ranks} exceeds the concurrent rank budget {budget} \
+                 (raise --ranks-budget or drop the --cx/--comega pin)"
+            );
+        }
     }
     let threads = cfg.threads.max(1);
 
@@ -233,19 +336,30 @@ pub fn fit_screened_distributed(
     let screen = screen_distributed(x, cfg.lambda1, screen_ranks, opts.machine, threads);
     let comps = &screen.components;
 
-    let mut acc = ScreenAccum::new(p);
-    let mut solves = Vec::new();
-    let mut cost = screen.cost;
+    // --- Plan every non-trivial component, then pack the fabric plans
+    // into waves. Components whose plan says P = 1 (small, or priced
+    // out of parallelism) never enter the packer: they run on the
+    // unmetered single-node path exactly as before.
     let mut largest = 0usize;
-
+    let mut single_node: Vec<(usize, FabricPlan)> = Vec::new();
+    let mut candidates: Vec<(usize, FabricPlan, ProblemShape)> = Vec::new();
     for c in 0..comps.count {
         let idx = comps.members(c);
         largest = largest.max(idx.len());
         if idx.len() == 1 {
-            acc.add_singleton(idx[0], screen.diag[idx[0]], cfg.lambda2);
             continue;
         }
-
+        // d estimated from the screened graph's mean degree: its
+        // support contains the estimate's (exact thresholding).
+        let deg_sum: f64 = idx.iter().map(|&i| screen.degrees[i]).sum();
+        let d_est = 1.0 + deg_sum / idx.len() as f64;
+        let shape = ProblemShape {
+            p: idx.len() as f64,
+            n: n as f64,
+            s: 40.0,
+            t: 10.0,
+            d: d_est.min(idx.len() as f64),
+        };
         let plan = if idx.len() <= opts.small_cutoff {
             FabricPlan::single_node(cfg.variant)
         } else if let Some((ranks, c_x, c_omega)) = opts.fixed {
@@ -257,50 +371,82 @@ pub fn fit_screened_distributed(
                 FabricPlan::single_node(cfg.variant)
             }
         } else {
-            // d estimated from the screened graph's mean degree: its
-            // support contains the estimate's (exact thresholding).
-            let deg_sum: f64 = idx.iter().map(|&i| screen.degrees[i]).sum();
-            let d_est = 1.0 + deg_sum / idx.len() as f64;
-            let shape = ProblemShape {
-                p: idx.len() as f64,
-                n: n as f64,
-                s: 40.0,
-                t: 10.0,
-                d: d_est.min(idx.len() as f64),
-            };
             plan_component(&shape, opts.total_ranks, threads, &opts.machine, cfg.variant)
         };
-
-        let sub_x = extract_columns(x, &idx);
         if plan.ranks <= 1 {
-            let sub = fit_single_node(&sub_x, cfg)?;
-            acc.add_component(&idx, &sub);
-            solves.push(ComponentSolve {
-                indices: idx,
-                plan,
-                cost: CostSummary::default(),
-                counters: Vec::new(),
-            });
+            single_node.push((c, plan));
         } else {
-            let mut sub_cfg = *cfg;
-            sub_cfg.variant = plan.variant;
-            let run = run_distributed(
-                &sub_x,
-                &sub_cfg,
-                plan.ranks,
-                plan.c_x,
-                plan.c_omega,
-                opts.machine,
-            );
-            cost.merge_sequential(&run.cost);
-            acc.add_component(&idx, &run.fit);
-            solves.push(ComponentSolve {
-                indices: idx,
-                plan: FabricPlan { variant: run.variant, ..plan },
-                cost: run.cost,
-                counters: run.counters,
-            });
+            candidates.push((c, plan, shape));
         }
+    }
+    let schedule = plan_concurrent(&candidates, budget, threads, &opts.machine);
+
+    // --- Execute. Outcomes land in a component-indexed table so the
+    // reassembly below runs in component order whatever the launch
+    // order was — float accumulation order (objective, trial sums) is a
+    // function of the decomposition only, never of the schedule.
+    let mut outcomes: Vec<Option<Result<SolveOutcome>>> = Vec::new();
+    outcomes.resize_with(comps.count, || None);
+    for &(c, plan) in &single_node {
+        outcomes[c] = Some(solve_component(x, comps.members(c), cfg, plan, opts.machine, None));
+    }
+
+    let mut cost = screen.cost;
+    if opts.sequential {
+        // Reference mode: same plans, launched one component at a time
+        // in component order, serial billing — the pre-wave behavior.
+        let mut entries: Vec<&ScheduledComponent> =
+            schedule.waves.iter().flat_map(|w| w.entries.iter()).collect();
+        entries.sort_by_key(|e| e.component);
+        for e in entries {
+            let idx = comps.members(e.component);
+            let out = solve_component(x, idx, cfg, e.plan, opts.machine, None);
+            if let Ok(ref sv) = out {
+                cost.merge_sequential(&sv.cost);
+            }
+            outcomes[e.component] = Some(out);
+        }
+    } else {
+        for (w, wave) in schedule.waves.iter().enumerate() {
+            // One scoped pool worker per fabric in the wave: disjoint
+            // rank teams running at the same time. `par_map` returns in
+            // entry order, so billing and bookkeeping are
+            // schedule-deterministic.
+            let ranges = chunk_ranges(wave.entries.len(), wave.entries.len(), 1);
+            let outs = par_map(&ranges, |_, start, _| {
+                let e = &wave.entries[start];
+                let idx = comps.members(e.component);
+                (e.component, solve_component(x, idx, cfg, e.plan, opts.machine, Some(w)))
+            });
+            let mut wave_bill = CostSummary::default();
+            for (c, out) in outs {
+                if let Ok(ref sv) = out {
+                    wave_bill.merge_concurrent(&sv.cost);
+                }
+                outcomes[c] = Some(out);
+            }
+            cost.merge_sequential(&wave_bill);
+        }
+    }
+
+    // --- Reassemble in component order.
+    let mut acc = ScreenAccum::new(p);
+    let mut solves = Vec::new();
+    for c in 0..comps.count {
+        let idx = comps.members(c);
+        if idx.len() == 1 {
+            acc.add_singleton(idx[0], screen.diag[idx[0]], cfg.lambda2);
+            continue;
+        }
+        let out = outcomes[c].take().expect("every non-singleton component was solved")?;
+        acc.add_component(idx, &out.fit);
+        solves.push(ComponentSolve {
+            indices: idx.to_vec(),
+            plan: out.plan,
+            cost: out.cost,
+            counters: out.counters,
+            wave: out.wave,
+        });
     }
 
     let screened = acc.finish(comps.count, largest);
@@ -308,6 +454,7 @@ pub fn fit_screened_distributed(
         fit: screened.fit,
         cost,
         screen_cost: screen.cost,
+        schedule,
         components: comps.count,
         largest,
         solves,

@@ -87,38 +87,57 @@ impl UnionFind {
 
 /// A component labeling of `p` variables: `comp[i]` is variable `i`'s
 /// component id, ids densely numbered `0..count` in order of each
-/// component's smallest member.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// component's smallest member. Member lists are bucketed once at
+/// construction, so [`Components::members`] is a slice borrow — not the
+/// O(p) label rescan per component (O(p²) across a fragmented fit) it
+/// used to be.
+#[derive(Debug, Clone)]
 pub struct Components {
     pub comp: Vec<usize>,
     pub count: usize,
+    /// `members[c]` = ascending member indices of component `c`
+    /// (bucketed in [`Components::from_raw_labels`]; always consistent
+    /// with `comp`).
+    members: Vec<Vec<usize>>,
 }
 
+/// Equality is the labeling itself; `members` is derived from it.
+impl PartialEq for Components {
+    fn eq(&self, other: &Self) -> bool {
+        self.comp == other.comp && self.count == other.count
+    }
+}
+
+impl Eq for Components {}
+
 impl Components {
-    /// Renumber arbitrary labels densely by first appearance.
+    /// Renumber arbitrary labels densely by first appearance, bucketing
+    /// each component's member list in the same single pass.
     pub fn from_raw_labels(raw: &[usize]) -> Components {
         let mut map = std::collections::HashMap::new();
         let mut comp = Vec::with_capacity(raw.len());
-        for &r in raw {
+        let mut members: Vec<Vec<usize>> = Vec::new();
+        for (i, &r) in raw.iter().enumerate() {
             let next = map.len();
             let id = *map.entry(r).or_insert(next);
+            if id == members.len() {
+                members.push(Vec::new());
+            }
+            members[id].push(i);
             comp.push(id);
         }
-        Components { comp, count: map.len() }
+        Components { comp, count: map.len(), members }
     }
 
-    /// Ascending member indices of component `c`.
-    pub fn members(&self, c: usize) -> Vec<usize> {
-        (0..self.comp.len()).filter(|&i| self.comp[i] == c).collect()
+    /// Ascending member indices of component `c` (a borrow of the list
+    /// bucketed at construction).
+    pub fn members(&self, c: usize) -> &[usize] {
+        &self.members[c]
     }
 
     /// Member count per component.
     pub fn sizes(&self) -> Vec<usize> {
-        let mut sizes = vec![0usize; self.count];
-        for &c in &self.comp {
-            sizes[c] += 1;
-        }
-        sizes
+        self.members.iter().map(Vec::len).collect()
     }
 
     /// Size of the largest component (the remaining hard work).
@@ -348,9 +367,9 @@ pub fn fit_with_screening_on(
             acc.add_singleton(idx[0], s.get(idx[0], idx[0]), cfg.lambda2);
             continue;
         }
-        let sub_x = extract_columns(x, &idx);
+        let sub_x = extract_columns(x, idx);
         let sub = fit_single_node(&sub_x, cfg)?;
-        acc.add_component(&idx, &sub);
+        acc.add_component(idx, &sub);
     }
     Ok(acc.finish(comps.count, largest))
 }

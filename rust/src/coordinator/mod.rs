@@ -16,8 +16,11 @@ pub mod stability;
 pub mod sweep;
 
 pub use fmri::{run_fmri_study, FmriOutcome, FmriParams, MethodScore};
-pub use stability::{stability_selection, StabilityConfig, StabilityOutcome};
+pub use stability::{
+    stability_selection, stability_selection_dist, StabilityConfig, StabilityDistOutcome,
+    StabilityOutcome,
+};
 pub use sweep::{
-    run_sweep, run_sweep_screened, select_by_density, GridSpec, ScreenedSweepOutcome, SweepJob,
-    SweepOutcome, SweepResult,
+    run_sweep, run_sweep_screened, run_sweep_screened_dist, select_by_density, GridSpec,
+    ScreenedDistSweepOutcome, ScreenedSweepOutcome, SweepJob, SweepOutcome, SweepResult,
 };

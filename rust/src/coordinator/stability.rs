@@ -9,9 +9,12 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 
-use crate::concord::{fit_single_node, ConcordConfig};
+use anyhow::Result;
+
+use crate::concord::{fit_screened_distributed, fit_single_node, ConcordConfig, ScreenedDistOptions};
 use crate::linalg::Mat;
 use crate::rng::Rng;
+use crate::simnet::cost::CostSummary;
 
 /// Stability-selection configuration.
 #[derive(Debug, Clone, Copy)]
@@ -43,6 +46,29 @@ pub struct StabilityOutcome {
     pub subsamples: usize,
 }
 
+/// Row indices of subsample `b`: one reproducible stream per index,
+/// shared by the single-node and distributed paths (so both draw the
+/// *same* subsamples for a given seed).
+fn subsample_rows(n: usize, m: usize, seed: u64, b: usize) -> Vec<usize> {
+    let mut rng = Rng::new(seed ^ (0x5AB1E ^ (b as u64) << 20));
+    rng.sample_indices(n, m)
+}
+
+/// The stable edge set: upper-triangle pairs selected in at least a
+/// `threshold` fraction of subsamples.
+fn stable_edges(freq: &Mat, threshold: f64) -> Vec<(usize, usize)> {
+    let p = freq.rows();
+    let mut edges = Vec::new();
+    for i in 0..p {
+        for j in (i + 1)..p {
+            if freq.get(i, j) >= threshold {
+                edges.push((i, j));
+            }
+        }
+    }
+    edges
+}
+
 /// Run stability selection with the worker pool.
 pub fn stability_selection(
     x: &Mat,
@@ -67,9 +93,7 @@ pub fn stability_selection(
             if b >= scfg.subsamples {
                 break;
             }
-            // Independent, reproducible subsample per index.
-            let mut rng = Rng::new(scfg.seed ^ (0x5AB1E ^ (b as u64) << 20));
-            let rows = rng.sample_indices(n, m);
+            let rows = subsample_rows(n, m, scfg.seed, b);
             let sub = Mat::from_fn(m, p, |i, j| x.get(rows[i], j));
             let fit = fit_single_node(&sub, &base).expect("stability fit");
             // Indicator of selected off-diagonal support.
@@ -94,15 +118,59 @@ pub fn stability_selection(
         h.join().expect("stability worker panicked");
     }
 
-    let mut edges = Vec::new();
-    for i in 0..p {
-        for j in (i + 1)..p {
-            if freq.get(i, j) >= cfg.threshold {
-                edges.push((i, j));
+    let edges = stable_edges(&freq, cfg.threshold);
+    StabilityOutcome { frequency: freq, edges, subsamples: cfg.subsamples }
+}
+
+/// Result of distributed screened stability selection: frequencies and
+/// stable edges as in [`StabilityOutcome`], plus the metered bill.
+#[derive(Debug)]
+pub struct StabilityDistOutcome {
+    /// Selection frequency of each (i, j) pair in [0, 1].
+    pub frequency: Mat,
+    /// Stable edges (frequency ≥ threshold).
+    pub edges: Vec<(usize, usize)>,
+    pub subsamples: usize,
+    /// Aggregate bill: subsample fits run one after another (each fit's
+    /// own bill is already its concurrent-schedule critical path), so
+    /// the per-fit summaries fold with `merge_sequential`.
+    pub cost: CostSummary,
+}
+
+/// Stability selection over the screened **distributed** solver: every
+/// subsample fit runs [`fit_screened_distributed`] — screening fabric,
+/// per-component plans, and the same concurrent wave packer
+/// ([`crate::cost::schedule::plan_concurrent`]) under the rank budget in
+/// `base.ranks_budget`. Subsamples execute in index order (parallelism
+/// comes from each fit's waves, which own the machine-wide rank budget
+/// one fit at a time; `cfg.workers` is ignored here), drawing the same
+/// reproducible row subsamples as [`stability_selection`], so the
+/// outcome is deterministic given the seed.
+pub fn stability_selection_dist(
+    x: &Mat,
+    base: &ConcordConfig,
+    cfg: &StabilityConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<StabilityDistOutcome> {
+    let (n, p) = x.shape();
+    let m = ((n as f64) * cfg.fraction).round().max(2.0) as usize;
+    let mut freq = Mat::zeros(p, p);
+    let mut cost = CostSummary::default();
+    for b in 0..cfg.subsamples {
+        let rows = subsample_rows(n, m, cfg.seed, b);
+        let sub = Mat::from_fn(m, p, |i, j| x.get(rows[i], j));
+        let fit = fit_screened_distributed(&sub, base, opts)?;
+        cost.merge_sequential(&fit.cost);
+        for i in 0..p {
+            for j in 0..p {
+                if i != j && fit.fit.omega.get(i, j) != 0.0 {
+                    freq.set(i, j, freq.get(i, j) + 1.0 / cfg.subsamples as f64);
+                }
             }
         }
     }
-    StabilityOutcome { frequency: freq, edges, subsamples: cfg.subsamples }
+    let edges = stable_edges(&freq, cfg.threshold);
+    Ok(StabilityDistOutcome { frequency: freq, edges, subsamples: cfg.subsamples, cost })
 }
 
 #[cfg(test)]
@@ -161,6 +229,32 @@ mod tests {
         }
         let m = metrics::support_metrics(&est, &prob.omega0, 0.5);
         assert!(m.ppv > 0.9, "stability PPV {}", m.ppv);
+    }
+
+    /// The distributed screened variant is deterministic given the
+    /// seed, returns probabilities, and meters the screening fabrics it
+    /// ran (the screening pass alone guarantees a nonzero bill).
+    #[test]
+    fn dist_variant_is_deterministic_and_metered() {
+        use crate::simnet::MachineParams;
+        let mut rng = Rng::new(4);
+        let prob = gen::chain_problem(10, 120, &mut rng);
+        let cfg = StabilityConfig { subsamples: 4, workers: 1, seed: 11, ..Default::default() };
+        // β_mem = 0: planning must not race other tests' tile installs.
+        let machine = MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() };
+        let opts = ScreenedDistOptions { total_ranks: 4, machine, ..Default::default() };
+        let a = stability_selection_dist(&prob.x, &base_cfg(), &cfg, &opts).unwrap();
+        let b = stability_selection_dist(&prob.x, &base_cfg(), &cfg, &opts).unwrap();
+        assert!(a.frequency.max_abs_diff(&b.frequency) == 0.0);
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.cost.total, b.cost.total);
+        assert!(a.cost.total.messages > 0, "screening passes must be metered");
+        for i in 0..10 {
+            for j in 0..10 {
+                let f = a.frequency.get(i, j);
+                assert!((0.0..=1.0 + 1e-12).contains(&f));
+            }
+        }
     }
 
     #[test]

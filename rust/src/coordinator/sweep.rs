@@ -11,10 +11,15 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::concord::screening::{fit_with_screening_on, nested_components, Components};
-use crate::concord::{fit_single_node, ConcordConfig, ConcordFit};
+use crate::concord::{
+    fit_screened_distributed, fit_single_node, ConcordConfig, ConcordFit, ScreenedDistOptions,
+};
 use crate::linalg::Mat;
 use crate::runtime::native;
+use crate::simnet::cost::CostSummary;
 
 /// A (λ₁, λ₂) grid specification.
 #[derive(Debug, Clone)]
@@ -67,6 +72,14 @@ pub struct SweepOutcome {
     pub workers: usize,
 }
 
+/// Off-diagonal density of an estimate in [0, 1] (the quantity model
+/// selection targets); the `max(1)` guards the p ≤ 1 degenerate grid.
+fn offdiag_density(omega: &Mat) -> f64 {
+    let p = omega.rows();
+    let offdiag_nnz = omega.nnz().saturating_sub(p);
+    offdiag_nnz as f64 / (p * p - p).max(1) as f64
+}
+
 /// The shared leader/worker pool: `workers` threads claim jobs off an
 /// atomic cursor, fit them with `fit_job`, and results come back sorted
 /// by job id — deterministic regardless of scheduling. Both the plain
@@ -96,9 +109,7 @@ fn sweep_pool(
                 }
                 let job = jobs[idx];
                 let fit = (*fit_job)(&job);
-                let p = fit.omega.rows();
-                let offdiag_nnz = fit.omega.nnz().saturating_sub(p);
-                let density = offdiag_nnz as f64 / (p * p - p).max(1) as f64;
+                let density = offdiag_density(&fit.omega);
                 tx.send(SweepResult { job, fit, density, worker }).expect("leader gone");
             }
         }));
@@ -180,6 +191,55 @@ pub fn run_sweep_screened(
             .fit
     });
     ScreenedSweepOutcome { results, workers, components_per_l1 }
+}
+
+/// Aggregate outcome of a screened *distributed* sweep.
+#[derive(Debug)]
+pub struct ScreenedDistSweepOutcome {
+    /// Results in grid order (the points run in job order).
+    pub results: Vec<SweepResult>,
+    /// Each grid point's own concurrent-schedule bill (screening pass +
+    /// critical path of its component waves), aligned with `results`.
+    pub per_point_cost: Vec<CostSummary>,
+    /// The whole sweep's bill: grid points run one after another, so
+    /// their concurrent bills fold with `merge_sequential`.
+    pub cost: CostSummary,
+    /// Component count at each grid point, aligned with `results`.
+    pub components: Vec<usize>,
+}
+
+/// The screened sweep on the distributed path: every (λ₁, λ₂) grid
+/// point runs [`fit_screened_distributed`] — the same per-component
+/// planner and wave packer ([`crate::cost::schedule::plan_concurrent`])
+/// the single-point solver uses, with the rank budget threaded through
+/// `base.ranks_budget`. Grid points execute in job order (the
+/// machine-wide rank budget belongs to one point at a time; intra-point
+/// parallelism comes from the waves), so results are deterministic and
+/// each point's estimate is exactly the single-point screened
+/// distributed fit. Each point runs — and is billed for — its own
+/// distributed screening pass; amortizing one gram + nested components
+/// across the grid the way [`run_sweep_screened`] does is a known
+/// follow-up (see ROADMAP).
+pub fn run_sweep_screened_dist(
+    x: &Mat,
+    grid: &GridSpec,
+    base: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<ScreenedDistSweepOutcome> {
+    let mut results = Vec::new();
+    let mut per_point_cost = Vec::new();
+    let mut components = Vec::new();
+    let mut cost = CostSummary::default();
+    for job in grid.jobs(base) {
+        let out = fit_screened_distributed(x, &job.cfg, opts)?;
+        cost.merge_sequential(&out.cost);
+        per_point_cost.push(out.cost);
+        components.push(out.components);
+        let fit = out.fit;
+        let density = offdiag_density(&fit.omega);
+        results.push(SweepResult { job, fit, density, worker: 0 });
+    }
+    Ok(ScreenedDistSweepOutcome { results, per_point_cost, cost, components })
 }
 
 /// Model selection: the result whose off-diagonal density is closest to
@@ -294,6 +354,37 @@ mod tests {
         // Thresholds are nested: a larger λ₁ can only split further.
         assert!(a.components_per_l1[0] >= a.components_per_l1[2]);
         assert!(a.components_per_l1[2] >= a.components_per_l1[1]);
+    }
+
+    /// The screened distributed sweep is the single-point screened
+    /// distributed solver run per grid point: bit-identical estimates,
+    /// one concurrent-schedule bill per point, bills folded serially.
+    #[test]
+    fn screened_dist_sweep_matches_per_point_solver() {
+        use crate::simnet::MachineParams;
+        let x = small_problem(9);
+        let grid = GridSpec { lambda1: vec![0.2, 0.5], lambda2: vec![0.0, 0.1] };
+        let base = base_cfg();
+        // β_mem = 0: planning must not race other tests' tile installs.
+        let machine = MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() };
+        let opts = ScreenedDistOptions { total_ranks: 4, machine, ..Default::default() };
+        let out = run_sweep_screened_dist(&x, &grid, &base, &opts).unwrap();
+        assert_eq!(out.results.len(), 4);
+        assert_eq!(out.per_point_cost.len(), 4);
+        assert_eq!(out.components.len(), 4);
+        let mut folded = crate::simnet::cost::CostSummary::default();
+        for (r, pc) in out.results.iter().zip(&out.per_point_cost) {
+            let direct = crate::concord::fit_screened_distributed(&x, &r.job.cfg, &opts).unwrap();
+            assert!(
+                r.fit.omega.max_abs_diff(&direct.fit.omega) == 0.0,
+                "job {} differs from the single-point solver",
+                r.job.id
+            );
+            assert_eq!(pc.total, direct.cost.total, "job {} bill drifted", r.job.id);
+            folded.merge_sequential(pc);
+        }
+        assert_eq!(folded.total, out.cost.total);
+        assert!((folded.time - out.cost.time).abs() < 1e-15);
     }
 
     /// Property: for random grids and worker counts, the sweep completes

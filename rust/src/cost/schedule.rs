@@ -10,6 +10,19 @@
 //! components come back with `ranks == 1` — the model itself says the
 //! communication would cost more than the parallelism buys, so they run
 //! on the single-node path.
+//!
+//! On top of the per-component choice sits the **wave packer**
+//! ([`plan_concurrent`]): independent component fabrics are packed onto
+//! a global rank budget so they run *concurrently* instead of one after
+//! another — the communication-avoiding play the Lemma 3.5 model
+//! enables, and the block-solver trick of exploiting independent
+//! subproblems. Components are taken longest-processing-time first
+//! (LPT on `modeled_time`) and placed into the first wave with enough
+//! rank headroom; a component whose plan is wider than the budget is
+//! first re-planned under the narrower cap to the cheapest runnable
+//! power-of-two that fits ([`shrink_to_budget`]). The resulting
+//! schedule's makespan is the sum of per-wave maxima — what
+//! `CostSummary::merge_concurrent` bills.
 
 use crate::concord::Variant;
 use crate::simnet::MachineParams;
@@ -70,42 +83,184 @@ pub fn plan_component(
     machine: &MachineParams,
     variant: Variant,
 ) -> FabricPlan {
+    let size = (shape.p as usize).max(1);
+    let mut best: Option<FabricPlan> = None;
+    let mut p_ranks = 1usize;
+    while p_ranks <= max_ranks.max(1) && p_ranks <= size {
+        if let Some(cand) = plan_at_ranks(shape, p_ranks, threads, machine, variant) {
+            if best.map(|b| cand.modeled_time < b.modeled_time).unwrap_or(true) {
+                best = Some(cand);
+            }
+        }
+        p_ranks *= 2;
+    }
+    best.expect("P = 1, c_X = c_Ω = 1 is always runnable")
+}
+
+/// The cheapest runnable plan at *exactly* `p_ranks` ranks: search every
+/// runnable replication pair (and both concrete variants for
+/// [`Variant::Auto`]) at the fixed rank count. Ties prefer lower
+/// replication (the search visits `(c_X, c_Ω)` in ascending order and
+/// keeps strict improvements only).
+pub fn plan_at_ranks(
+    shape: &ProblemShape,
+    p_ranks: usize,
+    threads: usize,
+    machine: &MachineParams,
+    variant: Variant,
+) -> Option<FabricPlan> {
     let variants: &[Variant] = match variant {
         Variant::Auto => &[Variant::Cov, Variant::Obs],
         Variant::Cov => &[Variant::Cov],
         Variant::Obs => &[Variant::Obs],
     };
-    let size = (shape.p as usize).max(1);
     let threads = threads.max(1);
     let mut best: Option<FabricPlan> = None;
-    let mut p_ranks = 1usize;
-    while p_ranks <= max_ranks.max(1) && p_ranks <= size {
-        let mut c_x = 1usize;
-        while c_x <= p_ranks {
-            let mut c_o = 1usize;
-            while c_x * c_o <= p_ranks {
-                for &v in variants {
-                    if runnable_on_fabric(p_ranks, c_x, c_o, v) {
-                        let rep = ReplicationChoice { p_procs: p_ranks, c_x, c_omega: c_o };
-                        let time = price(&evaluate(shape, &rep, v), p_ranks, threads, machine);
-                        if best.map(|b| time < b.modeled_time).unwrap_or(true) {
-                            best = Some(FabricPlan {
-                                ranks: p_ranks,
-                                c_x,
-                                c_omega: c_o,
-                                variant: v,
-                                modeled_time: time,
-                            });
-                        }
+    let mut c_x = 1usize;
+    while c_x <= p_ranks {
+        let mut c_o = 1usize;
+        while c_x * c_o <= p_ranks {
+            for &v in variants {
+                if runnable_on_fabric(p_ranks, c_x, c_o, v) {
+                    let rep = ReplicationChoice { p_procs: p_ranks, c_x, c_omega: c_o };
+                    let time = price(&evaluate(shape, &rep, v), p_ranks, threads, machine);
+                    if best.map(|b| time < b.modeled_time).unwrap_or(true) {
+                        best = Some(FabricPlan {
+                            ranks: p_ranks,
+                            c_x,
+                            c_omega: c_o,
+                            variant: v,
+                            modeled_time: time,
+                        });
                     }
                 }
-                c_o *= 2;
             }
-            c_x *= 2;
+            c_o *= 2;
         }
-        p_ranks *= 2;
+        c_x *= 2;
     }
-    best.expect("P = 1, c_X = c_Ω = 1 is always runnable")
+    best
+}
+
+/// Shrink a plan that is wider than the wave packer's rank budget: the
+/// full [`plan_component`] search is re-run under the narrower cap, so
+/// the component gets the *cheapest* runnable power-of-two `P ≤ budget`
+/// (best replication pair included, re-priced), not merely its old
+/// shape truncated. The variant stays the one the full-width planner
+/// already chose — shrinking narrows the fabric, it does not flip the
+/// algorithm. `(1, 1, 1)` is always runnable, so at worst the plan
+/// degenerates to the single-rank plan, which the executor routes to
+/// the single-node path.
+pub fn shrink_to_budget(
+    shape: &ProblemShape,
+    plan: FabricPlan,
+    budget: usize,
+    threads: usize,
+    machine: &MachineParams,
+) -> FabricPlan {
+    let budget = budget.max(1);
+    if plan.ranks <= budget {
+        return plan;
+    }
+    plan_component(shape, budget, threads, machine, plan.variant)
+}
+
+/// One component's slot in a concurrent schedule: which component, and
+/// the (possibly budget-shrunk) fabric plan it will actually run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduledComponent {
+    /// Caller-side component id (index into the screened decomposition).
+    pub component: usize,
+    pub plan: FabricPlan,
+}
+
+/// One wave: a set of component fabrics that run at the same time on
+/// disjoint rank teams. Entries are in LPT order, so the first entry is
+/// the wave's critical path.
+#[derive(Debug, Clone, Default)]
+pub struct Wave {
+    pub entries: Vec<ScheduledComponent>,
+}
+
+impl Wave {
+    /// Ranks this wave occupies (the sum of its fabrics' teams).
+    pub fn ranks(&self) -> usize {
+        self.entries.iter().map(|e| e.plan.ranks).sum()
+    }
+
+    /// Modeled time of the wave: the max over its concurrent fabrics.
+    pub fn modeled_time(&self) -> f64 {
+        self.entries.iter().map(|e| e.plan.modeled_time).fold(0.0, f64::max)
+    }
+}
+
+/// A wave-based concurrent schedule over a global rank budget.
+#[derive(Debug, Clone, Default)]
+pub struct ConcurrentSchedule {
+    /// Waves in launch order; within a wave everything runs at once.
+    pub waves: Vec<Wave>,
+    /// The rank budget the waves were packed under.
+    pub budget: usize,
+}
+
+impl ConcurrentSchedule {
+    /// Modeled makespan: waves run back to back, so the schedule's
+    /// critical path is the sum of per-wave maxima. Equals the serial
+    /// sum of component times exactly when every wave holds one
+    /// component; strictly less whenever any wave packs two or more.
+    pub fn makespan(&self) -> f64 {
+        self.waves.iter().map(Wave::modeled_time).sum()
+    }
+
+    /// The serial bill the same plans would cost one after another.
+    pub fn sequential_time(&self) -> f64 {
+        self.waves.iter().flat_map(|w| w.entries.iter()).map(|e| e.plan.modeled_time).sum()
+    }
+
+    /// Total scheduled components across all waves.
+    pub fn components(&self) -> usize {
+        self.waves.iter().map(|w| w.entries.len()).sum()
+    }
+}
+
+/// Pack independent component fabrics into waves under a global rank
+/// budget, minimizing the modeled makespan greedily: components are
+/// sorted longest-processing-time first (ties broken by component id,
+/// so the schedule is a pure function of its inputs) and each is placed
+/// into the first wave with enough rank headroom — because earlier
+/// entries are never shorter, joining a wave never lengthens it, so
+/// first-fit is makespan-optimal for the wave set the scan builds. A
+/// plan wider than the budget is first re-planned to the cheapest
+/// runnable power-of-two that fits ([`shrink_to_budget`]); every wave
+/// therefore occupies at most `budget` ranks.
+///
+/// Each input is `(component id, plan, shape)` — the shape is only
+/// consulted when a plan must be shrunk and re-priced.
+pub fn plan_concurrent(
+    components: &[(usize, FabricPlan, ProblemShape)],
+    budget: usize,
+    threads: usize,
+    machine: &MachineParams,
+) -> ConcurrentSchedule {
+    let budget = budget.max(1);
+    let mut items: Vec<ScheduledComponent> = components
+        .iter()
+        .map(|&(component, plan, shape)| ScheduledComponent {
+            component,
+            plan: shrink_to_budget(&shape, plan, budget, threads, machine),
+        })
+        .collect();
+    items.sort_by(|a, b| {
+        b.plan.modeled_time.total_cmp(&a.plan.modeled_time).then(a.component.cmp(&b.component))
+    });
+    let mut waves: Vec<Wave> = Vec::new();
+    for item in items {
+        match waves.iter_mut().find(|w| w.ranks() + item.plan.ranks <= budget) {
+            Some(wave) => wave.entries.push(item),
+            None => waves.push(Wave { entries: vec![item] }),
+        }
+    }
+    ConcurrentSchedule { waves, budget }
 }
 
 /// Price one cell. At P = 1 nothing is sent — the closed forms'
@@ -191,5 +346,102 @@ mod tests {
         let t1 = plan_component(&shape, 32, 1, &m, Variant::Obs);
         let t8 = plan_component(&shape, 32, 8, &m, Variant::Obs);
         assert!(t8.modeled_time <= t1.modeled_time);
+    }
+
+    fn shapes(ps: &[f64]) -> Vec<(usize, FabricPlan, ProblemShape)> {
+        let m = machine();
+        ps.iter()
+            .enumerate()
+            .map(|(c, &p)| {
+                let shape = ProblemShape { p, n: 80.0, s: 30.0, t: 8.0, d: 6.0 };
+                (c, plan_component(&shape, 16, 1, &m, Variant::Obs), shape)
+            })
+            .collect()
+    }
+
+    /// Every component appears in exactly one wave, no wave exceeds the
+    /// budget, and entries within a wave are LPT-ordered.
+    #[test]
+    fn waves_respect_budget_and_cover_components() {
+        let comps = shapes(&[6_000.0, 12_000.0, 3_000.0, 9_000.0, 500.0]);
+        for budget in [1usize, 2, 4, 8, 16, 64] {
+            let sched = plan_concurrent(&comps, budget, 1, &machine());
+            let mut seen: Vec<usize> = sched
+                .waves
+                .iter()
+                .flat_map(|w| w.entries.iter().map(|e| e.component))
+                .collect();
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 1, 2, 3, 4], "budget {budget}");
+            for w in &sched.waves {
+                assert!(w.ranks() <= budget, "budget {budget}: wave uses {} ranks", w.ranks());
+                for pair in w.entries.windows(2) {
+                    assert!(
+                        pair[0].plan.modeled_time >= pair[1].plan.modeled_time,
+                        "budget {budget}: wave entries not LPT-ordered"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The concurrent makespan never exceeds the serial sum, matches it
+    /// exactly when the budget forces one component per wave, and
+    /// strictly undercuts it as soon as any wave packs two fabrics.
+    #[test]
+    fn makespan_undercuts_serial_sum() {
+        let comps = shapes(&[8_000.0, 8_000.0, 8_000.0, 8_000.0]);
+        let m = machine();
+        let wide = plan_concurrent(&comps, 64, 1, &m);
+        let serial = wide.sequential_time();
+        assert!(wide.makespan() <= serial + 1e-15);
+        assert!(
+            wide.waves.iter().any(|w| w.entries.len() >= 2),
+            "64-rank budget must pack at least one wave"
+        );
+        assert!(wide.makespan() < serial, "packing must shorten the critical path");
+
+        // A budget of one rank degenerates to one (single-rank)
+        // component per wave: makespan == serial sum of the shrunk plans.
+        let narrow = plan_concurrent(&comps, 1, 1, &m);
+        assert!(narrow.waves.iter().all(|w| w.entries.len() == 1));
+        assert!((narrow.makespan() - narrow.sequential_time()).abs() < 1e-15);
+    }
+
+    /// Plans wider than the budget are shrunk to a runnable power-of-two
+    /// that fits, never dropped and never over budget.
+    #[test]
+    fn oversized_plans_shrink_to_fit() {
+        let shape = ProblemShape { p: 40_000.0, n: 100.0, s: 40.0, t: 10.0, d: 10.0 };
+        let m = machine();
+        let plan = plan_component(&shape, 64, 1, &m, Variant::Obs);
+        assert!(plan.ranks > 4, "fixture must want a wide fabric");
+        for budget in [1usize, 2, 4, 5, 7] {
+            let shrunk = shrink_to_budget(&shape, plan, budget, 1, &m);
+            assert!(shrunk.ranks <= budget, "budget {budget}");
+            assert!(shrunk.ranks.is_power_of_two());
+            assert!(runnable_on_fabric(shrunk.ranks, shrunk.c_x, shrunk.c_omega, shrunk.variant));
+            assert!(
+                shrunk.modeled_time >= plan.modeled_time,
+                "budget {budget}: fewer ranks cannot be modeled faster"
+            );
+        }
+        // Plans already inside the budget pass through untouched.
+        assert_eq!(shrink_to_budget(&shape, plan, plan.ranks, 1, &m), plan);
+    }
+
+    /// The schedule is a pure function of its inputs: identical calls
+    /// give identical waves (LPT ties broken by component id).
+    #[test]
+    fn packing_is_deterministic() {
+        let comps = shapes(&[4_000.0, 4_000.0, 4_000.0, 2_000.0]);
+        let m = machine();
+        let a = plan_concurrent(&comps, 8, 2, &m);
+        let b = plan_concurrent(&comps, 8, 2, &m);
+        assert_eq!(a.waves.len(), b.waves.len());
+        for (wa, wb) in a.waves.iter().zip(&b.waves) {
+            assert_eq!(wa.entries, wb.entries);
+        }
+        assert_eq!(a.components(), 4);
     }
 }

@@ -95,7 +95,52 @@ fn solver_config(args: &Args, cfg: &Config) -> Result<ConcordConfig> {
         },
         threads: node_threads(args, cfg)?,
         tile: tile_config(args, cfg)?,
+        // Global concurrent rank budget for screened distributed
+        // solving (0 = "use --ranks"): CLI --ranks-budget, TOML
+        // fabric.budget.
+        ranks_budget: args.usize_or("ranks-budget", cfg.usize_or("fabric.budget", 0)?)?,
     })
+}
+
+/// Screened-distributed options shared by `solve --mode dist --screen`
+/// and `sweep --mode dist --screen`: `--ranks` caps the screening
+/// fabric and every component fabric, and explicit replication — CLI
+/// `--cx`/`--comega` or the config file's `fabric.cx`/`fabric.comega` —
+/// pins every component fabric; otherwise the cost model sizes each
+/// component's fabric on its own.
+fn screened_dist_options(args: &Args, file_cfg: &Config) -> Result<ScreenedDistOptions> {
+    let ranks = args.usize_or("ranks", file_cfg.usize_or("fabric.ranks", 8)?)?;
+    let c_x = args.usize_or("cx", file_cfg.usize_or("fabric.cx", 1)?)?;
+    let c_o = args.usize_or("comega", file_cfg.usize_or("fabric.comega", 1)?)?;
+    let pinned = args.has("cx")
+        || args.has("comega")
+        || file_cfg.get("fabric.cx").is_some()
+        || file_cfg.get("fabric.comega").is_some();
+    Ok(ScreenedDistOptions {
+        total_ranks: ranks,
+        machine: MachineParams::default(),
+        small_cutoff: args.usize_or("screen-cutoff", file_cfg.usize_or("screen.cutoff", 4)?)?,
+        fixed: if pinned { Some((ranks, c_x, c_o)) } else { None },
+        sequential: false,
+    })
+}
+
+/// Write an estimate as whitespace-separated rows with full f64
+/// round-trip precision (`--out-omega`): deterministic bytes, so two
+/// runs that claim bit-identical results can be compared with `cmp`.
+fn write_omega(path: &str, omega: &Mat) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut text = String::new();
+    for i in 0..omega.rows() {
+        for j in 0..omega.cols() {
+            if j > 0 {
+                text.push(' ');
+            }
+            write!(text, "{:.17e}", omega.get(i, j)).expect("string write");
+        }
+        text.push('\n');
+    }
+    std::fs::write(path, text).map_err(|e| anyhow!("writing omega to {path}: {e}"))
 }
 
 /// The kernel layer's cache-blocking shape: `--tile mc,kc,nc`, else the
@@ -164,25 +209,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
             (fit, String::new())
         }
         "dist" if screen => {
-            let ranks = args.usize_or("ranks", file_cfg.usize_or("fabric.ranks", 8)?)?;
-            let c_x = args.usize_or("cx", file_cfg.usize_or("fabric.cx", 1)?)?;
-            let c_o = args.usize_or("comega", file_cfg.usize_or("fabric.comega", 1)?)?;
-            // Explicit replication — CLI --cx/--comega or the config
-            // file's fabric.cx/fabric.comega — pins every component
-            // fabric; otherwise the cost model sizes each component's
-            // fabric on its own.
-            let pinned = args.has("cx")
-                || args.has("comega")
-                || file_cfg.get("fabric.cx").is_some()
-                || file_cfg.get("fabric.comega").is_some();
-            let fixed = if pinned { Some((ranks, c_x, c_o)) } else { None };
-            let opts = ScreenedDistOptions {
-                total_ranks: ranks,
-                machine: MachineParams::default(),
-                small_cutoff: args
-                    .usize_or("screen-cutoff", file_cfg.usize_or("screen.cutoff", 4)?)?,
-                fixed,
-            };
+            let opts = screened_dist_options(args, &file_cfg)?;
             let out = fit_screened_distributed(&problem.x, &cfg, &opts)?;
             println!(
                 "screening: {} components (largest {}) at λ1={}; \
@@ -198,9 +225,10 @@ fn cmd_solve(args: &Args) -> Result<()> {
                         sv.indices.len()
                     );
                 } else {
+                    let wave = sv.wave.map(|w| format!("wave {w}")).unwrap_or_default();
                     println!(
                         "  component p={:<6} → P={} c_X={} c_Ω={} {:?}  \
-                         modeled {:.4}s (comm {:.4}s)",
+                         modeled {:.4}s (comm {:.4}s)  {wave}",
                         sv.indices.len(),
                         sv.plan.ranks,
                         sv.plan.c_x,
@@ -211,16 +239,28 @@ fn cmd_solve(args: &Args) -> Result<()> {
                     );
                 }
             }
+            if !out.schedule.waves.is_empty() {
+                println!(
+                    "schedule: {} wave(s) under rank budget {} — modeled makespan \
+                     {:.4}s vs {:.4}s sequential",
+                    out.schedule.waves.len(),
+                    out.schedule.budget,
+                    out.schedule.makespan(),
+                    out.schedule.sequential_time()
+                );
+            }
             let s = out.cost;
+            let seq = out.sequential_bill();
             let note = if unmetered > 0 {
                 format!("  [{unmetered} single-node component(s) excluded]")
             } else {
                 String::new()
             };
             let line = format!(
-                "screened aggregate: modeled time {:.4}s (comm {:.4}s)  \
+                "screened aggregate (concurrent critical path): modeled time {:.4}s \
+                 (comm {:.4}s; sequential bill {:.4}s)  \
                  max/rank: {} msgs, {} words{note}",
-                s.time, s.comm_time, s.max_per_rank.messages, s.max_per_rank.words
+                s.time, s.comm_time, seq.time, s.max_per_rank.messages, s.max_per_rank.words
             );
             (out.fit, line)
         }
@@ -263,6 +303,11 @@ fn cmd_solve(args: &Args) -> Result<()> {
     if !cost_line.is_empty() {
         println!("{cost_line}");
     }
+    let out_omega = args.str_or("out-omega", "");
+    if !out_omega.is_empty() {
+        write_omega(&out_omega, &fit.omega)?;
+        println!("wrote omega to {out_omega}");
+    }
     Ok(())
 }
 
@@ -276,7 +321,35 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     };
     let workers = args.usize_or("workers", 4)?;
     let screen = args.has("screen") || file_cfg.bool_or("solver.screen", false)?;
-    let results = if screen {
+    let mode = args.str_or("mode", "single");
+    if mode != "single" && mode != "dist" {
+        return Err(anyhow!("unknown --mode {mode:?} (single|dist)"));
+    }
+    let results = if mode == "dist" {
+        if !screen {
+            return Err(anyhow!(
+                "sweep --mode dist requires --screen (the distributed sweep is the screened one)"
+            ));
+        }
+        if args.has("workers") {
+            eprintln!(
+                "note: --workers applies to the single-node sweep; the dist sweep runs \
+                 grid points in order (parallelism comes from each point's waves)"
+            );
+        }
+        let opts = screened_dist_options(args, &file_cfg)?;
+        let out =
+            hpconcord::coordinator::run_sweep_screened_dist(&problem.x, &grid, &base, &opts)?;
+        let comps: Vec<String> = out.components.iter().map(|c| c.to_string()).collect();
+        println!(
+            "screened dist sweep: components per point = [{}]; aggregate modeled \
+             time {:.4}s (comm {:.4}s)",
+            comps.join(", "),
+            out.cost.time,
+            out.cost.comm_time
+        );
+        out.results
+    } else if screen {
         let out = run_sweep_screened(&problem.x, &grid, &base, workers);
         let comps: Vec<String> = out.components_per_l1.iter().map(|c| c.to_string()).collect();
         println!("screened sweep: components per λ1 = [{}]", comps.join(", "));

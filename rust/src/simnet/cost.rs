@@ -139,6 +139,22 @@ impl CostSummary {
         self.max_per_rank.max_elementwise(&other.max_per_rank);
     }
 
+    /// Fold another fabric's summary into this one under a *concurrent*
+    /// schedule (both fabrics run at the same time on disjoint rank
+    /// teams): critical-path times take the max — the wave finishes
+    /// when its slowest fabric does — while totals still add (they are
+    /// machine facts, independent of when the work ran) and per-rank
+    /// maxima take the component-wise max. Folding a whole wave this
+    /// way and then folding waves with
+    /// [`merge_sequential`](CostSummary::merge_sequential) makes the
+    /// reported bill the schedule's critical path, not the serial sum.
+    pub fn merge_concurrent(&mut self, other: &CostSummary) {
+        self.time = self.time.max(other.time);
+        self.comm_time = self.comm_time.max(other.comm_time);
+        self.total.add(&other.total);
+        self.max_per_rank.max_elementwise(&other.max_per_rank);
+    }
+
     pub fn from_counters(per_rank: &[Counters], m: &MachineParams) -> Self {
         let mut s = CostSummary::default();
         for c in per_rank {
@@ -220,6 +236,37 @@ mod tests {
         assert_eq!(s.max_per_rank.messages, 4);
         assert_eq!(s.max_per_rank.words, 9);
         assert_eq!(s.max_per_rank.flops_sparse, 3);
+    }
+
+    #[test]
+    fn merge_concurrent_maxes_times_adds_totals() {
+        let m = MachineParams {
+            alpha: 1.0,
+            beta: 0.0,
+            gamma_dense: 0.0,
+            gamma_sparse: 0.0,
+            beta_mem: 0.0,
+        };
+        let a = CostSummary::from_counters(
+            &[Counters { messages: 4, words: 1, flops_dense: 2, flops_sparse: 0 }],
+            &m,
+        );
+        let b = CostSummary::from_counters(
+            &[Counters { messages: 1, words: 9, flops_dense: 5, flops_sparse: 3 }],
+            &m,
+        );
+        let mut c = a;
+        c.merge_concurrent(&b);
+        assert_eq!(c.time, a.time.max(b.time));
+        assert_eq!(c.comm_time, a.comm_time.max(b.comm_time));
+        // Totals are machine facts: identical to the sequential fold.
+        let mut s = a;
+        s.merge_sequential(&b);
+        assert_eq!(c.total, s.total);
+        assert_eq!(c.max_per_rank, s.max_per_rank);
+        // And the concurrent critical path never exceeds the serial sum.
+        assert!(c.time <= s.time);
+        assert!(c.comm_time <= s.comm_time);
     }
 
     #[test]

@@ -357,6 +357,7 @@ fn fit_screened_distributed_is_byte_identical_across_thread_counts() {
             machine: MachineParams::edison_like(),
             small_cutoff: 4,
             fixed: Some((4, 2, 2)),
+            sequential: false,
         };
         fit_screened_distributed(&x, &cfg, &opts).unwrap()
     };
@@ -384,6 +385,48 @@ fn fit_screened_distributed_is_byte_identical_across_thread_counts() {
         for (a, b) in out.solves.iter().zip(&base.solves) {
             assert_eq!(a.indices, b.indices);
             assert_eq!(a.counters, b.counters, "per-rank counters changed");
+        }
+    }
+}
+
+/// With pinned plans, the whole (rank budget × thread count × launch
+/// order) grid collapses to one bit pattern: the wave schedule and the
+/// node-local pool are both pure launch-order knobs.
+#[test]
+fn fit_screened_distributed_is_byte_identical_across_budgets_and_threads() {
+    let x = disjoint_blocks(&[12, 12], 300, 0x5C3);
+    let run = |threads: usize, budget: usize, sequential: bool| {
+        let cfg = ConcordConfig { ranks_budget: budget, ..screened_base_cfg(threads) };
+        let opts = ScreenedDistOptions {
+            total_ranks: 8,
+            machine: MachineParams::edison_like(),
+            small_cutoff: 4,
+            fixed: Some((4, 2, 2)),
+            sequential,
+        };
+        fit_screened_distributed(&x, &cfg, &opts).unwrap()
+    };
+    let base = run(1, 4, true);
+    assert_eq!(base.solves.len(), 2);
+    // Budget 4 serializes the two pinned 4-rank fabrics into two waves;
+    // budget 8 packs them into one. Either way, at any thread count,
+    // results and counters are those of the sequential reference.
+    for budget in [4usize, 8] {
+        for threads in [1usize, 2, 4] {
+            for sequential in [false, true] {
+                let out = run(threads, budget, sequential);
+                let tag = format!("budget={budget} threads={threads} sequential={sequential}");
+                assert_eq!(
+                    bits(&out.fit.omega),
+                    bits(&base.fit.omega),
+                    "{tag}: omega not byte-identical"
+                );
+                assert_eq!(out.fit.iterations, base.fit.iterations, "{tag}");
+                assert_eq!(out.cost.total, base.cost.total, "{tag}: counters moved");
+                for (a, b) in out.solves.iter().zip(&base.solves) {
+                    assert_eq!(a.counters, b.counters, "{tag}: per-rank counters moved");
+                }
+            }
         }
     }
 }

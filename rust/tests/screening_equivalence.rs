@@ -176,6 +176,7 @@ fn connected_problem_screened_dist_identical_to_unscreened() {
         machine,
         small_cutoff: 0,
         fixed: Some((4, 2, 2)),
+        sequential: false,
     };
     let screened = fit_screened_distributed(&problem.x, &cfg, &opts).unwrap();
 
@@ -209,6 +210,7 @@ fn k_block_problem_runs_k_smaller_fabrics() {
         machine,
         small_cutoff: 0,
         fixed: Some((4, 2, 2)),
+        sequential: false,
     };
     let screened = fit_screened_distributed(&x, &cfg, &opts).unwrap();
 
@@ -259,6 +261,7 @@ fn screened_paths_match_single_node_bitwise_per_block() {
         machine: MachineParams::edison_like(),
         small_cutoff: 64, // force every component onto the single-node path
         fixed: None,
+        sequential: false,
     };
     let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
     assert_eq!(sdist.components, 2);
@@ -270,7 +273,7 @@ fn screened_paths_match_single_node_bitwise_per_block() {
 
     for c in 0..comps.count {
         let idx = comps.members(c);
-        let sub = fit_single_node(&extract_columns(&x, &idx), &cfg).unwrap();
+        let sub = fit_single_node(&extract_columns(&x, idx), &cfg).unwrap();
         for (a, &i) in idx.iter().enumerate() {
             for (b, &j) in idx.iter().enumerate() {
                 assert_eq!(
@@ -295,6 +298,7 @@ fn screened_dist_fabric_blocks_match_single_node_closely() {
         machine: MachineParams::edison_like(),
         small_cutoff: 0,
         fixed: Some((4, 2, 2)),
+        sequential: false,
     };
     let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
     assert_eq!(sdist.components, 2);
@@ -325,8 +329,8 @@ fn iteration_stats_sum_across_components() {
     let s = native::gram(&x);
     let comps = gram_components(&s, cfg.lambda1);
     assert_eq!(comps.count, 2);
-    let a = fit_single_node(&extract_columns(&x, &comps.members(0)), &cfg).unwrap();
-    let b = fit_single_node(&extract_columns(&x, &comps.members(1)), &cfg).unwrap();
+    let a = fit_single_node(&extract_columns(&x, comps.members(0)), &cfg).unwrap();
+    let b = fit_single_node(&extract_columns(&x, comps.members(1)), &cfg).unwrap();
     assert!(a.iterations >= 1 && b.iterations >= 1);
 
     let screened = fit_with_screening(&x, &cfg).unwrap();
@@ -361,6 +365,7 @@ fn iteration_stats_sum_across_components() {
         machine: MachineParams::edison_like(),
         small_cutoff: 64,
         fixed: None,
+        sequential: false,
     };
     let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
     assert_eq!(sdist.fit.iterations, a.iterations + b.iterations);
