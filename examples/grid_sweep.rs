@@ -53,7 +53,7 @@ fn main() {
     }
     print!("{table}");
 
-    let chosen = select_by_density(&out, true_density).unwrap();
+    let chosen = select_by_density(&out.results, true_density).unwrap();
     println!(
         "density-matched selection (target {:.2}%): λ1 = {}, λ2 = {}",
         100.0 * true_density,

@@ -27,7 +27,7 @@ fn equal_sparsity_lambdas(problem: &gen::Problem, variant: Variant) -> (f64, f64
     let base = ConcordConfig { tol: 1e-3, max_iter: 40, variant, ..Default::default() };
     let grid = GridSpec { lambda1: vec![0.2, 0.3, 0.45, 0.65, 0.9], lambda2: vec![0.1] };
     let out = run_sweep(&problem.x, &grid, &base, 2);
-    let concord_l1 = select_by_density(&out, target).unwrap().job.cfg.lambda1;
+    let concord_l1 = select_by_density(&out.results, target).unwrap().job.cfg.lambda1;
     // BigQUIC: bisection on its own λ to the same density.
     let mut lo = 0.01;
     let mut hi = 1.5;

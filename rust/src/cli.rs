@@ -121,11 +121,23 @@ COMMANDS:
            --l1 a,b,c --l2 a,b  [--workers N]  + workload options
            [--screen]  (screened sweep: one gram + nested components
              reused across the whole λ grid)
-           [--mode dist]  (requires --screen: every grid point runs the
-             screened distributed solver — per-component fabrics packed
-             into concurrent waves; --ranks/--cx/--comega/--ranks-budget
-             as in solve. --workers is single-node-sweep only: grid
-             points run in order, waves parallelize within each)
+           [--mode dist]  (requires --screen: the *grid* is the
+             scheduling unit — one amortized distributed screening
+             pass covers the whole λ1 list (gram + labeling collective
+             billed once), and every (grid point, component) fabric is
+             packed into one shared wave schedule under --ranks-budget;
+             waves may mix grid points. Results are bit-identical to
+             solving each point alone. --ranks/--cx/--comega/
+             --ranks-budget as in solve; --workers is single-node-sweep
+             only)
+           [--per-point]  (dist only: solve every grid point standalone
+             — its own screening pass, its own waves; the billing
+             baseline and equivalence reference)
+           [--out-csv FILE]  (write the grid as CSV — λ1, λ2, density,
+             iterations, components, per-point modeled seconds — for
+             offline model selection)
+           [--select-density T] [--out-omega FILE]  (write the estimate
+             whose off-diagonal density is closest to T; default 0.1)
   cost     Analytic cost model (Lemmas 3.1–3.5) over replication grid
            --p N --n N --s F --t F --d F --procs P [--threads N]
            [--variant cov|obs]  [--tile mc,kc,nc]  (prices the dense

@@ -1,0 +1,332 @@
+//! The **fabric executor**: the reusable wave-execution layer every
+//! grid coordinator schedules through.
+//!
+//! Screening decomposes problems into independent component solves;
+//! the executor is the one place those solves are packed and launched.
+//! A client submits
+//!
+//! - **jobs** ([`ExecutorJob`]): one per independent problem sharing
+//!   the schedule — a standalone fit is one job, a (λ₁, λ₂) sweep
+//!   submits one per grid point, stability selection one per
+//!   subsample. A job carries its data matrix and solver config.
+//! - **tasks** ([`ExecutorTask`]): the flat, job-tagged list of every
+//!   component solve — which job it belongs to ([`JobTag`]), the
+//!   component's global column indices, its [`FabricPlan`], and the
+//!   [`ProblemShape`] the packer re-prices with if the plan must
+//!   shrink under the budget.
+//!
+//! [`FabricExecutor::run`] then packs every multi-rank plan with
+//! [`plan_concurrent`] under the global rank budget — waves may mix
+//! fabrics from *different jobs* — launches each wave's fabrics
+//! concurrently on disjoint rank teams via the deterministic scoped
+//! pool, and returns the outcomes in task-submission order plus the
+//! schedule's critical-path bill (per-wave
+//! [`CostSummary::merge_concurrent`], waves folded with
+//! [`CostSummary::merge_sequential`]). Tasks whose plan says `P = 1`
+//! never enter the packer: they run on the unmetered single-node path,
+//! exactly as a standalone screened fit routes them.
+//!
+//! **Determinism** (rule 6 in `ARCHITECTURE.md`): tasks share no
+//! mutable state and land in task-indexed slots, so the schedule —
+//! sequential reference or wave-concurrent, any budget, any wave
+//! mixing — changes only *when* a fabric launches and what the bill
+//! says, never any result bit. Clients reassemble per job in component
+//! order, so cross-job packing is invisible in every estimate
+//! (`rust/tests/grid_schedule.rs`).
+//!
+//! The executor does not install the kernel tile shape: clients
+//! install `cfg.tile` *before planning* (plans are priced at the
+//! installed tile) and the per-fabric rank programs re-install it.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::cost::schedule::{
+    plan_concurrent, ConcurrentSchedule, FabricPlan, JobTag, ScheduledComponent,
+};
+use crate::cost::ProblemShape;
+use crate::linalg::Mat;
+use crate::simnet::{cost::CostSummary, Counters, MachineParams};
+use crate::util::pool::{chunk_ranges, par_map};
+
+use super::screening::extract_columns;
+use super::{fit_single_node, run_distributed, ConcordConfig, ConcordFit};
+
+/// One submitted problem: the data matrix and the solver config its
+/// component tasks run under. Job `j` of a batch is `jobs[j]`.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecutorJob<'a> {
+    /// Observations (n × p) the component columns are extracted from.
+    pub x: &'a Mat,
+    /// Solver configuration for every component of this job.
+    pub cfg: ConcordConfig,
+}
+
+/// One schedulable component solve of some job.
+#[derive(Debug, Clone)]
+pub struct ExecutorTask {
+    /// Which job's component this is (unique per submission).
+    pub tag: JobTag,
+    /// Ascending global column indices of the component in its job's x.
+    pub indices: Vec<usize>,
+    /// The planner's fabric choice (`ranks == 1`: single-node path,
+    /// never packed). A wider plan than the budget is shrunk by the
+    /// packer.
+    pub plan: FabricPlan,
+    /// Shape the packer re-prices with when shrinking `plan`.
+    pub shape: ProblemShape,
+}
+
+/// What one executed task produced.
+#[derive(Debug)]
+pub struct TaskOutcome {
+    pub tag: JobTag,
+    /// The component's global column indices (moved from the task).
+    pub indices: Vec<usize>,
+    pub fit: ConcordFit,
+    /// The plan that actually ran (budget-shrunk and variant-resolved).
+    pub plan: FabricPlan,
+    /// Metered cost of this task's fabric (zero on the unmetered
+    /// single-node path).
+    pub cost: CostSummary,
+    /// Rank-indexed counters of the fabric (empty single-node).
+    pub counters: Vec<Counters>,
+    /// Which wave launched it (`None`: direct single-node task, or a
+    /// sequential-mode launch where no waves ran).
+    pub wave: Option<usize>,
+}
+
+/// Outcome of one executor run.
+#[derive(Debug)]
+pub struct ExecutorRun {
+    /// One outcome per submitted task, in task-submission order.
+    pub outcomes: Vec<TaskOutcome>,
+    /// The cross-job wave schedule the fabric tasks ran under.
+    pub schedule: ConcurrentSchedule,
+    /// Critical-path bill of the executed schedule (fabric tasks only;
+    /// single-node tasks are unmetered): per-wave concurrent merges
+    /// folded sequentially, or the plain serial fold in sequential
+    /// mode. Screening is the client's to add.
+    pub cost: CostSummary,
+}
+
+/// The wave-execution engine: packs job-tagged component plans under a
+/// global rank budget and launches them. Pure configuration — build
+/// one per batch and call [`FabricExecutor::run`].
+#[derive(Debug, Clone, Copy)]
+pub struct FabricExecutor {
+    /// Global concurrent rank budget the waves are packed under.
+    pub budget: usize,
+    /// Node-local worker threads used when re-pricing shrunk plans
+    /// (clients pass their config's thread count).
+    pub threads: usize,
+    pub machine: MachineParams,
+    /// Launch scheduled fabrics one at a time in tag order with serial
+    /// billing instead of wave-concurrently — the reference mode the
+    /// equivalence suites compare against. Plans (including budget
+    /// shrinks) are identical either way, so results are bit-identical.
+    pub sequential: bool,
+}
+
+/// One solve's products before the task's indices are moved in.
+struct Solved {
+    fit: ConcordFit,
+    plan: FabricPlan,
+    cost: CostSummary,
+    counters: Vec<Counters>,
+    wave: Option<usize>,
+}
+
+/// Solve one task with its final plan: a fabric run for `P > 1`, the
+/// (unmetered) single-node path otherwise.
+fn solve_task(
+    job: &ExecutorJob<'_>,
+    task: &ExecutorTask,
+    plan: FabricPlan,
+    machine: MachineParams,
+    wave: Option<usize>,
+) -> Result<Solved> {
+    let sub_x = extract_columns(job.x, &task.indices);
+    if plan.ranks <= 1 {
+        let fit = fit_single_node(&sub_x, &job.cfg)?;
+        Ok(Solved { fit, plan, cost: CostSummary::default(), counters: Vec::new(), wave })
+    } else {
+        let mut sub_cfg = job.cfg;
+        sub_cfg.variant = plan.variant;
+        let run = run_distributed(&sub_x, &sub_cfg, plan.ranks, plan.c_x, plan.c_omega, machine);
+        Ok(Solved {
+            fit: run.fit,
+            plan: FabricPlan { variant: run.variant, ..plan },
+            cost: run.cost,
+            counters: run.counters,
+            wave,
+        })
+    }
+}
+
+impl FabricExecutor {
+    /// Pack and run every task. Outcomes come back in task-submission
+    /// order whatever the schedule did; the first failing task (by
+    /// submission order) propagates as the error.
+    pub fn run(&self, jobs: &[ExecutorJob<'_>], tasks: Vec<ExecutorTask>) -> Result<ExecutorRun> {
+        let mut index: HashMap<JobTag, usize> = HashMap::with_capacity(tasks.len());
+        for (t, task) in tasks.iter().enumerate() {
+            if task.tag.job >= jobs.len() {
+                bail!("task {:?} names job {} of {}", task.tag, task.tag.job, jobs.len());
+            }
+            if index.insert(task.tag, t).is_some() {
+                bail!("duplicate task tag {:?}", task.tag);
+            }
+        }
+
+        // Split: P = 1 plans run directly on the single-node path and
+        // never enter the packer; everything else is packed.
+        let mut direct: Vec<usize> = Vec::new();
+        let mut candidates: Vec<(JobTag, FabricPlan, ProblemShape)> = Vec::new();
+        for (t, task) in tasks.iter().enumerate() {
+            if task.plan.ranks <= 1 {
+                direct.push(t);
+            } else {
+                candidates.push((task.tag, task.plan, task.shape));
+            }
+        }
+        let schedule = plan_concurrent(&candidates, self.budget, self.threads, &self.machine);
+
+        // Outcomes land in task-indexed slots so clients reassemble in
+        // a fixed order whatever the launch order was (determinism
+        // rule 6: float accumulation across solves is a function of
+        // the decomposition only, never of the schedule).
+        let mut slots: Vec<Option<Result<Solved>>> = Vec::new();
+        slots.resize_with(tasks.len(), || None);
+        for &t in &direct {
+            let task = &tasks[t];
+            slots[t] = Some(solve_task(&jobs[task.tag.job], task, task.plan, self.machine, None));
+        }
+
+        let mut cost = CostSummary::default();
+        if self.sequential {
+            // Reference mode: same plans, one launch at a time in tag
+            // (job-major) order, serial billing.
+            let mut entries: Vec<&ScheduledComponent> =
+                schedule.waves.iter().flat_map(|w| w.entries.iter()).collect();
+            entries.sort_by_key(|e| e.tag);
+            for e in entries {
+                let t = index[&e.tag];
+                let out = solve_task(&jobs[e.tag.job], &tasks[t], e.plan, self.machine, None);
+                if let Ok(sv) = &out {
+                    cost.merge_sequential(&sv.cost);
+                }
+                slots[t] = Some(out);
+            }
+        } else {
+            for (w, wave) in schedule.waves.iter().enumerate() {
+                // One scoped pool worker per fabric in the wave:
+                // disjoint rank teams running at the same time.
+                // `par_map` returns in entry order, so billing and
+                // bookkeeping are schedule-deterministic.
+                let ranges = chunk_ranges(wave.entries.len(), wave.entries.len(), 1);
+                let outs = par_map(&ranges, |_, start, _| {
+                    let e = &wave.entries[start];
+                    let t = index[&e.tag];
+                    (t, solve_task(&jobs[e.tag.job], &tasks[t], e.plan, self.machine, Some(w)))
+                });
+                let mut wave_bill = CostSummary::default();
+                for (t, out) in outs {
+                    if let Ok(sv) = &out {
+                        wave_bill.merge_concurrent(&sv.cost);
+                    }
+                    slots[t] = Some(out);
+                }
+                cost.merge_sequential(&wave_bill);
+            }
+        }
+
+        let mut outcomes = Vec::with_capacity(tasks.len());
+        for (task, slot) in tasks.into_iter().zip(slots) {
+            let solved = slot.expect("every submitted task was launched")?;
+            outcomes.push(TaskOutcome {
+                tag: task.tag,
+                indices: task.indices,
+                fit: solved.fit,
+                plan: solved.plan,
+                cost: solved.cost,
+                counters: solved.counters,
+                wave: solved.wave,
+            });
+        }
+        Ok(ExecutorRun { outcomes, schedule, cost })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::concord::Variant;
+    use crate::gen;
+    use crate::rng::Rng;
+
+    fn executor() -> FabricExecutor {
+        FabricExecutor {
+            budget: 8,
+            threads: 1,
+            machine: MachineParams::default(),
+            sequential: false,
+        }
+    }
+
+    fn single_node_task(job: usize, component: usize, indices: Vec<usize>) -> ExecutorTask {
+        let shape = ProblemShape { p: indices.len() as f64, n: 40.0, s: 40.0, t: 10.0, d: 2.0 };
+        ExecutorTask {
+            tag: JobTag { job, component },
+            indices,
+            plan: FabricPlan::single_node(Variant::Cov),
+            shape,
+        }
+    }
+
+    #[test]
+    fn duplicate_tags_are_rejected() {
+        let mut rng = Rng::new(1);
+        let prob = gen::chain_problem(6, 40, &mut rng);
+        let jobs = [ExecutorJob { x: &prob.x, cfg: ConcordConfig::default() }];
+        let tasks = vec![single_node_task(0, 0, vec![0, 1]), single_node_task(0, 0, vec![2, 3])];
+        assert!(executor().run(&jobs, tasks).is_err());
+    }
+
+    #[test]
+    fn unknown_job_is_rejected() {
+        let mut rng = Rng::new(2);
+        let prob = gen::chain_problem(6, 40, &mut rng);
+        let jobs = [ExecutorJob { x: &prob.x, cfg: ConcordConfig::default() }];
+        let tasks = vec![single_node_task(1, 0, vec![0, 1])];
+        assert!(executor().run(&jobs, tasks).is_err());
+    }
+
+    /// Single-node plans never enter the packer: empty schedule, zero
+    /// bill, outcomes in submission order across two jobs.
+    #[test]
+    fn single_node_tasks_bypass_the_packer() {
+        let mut rng = Rng::new(3);
+        let a = gen::chain_problem(6, 40, &mut rng);
+        let b = gen::chain_problem(6, 40, &mut rng);
+        let cfg = ConcordConfig { lambda1: 0.3, max_iter: 20, ..Default::default() };
+        let jobs = [ExecutorJob { x: &a.x, cfg }, ExecutorJob { x: &b.x, cfg }];
+        let tasks = vec![
+            single_node_task(0, 0, vec![0, 1, 2]),
+            single_node_task(1, 0, vec![3, 4, 5]),
+        ];
+        let run = executor().run(&jobs, tasks).unwrap();
+        assert_eq!(run.outcomes.len(), 2);
+        assert_eq!(run.outcomes[0].tag, JobTag { job: 0, component: 0 });
+        assert_eq!(run.outcomes[1].tag, JobTag { job: 1, component: 0 });
+        for out in &run.outcomes {
+            assert_eq!(out.fit.omega.rows(), 3);
+            assert!(out.wave.is_none());
+            assert!(out.counters.is_empty());
+        }
+        assert!(run.schedule.waves.is_empty());
+        assert_eq!(run.cost.time, 0.0);
+        assert_eq!(run.cost.total, Counters::default());
+    }
+}

@@ -27,16 +27,25 @@
 //! problem into connected components, the cost model sizes one fabric
 //! per component ([`crate::cost::schedule`]), and the per-component
 //! estimates are stitched back into the global block-diagonal omega.
+//! The wave execution itself lives in the reusable [`executor`] layer:
+//! job-tagged component solves packed under a global rank budget — the
+//! single fit is one client; grid sweeps and stability selection
+//! submit every (job, component) pair into the same machinery.
 
 pub mod cov;
 pub mod dist_common;
+pub mod executor;
 pub mod obs;
 pub mod ops;
 pub mod screened_dist;
 pub mod screening;
 pub mod single_node;
 
-pub use screened_dist::{fit_screened_distributed, ScreenedDistFit, ScreenedDistOptions};
+pub use executor::{ExecutorJob, ExecutorRun, ExecutorTask, FabricExecutor, TaskOutcome};
+pub use screened_dist::{
+    fit_screened_distributed, screen_distributed_multi, MultiScreenPass, ScreenLevel,
+    ScreenedDistFit, ScreenedDistOptions,
+};
 pub use screening::{fit_with_screening, fit_with_screening_on, ComponentStat, ScreenedFit};
 pub use single_node::fit_single_node;
 

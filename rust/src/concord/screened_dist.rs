@@ -2,36 +2,45 @@
 //! the 1.5D fabric layer — the paper's §6 divide-and-conquer direction
 //! at the distributed scale.
 //!
-//! Three stages:
+//! Three stages, each owned by its own layer:
 //!
-//! 1. **Distributed screening pass** ([`screen_distributed`]): a fabric
-//!    of up to `total_ranks` ranks, each owning a 1D block of S's rows.
-//!    Every rank forms its own rows of `S = XᵀX/n` locally, runs
-//!    union-find over its rows' thresholded edges, and the per-rank
+//! 1. **Distributed screening pass** ([`screen_distributed_multi`]): a
+//!    fabric of up to `total_ranks` ranks, each owning a 1D block of
+//!    S's rows. Every rank forms its own rows of `S = XᵀX/n` locally —
+//!    **once**, however many λ₁ thresholds are requested — then replays
+//!    a shared thresholded edge list per level (the distributed
+//!    analogue of [`nested_components`](super::screening::nested_components)'s
+//!    refinement reuse: the threshold graphs are nested, so one scan of
+//!    the gram rows serves every level). The per-rank, per-level
 //!    labelings (pairs `(i, find(i))`, canonical because roots are
-//!    minimum members) are allgathered and re-unioned — every rank ends
-//!    with the global connected components, and the collective is
-//!    metered like any other.
-//! 2. **Component scheduling**: each non-singleton component gets a
-//!    [`FabricPlan`] from the cost model ([`crate::cost::schedule`]),
-//!    sizing `(P, c_X, c_Ω, variant)` to the component — with `d`
-//!    estimated from the screened graph's mean degree, whose support is
-//!    a superset of the estimate's by the exact thresholding rule.
-//!    Components at or below `small_cutoff` (or whose plan says `P = 1`)
-//!    run on the single-node path; singletons use the closed form. The
-//!    fabric plans are then packed into **waves** under the global rank
-//!    budget ([`plan_concurrent`]): within a wave every fabric runs at
-//!    the same time on its own disjoint rank team (launched by the
-//!    deterministic scoped pool), waves run back to back.
-//! 3. **Reassembly**: per-component estimates are scattered into the
-//!    global block-diagonal omega through the shared
-//!    [`ScreenAccum`](super::screening::ScreenAccum) (summed iteration
-//!    statistics, accumulated in component order whatever the launch
-//!    order), and the per-fabric [`CostSummary`]s are folded per wave
-//!    with [`CostSummary::merge_concurrent`] (per-wave max of modeled
-//!    and comm time, counters summed) and across waves with
-//!    [`CostSummary::merge_sequential`] — the reported bill is the
-//!    schedule's critical path, not the serial sum.
+//!    minimum members) are allgathered in **one** metered collective
+//!    and re-unioned per level — every rank ends with the global
+//!    connected components of every threshold, and the gram + gather
+//!    are billed exactly once for the whole list.
+//! 2. **Planning**: each non-singleton component gets a [`FabricPlan`]
+//!    from the cost model ([`crate::cost::schedule`]), sizing
+//!    `(P, c_X, c_Ω, variant)` to the component — with `d` estimated
+//!    from the screened graph's mean degree, whose support is a
+//!    superset of the estimate's by the exact thresholding rule.
+//!    Components at or below `small_cutoff` (or whose plan says
+//!    `P = 1`) run on the single-node path; singletons use the closed
+//!    form. [`plan_job_tasks`] is a pure function of one job's level,
+//!    so a grid point planned inside a packed sweep is planned exactly
+//!    as a standalone fit plans it.
+//! 3. **Execution + reassembly**: the job-tagged tasks go to the
+//!    [`FabricExecutor`](super::executor::FabricExecutor), which packs
+//!    them into waves under the global rank budget and launches each
+//!    wave's fabrics concurrently on disjoint rank teams;
+//!    [`reassemble_job`] scatters the per-component estimates back into
+//!    the block-diagonal omega through the shared `ScreenAccum` in
+//!    component order, whatever the launch order. The bill is the
+//!    screening pass plus the executed schedule's critical path.
+//!
+//! [`fit_screened_distributed`] is the thin single-job client of that
+//! machinery; the grid coordinators ([`crate::coordinator::sweep`],
+//! [`crate::coordinator::stability`]) reuse the same pieces to pack
+//! *every* (grid point, component) and (subsample, component) pair into
+//! one shared schedule.
 //!
 //! Within each component's fabric the rank programs are byte-for-byte
 //! the ones `fit_distributed` runs on the extracted sub-problem, so the
@@ -42,24 +51,26 @@
 //! schedule changes *when* a fabric launches, never what it computes:
 //! per-component omegas and counters are bit-identical to running the
 //! same plans one after another (`rust/tests/concurrent_schedule.rs`,
-//! pinned against [`ScreenedDistOptions::sequential`]).
+//! pinned against [`ScreenedDistOptions::sequential`]), and the
+//! amortized multi-threshold pass yields bit-identical components,
+//! degrees and diagonals to screening each threshold on its own
+//! (`rust/tests/grid_schedule.rs`).
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::cost::schedule::{
-    plan_component, plan_concurrent, runnable_on_fabric, ConcurrentSchedule, FabricPlan,
-    ScheduledComponent,
+    plan_component, runnable_on_fabric, ConcurrentSchedule, FabricPlan, JobTag,
 };
 use crate::cost::ProblemShape;
 use crate::dist::Layout1D;
 use crate::linalg::Mat;
 use crate::simnet::{cost::CostSummary, Comm, Counters, Fabric, MachineParams};
-use crate::util::pool::{chunk_ranges, par_map};
 
-use super::screening::{extract_columns, Components, ComponentStat, ScreenAccum, UnionFind};
-use super::{fit_single_node, run_distributed, ConcordConfig, ConcordFit};
+use super::executor::{ExecutorJob, ExecutorTask, FabricExecutor, TaskOutcome};
+use super::screening::{Components, ComponentStat, ScreenAccum, ScreenedFit, UnionFind};
+use super::{ConcordConfig, ConcordFit};
 
 /// Controls for the screened distributed solver.
 #[derive(Debug, Clone, Copy)]
@@ -134,6 +145,9 @@ pub struct ScreenedDistFit {
     pub cost: CostSummary,
     /// The screening pass's own share of `cost`.
     pub screen_cost: CostSummary,
+    /// The executed wave schedule's share of `cost` (`cost` is
+    /// `screen_cost` ⊕ `solve_cost`, folded sequentially).
+    pub solve_cost: CostSummary,
     /// The wave schedule the fabric components ran under (also recorded
     /// in sequential mode, where it describes the plans but waves were
     /// launched one component at a time).
@@ -153,14 +167,39 @@ impl ScreenedDistFit {
     /// the concurrent schedule's critical-path `cost` is compared to.
     pub fn sequential_bill(&self) -> CostSummary {
         let mut bill = self.screen_cost;
-        for sv in &self.solves {
-            bill.merge_sequential(&sv.cost);
-        }
+        bill.merge_sequential(&solves_view(&self.solves));
         bill
     }
 }
 
-/// What the screening fabric hands back to the leader.
+/// One λ₁ level of an amortized screening pass: the global component
+/// decomposition and per-variable thresholded degrees at that
+/// threshold.
+#[derive(Debug)]
+pub struct ScreenLevel {
+    pub components: Components,
+    /// Thresholded off-diagonal degree of every variable (the planner's
+    /// `d` estimate reads the component means).
+    pub degrees: Vec<f64>,
+}
+
+/// What the multi-threshold screening fabric hands back to the leader:
+/// one [`ScreenLevel`] per requested threshold (aligned with the input
+/// list) over a single gram + single allgather bill.
+#[derive(Debug)]
+pub struct MultiScreenPass {
+    pub levels: Vec<ScreenLevel>,
+    /// Diagonal of S (threshold-independent; singleton closed forms
+    /// need `s_ii`).
+    pub diag: Vec<f64>,
+    /// The whole pass's metered bill — the gram and the labeling
+    /// collective are paid once however many levels were requested.
+    pub cost: CostSummary,
+}
+
+/// What the single-threshold screening fabric hands back (the
+/// [`screen_distributed_multi`] special case the unit tests pin).
+#[cfg(test)]
 struct ScreenPass {
     components: Components,
     /// Thresholded off-diagonal degree of every variable.
@@ -170,8 +209,55 @@ struct ScreenPass {
     cost: CostSummary,
 }
 
-/// The distributed screening pass: block-row gram + local union-find,
-/// merged by one allgather of canonical labelings.
+/// The amortized distributed screening pass: block-row gram formed
+/// once, every threshold's components refined from one shared edge
+/// list, all labelings merged by **one** allgather. Level `k` is
+/// bit-identical (components, degrees, diag) to a standalone
+/// single-threshold pass at `thresholds[k]` — only the bill changes.
+pub fn screen_distributed_multi(
+    x: &Mat,
+    thresholds: &[f64],
+    p_ranks: usize,
+    machine: MachineParams,
+    threads: usize,
+) -> MultiScreenPass {
+    let p = x.cols();
+    let t_levels = thresholds.len();
+    let layout = Layout1D::new(p, p_ranks);
+    let shared = Arc::new(x.clone());
+    let thr: Vec<f64> = thresholds.to_vec();
+    let run = Fabric::with_machine(p_ranks, machine)
+        .run(move |comm| screen_rank_multi(comm, &shared, &thr, &layout, threads));
+    let cost = run.summary();
+
+    let mut degrees = vec![0.0f64; t_levels * p];
+    let mut diag = vec![0.0f64; p];
+    for (rank, (_, deg, dg)) in run.results.iter().enumerate() {
+        let (rs, re) = layout.range(rank);
+        let rows = re - rs;
+        diag[rs..re].copy_from_slice(dg);
+        for k in 0..t_levels {
+            degrees[k * p + rs..k * p + re].copy_from_slice(&deg[k * rows..(k + 1) * rows]);
+        }
+    }
+    // Every rank holds the same merged labelings; rank 0's are
+    // canonical.
+    let merged = &run.results[0].0;
+    let levels = (0..t_levels)
+        .map(|k| {
+            let raw: Vec<usize> =
+                merged[k * p..(k + 1) * p].iter().map(|&v| v as usize).collect();
+            ScreenLevel {
+                components: Components::from_raw_labels(&raw),
+                degrees: degrees[k * p..(k + 1) * p].to_vec(),
+            }
+        })
+        .collect();
+    MultiScreenPass { levels, diag, cost }
+}
+
+/// Single-threshold screening: the one-level special case.
+#[cfg(test)]
 fn screen_distributed(
     x: &Mat,
     threshold: f64,
@@ -179,150 +265,127 @@ fn screen_distributed(
     machine: MachineParams,
     threads: usize,
 ) -> ScreenPass {
-    let p = x.cols();
-    let layout = Layout1D::new(p, p_ranks);
-    let shared = Arc::new(x.clone());
-    let run = Fabric::with_machine(p_ranks, machine)
-        .run(move |comm| screen_rank(comm, &shared, threshold, &layout, threads));
-    let cost = run.summary();
-
-    let mut degrees = vec![0.0f64; p];
-    let mut diag = vec![0.0f64; p];
-    for (rank, (_, deg, dg)) in run.results.iter().enumerate() {
-        let (rs, re) = layout.range(rank);
-        degrees[rs..re].copy_from_slice(deg);
-        diag[rs..re].copy_from_slice(dg);
+    let mut multi =
+        screen_distributed_multi(x, std::slice::from_ref(&threshold), p_ranks, machine, threads);
+    let level = multi.levels.pop().expect("one threshold, one level");
+    ScreenPass {
+        components: level.components,
+        degrees: level.degrees,
+        diag: multi.diag,
+        cost: multi.cost,
     }
-    // Every rank holds the same merged labeling; rank 0's is canonical.
-    let raw: Vec<usize> = run.results[0].0.iter().map(|&v| v as usize).collect();
-    ScreenPass { components: Components::from_raw_labels(&raw), degrees, diag, cost }
 }
 
-/// One screening rank: local gram rows → local union-find → allgather
-/// and merge. Returns (merged labels, my rows' degrees, my rows' s_ii).
-fn screen_rank(
+/// One screening rank: local gram rows once → per-level union-find over
+/// the shared thresholded edge list → one allgather, merged per level.
+/// Returns (per-level merged labels, per-level row degrees, row s_ii),
+/// each flattened level-major.
+fn screen_rank_multi(
     comm: &mut Comm,
     x: &Arc<Mat>,
-    threshold: f64,
+    thresholds: &[f64],
     layout: &Layout1D,
     threads: usize,
 ) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
     let p = x.cols();
     let n = x.rows();
+    let t_levels = thresholds.len();
     let (rs, re) = layout.range(comm.rank());
     let rows = re - rs;
 
-    // My block rows of S = XᵀX/n.
+    // My block rows of S = XᵀX/n — formed once for every level.
     let xt_rows = x.col_block(rs, re).transpose(); // rows × n
     comm.count_flops_dense(2 * (rows * n * p) as u64);
     let mut s_rows = xt_rows.matmul_mt(x, threads); // rows × p
     s_rows.scale(1.0 / n.max(1) as f64);
 
-    // Union-find over my rows' thresholded edges.
-    let mut uf = UnionFind::new(p);
-    let mut degrees = vec![0.0f64; rows];
     let mut diag = vec![0.0f64; rows];
     for i in rs..re {
         diag[i - rs] = s_rows.get(i - rs, i);
+    }
+
+    // The refinement reuse: one scan of the gram rows keeps every edge
+    // that could pass *any* level (the threshold graphs are nested, so
+    // the loosest threshold's edge set contains them all). Replaying
+    // the (i, j)-ascending list per level performs exactly the union
+    // sequence a standalone scan at that threshold performs — NaN
+    // thresholds pass no edges either way (`min` ignores NaN, and
+    // `a > NaN` is false).
+    let min_thr = thresholds.iter().copied().fold(f64::INFINITY, f64::min);
+    let mut edges: Vec<(usize, usize, f64)> = Vec::new();
+    for i in rs..re {
         for j in 0..p {
-            if j != i && s_rows.get(i - rs, j).abs() > threshold {
-                degrees[i - rs] += 1.0;
-                uf.union(i, j);
+            if j != i {
+                let a = s_rows.get(i - rs, j).abs();
+                if a > min_thr {
+                    edges.push((i, j, a));
+                }
             }
         }
     }
 
-    // A labeling is fully described by the pairs (i, find(i)); the join
-    // of all ranks' labelings is the connectivity of the union of their
-    // edge sets — i.e. the global components.
-    let local: Vec<f64> = (0..p).map(|i| uf.find(i) as f64).collect();
+    // Per-level union-find over my rows' thresholded edges. A labeling
+    // is fully described by the pairs (i, find(i)); the join of all
+    // ranks' labelings is the connectivity of the union of their edge
+    // sets — i.e. the global components of that level.
+    let mut local: Vec<f64> = Vec::with_capacity(t_levels * p);
+    let mut degrees = vec![0.0f64; t_levels * rows];
+    for (k, &thr) in thresholds.iter().enumerate() {
+        let mut uf = UnionFind::new(p);
+        for &(i, j, a) in &edges {
+            if a > thr {
+                degrees[k * rows + (i - rs)] += 1.0;
+                uf.union(i, j);
+            }
+        }
+        local.extend((0..p).map(|i| uf.find(i) as f64));
+    }
+
+    // One metered collective carries every level's labeling: messages
+    // are paid once for the whole λ₁ list, words scale with the list.
     let team: Vec<usize> = (0..comm.size()).collect();
     let all = comm.allgather(&team, 1, local);
-    let mut merged = UnionFind::new(p);
-    for labels in &all {
-        for (i, &r) in labels.iter().enumerate() {
-            merged.union(i, r as usize);
+    let mut merged: Vec<f64> = Vec::with_capacity(t_levels * p);
+    for k in 0..t_levels {
+        let mut uf = UnionFind::new(p);
+        for labels in &all {
+            for (i, &r) in labels[k * p..(k + 1) * p].iter().enumerate() {
+                uf.union(i, r as usize);
+            }
         }
+        merged.extend((0..p).map(|i| uf.find(i) as f64));
     }
-    let labels: Vec<f64> = (0..p).map(|i| merged.find(i) as f64).collect();
-    (labels, degrees, diag)
+    (merged, degrees, diag)
 }
 
-/// What one scheduled (or below-cutoff) component's solve produced.
-struct SolveOutcome {
-    fit: ConcordFit,
-    plan: FabricPlan,
-    cost: CostSummary,
-    counters: Vec<Counters>,
-    wave: Option<usize>,
-}
-
-/// Solve one component with its final plan: a fabric run for `P > 1`,
-/// the (unmetered) single-node path otherwise — exactly the per-
-/// component body the sequential loop used to run.
-fn solve_component(
-    x: &Mat,
-    idx: &[usize],
-    cfg: &ConcordConfig,
-    plan: FabricPlan,
-    machine: MachineParams,
-    wave: Option<usize>,
-) -> Result<SolveOutcome> {
-    let sub_x = extract_columns(x, idx);
-    if plan.ranks <= 1 {
-        let fit = fit_single_node(&sub_x, cfg)?;
-        Ok(SolveOutcome { fit, plan, cost: CostSummary::default(), counters: Vec::new(), wave })
+/// Resolve the global concurrent rank budget: `cfg.ranks_budget`, with
+/// `0` ("auto") meaning the fabric's own rank count — out of the box a
+/// wave may run several planned fabrics at once but never widens any
+/// single one.
+pub(crate) fn resolve_budget(cfg: &ConcordConfig, opts: &ScreenedDistOptions) -> usize {
+    if cfg.ranks_budget == 0 {
+        opts.total_ranks
     } else {
-        let mut sub_cfg = *cfg;
-        sub_cfg.variant = plan.variant;
-        let run = run_distributed(&sub_x, &sub_cfg, plan.ranks, plan.c_x, plan.c_omega, machine);
-        Ok(SolveOutcome {
-            fit: run.fit,
-            plan: FabricPlan { variant: run.variant, ..plan },
-            cost: run.cost,
-            counters: run.counters,
-            wave,
-        })
+        cfg.ranks_budget
     }
 }
 
-/// Fit with screening on the distributed path: screen on a fabric, give
-/// every non-trivial component a cost-model-sized fabric plan, pack the
-/// plans into waves under the global rank budget, launch each wave's
-/// fabrics concurrently on disjoint rank teams, and reassemble the
-/// global block-diagonal estimate with the schedule's critical-path
-/// bill. Small components solve single-node; singletons use the closed
-/// form.
-pub fn fit_screened_distributed(
-    x: &Mat,
-    cfg: &ConcordConfig,
+/// A pinned fabric must satisfy the same runnability constraints the
+/// scheduler enforces, and must fit the budget (shrinking would
+/// silently violate the pin); catch both here as clean errors instead
+/// of a RepGrid panic inside a spawned rank thread.
+pub(crate) fn validate_pin(
     opts: &ScreenedDistOptions,
-) -> Result<ScreenedDistFit> {
-    let p = x.cols();
-    let n = x.rows();
-    assert!(opts.total_ranks >= 1, "need at least one rank");
-    // Install the blocking shape before any planning: the scheduler's
-    // Lemma 3.5 pricing reads the installed tile's cache-reuse term, so
-    // plans must see this fit's tile — not whatever a previous fit left
-    // behind (and every component is then planned under the same price).
-    crate::linalg::tile::install(cfg.tile);
-    // The global concurrent rank budget: waves of component fabrics are
-    // packed under it. Default ("auto", 0) is the fabric's own rank
-    // count, so out of the box a wave may run several planned fabrics
-    // at once but never widens any single one.
-    let budget = if cfg.ranks_budget == 0 { opts.total_ranks } else { cfg.ranks_budget };
-    // A pinned fabric must satisfy the same runnability constraints the
-    // scheduler enforces; catch it here as a clean error instead of a
-    // RepGrid panic inside a spawned rank thread.
+    variant: super::Variant,
+    budget: usize,
+) -> Result<()> {
     if let Some((ranks, c_x, c_omega)) = opts.fixed {
-        if !runnable_on_fabric(ranks, c_x, c_omega, cfg.variant) {
+        if !runnable_on_fabric(ranks, c_x, c_omega, variant) {
             bail!(
                 "pinned fabric P={ranks} c_X={c_x} c_Ω={c_omega} is not runnable \
-                 for {:?} (power-of-two replication with c_X·c_Ω ≤ P required)",
-                cfg.variant
+                 for {variant:?} (power-of-two replication with c_X·c_Ω ≤ P required)"
             );
         }
-        // Shrinking would silently violate the pin; refuse instead.
         if ranks > budget {
             bail!(
                 "pinned fabric P={ranks} exceeds the concurrent rank budget {budget} \
@@ -330,28 +393,31 @@ pub fn fit_screened_distributed(
             );
         }
     }
+    Ok(())
+}
+
+/// Plan every non-singleton component of one job's screening level as a
+/// job-tagged executor task. A pure function of the level and config —
+/// a grid point planned inside a packed sweep gets exactly the plans a
+/// standalone [`fit_screened_distributed`] would give it.
+pub fn plan_job_tasks(
+    job: usize,
+    level: &ScreenLevel,
+    n: usize,
+    cfg: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+) -> Vec<ExecutorTask> {
+    let comps = &level.components;
     let threads = cfg.threads.max(1);
-
-    let screen_ranks = opts.total_ranks.min(p.max(1));
-    let screen = screen_distributed(x, cfg.lambda1, screen_ranks, opts.machine, threads);
-    let comps = &screen.components;
-
-    // --- Plan every non-trivial component, then pack the fabric plans
-    // into waves. Components whose plan says P = 1 (small, or priced
-    // out of parallelism) never enter the packer: they run on the
-    // unmetered single-node path exactly as before.
-    let mut largest = 0usize;
-    let mut single_node: Vec<(usize, FabricPlan)> = Vec::new();
-    let mut candidates: Vec<(usize, FabricPlan, ProblemShape)> = Vec::new();
+    let mut tasks = Vec::new();
     for c in 0..comps.count {
         let idx = comps.members(c);
-        largest = largest.max(idx.len());
         if idx.len() == 1 {
             continue;
         }
         // d estimated from the screened graph's mean degree: its
         // support contains the estimate's (exact thresholding).
-        let deg_sum: f64 = idx.iter().map(|&i| screen.degrees[i]).sum();
+        let deg_sum: f64 = idx.iter().map(|&i| level.degrees[i]).sum();
         let d_est = 1.0 + deg_sum / idx.len() as f64;
         let shape = ProblemShape {
             p: idx.len() as f64,
@@ -373,90 +439,140 @@ pub fn fit_screened_distributed(
         } else {
             plan_component(&shape, opts.total_ranks, threads, &opts.machine, cfg.variant)
         };
-        if plan.ranks <= 1 {
-            single_node.push((c, plan));
-        } else {
-            candidates.push((c, plan, shape));
-        }
+        tasks.push(ExecutorTask {
+            tag: JobTag { job, component: c },
+            indices: idx.to_vec(),
+            plan,
+            shape,
+        });
     }
-    let schedule = plan_concurrent(&candidates, budget, threads, &opts.machine);
+    tasks
+}
 
-    // --- Execute. Outcomes land in a component-indexed table so the
-    // reassembly below runs in component order whatever the launch
-    // order was — float accumulation order (objective, trial sums) is a
-    // function of the decomposition only, never of the schedule.
-    let mut outcomes: Vec<Option<Result<SolveOutcome>>> = Vec::new();
-    outcomes.resize_with(comps.count, || None);
-    for &(c, plan) in &single_node {
-        outcomes[c] = Some(solve_component(x, comps.members(c), cfg, plan, opts.machine, None));
-    }
-
-    let mut cost = screen.cost;
-    if opts.sequential {
-        // Reference mode: same plans, launched one component at a time
-        // in component order, serial billing — the pre-wave behavior.
-        let mut entries: Vec<&ScheduledComponent> =
-            schedule.waves.iter().flat_map(|w| w.entries.iter()).collect();
-        entries.sort_by_key(|e| e.component);
-        for e in entries {
-            let idx = comps.members(e.component);
-            let out = solve_component(x, idx, cfg, e.plan, opts.machine, None);
-            if let Ok(ref sv) = out {
-                cost.merge_sequential(&sv.cost);
-            }
-            outcomes[e.component] = Some(out);
-        }
-    } else {
-        for (w, wave) in schedule.waves.iter().enumerate() {
-            // One scoped pool worker per fabric in the wave: disjoint
-            // rank teams running at the same time. `par_map` returns in
-            // entry order, so billing and bookkeeping are
-            // schedule-deterministic.
-            let ranges = chunk_ranges(wave.entries.len(), wave.entries.len(), 1);
-            let outs = par_map(&ranges, |_, start, _| {
-                let e = &wave.entries[start];
-                let idx = comps.members(e.component);
-                (e.component, solve_component(x, idx, cfg, e.plan, opts.machine, Some(w)))
-            });
-            let mut wave_bill = CostSummary::default();
-            for (c, out) in outs {
-                if let Ok(ref sv) = out {
-                    wave_bill.merge_concurrent(&sv.cost);
-                }
-                outcomes[c] = Some(out);
-            }
-            cost.merge_sequential(&wave_bill);
-        }
-    }
-
-    // --- Reassemble in component order.
+/// Reassemble one job's block-diagonal estimate from its task outcomes.
+/// `outcomes` must hold the job's non-singleton components in component
+/// order (as [`plan_job_tasks`] submits them); singletons use the
+/// closed form on `diag`. Accumulation runs in component order whatever
+/// the launch order was, so float sums (objective, trial counts) are a
+/// function of the decomposition only — never of the schedule.
+pub fn reassemble_job(
+    comps: &Components,
+    diag: &[f64],
+    lambda2: f64,
+    outcomes: Vec<TaskOutcome>,
+) -> (ScreenedFit, Vec<ComponentSolve>) {
+    let p = comps.comp.len();
     let mut acc = ScreenAccum::new(p);
-    let mut solves = Vec::new();
+    let mut solves = Vec::with_capacity(outcomes.len());
+    let mut outs = outcomes.into_iter();
     for c in 0..comps.count {
         let idx = comps.members(c);
         if idx.len() == 1 {
-            acc.add_singleton(idx[0], screen.diag[idx[0]], cfg.lambda2);
+            acc.add_singleton(idx[0], diag[idx[0]], lambda2);
             continue;
         }
-        let out = outcomes[c].take().expect("every non-singleton component was solved")?;
+        let out = outs.next().expect("one outcome per non-singleton component");
+        debug_assert_eq!(out.tag.component, c, "outcomes must arrive in component order");
         acc.add_component(idx, &out.fit);
         solves.push(ComponentSolve {
-            indices: idx.to_vec(),
+            indices: out.indices,
             plan: out.plan,
             cost: out.cost,
             counters: out.counters,
             wave: out.wave,
         });
     }
+    assert!(outs.next().is_none(), "surplus outcomes for this job");
+    (acc.finish(comps.count, comps.largest()), solves)
+}
 
-    let screened = acc.finish(comps.count, largest);
+/// Serial fold of one job's metered fabric solves — the per-job billing
+/// view the grid coordinators record in `GridBill::per_job`.
+pub(crate) fn solves_view(solves: &[ComponentSolve]) -> CostSummary {
+    let mut view = CostSummary::default();
+    for sv in solves {
+        view.merge_sequential(&sv.cost);
+    }
+    view
+}
+
+/// The resolved knobs every executor client starts from.
+pub(crate) struct BatchSetup {
+    pub budget: usize,
+    pub threads: usize,
+    /// Screening fabric width (clamped so no rank owns zero rows).
+    pub screen_ranks: usize,
+}
+
+/// Shared solver prologue: install the blocking shape **before any
+/// planning** (the scheduler's Lemma 3.5 pricing reads the installed
+/// tile's cache-reuse term, so plans must see this batch's tile — not
+/// whatever a previous fit left behind), resolve the concurrent rank
+/// budget, and validate a pinned fabric. The standalone fit and the
+/// grid coordinators all run exactly this, so their planning is
+/// identical by construction.
+pub(crate) fn batch_setup(
+    p: usize,
+    cfg: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<BatchSetup> {
+    assert!(opts.total_ranks >= 1, "need at least one rank");
+    crate::linalg::tile::install(cfg.tile);
+    let budget = resolve_budget(cfg, opts);
+    validate_pin(opts, cfg.variant, budget)?;
+    Ok(BatchSetup {
+        budget,
+        threads: cfg.threads.max(1),
+        screen_ranks: opts.total_ranks.min(p.max(1)),
+    })
+}
+
+/// Fit with screening on the distributed path: screen on a fabric, give
+/// every non-trivial component a cost-model-sized fabric plan, and hand
+/// the job-tagged tasks to the [`FabricExecutor`] — waves of fabrics
+/// under the global rank budget, reassembled into the global
+/// block-diagonal estimate with the schedule's critical-path bill.
+/// Small components solve single-node; singletons use the closed form.
+/// This is the executor's thin single-job client; the grid
+/// coordinators submit many jobs into one shared schedule the same way.
+pub fn fit_screened_distributed(
+    x: &Mat,
+    cfg: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<ScreenedDistFit> {
+    let p = x.cols();
+    let setup = batch_setup(p, cfg, opts)?;
+    let mut pass = screen_distributed_multi(
+        x,
+        std::slice::from_ref(&cfg.lambda1),
+        setup.screen_ranks,
+        opts.machine,
+        setup.threads,
+    );
+    let level = pass.levels.pop().expect("one threshold, one level");
+
+    let tasks = plan_job_tasks(0, &level, x.rows(), cfg, opts);
+    let executor = FabricExecutor {
+        budget: setup.budget,
+        threads: setup.threads,
+        machine: opts.machine,
+        sequential: opts.sequential,
+    };
+    let run = executor.run(&[ExecutorJob { x, cfg: *cfg }], tasks)?;
+
+    let components = level.components.count;
+    let (screened, solves) =
+        reassemble_job(&level.components, &pass.diag, cfg.lambda2, run.outcomes);
+    let mut cost = pass.cost;
+    cost.merge_sequential(&run.cost);
     Ok(ScreenedDistFit {
         fit: screened.fit,
         cost,
-        screen_cost: screen.cost,
-        schedule,
-        components: comps.count,
-        largest,
+        screen_cost: pass.cost,
+        solve_cost: run.cost,
+        schedule: run.schedule,
+        components,
+        largest: screened.largest,
         solves,
         per_component: screened.per_component,
     })
@@ -505,6 +621,51 @@ mod tests {
         let four = screen_distributed(&prob.x, 0.2, 4, MachineParams::default(), 2);
         assert_eq!(one.diag, four.diag);
         assert_eq!(one.degrees, four.degrees);
+    }
+
+    /// The amortized multi-threshold pass is level-for-level identical
+    /// to standalone single-threshold passes — components, degrees,
+    /// diag — while the gram is billed exactly once for the whole list.
+    #[test]
+    fn multi_threshold_pass_matches_per_threshold_passes() {
+        let mut rng = Rng::new(15);
+        let prob = gen::chain_problem(14, 60, &mut rng);
+        let thresholds = [0.4, 0.1, 0.25, 0.1]; // unsorted, with a dupe
+        for ranks in [1usize, 3, 4] {
+            let multi = screen_distributed_multi(
+                &prob.x,
+                &thresholds,
+                ranks,
+                MachineParams::default(),
+                2,
+            );
+            assert_eq!(multi.levels.len(), thresholds.len());
+            let mut single_gram_flops = 0;
+            for (k, &thr) in thresholds.iter().enumerate() {
+                let single =
+                    screen_distributed(&prob.x, thr, ranks, MachineParams::default(), 2);
+                assert_eq!(
+                    multi.levels[k].components, single.components,
+                    "ranks {ranks} level {k}"
+                );
+                assert_eq!(multi.levels[k].degrees, single.degrees, "ranks {ranks} level {k}");
+                assert_eq!(multi.diag, single.diag, "ranks {ranks}");
+                single_gram_flops = single.cost.total.flops_dense;
+            }
+            // One gram for four levels: dense flops equal a single
+            // pass's, not four of them.
+            assert_eq!(multi.cost.total.flops_dense, single_gram_flops, "ranks {ranks}");
+            // One collective: the multi pass sends no more messages
+            // than a single-threshold pass.
+            assert_eq!(
+                multi.cost.total.messages,
+                screen_distributed(&prob.x, 0.1, ranks, MachineParams::default(), 2)
+                    .cost
+                    .total
+                    .messages,
+                "ranks {ranks}"
+            );
+        }
     }
 
     /// A rank budget larger than p is clamped rather than spawning

@@ -20,7 +20,10 @@
 //!   computed by refinement — the threshold graphs are nested, so each
 //!   level only rescans within the previous level's components (the
 //!   reuse the screened sweep in [`crate::coordinator::sweep`] relies
-//!   on);
+//!   on; its distributed analogue is the amortized multi-threshold
+//!   pass [`super::screened_dist::screen_distributed_multi`], which
+//!   replays one shared thresholded edge list per level over gram rows
+//!   formed once);
 //! - [`extract_columns`] / [`scatter_block`] / the singleton closed
 //!   form `ω_ii = 1/√(s_ii + λ₂)`: sub-problem extraction and
 //!   block-diagonal reassembly;

@@ -131,7 +131,7 @@ pub fn run_fmri_study(params: &FmriParams) -> FmriOutcome {
         lambda2: params.lambda2_grid.clone(),
     };
     let outcome = run_sweep(&cortex.x, &grid, &base, params.workers);
-    let chosen = select_by_density(&outcome, target_density).expect("non-empty sweep");
+    let chosen = select_by_density(&outcome.results, target_density).expect("non-empty sweep");
     let omega = chosen.fit.omega.clone();
 
     // Block-diagonal check (paper §S.3.3).

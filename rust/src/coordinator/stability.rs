@@ -11,10 +11,12 @@ use std::sync::{mpsc, Arc};
 
 use anyhow::Result;
 
-use crate::concord::{fit_screened_distributed, fit_single_node, ConcordConfig, ScreenedDistOptions};
+use crate::concord::executor::{ExecutorJob, FabricExecutor, TaskOutcome};
+use crate::concord::screened_dist::{batch_setup, plan_job_tasks, reassemble_job, solves_view};
+use crate::concord::{fit_single_node, screen_distributed_multi, ConcordConfig, ScreenedDistOptions};
 use crate::linalg::Mat;
 use crate::rng::Rng;
-use crate::simnet::cost::CostSummary;
+use crate::simnet::cost::{CostSummary, GridBill};
 
 /// Stability-selection configuration.
 #[derive(Debug, Clone, Copy)]
@@ -48,8 +50,9 @@ pub struct StabilityOutcome {
 
 /// Row indices of subsample `b`: one reproducible stream per index,
 /// shared by the single-node and distributed paths (so both draw the
-/// *same* subsamples for a given seed).
-fn subsample_rows(n: usize, m: usize, seed: u64, b: usize) -> Vec<usize> {
+/// *same* subsamples for a given seed). Public so wiring tests (and
+/// downstream analyses) can rebuild exactly the subsample a fit saw.
+pub fn subsample_rows(n: usize, m: usize, seed: u64, b: usize) -> Vec<usize> {
     let mut rng = Rng::new(seed ^ (0x5AB1E ^ (b as u64) << 20));
     rng.sample_indices(n, m)
 }
@@ -131,21 +134,30 @@ pub struct StabilityDistOutcome {
     /// Stable edges (frequency ≥ threshold).
     pub edges: Vec<(usize, usize)>,
     pub subsamples: usize,
-    /// Aggregate bill: subsample fits run one after another (each fit's
-    /// own bill is already its concurrent-schedule critical path), so
-    /// the per-fit summaries fold with `merge_sequential`.
+    /// Grid-level billing view: the per-subsample screening passes
+    /// (each subsample owns its data, so screening cannot be shared —
+    /// passes fold serially into `screen`), the shared cross-subsample
+    /// wave schedule's critical path (`waves`), and per-subsample
+    /// serial views of each fit's metered fabrics.
+    pub bill: GridBill,
+    /// Convenience: `bill.total()` — the whole run's bill.
     pub cost: CostSummary,
 }
 
-/// Stability selection over the screened **distributed** solver: every
-/// subsample fit runs [`fit_screened_distributed`] — screening fabric,
-/// per-component plans, and the same concurrent wave packer
-/// ([`crate::cost::schedule::plan_concurrent`]) under the rank budget in
-/// `base.ranks_budget`. Subsamples execute in index order (parallelism
-/// comes from each fit's waves, which own the machine-wide rank budget
-/// one fit at a time; `cfg.workers` is ignored here), drawing the same
-/// reproducible row subsamples as [`stability_selection`], so the
-/// outcome is deterministic given the seed.
+/// Stability selection over the screened **distributed** solver, with
+/// the *batch* as the scheduling unit: every subsample is screened on
+/// its own fabric (its data is its own, so the pass cannot be
+/// amortized), but every (subsample, component) solve is submitted as
+/// one job-tagged task into **one shared wave schedule**
+/// ([`crate::concord::executor::FabricExecutor`]) under the rank
+/// budget in `base.ranks_budget` — waves may mix fabrics from
+/// different subsamples, so small per-subsample components no longer
+/// leave the machine idle. Subsample estimates are reassembled in
+/// index order from the same reproducible row subsamples as
+/// [`stability_selection`] ([`subsample_rows`]), so the outcome is
+/// deterministic given the seed — and bit-identical to fitting each
+/// subsample standalone (`rust/tests/grid_schedule.rs`;
+/// `cfg.workers` is ignored here).
 pub fn stability_selection_dist(
     x: &Mat,
     base: &ConcordConfig,
@@ -154,23 +166,67 @@ pub fn stability_selection_dist(
 ) -> Result<StabilityDistOutcome> {
     let (n, p) = x.shape();
     let m = ((n as f64) * cfg.fraction).round().max(2.0) as usize;
-    let mut freq = Mat::zeros(p, p);
-    let mut cost = CostSummary::default();
+    let setup = batch_setup(p, base, opts)?;
+
+    // Screen every subsample (serially billed), planning its components
+    // into the shared task list as we go.
+    let mut subs: Vec<Mat> = Vec::with_capacity(cfg.subsamples);
     for b in 0..cfg.subsamples {
         let rows = subsample_rows(n, m, cfg.seed, b);
-        let sub = Mat::from_fn(m, p, |i, j| x.get(rows[i], j));
-        let fit = fit_screened_distributed(&sub, base, opts)?;
-        cost.merge_sequential(&fit.cost);
+        subs.push(Mat::from_fn(m, p, |i, j| x.get(rows[i], j)));
+    }
+    let mut bill = GridBill::default();
+    let mut levels = Vec::with_capacity(cfg.subsamples);
+    let mut tasks = Vec::new();
+    let mut tasks_per_job = Vec::with_capacity(cfg.subsamples);
+    for (b, sub) in subs.iter().enumerate() {
+        let mut pass = screen_distributed_multi(
+            sub,
+            std::slice::from_ref(&base.lambda1),
+            setup.screen_ranks,
+            opts.machine,
+            setup.threads,
+        );
+        bill.screen.merge_sequential(&pass.cost);
+        let level = pass.levels.pop().expect("one threshold, one level");
+        let job_tasks = plan_job_tasks(b, &level, m, base, opts);
+        tasks_per_job.push(job_tasks.len());
+        tasks.extend(job_tasks);
+        levels.push((level, pass.diag));
+    }
+
+    // One shared cross-subsample schedule for every component solve.
+    let exec_jobs: Vec<ExecutorJob<'_>> =
+        subs.iter().map(|sub| ExecutorJob { x: sub, cfg: *base }).collect();
+    let executor = FabricExecutor {
+        budget: setup.budget,
+        threads: setup.threads,
+        machine: opts.machine,
+        sequential: opts.sequential,
+    };
+    let run = executor.run(&exec_jobs, tasks)?;
+    bill.waves = run.cost;
+
+    // Reassemble per subsample in index order; the frequency matrix
+    // accumulates in that fixed order whatever the launch order was.
+    let mut freq = Mat::zeros(p, p);
+    let mut outcomes = run.outcomes.into_iter();
+    for (b, &count) in tasks_per_job.iter().enumerate() {
+        let (level, diag) = &levels[b];
+        let outs: Vec<TaskOutcome> = outcomes.by_ref().take(count).collect();
+        let (screened, solves) = reassemble_job(&level.components, diag, base.lambda2, outs);
+        bill.per_job.push(solves_view(&solves));
         for i in 0..p {
             for j in 0..p {
-                if i != j && fit.fit.omega.get(i, j) != 0.0 {
+                if i != j && screened.fit.omega.get(i, j) != 0.0 {
                     freq.set(i, j, freq.get(i, j) + 1.0 / cfg.subsamples as f64);
                 }
             }
         }
     }
     let edges = stable_edges(&freq, cfg.threshold);
-    Ok(StabilityDistOutcome { frequency: freq, edges, subsamples: cfg.subsamples, cost })
+    let cost = bill.total();
+    Ok(StabilityDistOutcome { frequency: freq, edges, subsamples: cfg.subsamples, bill, cost })
 }
 
 #[cfg(test)]

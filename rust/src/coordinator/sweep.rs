@@ -13,13 +13,15 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::concord::executor::{ExecutorJob, ExecutorTask, FabricExecutor, TaskOutcome};
+use crate::concord::screened_dist::{batch_setup, plan_job_tasks, reassemble_job, solves_view};
 use crate::concord::screening::{fit_with_screening_on, nested_components, Components};
-use crate::concord::{
-    fit_screened_distributed, fit_single_node, ConcordConfig, ConcordFit, ScreenedDistOptions,
-};
+use crate::concord::{fit_screened_distributed, fit_single_node, ConcordConfig, ConcordFit};
+use crate::concord::{screen_distributed_multi, ScreenedDistOptions};
+use crate::cost::schedule::ConcurrentSchedule;
 use crate::linalg::Mat;
 use crate::runtime::native;
-use crate::simnet::cost::CostSummary;
+use crate::simnet::cost::{CostSummary, GridBill};
 
 /// A (λ₁, λ₂) grid specification.
 #[derive(Debug, Clone)]
@@ -193,68 +195,181 @@ pub fn run_sweep_screened(
     ScreenedSweepOutcome { results, workers, components_per_l1 }
 }
 
+/// How a screened distributed sweep schedules the grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GridSchedule {
+    /// The grid is the scheduling unit (the default): **one** amortized
+    /// distributed screening pass covers the whole λ₁ list, and every
+    /// (grid point, component) pair is submitted into one shared
+    /// cross-job wave schedule — waves may mix fabrics from different
+    /// grid points. Results are bit-identical to [`PerPoint`]
+    /// (`rust/tests/grid_schedule.rs`); only the bill shrinks.
+    ///
+    /// [`PerPoint`]: GridSchedule::PerPoint
+    #[default]
+    Packed,
+    /// Every grid point runs standalone ([`fit_screened_distributed`]):
+    /// its own screening pass, its own waves, points one after another —
+    /// the pre-amortization behavior, kept as the billing baseline and
+    /// equivalence reference.
+    PerPoint,
+}
+
 /// Aggregate outcome of a screened *distributed* sweep.
 #[derive(Debug)]
 pub struct ScreenedDistSweepOutcome {
-    /// Results in grid order (the points run in job order).
+    /// Results in grid order (reassembled per job in job order).
     pub results: Vec<SweepResult>,
-    /// Each grid point's own concurrent-schedule bill (screening pass +
-    /// critical path of its component waves), aligned with `results`.
-    pub per_point_cost: Vec<CostSummary>,
-    /// The whole sweep's bill: grid points run one after another, so
-    /// their concurrent bills fold with `merge_sequential`.
-    pub cost: CostSummary,
     /// Component count at each grid point, aligned with `results`.
     pub components: Vec<usize>,
+    /// The executed wave schedule(s): one shared cross-job schedule
+    /// under [`GridSchedule::Packed`], one per grid point under
+    /// [`GridSchedule::PerPoint`].
+    pub schedules: Vec<ConcurrentSchedule>,
+    /// Grid-level billing view: the screening share (one amortized pass
+    /// when packed; every point's own pass folded serially otherwise),
+    /// the executed schedule's critical path, and per-job serial views
+    /// of each point's metered fabric solves.
+    pub bill: GridBill,
+    /// Convenience: `bill.total()` — the sweep's whole bill.
+    pub cost: CostSummary,
 }
 
-/// The screened sweep on the distributed path: every (λ₁, λ₂) grid
-/// point runs [`fit_screened_distributed`] — the same per-component
-/// planner and wave packer ([`crate::cost::schedule::plan_concurrent`])
-/// the single-point solver uses, with the rank budget threaded through
-/// `base.ranks_budget`. Grid points execute in job order (the
-/// machine-wide rank budget belongs to one point at a time; intra-point
-/// parallelism comes from the waves), so results are deterministic and
-/// each point's estimate is exactly the single-point screened
-/// distributed fit. Each point runs — and is billed for — its own
-/// distributed screening pass; amortizing one gram + nested components
-/// across the grid the way [`run_sweep_screened`] does is a known
-/// follow-up (see ROADMAP).
+/// The screened sweep on the distributed path: the same per-component
+/// planner and wave packer the single-point solver uses, with the rank
+/// budget threaded through `base.ranks_budget`. Under the default
+/// [`GridSchedule::Packed`] the whole grid is the scheduling unit —
+/// one amortized screening pass (the gram and the labeling collective
+/// are billed **once** for the entire λ₁ list, the distributed analogue
+/// of [`run_sweep_screened`]'s nested-components reuse) and one shared
+/// wave schedule over every (grid point, component) pair. Estimates are
+/// reassembled per job in job order and are bit-identical to running
+/// [`fit_screened_distributed`] point by point, at any budget and
+/// thread count (`rust/tests/grid_schedule.rs`).
 pub fn run_sweep_screened_dist(
+    x: &Mat,
+    grid: &GridSpec,
+    base: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+    mode: GridSchedule,
+) -> Result<ScreenedDistSweepOutcome> {
+    match mode {
+        GridSchedule::Packed => sweep_dist_packed(x, grid, base, opts),
+        GridSchedule::PerPoint => sweep_dist_per_point(x, grid, base, opts),
+    }
+}
+
+/// The reference schedule: every grid point standalone, in job order.
+fn sweep_dist_per_point(
     x: &Mat,
     grid: &GridSpec,
     base: &ConcordConfig,
     opts: &ScreenedDistOptions,
 ) -> Result<ScreenedDistSweepOutcome> {
     let mut results = Vec::new();
-    let mut per_point_cost = Vec::new();
     let mut components = Vec::new();
-    let mut cost = CostSummary::default();
+    let mut schedules = Vec::new();
+    let mut bill = GridBill::default();
     for job in grid.jobs(base) {
         let out = fit_screened_distributed(x, &job.cfg, opts)?;
-        cost.merge_sequential(&out.cost);
-        per_point_cost.push(out.cost);
+        bill.screen.merge_sequential(&out.screen_cost);
+        bill.waves.merge_sequential(&out.solve_cost);
+        bill.per_job.push(solves_view(&out.solves));
+        schedules.push(out.schedule);
         components.push(out.components);
         let fit = out.fit;
         let density = offdiag_density(&fit.omega);
         results.push(SweepResult { job, fit, density, worker: 0 });
     }
-    Ok(ScreenedDistSweepOutcome { results, per_point_cost, cost, components })
+    let cost = bill.total();
+    Ok(ScreenedDistSweepOutcome { results, components, schedules, bill, cost })
+}
+
+/// The packed schedule: one amortized screening pass + one shared
+/// cross-job wave schedule for the whole grid.
+fn sweep_dist_packed(
+    x: &Mat,
+    grid: &GridSpec,
+    base: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<ScreenedDistSweepOutcome> {
+    let setup = batch_setup(x.cols(), base, opts)?;
+
+    // One distributed gram + one metered labeling collective for the
+    // whole λ₁ list; the λ₂ axis reuses its λ₁'s level for free.
+    let pass =
+        screen_distributed_multi(x, &grid.lambda1, setup.screen_ranks, opts.machine, setup.threads);
+
+    // Plan each λ₁ level once — plans depend on the level (and the
+    // shared variant/threads), never on λ₂ — then re-tag the level's
+    // tasks for every job that shares it: exactly the plans the
+    // standalone client would compute, without repeating the
+    // replication search per λ₂ value.
+    let level_tasks: Vec<Vec<ExecutorTask>> = pass
+        .levels
+        .iter()
+        .map(|level| plan_job_tasks(0, level, x.rows(), base, opts))
+        .collect();
+    let jobs = grid.jobs(base);
+    let exec_jobs: Vec<ExecutorJob<'_>> =
+        jobs.iter().map(|job| ExecutorJob { x, cfg: job.cfg }).collect();
+    let mut tasks = Vec::new();
+    let mut tasks_per_job = Vec::with_capacity(jobs.len());
+    for job in &jobs {
+        let mut job_tasks = level_tasks[job.grid_pos.0].clone();
+        for task in &mut job_tasks {
+            task.tag.job = job.id;
+        }
+        tasks_per_job.push(job_tasks.len());
+        tasks.extend(job_tasks);
+    }
+    let executor = FabricExecutor {
+        budget: setup.budget,
+        threads: setup.threads,
+        machine: opts.machine,
+        sequential: opts.sequential,
+    };
+    let run = executor.run(&exec_jobs, tasks)?;
+
+    // Reassemble per job in job order: accumulation order is a function
+    // of each job's decomposition only, so cross-job packing is
+    // invisible in every estimate.
+    let mut outcomes = run.outcomes.into_iter();
+    let mut results = Vec::with_capacity(jobs.len());
+    let mut components = Vec::with_capacity(jobs.len());
+    let mut per_job = Vec::with_capacity(jobs.len());
+    for (job, &count) in jobs.iter().zip(&tasks_per_job) {
+        let level = &pass.levels[job.grid_pos.0];
+        let outs: Vec<TaskOutcome> = outcomes.by_ref().take(count).collect();
+        let (screened, solves) =
+            reassemble_job(&level.components, &pass.diag, job.cfg.lambda2, outs);
+        per_job.push(solves_view(&solves));
+        components.push(level.components.count);
+        let density = offdiag_density(&screened.fit.omega);
+        results.push(SweepResult { job: *job, fit: screened.fit, density, worker: 0 });
+    }
+    let bill = GridBill { screen: pass.cost, waves: run.cost, per_job };
+    let cost = bill.total();
+    Ok(ScreenedDistSweepOutcome {
+        results,
+        components,
+        schedules: vec![run.schedule],
+        bill,
+        cost,
+    })
 }
 
 /// Model selection: the result whose off-diagonal density is closest to
 /// `target` (the paper tunes until estimates are "equally sparse" as the
-/// comparison method / the expected graph degree).
-pub fn select_by_density(outcome: &SweepOutcome, target: f64) -> Option<&SweepResult> {
-    outcome
-        .results
+/// comparison method / the expected graph degree). Takes the result
+/// slice directly so every sweep flavor — plain, screened, screened
+/// distributed — selects the same way; NaN densities (or a NaN target)
+/// sort last under `total_cmp` instead of panicking, so a finite
+/// candidate always wins when one exists.
+pub fn select_by_density(results: &[SweepResult], target: f64) -> Option<&SweepResult> {
+    results
         .iter()
-        .min_by(|a, b| {
-            (a.density - target)
-                .abs()
-                .partial_cmp(&(b.density - target).abs())
-                .unwrap()
-        })
+        .min_by(|a, b| (a.density - target).abs().total_cmp(&(b.density - target).abs()))
 }
 
 #[cfg(test)]
@@ -317,11 +432,11 @@ mod tests {
         let grid = GridSpec { lambda1: vec![0.02, 0.3, 2.0], lambda2: vec![0.0] };
         let out = run_sweep(&x, &grid, &base_cfg(), 2);
         // Huge lambda -> density 0; selecting target 0 picks it.
-        let sel = select_by_density(&out, 0.0).unwrap();
+        let sel = select_by_density(&out.results, 0.0).unwrap();
         assert_eq!(sel.job.grid_pos.0, 2);
         // Target the densest fit.
         let dmax = out.results.iter().map(|r| r.density).fold(0.0, f64::max);
-        let sel = select_by_density(&out, 1.0).unwrap();
+        let sel = select_by_density(&out.results, 1.0).unwrap();
         assert_eq!(sel.density, dmax);
     }
 
@@ -356,9 +471,10 @@ mod tests {
         assert!(a.components_per_l1[2] >= a.components_per_l1[1]);
     }
 
-    /// The screened distributed sweep is the single-point screened
-    /// distributed solver run per grid point: bit-identical estimates,
-    /// one concurrent-schedule bill per point, bills folded serially.
+    /// The packed screened distributed sweep reproduces the single-point
+    /// screened distributed solver bit for bit at every grid point —
+    /// packing and amortization are schedule-only — while its grid bill
+    /// is internally consistent (`cost == bill.total()`).
     #[test]
     fn screened_dist_sweep_matches_per_point_solver() {
         use crate::simnet::MachineParams;
@@ -368,23 +484,31 @@ mod tests {
         // β_mem = 0: planning must not race other tests' tile installs.
         let machine = MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() };
         let opts = ScreenedDistOptions { total_ranks: 4, machine, ..Default::default() };
-        let out = run_sweep_screened_dist(&x, &grid, &base, &opts).unwrap();
-        assert_eq!(out.results.len(), 4);
-        assert_eq!(out.per_point_cost.len(), 4);
-        assert_eq!(out.components.len(), 4);
-        let mut folded = crate::simnet::cost::CostSummary::default();
-        for (r, pc) in out.results.iter().zip(&out.per_point_cost) {
-            let direct = crate::concord::fit_screened_distributed(&x, &r.job.cfg, &opts).unwrap();
-            assert!(
-                r.fit.omega.max_abs_diff(&direct.fit.omega) == 0.0,
-                "job {} differs from the single-point solver",
-                r.job.id
-            );
-            assert_eq!(pc.total, direct.cost.total, "job {} bill drifted", r.job.id);
-            folded.merge_sequential(pc);
+        for mode in [GridSchedule::Packed, GridSchedule::PerPoint] {
+            let out = run_sweep_screened_dist(&x, &grid, &base, &opts, mode).unwrap();
+            assert_eq!(out.results.len(), 4, "{mode:?}");
+            assert_eq!(out.components.len(), 4, "{mode:?}");
+            assert_eq!(out.bill.per_job.len(), 4, "{mode:?}");
+            match mode {
+                GridSchedule::Packed => assert_eq!(out.schedules.len(), 1),
+                GridSchedule::PerPoint => assert_eq!(out.schedules.len(), 4),
+            }
+            for r in &out.results {
+                let direct =
+                    crate::concord::fit_screened_distributed(&x, &r.job.cfg, &opts).unwrap();
+                assert!(
+                    r.fit.omega.max_abs_diff(&direct.fit.omega) == 0.0,
+                    "{mode:?}: job {} differs from the single-point solver",
+                    r.job.id
+                );
+                assert_eq!(r.fit.iterations, direct.fit.iterations, "{mode:?}");
+            }
+            let total = out.bill.total();
+            assert_eq!(out.cost.total, total.total, "{mode:?}");
+            assert!((out.cost.time - total.time).abs() < 1e-15, "{mode:?}");
+            // The packed/serial views never cross: total ≤ sequential.
+            assert!(out.bill.total().time <= out.bill.sequential().time + 1e-12, "{mode:?}");
         }
-        assert_eq!(folded.total, out.cost.total);
-        assert!((folded.time - out.cost.time).abs() < 1e-15);
     }
 
     /// Property: for random grids and worker counts, the sweep completes

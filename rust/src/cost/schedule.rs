@@ -16,13 +16,19 @@
 //! a global rank budget so they run *concurrently* instead of one after
 //! another — the communication-avoiding play the Lemma 3.5 model
 //! enables, and the block-solver trick of exploiting independent
-//! subproblems. Components are taken longest-processing-time first
-//! (LPT on `modeled_time`) and placed into the first wave with enough
-//! rank headroom; a component whose plan is wider than the budget is
-//! first re-planned under the narrower cap to the cheapest runnable
-//! power-of-two that fits ([`shrink_to_budget`]). The resulting
-//! schedule's makespan is the sum of per-wave maxima — what
-//! `CostSummary::merge_concurrent` bills.
+//! subproblems. Every schedulable unit is **job-tagged** ([`JobTag`]):
+//! a component belongs to some *job* (a grid point of a (λ₁, λ₂)
+//! sweep, a stability subsample — a single fit is job 0), and the
+//! packer treats the flat (job, component) list as one pool, so waves
+//! may mix fabrics from different jobs. Components are taken
+//! longest-processing-time first (LPT on `modeled_time`, ties broken
+//! by the tag so the schedule is a pure function of its inputs) and
+//! placed into the first wave with enough rank headroom; a component
+//! whose plan is wider than the budget is first re-planned under the
+//! narrower cap to the cheapest runnable power-of-two that fits
+//! ([`shrink_to_budget`]). The resulting schedule's makespan is the
+//! sum of per-wave maxima — what `CostSummary::merge_concurrent`
+//! bills.
 
 use crate::concord::Variant;
 use crate::simnet::MachineParams;
@@ -165,12 +171,34 @@ pub fn shrink_to_budget(
     plan_component(shape, budget, threads, machine, plan.variant)
 }
 
-/// One component's slot in a concurrent schedule: which component, and
-/// the (possibly budget-shrunk) fabric plan it will actually run.
+/// Identity of one schedulable unit of work: component `component` of
+/// submission `job`. Jobs number the independent problems sharing one
+/// schedule — grid points of a sweep, stability subsamples; a
+/// standalone fit submits everything under [`JobTag::single`] (job 0).
+/// The derived ordering (job-major, then component) is the
+/// deterministic LPT tie-break and the sequential-reference launch
+/// order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobTag {
+    pub job: usize,
+    pub component: usize,
+}
+
+impl JobTag {
+    /// The tag of a standalone (single-job) fit's component.
+    pub fn single(component: usize) -> Self {
+        JobTag { job: 0, component }
+    }
+}
+
+/// One component's slot in a concurrent schedule: which (job,
+/// component), and the (possibly budget-shrunk) fabric plan it will
+/// actually run.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ScheduledComponent {
-    /// Caller-side component id (index into the screened decomposition).
-    pub component: usize,
+    /// Which job's component this is (index into the caller's screened
+    /// decomposition for that job).
+    pub tag: JobTag,
     pub plan: FabricPlan,
 }
 
@@ -225,8 +253,8 @@ impl ConcurrentSchedule {
 
 /// Pack independent component fabrics into waves under a global rank
 /// budget, minimizing the modeled makespan greedily: components are
-/// sorted longest-processing-time first (ties broken by component id,
-/// so the schedule is a pure function of its inputs) and each is placed
+/// sorted longest-processing-time first (ties broken by [`JobTag`], so
+/// the schedule is a pure function of its inputs) and each is placed
 /// into the first wave with enough rank headroom — because earlier
 /// entries are never shorter, joining a wave never lengthens it, so
 /// first-fit is makespan-optimal for the wave set the scan builds. A
@@ -234,10 +262,13 @@ impl ConcurrentSchedule {
 /// runnable power-of-two that fits ([`shrink_to_budget`]); every wave
 /// therefore occupies at most `budget` ranks.
 ///
-/// Each input is `(component id, plan, shape)` — the shape is only
-/// consulted when a plan must be shrunk and re-priced.
+/// The input is the flat list of every submitted job's components —
+/// `(tag, plan, shape)`, the shape consulted only when a plan must be
+/// shrunk and re-priced — so a sweep's grid points and a stability
+/// run's subsamples pack into the *same* waves as naturally as one
+/// fit's components do.
 pub fn plan_concurrent(
-    components: &[(usize, FabricPlan, ProblemShape)],
+    components: &[(JobTag, FabricPlan, ProblemShape)],
     budget: usize,
     threads: usize,
     machine: &MachineParams,
@@ -245,13 +276,13 @@ pub fn plan_concurrent(
     let budget = budget.max(1);
     let mut items: Vec<ScheduledComponent> = components
         .iter()
-        .map(|&(component, plan, shape)| ScheduledComponent {
-            component,
+        .map(|&(tag, plan, shape)| ScheduledComponent {
+            tag,
             plan: shrink_to_budget(&shape, plan, budget, threads, machine),
         })
         .collect();
     items.sort_by(|a, b| {
-        b.plan.modeled_time.total_cmp(&a.plan.modeled_time).then(a.component.cmp(&b.component))
+        b.plan.modeled_time.total_cmp(&a.plan.modeled_time).then(a.tag.cmp(&b.tag))
     });
     let mut waves: Vec<Wave> = Vec::new();
     for item in items {
@@ -348,13 +379,13 @@ mod tests {
         assert!(t8.modeled_time <= t1.modeled_time);
     }
 
-    fn shapes(ps: &[f64]) -> Vec<(usize, FabricPlan, ProblemShape)> {
+    fn shapes(ps: &[f64]) -> Vec<(JobTag, FabricPlan, ProblemShape)> {
         let m = machine();
         ps.iter()
             .enumerate()
             .map(|(c, &p)| {
                 let shape = ProblemShape { p, n: 80.0, s: 30.0, t: 8.0, d: 6.0 };
-                (c, plan_component(&shape, 16, 1, &m, Variant::Obs), shape)
+                (JobTag::single(c), plan_component(&shape, 16, 1, &m, Variant::Obs), shape)
             })
             .collect()
     }
@@ -369,7 +400,7 @@ mod tests {
             let mut seen: Vec<usize> = sched
                 .waves
                 .iter()
-                .flat_map(|w| w.entries.iter().map(|e| e.component))
+                .flat_map(|w| w.entries.iter().map(|e| e.tag.component))
                 .collect();
             seen.sort_unstable();
             assert_eq!(seen, vec![0, 1, 2, 3, 4], "budget {budget}");
@@ -431,7 +462,7 @@ mod tests {
     }
 
     /// The schedule is a pure function of its inputs: identical calls
-    /// give identical waves (LPT ties broken by component id).
+    /// give identical waves (LPT ties broken by the job tag).
     #[test]
     fn packing_is_deterministic() {
         let comps = shapes(&[4_000.0, 4_000.0, 4_000.0, 2_000.0]);
@@ -443,5 +474,71 @@ mod tests {
             assert_eq!(wa.entries, wb.entries);
         }
         assert_eq!(a.components(), 4);
+    }
+
+    /// Tags from several jobs pack into one pool: every (job, component)
+    /// pair appears exactly once, waves may mix jobs, and LPT ties
+    /// break job-major then component-major.
+    #[test]
+    fn cross_job_packing_covers_every_tag_and_may_mix_jobs() {
+        let m = machine();
+        // Three jobs with identical components: all plans tie on
+        // modeled_time, so the LPT order is exactly the tag order.
+        let mut comps: Vec<(JobTag, FabricPlan, ProblemShape)> = Vec::new();
+        for job in 0..3usize {
+            for c in 0..2usize {
+                let shape = ProblemShape { p: 8_000.0, n: 80.0, s: 30.0, t: 8.0, d: 6.0 };
+                let plan = plan_component(&shape, 16, 1, &m, Variant::Obs);
+                comps.push((JobTag { job, component: c }, plan, shape));
+            }
+        }
+        let per_fabric = comps[0].1.ranks;
+        assert!(per_fabric >= 2, "fixture must want multi-rank fabrics");
+
+        let sched = plan_concurrent(&comps, 4 * per_fabric, 1, &m);
+        let mut seen: Vec<JobTag> = sched
+            .waves
+            .iter()
+            .flat_map(|w| w.entries.iter().map(|e| e.tag))
+            .collect();
+        let flat = seen.clone();
+        seen.sort();
+        let want: Vec<JobTag> = comps.iter().map(|&(t, _, _)| t).collect();
+        assert_eq!(seen, want, "every (job, component) scheduled exactly once");
+        // All-ties LPT: entries come out in tag order across the waves.
+        assert_eq!(flat, want, "tie-break must be job-major tag order");
+        // Four fabrics fit per wave, so the first wave mixes jobs.
+        assert!(
+            sched.waves[0].entries.iter().map(|e| e.tag.job).collect::<Vec<_>>().windows(2).any(
+                |w| w[0] != w[1]
+            ),
+            "first wave must mix fabrics from different jobs"
+        );
+        for w in &sched.waves {
+            assert!(w.ranks() <= 4 * per_fabric);
+        }
+    }
+
+    /// `JobTag::single` pins job 0, and the derived ordering is
+    /// job-major (the sequential-reference launch order).
+    #[test]
+    fn job_tag_ordering_is_job_major() {
+        assert_eq!(JobTag::single(3), JobTag { job: 0, component: 3 });
+        let mut tags = vec![
+            JobTag { job: 1, component: 0 },
+            JobTag { job: 0, component: 2 },
+            JobTag { job: 0, component: 1 },
+            JobTag { job: 2, component: 0 },
+        ];
+        tags.sort();
+        assert_eq!(
+            tags,
+            vec![
+                JobTag { job: 0, component: 1 },
+                JobTag { job: 0, component: 2 },
+                JobTag { job: 1, component: 0 },
+                JobTag { job: 2, component: 0 },
+            ]
+        );
     }
 }

@@ -15,7 +15,9 @@ use hpconcord::concord::{
     ConcordConfig, ScreenedDistOptions, Variant,
 };
 use hpconcord::config::Config;
-use hpconcord::coordinator::{run_sweep, run_sweep_screened, GridSpec};
+use hpconcord::coordinator::{
+    run_sweep, run_sweep_screened, select_by_density, GridSchedule, GridSpec, SweepResult,
+};
 use hpconcord::cost::ProblemShape;
 use hpconcord::gen;
 use hpconcord::linalg::{tile, Mat, TileConfig};
@@ -141,6 +143,32 @@ fn write_omega(path: &str, omega: &Mat) -> Result<()> {
         text.push('\n');
     }
     std::fs::write(path, text).map_err(|e| anyhow!("writing omega to {path}: {e}"))
+}
+
+/// Write grid results as CSV (`sweep --out-csv`): one row per (λ₁, λ₂)
+/// point with the quantities offline model selection needs. The
+/// `components` and `modeled_time_s` columns are filled when the sweep
+/// mode produces them (screened sweeps know their decompositions; the
+/// distributed sweep also bills per point) and left empty otherwise.
+fn write_sweep_csv(
+    path: &str,
+    results: &[SweepResult],
+    components: Option<&[usize]>,
+    modeled: Option<&[f64]>,
+) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut text = String::from("lambda1,lambda2,density,iterations,components,modeled_time_s\n");
+    for (k, r) in results.iter().enumerate() {
+        let comps = components.map(|c| c[k].to_string()).unwrap_or_default();
+        let time = modeled.map(|t| format!("{:e}", t[k])).unwrap_or_default();
+        writeln!(
+            text,
+            "{},{},{},{},{comps},{time}",
+            r.job.cfg.lambda1, r.job.cfg.lambda2, r.density, r.fit.iterations
+        )
+        .expect("string write");
+    }
+    std::fs::write(path, text).map_err(|e| anyhow!("writing sweep csv to {path}: {e}"))
 }
 
 /// The kernel layer's cache-blocking shape: `--tile mc,kc,nc`, else the
@@ -325,6 +353,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if mode != "single" && mode != "dist" {
         return Err(anyhow!("unknown --mode {mode:?} (single|dist)"));
     }
+    if args.has("per-point") && mode != "dist" {
+        return Err(anyhow!(
+            "--per-point applies to sweep --screen --mode dist only (it picks the \
+             per-point reference schedule of the distributed sweep)"
+        ));
+    }
+    // Per-point component counts and modeled times, when the sweep mode
+    // produces them (threaded into the table and the --out-csv rows).
+    let mut components_col: Option<Vec<usize>> = None;
+    let mut modeled_col: Option<Vec<f64>> = None;
     let results = if mode == "dist" {
         if !screen {
             return Err(anyhow!(
@@ -333,26 +371,53 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         if args.has("workers") {
             eprintln!(
-                "note: --workers applies to the single-node sweep; the dist sweep runs \
-                 grid points in order (parallelism comes from each point's waves)"
+                "note: --workers applies to the single-node sweep; the dist sweep packs \
+                 component fabrics into waves (parallelism comes from the shared schedule)"
             );
         }
         let opts = screened_dist_options(args, &file_cfg)?;
-        let out =
-            hpconcord::coordinator::run_sweep_screened_dist(&problem.x, &grid, &base, &opts)?;
+        let sched_mode =
+            if args.has("per-point") { GridSchedule::PerPoint } else { GridSchedule::Packed };
+        let out = hpconcord::coordinator::run_sweep_screened_dist(
+            &problem.x, &grid, &base, &opts, sched_mode,
+        )?;
         let comps: Vec<String> = out.components.iter().map(|c| c.to_string()).collect();
         println!(
-            "screened dist sweep: components per point = [{}]; aggregate modeled \
-             time {:.4}s (comm {:.4}s)",
-            comps.join(", "),
-            out.cost.time,
-            out.cost.comm_time
+            "screened dist sweep ({}): components per point = [{}]",
+            match sched_mode {
+                GridSchedule::Packed => "packed",
+                GridSchedule::PerPoint => "per-point",
+            },
+            comps.join(", ")
         );
+        if let [sched] = &out.schedules[..] {
+            println!(
+                "grid schedule: {} wave(s) under rank budget {} — modeled makespan \
+                 {:.4}s vs {:.4}s sequential",
+                sched.waves.len(),
+                sched.budget,
+                sched.makespan(),
+                sched.sequential_time()
+            );
+        }
+        println!(
+            "grid bill: screening {:.4}s + waves {:.4}s = {:.4}s modeled \
+             (comm {:.4}s; unpacked serial {:.4}s)",
+            out.bill.screen.time,
+            out.bill.waves.time,
+            out.cost.time,
+            out.cost.comm_time,
+            out.bill.sequential().time
+        );
+        components_col = Some(out.components);
+        modeled_col = Some(out.bill.per_job.iter().map(|c| c.time).collect());
         out.results
     } else if screen {
         let out = run_sweep_screened(&problem.x, &grid, &base, workers);
         let comps: Vec<String> = out.components_per_l1.iter().map(|c| c.to_string()).collect();
         println!("screened sweep: components per λ1 = [{}]", comps.join(", "));
+        components_col =
+            Some(out.results.iter().map(|r| out.components_per_l1[r.job.grid_pos.0]).collect());
         out.results
     } else {
         run_sweep(&problem.x, &grid, &base, workers).results
@@ -370,6 +435,25 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ]);
     }
     print!("{table}");
+    let out_csv = args.str_or("out-csv", "");
+    if !out_csv.is_empty() {
+        write_sweep_csv(&out_csv, &results, components_col.as_deref(), modeled_col.as_deref())?;
+        println!("wrote grid csv to {out_csv}");
+    }
+    let out_omega = args.str_or("out-omega", "");
+    if !out_omega.is_empty() || args.has("select-density") {
+        let target = args.f64_or("select-density", 0.1)?;
+        let sel = select_by_density(&results, target)
+            .ok_or_else(|| anyhow!("empty sweep: nothing to select"))?;
+        println!(
+            "selected λ1={} λ2={} (density {:.4} vs target {target})",
+            sel.job.cfg.lambda1, sel.job.cfg.lambda2, sel.density
+        );
+        if !out_omega.is_empty() {
+            write_omega(&out_omega, &sel.fit.omega)?;
+            println!("wrote selected omega to {out_omega}");
+        }
+    }
     Ok(())
 }
 

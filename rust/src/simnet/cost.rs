@@ -170,6 +170,52 @@ impl CostSummary {
     }
 }
 
+/// Grid-level billing view of a multi-job schedule: an (amortized)
+/// screening share, the executed cross-job wave schedule's critical
+/// path, and per-job serial views of each job's own metered fabrics.
+///
+/// Built by the grid coordinators ([`crate::coordinator::sweep`],
+/// [`crate::coordinator::stability`]) on top of the executor layer
+/// ([`crate::concord::executor`]): `screen` is everything billed for
+/// component discovery (one amortized pass for a packed sweep, the
+/// serial fold of per-job passes when screening cannot be shared —
+/// e.g. stability subsamples, which each own their data), `waves` is
+/// the shared schedule's critical path (per-wave concurrent merges
+/// folded sequentially), and `per_job[j]` is the *view* "job j's
+/// metered fabric solves folded serially" — what that job alone would
+/// have billed for solving, schedule aside.
+#[derive(Debug, Clone, Default)]
+pub struct GridBill {
+    /// Screening share of the bill (billed once under amortization).
+    pub screen: CostSummary,
+    /// Critical path of the executed cross-job wave schedule.
+    pub waves: CostSummary,
+    /// Per-job serial fold of that job's own metered fabric solves.
+    pub per_job: Vec<CostSummary>,
+}
+
+impl GridBill {
+    /// The grid's bill: screening plus the cross-job critical path.
+    pub fn total(&self) -> CostSummary {
+        let mut t = self.screen;
+        t.merge_sequential(&self.waves);
+        t
+    }
+
+    /// What the same screening + solves would have billed with *no*
+    /// cross-job packing: the screening share followed by every job's
+    /// fabrics one after another. The packed `total()` never exceeds
+    /// this; it undercuts it strictly as soon as any wave ran two
+    /// fabrics at once.
+    pub fn sequential(&self) -> CostSummary {
+        let mut t = self.screen;
+        for job in &self.per_job {
+            t.merge_sequential(job);
+        }
+        t
+    }
+}
+
 /// Re-export for `CostModel` naming used in docs/examples.
 pub type CostModel = MachineParams;
 
@@ -267,6 +313,50 @@ mod tests {
         // And the concurrent critical path never exceeds the serial sum.
         assert!(c.time <= s.time);
         assert!(c.comm_time <= s.comm_time);
+    }
+
+    /// GridBill views: `total` is screen ⊕ waves, `sequential` is
+    /// screen ⊕ per-job folds; counters agree whenever the waves bill
+    /// was itself folded from the same per-job costs, and the packed
+    /// total never exceeds the sequential view.
+    #[test]
+    fn grid_bill_views_are_consistent() {
+        let m = MachineParams {
+            alpha: 1.0,
+            beta: 0.0,
+            gamma_dense: 0.0,
+            gamma_sparse: 0.0,
+            beta_mem: 0.0,
+        };
+        let screen = CostSummary::from_counters(
+            &[Counters { messages: 3, words: 2, flops_dense: 10, flops_sparse: 0 }],
+            &m,
+        );
+        let a = CostSummary::from_counters(
+            &[Counters { messages: 4, words: 1, flops_dense: 2, flops_sparse: 0 }],
+            &m,
+        );
+        let b = CostSummary::from_counters(
+            &[Counters { messages: 1, words: 9, flops_dense: 5, flops_sparse: 3 }],
+            &m,
+        );
+        // One wave running both jobs' fabrics at once.
+        let mut waves = a;
+        waves.merge_concurrent(&b);
+        let bill = GridBill { screen, waves, per_job: vec![a, b] };
+
+        let total = bill.total();
+        assert_eq!(total.time, screen.time + waves.time);
+        assert_eq!(total.total.messages, 3 + 4 + 1);
+        assert_eq!(total.total.flops_dense, 10 + 2 + 5);
+
+        let seq = bill.sequential();
+        assert_eq!(seq.time, screen.time + a.time + b.time);
+        // Counters are machine facts: both views agree.
+        assert_eq!(seq.total, total.total);
+        // Packing two nonzero fabrics strictly undercuts the serial view.
+        assert!(total.time < seq.time);
+        assert!(GridBill::default().total().time == 0.0);
     }
 
     #[test]

@@ -95,7 +95,7 @@ fn waves_respect_budget_and_cover_every_component() {
             .schedule
             .waves
             .iter()
-            .flat_map(|w| w.entries.iter().map(|e| e.component))
+            .flat_map(|w| w.entries.iter().map(|e| e.tag.component))
             .collect();
         seen.sort_unstable();
         assert_eq!(seen, expected, "budget {budget}: schedule must cover each exactly once");
@@ -114,7 +114,7 @@ fn waves_respect_budget_and_cover_every_component() {
             if sv.plan.ranks > 1 {
                 let w = sv.wave.expect("fabric solves carry their wave");
                 assert!(
-                    out.schedule.waves[w].entries.iter().any(|e| e.component == c),
+                    out.schedule.waves[w].entries.iter().any(|e| e.tag.component == c),
                     "budget {budget}: component {c} not in its recorded wave {w}"
                 );
             }

@@ -1,0 +1,317 @@
+//! Grid-level fabric orchestration: equivalence and billing suite for
+//! the executor layer (`concord::executor`), the amortized
+//! multi-threshold screening pass, and the cross-job packed
+//! coordinators (`run_sweep_screened_dist`, `stability_selection_dist`).
+//!
+//! The contract under test: grid amortization and cross-job packing are
+//! **schedule-only** (determinism rule 6 in `ARCHITECTURE.md`) —
+//! every grid point's omega from the cross-packed amortized sweep is
+//! bit-identical to standalone `fit_screened_distributed` on that
+//! point, at every rank budget and thread count — while the grid bill
+//! (one screening pass + the cross-job critical path) drops strictly
+//! below the old per-point serial fold, with the screening gram billed
+//! exactly once for the whole λ₁ list.
+
+use hpconcord::concord::{fit_screened_distributed, ConcordConfig, ScreenedDistOptions, Variant};
+use hpconcord::coordinator::{
+    run_sweep_screened_dist, select_by_density, stability_selection, stability_selection_dist,
+    subsample_rows, GridSchedule, GridSpec, StabilityConfig, SweepResult,
+};
+use hpconcord::linalg::Mat;
+use hpconcord::prelude::*;
+
+mod common;
+use common::disjoint_blocks;
+
+fn bits(m: &Mat) -> Vec<u64> {
+    m.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// A machine whose flops dwarf its communication: the planner then
+/// gives even small screened components multi-rank fabrics, so the
+/// budget sweep genuinely exercises cross-job packing and shrinking.
+fn flop_heavy() -> MachineParams {
+    MachineParams {
+        alpha: 1.0e-13,
+        beta: 1.0e-13,
+        gamma_dense: 1.0e-6,
+        gamma_sparse: 8.0e-6,
+        beta_mem: 0.0,
+    }
+}
+
+fn grid() -> GridSpec {
+    GridSpec { lambda1: vec![0.02, 0.05], lambda2: vec![0.1, 0.3] }
+}
+
+fn base_cfg(threads: usize, budget: usize) -> ConcordConfig {
+    ConcordConfig {
+        lambda1: 0.02,
+        lambda2: 0.1,
+        tol: 0.0, // fixed budget: every component runs exactly max_iter
+        max_iter: 6,
+        variant: Variant::Cov,
+        threads,
+        ranks_budget: budget,
+        ..Default::default()
+    }
+}
+
+fn dist_opts() -> ScreenedDistOptions {
+    ScreenedDistOptions {
+        total_ranks: 8,
+        machine: flop_heavy(),
+        small_cutoff: 0,
+        fixed: None,
+        sequential: false,
+    }
+}
+
+/// ISSUE acceptance: every grid point's omega from the cross-packed
+/// amortized sweep is bit-identical to standalone
+/// `fit_screened_distributed` on that point, across budgets
+/// {1, 4, 32} × threads {1, 4} — and the per-point reference mode of
+/// the sweep agrees bit for bit too.
+#[test]
+fn packed_sweep_bit_identical_to_standalone_points() {
+    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x9A1D);
+    let grid = grid();
+    let opts = dist_opts();
+    for budget in [1usize, 4, 32] {
+        for threads in [1usize, 4] {
+            let base = base_cfg(threads, budget);
+            let tag = format!("budget {budget} threads {threads}");
+            let packed =
+                run_sweep_screened_dist(&x, &grid, &base, &opts, GridSchedule::Packed).unwrap();
+            let per_point =
+                run_sweep_screened_dist(&x, &grid, &base, &opts, GridSchedule::PerPoint)
+                    .unwrap();
+            assert_eq!(packed.results.len(), 4, "{tag}");
+            assert_eq!(packed.results.len(), per_point.results.len(), "{tag}");
+            for (rp, rs) in packed.results.iter().zip(&per_point.results) {
+                assert_eq!(rp.job.id, rs.job.id, "{tag}");
+                assert_eq!(
+                    bits(&rp.fit.omega),
+                    bits(&rs.fit.omega),
+                    "{tag}: packed vs per-point drift at job {}",
+                    rp.job.id
+                );
+            }
+            for r in &packed.results {
+                let direct = fit_screened_distributed(&x, &r.job.cfg, &opts).unwrap();
+                assert_eq!(
+                    bits(&r.fit.omega),
+                    bits(&direct.fit.omega),
+                    "{tag}: job {} differs from the standalone solver",
+                    r.job.id
+                );
+                assert_eq!(r.fit.iterations, direct.fit.iterations, "{tag}");
+                assert_eq!(
+                    r.fit.objective.to_bits(),
+                    direct.fit.objective.to_bits(),
+                    "{tag}: objective accumulation must not depend on the schedule"
+                );
+            }
+            // Component counts line up with the standalone decomposition.
+            assert_eq!(packed.components, per_point.components, "{tag}");
+        }
+    }
+}
+
+/// ISSUE acceptance: on a multi-point multi-block fixture the grid
+/// bill (one screening pass + cross-job critical path) is strictly
+/// below the old per-point serial fold, and the screening gram is
+/// billed exactly once for the whole grid.
+#[test]
+fn grid_bill_undercuts_per_point_fold_and_gram_is_billed_once() {
+    // Unequal block sizes → unequal fabric plans (the p = 12 component
+    // wants 8 ranks, the p = 6 ones 4), so the 32-rank budget provably
+    // packs fabrics from different grid points into one wave: LPT
+    // schedules the four jobs' p = 12 fabrics first, and 4 × 8 ranks
+    // fill wave 0 with four different jobs.
+    let x = disjoint_blocks(&[12, 6, 6, 6], 200, 0x6B11);
+    let grid = grid();
+    let base = base_cfg(1, 32);
+    let opts = dist_opts();
+    let packed = run_sweep_screened_dist(&x, &grid, &base, &opts, GridSchedule::Packed).unwrap();
+    let per_point =
+        run_sweep_screened_dist(&x, &grid, &base, &opts, GridSchedule::PerPoint).unwrap();
+
+    // The shared schedule really packs across jobs: some wave holds
+    // fabrics from at least two different grid points.
+    assert_eq!(packed.schedules.len(), 1);
+    let sched = &packed.schedules[0];
+    assert!(
+        sched.waves.iter().any(|w| {
+            w.entries.iter().any(|e| e.tag.job != w.entries[0].tag.job)
+        }),
+        "a wave must mix fabrics from different grid points"
+    );
+
+    // One screening pass for the whole grid: its gram flops equal a
+    // single standalone point's, not four of them — and the labeling
+    // collective's messages are paid once too (allgather messages are
+    // payload-size independent).
+    let standalone = fit_screened_distributed(&x, &packed.results[0].job.cfg, &opts).unwrap();
+    assert_eq!(
+        packed.bill.screen.total.flops_dense, standalone.screen_cost.total.flops_dense,
+        "amortized screening must form the gram exactly once"
+    );
+    assert_eq!(
+        packed.bill.screen.total.messages, standalone.screen_cost.total.messages,
+        "amortized screening must gather labelings in one collective"
+    );
+    assert_eq!(
+        per_point.bill.screen.total.flops_dense,
+        4 * standalone.screen_cost.total.flops_dense,
+        "the per-point fold pays the gram once per grid point"
+    );
+
+    // The grid bill is strictly below the old per-point serial fold.
+    assert!(
+        packed.cost.time < per_point.cost.time,
+        "grid bill {} must be strictly below the per-point fold {}",
+        packed.cost.time,
+        per_point.cost.time
+    );
+    // And internally consistent: screening + waves, never above the
+    // no-packing serial view of the same work.
+    let total = packed.bill.total();
+    assert!((packed.cost.time - total.time).abs() < 1e-15);
+    assert_eq!(packed.cost.total, total.total);
+    assert!(packed.bill.total().time <= packed.bill.sequential().time + 1e-15);
+}
+
+/// The executor's sequential reference mode launches the same packed
+/// plans one at a time — results bit-identical, bill never below the
+/// concurrent critical path.
+#[test]
+fn packed_sweep_sequential_reference_is_bit_identical() {
+    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x5E9);
+    let grid = grid();
+    let base = base_cfg(2, 32);
+    let conc = run_sweep_screened_dist(&x, &grid, &base, &dist_opts(), GridSchedule::Packed)
+        .unwrap();
+    let seq_opts = ScreenedDistOptions { sequential: true, ..dist_opts() };
+    let seq =
+        run_sweep_screened_dist(&x, &grid, &base, &seq_opts, GridSchedule::Packed).unwrap();
+    for (a, b) in conc.results.iter().zip(&seq.results) {
+        assert_eq!(bits(&a.fit.omega), bits(&b.fit.omega), "job {}", a.job.id);
+    }
+    assert_eq!(conc.cost.total, seq.cost.total, "counters are machine facts");
+    assert!(conc.cost.time <= seq.cost.time + 1e-15);
+}
+
+fn stability_base() -> ConcordConfig {
+    ConcordConfig {
+        lambda1: 0.1,
+        lambda2: 0.05,
+        tol: 1e-4,
+        max_iter: 150,
+        variant: Variant::Cov,
+        ..Default::default()
+    }
+}
+
+/// Subsample wiring: with the seed fixed, the dist path fits exactly
+/// the subsamples `subsample_rows` describes — its frequency matrix is
+/// bit-identical to accumulating standalone screened-distributed fits
+/// on the rebuilt subsamples, in subsample order.
+#[test]
+fn stability_dist_subsample_wiring_matches_direct_fits() {
+    let mut rng = Rng::new(21);
+    let prob = gen::chain_problem(10, 120, &mut rng);
+    let (n, p) = prob.x.shape();
+    let base = stability_base();
+    let cfg = StabilityConfig { subsamples: 3, seed: 17, workers: 1, ..Default::default() };
+    let machine = MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() };
+    let opts = ScreenedDistOptions { total_ranks: 4, machine, ..Default::default() };
+    let out = stability_selection_dist(&prob.x, &base, &cfg, &opts).unwrap();
+
+    let m = ((n as f64) * cfg.fraction).round().max(2.0) as usize;
+    let mut want = Mat::zeros(p, p);
+    for b in 0..cfg.subsamples {
+        let rows = subsample_rows(n, m, cfg.seed, b);
+        let sub = Mat::from_fn(m, p, |i, j| prob.x.get(rows[i], j));
+        let fit = fit_screened_distributed(&sub, &base, &opts).unwrap();
+        for i in 0..p {
+            for j in 0..p {
+                if i != j && fit.fit.omega.get(i, j) != 0.0 {
+                    want.set(i, j, want.get(i, j) + 1.0 / cfg.subsamples as f64);
+                }
+            }
+        }
+    }
+    assert!(out.frequency.max_abs_diff(&want) == 0.0, "frequency drift vs rebuilt subsamples");
+    assert_eq!(out.subsamples, 3);
+    assert_eq!(out.bill.per_job.len(), 3);
+}
+
+/// Determinism across thread counts and repeated runs: the shared
+/// cross-subsample schedule changes nothing — frequencies, edges, and
+/// counter totals are identical at any `threads`.
+#[test]
+fn stability_dist_thread_count_invariant() {
+    let mut rng = Rng::new(22);
+    let prob = gen::chain_problem(10, 120, &mut rng);
+    let cfg = StabilityConfig { subsamples: 4, seed: 11, workers: 1, ..Default::default() };
+    let machine = MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() };
+    let opts = ScreenedDistOptions { total_ranks: 4, machine, ..Default::default() };
+    let mut runs = Vec::new();
+    for threads in [1usize, 4, 1] {
+        let base = ConcordConfig { threads, ..stability_base() };
+        runs.push(stability_selection_dist(&prob.x, &base, &cfg, &opts).unwrap());
+    }
+    for r in &runs[1..] {
+        assert!(runs[0].frequency.max_abs_diff(&r.frequency) == 0.0);
+        assert_eq!(runs[0].edges, r.edges);
+        assert_eq!(runs[0].cost.total, r.cost.total, "counters must be thread-invariant");
+    }
+    assert!(runs[0].cost.total.messages > 0, "screening passes must be metered");
+}
+
+/// Stable-edge agreement with the single-node stability path on a
+/// wide-margin block fixture: both paths draw the same subsamples
+/// (shared `subsample_rows` stream), and with strong within-block
+/// chain signal and exactly-zero cross-block gram entries the stable
+/// edge sets coincide.
+#[test]
+fn stability_dist_stable_edges_agree_with_single_node_path() {
+    let x = disjoint_blocks(&[8, 8], 400, 0xED6E);
+    let base = stability_base();
+    let cfg = StabilityConfig {
+        subsamples: 6,
+        fraction: 0.5,
+        threshold: 0.7,
+        seed: 5,
+        workers: 2,
+    };
+    let machine = MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() };
+    let opts = ScreenedDistOptions { total_ranks: 4, machine, ..Default::default() };
+    let single = stability_selection(&x, &base, &cfg);
+    let dist = stability_selection_dist(&x, &base, &cfg, &opts).unwrap();
+    assert!(!dist.edges.is_empty(), "no stable edges found");
+    assert_eq!(dist.edges, single.edges, "stable edge sets must agree");
+    // No stable edge crosses the (exactly screened-apart) blocks.
+    for &(i, j) in &dist.edges {
+        assert_eq!(i / 8, j / 8, "cross-block stable edge ({i}, {j})");
+    }
+}
+
+/// `select_by_density` survives NaN densities (and NaN targets):
+/// total_cmp sorts NaN distances last, so a finite candidate wins.
+#[test]
+fn select_by_density_is_nan_safe() {
+    let mut rng = Rng::new(23);
+    let prob = gen::chain_problem(8, 60, &mut rng);
+    let grid = GridSpec { lambda1: vec![0.2, 0.6], lambda2: vec![0.0] };
+    let base = ConcordConfig { max_iter: 40, ..Default::default() };
+    let out = hpconcord::coordinator::run_sweep(&prob.x, &grid, &base, 2);
+    let mut results: Vec<SweepResult> = out.results;
+    results[0].density = f64::NAN;
+    let sel = select_by_density(&results, 0.0).expect("non-empty");
+    assert_eq!(sel.job.id, 1, "the finite density must win over NaN");
+    // NaN target: no panic, some result comes back.
+    assert!(select_by_density(&results, f64::NAN).is_some());
+    assert!(select_by_density(&[], 0.1).is_none());
+}

@@ -80,7 +80,7 @@ fn sweep_then_select_gives_good_estimate() {
     let grid = GridSpec { lambda1: vec![0.1, 0.2, 0.35, 0.55, 0.8], lambda2: vec![0.05] };
     let base = ConcordConfig { tol: 1e-4, max_iter: 200, ..Default::default() };
     let out = run_sweep(&problem.x, &grid, &base, 3);
-    let sel = select_by_density(&out, target).unwrap();
+    let sel = select_by_density(&out.results, target).unwrap();
     let m = support_metrics(&sel.fit.omega, &problem.omega0, 1e-8);
     assert!(m.ppv > 0.8, "ppv {}", m.ppv);
     assert!(m.recall > 0.8, "recall {}", m.recall);
