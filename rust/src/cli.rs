@@ -115,6 +115,16 @@ COMMANDS:
              run at the same time; default --ranks. A fixed budget only
              reorders launches — results are bit-identical; a budget
              below a planned fabric shrinks that plan to fit)
+           [--mem-budget N]  (host-memory budget in f64 words for wave
+             packing: each task bills n·|c| words for its extracted
+             sub-matrix plus |c|² working set, and waves are packed so
+             resident footprints never exceed N; 0 = unbounded. A
+             schedule-only knob — results are bit-identical at any
+             budget that admits a schedule; a component too large to
+             fit alone is a clean error)
+           [--gram-block N]  (stream the screening gram in row panels
+             of N samples so screening never needs all of X resident;
+             0 = in-core. Bit-identical to the in-core pass)
            [--out-omega FILE]  (write the estimate as whitespace-
              separated rows, full f64 round-trip precision)
   sweep    (λ1, λ2) grid sweep via the coordinator
@@ -128,8 +138,8 @@ COMMANDS:
              packed into one shared wave schedule under --ranks-budget;
              waves may mix grid points. Results are bit-identical to
              solving each point alone. --ranks/--cx/--comega/
-             --ranks-budget as in solve; --workers is single-node-sweep
-             only)
+             --ranks-budget/--mem-budget/--gram-block as in solve;
+             --workers is single-node-sweep only)
            [--per-point]  (dist only: solve every grid point standalone
              — its own screening pass, its own waves; the billing
              baseline and equivalence reference)

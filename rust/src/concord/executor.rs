@@ -16,23 +16,35 @@
 //!   shrink under the budget.
 //!
 //! [`FabricExecutor::run`] then packs every multi-rank plan with
-//! [`plan_concurrent`] under the global rank budget — waves may mix
-//! fabrics from *different jobs* — launches each wave's fabrics
-//! concurrently on disjoint rank teams via the deterministic scoped
-//! pool, and returns the outcomes in task-submission order plus the
-//! schedule's critical-path bill (per-wave
-//! [`CostSummary::merge_concurrent`], waves folded with
+//! [`plan_concurrent`] under the global rank budget *and* the global
+//! memory budget — waves may mix fabrics from *different jobs* —
+//! launches each wave's fabrics concurrently on disjoint rank teams
+//! via the deterministic scoped pool, and returns the outcomes in
+//! task-submission order plus the schedule's critical-path bill
+//! (per-wave [`CostSummary::merge_concurrent`], waves folded with
 //! [`CostSummary::merge_sequential`]). Tasks whose plan says `P = 1`
 //! never enter the packer: they run on the unmetered single-node path,
 //! exactly as a standalone screened fit routes them.
 //!
-//! **Determinism** (rule 6 in `ARCHITECTURE.md`): tasks share no
-//! mutable state and land in task-indexed slots, so the schedule —
-//! sequential reference or wave-concurrent, any budget, any wave
-//! mixing — changes only *when* a fabric launches and what the bill
-//! says, never any result bit. Clients reassemble per job in component
-//! order, so cross-job packing is invisible in every estimate
-//! (`rust/tests/grid_schedule.rs`).
+//! **Memory-bounded execution**: each task's column sub-matrix is
+//! extracted at *wave launch* and dropped when the wave's outcomes
+//! land, so the executor's peak residency is the sum of the current
+//! wave's [`MemFootprint`]s — what [`plan_concurrent`] bounded under
+//! `mem_budget` — never the whole job list's. Jobs may additionally
+//! carry a row view ([`ExecutorJob::rows`]) so clients like stability
+//! selection never retain dense subsample copies: the sub-matrix is
+//! rebuilt from the row-index list per task, element-for-element
+//! identical to extracting from a materialized copy. The modeled peak
+//! lands in [`CostSummary::peak_mem_words`].
+//!
+//! **Determinism** (rules 6 and 7 in `ARCHITECTURE.md`): tasks share
+//! no mutable state and land in task-indexed slots, so the schedule —
+//! sequential reference or wave-concurrent, any rank or memory budget,
+//! any wave mixing — changes only *when* a fabric launches and what
+//! the bill says, never any result bit. Clients reassemble per job in
+//! component order, so cross-job packing is invisible in every
+//! estimate (`rust/tests/grid_schedule.rs`,
+//! `rust/tests/memory_budget.rs`).
 //!
 //! The executor does not install the kernel tile shape: clients
 //! install `cfg.tile` *before planning* (plans are priced at the
@@ -43,7 +55,8 @@ use std::collections::HashMap;
 use anyhow::{bail, Result};
 
 use crate::cost::schedule::{
-    plan_concurrent, ConcurrentSchedule, FabricPlan, JobTag, ScheduledComponent,
+    plan_concurrent, ConcurrentSchedule, FabricPlan, JobTag, MemFootprint, PackItem,
+    ScheduledComponent,
 };
 use crate::cost::ProblemShape;
 use crate::linalg::Mat;
@@ -55,12 +68,38 @@ use super::{fit_single_node, run_distributed, ConcordConfig, ConcordFit};
 
 /// One submitted problem: the data matrix and the solver config its
 /// component tasks run under. Job `j` of a batch is `jobs[j]`.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ExecutorJob<'a> {
     /// Observations (n × p) the component columns are extracted from.
     pub x: &'a Mat,
     /// Solver configuration for every component of this job.
     pub cfg: ConcordConfig,
+    /// Optional row view: `Some(rows)` means this job's data is the
+    /// listed rows of `x` (a stability subsample, say) rebuilt lazily
+    /// per task, so no dense row-subset copy is ever retained between
+    /// tasks. `None` means all of `x`'s rows.
+    pub rows: Option<Vec<usize>>,
+}
+
+impl ExecutorJob<'_> {
+    /// Materialize one task's sub-matrix — the only copy of this job's
+    /// data a running task holds. Element-for-element identical to
+    /// extracting the columns from a materialized row-subset copy, so
+    /// the lazy view is invisible downstream (bit-for-bit).
+    pub fn extract(&self, indices: &[usize]) -> Mat {
+        match &self.rows {
+            None => extract_columns(self.x, indices),
+            Some(rows) => {
+                Mat::from_fn(rows.len(), indices.len(), |i, k| self.x.get(rows[i], indices[k]))
+            }
+        }
+    }
+
+    /// Sample rows this job's tasks see (the row view's length, or all
+    /// of `x`'s rows).
+    pub fn n_rows(&self) -> usize {
+        self.rows.as_ref().map(Vec::len).unwrap_or_else(|| self.x.rows())
+    }
 }
 
 /// One schedulable component solve of some job.
@@ -76,6 +115,9 @@ pub struct ExecutorTask {
     pub plan: FabricPlan,
     /// Shape the packer re-prices with when shrinking `plan`.
     pub shape: ProblemShape,
+    /// Words resident while this task runs (extracted sub-matrix plus
+    /// working set) — what the packer charges against `mem_budget`.
+    pub mem: MemFootprint,
 }
 
 /// What one executed task produced.
@@ -118,6 +160,10 @@ pub struct ExecutorRun {
 pub struct FabricExecutor {
     /// Global concurrent rank budget the waves are packed under.
     pub budget: usize,
+    /// Global memory budget in words (0 = unbounded): no wave's
+    /// footprint sum may exceed it, and a single task larger than it
+    /// is a clean error (memory, unlike ranks, cannot be shrunk).
+    pub mem_budget: u64,
     /// Node-local worker threads used when re-pricing shrunk plans
     /// (clients pass their config's thread count).
     pub threads: usize,
@@ -138,27 +184,35 @@ struct Solved {
     wave: Option<usize>,
 }
 
-/// Solve one task with its final plan: a fabric run for `P > 1`, the
-/// (unmetered) single-node path otherwise.
+/// Solve one task with its final plan and its already-extracted
+/// sub-matrix: a fabric run for `P > 1`, the (unmetered) single-node
+/// path otherwise. The caller owns the sub-matrix's lifetime — the
+/// executor extracts at wave launch and drops when the wave lands —
+/// and `mem` is the task's modeled residency, billed on the outcome's
+/// `peak_mem_words` (the one field the single-node path sets: its
+/// sub-matrix is just as resident as a fabric's).
 fn solve_task(
-    job: &ExecutorJob<'_>,
-    task: &ExecutorTask,
+    cfg: &ConcordConfig,
+    sub_x: &Mat,
+    mem: MemFootprint,
     plan: FabricPlan,
     machine: MachineParams,
     wave: Option<usize>,
 ) -> Result<Solved> {
-    let sub_x = extract_columns(job.x, &task.indices);
     if plan.ranks <= 1 {
-        let fit = fit_single_node(&sub_x, &job.cfg)?;
-        Ok(Solved { fit, plan, cost: CostSummary::default(), counters: Vec::new(), wave })
+        let fit = fit_single_node(sub_x, cfg)?;
+        let cost = CostSummary { peak_mem_words: mem.words(), ..CostSummary::default() };
+        Ok(Solved { fit, plan, cost, counters: Vec::new(), wave })
     } else {
-        let mut sub_cfg = job.cfg;
+        let mut sub_cfg = *cfg;
         sub_cfg.variant = plan.variant;
-        let run = run_distributed(&sub_x, &sub_cfg, plan.ranks, plan.c_x, plan.c_omega, machine);
+        let run = run_distributed(sub_x, &sub_cfg, plan.ranks, plan.c_x, plan.c_omega, machine);
+        let mut cost = run.cost;
+        cost.peak_mem_words = mem.words();
         Ok(Solved {
             fit: run.fit,
             plan: FabricPlan { variant: run.variant, ..plan },
-            cost: run.cost,
+            cost,
             counters: run.counters,
             wave,
         })
@@ -178,20 +232,44 @@ impl FabricExecutor {
             if index.insert(task.tag, t).is_some() {
                 bail!("duplicate task tag {:?}", task.tag);
             }
+            // Memory cannot be shrunk the way ranks can: a task bigger
+            // than the whole budget can never run, whatever the
+            // schedule. Catch it up front (single-node tasks included —
+            // the packer below only sees the fabric candidates).
+            if self.mem_budget > 0 && task.mem.words() > self.mem_budget {
+                bail!(
+                    "task {:?} needs {} words resident but the memory budget is {} words; \
+                     raise --mem-budget or screen harder",
+                    task.tag,
+                    task.mem.words(),
+                    self.mem_budget
+                );
+            }
         }
 
         // Split: P = 1 plans run directly on the single-node path and
         // never enter the packer; everything else is packed.
         let mut direct: Vec<usize> = Vec::new();
-        let mut candidates: Vec<(JobTag, FabricPlan, ProblemShape)> = Vec::new();
+        let mut candidates: Vec<PackItem> = Vec::new();
         for (t, task) in tasks.iter().enumerate() {
             if task.plan.ranks <= 1 {
                 direct.push(t);
             } else {
-                candidates.push((task.tag, task.plan, task.shape));
+                candidates.push(PackItem {
+                    tag: task.tag,
+                    plan: task.plan,
+                    shape: task.shape,
+                    mem: task.mem,
+                });
             }
         }
-        let schedule = plan_concurrent(&candidates, self.budget, self.threads, &self.machine);
+        let schedule = plan_concurrent(
+            &candidates,
+            self.budget,
+            self.mem_budget,
+            self.threads,
+            &self.machine,
+        )?;
 
         // Outcomes land in task-indexed slots so clients reassemble in
         // a fixed order whatever the launch order was (determinism
@@ -199,21 +277,31 @@ impl FabricExecutor {
         // the decomposition only, never of the schedule).
         let mut slots: Vec<Option<Result<Solved>>> = Vec::new();
         slots.resize_with(tasks.len(), || None);
+        let mut cost = CostSummary::default();
         for &t in &direct {
             let task = &tasks[t];
-            slots[t] = Some(solve_task(&jobs[task.tag.job], task, task.plan, self.machine, None));
+            let job = &jobs[task.tag.job];
+            // One direct sub-matrix at a time; it drops right here.
+            let sub_x = job.extract(&task.indices);
+            slots[t] =
+                Some(solve_task(&job.cfg, &sub_x, task.mem, task.plan, self.machine, None));
+            // Unmetered path: only the residency peak is billed.
+            cost.peak_mem_words = cost.peak_mem_words.max(task.mem.words());
         }
 
-        let mut cost = CostSummary::default();
         if self.sequential {
             // Reference mode: same plans, one launch at a time in tag
-            // (job-major) order, serial billing.
+            // (job-major) order, serial billing. One sub-matrix is
+            // resident at a time, dropped before the next launch.
             let mut entries: Vec<&ScheduledComponent> =
                 schedule.waves.iter().flat_map(|w| w.entries.iter()).collect();
             entries.sort_by_key(|e| e.tag);
             for e in entries {
                 let t = index[&e.tag];
-                let out = solve_task(&jobs[e.tag.job], &tasks[t], e.plan, self.machine, None);
+                let job = &jobs[e.tag.job];
+                let sub_x = job.extract(&tasks[t].indices);
+                let out =
+                    solve_task(&job.cfg, &sub_x, tasks[t].mem, e.plan, self.machine, None);
                 if let Ok(sv) = &out {
                     cost.merge_sequential(&sv.cost);
                 }
@@ -221,6 +309,15 @@ impl FabricExecutor {
             }
         } else {
             for (w, wave) in schedule.waves.iter().enumerate() {
+                // Extract the wave's sub-matrices at launch: exactly
+                // this wave's footprints are resident while it runs —
+                // the packer bounded their sum by `mem_budget` — and
+                // the whole batch drops when the wave's outcomes land.
+                let subs: Vec<Mat> = wave
+                    .entries
+                    .iter()
+                    .map(|e| jobs[e.tag.job].extract(&tasks[index[&e.tag]].indices))
+                    .collect();
                 // One scoped pool worker per fabric in the wave:
                 // disjoint rank teams running at the same time.
                 // `par_map` returns in entry order, so billing and
@@ -229,7 +326,11 @@ impl FabricExecutor {
                 let outs = par_map(&ranges, |_, start, _| {
                     let e = &wave.entries[start];
                     let t = index[&e.tag];
-                    (t, solve_task(&jobs[e.tag.job], &tasks[t], e.plan, self.machine, Some(w)))
+                    let job = &jobs[e.tag.job];
+                    (
+                        t,
+                        solve_task(&job.cfg, &subs[start], e.mem, e.plan, self.machine, Some(w)),
+                    )
                 });
                 let mut wave_bill = CostSummary::default();
                 for (t, out) in outs {
@@ -238,6 +339,7 @@ impl FabricExecutor {
                     }
                     slots[t] = Some(out);
                 }
+                drop(subs);
                 cost.merge_sequential(&wave_bill);
             }
         }
@@ -269,6 +371,7 @@ mod tests {
     fn executor() -> FabricExecutor {
         FabricExecutor {
             budget: 8,
+            mem_budget: 0,
             threads: 1,
             machine: MachineParams::default(),
             sequential: false,
@@ -277,11 +380,13 @@ mod tests {
 
     fn single_node_task(job: usize, component: usize, indices: Vec<usize>) -> ExecutorTask {
         let shape = ProblemShape { p: indices.len() as f64, n: 40.0, s: 40.0, t: 10.0, d: 2.0 };
+        let mem = MemFootprint::for_component(40, indices.len());
         ExecutorTask {
             tag: JobTag { job, component },
             indices,
             plan: FabricPlan::single_node(Variant::Cov),
             shape,
+            mem,
         }
     }
 
@@ -289,7 +394,7 @@ mod tests {
     fn duplicate_tags_are_rejected() {
         let mut rng = Rng::new(1);
         let prob = gen::chain_problem(6, 40, &mut rng);
-        let jobs = [ExecutorJob { x: &prob.x, cfg: ConcordConfig::default() }];
+        let jobs = [ExecutorJob { x: &prob.x, cfg: ConcordConfig::default(), rows: None }];
         let tasks = vec![single_node_task(0, 0, vec![0, 1]), single_node_task(0, 0, vec![2, 3])];
         assert!(executor().run(&jobs, tasks).is_err());
     }
@@ -298,7 +403,7 @@ mod tests {
     fn unknown_job_is_rejected() {
         let mut rng = Rng::new(2);
         let prob = gen::chain_problem(6, 40, &mut rng);
-        let jobs = [ExecutorJob { x: &prob.x, cfg: ConcordConfig::default() }];
+        let jobs = [ExecutorJob { x: &prob.x, cfg: ConcordConfig::default(), rows: None }];
         let tasks = vec![single_node_task(1, 0, vec![0, 1])];
         assert!(executor().run(&jobs, tasks).is_err());
     }
@@ -311,7 +416,10 @@ mod tests {
         let a = gen::chain_problem(6, 40, &mut rng);
         let b = gen::chain_problem(6, 40, &mut rng);
         let cfg = ConcordConfig { lambda1: 0.3, max_iter: 20, ..Default::default() };
-        let jobs = [ExecutorJob { x: &a.x, cfg }, ExecutorJob { x: &b.x, cfg }];
+        let jobs = [
+            ExecutorJob { x: &a.x, cfg, rows: None },
+            ExecutorJob { x: &b.x, cfg, rows: None },
+        ];
         let tasks = vec![
             single_node_task(0, 0, vec![0, 1, 2]),
             single_node_task(1, 0, vec![3, 4, 5]),
@@ -328,5 +436,50 @@ mod tests {
         assert!(run.schedule.waves.is_empty());
         assert_eq!(run.cost.time, 0.0);
         assert_eq!(run.cost.total, Counters::default());
+        // Direct tasks still bill their residency: one sub-matrix at a
+        // time, so the peak is the largest footprint, not the sum.
+        assert_eq!(run.cost.peak_mem_words, MemFootprint::for_component(40, 3).words());
+    }
+
+    /// A task wider than a nonzero memory budget is rejected before
+    /// anything runs — a clean error, never a panic — and the same
+    /// submission passes once the budget covers it.
+    #[test]
+    fn task_over_mem_budget_is_a_clean_error() {
+        let mut rng = Rng::new(4);
+        let prob = gen::chain_problem(6, 40, &mut rng);
+        let cfg = ConcordConfig { lambda1: 0.3, max_iter: 5, ..Default::default() };
+        let jobs = [ExecutorJob { x: &prob.x, cfg, rows: None }];
+        let need = MemFootprint::for_component(40, 3).words();
+        let tight = FabricExecutor { mem_budget: need - 1, ..executor() };
+        let err = tight.run(&jobs, vec![single_node_task(0, 0, vec![0, 1, 2])]).unwrap_err();
+        assert!(format!("{err}").contains("memory budget"), "{err}");
+        let fits = FabricExecutor { mem_budget: need, ..executor() };
+        assert!(fits.run(&jobs, vec![single_node_task(0, 0, vec![0, 1, 2])]).is_ok());
+    }
+
+    /// A job carrying a row view solves exactly as if the row subset
+    /// had been materialized up front — the lazy rebuild is
+    /// bit-invisible.
+    #[test]
+    fn row_view_jobs_match_materialized_subsamples() {
+        let mut rng = Rng::new(5);
+        let prob = gen::chain_problem(6, 60, &mut rng);
+        let cfg = ConcordConfig { lambda1: 0.3, max_iter: 20, ..Default::default() };
+        let rows: Vec<usize> = vec![3, 7, 11, 19, 20, 31, 44, 58];
+        let dense = Mat::from_fn(rows.len(), prob.x.cols(), |i, j| prob.x.get(rows[i], j));
+
+        let lazy_jobs = [ExecutorJob { x: &prob.x, cfg, rows: Some(rows) }];
+        let lazy =
+            executor().run(&lazy_jobs, vec![single_node_task(0, 0, vec![1, 2, 4])]).unwrap();
+        let dense_jobs = [ExecutorJob { x: &dense, cfg, rows: None }];
+        let full =
+            executor().run(&dense_jobs, vec![single_node_task(0, 0, vec![1, 2, 4])]).unwrap();
+        let bits = |m: &Mat| m.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&lazy.outcomes[0].fit.omega), bits(&full.outcomes[0].fit.omega));
+        assert_eq!(
+            lazy.outcomes[0].fit.objective.to_bits(),
+            full.outcomes[0].fit.objective.to_bits()
+        );
     }
 }

@@ -43,8 +43,8 @@ pub mod single_node;
 
 pub use executor::{ExecutorJob, ExecutorRun, ExecutorTask, FabricExecutor, TaskOutcome};
 pub use screened_dist::{
-    fit_screened_distributed, screen_distributed_multi, MultiScreenPass, ScreenLevel,
-    ScreenedDistFit, ScreenedDistOptions,
+    fit_screened_distributed, screen_distributed_multi, screen_streamed, MultiScreenPass,
+    ScreenLevel, ScreenedDistFit, ScreenedDistOptions,
 };
 pub use screening::{fit_with_screening, fit_with_screening_on, ComponentStat, ScreenedFit};
 pub use single_node::fit_single_node;
@@ -124,6 +124,19 @@ pub struct ConcordConfig {
     /// results are bit-identical to running the same plans one after
     /// another. CLI: `--ranks-budget N`; TOML: `fabric.budget`.
     pub ranks_budget: usize,
+    /// Global memory budget in **words** for the screened solver's wave
+    /// schedule: no wave's summed [`MemFootprint`]s (extracted `n·|c|`
+    /// sub-matrices plus `|c|²` working sets) may exceed it, so peak
+    /// residency is bounded by the budget instead of the whole job
+    /// list. `0` (the default) means unbounded. A single component
+    /// whose footprint alone exceeds a nonzero budget is a clean error
+    /// — memory, unlike ranks, cannot be shrunk. Like `ranks_budget`,
+    /// a schedule-only knob (determinism rule 7): results are
+    /// bit-identical at every value that runs. CLI: `--mem-budget N`;
+    /// TOML: `fabric.mem_budget`.
+    ///
+    /// [`MemFootprint`]: crate::cost::MemFootprint
+    pub mem_budget: u64,
 }
 
 impl Default for ConcordConfig {
@@ -138,6 +151,7 @@ impl Default for ConcordConfig {
             threads: 1,
             tile: crate::linalg::TileConfig::DEFAULT,
             ranks_budget: 0,
+            mem_budget: 0,
         }
     }
 }

@@ -4,7 +4,8 @@
 //!
 //! Three stages, each owned by its own layer:
 //!
-//! 1. **Distributed screening pass** ([`screen_distributed_multi`]): a
+//! 1. **Distributed screening pass** ([`screen_distributed_multi`], or
+//!    its memory-bounded twin [`screen_streamed`]): a
 //!    fabric of up to `total_ranks` ranks, each owning a 1D block of
 //!    S's rows. Every rank forms its own rows of `S = XᵀX/n` locally —
 //!    **once**, however many λ₁ thresholds are requested — then replays
@@ -61,12 +62,13 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::cost::schedule::{
-    plan_component, runnable_on_fabric, ConcurrentSchedule, FabricPlan, JobTag,
+    plan_component, runnable_on_fabric, ConcurrentSchedule, FabricPlan, JobTag, MemFootprint,
 };
 use crate::cost::ProblemShape;
 use crate::dist::Layout1D;
 use crate::linalg::Mat;
 use crate::simnet::{cost::CostSummary, Comm, Counters, Fabric, MachineParams};
+use crate::util::pool::{chunk_ranges, par_rows_mut};
 
 use super::executor::{ExecutorJob, ExecutorTask, FabricExecutor, TaskOutcome};
 use super::screening::{Components, ComponentStat, ScreenAccum, ScreenedFit, UnionFind};
@@ -93,6 +95,13 @@ pub struct ScreenedDistOptions {
     /// concurrent-schedule equivalence tests compare against, and a
     /// way to read the old serial bill.
     pub sequential: bool,
+    /// Row-panel width of the streamed gram pass: each screening rank
+    /// accumulates its rows of `S = XᵀX/n` over ascending panels of
+    /// this many sample rows, so only one panel of X need be resident
+    /// at a time. `0` (and any value ≥ n) takes the in-core path.
+    /// Bit-identical either way — panel streaming only partitions the
+    /// ascending-k accumulation (determinism rules 1 and 7).
+    pub gram_block: usize,
 }
 
 impl Default for ScreenedDistOptions {
@@ -103,6 +112,7 @@ impl Default for ScreenedDistOptions {
             small_cutoff: 4,
             fixed: None,
             sequential: false,
+            gram_block: 0,
         }
     }
 }
@@ -221,14 +231,43 @@ pub fn screen_distributed_multi(
     machine: MachineParams,
     threads: usize,
 ) -> MultiScreenPass {
+    screen_streamed(x, thresholds, p_ranks, machine, threads, 0)
+}
+
+/// The memory-bounded screening pass: identical to
+/// [`screen_distributed_multi`] except each rank forms its gram rows
+/// over ascending row panels of `gram_block` samples, so the pass
+/// never needs an `|rows| × n` transposed slab of X resident —
+/// one `gram_block × p` panel is the whole X working set. Labelings,
+/// degrees, diagonal **and counters** are bit-identical to the in-core
+/// pass at every panel width (`gram_block ∈ {0, ≥ n}` *is* the in-core
+/// pass): panel streaming only partitions the ascending-k
+/// accumulation, and storing/loading f64 partials between panels is
+/// exact — determinism rules 1 and 7. The pass's modeled residency
+/// (panel + gram rows) is billed on `cost.peak_mem_words`.
+pub fn screen_streamed(
+    x: &Mat,
+    thresholds: &[f64],
+    p_ranks: usize,
+    machine: MachineParams,
+    threads: usize,
+    gram_block: usize,
+) -> MultiScreenPass {
     let p = x.cols();
+    let n = x.rows();
     let t_levels = thresholds.len();
     let layout = Layout1D::new(p, p_ranks);
     let shared = Arc::new(x.clone());
     let thr: Vec<f64> = thresholds.to_vec();
     let run = Fabric::with_machine(p_ranks, machine)
-        .run(move |comm| screen_rank_multi(comm, &shared, &thr, &layout, threads));
-    let cost = run.summary();
+        .run(move |comm| screen_rank_multi(comm, &shared, &thr, &layout, threads, gram_block));
+    let mut cost = run.summary();
+    // Modeled host residency of the pass: the gram rows (p² words
+    // across the simulated ranks) plus the X working set — all n rows
+    // in-core, one panel when streamed. A schedule-only model: it
+    // never feeds back into plans or results.
+    let x_resident = if gram_block == 0 { n } else { gram_block.min(n) };
+    cost.peak_mem_words = ((x_resident * p) as u64) + ((p * p) as u64);
 
     let mut degrees = vec![0.0f64; t_levels * p];
     let mut diag = vec![0.0f64; p];
@@ -286,6 +325,7 @@ fn screen_rank_multi(
     thresholds: &[f64],
     layout: &Layout1D,
     threads: usize,
+    gram_block: usize,
 ) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
     let p = x.cols();
     let n = x.rows();
@@ -293,10 +333,17 @@ fn screen_rank_multi(
     let (rs, re) = layout.range(comm.rank());
     let rows = re - rs;
 
-    // My block rows of S = XᵀX/n — formed once for every level.
-    let xt_rows = x.col_block(rs, re).transpose(); // rows × n
+    // My block rows of S = XᵀX/n — formed once for every level. The
+    // flop count is a machine fact: identical on both gram paths
+    // (the panel width is a schedule-only knob, rule 7).
     comm.count_flops_dense(2 * (rows * n * p) as u64);
-    let mut s_rows = xt_rows.matmul_mt(x, threads); // rows × p
+    let mut s_rows = if gram_block == 0 || gram_block >= n {
+        // In-core: materialize the transposed slab, blocked kernel.
+        let xt_rows = x.col_block(rs, re).transpose(); // rows × n
+        xt_rows.matmul_mt(x, threads) // rows × p
+    } else {
+        gram_rows_streamed(x, rs, re, gram_block, threads)
+    };
     s_rows.scale(1.0 / n.max(1) as f64);
 
     let mut diag = vec![0.0f64; rows];
@@ -358,6 +405,43 @@ fn screen_rank_multi(
     (merged, degrees, diag)
 }
 
+/// Row-panel streamed gram rows: `S_rows = (X[:, rs..re])ᵀ · X`,
+/// accumulated over ascending panels of `block` sample rows, output
+/// rows partitioned across `threads` workers. **Bit-identical** to the
+/// in-core `transpose + matmul_mt` path at every `(block, threads)`:
+/// each output element is written by exactly one worker and receives
+/// its `x[k][rs+r] · x[k][j]` terms in the same ascending-k order the
+/// naive kernel uses — panel boundaries (like cache blocking,
+/// determinism rule 1) only partition that loop, and storing/loading
+/// the f64 partial between panels is exact. Unlike the in-core path no
+/// `rows × n` transposed slab is materialized: one `block`-row panel
+/// of X is the entire X working set (rule 7: a schedule-only knob).
+fn gram_rows_streamed(x: &Mat, rs: usize, re: usize, block: usize, threads: usize) -> Mat {
+    let n = x.rows();
+    let p = x.cols();
+    let rows = re - rs;
+    let mut s_rows = Mat::zeros(rows, p);
+    let ranges = chunk_ranges(rows, threads.max(1), 1);
+    par_rows_mut(s_rows.data_mut(), p, &ranges, |_, r0, r1, out| {
+        let mut k0 = 0usize;
+        while k0 < n {
+            let k1 = (k0 + block).min(n);
+            for r in r0..r1 {
+                let acc = &mut out[(r - r0) * p..(r - r0 + 1) * p];
+                for k in k0..k1 {
+                    let xa = x.get(k, rs + r);
+                    let xk = &x.data()[k * p..(k + 1) * p];
+                    for (o, &xb) in acc.iter_mut().zip(xk) {
+                        *o += xa * xb;
+                    }
+                }
+            }
+            k0 = k1;
+        }
+    });
+    s_rows
+}
+
 /// Resolve the global concurrent rank budget: `cfg.ranks_budget`, with
 /// `0` ("auto") meaning the fabric's own rank count — out of the box a
 /// wave may run several planned fabrics at once but never widens any
@@ -399,7 +483,9 @@ pub(crate) fn validate_pin(
 /// Plan every non-singleton component of one job's screening level as a
 /// job-tagged executor task. A pure function of the level and config —
 /// a grid point planned inside a packed sweep gets exactly the plans a
-/// standalone [`fit_screened_distributed`] would give it.
+/// standalone [`fit_screened_distributed`] would give it. Each task
+/// carries its [`MemFootprint`] (`n·|c|` sub-matrix + `|c|²` working
+/// set) for the packer's memory budget.
 pub fn plan_job_tasks(
     job: usize,
     level: &ScreenLevel,
@@ -444,6 +530,7 @@ pub fn plan_job_tasks(
             indices: idx.to_vec(),
             plan,
             shape,
+            mem: MemFootprint::for_component(n, idx.len()),
         });
     }
     tasks
@@ -542,23 +629,25 @@ pub fn fit_screened_distributed(
 ) -> Result<ScreenedDistFit> {
     let p = x.cols();
     let setup = batch_setup(p, cfg, opts)?;
-    let mut pass = screen_distributed_multi(
+    let mut pass = screen_streamed(
         x,
         std::slice::from_ref(&cfg.lambda1),
         setup.screen_ranks,
         opts.machine,
         setup.threads,
+        opts.gram_block,
     );
     let level = pass.levels.pop().expect("one threshold, one level");
 
     let tasks = plan_job_tasks(0, &level, x.rows(), cfg, opts);
     let executor = FabricExecutor {
         budget: setup.budget,
+        mem_budget: cfg.mem_budget,
         threads: setup.threads,
         machine: opts.machine,
         sequential: opts.sequential,
     };
-    let run = executor.run(&[ExecutorJob { x, cfg: *cfg }], tasks)?;
+    let run = executor.run(&[ExecutorJob { x, cfg: *cfg, rows: None }], tasks)?;
 
     let components = level.components.count;
     let (screened, solves) =

@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use crate::concord::executor::{ExecutorJob, FabricExecutor, TaskOutcome};
 use crate::concord::screened_dist::{batch_setup, plan_job_tasks, reassemble_job, solves_view};
-use crate::concord::{fit_single_node, screen_distributed_multi, ConcordConfig, ScreenedDistOptions};
+use crate::concord::{fit_single_node, screen_streamed, ConcordConfig, ScreenedDistOptions};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::simnet::cost::{CostSummary, GridBill};
@@ -158,6 +158,12 @@ pub struct StabilityDistOutcome {
 /// deterministic given the seed — and bit-identical to fitting each
 /// subsample standalone (`rust/tests/grid_schedule.rs`;
 /// `cfg.workers` is ignored here).
+///
+/// Memory: each dense subsample copy lives only for its own screening
+/// pass; solves rebuild their sub-matrices lazily from row-index views
+/// of `x` ([`ExecutorJob`]), so peak residency is ~one subsample copy
+/// rather than all B at once — bit-identical either way
+/// (`rust/tests/memory_budget.rs`).
 pub fn stability_selection_dist(
     x: &Mat,
     base: &ConcordConfig,
@@ -169,23 +175,28 @@ pub fn stability_selection_dist(
     let setup = batch_setup(p, base, opts)?;
 
     // Screen every subsample (serially billed), planning its components
-    // into the shared task list as we go.
-    let mut subs: Vec<Mat> = Vec::with_capacity(cfg.subsamples);
-    for b in 0..cfg.subsamples {
-        let rows = subsample_rows(n, m, cfg.seed, b);
-        subs.push(Mat::from_fn(m, p, |i, j| x.get(rows[i], j)));
-    }
+    // into the shared task list as we go. Each dense subsample copy is
+    // materialized only for its own screening pass and dropped at the
+    // end of the iteration — the executor rebuilds the per-task
+    // sub-matrices lazily from the retained row-index lists
+    // ([`ExecutorJob::rows`]), so peak residency is ~one subsample, not
+    // B of them, and the rebuild is bit-identical to solving from the
+    // retained copy.
     let mut bill = GridBill::default();
     let mut levels = Vec::with_capacity(cfg.subsamples);
+    let mut row_lists: Vec<Vec<usize>> = Vec::with_capacity(cfg.subsamples);
     let mut tasks = Vec::new();
     let mut tasks_per_job = Vec::with_capacity(cfg.subsamples);
-    for (b, sub) in subs.iter().enumerate() {
-        let mut pass = screen_distributed_multi(
-            sub,
+    for b in 0..cfg.subsamples {
+        let rows = subsample_rows(n, m, cfg.seed, b);
+        let sub = Mat::from_fn(m, p, |i, j| x.get(rows[i], j));
+        let mut pass = screen_streamed(
+            &sub,
             std::slice::from_ref(&base.lambda1),
             setup.screen_ranks,
             opts.machine,
             setup.threads,
+            opts.gram_block,
         );
         bill.screen.merge_sequential(&pass.cost);
         let level = pass.levels.pop().expect("one threshold, one level");
@@ -193,13 +204,19 @@ pub fn stability_selection_dist(
         tasks_per_job.push(job_tasks.len());
         tasks.extend(job_tasks);
         levels.push((level, pass.diag));
+        row_lists.push(rows);
+        // `sub` drops here: screening holds one dense copy at a time.
     }
 
-    // One shared cross-subsample schedule for every component solve.
-    let exec_jobs: Vec<ExecutorJob<'_>> =
-        subs.iter().map(|sub| ExecutorJob { x: sub, cfg: *base }).collect();
+    // One shared cross-subsample schedule for every component solve;
+    // each job is a lazy row view into the original x.
+    let exec_jobs: Vec<ExecutorJob<'_>> = row_lists
+        .into_iter()
+        .map(|rows| ExecutorJob { x, cfg: *base, rows: Some(rows) })
+        .collect();
     let executor = FabricExecutor {
         budget: setup.budget,
+        mem_budget: base.mem_budget,
         threads: setup.threads,
         machine: opts.machine,
         sequential: opts.sequential,

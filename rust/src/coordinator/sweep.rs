@@ -17,7 +17,7 @@ use crate::concord::executor::{ExecutorJob, ExecutorTask, FabricExecutor, TaskOu
 use crate::concord::screened_dist::{batch_setup, plan_job_tasks, reassemble_job, solves_view};
 use crate::concord::screening::{fit_with_screening_on, nested_components, Components};
 use crate::concord::{fit_screened_distributed, fit_single_node, ConcordConfig, ConcordFit};
-use crate::concord::{screen_distributed_multi, ScreenedDistOptions};
+use crate::concord::{screen_streamed, ScreenedDistOptions};
 use crate::cost::schedule::ConcurrentSchedule;
 use crate::linalg::Mat;
 use crate::runtime::native;
@@ -297,8 +297,14 @@ fn sweep_dist_packed(
 
     // One distributed gram + one metered labeling collective for the
     // whole λ₁ list; the λ₂ axis reuses its λ₁'s level for free.
-    let pass =
-        screen_distributed_multi(x, &grid.lambda1, setup.screen_ranks, opts.machine, setup.threads);
+    let pass = screen_streamed(
+        x,
+        &grid.lambda1,
+        setup.screen_ranks,
+        opts.machine,
+        setup.threads,
+        opts.gram_block,
+    );
 
     // Plan each λ₁ level once — plans depend on the level (and the
     // shared variant/threads), never on λ₂ — then re-tag the level's
@@ -312,7 +318,7 @@ fn sweep_dist_packed(
         .collect();
     let jobs = grid.jobs(base);
     let exec_jobs: Vec<ExecutorJob<'_>> =
-        jobs.iter().map(|job| ExecutorJob { x, cfg: job.cfg }).collect();
+        jobs.iter().map(|job| ExecutorJob { x, cfg: job.cfg, rows: None }).collect();
     let mut tasks = Vec::new();
     let mut tasks_per_job = Vec::with_capacity(jobs.len());
     for job in &jobs {
@@ -325,6 +331,7 @@ fn sweep_dist_packed(
     }
     let executor = FabricExecutor {
         budget: setup.budget,
+        mem_budget: base.mem_budget,
         threads: setup.threads,
         machine: opts.machine,
         sequential: opts.sequential,

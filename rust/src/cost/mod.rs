@@ -18,6 +18,6 @@ pub mod schedule;
 
 pub use model::{CostBreakdown, ProblemShape, ReplicationChoice};
 pub use optimizer::{optimize_replication, OptimizerResult};
-pub use schedule::{plan_component, FabricPlan};
+pub use schedule::{plan_component, FabricPlan, MemFootprint, PackItem};
 
 pub use crate::simnet::cost::{CostModel, MachineParams};

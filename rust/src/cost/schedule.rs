@@ -29,6 +29,22 @@
 //! ([`shrink_to_budget`]). The resulting schedule's makespan is the
 //! sum of per-wave maxima — what `CostSummary::merge_concurrent`
 //! bills.
+//!
+//! The packer enforces a second, orthogonal budget: **memory**. Each
+//! schedulable unit carries a [`MemFootprint`] — the words the executor
+//! will keep resident while the task runs (its extracted X sub-matrix
+//! plus the gram/omega working set) — and a wave admits a new entry
+//! only while the sum of footprints stays within `mem_budget` words
+//! (0 = unbounded). Because the executor extracts sub-matrices at
+//! wave launch and drops them when the wave's outcomes land, the
+//! schedule's peak resident memory is the largest *wave* sum
+//! ([`ConcurrentSchedule::peak_mem_words`]), not the job-list sum. A
+//! single task that cannot fit the memory budget on its own is a clean
+//! error — shrinking ranks cannot shrink data. Both budgets are
+//! schedule-only knobs (determinism rule 7): they move *when* a fabric
+//! launches, never what it computes.
+
+use anyhow::{bail, Result};
 
 use crate::concord::Variant;
 use crate::simnet::MachineParams;
@@ -191,15 +207,60 @@ impl JobTag {
     }
 }
 
+/// Words of f64 the executor keeps resident while one task runs: the
+/// extracted `n × |c|` column sub-matrix of X plus the `|c|²` gram /
+/// omega working set the per-component solver allocates. The footprint
+/// is a property of the *data*, not the fabric shape — replication
+/// copies live on simulated ranks, while this counter models the host
+/// process actually running the simulation — so shrinking a plan's
+/// ranks never shrinks its footprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MemFootprint {
+    /// Words of the extracted X sub-matrix (`n · |c|`).
+    pub x_words: u64,
+    /// Words of the per-component working set (`|c|²`).
+    pub work_words: u64,
+}
+
+impl MemFootprint {
+    /// Footprint of a component of `size` columns drawn from an
+    /// `n`-row sample matrix.
+    pub fn for_component(n: usize, size: usize) -> Self {
+        MemFootprint {
+            x_words: (n as u64) * (size as u64),
+            work_words: (size as u64) * (size as u64),
+        }
+    }
+
+    /// Total resident words while the task runs.
+    pub fn words(&self) -> u64 {
+        self.x_words + self.work_words
+    }
+}
+
+/// One schedulable unit as submitted to the packer: which (job,
+/// component), the plan the per-component planner chose, the problem
+/// shape (consulted only when the plan must be shrunk and re-priced),
+/// and the memory footprint the executor will hold while it runs.
+#[derive(Debug, Clone, Copy)]
+pub struct PackItem {
+    pub tag: JobTag,
+    pub plan: FabricPlan,
+    pub shape: ProblemShape,
+    pub mem: MemFootprint,
+}
+
 /// One component's slot in a concurrent schedule: which (job,
-/// component), and the (possibly budget-shrunk) fabric plan it will
-/// actually run.
+/// component), the (possibly budget-shrunk) fabric plan it will
+/// actually run, and the footprint it charges against the wave's
+/// memory budget.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ScheduledComponent {
     /// Which job's component this is (index into the caller's screened
     /// decomposition for that job).
     pub tag: JobTag,
     pub plan: FabricPlan,
+    pub mem: MemFootprint,
 }
 
 /// One wave: a set of component fabrics that run at the same time on
@@ -220,6 +281,12 @@ impl Wave {
     pub fn modeled_time(&self) -> f64 {
         self.entries.iter().map(|e| e.plan.modeled_time).fold(0.0, f64::max)
     }
+
+    /// Resident words while this wave runs: its entries' sub-matrices
+    /// and working sets are all live at once, so footprints *sum*.
+    pub fn mem_words(&self) -> u64 {
+        self.entries.iter().map(|e| e.mem.words()).sum()
+    }
 }
 
 /// A wave-based concurrent schedule over a global rank budget.
@@ -229,6 +296,9 @@ pub struct ConcurrentSchedule {
     pub waves: Vec<Wave>,
     /// The rank budget the waves were packed under.
     pub budget: usize,
+    /// The memory budget (words) the waves were packed under; 0 means
+    /// unbounded.
+    pub mem_budget: u64,
 }
 
 impl ConcurrentSchedule {
@@ -249,36 +319,66 @@ impl ConcurrentSchedule {
     pub fn components(&self) -> usize {
         self.waves.iter().map(|w| w.entries.len()).sum()
     }
+
+    /// Modeled peak resident memory of the schedule: waves run back to
+    /// back and each wave's footprints drop before the next launches,
+    /// so the peak is the largest per-wave sum — not the sum over the
+    /// whole job list.
+    pub fn peak_mem_words(&self) -> u64 {
+        self.waves.iter().map(Wave::mem_words).max().unwrap_or(0)
+    }
 }
 
 /// Pack independent component fabrics into waves under a global rank
-/// budget, minimizing the modeled makespan greedily: components are
-/// sorted longest-processing-time first (ties broken by [`JobTag`], so
-/// the schedule is a pure function of its inputs) and each is placed
-/// into the first wave with enough rank headroom — because earlier
+/// budget *and* a global memory budget, minimizing the modeled
+/// makespan greedily: components are sorted longest-processing-time
+/// first (ties broken by [`JobTag`], so the schedule is a pure
+/// function of its inputs) and each is placed into the first wave with
+/// enough rank headroom *and* enough memory headroom — because earlier
 /// entries are never shorter, joining a wave never lengthens it, so
 /// first-fit is makespan-optimal for the wave set the scan builds. A
-/// plan wider than the budget is first re-planned to the cheapest
+/// plan wider than the rank budget is first re-planned to the cheapest
 /// runnable power-of-two that fits ([`shrink_to_budget`]); every wave
-/// therefore occupies at most `budget` ranks.
+/// therefore occupies at most `budget` ranks and at most `mem_budget`
+/// words (`mem_budget == 0` disables the memory constraint).
 ///
-/// The input is the flat list of every submitted job's components —
-/// `(tag, plan, shape)`, the shape consulted only when a plan must be
-/// shrunk and re-priced — so a sweep's grid points and a stability
-/// run's subsamples pack into the *same* waves as naturally as one
-/// fit's components do.
+/// Memory, unlike ranks, cannot be shrunk: a task's footprint is its
+/// data. A single component whose [`MemFootprint`] alone exceeds a
+/// nonzero `mem_budget` is therefore a clean error, not a panic and
+/// not a silent overrun.
+///
+/// The input is the flat list of every submitted job's components
+/// ([`PackItem`]s, the shape consulted only when a plan must be shrunk
+/// and re-priced) — so a sweep's grid points and a stability run's
+/// subsamples pack into the *same* waves as naturally as one fit's
+/// components do.
 pub fn plan_concurrent(
-    components: &[(JobTag, FabricPlan, ProblemShape)],
+    components: &[PackItem],
     budget: usize,
+    mem_budget: u64,
     threads: usize,
     machine: &MachineParams,
-) -> ConcurrentSchedule {
+) -> Result<ConcurrentSchedule> {
     let budget = budget.max(1);
+    for item in components {
+        if mem_budget > 0 && item.mem.words() > mem_budget {
+            bail!(
+                "component (job {}, component {}) needs {} words resident \
+                 but the memory budget is {} words; shrinking ranks cannot \
+                 shrink data — raise --mem-budget or screen harder",
+                item.tag.job,
+                item.tag.component,
+                item.mem.words(),
+                mem_budget
+            );
+        }
+    }
     let mut items: Vec<ScheduledComponent> = components
         .iter()
-        .map(|&(tag, plan, shape)| ScheduledComponent {
+        .map(|&PackItem { tag, plan, shape, mem }| ScheduledComponent {
             tag,
             plan: shrink_to_budget(&shape, plan, budget, threads, machine),
+            mem,
         })
         .collect();
     items.sort_by(|a, b| {
@@ -286,12 +386,16 @@ pub fn plan_concurrent(
     });
     let mut waves: Vec<Wave> = Vec::new();
     for item in items {
-        match waves.iter_mut().find(|w| w.ranks() + item.plan.ranks <= budget) {
+        let fits = |w: &&mut Wave| {
+            w.ranks() + item.plan.ranks <= budget
+                && (mem_budget == 0 || w.mem_words() + item.mem.words() <= mem_budget)
+        };
+        match waves.iter_mut().find(fits) {
             Some(wave) => wave.entries.push(item),
             None => waves.push(Wave { entries: vec![item] }),
         }
     }
-    ConcurrentSchedule { waves, budget }
+    Ok(ConcurrentSchedule { waves, budget, mem_budget })
 }
 
 /// Price one cell. At P = 1 nothing is sent — the closed forms'
@@ -379,13 +483,18 @@ mod tests {
         assert!(t8.modeled_time <= t1.modeled_time);
     }
 
-    fn shapes(ps: &[f64]) -> Vec<(JobTag, FabricPlan, ProblemShape)> {
+    fn shapes(ps: &[f64]) -> Vec<PackItem> {
         let m = machine();
         ps.iter()
             .enumerate()
             .map(|(c, &p)| {
                 let shape = ProblemShape { p, n: 80.0, s: 30.0, t: 8.0, d: 6.0 };
-                (JobTag::single(c), plan_component(&shape, 16, 1, &m, Variant::Obs), shape)
+                PackItem {
+                    tag: JobTag::single(c),
+                    plan: plan_component(&shape, 16, 1, &m, Variant::Obs),
+                    shape,
+                    mem: MemFootprint::for_component(shape.n as usize, p as usize),
+                }
             })
             .collect()
     }
@@ -396,7 +505,7 @@ mod tests {
     fn waves_respect_budget_and_cover_components() {
         let comps = shapes(&[6_000.0, 12_000.0, 3_000.0, 9_000.0, 500.0]);
         for budget in [1usize, 2, 4, 8, 16, 64] {
-            let sched = plan_concurrent(&comps, budget, 1, &machine());
+            let sched = plan_concurrent(&comps, budget, 0, 1, &machine()).unwrap();
             let mut seen: Vec<usize> = sched
                 .waves
                 .iter()
@@ -423,7 +532,7 @@ mod tests {
     fn makespan_undercuts_serial_sum() {
         let comps = shapes(&[8_000.0, 8_000.0, 8_000.0, 8_000.0]);
         let m = machine();
-        let wide = plan_concurrent(&comps, 64, 1, &m);
+        let wide = plan_concurrent(&comps, 64, 0, 1, &m).unwrap();
         let serial = wide.sequential_time();
         assert!(wide.makespan() <= serial + 1e-15);
         assert!(
@@ -434,7 +543,7 @@ mod tests {
 
         // A budget of one rank degenerates to one (single-rank)
         // component per wave: makespan == serial sum of the shrunk plans.
-        let narrow = plan_concurrent(&comps, 1, 1, &m);
+        let narrow = plan_concurrent(&comps, 1, 0, 1, &m).unwrap();
         assert!(narrow.waves.iter().all(|w| w.entries.len() == 1));
         assert!((narrow.makespan() - narrow.sequential_time()).abs() < 1e-15);
     }
@@ -467,8 +576,8 @@ mod tests {
     fn packing_is_deterministic() {
         let comps = shapes(&[4_000.0, 4_000.0, 4_000.0, 2_000.0]);
         let m = machine();
-        let a = plan_concurrent(&comps, 8, 2, &m);
-        let b = plan_concurrent(&comps, 8, 2, &m);
+        let a = plan_concurrent(&comps, 8, 0, 2, &m).unwrap();
+        let b = plan_concurrent(&comps, 8, 0, 2, &m).unwrap();
         assert_eq!(a.waves.len(), b.waves.len());
         for (wa, wb) in a.waves.iter().zip(&b.waves) {
             assert_eq!(wa.entries, wb.entries);
@@ -484,18 +593,19 @@ mod tests {
         let m = machine();
         // Three jobs with identical components: all plans tie on
         // modeled_time, so the LPT order is exactly the tag order.
-        let mut comps: Vec<(JobTag, FabricPlan, ProblemShape)> = Vec::new();
+        let mut comps: Vec<PackItem> = Vec::new();
         for job in 0..3usize {
             for c in 0..2usize {
                 let shape = ProblemShape { p: 8_000.0, n: 80.0, s: 30.0, t: 8.0, d: 6.0 };
                 let plan = plan_component(&shape, 16, 1, &m, Variant::Obs);
-                comps.push((JobTag { job, component: c }, plan, shape));
+                let mem = MemFootprint::for_component(80, 8_000);
+                comps.push(PackItem { tag: JobTag { job, component: c }, plan, shape, mem });
             }
         }
-        let per_fabric = comps[0].1.ranks;
+        let per_fabric = comps[0].plan.ranks;
         assert!(per_fabric >= 2, "fixture must want multi-rank fabrics");
 
-        let sched = plan_concurrent(&comps, 4 * per_fabric, 1, &m);
+        let sched = plan_concurrent(&comps, 4 * per_fabric, 0, 1, &m).unwrap();
         let mut seen: Vec<JobTag> = sched
             .waves
             .iter()
@@ -503,7 +613,7 @@ mod tests {
             .collect();
         let flat = seen.clone();
         seen.sort();
-        let want: Vec<JobTag> = comps.iter().map(|&(t, _, _)| t).collect();
+        let want: Vec<JobTag> = comps.iter().map(|c| c.tag).collect();
         assert_eq!(seen, want, "every (job, component) scheduled exactly once");
         // All-ties LPT: entries come out in tag order across the waves.
         assert_eq!(flat, want, "tie-break must be job-major tag order");
@@ -517,6 +627,62 @@ mod tests {
         for w in &sched.waves {
             assert!(w.ranks() <= 4 * per_fabric);
         }
+    }
+
+    /// The memory budget splits waves the rank budget alone would pack:
+    /// every wave's footprint sum stays within the budget, coverage is
+    /// unchanged, and the peak resident words drop to at most the
+    /// budget while the unbounded schedule's peak exceeds it.
+    #[test]
+    fn mem_budget_splits_waves_and_bounds_the_peak() {
+        let comps = shapes(&[8_000.0, 8_000.0, 8_000.0, 8_000.0]);
+        let m = machine();
+        let per = comps[0].mem.words();
+        assert!(per > 0);
+
+        let unbounded = plan_concurrent(&comps, 64, 0, 1, &m).unwrap();
+        assert!(unbounded.waves.iter().any(|w| w.entries.len() >= 2));
+        assert!(unbounded.peak_mem_words() > per, "unbounded packs ≥ 2 footprints per wave");
+
+        // Tight: exactly one component's footprint fits at a time.
+        let tight = plan_concurrent(&comps, 64, per, 1, &m).unwrap();
+        assert!(tight.waves.iter().all(|w| w.entries.len() == 1));
+        assert_eq!(tight.peak_mem_words(), per);
+        assert_eq!(tight.components(), comps.len(), "memory budget must not drop work");
+        for w in &tight.waves {
+            assert!(w.mem_words() <= tight.mem_budget);
+        }
+        assert!(tight.peak_mem_words() < unbounded.peak_mem_words());
+
+        // Two footprints fit: waves pair up, the peak is bounded by the
+        // budget, and the makespan sits between the two extremes.
+        let pair = plan_concurrent(&comps, 64, 2 * per, 1, &m).unwrap();
+        assert!(pair.waves.iter().all(|w| w.entries.len() <= 2));
+        assert!(pair.peak_mem_words() <= 2 * per);
+        assert!(pair.makespan() <= tight.makespan() + 1e-15);
+
+        // Schedules only re-shape: plans and their modeled times are
+        // untouched by the memory budget (rule 7 at the planning layer).
+        let mut a: Vec<_> = tight.waves.iter().flat_map(|w| w.entries.clone()).collect();
+        let mut b: Vec<_> = unbounded.waves.iter().flat_map(|w| w.entries.clone()).collect();
+        a.sort_by_key(|e| e.tag);
+        b.sort_by_key(|e| e.tag);
+        assert_eq!(a, b, "memory budget must not change any plan");
+    }
+
+    /// A single component larger than a nonzero memory budget is a
+    /// clean error naming the task — never a panic, never an overrun.
+    #[test]
+    fn oversized_component_is_a_clean_error() {
+        let comps = shapes(&[8_000.0]);
+        let m = machine();
+        let need = comps[0].mem.words();
+        let err = plan_concurrent(&comps, 64, need - 1, 1, &m).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("component"), "error must name the task: {msg}");
+        assert!(msg.contains("memory budget"), "error must name the budget: {msg}");
+        // At exactly the footprint it fits.
+        assert!(plan_concurrent(&comps, 64, need, 1, &m).is_ok());
     }
 
     /// `JobTag::single` pins job 0, and the derived ordering is

@@ -101,6 +101,11 @@ fn solver_config(args: &Args, cfg: &Config) -> Result<ConcordConfig> {
         // solving (0 = "use --ranks"): CLI --ranks-budget, TOML
         // fabric.budget.
         ranks_budget: args.usize_or("ranks-budget", cfg.usize_or("fabric.budget", 0)?)?,
+        // Host-memory budget in f64 words for wave packing (0 =
+        // unbounded): CLI --mem-budget, TOML fabric.mem_budget. A
+        // schedule-only knob — results are bit-identical at any value
+        // that admits a schedule (determinism rule 7).
+        mem_budget: args.usize_or("mem-budget", cfg.usize_or("fabric.mem_budget", 0)?)? as u64,
     })
 }
 
@@ -124,6 +129,10 @@ fn screened_dist_options(args: &Args, file_cfg: &Config) -> Result<ScreenedDistO
         small_cutoff: args.usize_or("screen-cutoff", file_cfg.usize_or("screen.cutoff", 4)?)?,
         fixed: if pinned { Some((ranks, c_x, c_o)) } else { None },
         sequential: false,
+        // Row-panel width for the streamed gram pass (0 = in-core):
+        // CLI --gram-block, TOML screen.gram_block. Bit-identical to
+        // the in-core pass at any width (determinism rules 1 and 7).
+        gram_block: args.usize_or("gram-block", file_cfg.usize_or("screen.gram_block", 0)?)?,
     })
 }
 
@@ -268,13 +277,18 @@ fn cmd_solve(args: &Args) -> Result<()> {
                 }
             }
             if !out.schedule.waves.is_empty() {
+                let mem = match out.schedule.mem_budget {
+                    0 => "unbounded memory".to_string(),
+                    b => format!("memory budget {b} words"),
+                };
                 println!(
-                    "schedule: {} wave(s) under rank budget {} — modeled makespan \
-                     {:.4}s vs {:.4}s sequential",
+                    "schedule: {} wave(s) under rank budget {} ({mem}) — modeled \
+                     makespan {:.4}s vs {:.4}s sequential; peak residency {} words",
                     out.schedule.waves.len(),
                     out.schedule.budget,
                     out.schedule.makespan(),
-                    out.schedule.sequential_time()
+                    out.schedule.sequential_time(),
+                    out.schedule.peak_mem_words()
                 );
             }
             let s = out.cost;

@@ -124,6 +124,12 @@ pub struct CostSummary {
     pub total: Counters,
     /// Per-rank maxima (per-processor critical-path counts).
     pub max_per_rank: Counters,
+    /// Modeled peak resident words of the *host process* running the
+    /// simulation: extracted X sub-matrices plus per-component working
+    /// sets live at once. Unlike the time fields, the merge semantics
+    /// invert: concurrent phases are resident *together* (footprints
+    /// add), sequential phases free one before the next (peaks max).
+    pub peak_mem_words: u64,
 }
 
 impl CostSummary {
@@ -137,6 +143,9 @@ impl CostSummary {
         self.comm_time += other.comm_time;
         self.total.add(&other.total);
         self.max_per_rank.max_elementwise(&other.max_per_rank);
+        // Sequential phases free their memory before the next starts:
+        // the peak is the larger phase, not the sum.
+        self.peak_mem_words = self.peak_mem_words.max(other.peak_mem_words);
     }
 
     /// Fold another fabric's summary into this one under a *concurrent*
@@ -153,6 +162,9 @@ impl CostSummary {
         self.comm_time = self.comm_time.max(other.comm_time);
         self.total.add(&other.total);
         self.max_per_rank.max_elementwise(&other.max_per_rank);
+        // Concurrent phases are resident together: footprints add —
+        // the inverse of the time semantics above.
+        self.peak_mem_words += other.peak_mem_words;
     }
 
     pub fn from_counters(per_rank: &[Counters], m: &MachineParams) -> Self {
@@ -357,6 +369,28 @@ mod tests {
         // Packing two nonzero fabrics strictly undercuts the serial view.
         assert!(total.time < seq.time);
         assert!(GridBill::default().total().time == 0.0);
+    }
+
+    /// Peak-memory merge semantics invert the time semantics: the
+    /// concurrent fold *adds* footprints (both resident at once), the
+    /// sequential fold *maxes* them (one freed before the next).
+    #[test]
+    fn peak_mem_merges_invert_time_semantics() {
+        let a = CostSummary { peak_mem_words: 100, ..CostSummary::default() };
+        let b = CostSummary { peak_mem_words: 40, ..CostSummary::default() };
+        let mut conc = a;
+        conc.merge_concurrent(&b);
+        assert_eq!(conc.peak_mem_words, 140);
+        let mut seq = a;
+        seq.merge_sequential(&b);
+        assert_eq!(seq.peak_mem_words, 100);
+        // A wave folded concurrently, then waves folded sequentially:
+        // the bill reports the largest wave's residency.
+        let mut wave2 = CostSummary { peak_mem_words: 70, ..CostSummary::default() };
+        wave2.merge_concurrent(&CostSummary { peak_mem_words: 90, ..CostSummary::default() });
+        let mut bill = conc;
+        bill.merge_sequential(&wave2);
+        assert_eq!(bill.peak_mem_words, 160);
     }
 
     #[test]

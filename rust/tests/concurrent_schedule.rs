@@ -67,6 +67,7 @@ fn run(x: &Mat, threads: usize, budget: usize, sequential: bool) -> ScreenedDist
         small_cutoff: 0,
         fixed: None,
         sequential,
+        gram_block: 0,
     };
     fit_screened_distributed(x, &k_block_cfg(threads, budget), &opts).unwrap()
 }

@@ -17,6 +17,7 @@ use hpconcord::coordinator::{
     run_sweep_screened_dist, select_by_density, stability_selection, stability_selection_dist,
     subsample_rows, GridSchedule, GridSpec, StabilityConfig, SweepResult,
 };
+use hpconcord::cost::MemFootprint;
 use hpconcord::linalg::Mat;
 use hpconcord::prelude::*;
 
@@ -64,6 +65,7 @@ fn dist_opts() -> ScreenedDistOptions {
         small_cutoff: 0,
         fixed: None,
         sequential: false,
+        gram_block: 0,
     }
 }
 
@@ -200,6 +202,39 @@ fn packed_sweep_sequential_reference_is_bit_identical() {
     }
     assert_eq!(conc.cost.total, seq.cost.total, "counters are machine facts");
     assert!(conc.cost.time <= seq.cost.time + 1e-15);
+}
+
+/// Determinism rule 7 at the grid level: a memory budget tight enough
+/// to force one fabric per wave leaves every grid point's omega (and
+/// the counter totals) bit-identical to the unbounded packed sweep —
+/// only the wave layout and the modeled peak residency move.
+#[test]
+fn packed_sweep_bit_identical_under_tight_memory_budget() {
+    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x9A1D);
+    let grid = grid();
+    let opts = dist_opts();
+    let unbounded =
+        run_sweep_screened_dist(&x, &grid, &base_cfg(4, 32), &opts, GridSchedule::Packed)
+            .unwrap();
+    // Every component is a 10-column block of the 800-row fixture.
+    let tight = MemFootprint::for_component(x.rows(), 10).words();
+    let base = ConcordConfig { mem_budget: tight, ..base_cfg(4, 32) };
+    let bounded = run_sweep_screened_dist(&x, &grid, &base, &opts, GridSchedule::Packed).unwrap();
+    for (a, b) in bounded.results.iter().zip(&unbounded.results) {
+        assert_eq!(a.job.id, b.job.id);
+        assert_eq!(bits(&a.fit.omega), bits(&b.fit.omega), "job {}", a.job.id);
+    }
+    assert_eq!(bounded.cost.total, unbounded.cost.total, "counters are machine facts");
+    assert_eq!(bounded.schedules.len(), 1);
+    let sched = &bounded.schedules[0];
+    for wave in &sched.waves {
+        assert!(wave.mem_words() <= tight, "wave over the memory budget");
+        assert_eq!(wave.entries.len(), 1, "tight budget: one fabric per wave");
+    }
+    assert!(
+        bounded.bill.waves.peak_mem_words < unbounded.bill.waves.peak_mem_words,
+        "tight budget must shrink the modeled peak"
+    );
 }
 
 fn stability_base() -> ConcordConfig {

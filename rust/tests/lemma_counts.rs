@@ -187,6 +187,7 @@ fn screening_leaves_subfabric_counts_unchanged() {
             small_cutoff: 0,
             fixed: Some((4, 2, 2)),
             sequential: false,
+            gram_block: 0,
         };
         let screened = fit_screened_distributed(&x, &cfg, &opts).unwrap();
         assert_eq!(screened.solves.len(), 2, "{variant:?}: expected one fabric per block");

@@ -1,0 +1,266 @@
+//! Memory-bounded wave execution: the bit-identity test wall.
+//!
+//! The contract under test is determinism rule 7 in `ARCHITECTURE.md`:
+//! the memory budget (`--mem-budget`, wave packing under per-task
+//! `MemFootprint`s) and the gram panel width (`--gram-block`, the
+//! streamed screening pass) are **schedule-only** knobs. Any budget
+//! that admits a schedule and any panel width produce bit-identical
+//! omegas, objectives, and Lemma-3.3/3.5 counters — only the modeled
+//! peak residency (`CostSummary::peak_mem_words`) and the wave layout
+//! move. A budget too small for the largest single component is a
+//! clean error, never a panic or a silent overrun.
+
+use hpconcord::concord::{
+    fit_screened_distributed, screen_distributed_multi, screen_streamed, ConcordConfig,
+    ScreenedDistFit, ScreenedDistOptions, Variant,
+};
+use hpconcord::coordinator::{stability_selection_dist, StabilityConfig};
+use hpconcord::cost::MemFootprint;
+use hpconcord::linalg::Mat;
+use hpconcord::prelude::*;
+
+mod common;
+use common::disjoint_blocks;
+
+fn bits(m: &Mat) -> Vec<u64> {
+    m.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// A machine whose flops dwarf its communication: the planner then
+/// gives even small screened components multi-rank fabrics, so every
+/// component enters the wave packer and the memory budget genuinely
+/// reshapes the schedule.
+fn flop_heavy() -> MachineParams {
+    MachineParams {
+        alpha: 1.0e-13,
+        beta: 1.0e-13,
+        gamma_dense: 1.0e-6,
+        gamma_sparse: 8.0e-6,
+        beta_mem: 0.0,
+    }
+}
+
+fn base_cfg(threads: usize, mem_budget: u64) -> ConcordConfig {
+    ConcordConfig {
+        lambda1: 0.02,
+        lambda2: 0.1,
+        tol: 0.0, // fixed budget: every component runs exactly max_iter
+        max_iter: 6,
+        variant: Variant::Cov,
+        threads,
+        ranks_budget: 32,
+        mem_budget,
+        ..Default::default()
+    }
+}
+
+fn dist_opts() -> ScreenedDistOptions {
+    ScreenedDistOptions {
+        total_ranks: 8,
+        machine: flop_heavy(),
+        small_cutoff: 0,
+        fixed: None,
+        sequential: false,
+        gram_block: 0,
+    }
+}
+
+/// Per-component resident words of the executed schedule, in wave
+/// order.
+fn footprints(out: &ScreenedDistFit) -> Vec<u64> {
+    out.schedule
+        .waves
+        .iter()
+        .flat_map(|w| w.entries.iter().map(|e| e.mem.words()))
+        .collect()
+}
+
+/// ISSUE acceptance: omegas, objective bits and the metered counters
+/// are bit-identical across `--mem-budget` ∈ {unbounded, tight,
+/// exactly-one-wave-fits} × threads {1, 4} on the shared 4-block
+/// fixture — the budget only splits waves.
+#[test]
+fn mem_budget_is_a_schedule_only_knob() {
+    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x9A1D);
+    let opts = dist_opts();
+    let baseline = fit_screened_distributed(&x, &base_cfg(1, 0), &opts).unwrap();
+    let per = footprints(&baseline);
+    assert_eq!(per.len(), 4, "fixture must screen into 4 fabric components");
+    let tight = per.iter().copied().max().unwrap();
+    let one_wave: u64 = per.iter().sum();
+    assert!(
+        baseline.schedule.waves.len() < per.len(),
+        "rank budget 32 must co-schedule components, or tightness is vacuous"
+    );
+
+    for budget in [0u64, tight, one_wave] {
+        for threads in [1usize, 4] {
+            let tag = format!("mem budget {budget} threads {threads}");
+            let out = fit_screened_distributed(&x, &base_cfg(threads, budget), &opts).unwrap();
+            assert_eq!(bits(&out.fit.omega), bits(&baseline.fit.omega), "{tag}: omega drift");
+            assert_eq!(
+                out.fit.objective.to_bits(),
+                baseline.fit.objective.to_bits(),
+                "{tag}: objective drift"
+            );
+            assert_eq!(out.fit.iterations, baseline.fit.iterations, "{tag}");
+            // Lemma-3.3/3.5 counters are machine facts: the schedule
+            // cannot move a single message, word, or flop.
+            assert_eq!(out.cost.total, baseline.cost.total, "{tag}: counter drift");
+            assert_eq!(out.cost.max_per_rank, baseline.cost.max_per_rank, "{tag}");
+            // And the schedule honors the budget on every wave.
+            if budget > 0 {
+                for (w, wave) in out.schedule.waves.iter().enumerate() {
+                    assert!(wave.mem_words() <= budget, "{tag}: wave {w} over budget");
+                }
+                assert!(out.schedule.peak_mem_words() <= budget, "{tag}");
+                assert!(out.solve_cost.peak_mem_words <= budget, "{tag}");
+            }
+        }
+    }
+
+    // The tight budget really splits waves: one equal-footprint
+    // component per wave, and the modeled peak drops strictly below
+    // the unbounded schedule's.
+    let tight_run = fit_screened_distributed(&x, &base_cfg(1, tight), &opts).unwrap();
+    assert_eq!(tight_run.schedule.waves.len(), per.len(), "tight budget: one wave each");
+    assert!(tight_run.schedule.peak_mem_words() < baseline.schedule.peak_mem_words());
+}
+
+/// A budget below the largest single component is a clean `anyhow`
+/// error (shrinking ranks cannot shrink data), not a panic.
+#[test]
+fn budget_below_largest_component_is_a_clean_error() {
+    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x9A1D);
+    let opts = dist_opts();
+    let err = fit_screened_distributed(&x, &base_cfg(1, 100), &opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("memory budget"), "unexpected error: {msg}");
+    // The smallest feasible budget — exactly the largest component —
+    // still schedules.
+    let need = MemFootprint::for_component(x.rows(), 10).words();
+    assert!(fit_screened_distributed(&x, &base_cfg(1, need), &opts).is_ok());
+}
+
+/// Ragged [12, 6, 6, 6] blocks: packing under the tight budget keeps
+/// every wave's resident words within budget and the executed bill's
+/// peak strictly below the unbounded fold, without touching results.
+#[test]
+fn tight_budget_bounds_the_modeled_peak() {
+    let x = disjoint_blocks(&[12, 6, 6, 6], 200, 0x51ab);
+    let opts = dist_opts();
+    let unbounded = fit_screened_distributed(&x, &base_cfg(1, 0), &opts).unwrap();
+    let per = footprints(&unbounded);
+    assert_eq!(per.len(), 4);
+    let tight = per.iter().copied().max().unwrap();
+    assert_eq!(tight, MemFootprint::for_component(x.rows(), 12).words());
+
+    let bounded = fit_screened_distributed(&x, &base_cfg(1, tight), &opts).unwrap();
+    for wave in &bounded.schedule.waves {
+        assert!(wave.mem_words() <= tight);
+    }
+    assert!(bounded.schedule.peak_mem_words() <= tight);
+    assert!(
+        bounded.solve_cost.peak_mem_words < unbounded.solve_cost.peak_mem_words,
+        "budgeted peak {} must undercut unbounded peak {}",
+        bounded.solve_cost.peak_mem_words,
+        unbounded.solve_cost.peak_mem_words
+    );
+    assert_eq!(bits(&bounded.fit.omega), bits(&unbounded.fit.omega));
+}
+
+/// The streamed gram pass is bit-identical to the in-core pass —
+/// labelings, degrees, diagonal, and counters — at every panel width,
+/// including widths that leave a ragged final panel, across thread
+/// counts. Only the modeled X residency shrinks.
+#[test]
+fn streamed_gram_is_bit_identical_to_in_core() {
+    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x9A1D);
+    let (n, p) = (x.rows(), x.cols());
+    let thresholds = [0.02, 0.05];
+    let machine = MachineParams::edison_like();
+    let incore = screen_distributed_multi(&x, &thresholds, 8, machine, 1);
+    assert_eq!(incore.cost.peak_mem_words, ((n * p) + p * p) as u64);
+
+    for gram_block in [1usize, 7, n, n + 13] {
+        for threads in [1usize, 4] {
+            let tag = format!("gram block {gram_block} threads {threads}");
+            let streamed = screen_streamed(&x, &thresholds, 8, machine, threads, gram_block);
+            assert_eq!(streamed.levels.len(), incore.levels.len(), "{tag}");
+            for (s, r) in streamed.levels.iter().zip(&incore.levels) {
+                assert_eq!(s.components.comp, r.components.comp, "{tag}: labeling drift");
+                assert_eq!(s.components.count, r.components.count, "{tag}");
+                let sd: Vec<u64> = s.degrees.iter().map(|v| v.to_bits()).collect();
+                let rd: Vec<u64> = r.degrees.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(sd, rd, "{tag}: degree drift");
+            }
+            let sdiag: Vec<u64> = streamed.diag.iter().map(|v| v.to_bits()).collect();
+            let rdiag: Vec<u64> = incore.diag.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sdiag, rdiag, "{tag}: diag drift");
+            assert_eq!(streamed.cost.total, incore.cost.total, "{tag}: counter drift");
+            assert_eq!(streamed.cost.max_per_rank, incore.cost.max_per_rank, "{tag}");
+            // Modeled residency: one panel of X instead of all of it.
+            let resident = gram_block.min(n);
+            assert_eq!(streamed.cost.peak_mem_words, ((resident * p) + p * p) as u64, "{tag}");
+        }
+    }
+}
+
+/// NaN-cutoff degradation: `|s_ij| > NaN` is false for every edge, so
+/// both passes agree on the all-singletons labeling — streaming does
+/// not change NaN handling.
+#[test]
+fn streamed_gram_matches_in_core_under_nan_cutoff() {
+    let x = disjoint_blocks(&[10, 10], 200, 0x0BAD);
+    let p = x.cols();
+    let thresholds = [f64::NAN];
+    let machine = MachineParams::edison_like();
+    let incore = screen_distributed_multi(&x, &thresholds, 4, machine, 1);
+    let streamed = screen_streamed(&x, &thresholds, 4, machine, 1, 7);
+    assert_eq!(incore.levels[0].components.count, p, "NaN cutoff must isolate every variable");
+    assert_eq!(streamed.levels[0].components.comp, incore.levels[0].components.comp);
+    assert_eq!(streamed.levels[0].components.count, incore.levels[0].components.count);
+    let sd: Vec<u64> = streamed.levels[0].degrees.iter().map(|v| v.to_bits()).collect();
+    let rd: Vec<u64> = incore.levels[0].degrees.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(sd, rd);
+}
+
+/// Stability selection's screening bill models ~one subsample copy
+/// resident at a time — not B/2 retained dense copies — now that
+/// subsamples are materialized per-pass and solves rebuild their
+/// sub-matrices lazily from row-index views.
+#[test]
+fn stability_screen_peak_models_one_subsample() {
+    let x = disjoint_blocks(&[8, 8, 8], 200, 0xF00D);
+    let (n, p) = (x.rows(), x.cols());
+    let base = ConcordConfig {
+        lambda1: 0.02,
+        tol: 0.0,
+        max_iter: 4,
+        variant: Variant::Cov,
+        threads: 1,
+        ranks_budget: 8,
+        ..Default::default()
+    };
+    let cfg = StabilityConfig { subsamples: 4, fraction: 0.5, threshold: 0.6, seed: 7, workers: 2 };
+    let opts = ScreenedDistOptions {
+        total_ranks: 4,
+        machine: flop_heavy(),
+        small_cutoff: 0,
+        fixed: None,
+        sequential: false,
+        gram_block: 0,
+    };
+    let out = stability_selection_dist(&x, &base, &cfg, &opts).unwrap();
+    let m = ((n as f64) * cfg.fraction).round() as usize;
+    // Every pass screens one m × p subsample; the serial fold maxes
+    // equal peaks, so the bill reports exactly one copy's residency.
+    assert_eq!(out.bill.screen.peak_mem_words, ((m * p) + p * p) as u64);
+    // Strictly below what retaining all B dense copies would cost.
+    assert!(out.bill.screen.peak_mem_words < (cfg.subsamples * m * p) as u64);
+    // And the lazy row-view solves stayed exact: stable edges never
+    // cross the exactly-screened-apart blocks.
+    for &(i, j) in &out.edges {
+        assert_eq!(i / 8, j / 8, "cross-block stable edge ({i}, {j})");
+    }
+}

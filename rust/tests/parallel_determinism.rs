@@ -358,6 +358,7 @@ fn fit_screened_distributed_is_byte_identical_across_thread_counts() {
             small_cutoff: 4,
             fixed: Some((4, 2, 2)),
             sequential: false,
+            gram_block: 0,
         };
         fit_screened_distributed(&x, &cfg, &opts).unwrap()
     };
@@ -403,6 +404,7 @@ fn fit_screened_distributed_is_byte_identical_across_budgets_and_threads() {
             small_cutoff: 4,
             fixed: Some((4, 2, 2)),
             sequential,
+            gram_block: 0,
         };
         fit_screened_distributed(&x, &cfg, &opts).unwrap()
     };

@@ -177,6 +177,7 @@ fn connected_problem_screened_dist_identical_to_unscreened() {
         small_cutoff: 0,
         fixed: Some((4, 2, 2)),
         sequential: false,
+        gram_block: 0,
     };
     let screened = fit_screened_distributed(&problem.x, &cfg, &opts).unwrap();
 
@@ -211,6 +212,7 @@ fn k_block_problem_runs_k_smaller_fabrics() {
         small_cutoff: 0,
         fixed: Some((4, 2, 2)),
         sequential: false,
+        gram_block: 0,
     };
     let screened = fit_screened_distributed(&x, &cfg, &opts).unwrap();
 
@@ -262,6 +264,7 @@ fn screened_paths_match_single_node_bitwise_per_block() {
         small_cutoff: 64, // force every component onto the single-node path
         fixed: None,
         sequential: false,
+        gram_block: 0,
     };
     let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
     assert_eq!(sdist.components, 2);
@@ -299,6 +302,7 @@ fn screened_dist_fabric_blocks_match_single_node_closely() {
         small_cutoff: 0,
         fixed: Some((4, 2, 2)),
         sequential: false,
+        gram_block: 0,
     };
     let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
     assert_eq!(sdist.components, 2);
@@ -366,6 +370,7 @@ fn iteration_stats_sum_across_components() {
         small_cutoff: 64,
         fixed: None,
         sequential: false,
+        gram_block: 0,
     };
     let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
     assert_eq!(sdist.fit.iterations, a.iterations + b.iterations);
