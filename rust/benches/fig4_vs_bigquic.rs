@@ -15,7 +15,7 @@ use hpconcord::concord::{fit_distributed, fit_single_node, ConcordConfig, Varian
 use hpconcord::coordinator::{run_sweep, select_by_density, GridSpec};
 use hpconcord::cost::ProblemShape;
 use hpconcord::prelude::*;
-use hpconcord::util::Table;
+use hpconcord::util::{BenchRecord, BenchRecorder, Table};
 use std::time::Instant;
 
 /// Tune each method to the problem's true density (the paper equalizes
@@ -48,7 +48,12 @@ fn equal_sparsity_lambdas(problem: &gen::Problem, variant: Variant) -> (f64, f64
     (concord_l1, 0.5 * (lo + hi))
 }
 
-fn head_to_head(title: &str, mk: impl Fn(usize, &mut Rng) -> gen::Problem, variant: Variant) {
+fn head_to_head(
+    title: &str,
+    mk: impl Fn(usize, &mut Rng) -> gen::Problem,
+    variant: Variant,
+    recorder: &mut BenchRecorder,
+) {
     println!("\n=== Fig. 4 {title} ===");
     let mut table = Table::new(&[
         "p",
@@ -87,6 +92,26 @@ fn head_to_head(title: &str, mk: impl Fn(usize, &mut Rng) -> gen::Problem, varia
         // Simulated distributed run, modeled at Edison-like constants.
         let dist = fit_distributed(&problem.x, &cfg, 8, 2, 2, MachineParams::edison_like());
 
+        recorder.push(BenchRecord {
+            name: "bigquic_single_node".into(),
+            shape: format!("{title} p={p}"),
+            threads: 1,
+            tile: "-".into(),
+            gflops: 0.0,
+            wall_s: t_quic,
+            reps: 1,
+            oracle: String::new(),
+        });
+        recorder.push(BenchRecord {
+            name: "concord_single_node".into(),
+            shape: format!("{title} p={p}"),
+            threads: 1,
+            tile: "-".into(),
+            gflops: 0.0,
+            wall_s: t_concord,
+            reps: 1,
+            oracle: "density-matched to BigQUIC before timing".into(),
+        });
         table.row(vec![
             p.to_string(),
             quic.iterations.to_string(),
@@ -142,11 +167,13 @@ fn extrapolation() {
 }
 
 fn main() {
+    let mut recorder = BenchRecorder::new("fig4_vs_bigquic");
     // (a) chain graphs, n = 100.
     head_to_head(
         "(a) chain, n=100",
         |p, rng| gen::chain_problem(p, 100, rng),
         Variant::Obs,
+        &mut recorder,
     );
     // (b) random graphs, n = 100 (degree scaled with p as the paper
     // scales its degree-60 graphs down).
@@ -154,12 +181,20 @@ fn main() {
         "(b) random, n=100",
         |p, rng| gen::random_problem(p, 100, 4, rng),
         Variant::Obs,
+        &mut recorder,
     );
     // (c) random graphs, n = p/4: large n → Cov.
     head_to_head(
         "(c) random, n=p/4",
         |p, rng| gen::random_problem(p, p / 4, 4, rng),
         Variant::Cov,
+        &mut recorder,
     );
     extrapolation();
+    if recorder.enabled() {
+        match recorder.write() {
+            Ok(path) => println!("\nbench records: wrote {}", path.display()),
+            Err(e) => eprintln!("bench records: {e}"),
+        }
+    }
 }

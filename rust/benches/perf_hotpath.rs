@@ -11,12 +11,18 @@
 //! small sizes with **bitwise blocked-vs-reference asserts** — the CI
 //! step that makes kernel regressions fail fast. Perf numbers from
 //! smoke mode are meaningless; only the asserts matter there.
+//!
+//! With `--record` (or `BENCH_RECORD=<path>` in the environment) every
+//! measured number is also written as a structured `BENCH_*.json`
+//! record — see [`hpconcord::util::bench_record`]. That file is the
+//! perf trajectory ROADMAP item 1 asks for; `BENCH_baseline.json` at
+//! the repo root is the committed first point.
 
 use hpconcord::concord::{fit_single_node, ops, ConcordConfig, Variant};
 use hpconcord::linalg::{Csr, Mat, TileConfig};
 use hpconcord::prelude::*;
 use hpconcord::runtime::{native, Engine};
-use hpconcord::util::{time_fn, Table};
+use hpconcord::util::{time_fn, BenchRecord, BenchRecorder, Table};
 
 fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
     Mat::from_fn(r, c, |_, _| rng.normal())
@@ -26,8 +32,22 @@ fn bitwise_eq(a: &Mat, b: &Mat) -> bool {
     a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
+fn rate(flops: f64, seconds: f64) -> f64 {
+    flops / seconds / 1e9
+}
+
 fn gflops(flops: f64, seconds: f64) -> String {
-    format!("{:.2}", flops / seconds / 1e9)
+    format!("{:.2}", rate(flops, seconds))
+}
+
+fn write_records(rec: &BenchRecorder) {
+    if !rec.enabled() {
+        return;
+    }
+    match rec.write() {
+        Ok(path) => println!("\nbench records: wrote {} ({} records)", path.display(), rec.len()),
+        Err(e) => eprintln!("bench records: {e}"),
+    }
 }
 
 fn main() {
@@ -35,6 +55,11 @@ fn main() {
     let mut rng = Rng::new(0xBE);
     let host_threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
     let reps = if smoke { 2 } else { 5 };
+    let mut recorder = BenchRecorder::new("perf_hotpath");
+    let default_tile = {
+        let t = TileConfig::DEFAULT;
+        format!("{},{},{}", t.mc, t.kc, t.nc)
+    };
 
     // --- Blocked packed GEMM vs the naive reference ---------------------
     println!("=== local GEMM: blocked packed kernel vs naive reference ===");
@@ -58,6 +83,26 @@ fn main() {
         // The determinism contract, asserted right here in the bench:
         // the blocked kernel must reproduce the naive bits exactly.
         assert!(bitwise_eq(&naive_c, &blk_c), "blocked GEMM != naive at p={p}");
+        recorder.push(BenchRecord {
+            name: "gemm_naive".into(),
+            shape: format!("p={p}"),
+            threads: 1,
+            tile: "-".into(),
+            gflops: rate(flops, naive_stats.median),
+            wall_s: naive_stats.median,
+            reps: naive_reps,
+            oracle: String::new(),
+        });
+        recorder.push(BenchRecord {
+            name: "gemm_blocked".into(),
+            shape: format!("p={p}"),
+            threads: 1,
+            tile: default_tile.clone(),
+            gflops: rate(flops, blk_stats.median),
+            wall_s: blk_stats.median,
+            reps,
+            oracle: "bitwise == matmul_naive".into(),
+        });
         table.row(vec![
             format!("{p}³"),
             format!("{:.2}", naive_stats.median * 1e3),
@@ -82,6 +127,16 @@ fn main() {
             if threads == 1 {
                 t1_median = stats.median;
             }
+            recorder.push(BenchRecord {
+                name: "gemm_mt".into(),
+                shape: format!("p={p}"),
+                threads,
+                tile: default_tile.clone(),
+                gflops: rate(2.0 * (p as f64).powi(3), stats.median),
+                wall_s: stats.median,
+                reps,
+                oracle: "schedule-only knob: bitwise == t=1 (tests/parallel_determinism)".into(),
+            });
             table.row(vec![
                 format!("{p}³"),
                 threads.to_string(),
@@ -121,6 +176,26 @@ fn main() {
         let (ref_stats, ref_c) = time_fn(0, reps, || omega.spmm_reference(&s));
         let (blk_stats, blk_c) = time_fn(1, reps, || omega.spmm(&s));
         assert!(bitwise_eq(&ref_c, &blk_c), "blocked SpMM != reference at p={p}");
+        recorder.push(BenchRecord {
+            name: "spmm_reference".into(),
+            shape: format!("p={p} density={density}"),
+            threads: 1,
+            tile: "-".into(),
+            gflops: rate(flops, ref_stats.median),
+            wall_s: ref_stats.median,
+            reps,
+            oracle: String::new(),
+        });
+        recorder.push(BenchRecord {
+            name: "spmm_blocked".into(),
+            shape: format!("p={p} density={density}"),
+            threads: 1,
+            tile: default_tile.clone(),
+            gflops: rate(flops, blk_stats.median),
+            wall_s: blk_stats.median,
+            reps,
+            oracle: "bitwise == spmm_reference".into(),
+        });
         table.row(vec![
             p.to_string(),
             format!("{density}"),
@@ -156,6 +231,16 @@ fn main() {
             if threads == 1 {
                 t1_median = stats.median;
             }
+            recorder.push(BenchRecord {
+                name: "spmm_mt".into(),
+                shape: format!("p={p} density=0.05"),
+                threads,
+                tile: default_tile.clone(),
+                gflops: rate(flops, stats.median),
+                wall_s: stats.median,
+                reps,
+                oracle: "schedule-only knob: bitwise == t=1 (tests/parallel_determinism)".into(),
+            });
             table.row(vec![
                 threads.to_string(),
                 format!("{:.2}", stats.median * 1e3),
@@ -185,6 +270,17 @@ fn main() {
                 a.matmul_into_with(&b, &mut c, &tile);
                 c
             });
+            recorder.push(BenchRecord {
+                name: "gemm_tile_sweep".into(),
+                shape: format!("p={p}"),
+                threads: 1,
+                tile: format!("{},{},{}", tile.mc, tile.kc, tile.nc),
+                gflops: rate(flops, stats.median),
+                wall_s: stats.median,
+                reps,
+                oracle: "schedule-only knob: bitwise at any tile (tests/parallel_determinism)"
+                    .into(),
+            });
             table.row(vec![
                 format!("{},{},{}", tile.mc, tile.kc, tile.nc),
                 format!("{:.2}", stats.median * 1e3),
@@ -213,6 +309,16 @@ fn main() {
     let elems = (p * p) as f64;
     let mut bench = |name: &str, flops_per_elem: f64, f: &mut dyn FnMut()| {
         let (stats, _) = time_fn(1, reps, || f());
+        recorder.push(BenchRecord {
+            name: format!("fused_{}", name.replace([' ', '(', ')'], "")),
+            shape: format!("p={p}"),
+            threads: 1,
+            tile: "-".into(),
+            gflops: rate(flops_per_elem * elems, stats.median),
+            wall_s: stats.median,
+            reps,
+            oracle: "fused == composed reference (tests/lemma_counts, concord unit tests)".into(),
+        });
         table.row(vec![
             name.to_string(),
             format!("{:.3}", stats.median * 1e3),
@@ -240,6 +346,7 @@ fn main() {
 
     if smoke {
         println!("\nperf_hotpath --smoke OK (blocked GEMM/SpMM bitwise == reference)");
+        write_records(&recorder);
         return;
     }
 
@@ -252,6 +359,16 @@ fn main() {
     let w0 = native::w_step(&om, &s);
     let (grad, g0) = native::gradobj(&om, &w0, 0.1);
     let (nat, _) = time_fn(1, 5, || native::trial(&om, &grad, &s, g0, 0.5, 0.3, 0.1));
+    recorder.push(BenchRecord {
+        name: "fused_trial_native".into(),
+        shape: "p=256".into(),
+        threads: 1,
+        tile: "-".into(),
+        gflops: 0.0,
+        wall_s: nat.median,
+        reps: 5,
+        oracle: "trial == w_step+gradobj composition (runtime unit tests)".into(),
+    });
     println!("native trial   : {nat}");
     match Engine::load("artifacts") {
         Ok(mut engine) if engine.has_trial(256) => {
@@ -288,6 +405,16 @@ fn main() {
                 t1_median = stats.median;
             }
             assert_eq!(fit.iterations, 3);
+            recorder.push(BenchRecord {
+                name: "solver_single_node".into(),
+                shape: "chain p=512 n=200 iters=3".into(),
+                threads,
+                tile: default_tile.clone(),
+                gflops: 0.0,
+                wall_s: stats.median,
+                reps: 3,
+                oracle: "schedule-only knob: bitwise == t=1 (tests/parallel_determinism)".into(),
+            });
             table.row(vec![
                 threads.to_string(),
                 format!("{:.3}", stats.median),
@@ -311,10 +438,21 @@ fn main() {
         })
     });
     let summary = run.summary();
+    recorder.push(BenchRecord {
+        name: "dist_transpose".into(),
+        shape: "p=512 ranks=16 c=2".into(),
+        threads: 16,
+        tile: "-".into(),
+        gflops: 0.0,
+        wall_s: stats.median,
+        reps: 3,
+        oracle: String::new(),
+    });
     println!(
         "wallclock {stats}; per-rank max: {} msgs, {} words (modeled {:.2} ms)",
         summary.max_per_rank.messages,
         summary.max_per_rank.words,
         summary.comm_time * 1e3,
     );
+    write_records(&recorder);
 }

@@ -184,6 +184,26 @@ mod tests {
     }
 
     #[test]
+    fn negative_and_garbage_budget_knobs_error_cleanly() {
+        // A negative token is a value (it does not start with "--"), and
+        // the unsigned parsers must reject it rather than wrap.
+        let a = Args::parse(&argv("solve --mem-budget -5 --gram-block 2.5 --ranks-budget 1e3"));
+        assert!(a.u64_or("mem-budget", 0).is_err());
+        assert!(a.usize_or("gram-block", 0).is_err());
+        assert!(a.usize_or("ranks-budget", 0).is_err());
+        // Error text names the offending flag so the user can find it.
+        let e = a.u64_or("mem-budget", 0).unwrap_err();
+        assert!(format!("{e}").contains("mem-budget"));
+    }
+
+    #[test]
+    fn float_knobs_reject_garbage() {
+        let a = Args::parse(&argv("sweep --l1 0.1,zz --select-density x"));
+        assert!(a.f64_list_or("l1", &[]).is_err());
+        assert!(a.f64_or("select-density", 0.1).is_err());
+    }
+
+    #[test]
     fn lists_parse() {
         let a = Args::parse(&argv("sweep --l1 0.1,0.2,0.5"));
         assert_eq!(a.f64_list_or("l1", &[]).unwrap(), vec![0.1, 0.2, 0.5]);

@@ -36,6 +36,13 @@ impl Value {
         }
     }
 
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as u64),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -107,6 +114,10 @@ impl Config {
 
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         self.values.get(key).map(|v| v.as_usize()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        self.values.get(key).map(|v| v.as_u64()).transpose().map(|o| o.unwrap_or(default))
     }
 
     pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
@@ -226,6 +237,30 @@ ranks = 16
         let c = Config::parse(SAMPLE).unwrap();
         assert!(c.get("workload").unwrap().as_f64().is_err());
         assert!(c.get("p").unwrap().as_bool().is_err());
+    }
+
+    #[test]
+    fn negative_integers_are_rejected_by_unsigned_accessors() {
+        // --mem-budget / fabric.mem_budget and friends must never wrap a
+        // negative config value into a huge unsigned budget.
+        let c = Config::parse("[fabric]\nmem_budget = -1\nranks = -8").unwrap();
+        assert!(c.u64_or("fabric.mem_budget", 0).is_err());
+        assert!(c.usize_or("fabric.ranks", 1).is_err());
+        // ...while non-negative values and absent keys stay fine.
+        let ok = Config::parse("[fabric]\nmem_budget = 103936").unwrap();
+        assert_eq!(ok.u64_or("fabric.mem_budget", 0).unwrap(), 103936);
+        assert_eq!(ok.u64_or("fabric.absent", 7).unwrap(), 7);
+        // Floats are not silently truncated to integers.
+        let f = Config::parse("[fabric]\nmem_budget = 1.5").unwrap();
+        assert!(f.u64_or("fabric.mem_budget", 0).is_err());
+    }
+
+    #[test]
+    fn malformed_lines_error_with_line_numbers() {
+        let e = Config::parse("key_without_value\n").unwrap_err();
+        assert!(format!("{e}").contains("line 1"));
+        let e = Config::parse("a = 1\nb = @@@\n").unwrap_err();
+        assert!(format!("{e}").contains("line 2"));
     }
 
     #[test]

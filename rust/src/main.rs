@@ -104,8 +104,9 @@ fn solver_config(args: &Args, cfg: &Config) -> Result<ConcordConfig> {
         // Host-memory budget in f64 words for wave packing (0 =
         // unbounded): CLI --mem-budget, TOML fabric.mem_budget. A
         // schedule-only knob — results are bit-identical at any value
-        // that admits a schedule (determinism rule 7).
-        mem_budget: args.usize_or("mem-budget", cfg.usize_or("fabric.mem_budget", 0)?)? as u64,
+        // that admits a schedule (determinism rule 7). Parsed as u64
+        // end to end: no narrowing cast between user input and packer.
+        mem_budget: args.u64_or("mem-budget", cfg.u64_or("fabric.mem_budget", 0)?)?,
     })
 }
 
@@ -353,16 +354,10 @@ fn cmd_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &Args) -> Result<()> {
-    let file_cfg = load_config(args)?;
-    let problem = load_problem(args, &file_cfg)?;
-    let base = solver_config(args, &file_cfg)?;
-    let grid = GridSpec {
-        lambda1: args.f64_list_or("l1", &[0.2, 0.3, 0.45])?,
-        lambda2: args.f64_list_or("l2", &[0.0, 0.1])?,
-    };
-    let workers = args.usize_or("workers", 4)?;
-    let screen = args.has("screen") || file_cfg.bool_or("solver.screen", false)?;
+/// Validate the sweep's `--mode`/`--per-point` combination before any
+/// data is loaded, so flag misuse fails fast with a clean message
+/// instead of after an expensive problem generation or file read.
+fn sweep_mode(args: &Args) -> Result<String> {
     let mode = args.str_or("mode", "single");
     if mode != "single" && mode != "dist" {
         return Err(anyhow!("unknown --mode {mode:?} (single|dist)"));
@@ -373,6 +368,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
              per-point reference schedule of the distributed sweep)"
         ));
     }
+    Ok(mode)
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mode = sweep_mode(args)?;
+    let file_cfg = load_config(args)?;
+    let problem = load_problem(args, &file_cfg)?;
+    let base = solver_config(args, &file_cfg)?;
+    let grid = GridSpec {
+        lambda1: args.f64_list_or("l1", &[0.2, 0.3, 0.45])?,
+        lambda2: args.f64_list_or("l2", &[0.0, 0.1])?,
+    };
+    let workers = args.usize_or("workers", 4)?;
+    let screen = args.has("screen") || file_cfg.bool_or("solver.screen", false)?;
     // Per-point component counts and modeled times, when the sweep mode
     // produces them (threaded into the table and the --out-csv rows).
     let mut components_col: Option<Vec<usize>> = None;
@@ -571,4 +580,34 @@ fn cmd_engine(args: &Args) -> Result<()> {
         println!("engine smoke OK");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(str::to_string).collect();
+        Args::parse(&argv)
+    }
+
+    #[test]
+    fn per_point_outside_dist_mode_is_a_clean_error() {
+        for cmd in ["sweep --screen --per-point", "sweep --screen --mode single --per-point"] {
+            let err = sweep_mode(&parse(cmd)).unwrap_err();
+            assert!(err.to_string().contains("--mode dist"), "{cmd}: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_sweep_mode_is_a_clean_error() {
+        let err = sweep_mode(&parse("sweep --mode cluster")).unwrap_err();
+        assert!(err.to_string().contains("unknown --mode"), "{err}");
+    }
+
+    #[test]
+    fn valid_sweep_modes_pass() {
+        assert_eq!(sweep_mode(&parse("sweep")).unwrap(), "single");
+        assert_eq!(sweep_mode(&parse("sweep --screen --mode dist --per-point")).unwrap(), "dist");
+    }
 }

@@ -1,0 +1,281 @@
+//! Structured `BENCH_*.json` performance records.
+//!
+//! ROADMAP item 1 demands that every "faster" claim become a *measured*
+//! claim with a recorded trajectory. This module is the funnel: the
+//! `harness = false` benches (`perf_hotpath`, the fig benches) build
+//! [`BenchRecord`]s — bench name, problem shape, threads/tile knobs,
+//! GFLOP/s, wall seconds, the bit-identity oracle that guarded the
+//! number — and a [`BenchRecorder`] serializes them (hand-rolled JSON;
+//! serde is not vendored offline) stamped with the git revision, UTC
+//! date and host facts, so records from different containers and
+//! revisions stay comparable.
+//!
+//! Activation: benches always collect; they write only when the
+//! `BENCH_RECORD` environment variable or the `--record` bench flag is
+//! set, so plain `cargo bench` runs stay side-effect free. The committed
+//! `BENCH_baseline.json` at the repo root follows this exact schema.
+//!
+//! ```no_run
+//! use hpconcord::util::bench_record::{BenchRecord, BenchRecorder};
+//!
+//! let mut rec = BenchRecorder::new("perf_hotpath");
+//! rec.push(BenchRecord {
+//!     name: "gemm_blocked".into(),
+//!     shape: "p=512".into(),
+//!     threads: 1,
+//!     tile: "128,256,512".into(),
+//!     gflops: 3.2,
+//!     wall_s: 0.084,
+//!     reps: 5,
+//!     oracle: "bitwise == matmul_naive".into(),
+//! });
+//! if rec.enabled() {
+//!     let path = rec.write().unwrap();
+//!     eprintln!("wrote {}", path.display());
+//! }
+//! ```
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use anyhow::{anyhow, Result};
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Benchmark name, e.g. `gemm_blocked` or `spmm_mt`.
+    pub name: String,
+    /// Problem shape, e.g. `p=512` or `p=1024 density=0.02`.
+    pub shape: String,
+    /// Node-local thread count the number was measured at.
+    pub threads: usize,
+    /// Cache-blocking tile `mc,kc,nc`, or `-` when not applicable.
+    pub tile: String,
+    /// Throughput; 0.0 when a rate is not meaningful for this bench.
+    pub gflops: f64,
+    /// Median wall seconds over `reps` measured repetitions.
+    pub wall_s: f64,
+    /// Number of measured repetitions behind `wall_s`.
+    pub reps: usize,
+    /// The equivalence assertion that guarded this number (empty when
+    /// the bench has no oracle), e.g. `bitwise == matmul_naive`.
+    pub oracle: String,
+}
+
+/// Collects [`BenchRecord`]s and writes one `BENCH_<bench>.json`.
+#[derive(Debug, Default)]
+pub struct BenchRecorder {
+    bench: String,
+    records: Vec<BenchRecord>,
+}
+
+impl BenchRecorder {
+    pub fn new(bench: &str) -> BenchRecorder {
+        BenchRecorder { bench: bench.to_string(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, record: BenchRecord) {
+        self.records.push(record);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// True when this run should persist records: the `BENCH_RECORD`
+    /// env var is set (its value is the output file or directory) or
+    /// the bench was invoked with `--record`.
+    pub fn enabled(&self) -> bool {
+        std::env::var_os("BENCH_RECORD").is_some() || std::env::args().any(|a| a == "--record")
+    }
+
+    /// Output path: `$BENCH_RECORD` if it names a file (`.json`), else
+    /// `BENCH_<bench>.json` under `$BENCH_RECORD` as a directory, else
+    /// `BENCH_<bench>.json` in the working directory.
+    pub fn out_path(&self) -> PathBuf {
+        let default_name = format!("BENCH_{}.json", self.bench);
+        match std::env::var_os("BENCH_RECORD") {
+            Some(v) if !v.is_empty() => {
+                let p = PathBuf::from(&v);
+                if p.extension().is_some_and(|e| e == "json") {
+                    p
+                } else {
+                    p.join(default_name)
+                }
+            }
+            _ => PathBuf::from(default_name),
+        }
+    }
+
+    /// Serialize every record with the run's provenance stamp.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        push_kv(&mut out, 1, "bench", &self.bench, true);
+        push_kv(&mut out, 1, "git_rev", &git_rev(), true);
+        push_kv(&mut out, 1, "date", &utc_date(), true);
+        push_kv(&mut out, 1, "harness", "rust cargo-bench harness", true);
+        out.push_str("  \"host\": {\n");
+        push_kv(&mut out, 2, "os", std::env::consts::OS, true);
+        push_kv(&mut out, 2, "arch", std::env::consts::ARCH, true);
+        let cpus = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        out.push_str(&format!("    \"cpus\": {cpus}\n  }},\n"));
+        out.push_str("  \"records\": [\n");
+        for (k, r) in self.records.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"name\": {}, ", json_str(&r.name)));
+            out.push_str(&format!("\"shape\": {}, ", json_str(&r.shape)));
+            out.push_str(&format!("\"threads\": {}, ", r.threads));
+            out.push_str(&format!("\"tile\": {}, ", json_str(&r.tile)));
+            out.push_str(&format!("\"gflops\": {}, ", json_num(r.gflops)));
+            out.push_str(&format!("\"wall_s\": {}, ", json_num(r.wall_s)));
+            out.push_str(&format!("\"reps\": {}, ", r.reps));
+            out.push_str(&format!("\"oracle\": {}", json_str(&r.oracle)));
+            out.push_str(if k + 1 < self.records.len() { "},\n" } else { "}\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write `to_json()` to [`out_path`](Self::out_path).
+    pub fn write(&self) -> Result<PathBuf> {
+        let path = self.out_path();
+        std::fs::write(&path, self.to_json())
+            .map_err(|e| anyhow!("writing bench records to {}: {e}", path.display()))?;
+        Ok(path)
+    }
+}
+
+fn push_kv(out: &mut String, indent: usize, key: &str, val: &str, comma: bool) {
+    out.push_str(&"  ".repeat(indent));
+    out.push_str(&format!("\"{key}\": {}{}\n", json_str(val), if comma { "," } else { "" }));
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON numbers may not be NaN/Inf; clamp those to 0 (a bench that
+/// produced one has already failed its assert).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn git_rev() -> String {
+    Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn utc_date() -> String {
+    Command::new("date")
+        .args(["-u", "+%Y-%m-%dT%H:%M:%SZ"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| {
+            // Fallback: raw epoch seconds, still totally ordered.
+            let secs = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            format!("epoch+{secs}s")
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchRecord {
+        BenchRecord {
+            name: "gemm_blocked".into(),
+            shape: "p=512".into(),
+            threads: 2,
+            tile: "128,256,512".into(),
+            gflops: 3.25,
+            wall_s: 0.0826,
+            reps: 5,
+            oracle: "bitwise == matmul_naive".into(),
+        }
+    }
+
+    #[test]
+    fn json_contains_every_field_and_stamp_keys() {
+        let mut rec = BenchRecorder::new("perf_hotpath");
+        rec.push(sample());
+        let json = rec.to_json();
+        for key in [
+            "\"bench\": \"perf_hotpath\"",
+            "\"git_rev\"",
+            "\"date\"",
+            "\"host\"",
+            "\"name\": \"gemm_blocked\"",
+            "\"shape\": \"p=512\"",
+            "\"threads\": 2",
+            "\"tile\": \"128,256,512\"",
+            "\"gflops\": 3.25",
+            "\"wall_s\": 0.0826",
+            "\"reps\": 5",
+            "\"oracle\": \"bitwise == matmul_naive\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in:\n{json}");
+        }
+    }
+
+    #[test]
+    fn records_are_comma_separated_and_balanced() {
+        let mut rec = BenchRecorder::new("x");
+        rec.push(sample());
+        rec.push(sample());
+        let json = rec.to_json();
+        assert_eq!(json.matches("\"name\"").count(), 2);
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn string_escaping() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_num(f64::NAN), "0");
+        assert_eq!(json_num(1.5), "1.5");
+    }
+
+    #[test]
+    fn out_path_defaults_to_bench_name() {
+        let rec = BenchRecorder::new("perf_hotpath");
+        // Do not read BENCH_RECORD here: other tests in the process may
+        // run with it set; only the default (unset) shape is pinned.
+        if std::env::var_os("BENCH_RECORD").is_none() {
+            assert_eq!(rec.out_path(), PathBuf::from("BENCH_perf_hotpath.json"));
+        }
+    }
+}

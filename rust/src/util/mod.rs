@@ -1,13 +1,16 @@
 //! Small self-contained utilities standing in for crates unavailable in
-//! this offline environment: benchmark timing/statistics (no criterion),
+//! this offline environment: benchmark timing/statistics and structured
+//! `BENCH_*.json` performance records (no criterion),
 //! an ASCII table printer for the paper-figure benches, a property
 //! testing harness (no proptest), and the deterministic node-local
 //! thread pool (no rayon) that backs the parallel linear algebra layer.
 
 pub mod bench;
+pub mod bench_record;
 pub mod pool;
 pub mod proptest;
 pub mod table;
 
 pub use bench::{time_fn, BenchStats};
+pub use bench_record::{BenchRecord, BenchRecorder};
 pub use table::Table;

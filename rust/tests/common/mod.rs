@@ -6,9 +6,16 @@ use hpconcord::prelude::*;
 /// X whose column blocks are supported on disjoint sample rows: the
 /// cross-block entries of S = XᵀX/n are exactly 0.0, so screening is
 /// *guaranteed* to split between blocks at any λ₁ ≥ 0. Within-block
-/// connectivity margins are analytic (chain adjacent covariances sit
-/// near 0.22 after the disjoint-row halving), so keep `n_each` ≥ 200
-/// for ≥ 4σ clearance over the λ₁ values the suites use.
+/// connectivity margins shrink with the block count: the gram
+/// normalizes by the total row count `n_each * nblocks`, so a chain's
+/// adjacent true covariance ≈ 0.444 lands near 0.444/nblocks, with
+/// sampling σ ≈ sqrt((SᵢᵢSⱼⱼ + Sᵢⱼ²)/n_each)/nblocks at the weakest
+/// edge. Measured guidance (tools/verify_fixture_margins.py, which
+/// mirrors this generator bit-faithfully and re-measures every suite
+/// fixture; run 2026-08-08): 2–3 blocks hold ≥ 4.2σ at λ₁ ≤ 0.05 with
+/// `n_each` = 200; 4 blocks need `n_each` ≥ 400 at λ₁ = 0.02 (≈ 5σ)
+/// and `n_each` ≥ 800 at λ₁ = 0.05 (≈ 5–6σ) — at `n_each` = 200 a
+/// four-block fixture can sag to ~1σ at λ₁ = 0.05 and flake.
 pub fn disjoint_blocks(sizes: &[usize], n_each: usize, seed: u64) -> Mat {
     let mut rng = Rng::new(seed);
     let p: usize = sizes.iter().sum();

@@ -1,0 +1,152 @@
+//! Error-path coverage for the scheduling knobs added in PRs 4–6:
+//! misuse must surface as a clean `anyhow` error (or a *defined*
+//! degenerate result), never as a panic inside a spawned rank thread.
+//!
+//! Covered here: an oversized or non-runnable `--cx`/`--comega` pin vs
+//! `--ranks-budget`, a `--mem-budget` below the largest screened
+//! component at the sweep level, and NaN screening cutoffs (a
+//! user-typed `--l1 nan` threshold admits no edges, so screening
+//! degrades to all-singleton components instead of poisoning the
+//! union-find). The CLI-flag guards themselves (`--per-point` outside
+//! `--mode dist`, unknown `--mode`) are unit-tested next to the parser
+//! in `src/main.rs`.
+
+use hpconcord::concord::screening::{gram_components, nested_components};
+use hpconcord::concord::{
+    fit_screened_distributed, fit_with_screening, ConcordConfig, ScreenedDistOptions, Variant,
+};
+use hpconcord::coordinator::{run_sweep_screened_dist, GridSchedule, GridSpec};
+use hpconcord::cost::MemFootprint;
+use hpconcord::prelude::*;
+use hpconcord::runtime::native;
+
+mod common;
+use common::disjoint_blocks;
+
+fn base_cfg() -> ConcordConfig {
+    ConcordConfig {
+        lambda1: 0.02,
+        lambda2: 0.1,
+        tol: 0.0,
+        max_iter: 4,
+        variant: Variant::Obs,
+        ..Default::default()
+    }
+}
+
+/// Flop-heavy machine (as in memory_budget.rs): the planner gives even
+/// small screened components multi-rank fabrics, so every component
+/// enters the wave packer and the budget checks genuinely bind.
+fn flop_heavy() -> MachineParams {
+    MachineParams {
+        alpha: 1.0e-13,
+        beta: 1.0e-13,
+        gamma_dense: 1.0e-6,
+        gamma_sparse: 8.0e-6,
+        beta_mem: 0.0,
+    }
+}
+
+fn dist_opts() -> ScreenedDistOptions {
+    ScreenedDistOptions {
+        total_ranks: 8,
+        machine: flop_heavy(),
+        small_cutoff: 0,
+        fixed: None,
+        sequential: false,
+        gram_block: 0,
+    }
+}
+
+/// A pinned fabric wider than `--ranks-budget` is rejected up front
+/// (shrinking it would silently violate the pin), and the message names
+/// both knobs so the fix is obvious.
+#[test]
+fn pinned_fabric_over_ranks_budget_is_a_clean_error() {
+    let x = disjoint_blocks(&[10, 8], 400, 0xB17);
+    let mut cfg = base_cfg();
+    cfg.ranks_budget = 4;
+    let opts = ScreenedDistOptions { fixed: Some((8, 1, 1)), ..dist_opts() };
+    let err = fit_screened_distributed(&x, &cfg, &opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("exceeds the concurrent rank budget"), "unexpected error: {msg}");
+    assert!(msg.contains("--ranks-budget"), "message should name the knob: {msg}");
+    // The boundary case — pin exactly at the budget — still runs.
+    cfg.ranks_budget = 8;
+    assert!(fit_screened_distributed(&x, &cfg, &opts).is_ok());
+}
+
+/// A pin the 1.5D rank programs cannot execute (`c_X·c_Ω > P` here) is
+/// caught by the same validator, before any rank thread spawns.
+#[test]
+fn non_runnable_pin_is_a_clean_error() {
+    let x = disjoint_blocks(&[10, 8], 400, 0xB17);
+    let opts = ScreenedDistOptions { fixed: Some((8, 4, 4)), ..dist_opts() };
+    let err = fit_screened_distributed(&x, &base_cfg(), &opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("not runnable"), "unexpected error: {msg}");
+}
+
+/// A sweep whose `--mem-budget` cannot hold the largest screened
+/// component fails as a clean error through the grid coordinator too —
+/// the packed schedule must not fall back to overrunning the budget.
+#[test]
+fn sweep_mem_budget_below_largest_component_is_a_clean_error() {
+    let x = disjoint_blocks(&[10, 10], 200, 0x0BAD);
+    let mut cfg = base_cfg();
+    cfg.mem_budget = 100; // far below any 10-column component
+    // λ₁ stays at or below 0.02, the fixture's measured ≥ 4.4σ regime
+    // (tools/verify_fixture_margins.py on seed 0x0BAD).
+    let grid = GridSpec { lambda1: vec![0.01, 0.02], lambda2: vec![0.1] };
+    for mode in [GridSchedule::Packed, GridSchedule::PerPoint] {
+        let err = run_sweep_screened_dist(&x, &grid, &cfg, &dist_opts(), mode).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("memory budget"), "unexpected error ({mode:?}): {msg}");
+    }
+    // The smallest feasible budget — exactly the largest component —
+    // schedules in both modes.
+    cfg.mem_budget = MemFootprint::for_component(x.rows(), 10).words();
+    for mode in [GridSchedule::Packed, GridSchedule::PerPoint] {
+        assert!(run_sweep_screened_dist(&x, &grid, &cfg, &dist_opts(), mode).is_ok());
+    }
+}
+
+/// `|S_ij| > NaN` is false for every entry, so a NaN cutoff screens to
+/// all singletons — defined degenerate behavior, not a panic or a
+/// half-merged union-find.
+#[test]
+fn nan_cutoff_screens_to_all_singletons() {
+    let x = disjoint_blocks(&[10, 8], 400, 0xB17);
+    let p = x.cols();
+    let s = native::gram_mt(&x, 1);
+    let comps = gram_components(&s, f64::NAN);
+    assert_eq!(comps.count, p);
+    // nested_components sorts thresholds with total_cmp, so a NaN mixed
+    // into a λ₁ grid neither panics nor disturbs the finite levels.
+    let levels = nested_components(&s, &[f64::NAN, 0.05]);
+    assert_eq!(levels[0].count, p);
+    assert_eq!(levels[1].comp, gram_components(&s, 0.05).comp);
+}
+
+/// The screened single-node fit under a NaN λ₁: every column is a
+/// singleton and solves by the closed form, so the estimate comes back
+/// finite and diagonal rather than NaN-poisoned.
+#[test]
+fn screened_fit_under_nan_cutoff_is_finite_and_diagonal() {
+    let x = disjoint_blocks(&[10, 8], 400, 0xB17);
+    let p = x.cols();
+    let mut cfg = base_cfg();
+    cfg.lambda1 = f64::NAN;
+    let fit = fit_with_screening(&x, &cfg).unwrap();
+    assert_eq!(fit.components, p);
+    assert_eq!(fit.largest, 1);
+    for i in 0..p {
+        for j in 0..p {
+            let v = fit.fit.omega.get(i, j);
+            assert!(v.is_finite(), "omega[{i},{j}] = {v}");
+            if i != j {
+                assert_eq!(v, 0.0, "off-diagonal omega[{i},{j}] = {v}");
+            }
+        }
+    }
+}

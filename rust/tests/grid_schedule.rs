@@ -76,7 +76,9 @@ fn dist_opts() -> ScreenedDistOptions {
 /// the sweep agrees bit for bit too.
 #[test]
 fn packed_sweep_bit_identical_to_standalone_points() {
-    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x9A1D);
+    // Four blocks at λ₁ up to 0.05 need n_each = 800 (measured 5.3σ at
+    // 0.05, 8.3σ at 0.02 — tools/verify_fixture_margins.py).
+    let x = disjoint_blocks(&[10, 10, 10, 10], 800, 0x9A1D);
     let grid = grid();
     let opts = dist_opts();
     for budget in [1usize, 4, 32] {
@@ -131,7 +133,7 @@ fn grid_bill_undercuts_per_point_fold_and_gram_is_billed_once() {
     // packs fabrics from different grid points into one wave: LPT
     // schedules the four jobs' p = 12 fabrics first, and 4 × 8 ranks
     // fill wave 0 with four different jobs.
-    let x = disjoint_blocks(&[12, 6, 6, 6], 200, 0x6B11);
+    let x = disjoint_blocks(&[12, 6, 6, 6], 800, 0x6B11);
     let grid = grid();
     let base = base_cfg(1, 32);
     let opts = dist_opts();
@@ -189,7 +191,7 @@ fn grid_bill_undercuts_per_point_fold_and_gram_is_billed_once() {
 /// concurrent critical path.
 #[test]
 fn packed_sweep_sequential_reference_is_bit_identical() {
-    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x5E9);
+    let x = disjoint_blocks(&[10, 10, 10, 10], 800, 0x5E9);
     let grid = grid();
     let base = base_cfg(2, 32);
     let conc = run_sweep_screened_dist(&x, &grid, &base, &dist_opts(), GridSchedule::Packed)
@@ -210,13 +212,13 @@ fn packed_sweep_sequential_reference_is_bit_identical() {
 /// only the wave layout and the modeled peak residency move.
 #[test]
 fn packed_sweep_bit_identical_under_tight_memory_budget() {
-    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x9A1D);
+    let x = disjoint_blocks(&[10, 10, 10, 10], 800, 0x9A1D);
     let grid = grid();
     let opts = dist_opts();
     let unbounded =
         run_sweep_screened_dist(&x, &grid, &base_cfg(4, 32), &opts, GridSchedule::Packed)
             .unwrap();
-    // Every component is a 10-column block of the 800-row fixture.
+    // Every component is a 10-column block of the 3200-row fixture.
     let tight = MemFootprint::for_component(x.rows(), 10).words();
     let base = ConcordConfig { mem_budget: tight, ..base_cfg(4, 32) };
     let bounded = run_sweep_screened_dist(&x, &grid, &base, &opts, GridSchedule::Packed).unwrap();
@@ -312,7 +314,9 @@ fn stability_dist_thread_count_invariant() {
 /// edge sets coincide.
 #[test]
 fn stability_dist_stable_edges_agree_with_single_node_path() {
-    let x = disjoint_blocks(&[8, 8], 400, 0xED6E);
+    // Subsamples keep half the rows, so the full-gram margin carries
+    // ~√2 extra sigma: measured 5.9σ at λ₁ = 0.1 with n_each = 800.
+    let x = disjoint_blocks(&[8, 8], 800, 0xED6E);
     let base = stability_base();
     let cfg = StabilityConfig {
         subsamples: 6,

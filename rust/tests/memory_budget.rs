@@ -81,7 +81,9 @@ fn footprints(out: &ScreenedDistFit) -> Vec<u64> {
 /// fixture — the budget only splits waves.
 #[test]
 fn mem_budget_is_a_schedule_only_knob() {
-    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x9A1D);
+    // Four blocks at λ₁ = 0.02: n_each = 400 measures 5.1σ on this
+    // seed (tools/verify_fixture_margins.py).
+    let x = disjoint_blocks(&[10, 10, 10, 10], 400, 0x9A1D);
     let opts = dist_opts();
     let baseline = fit_screened_distributed(&x, &base_cfg(1, 0), &opts).unwrap();
     let per = footprints(&baseline);
@@ -131,7 +133,7 @@ fn mem_budget_is_a_schedule_only_knob() {
 /// error (shrinking ranks cannot shrink data), not a panic.
 #[test]
 fn budget_below_largest_component_is_a_clean_error() {
-    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x9A1D);
+    let x = disjoint_blocks(&[10, 10, 10, 10], 400, 0x9A1D);
     let opts = dist_opts();
     let err = fit_screened_distributed(&x, &base_cfg(1, 100), &opts).unwrap_err();
     let msg = format!("{err:#}");
@@ -175,7 +177,7 @@ fn tight_budget_bounds_the_modeled_peak() {
 /// counts. Only the modeled X residency shrinks.
 #[test]
 fn streamed_gram_is_bit_identical_to_in_core() {
-    let x = disjoint_blocks(&[10, 10, 10, 10], 200, 0x9A1D);
+    let x = disjoint_blocks(&[10, 10, 10, 10], 400, 0x9A1D);
     let (n, p) = (x.rows(), x.cols());
     let thresholds = [0.02, 0.05];
     let machine = MachineParams::edison_like();

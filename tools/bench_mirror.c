@@ -1,0 +1,400 @@
+/* C mirror of the repo's three hot kernels, used to record a *measured*
+ * BENCH_baseline.json in the offline builder image (which ships gcc and
+ * python but no Rust toolchain — see tools/static_audit.sh for the full
+ * rationale).
+ *
+ * Each benchmark mirrors the Rust kernel's floating-point semantics
+ * exactly — same loop order, one multiply-add per (element, k) in
+ * ascending k, single accumulator — so the bit-identity oracles that
+ * perf_hotpath.rs asserts inline are asserted here too, on the same
+ * contract:
+ *
+ *   1. gemm_blocked vs gemm_naive   (rust/src/linalg/dense.rs::gemm_rows
+ *      vs Mat::matmul_naive; BLIS jc->pc->ic nest, packed B panel,
+ *      per-element ascending-k accumulation)
+ *   2. spmm_blocked vs spmm_reference (rust/src/linalg/sparse.rs::
+ *      Csr::spmm vs spmm_reference; column panels, packed panel, CSR
+ *      nonzeros applied in ascending order)
+ *   3. fused_concord_pass vs composed gradient+prox
+ *      (rust/src/concord/ops.rs::gradient_block / prox_block_into; the
+ *      fused single sweep must reproduce the two-pass composition)
+ *
+ * Any oracle failure aborts with a nonzero exit — a baseline is only
+ * written when every equivalence holds bitwise.
+ *
+ * Build/run: tools/record_baseline.sh (compiles with -ffp-contract=off:
+ * contraction to FMA would break add-for-add equivalence with the
+ * strict-IEEE Rust kernels).
+ *
+ * Usage: bench_mirror <git_rev> <utc_date>   (JSON on stdout)
+ */
+
+#define _POSIX_C_SOURCE 200809L /* clock_gettime under -std=c99 */
+
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+#include <unistd.h>
+
+#ifndef M_PI
+#define M_PI 3.14159265358979323846
+#endif
+
+/* TileConfig::DEFAULT in rust/src/linalg/tile.rs */
+#define MC 128
+#define KC 256
+#define NC 512
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + 1e-9 * (double)ts.tv_nsec;
+}
+
+static int cmp_f64(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+static double median(double *v, int n) {
+    qsort(v, n, sizeof(double), cmp_f64);
+    return (n % 2) ? v[n / 2] : 0.5 * (v[n / 2 - 1] + v[n / 2]);
+}
+
+/* xorshift64* — any fixed deterministic stream will do here; the
+ * equivalence being asserted is blocked-vs-reference on *identical*
+ * inputs, not cross-language value identity. */
+static uint64_t rng_state = 0xBEuLL;
+static double rng_uniform(void) {
+    uint64_t x = rng_state;
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    rng_state = x;
+    return (double)((x * 0x2545F4914F6CDD1DuLL) >> 11) / 9007199254740992.0;
+}
+static double rng_normal(void) { /* Box–Muller, one branch of the pair */
+    double u1 = rng_uniform(), u2 = rng_uniform();
+    if (u1 < 1e-300) u1 = 1e-300;
+    return sqrt(-2.0 * log(u1)) * cos(2.0 * M_PI * u2);
+}
+
+static int bits_equal(const double *a, const double *b, size_t n) {
+    return memcmp(a, b, n * sizeof(double)) == 0;
+}
+
+/* --- 1. GEMM: naive reference vs blocked packed ---------------------- */
+
+static void gemm_naive(const double *a, const double *b, double *c, int p) {
+    for (int i = 0; i < p; i++)
+        for (int j = 0; j < p; j++) {
+            double s = 0.0;
+            for (int k = 0; k < p; k++) s += a[i * p + k] * b[k * p + j];
+            c[i * p + j] = s;
+        }
+}
+
+/* BLIS-order nest mirroring gemm_rows: jc (NC-wide B panels) -> pc
+ * (KC-deep k panels, B panel packed) -> ic (MC-high row blocks); within
+ * a panel each output element accumulates ascending k, one mul-add per
+ * step, partials parked in C between panels — the identical per-element
+ * op sequence as the naive register accumulation, hence bit-identical. */
+static void gemm_blocked(const double *a, const double *b, double *c, int p, double *bpack) {
+    memset(c, 0, (size_t)p * p * sizeof(double));
+    for (int jc = 0; jc < p; jc += NC) {
+        int jb = (p - jc < NC) ? p - jc : NC;
+        for (int pc = 0; pc < p; pc += KC) {
+            int kb = (p - pc < KC) ? p - pc : KC;
+            for (int k = 0; k < kb; k++)
+                memcpy(bpack + (size_t)k * jb, b + (size_t)(pc + k) * p + jc,
+                       (size_t)jb * sizeof(double));
+            for (int ic = 0; ic < p; ic += MC) {
+                int ib = (p - ic < MC) ? p - ic : MC;
+                for (int i = ic; i < ic + ib; i++) {
+                    double *crow = c + (size_t)i * p + jc;
+                    for (int k = 0; k < kb; k++) {
+                        double aik = a[(size_t)i * p + pc + k];
+                        const double *brow = bpack + (size_t)k * jb;
+                        for (int j = 0; j < jb; j++) crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/* --- 2. SpMM: row-at-a-time reference vs column-blocked -------------- */
+
+typedef struct {
+    int rows, cols, nnz;
+    int *indptr;  /* rows + 1 */
+    int *indices; /* ascending within each row, as Csr::from_dense */
+    double *values;
+} Csr;
+
+static Csr csr_random(int p, double density) {
+    Csr m;
+    m.rows = m.cols = p;
+    m.indptr = malloc((p + 1) * sizeof(int));
+    int cap = (int)(p * p * density * 1.5) + p + 16;
+    m.indices = malloc(cap * sizeof(int));
+    m.values = malloc(cap * sizeof(double));
+    int nnz = 0;
+    for (int i = 0; i < p; i++) {
+        m.indptr[i] = nnz;
+        for (int j = 0; j < p; j++) {
+            double v = (i == j) ? 2.0 : (rng_uniform() < density ? rng_normal() : 0.0);
+            if (v != 0.0) {
+                if (nnz == cap) {
+                    cap *= 2;
+                    m.indices = realloc(m.indices, cap * sizeof(int));
+                    m.values = realloc(m.values, cap * sizeof(double));
+                }
+                m.indices[nnz] = j;
+                m.values[nnz] = v;
+                nnz++;
+            }
+        }
+    }
+    m.indptr[p] = nnz;
+    m.nnz = nnz;
+    return m;
+}
+
+static void spmm_reference(const Csr *a, const double *b, double *c, int n) {
+    memset(c, 0, (size_t)a->rows * n * sizeof(double));
+    for (int i = 0; i < a->rows; i++) {
+        double *crow = c + (size_t)i * n;
+        for (int t = a->indptr[i]; t < a->indptr[i + 1]; t++) {
+            double av = a->values[t];
+            const double *brow = b + (size_t)a->indices[t] * n;
+            for (int j = 0; j < n; j++) crow[j] += av * brow[j];
+        }
+    }
+}
+
+/* Column-blocked mirror of Csr::spmm_mt_with (serial): NC-wide panels
+ * of B packed contiguous, nonzeros applied in ascending CSR order per
+ * panel — per element the same ascending-k op sequence as reference. */
+static void spmm_blocked(const Csr *a, const double *b, double *c, int n, double *bpack) {
+    memset(c, 0, (size_t)a->rows * n * sizeof(double));
+    for (int jc = 0; jc < n; jc += NC) {
+        int jb = (n - jc < NC) ? n - jc : NC;
+        for (int k = 0; k < a->cols; k++)
+            memcpy(bpack + (size_t)k * jb, b + (size_t)k * n + jc, (size_t)jb * sizeof(double));
+        for (int i = 0; i < a->rows; i++) {
+            double *crow = c + (size_t)i * n + jc;
+            for (int t = a->indptr[i]; t < a->indptr[i + 1]; t++) {
+                double av = a->values[t];
+                const double *brow = bpack + (size_t)a->indices[t] * jb;
+                for (int j = 0; j < jb; j++) crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/* --- 3. fused CONCORD gradient+prox pass ----------------------------- */
+
+static double soft(double z, double a) {
+    if (z > a) return z - a;
+    if (z < -a) return z + a;
+    return 0.0;
+}
+
+/* Composed reference: gradient_block into G, then prox_block_into. */
+static void concord_composed(const double *omega, const double *w, const double *wt, double *g,
+                             double *out, int p, double lam1, double lam2, double tau) {
+    double thresh = tau * lam1;
+    for (int i = 0; i < p; i++) {
+        const double *orow = omega + (size_t)i * p;
+        double *grow = g + (size_t)i * p;
+        for (int j = 0; j < p; j++)
+            grow[j] = 0.5 * (w[(size_t)i * p + j] + wt[(size_t)i * p + j]) + lam2 * orow[j];
+        grow[i] -= 1.0 / orow[i];
+    }
+    for (int i = 0; i < p; i++) {
+        const double *orow = omega + (size_t)i * p;
+        const double *grow = g + (size_t)i * p;
+        double *dst = out + (size_t)i * p;
+        for (int j = 0; j < p; j++) dst[j] = soft(orow[j] - tau * grow[j], thresh);
+        dst[i] = orow[i] - tau * grow[i];
+    }
+}
+
+/* Fused single sweep: same per-element op sequence, no G round trip. */
+static void concord_fused(const double *omega, const double *w, const double *wt, double *out,
+                          int p, double lam1, double lam2, double tau) {
+    double thresh = tau * lam1;
+    for (int i = 0; i < p; i++) {
+        const double *orow = omega + (size_t)i * p;
+        double *dst = out + (size_t)i * p;
+        for (int j = 0; j < p; j++) {
+            double gij = 0.5 * (w[(size_t)i * p + j] + wt[(size_t)i * p + j]) + lam2 * orow[j];
+            dst[j] = soft(orow[j] - tau * gij, thresh);
+        }
+        double gii = 0.5 * (w[(size_t)i * p + i] + wt[(size_t)i * p + i]) + lam2 * orow[i]
+                     - 1.0 / orow[i];
+        dst[i] = orow[i] - tau * gii;
+    }
+}
+
+/* --- harness --------------------------------------------------------- */
+
+static int first_record = 1;
+static void emit(const char *name, const char *shape, int threads, const char *tile,
+                 double gflops, double wall_s, int reps, const char *oracle) {
+    printf("%s    {\"name\": \"%s\", \"shape\": \"%s\", \"threads\": %d, \"tile\": \"%s\", "
+           "\"gflops\": %.4f, \"wall_s\": %.6f, \"reps\": %d, \"oracle\": \"%s\"}",
+           first_record ? "" : ",\n", name, shape, threads, tile, gflops, wall_s, reps, oracle);
+    first_record = 0;
+}
+
+static double *rand_mat(int r, int c) {
+    double *m = malloc((size_t)r * c * sizeof(double));
+    for (size_t i = 0; i < (size_t)r * c; i++) m[i] = rng_normal();
+    return m;
+}
+
+int main(int argc, char **argv) {
+    const char *git_rev = argc > 1 ? argv[1] : "unknown";
+    const char *date = argc > 2 ? argv[2] : "unknown";
+    const int reps = 5;
+    double t[16], t0;
+    char shape[64];
+    long cpus = sysconf(_SC_NPROCESSORS_ONLN);
+
+    printf("{\n  \"bench\": \"baseline\",\n  \"git_rev\": \"%s\",\n  \"date\": \"%s\",\n",
+           git_rev, date);
+    printf("  \"harness\": \"tools/bench_mirror.c — C mirror of the Rust kernels (same loop "
+           "order and f64 op sequence, -ffp-contract=off), measured in the offline builder "
+           "image; no Rust toolchain is available there, see tools/static_audit.sh\",\n");
+    printf("  \"host\": {\n    \"os\": \"linux\",\n    \"arch\": \"%s\",\n    \"cpus\": %ld\n"
+           "  },\n  \"records\": [\n",
+#if defined(__x86_64__)
+           "x86_64",
+#elif defined(__aarch64__)
+           "aarch64",
+#else
+           "unknown",
+#endif
+           cpus > 0 ? cpus : 1);
+
+    /* 1. GEMM blocked vs naive, p = 512. */
+    {
+        int p = 512;
+        double flops = 2.0 * (double)p * p * p;
+        double *a = rand_mat(p, p), *b = rand_mat(p, p);
+        double *cn = malloc((size_t)p * p * sizeof(double));
+        double *cb = malloc((size_t)p * p * sizeof(double));
+        double *bpack = malloc((size_t)KC * NC * sizeof(double));
+        for (int r = 0; r < reps; r++) {
+            t0 = now_s();
+            gemm_naive(a, b, cn, p);
+            t[r] = now_s() - t0;
+        }
+        double naive_s = median(t, reps);
+        for (int r = 0; r < reps; r++) {
+            t0 = now_s();
+            gemm_blocked(a, b, cb, p, bpack);
+            t[r] = now_s() - t0;
+        }
+        double blk_s = median(t, reps);
+        if (!bits_equal(cn, cb, (size_t)p * p)) {
+            fprintf(stderr, "FATAL: blocked GEMM != naive bitwise at p=%d\n", p);
+            return 1;
+        }
+        snprintf(shape, sizeof shape, "p=%d", p);
+        emit("gemm_naive", shape, 1, "-", flops / naive_s / 1e9, naive_s, reps, "");
+        emit("gemm_blocked", shape, 1, "128,256,512", flops / blk_s / 1e9, blk_s, reps,
+             "bitwise == gemm_naive (asserted this run)");
+        free(a); free(b); free(cn); free(cb); free(bpack);
+    }
+
+    /* 2. SpMM blocked vs reference, p = 1024, density 0.02. */
+    {
+        int p = 1024;
+        double density = 0.02;
+        Csr m = csr_random(p, density);
+        double *b = rand_mat(p, p);
+        double *cr = malloc((size_t)p * p * sizeof(double));
+        double *cb = malloc((size_t)p * p * sizeof(double));
+        double *bpack = malloc((size_t)p * NC * sizeof(double));
+        double flops = 2.0 * (double)m.nnz * p;
+        for (int r = 0; r < reps; r++) {
+            t0 = now_s();
+            spmm_reference(&m, b, cr, p);
+            t[r] = now_s() - t0;
+        }
+        double ref_s = median(t, reps);
+        for (int r = 0; r < reps; r++) {
+            t0 = now_s();
+            spmm_blocked(&m, b, cb, p, bpack);
+            t[r] = now_s() - t0;
+        }
+        double blk_s = median(t, reps);
+        if (!bits_equal(cr, cb, (size_t)p * p)) {
+            fprintf(stderr, "FATAL: blocked SpMM != reference bitwise at p=%d\n", p);
+            return 1;
+        }
+        snprintf(shape, sizeof shape, "p=%d density=%.2f", p, density);
+        emit("spmm_reference", shape, 1, "-", flops / ref_s / 1e9, ref_s, reps, "");
+        emit("spmm_blocked", shape, 1, "128,256,512", flops / blk_s / 1e9, blk_s, reps,
+             "bitwise == spmm_reference (asserted this run)");
+        free(m.indptr); free(m.indices); free(m.values);
+        free(b); free(cr); free(cb); free(bpack);
+    }
+
+    /* 3. Fused CONCORD gradient+prox pass vs composed, p = 512. */
+    {
+        int p = 512;
+        double *omega = rand_mat(p, p);
+        /* Symmetrize and set a strictly positive diagonal, as the
+         * solver's iterates have (1/omega_ii must be finite). */
+        for (int i = 0; i < p; i++) {
+            for (int j = i + 1; j < p; j++) {
+                double v = 0.5 * (omega[(size_t)i * p + j] + omega[(size_t)j * p + i]);
+                omega[(size_t)i * p + j] = v;
+                omega[(size_t)j * p + i] = v;
+            }
+            omega[(size_t)i * p + i] = 2.0 + rng_uniform();
+        }
+        double *w = rand_mat(p, p);
+        double *wt = malloc((size_t)p * p * sizeof(double));
+        for (int i = 0; i < p; i++)
+            for (int j = 0; j < p; j++) wt[(size_t)i * p + j] = w[(size_t)j * p + i];
+        double *g = malloc((size_t)p * p * sizeof(double));
+        double *oc = malloc((size_t)p * p * sizeof(double));
+        double *of = malloc((size_t)p * p * sizeof(double));
+        double lam1 = 0.3, lam2 = 0.1, tau = 0.5;
+        for (int r = 0; r < reps; r++) {
+            t0 = now_s();
+            concord_composed(omega, w, wt, g, oc, p, lam1, lam2, tau);
+            t[r] = now_s() - t0;
+        }
+        double comp_s = median(t, reps);
+        for (int r = 0; r < reps; r++) {
+            t0 = now_s();
+            concord_fused(omega, w, wt, of, p, lam1, lam2, tau);
+            t[r] = now_s() - t0;
+        }
+        double fused_s = median(t, reps);
+        if (!bits_equal(oc, of, (size_t)p * p)) {
+            fprintf(stderr, "FATAL: fused CONCORD pass != composed bitwise at p=%d\n", p);
+            return 1;
+        }
+        /* ~7 flops/element: gradient (3) + prox threshold chain (~4). */
+        double flops = 7.0 * (double)p * p;
+        snprintf(shape, sizeof shape, "p=%d", p);
+        emit("concord_gradient_prox_composed", shape, 1, "-", flops / comp_s / 1e9, comp_s,
+             reps, "");
+        emit("fused_concord_pass", shape, 1, "-", flops / fused_s / 1e9, fused_s, reps,
+             "bitwise == composed gradient+prox (asserted this run)");
+        free(omega); free(w); free(wt); free(g); free(oc); free(of);
+    }
+
+    printf("\n  ]\n}\n");
+    return 0;
+}

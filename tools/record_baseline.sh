@@ -1,0 +1,38 @@
+#!/bin/sh
+# Record BENCH_baseline.json via the C mirror harness.
+#
+# The preferred recorder is the Rust one:
+#
+#   cargo bench --bench perf_hotpath -- --record
+#
+# which writes BENCH_perf_hotpath.json through
+# rust/src/util/bench_record.rs. The offline builder image has no Rust
+# toolchain (see tools/static_audit.sh), so this script compiles
+# tools/bench_mirror.c — a C mirror of the three hot kernels with
+# identical f64 op sequences and inline bit-identity oracles — and
+# records the baseline from that. -ffp-contract=off is load-bearing:
+# FMA contraction would break add-for-add equivalence between the
+# blocked and reference paths.
+set -e
+cd "$(dirname "$0")/.."
+
+CC="${CC:-cc}"
+OUT="${1:-BENCH_baseline.json}"
+BIN="$(mktemp -t bench_mirror.XXXXXX)"
+trap 'rm -f "$BIN"' EXIT
+
+"$CC" -O2 -std=c99 -ffp-contract=off -o "$BIN" tools/bench_mirror.c -lm
+
+GIT_REV="$(git rev-parse --short HEAD 2>/dev/null || echo unknown)"
+DATE="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
+"$BIN" "$GIT_REV" "$DATE" > "$OUT"
+
+# The mirror exits nonzero (and we abort above, via set -e) unless every
+# blocked-vs-reference oracle held bitwise.
+python3 - "$OUT" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+names = [r["name"] for r in doc["records"]]
+assert len(doc["records"]) >= 3, names
+print(f"wrote {sys.argv[1]}: {len(doc['records'])} records ({', '.join(names)})")
+EOF

@@ -1,0 +1,668 @@
+#!/usr/bin/env python3
+"""Repo-wide static audit for the offline builder image.
+
+The build container ships no Rust toolchain (no cargo/rustc, no network),
+so tier-1 cannot run locally.  This audit is the CI-runnable fallback the
+ISSUE-7 acceptance criteria name: a Rust-aware lexer plus cross-reference
+checks that catch the defect classes a first `cargo build` would surface.
+
+Checks (each a numbered section below):
+  1. delimiter balance   — {}/()/[] per file, comment/string/char aware
+  2. line discipline     — <=100 columns, no tabs, no trailing whitespace
+  3. cargo targets       — every `path = "..."` target in Cargo.toml exists
+  4. module tree         — every `mod foo;` resolves to foo.rs or foo/mod.rs
+  5. anyhow shim surface — every `use anyhow::X` / `anyhow::X` path and every
+                           anyhow!/bail!/ensure! invocation is covered by the
+                           vendored shim's exported items and macro arms
+  6. crate-path usage    — `use crate::...` / `use hpconcord::...` module
+                           segments resolve against the real module tree
+  7. feature gates       — every cfg(feature = "x") is declared in Cargo.toml
+  8. pub-item resolution — the terminal item of each crate-path use exists as
+                           a pub definition in the resolved module file
+
+Exit 0 iff every check passes.  Run via tools/static_audit.sh.
+"""
+
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+MAX_COLS = 100
+
+errors = []
+
+
+def err(path, line, msg):
+    rel = path.relative_to(REPO) if isinstance(path, Path) else path
+    errors.append(f"{rel}:{line}: {msg}")
+
+
+# ---------------------------------------------------------------------------
+# Rust lexer: produce code-only text (strings/chars/comments blanked) so the
+# structural checks never trip on a brace inside a doc comment or literal.
+# ---------------------------------------------------------------------------
+def strip_noncode(src):
+    """Return src with comments and string/char literal bodies replaced by
+    spaces (newlines preserved so line numbers survive)."""
+    out = []
+    i, n = 0, len(src)
+
+    def blank_until(j):
+        nonlocal i
+        for k in range(i, j):
+            out.append("\n" if src[k] == "\n" else " ")
+        i = j
+
+    while i < n:
+        c = src[i]
+        two = src[i : i + 2]
+        if two == "//":
+            j = src.find("\n", i)
+            j = n if j == -1 else j
+            blank_until(j)
+        elif two == "/*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if src[j : j + 2] == "/*":
+                    depth, j = depth + 1, j + 2
+                elif src[j : j + 2] == "*/":
+                    depth, j = depth - 1, j + 2
+                else:
+                    j += 1
+            blank_until(j)
+        elif c == '"' or two in ('b"',):
+            if c == "b":
+                out.append("b")
+                i += 1
+            out.append('"')
+            i += 1
+            while i < n:
+                if src[i] == "\\":
+                    blank_until(min(i + 2, n))
+                elif src[i] == '"':
+                    out.append('"')
+                    i += 1
+                    break
+                else:
+                    blank_until(i + 1)
+        elif re.match(r'r#*"', src[i:]):
+            m = re.match(r'r(#*)"', src[i:])
+            closer = '"' + m.group(1)
+            j = src.find(closer, i + len(m.group(0)))
+            j = n if j == -1 else j + len(closer)
+            blank_until(j)
+        elif c == "'":
+            # lifetime ('a, 'static) vs char literal ('x', '\n', '\u{..}')
+            m = re.match(r"'([A-Za-z_][A-Za-z0-9_]*)(?!')", src[i:])
+            if m and src[i + m.end() : i + m.end() + 1] != "'":
+                out.append(src[i : i + m.end()])
+                i += m.end()
+            else:
+                m2 = re.match(r"'(\\.[^']*|[^'\\])'", src[i:], re.S)
+                if m2:
+                    blank_until(i + m2.end())
+                else:
+                    out.append(c)
+                    i += 1
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+def rust_files():
+    skip = {".git", "target"}
+    for p in sorted(REPO.rglob("*.rs")):
+        if not any(part in skip for part in p.parts):
+            yield p
+
+
+# ---------------------------------------------------------------------------
+# 1 + 2: delimiter balance and line discipline
+# ---------------------------------------------------------------------------
+def check_balance_and_lines():
+    pairs = {"}": "{", ")": "(", "]": "["}
+    for path in rust_files():
+        src = path.read_text()
+        code = strip_noncode(src)
+        stack = []
+        line = 1
+        for ch in code:
+            if ch == "\n":
+                line += 1
+            elif ch in "{([":
+                stack.append((ch, line))
+            elif ch in ")}]":
+                if not stack:
+                    err(path, line, f"unmatched closing {ch!r}")
+                    break
+                top, tline = stack.pop()
+                if top != pairs[ch]:
+                    err(path, line, f"closing {ch!r} does not match {top!r} from line {tline}")
+                    break
+        else:
+            for top, tline in stack:
+                err(path, tline, f"unclosed {top!r}")
+        for lineno, text in enumerate(src.splitlines(), 1):
+            if len(text) > MAX_COLS:
+                err(path, lineno, f"line exceeds {MAX_COLS} columns ({len(text)})")
+            if text != text.rstrip():
+                err(path, lineno, "trailing whitespace")
+            if "\t" in text:
+                err(path, lineno, "tab character (rustfmt uses spaces)")
+
+
+# ---------------------------------------------------------------------------
+# 3: Cargo.toml target paths
+# ---------------------------------------------------------------------------
+def check_cargo_targets():
+    for toml in [REPO / "Cargo.toml", REPO / "vendor/anyhow/Cargo.toml"]:
+        if not toml.exists():
+            err(toml, 0, "missing Cargo.toml")
+            continue
+        for lineno, line in enumerate(toml.read_text().splitlines(), 1):
+            m = re.match(r'\s*path\s*=\s*"([^"]+)"', line)
+            if m and not (toml.parent / m.group(1)).exists():
+                err(toml, lineno, f"target path {m.group(1)!r} does not exist")
+
+
+# ---------------------------------------------------------------------------
+# 4: module tree — `mod foo;` must resolve; also build the tree for check 6.
+# Inline `pub mod name { ... }` bodies map the child module to the same file.
+# ---------------------------------------------------------------------------
+def module_dir(path):
+    """Directory in which `mod foo;` inside `path` resolves."""
+    if path.name in ("mod.rs", "lib.rs", "main.rs"):
+        return path.parent
+    return path.parent / path.stem
+
+
+def check_mod_tree():
+    tree = {}  # module path tuple -> file
+    roots = [(REPO / "rust/src/lib.rs", ()), (REPO / "vendor/anyhow/src/lib.rs", ("anyhow",))]
+    todo = list(roots)
+    while todo:
+        path, prefix = todo.pop()
+        if not path.exists():
+            err(path, 0, "module file missing")
+            continue
+        tree[prefix] = path
+        code = strip_noncode(path.read_text())
+        for lineno, line in enumerate(code.splitlines(), 1):
+            m = re.match(r"\s*(?:pub\s+)?mod\s+([A-Za-z_][A-Za-z0-9_]*)\s*;", line)
+            if not m:
+                continue
+            name = m.group(1)
+            base = module_dir(path)
+            cand = [base / f"{name}.rs", base / name / "mod.rs"]
+            hits = [c for c in cand if c.exists()]
+            if not hits:
+                err(path, lineno, f"mod {name}; resolves to neither {cand[0].name} "
+                                  f"nor {name}/mod.rs under {base.relative_to(REPO)}")
+            else:
+                todo.append((hits[0], prefix + (name,)))
+        # inline module bodies (e.g. `pub mod prelude { ... }` in lib.rs)
+        for m in re.finditer(r"(?:^|\n)\s*pub\s+mod\s+([A-Za-z_][A-Za-z0-9_]*)\s*\{", code):
+            tree[prefix + (m.group(1),)] = path
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# 5: anyhow shim surface
+# ---------------------------------------------------------------------------
+def shim_exports():
+    src = (REPO / "vendor/anyhow/src/lib.rs").read_text()
+    code = strip_noncode(src)
+    items = set(re.findall(
+        r"pub\s+(?:struct|enum|trait|type|fn)\s+([A-Za-z_][A-Za-z0-9_]*)", code))
+    macros = set()
+    for m in re.finditer(r"#\[macro_export\]", code):
+        tail = code[m.end():]
+        mm = re.search(r"macro_rules!\s+([A-Za-z_][A-Za-z0-9_]*)", tail)
+        if mm:
+            macros.add(mm.group(1))
+    return items, macros
+
+
+def check_anyhow_usage():
+    items, macros = shim_exports()
+    exported = items | macros
+    use_re = re.compile(r"use\s+anyhow::(?:\{([^}]*)\}|([A-Za-z_][A-Za-z0-9_]*))")
+    for path in rust_files():
+        if REPO / "vendor" in path.parents:
+            continue
+        code = strip_noncode(path.read_text())
+        for lineno, line in enumerate(code.splitlines(), 1):
+            for m in use_re.finditer(line):
+                names = m.group(1).split(",") if m.group(1) else [m.group(2)]
+                for name in (n.strip() for n in names):
+                    if name and name not in exported:
+                        err(path, lineno, f"`use anyhow::{name}` not exported by the shim")
+            for m in re.finditer(r"\banyhow::([A-Za-z_][A-Za-z0-9_]*)", line):
+                if m.group(1) not in exported | {"Result", "Error"}:
+                    err(path, lineno, f"path anyhow::{m.group(1)} not exported by the shim")
+        # macro invocations the shim must support
+        for lineno, line in enumerate(code.splitlines(), 1):
+            for m in re.finditer(r"\b(anyhow|bail|ensure)!\s*[\(\[]", line):
+                if m.group(1) not in macros:
+                    err(path, lineno, f"macro {m.group(1)}! not provided by the shim")
+
+
+# ---------------------------------------------------------------------------
+# 6 + 8: crate-path resolution
+# ---------------------------------------------------------------------------
+_file_code = {}
+
+
+def code_of(path):
+    if path not in _file_code:
+        _file_code[path] = strip_noncode(path.read_text())
+    return _file_code[path]
+
+
+
+def norm_spec(raw):
+    """Collapse a use-spec: whitespace removed except the ` as ` keyword,
+    which is kept as `@` so aliases survive tokenization."""
+    s = re.sub(r"\s+", " ", raw.strip())
+    s = re.sub(r"\bas\b", "@", s)
+    return s.replace(" ", "")
+
+
+def pub_items(path):
+    """Names a module file makes visible: direct pub defs, `pub use`
+    re-exports (last segment or `as` alias), and exported macros."""
+    code = code_of(path)
+    names = set(re.findall(
+        r"pub(?:\s*\(\s*crate\s*\))?\s+(?:unsafe\s+)?"
+        r"(?:struct|enum|trait|fn|const|static|type|mod)\s+([A-Za-z_][A-Za-z0-9_]*)", code))
+    for m in re.finditer(r"pub(?:\s*\(\s*crate\s*\))?\s+use\s+([^;]+);", code):
+        spec = norm_spec(m.group(1))
+        for leaf in expand_use(spec):
+            alias = re.search(r"@([A-Za-z_][A-Za-z0-9_]*)$", leaf)
+            names.add(alias.group(1) if alias else leaf.rsplit("::", 1)[-1])
+    for m in re.finditer(r"#\[macro_export\]", code):
+        mm = re.search(r"macro_rules!\s+([A-Za-z_][A-Za-z0-9_]*)", code[m.end():])
+        if mm:
+            names.add(mm.group(1))
+    return names
+
+
+def check_crate_paths(tree):
+    use_re = re.compile(r"use\s+((?:crate|hpconcord)::[A-Za-z0-9_:{}, *\n]+?);", re.S)
+    items_cache = {}
+    # #[macro_export] exports at the crate root regardless of module, so
+    # `use hpconcord::some_macro;` resolves even though lib.rs never names it.
+    crate_macros = set()
+    for f in rust_files():
+        if REPO / "vendor" not in f.parents:
+            c = code_of(f)
+            for m in re.finditer(r"#\[macro_export\]", c):
+                mm = re.search(r"macro_rules!\s+([A-Za-z_][A-Za-z0-9_]*)", c[m.end():])
+                if mm:
+                    crate_macros.add(mm.group(1))
+
+    def items_of(f):
+        if f not in items_cache:
+            items_cache[f] = pub_items(f)
+        return items_cache[f]
+
+    for path in rust_files():
+        if REPO / "vendor" in path.parents:
+            continue
+        code = code_of(path)
+        for m in use_re.finditer(code):
+            lineno = code[: m.start()].count("\n") + 1
+            spec = norm_spec(m.group(1))
+            for full in expand_use(spec):
+                segs = re.sub(r"@[A-Za-z_][A-Za-z0-9_]*$", "", full).split("::")
+                segs[0:1] = []  # drop crate/hpconcord
+                if not segs:
+                    continue
+                # walk the module tree as deep as possible
+                depth = 0
+                while depth < len(segs) and tuple(segs[: depth + 1]) in tree:
+                    depth += 1
+                if depth == len(segs):
+                    continue  # imports a module itself
+                mod_file = tree.get(tuple(segs[:depth]))
+                if mod_file is None:
+                    err(path, lineno, f"use {full}: module path not found")
+                    continue
+                item = segs[depth]
+                if item in ("*", "self"):
+                    continue
+                if depth + 1 < len(segs):
+                    err(path, lineno,
+                        f"use {full}: `{'::'.join(segs[:depth + 1])}` is not a module")
+                    continue
+                if item in crate_macros and depth == 0:
+                    continue
+                if item not in items_of(mod_file):
+                    err(path, lineno,
+                        f"use {full}: no pub item `{item}` in "
+                        f"{mod_file.relative_to(REPO)}")
+
+
+def expand_use(spec):
+    """Expand a (whitespace-free) use spec with nested braces into leaf paths."""
+    m = re.search(r"\{([^{}]*)\}", spec)
+    if not m:
+        yield spec
+        return
+    head, tail = spec[: m.start()], spec[m.end():]
+    for part in m.group(1).split(","):
+        if part:
+            yield from expand_use(head + part + tail)
+
+
+# ---------------------------------------------------------------------------
+# 7: feature gates
+# ---------------------------------------------------------------------------
+def check_features():
+    cargo = (REPO / "Cargo.toml").read_text()
+    m = re.search(r"\[features\](.*?)(\n\[|\Z)", cargo, re.S)
+    declared = set(re.findall(r"^([A-Za-z0-9_-]+)\s*=", m.group(1), re.M)) if m else set()
+    declared.add("default")
+    for path in rust_files():
+        if REPO / "vendor" in path.parents:
+            continue
+        code = strip_noncode(path.read_text())
+        for lineno, line in enumerate(code.splitlines(), 1):
+            for fm in re.finditer(r'feature\s*=\s*"([^"]+)"', path.read_text().splitlines()
+                                  [lineno - 1]):
+                if fm.group(1) not in declared:
+                    err(path, lineno, f"cfg feature {fm.group(1)!r} not declared in Cargo.toml")
+
+
+# ---------------------------------------------------------------------------
+# 9: entry points — every harness=false bench, every example, and main.rs
+# must define fn main (cargo fails the build otherwise).
+# ---------------------------------------------------------------------------
+def check_entry_points():
+    targets = list((REPO / "rust/benches").glob("*.rs"))
+    targets += list((REPO / "examples").glob("*.rs"))
+    targets.append(REPO / "rust/src/main.rs")
+    for path in targets:
+        if not path.exists():
+            continue
+        if not re.search(r"\bfn\s+main\s*\(", code_of(path)):
+            err(path, 1, "no fn main (bench targets use harness = false)")
+
+
+# ---------------------------------------------------------------------------
+# 10: doc-tests — fenced code blocks in /// comments compile under
+# `cargo test --doc`; check delimiter balance and crate-path resolution so
+# a drifted example fails here instead of in the first real doc-test run.
+# ---------------------------------------------------------------------------
+def check_doc_tests(tree):
+    pairs = {"}": "{", ")": "(", "]": "["}
+    for path in rust_files():
+        if REPO / "vendor" in path.parents:
+            continue
+        src = path.read_text()
+        lines = src.splitlines()
+        block, start, fence = None, 0, None
+        for lineno, raw in enumerate(lines, 1):
+            m = re.match(r"\s*(?:///|//!)\s?(.*)$", raw)
+            if not m:
+                if block is not None or fence == "skip":
+                    err(path, start, "doc comment block ends inside a ``` fence")
+                    block, fence = None, None
+                continue
+            text = m.group(1)
+            if text.strip().startswith("```"):
+                tag = text.strip()[3:].strip()
+                if fence == "skip":
+                    fence = None  # closing a non-Rust fence
+                elif block is None:
+                    # ignore non-Rust fences (text, ignore, sh, ...)
+                    if tag in ("", "rust", "no_run", "should_panic"):
+                        block, start = [], lineno
+                    else:
+                        fence = "skip"
+                else:
+                    body = "\n".join(block)
+                    stack = []
+                    for ch in strip_noncode(body):
+                        if ch in "{([":
+                            stack.append(ch)
+                        elif ch in ")}]":
+                            if not stack or stack.pop() != pairs[ch]:
+                                err(path, start, "unbalanced delimiters in doc example")
+                                stack = None
+                                break
+                    if stack:
+                        err(path, start, "unclosed delimiter in doc example")
+                    for um in re.finditer(
+                            r"use\s+hpconcord::([A-Za-z0-9_:]+)", body):
+                        segs = um.group(1).split("::")
+                        depth = 0
+                        while depth < len(segs) and tuple(segs[: depth + 1]) in tree:
+                            depth += 1
+                        if depth < len(segs) - 1:
+                            err(path, start,
+                                f"doc example: hpconcord::{um.group(1)} not a module path")
+                    block = None
+            elif block is not None:
+                block.append(text.lstrip("# ") if text.strip().startswith("#") else text)
+        if block is not None:
+            err(path, start, "unterminated ``` fence in doc comment")
+
+
+# ---------------------------------------------------------------------------
+# 11: struct-literal field coverage.  PRs 4-6 repeatedly grew option structs
+# (ScreenedDistOptions, ExecutorTask, ...) and the historical failure mode is
+# a stale literal in a test or bench that no longer names every field.  For
+# every `Name { ... }` expression or pattern whose Name is a struct defined
+# in this repo: unknown fields are an error, and a literal without `..` must
+# name every field (Rust's own rule for both literals and patterns).
+# ---------------------------------------------------------------------------
+STRUCT_DEF_RE = re.compile(
+    r"\bstruct\s+([A-Z][A-Za-z0-9_]*)\s*(?:<[^>{;]*>)?\s*(?:where[^{;]*)?\{")
+FIELD_RE = re.compile(r"(?:pub(?:\s*\(\s*crate\s*\))?\s+)?([a-z_][A-Za-z0-9_]*)\s*:")
+
+
+def collect_struct_defs():
+    """name -> list of field-name sets (one per definition site)."""
+    defs = {}
+    for path in rust_files():
+        code = code_of(path)
+        for m in STRUCT_DEF_RE.finditer(code):
+            body, _ = balanced_span(code, m.end() - 1)
+            if body is None:
+                continue
+            fields = set()
+            for part in split_top_level(body):
+                fm = FIELD_RE.match(part.strip())
+                if fm:
+                    fields.add(fm.group(1))
+            defs.setdefault(m.group(1), []).append(fields)
+    return defs
+
+
+def balanced_span(code, open_idx):
+    """Return (inner_text, end_idx) for the {...} starting at open_idx."""
+    depth = 0
+    for j in range(open_idx, len(code)):
+        if code[j] in "{([":
+            depth += 1
+        elif code[j] in ")}]":
+            depth -= 1
+            if depth == 0:
+                return code[open_idx + 1 : j], j
+    return None, None
+
+
+def split_top_level(text):
+    """Split on commas outside {}, (), [].  Angle brackets are NOT tracked
+    (`=>` and comparisons would confuse them); a comma inside a generic list
+    mis-splits into a part that fails the field regex, which callers treat
+    as \"not a field list\" — a safe skip, never a false report."""
+    parts, depth, cur = [], 0, []
+    for ch in text:
+        if ch in "{([":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth <= 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+# Tokens before `Name {` that mean the braces are NOT a field list.
+NOT_LITERAL_PREV = {
+    "struct", "enum", "union", "trait", "impl", "for", "mod", "use", "dyn",
+    "as", "->", ":", "&", "<", "+", "==", "!=", "&&", "||", "where", "if",
+    "while", "match", "in", "|",
+}
+
+
+def check_struct_literals():
+    defs = collect_struct_defs()
+    lit_re = re.compile(r"\b([A-Z][A-Za-z0-9_]*)\s*\{")
+    for path in rust_files():
+        code = code_of(path)
+        for m in lit_re.finditer(code):
+            name = m.group(1)
+            if name not in defs:
+                continue
+            prev = code[: m.start()].rstrip()
+            prev_tok = re.search(r"([A-Za-z_][A-Za-z0-9_]*|::|->|==|!=|&&|\|\||[^\s])\Z", prev)
+            if prev_tok and prev_tok.group(1) in NOT_LITERAL_PREV:
+                continue
+            body, _ = balanced_span(code, m.end() - 1)
+            if body is None:
+                continue
+            lineno = code[: m.start()].count("\n") + 1
+            used, has_base, malformed = set(), False, False
+            for part in split_top_level(body):
+                part = part.strip()
+                if not part:
+                    continue
+                if part.startswith(".."):
+                    has_base = True
+                    continue
+                fm = re.match(r"([A-Za-z_][A-Za-z0-9_]*)\s*(?::|$|@)", part)
+                if fm:
+                    used.add(fm.group(1))
+                else:
+                    malformed = True  # an expression, so this is a block, not a literal
+            if malformed:
+                continue
+            field_sets = defs[name]
+            if not any(used <= fs for fs in field_sets):
+                extra = used - set.union(*field_sets)
+                err(path, lineno, f"{name} {{ ... }}: unknown field(s) {sorted(extra)}")
+            elif not has_base and len(field_sets) == 1 and used and \
+                    used != field_sets[0]:
+                err(path, lineno,
+                    f"{name} {{ ... }} misses field(s) {sorted(field_sets[0] - used)} "
+                    f"and has no `..` base")
+
+
+# ---------------------------------------------------------------------------
+# 12: format-argument counts.  `println!("{} {}", a)` is a compile error the
+# lexer can see: count positional placeholders in the literal vs the argument
+# tail (named/indexed placeholders and `name = value` args are skipped).
+# ---------------------------------------------------------------------------
+FMT_MACROS = {"println": 0, "print": 0, "eprintln": 0, "eprint": 0, "format": 0,
+              "panic": 0, "anyhow": 0, "bail": 0, "write": 1, "writeln": 1,
+              "assert": 1, "ensure": 1, "assert_eq": 2, "assert_ne": 2}
+
+
+def count_positional(fmt):
+    """(positional, saw_indexed): placeholders in a format literal body."""
+    pos, indexed, i = 0, False, 0
+    while i < len(fmt):
+        if fmt[i : i + 2] in ("{{", "}}"):
+            i += 2
+            continue
+        if fmt[i] == "{":
+            j = fmt.find("}", i)
+            if j == -1:
+                break
+            body = fmt[i + 1 : j]
+            head = body.split(":", 1)[0].split("$", 1)[0]
+            if head == "":
+                pos += 1
+            elif head.isdigit():
+                indexed = True
+            # width/precision `$` args also consume positionals
+            for spec in re.findall(r"(?<![A-Za-z0-9_.])(\d*)\$", body.partition(":")[2]):
+                if spec == "":
+                    pos += 1
+            i = j + 1
+        else:
+            i += 1
+    return pos, indexed
+
+
+def check_format_args():
+    call_re = re.compile(r"\b([a-z_]+)!\s*\(")
+    for path in rust_files():
+        code = code_of(path)
+        src = path.read_text()
+        for m in call_re.finditer(code):
+            name = m.group(1)
+            if name not in FMT_MACROS:
+                continue
+            body, _ = balanced_span(code, m.end() - 1)
+            if body is None:
+                continue
+            lineno = code[: m.start()].count("\n") + 1
+            raw_body = src[m.end() : m.end() + len(body)]
+            args = split_top_level(body)
+            skip = FMT_MACROS[name]
+            if len(args) <= skip:
+                continue
+            # the format literal must be a plain string literal
+            offset = sum(len(a) + 1 for a in args[:skip])
+            lit_blank = args[skip].strip()
+            if not lit_blank.startswith('"'):
+                continue
+            lit_raw = raw_body[offset:offset + len(args[skip])].strip()
+            lm = re.match(r'"((?:\\.|[^"\\])*)"\s*$', lit_raw, re.S)
+            if not lm:
+                continue
+            pos, indexed = count_positional(lm.group(1))
+            tail = [a for a in args[skip + 1 :] if a.strip()]
+            if any(re.match(r"\s*[A-Za-z_][A-Za-z0-9_]*\s*=[^=]", a) for a in tail):
+                continue  # named arguments — out of scope
+            if not indexed and pos != len(tail):
+                err(path, lineno,
+                    f"{name}!: format literal has {pos} positional placeholder(s) "
+                    f"but {len(tail)} argument(s)")
+
+
+def main():
+    check_balance_and_lines()
+    check_cargo_targets()
+    tree = check_mod_tree()
+    check_anyhow_usage()
+    check_crate_paths(tree)
+    check_features()
+    check_entry_points()
+    check_doc_tests(tree)
+    check_struct_literals()
+    check_format_args()
+    n_files = sum(1 for _ in rust_files())
+    if errors:
+        for e in errors:
+            print(e)
+        print(f"\nstatic audit: {len(errors)} finding(s) across {n_files} Rust files",
+              file=sys.stderr)
+        return 1
+    print(f"static audit: OK ({n_files} Rust files, 12 check classes)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

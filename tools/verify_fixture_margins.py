@@ -1,0 +1,251 @@
+#!/usr/bin/env python3
+"""Empirically verify the screening margins of the analytically-sized
+test fixtures (offline companion to the Rust test suites; the builder
+image has no Rust toolchain, see tools/static_audit.sh).
+
+The screening suites assert *component structure* of thresholded sample
+grams: `chain_problem(16, 200, 0xC0DE)` must stay connected at
+lambda1 = 0.05 (rust/tests/screening_equivalence.rs), and every
+`disjoint_blocks` fixture must keep each block internally connected at
+the suite's lambda1 while the cross-block entries are exactly 0.0 by
+construction (rust/tests/common/mod.rs). Those asserts are
+deterministic — the RNG is a fixed SplitMix64 stream — but their safety
+margin decides whether an unrelated change that re-orders RNG draws
+turns into a confusing screening failure. This script mirrors the Rust
+generators bit-faithfully at the integer level (SplitMix64, Box-Muller
+draw order, banded-Cholesky sampling, disjoint-row block embedding),
+recomputes each fixture's gram, and reports for every (fixture,
+lambda1) pair:
+
+  * the realized component count (must match the suite's assert);
+  * the minimum connecting |S_ij| over the chain edges that hold each
+    block together, and its margin above lambda1;
+  * that margin in units of the analytic sampling sigma of a gram
+    entry, sigma ~= sqrt((Sii*Sjj + Sij^2)/n_each) / n_blocks — the
+    ">= 4 sigma" rule the fixture comments promise;
+  * the maximum spurious |S_ij| over pairs that are *far* in the chain
+    (graph distance > 2), whose margin below lambda1 guards the
+    all-singletons edge cases.
+
+Exit status is nonzero if any fixture's component structure or 4-sigma
+margin fails, so CI can run this as a gate. Float caveat: Python's libm
+may differ from Rust's in the last ulp of ln/sin/cos; margins are
+~1e-2, twelve orders above that noise.
+
+Measured margins (this container, 2026-08-08) are recorded in
+rust/tests/common/mod.rs and the suites' fixture comments.
+"""
+
+import math
+import sys
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+
+
+class Rng:
+    """SplitMix64 + Box-Muller pair cache — mirror of rust/src/rng.rs."""
+
+    def __init__(self, seed):
+        self.state = seed & MASK
+        self.spare = None
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return (z ^ (z >> 31)) & MASK
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self):
+        if self.spare is not None:
+            v, self.spare = self.spare, None
+            return v
+        u1 = 1.0 - self.uniform()
+        u2 = self.uniform()
+        r = math.sqrt(-2.0 * math.log(u1))
+        theta = 2.0 * math.pi * u2
+        self.spare = r * math.sin(theta)
+        return r * math.cos(theta)
+
+    def normal_vec(self, n):
+        return [self.normal() for _ in range(n)]
+
+
+def chain_precision(p):
+    om = np.zeros((p, p))
+    for i in range(p):
+        om[i, i] = 1.25
+        if i + 1 < p:
+            om[i, i + 1] = om[i + 1, i] = -0.5
+    return om
+
+
+def chain_problem_x(p, n, rng):
+    """Mirror of gen::chain_problem: x[i] = L^-T z, z ~ N(0, I) row-wise.
+
+    Cholesky factors are unique for PD matrices, so numpy's L equals the
+    banded factorization in rust/src/linalg up to rounding.
+    """
+    om = chain_precision(p)
+    l = np.linalg.cholesky(om)
+    x = np.zeros((n, p))
+    for i in range(n):
+        z = np.array(rng.normal_vec(p))
+        x[i] = np.linalg.solve(l.T, z)
+    return x
+
+
+def disjoint_blocks(sizes, n_each, seed):
+    """Mirror of rust/tests/common/mod.rs::disjoint_blocks: block b's
+    chain sample occupies rows [b*n_each, (b+1)*n_each) and its own
+    column band; everything else stays exactly 0.0."""
+    rng = Rng(seed)
+    p = sum(sizes)
+    x = np.zeros((n_each * len(sizes), p))
+    col0 = 0
+    for b, sz in enumerate(sizes):
+        xb = chain_problem_x(sz, n_each, rng)
+        x[b * n_each:(b + 1) * n_each, col0:col0 + sz] = xb
+        col0 += sz
+    return x
+
+
+def gram(x):
+    return x.T @ x / x.shape[0]
+
+
+def components(s, thr):
+    """Union-find over |S_ij| > thr, renumbered by first appearance —
+    mirror of covariance_components."""
+    p = s.shape[0]
+    parent = list(range(p))
+
+    def find(i):
+        while parent[i] != i:
+            parent[i] = parent[parent[i]]
+            i = parent[i]
+        return i
+
+    for i in range(p):
+        for j in range(i + 1, p):
+            if abs(s[i, j]) > thr:
+                ri, rj = find(i), find(j)
+                if ri != rj:
+                    parent[max(ri, rj)] = min(ri, rj)
+    seen = {}
+    return [seen.setdefault(find(i), len(seen)) for i in range(p)]
+
+
+def analyze(name, sizes, n_each, seed, lambdas, x=None):
+    """Report margins for one disjoint_blocks fixture (or a plain chain
+    problem when sizes has one block and x is given)."""
+    if x is None:
+        x = disjoint_blocks(sizes, n_each, seed)
+    s = gram(x)
+    nblocks = len(sizes)
+    ok = True
+
+    # Chain edges (i, i+1) within each block are what keep it connected.
+    edges, far_pairs = [], []
+    col0 = 0
+    for sz in sizes:
+        for j in range(sz - 1):
+            edges.append((col0 + j, col0 + j + 1))
+        for a in range(sz):
+            for b in range(a + 3, sz):  # graph distance > 2: tiny true cov
+                far_pairs.append((col0 + a, col0 + b))
+        col0 += sz
+    min_edge = min(abs(s[i, j]) for i, j in edges)
+    arg_edge = min(edges, key=lambda e: abs(s[e[0], e[1]]))
+    max_far = max((abs(s[i, j]) for i, j in far_pairs), default=0.0)
+
+    # Analytic sigma of a gram entry at the weakest edge. Each block
+    # contributes n_each live rows out of n_each*nblocks, so the entry
+    # and its sigma are both divided by nblocks.
+    i, j = arg_edge
+    sii, sjj, sij = s[i, i] * nblocks, s[j, j] * nblocks, s[i, j] * nblocks
+    sigma = math.sqrt((sii * sjj + sij * sij) / n_each) / nblocks
+
+    print(f"{name}: min connecting |S_ij| = {min_edge:.4f} at {arg_edge}, "
+          f"sigma = {sigma:.4f}, max far-pair |S_ij| = {max_far:.4f}")
+    for lam in lambdas:
+        comp = components(s, lam)
+        ncomp = max(comp) + 1
+        margin = min_edge - lam
+        nsig = margin / sigma
+        status = "ok" if ncomp == nblocks and nsig >= 4.0 else "FAIL"
+        if status == "FAIL":
+            ok = False
+        print(f"  lambda1={lam}: components={ncomp} (want {nblocks}), "
+              f"margin={margin:+.4f} = {nsig:.1f} sigma   [{status}]")
+    return ok
+
+
+def main():
+    ok = True
+
+    # screening_equivalence.rs: the connected acceptance fixture must
+    # stay ONE component at lambda1 = 0.05.
+    rng = Rng(0xC0DE)
+    x = chain_problem_x(16, 200, rng)
+    ok &= analyze("chain_problem(16,200,0xC0DE) [connected]",
+                  [16], 200, None, [0.05], x=x)
+    # ...and connected means exactly one component, not just margins:
+    s = gram(x)
+    if max(components(s, 0.05)) != 0:
+        print("  FAIL: connected fixture split at 0.05")
+        ok = False
+
+    # screening_equivalence.rs block fixtures, all at lambda1 = 0.05.
+    ok &= analyze("disjoint_blocks([12,12],200,0xB10C)", [12, 12], 200, 0xB10C, [0.05])
+    ok &= analyze("disjoint_blocks([10,8],400,0xB17)", [10, 8], 400, 0xB17, [0.05])
+    ok &= analyze("disjoint_blocks([12,12],400,0xFAB)", [12, 12], 400, 0xFAB, [0.05])
+    ok &= analyze("disjoint_blocks([10,6],400,0x57A7)", [10, 6], 400, 0x57A7, [0.05])
+
+    # grid_schedule.rs sweeps screen at lambda1 in {0.02, 0.05} with
+    # FOUR blocks (within-block gram scaled by 1/4 — the tight case, so
+    # these fixtures carry n_each = 800).
+    ok &= analyze("disjoint_blocks([10]*4,800,0x9A1D)", [10] * 4, 800, 0x9A1D, [0.02, 0.05])
+    ok &= analyze("disjoint_blocks([12,6,6,6],800,0x6B11)", [12, 6, 6, 6], 800, 0x6B11,
+                  [0.02, 0.05])
+    ok &= analyze("disjoint_blocks([10]*4,800,0x5E9)", [10] * 4, 800, 0x5E9, [0.02, 0.05])
+
+    # grid_schedule.rs stability fixture screens subsamples (fraction
+    # 0.5) at lambda1 = 0.1; the full-gram margin must carry ~sqrt(2)
+    # more sigma so the half-sample margins stay >= 4 sigma too.
+    ok &= analyze("disjoint_blocks([8,8],800,0xED6E)", [8, 8], 800, 0xED6E, [0.1])
+
+    # concurrent_schedule.rs: five four-block fixtures, all screened at
+    # lambda1 = 0.02.
+    for seed, n in ((0x4A7E, 400), (0xC0C0, 400), (0x0B1, 400), (0xACCE, 400), (0xFADE, 200)):
+        ok &= analyze(f"disjoint_blocks([10]*4,{n},{seed:#x})", [10] * 4, n, seed, [0.02])
+
+    # memory_budget.rs (lambda1 = 0.02).
+    ok &= analyze("disjoint_blocks([10]*4,400,0x9A1D)", [10] * 4, 400, 0x9A1D, [0.02])
+    ok &= analyze("disjoint_blocks([12,6,6,6],200,0x51ab)", [12, 6, 6, 6], 200, 0x51AB, [0.02])
+    ok &= analyze("disjoint_blocks([10,10],200,0x0BAD)", [10, 10], 200, 0x0BAD, [0.02])
+    ok &= analyze("disjoint_blocks([8,8,8],200,0xF00D)", [8, 8, 8], 200, 0xF00D, [0.02])
+
+    # lemma_counts.rs (lambda1 = 0.02) and parallel_determinism.rs
+    # (lambda1 = 0.05) block fixtures.
+    ok &= analyze("disjoint_blocks([12,12],200,0x5EED5)", [12, 12], 200, 0x5EED5, [0.02])
+    ok &= analyze("disjoint_blocks([10,8],300,0x5C1)", [10, 8], 300, 0x5C1, [0.05])
+    ok &= analyze("disjoint_blocks([12,12],400,0x5C2)", [12, 12], 400, 0x5C2, [0.05])
+    ok &= analyze("disjoint_blocks([12,12],300,0x5C3)", [12, 12], 300, 0x5C3, [0.05])
+
+    print()
+    if not ok:
+        print("fixture margins: FAIL (see lines above)")
+        return 1
+    print("fixture margins: OK (every fixture holds its component "
+          "structure with >= 4 sigma to spare)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

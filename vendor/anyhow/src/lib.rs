@@ -1,8 +1,10 @@
 //! Offline shim for the subset of the `anyhow` API this repository uses:
-//! [`Error`], [`Result`], the [`anyhow!`] and [`bail!`] macros, and the
-//! [`Context`] extension trait. The real crate is not vendored in the
-//! offline image; this one is API-compatible for our call sites so the
-//! code reads exactly as it would with crates.io `anyhow`.
+//! [`Error`], [`Result`], the [`anyhow!`], [`bail!`] and [`ensure!`]
+//! macros (all three real-crate arms: literal, displayable expression
+//! and format string + args), plus the [`Context`] extension trait.
+//! The real crate is not vendored in the offline image; this one is
+//! API-compatible for our call sites so the code reads exactly as it
+//! would with crates.io `anyhow`.
 //!
 //! Like the real crate, [`Error`] deliberately does **not** implement
 //! `std::error::Error` — that is what allows the blanket
@@ -95,19 +97,65 @@ where
 /// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
-/// Construct an [`Error`] from a format string.
+/// Construct an [`Error`] from a format string, a displayable value, or
+/// a format string plus arguments — the real crate's three arms, in the
+/// same match order (a bare string literal is a format string, so inline
+/// captures like `anyhow!("bad {x}")` work).
 #[macro_export]
 macro_rules! anyhow {
-    ($($arg:tt)*) => {
-        $crate::Error::msg(format!($($arg)*))
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
     };
 }
 
-/// Return early with an [`Error`] built from a format string.
+/// Return early with an [`Error`]; accepts the same three arms as
+/// [`anyhow!`].
 #[macro_export]
 macro_rules! bail {
-    ($($arg:tt)*) => {
-        return Err($crate::anyhow!($($arg)*))
+    ($msg:literal $(,)?) => {
+        return Err($crate::anyhow!($msg))
+    };
+    ($err:expr $(,)?) => {
+        return Err($crate::anyhow!($err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        return Err($crate::anyhow!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds. The bare
+/// form stringifies the condition like the real crate does.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!($msg));
+        }
+    };
+    ($cond:expr, $err:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!($err));
+        }
+    };
+    ($cond:expr, $fmt:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($fmt, $($arg)*));
+        }
     };
 }
 
@@ -166,6 +214,42 @@ mod tests {
         }
         assert_eq!(parse("7").unwrap(), 7);
         assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn anyhow_and_bail_accept_all_three_arms() {
+        fn lit() -> Result<()> {
+            bail!("plain literal")
+        }
+        fn expr() -> Result<()> {
+            let owned = String::from("from expression");
+            bail!(owned)
+        }
+        fn fmt() -> Result<()> {
+            bail!("x = {}, y = {}", 1, 2)
+        }
+        assert_eq!(format!("{}", lit().unwrap_err()), "plain literal");
+        assert_eq!(format!("{}", expr().unwrap_err()), "from expression");
+        assert_eq!(format!("{}", fmt().unwrap_err()), "x = 1, y = 2");
+        let e = anyhow!("inline {}", "capture");
+        assert_eq!(format!("{e}"), "inline capture");
+    }
+
+    #[test]
+    fn ensure_stringifies_and_formats() {
+        fn bare(v: usize) -> Result<usize> {
+            ensure!(v > 2);
+            Ok(v)
+        }
+        fn with_msg(v: usize) -> Result<usize> {
+            ensure!(v > 2, "v too small: {v}");
+            Ok(v)
+        }
+        assert_eq!(bare(3).unwrap(), 3);
+        let e = bare(1).unwrap_err();
+        assert_eq!(format!("{e}"), "Condition failed: `v > 2`");
+        let e = with_msg(1).unwrap_err();
+        assert_eq!(format!("{e}"), "v too small: 1");
     }
 
     #[test]
