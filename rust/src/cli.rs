@@ -125,6 +125,13 @@ COMMANDS:
            [--gram-block N]  (stream the screening gram in row panels
              of N samples so screening never needs all of X resident;
              0 = in-core. Bit-identical to the in-core pass)
+           [--x-file FILE]  (read X from an on-disk HPCX file written
+             by `convert` instead of keeping it in memory; requires
+             --mode dist with --screen. The X backend is a
+             schedule-only knob (determinism rule 8): the estimate,
+             objective and counters are bit-identical to the in-core
+             run — only the modeled source residency moves. TOML:
+             solver.x_file)
            [--out-omega FILE]  (write the estimate as whitespace-
              separated rows, full f64 round-trip precision)
   sweep    (λ1, λ2) grid sweep via the coordinator
@@ -138,8 +145,8 @@ COMMANDS:
              packed into one shared wave schedule under --ranks-budget;
              waves may mix grid points. Results are bit-identical to
              solving each point alone. --ranks/--cx/--comega/
-             --ranks-budget/--mem-budget/--gram-block as in solve;
-             --workers is single-node-sweep only)
+             --ranks-budget/--mem-budget/--gram-block/--x-file as in
+             solve; --workers is single-node-sweep only)
            [--per-point]  (dist only: solve every grid point standalone
              — its own screening pass, its own waves; the billing
              baseline and equivalence reference)
@@ -148,6 +155,15 @@ COMMANDS:
              offline model selection)
            [--select-density T] [--out-omega FILE]  (write the estimate
              whose off-diagonal density is closest to T; default 0.1)
+  convert  Write a workload's X to an on-disk HPCX file for later
+           `solve`/`sweep ... --x-file` runs (24-byte header — magic
+           \"HPCX\", version, n, p — then row-major LE f64; written
+           atomically via a temp file, so a failed convert leaves no
+           partial output)
+           --out FILE  + workload options (--workload/--p/--n/--deg/
+             --seed/--config: the same options generate the same X, so
+             a convert + --x-file run is the in-core run's bit-exact
+             twin)
   cost     Analytic cost model (Lemmas 3.1–3.5) over replication grid
            --p N --n N --s F --t F --d F --procs P [--threads N]
            [--variant cov|obs]  [--tile mc,kc,nc]  (prices the dense

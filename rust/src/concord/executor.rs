@@ -59,19 +59,22 @@ use crate::cost::schedule::{
     ScheduledComponent,
 };
 use crate::cost::ProblemShape;
+use crate::io::XSource;
 use crate::linalg::Mat;
 use crate::simnet::{cost::CostSummary, Counters, MachineParams};
 use crate::util::pool::{chunk_ranges, par_map};
 
-use super::screening::extract_columns;
 use super::{fit_single_node, run_distributed, ConcordConfig, ConcordFit};
 
-/// One submitted problem: the data matrix and the solver config its
+/// One submitted problem: the data source and the solver config its
 /// component tasks run under. Job `j` of a batch is `jobs[j]`.
 #[derive(Debug, Clone)]
 pub struct ExecutorJob<'a> {
-    /// Observations (n × p) the component columns are extracted from.
-    pub x: &'a Mat,
+    /// Observations (n × p) the component columns are extracted from —
+    /// in-core or an on-disk HPCX file ([`XSource`]). The backend is a
+    /// schedule-only knob (determinism rule 8): every extraction is
+    /// pure data movement, bit-identical across backends.
+    pub x: XSource<'a>,
     /// Solver configuration for every component of this job.
     pub cfg: ConcordConfig,
     /// Optional row view: `Some(rows)` means this job's data is the
@@ -85,18 +88,19 @@ impl ExecutorJob<'_> {
     /// Materialize one task's sub-matrix — the only copy of this job's
     /// data a running task holds. Element-for-element identical to
     /// extracting the columns from a materialized row-subset copy, so
-    /// the lazy view is invisible downstream (bit-for-bit).
-    pub fn extract(&self, indices: &[usize]) -> Mat {
+    /// the lazy view is invisible downstream (bit-for-bit), and
+    /// identical across backends (an on-disk source streams row panels
+    /// instead of borrowing the matrix). Errs only on on-disk I/O
+    /// failure.
+    pub fn extract(&self, indices: &[usize]) -> Result<Mat> {
         match &self.rows {
-            None => extract_columns(self.x, indices),
-            Some(rows) => {
-                Mat::from_fn(rows.len(), indices.len(), |i, k| self.x.get(rows[i], indices[k]))
-            }
+            None => self.x.extract_columns(indices),
+            Some(rows) => self.x.extract_rows_columns(rows, indices),
         }
     }
 
     /// Sample rows this job's tasks see (the row view's length, or all
-    /// of `x`'s rows).
+    /// of the source's rows).
     pub fn n_rows(&self) -> usize {
         self.rows.as_ref().map(Vec::len).unwrap_or_else(|| self.x.rows())
     }
@@ -282,7 +286,7 @@ impl FabricExecutor {
             let task = &tasks[t];
             let job = &jobs[task.tag.job];
             // One direct sub-matrix at a time; it drops right here.
-            let sub_x = job.extract(&task.indices);
+            let sub_x = job.extract(&task.indices)?;
             slots[t] =
                 Some(solve_task(&job.cfg, &sub_x, task.mem, task.plan, self.machine, None));
             // Unmetered path: only the residency peak is billed.
@@ -299,7 +303,7 @@ impl FabricExecutor {
             for e in entries {
                 let t = index[&e.tag];
                 let job = &jobs[e.tag.job];
-                let sub_x = job.extract(&tasks[t].indices);
+                let sub_x = job.extract(&tasks[t].indices)?;
                 let out =
                     solve_task(&job.cfg, &sub_x, tasks[t].mem, e.plan, self.machine, None);
                 if let Ok(sv) = &out {
@@ -317,7 +321,7 @@ impl FabricExecutor {
                     .entries
                     .iter()
                     .map(|e| jobs[e.tag.job].extract(&tasks[index[&e.tag]].indices))
-                    .collect();
+                    .collect::<Result<Vec<Mat>>>()?;
                 // One scoped pool worker per fabric in the wave:
                 // disjoint rank teams running at the same time.
                 // `par_map` returns in entry order, so billing and
@@ -343,6 +347,11 @@ impl FabricExecutor {
                 cost.merge_sequential(&wave_bill);
             }
         }
+
+        // Bill the source-side residency: the widest panel (or whole
+        // in-core matrix) any job's backend keeps resident to serve
+        // extraction reads (determinism rule 8's residency term).
+        cost.x_panel_words = jobs.iter().map(|j| j.x.panel_words()).max().unwrap_or(0);
 
         let mut outcomes = Vec::with_capacity(tasks.len());
         for (task, slot) in tasks.into_iter().zip(slots) {
@@ -394,7 +403,11 @@ mod tests {
     fn duplicate_tags_are_rejected() {
         let mut rng = Rng::new(1);
         let prob = gen::chain_problem(6, 40, &mut rng);
-        let jobs = [ExecutorJob { x: &prob.x, cfg: ConcordConfig::default(), rows: None }];
+        let jobs = [ExecutorJob {
+            x: XSource::InCore(&prob.x),
+            cfg: ConcordConfig::default(),
+            rows: None,
+        }];
         let tasks = vec![single_node_task(0, 0, vec![0, 1]), single_node_task(0, 0, vec![2, 3])];
         assert!(executor().run(&jobs, tasks).is_err());
     }
@@ -403,7 +416,11 @@ mod tests {
     fn unknown_job_is_rejected() {
         let mut rng = Rng::new(2);
         let prob = gen::chain_problem(6, 40, &mut rng);
-        let jobs = [ExecutorJob { x: &prob.x, cfg: ConcordConfig::default(), rows: None }];
+        let jobs = [ExecutorJob {
+            x: XSource::InCore(&prob.x),
+            cfg: ConcordConfig::default(),
+            rows: None,
+        }];
         let tasks = vec![single_node_task(1, 0, vec![0, 1])];
         assert!(executor().run(&jobs, tasks).is_err());
     }
@@ -417,8 +434,8 @@ mod tests {
         let b = gen::chain_problem(6, 40, &mut rng);
         let cfg = ConcordConfig { lambda1: 0.3, max_iter: 20, ..Default::default() };
         let jobs = [
-            ExecutorJob { x: &a.x, cfg, rows: None },
-            ExecutorJob { x: &b.x, cfg, rows: None },
+            ExecutorJob { x: XSource::InCore(&a.x), cfg, rows: None },
+            ExecutorJob { x: XSource::InCore(&b.x), cfg, rows: None },
         ];
         let tasks = vec![
             single_node_task(0, 0, vec![0, 1, 2]),
@@ -449,7 +466,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let prob = gen::chain_problem(6, 40, &mut rng);
         let cfg = ConcordConfig { lambda1: 0.3, max_iter: 5, ..Default::default() };
-        let jobs = [ExecutorJob { x: &prob.x, cfg, rows: None }];
+        let jobs = [ExecutorJob { x: XSource::InCore(&prob.x), cfg, rows: None }];
         let need = MemFootprint::for_component(40, 3).words();
         let tight = FabricExecutor { mem_budget: need - 1, ..executor() };
         let err = tight.run(&jobs, vec![single_node_task(0, 0, vec![0, 1, 2])]).unwrap_err();
@@ -469,10 +486,10 @@ mod tests {
         let rows: Vec<usize> = vec![3, 7, 11, 19, 20, 31, 44, 58];
         let dense = Mat::from_fn(rows.len(), prob.x.cols(), |i, j| prob.x.get(rows[i], j));
 
-        let lazy_jobs = [ExecutorJob { x: &prob.x, cfg, rows: Some(rows) }];
+        let lazy_jobs = [ExecutorJob { x: XSource::InCore(&prob.x), cfg, rows: Some(rows) }];
         let lazy =
             executor().run(&lazy_jobs, vec![single_node_task(0, 0, vec![1, 2, 4])]).unwrap();
-        let dense_jobs = [ExecutorJob { x: &dense, cfg, rows: None }];
+        let dense_jobs = [ExecutorJob { x: XSource::InCore(&dense), cfg, rows: None }];
         let full =
             executor().run(&dense_jobs, vec![single_node_task(0, 0, vec![1, 2, 4])]).unwrap();
         let bits = |m: &Mat| m.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();

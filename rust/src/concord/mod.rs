@@ -43,8 +43,9 @@ pub mod single_node;
 
 pub use executor::{ExecutorJob, ExecutorRun, ExecutorTask, FabricExecutor, TaskOutcome};
 pub use screened_dist::{
-    fit_screened_distributed, screen_distributed_multi, screen_streamed, MultiScreenPass,
-    ScreenLevel, ScreenedDistFit, ScreenedDistOptions,
+    fit_screened_distributed, fit_screened_distributed_src, screen_distributed_multi,
+    screen_streamed, screen_streamed_src, MultiScreenPass, ScreenLevel, ScreenedDistFit,
+    ScreenedDistOptions,
 };
 pub use screening::{fit_with_screening, fit_with_screening_on, ComponentStat, ScreenedFit};
 pub use single_node::fit_single_node;

@@ -66,6 +66,7 @@ use crate::cost::schedule::{
 };
 use crate::cost::ProblemShape;
 use crate::dist::Layout1D;
+use crate::io::{XDisk, XSource, DEFAULT_PANEL_ROWS};
 use crate::linalg::Mat;
 use crate::simnet::{cost::CostSummary, Comm, Counters, Fabric, MachineParams};
 use crate::util::pool::{chunk_ranges, par_rows_mut};
@@ -253,25 +254,74 @@ pub fn screen_streamed(
     threads: usize,
     gram_block: usize,
 ) -> MultiScreenPass {
+    screen_streamed_src(XSource::InCore(x), thresholds, p_ranks, machine, threads, gram_block)
+        .expect("in-core screening cannot fail")
+}
+
+/// Effective gram panel height of an on-disk pass: `gram_block` when
+/// given, the default read panel otherwise — on disk there is never a
+/// whole-matrix slab, so "unstreamed" still means one panel.
+fn disk_gram_block(gram_block: usize, n: usize) -> usize {
+    if gram_block == 0 {
+        DEFAULT_PANEL_ROWS.min(n)
+    } else {
+        gram_block.min(n)
+    }
+}
+
+/// [`screen_streamed`] over either X backend (determinism rule 8: the
+/// backend is a schedule-only knob, so labelings, degrees, diagonal
+/// and counters are bit-identical across `InCore`/`OnDisk` — the disk
+/// gram reads ascending panels into the same shared accumulation
+/// kernel). Only the modeled residencies move: `peak_mem_words` prices
+/// the effective panel and `x_panel_words` the source's own footprint
+/// (the whole backing matrix in core, one panel on disk). Errors are
+/// disk I/O only — the in-core arm cannot fail.
+pub fn screen_streamed_src(
+    x: XSource<'_>,
+    thresholds: &[f64],
+    p_ranks: usize,
+    machine: MachineParams,
+    threads: usize,
+    gram_block: usize,
+) -> Result<MultiScreenPass> {
     let p = x.cols();
     let n = x.rows();
     let t_levels = thresholds.len();
     let layout = Layout1D::new(p, p_ranks);
-    let shared = Arc::new(x.clone());
+    let src = ScreenSource::from_xsource(x);
     let thr: Vec<f64> = thresholds.to_vec();
     let run = Fabric::with_machine(p_ranks, machine)
-        .run(move |comm| screen_rank_multi(comm, &shared, &thr, &layout, threads, gram_block));
+        .run(move |comm| screen_rank_multi(comm, &src, &thr, &layout, threads, gram_block));
     let mut cost = run.summary();
     // Modeled host residency of the pass: the gram rows (p² words
     // across the simulated ranks) plus the X working set — all n rows
-    // in-core, one panel when streamed. A schedule-only model: it
-    // never feeds back into plans or results.
-    let x_resident = if gram_block == 0 { n } else { gram_block.min(n) };
+    // in-core, one panel when streamed or read from disk. A
+    // schedule-only model: it never feeds back into plans or results.
+    let x_resident = match x {
+        XSource::InCore(_) => {
+            if gram_block == 0 {
+                n
+            } else {
+                gram_block.min(n)
+            }
+        }
+        XSource::OnDisk(_) => disk_gram_block(gram_block, n),
+    };
     cost.peak_mem_words = ((x_resident * p) as u64) + ((p * p) as u64);
+    // Source-side residency: in core the backing matrix itself stays
+    // resident whatever panel the gram walks; on disk only the
+    // effective panel ever exists in memory.
+    cost.x_panel_words = match x {
+        XSource::InCore(_) => (n * p) as u64,
+        XSource::OnDisk(_) => (disk_gram_block(gram_block, n) * p) as u64,
+    };
+    let results: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> =
+        run.results.into_iter().collect::<Result<_>>()?;
 
     let mut degrees = vec![0.0f64; t_levels * p];
     let mut diag = vec![0.0f64; p];
-    for (rank, (_, deg, dg)) in run.results.iter().enumerate() {
+    for (rank, (_, deg, dg)) in results.iter().enumerate() {
         let (rs, re) = layout.range(rank);
         let rows = re - rs;
         diag[rs..re].copy_from_slice(dg);
@@ -281,7 +331,7 @@ pub fn screen_streamed(
     }
     // Every rank holds the same merged labelings; rank 0's are
     // canonical.
-    let merged = &run.results[0].0;
+    let merged = &results[0].0;
     let levels = (0..t_levels)
         .map(|k| {
             let raw: Vec<usize> =
@@ -292,7 +342,7 @@ pub fn screen_streamed(
             }
         })
         .collect();
-    MultiScreenPass { levels, diag, cost }
+    Ok(MultiScreenPass { levels, diag, cost })
 }
 
 /// Single-threshold screening: the one-level special case.
@@ -315,34 +365,77 @@ fn screen_distributed(
     }
 }
 
+/// The owned X handle a screening rank closure captures:
+/// [`Fabric::run`] needs `'static`, so the borrowed [`XSource`] is
+/// promoted — one shared `Arc` clone of the in-core matrix for the
+/// whole fabric, or the fd-less [`XDisk`] handle (each rank opens its
+/// own reads).
+#[derive(Clone)]
+enum ScreenSource {
+    InCore(Arc<Mat>),
+    OnDisk(XDisk),
+}
+
+impl ScreenSource {
+    fn from_xsource(x: XSource<'_>) -> ScreenSource {
+        match x {
+            XSource::InCore(m) => ScreenSource::InCore(Arc::new(m.clone())),
+            XSource::OnDisk(d) => ScreenSource::OnDisk(d.clone()),
+        }
+    }
+
+    fn rows(&self) -> usize {
+        match self {
+            ScreenSource::InCore(x) => x.rows(),
+            ScreenSource::OnDisk(d) => d.rows(),
+        }
+    }
+
+    fn cols(&self) -> usize {
+        match self {
+            ScreenSource::InCore(x) => x.cols(),
+            ScreenSource::OnDisk(d) => d.cols(),
+        }
+    }
+}
+
 /// One screening rank: local gram rows once → per-level union-find over
 /// the shared thresholded edge list → one allgather, merged per level.
 /// Returns (per-level merged labels, per-level row degrees, row s_ii),
-/// each flattened level-major.
+/// each flattened level-major. `Err` only on disk I/O — the in-core
+/// source cannot fail.
 fn screen_rank_multi(
     comm: &mut Comm,
-    x: &Arc<Mat>,
+    src: &ScreenSource,
     thresholds: &[f64],
     layout: &Layout1D,
     threads: usize,
     gram_block: usize,
-) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
-    let p = x.cols();
-    let n = x.rows();
+) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+    let p = src.cols();
+    let n = src.rows();
     let t_levels = thresholds.len();
     let (rs, re) = layout.range(comm.rank());
     let rows = re - rs;
 
     // My block rows of S = XᵀX/n — formed once for every level. The
-    // flop count is a machine fact: identical on both gram paths
-    // (the panel width is a schedule-only knob, rule 7).
+    // flop count is a machine fact: identical on every gram path
+    // (panel width and X backend are schedule-only knobs, rules 7/8).
     comm.count_flops_dense(2 * (rows * n * p) as u64);
-    let mut s_rows = if gram_block == 0 || gram_block >= n {
-        // In-core: materialize the transposed slab, blocked kernel.
-        let xt_rows = x.col_block(rs, re).transpose(); // rows × n
-        xt_rows.matmul_mt(x, threads) // rows × p
-    } else {
-        gram_rows_streamed(x, rs, re, gram_block, threads)
+    let mut s_rows = match src {
+        ScreenSource::InCore(x) => {
+            if gram_block == 0 || gram_block >= n {
+                // In-core: materialize the transposed slab, blocked
+                // kernel.
+                let xt_rows = x.col_block(rs, re).transpose(); // rows × n
+                xt_rows.matmul_mt(x, threads) // rows × p
+            } else {
+                gram_rows_streamed(x, rs, re, gram_block, threads)
+            }
+        }
+        ScreenSource::OnDisk(xd) => {
+            gram_rows_streamed_disk(xd, rs, re, disk_gram_block(gram_block, n), threads)?
+        }
     };
     s_rows.scale(1.0 / n.max(1) as f64);
 
@@ -402,18 +495,44 @@ fn screen_rank_multi(
         }
         merged.extend((0..p).map(|i| uf.find(i) as f64));
     }
-    (merged, degrees, diag)
+    Ok((merged, degrees, diag))
+}
+
+/// The shared panel kernel every streamed gram path accumulates
+/// through: add `panelᵀ[:, rs..rs+rows] · panel` into `out` (the
+/// rank's gram rows, partitioned across the worker `ranges`). Each
+/// output element is written by exactly one worker and receives its
+/// `x[k][rs+r] · x[k][j]` terms in ascending-k order within the panel;
+/// callers feed panels in ascending order and storing/loading the f64
+/// partial between panels is exact — so the in-core streamed and
+/// on-disk grams are bit-identical to the `transpose + matmul_mt` path
+/// at every `(block, threads)` and on either backend (determinism
+/// rules 1, 7 and 8).
+fn gram_panel_accumulate(
+    out: &mut [f64],
+    panel: &[f64],
+    rs: usize,
+    p: usize,
+    ranges: &[(usize, usize)],
+) {
+    let panel_rows = panel.len() / p;
+    par_rows_mut(out, p, ranges, |_, r0, r1, chunk| {
+        for r in r0..r1 {
+            let acc = &mut chunk[(r - r0) * p..(r - r0 + 1) * p];
+            for k in 0..panel_rows {
+                let row = &panel[k * p..(k + 1) * p];
+                let xa = row[rs + r];
+                for (o, &xb) in acc.iter_mut().zip(row) {
+                    *o += xa * xb;
+                }
+            }
+        }
+    });
 }
 
 /// Row-panel streamed gram rows: `S_rows = (X[:, rs..re])ᵀ · X`,
-/// accumulated over ascending panels of `block` sample rows, output
-/// rows partitioned across `threads` workers. **Bit-identical** to the
-/// in-core `transpose + matmul_mt` path at every `(block, threads)`:
-/// each output element is written by exactly one worker and receives
-/// its `x[k][rs+r] · x[k][j]` terms in the same ascending-k order the
-/// naive kernel uses — panel boundaries (like cache blocking,
-/// determinism rule 1) only partition that loop, and storing/loading
-/// the f64 partial between panels is exact. Unlike the in-core path no
+/// accumulated over ascending panels of `block` sample rows through
+/// [`gram_panel_accumulate`]. Unlike the in-core `matmul_mt` path no
 /// `rows × n` transposed slab is materialized: one `block`-row panel
 /// of X is the entire X working set (rule 7: a schedule-only knob).
 fn gram_rows_streamed(x: &Mat, rs: usize, re: usize, block: usize, threads: usize) -> Mat {
@@ -422,24 +541,46 @@ fn gram_rows_streamed(x: &Mat, rs: usize, re: usize, block: usize, threads: usiz
     let rows = re - rs;
     let mut s_rows = Mat::zeros(rows, p);
     let ranges = chunk_ranges(rows, threads.max(1), 1);
-    par_rows_mut(s_rows.data_mut(), p, &ranges, |_, r0, r1, out| {
-        let mut k0 = 0usize;
-        while k0 < n {
-            let k1 = (k0 + block).min(n);
-            for r in r0..r1 {
-                let acc = &mut out[(r - r0) * p..(r - r0 + 1) * p];
-                for k in k0..k1 {
-                    let xa = x.get(k, rs + r);
-                    let xk = &x.data()[k * p..(k + 1) * p];
-                    for (o, &xb) in acc.iter_mut().zip(xk) {
-                        *o += xa * xb;
-                    }
-                }
-            }
-            k0 = k1;
-        }
-    });
+    let step = block.max(1);
+    let mut k0 = 0usize;
+    while k0 < n {
+        let k1 = (k0 + step).min(n);
+        gram_panel_accumulate(s_rows.data_mut(), &x.data()[k0 * p..k1 * p], rs, p, &ranges);
+        k0 = k1;
+    }
     s_rows
+}
+
+/// [`gram_rows_streamed`] reading its panels from an HPCX file: the
+/// same ascending-panel walk over [`gram_panel_accumulate`], with each
+/// panel read into one reused buffer — the X working set is one
+/// `block × p` panel however large n is. Bit-identical to the in-core
+/// paths (rule 8): the read is pure data movement into the same
+/// kernel.
+fn gram_rows_streamed_disk(
+    xd: &XDisk,
+    rs: usize,
+    re: usize,
+    block: usize,
+    threads: usize,
+) -> Result<Mat> {
+    let n = xd.rows();
+    let p = xd.cols();
+    let rows = re - rs;
+    let mut s_rows = Mat::zeros(rows, p);
+    let ranges = chunk_ranges(rows, threads.max(1), 1);
+    let step = block.max(1);
+    let mut f = xd.open_file()?;
+    let mut buf = vec![0.0f64; step.min(n.max(1)) * p];
+    let mut k0 = 0usize;
+    while k0 < n {
+        let k1 = (k0 + step).min(n);
+        let panel = &mut buf[..(k1 - k0) * p];
+        xd.read_rows_into(&mut f, k0, k1, panel)?;
+        gram_panel_accumulate(s_rows.data_mut(), panel, rs, p, &ranges);
+        k0 = k1;
+    }
+    Ok(s_rows)
 }
 
 /// Resolve the global concurrent rank budget: `cfg.ranks_budget`, with
@@ -627,16 +768,30 @@ pub fn fit_screened_distributed(
     cfg: &ConcordConfig,
     opts: &ScreenedDistOptions,
 ) -> Result<ScreenedDistFit> {
+    fit_screened_distributed_src(XSource::InCore(x), cfg, opts)
+}
+
+/// [`fit_screened_distributed`] over either X backend — the CLI's
+/// `--x-file` lands here. Determinism rule 8: the backend is a
+/// schedule-only knob, so the estimate, objective and every metered
+/// counter are bit-for-bit those of the in-core run; only the modeled
+/// source residency (`x_panel_words`, and `peak_mem_words` of the
+/// screening pass) moves. `rust/tests/out_of_core.rs` is the wall.
+pub fn fit_screened_distributed_src(
+    x: XSource<'_>,
+    cfg: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<ScreenedDistFit> {
     let p = x.cols();
     let setup = batch_setup(p, cfg, opts)?;
-    let mut pass = screen_streamed(
+    let mut pass = screen_streamed_src(
         x,
         std::slice::from_ref(&cfg.lambda1),
         setup.screen_ranks,
         opts.machine,
         setup.threads,
         opts.gram_block,
-    );
+    )?;
     let level = pass.levels.pop().expect("one threshold, one level");
 
     let tasks = plan_job_tasks(0, &level, x.rows(), cfg, opts);

@@ -14,6 +14,7 @@ use anyhow::Result;
 use crate::concord::executor::{ExecutorJob, FabricExecutor, TaskOutcome};
 use crate::concord::screened_dist::{batch_setup, plan_job_tasks, reassemble_job, solves_view};
 use crate::concord::{fit_single_node, screen_streamed, ConcordConfig, ScreenedDistOptions};
+use crate::io::XSource;
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::simnet::cost::{CostSummary, GridBill};
@@ -170,7 +171,24 @@ pub fn stability_selection_dist(
     cfg: &StabilityConfig,
     opts: &ScreenedDistOptions,
 ) -> Result<StabilityDistOutcome> {
-    let (n, p) = x.shape();
+    stability_selection_dist_src(XSource::InCore(x), base, cfg, opts)
+}
+
+/// [`stability_selection_dist`] over either X backend — the CLI's
+/// stability path with `--x-file` lands here. Each subsample is
+/// materialized through [`XSource::subsample`] (a lazy row gather: on
+/// disk only the m × p subsample and one read row are ever resident)
+/// and the component solves rebuild their sub-matrices through the
+/// same source. Determinism rule 8: the gathered rows are bit-for-bit
+/// the in-core rows, so frequencies, edges and counters are
+/// backend-invariant.
+pub fn stability_selection_dist_src(
+    x: XSource<'_>,
+    base: &ConcordConfig,
+    cfg: &StabilityConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<StabilityDistOutcome> {
+    let (n, p) = (x.rows(), x.cols());
     let m = ((n as f64) * cfg.fraction).round().max(2.0) as usize;
     let setup = batch_setup(p, base, opts)?;
 
@@ -189,7 +207,7 @@ pub fn stability_selection_dist(
     let mut tasks_per_job = Vec::with_capacity(cfg.subsamples);
     for b in 0..cfg.subsamples {
         let rows = subsample_rows(n, m, cfg.seed, b);
-        let sub = Mat::from_fn(m, p, |i, j| x.get(rows[i], j));
+        let sub = x.subsample(&rows)?;
         let mut pass = screen_streamed(
             &sub,
             std::slice::from_ref(&base.lambda1),

@@ -16,9 +16,10 @@ use anyhow::Result;
 use crate::concord::executor::{ExecutorJob, ExecutorTask, FabricExecutor, TaskOutcome};
 use crate::concord::screened_dist::{batch_setup, plan_job_tasks, reassemble_job, solves_view};
 use crate::concord::screening::{fit_with_screening_on, nested_components, Components};
-use crate::concord::{fit_screened_distributed, fit_single_node, ConcordConfig, ConcordFit};
-use crate::concord::{screen_streamed, ScreenedDistOptions};
+use crate::concord::{fit_screened_distributed_src, fit_single_node, ConcordConfig, ConcordFit};
+use crate::concord::{screen_streamed_src, ScreenedDistOptions};
 use crate::cost::schedule::ConcurrentSchedule;
+use crate::io::XSource;
 use crate::linalg::Mat;
 use crate::runtime::native;
 use crate::simnet::cost::{CostSummary, GridBill};
@@ -208,7 +209,8 @@ pub enum GridSchedule {
     /// [`PerPoint`]: GridSchedule::PerPoint
     #[default]
     Packed,
-    /// Every grid point runs standalone ([`fit_screened_distributed`]):
+    /// Every grid point runs standalone
+    /// ([`fit_screened_distributed`](crate::concord::fit_screened_distributed)):
     /// its own screening pass, its own waves, points one after another —
     /// the pre-amortization behavior, kept as the billing baseline and
     /// equivalence reference.
@@ -244,10 +246,26 @@ pub struct ScreenedDistSweepOutcome {
 /// of [`run_sweep_screened`]'s nested-components reuse) and one shared
 /// wave schedule over every (grid point, component) pair. Estimates are
 /// reassembled per job in job order and are bit-identical to running
-/// [`fit_screened_distributed`] point by point, at any budget and
-/// thread count (`rust/tests/grid_schedule.rs`).
+/// [`fit_screened_distributed`](crate::concord::fit_screened_distributed)
+/// point by point, at any budget and thread count
+/// (`rust/tests/grid_schedule.rs`).
 pub fn run_sweep_screened_dist(
     x: &Mat,
+    grid: &GridSpec,
+    base: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+    mode: GridSchedule,
+) -> Result<ScreenedDistSweepOutcome> {
+    run_sweep_screened_dist_src(XSource::InCore(x), grid, base, opts, mode)
+}
+
+/// [`run_sweep_screened_dist`] over either X backend — the CLI's
+/// `sweep --mode dist --x-file` lands here. Determinism rule 8: the
+/// backend is a schedule-only knob, so every grid point's estimate,
+/// density and metered counters are bit-for-bit the in-core sweep's;
+/// only the modeled source residency moves.
+pub fn run_sweep_screened_dist_src(
+    x: XSource<'_>,
     grid: &GridSpec,
     base: &ConcordConfig,
     opts: &ScreenedDistOptions,
@@ -261,7 +279,7 @@ pub fn run_sweep_screened_dist(
 
 /// The reference schedule: every grid point standalone, in job order.
 fn sweep_dist_per_point(
-    x: &Mat,
+    x: XSource<'_>,
     grid: &GridSpec,
     base: &ConcordConfig,
     opts: &ScreenedDistOptions,
@@ -271,7 +289,7 @@ fn sweep_dist_per_point(
     let mut schedules = Vec::new();
     let mut bill = GridBill::default();
     for job in grid.jobs(base) {
-        let out = fit_screened_distributed(x, &job.cfg, opts)?;
+        let out = fit_screened_distributed_src(x, &job.cfg, opts)?;
         bill.screen.merge_sequential(&out.screen_cost);
         bill.waves.merge_sequential(&out.solve_cost);
         bill.per_job.push(solves_view(&out.solves));
@@ -288,7 +306,7 @@ fn sweep_dist_per_point(
 /// The packed schedule: one amortized screening pass + one shared
 /// cross-job wave schedule for the whole grid.
 fn sweep_dist_packed(
-    x: &Mat,
+    x: XSource<'_>,
     grid: &GridSpec,
     base: &ConcordConfig,
     opts: &ScreenedDistOptions,
@@ -297,14 +315,14 @@ fn sweep_dist_packed(
 
     // One distributed gram + one metered labeling collective for the
     // whole λ₁ list; the λ₂ axis reuses its λ₁'s level for free.
-    let pass = screen_streamed(
+    let pass = screen_streamed_src(
         x,
         &grid.lambda1,
         setup.screen_ranks,
         opts.machine,
         setup.threads,
         opts.gram_block,
-    );
+    )?;
 
     // Plan each λ₁ level once — plans depend on the level (and the
     // shared variant/threads), never on λ₂ — then re-tag the level's

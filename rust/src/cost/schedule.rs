@@ -43,6 +43,16 @@
 //! error — shrinking ranks cannot shrink data. Both budgets are
 //! schedule-only knobs (determinism rule 7): they move *when* a fabric
 //! launches, never what it computes.
+//!
+//! The *source* of X is billed separately: a [`MemFootprint`] prices
+//! what a task keeps resident, while `CostSummary::x_panel_words`
+//! prices what the X backend itself holds to serve the reads — the
+//! whole backing matrix for an in-core run, one read panel for an
+//! on-disk one ([`crate::io::XSource::panel_words`]). It maxes (never
+//! sums) across both merge directions because the source is shared by
+//! everything that reads it; the X backend is a schedule-only knob too
+//! (determinism rule 8), so only this residency term distinguishes an
+//! on-disk bill from its bit-identical in-core twin.
 
 use anyhow::{bail, Result};
 

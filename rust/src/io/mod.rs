@@ -1,0 +1,400 @@
+//! Out-of-core X: the on-disk sample format and the [`XSource`] seam.
+//!
+//! HP-CONCORD targets data "often on the order of terabytes" (paper
+//! §1), so the full n×p observation matrix must never need to be
+//! resident. This module provides the two halves of that:
+//!
+//! - **The `HPCX` binary format** — a 24-byte header (magic `HPCX`,
+//!   u32 LE version, u64 LE n, u64 LE p) followed by the n·p samples
+//!   as row-major little-endian f64. [`write_x`] writes it atomically
+//!   (temp file + rename, so a failed write never leaves a partial
+//!   output file); [`XDisk::open`] validates magic, version and the
+//!   n·p/file-length consistency before any read. The CLI's `convert`
+//!   subcommand writes it; `--x-file` / `solver.x_file` reads it.
+//! - **[`XSource`]** — the backend enum every consumer of X reads
+//!   through: `InCore(&Mat)` is today's zero-copy behavior, `OnDisk`
+//!   reads row panels via `std::fs::File` + positioned reads (no new
+//!   crates). The streamed screening gram, the executor's per-wave
+//!   column extraction and the stability coordinator's subsample row
+//!   views all route through it, so an on-disk run's peak residency is
+//!   panels + per-wave sub-matrices instead of the whole matrix.
+//!
+//! **Determinism rule 8** (see ARCHITECTURE.md): the X backend is a
+//! *schedule-only* knob — every extraction is pure data movement and
+//! the on-disk gram accumulates the same products in the same
+//! ascending-k order as the in-core pass, so on-disk and in-core runs
+//! are bit-identical in estimates, objectives and metered counters.
+//! Only the modeled source residency (`CostSummary::x_panel_words`)
+//! moves. `rust/tests/out_of_core.rs` is the wall.
+
+use std::fs::{self, File};
+use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::Mat;
+
+/// The format magic: the first four bytes of every HPCX file.
+pub const X_MAGIC: [u8; 4] = *b"HPCX";
+
+/// Current format version (bumped on any layout change).
+pub const X_VERSION: u32 = 1;
+
+/// Header size in bytes: magic (4) + version (4) + n (8) + p (8).
+pub const X_HEADER_BYTES: u64 = 24;
+
+/// Default row-panel height for on-disk reads (gram streaming when no
+/// `--gram-block` is given, and column extraction). A throughput /
+/// residency knob only — reads are pure data movement, so results are
+/// bit-identical at any panel height (determinism rule 8).
+pub const DEFAULT_PANEL_ROWS: usize = 256;
+
+/// Temp-file sibling used by [`write_x`] so a failed write never
+/// leaves a partial file under the target name.
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Write `x` to `path` in the HPCX format, atomically: the bytes go to
+/// a `.tmp` sibling first and are renamed into place only on success,
+/// so an interrupted or failed write leaves no partial output file.
+pub fn write_x(path: &Path, x: &Mat) -> Result<()> {
+    let tmp = tmp_path(path);
+    let written = (|| -> Result<()> {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("creating {} for the HPCX write", tmp.display()))?;
+        let mut header = Vec::with_capacity(X_HEADER_BYTES as usize);
+        header.extend_from_slice(&X_MAGIC);
+        header.extend_from_slice(&X_VERSION.to_le_bytes());
+        header.extend_from_slice(&(x.rows() as u64).to_le_bytes());
+        header.extend_from_slice(&(x.cols() as u64).to_le_bytes());
+        f.write_all(&header).context("writing the HPCX header")?;
+        // Row-major LE f64 payload, buffered one row panel at a time.
+        let p = x.cols();
+        let mut buf = Vec::with_capacity(DEFAULT_PANEL_ROWS.min(x.rows().max(1)) * p * 8);
+        let mut r0 = 0;
+        while r0 < x.rows() {
+            let r1 = (r0 + DEFAULT_PANEL_ROWS).min(x.rows());
+            buf.clear();
+            for &v in &x.data()[r0 * p..r1 * p] {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&buf).context("writing HPCX row panels")?;
+            r0 = r1;
+        }
+        f.sync_all().context("syncing the HPCX file")?;
+        Ok(())
+    })();
+    match written {
+        Ok(()) => fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} into place", tmp.display())),
+        Err(e) => {
+            let _ = fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+/// A validated handle to an on-disk HPCX file. Holds the path and the
+/// header dimensions, **not** an open file descriptor — so it is
+/// `Clone + Send + Sync` for free and each read opens, seeks and reads
+/// positionally (row panels are contiguous in the row-major layout).
+#[derive(Debug, Clone)]
+pub struct XDisk {
+    path: PathBuf,
+    n: usize,
+    p: usize,
+}
+
+impl XDisk {
+    /// Open and validate an HPCX file: magic, version, and the
+    /// n·p/file-length consistency are all checked up front so every
+    /// later panel read is a plain seek + `read_exact`.
+    pub fn open(path: &Path) -> Result<XDisk> {
+        let mut f = File::open(path)
+            .with_context(|| format!("opening x-file {}", path.display()))?;
+        let mut header = [0u8; X_HEADER_BYTES as usize];
+        f.read_exact(&mut header).map_err(|e| {
+            anyhow!("{}: truncated header (want {X_HEADER_BYTES} bytes): {e}", path.display())
+        })?;
+        if header[..4] != X_MAGIC {
+            bail!(
+                "{}: bad magic {:?} (want {:?} — not an HPCX x-file?)",
+                path.display(),
+                &header[..4],
+                X_MAGIC
+            );
+        }
+        let version = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+        if version != X_VERSION {
+            bail!("{}: unsupported HPCX version {version} (want {X_VERSION})", path.display());
+        }
+        let n = u64::from_le_bytes(header[8..16].try_into().expect("8-byte slice"));
+        let p = u64::from_le_bytes(header[16..24].try_into().expect("8-byte slice"));
+        let words = n
+            .checked_mul(p)
+            .and_then(|w| w.checked_mul(8))
+            .ok_or_else(|| anyhow!("{}: header dims n={n} p={p} overflow", path.display()))?;
+        let want = X_HEADER_BYTES + words;
+        let len = f.metadata().context("stat of the x-file")?.len();
+        if len != want {
+            bail!(
+                "{}: file length {len} bytes does not match header n={n} p={p} \
+                 (want {want} = {X_HEADER_BYTES} header + n·p·8 payload)",
+                path.display()
+            );
+        }
+        let n = usize::try_from(n)
+            .map_err(|_| anyhow!("{}: n={n} exceeds usize", path.display()))?;
+        let p = usize::try_from(p)
+            .map_err(|_| anyhow!("{}: p={p} exceeds usize", path.display()))?;
+        Ok(XDisk { path: path.to_path_buf(), n, p })
+    }
+
+    /// Sample count n (rows of X).
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    /// Variable count p (columns of X).
+    pub fn cols(&self) -> usize {
+        self.p
+    }
+
+    /// The file this handle reads from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub(crate) fn open_file(&self) -> Result<File> {
+        File::open(&self.path)
+            .with_context(|| format!("reopening x-file {}", self.path.display()))
+    }
+
+    pub(crate) fn read_rows_into(
+        &self,
+        f: &mut File,
+        r0: usize,
+        r1: usize,
+        out: &mut [f64],
+    ) -> Result<()> {
+        debug_assert!(r0 <= r1 && r1 <= self.n);
+        debug_assert_eq!(out.len(), (r1 - r0) * self.p);
+        let offset = X_HEADER_BYTES + (r0 * self.p * 8) as u64;
+        f.seek(SeekFrom::Start(offset)).context("seeking to an x-file row panel")?;
+        let mut bytes = vec![0u8; out.len() * 8];
+        f.read_exact(&mut bytes).with_context(|| {
+            format!("reading rows {r0}..{r1} of x-file {}", self.path.display())
+        })?;
+        for (v, chunk) in out.iter_mut().zip(bytes.chunks_exact(8)) {
+            *v = f64::from_le_bytes(chunk.try_into().expect("8-byte chunk"));
+        }
+        Ok(())
+    }
+
+    /// Read the contiguous row panel `r0..r1` as a `(r1-r0) × p` matrix
+    /// (one positioned read; bit-identical to the in-core rows).
+    pub fn read_rows(&self, r0: usize, r1: usize) -> Result<Mat> {
+        assert!(r0 <= r1 && r1 <= self.n, "panel {r0}..{r1} out of 0..{}", self.n);
+        let mut data = vec![0.0f64; (r1 - r0) * self.p];
+        let mut f = self.open_file()?;
+        self.read_rows_into(&mut f, r0, r1, &mut data)?;
+        Ok(Mat::from_vec(r1 - r0, self.p, data))
+    }
+}
+
+/// Where X lives: the seam every consumer of the observation matrix
+/// reads through. `InCore` is today's zero-copy behavior; `OnDisk`
+/// streams row panels from an HPCX file so the full matrix is never
+/// resident. The backend is a schedule-only knob (determinism rule 8):
+/// both arms produce bit-identical extractions and grams — only the
+/// modeled source residency ([`XSource::panel_words`]) differs.
+#[derive(Debug, Clone, Copy)]
+pub enum XSource<'a> {
+    /// The whole matrix is resident; every view borrows it.
+    InCore(&'a Mat),
+    /// Row panels are read on demand from an on-disk HPCX file.
+    OnDisk(&'a XDisk),
+}
+
+impl<'a> XSource<'a> {
+    /// Sample count n.
+    pub fn rows(&self) -> usize {
+        match self {
+            XSource::InCore(x) => x.rows(),
+            XSource::OnDisk(d) => d.rows(),
+        }
+    }
+
+    /// Variable count p.
+    pub fn cols(&self) -> usize {
+        match self {
+            XSource::InCore(x) => x.cols(),
+            XSource::OnDisk(d) => d.cols(),
+        }
+    }
+
+    /// Words of X this backend keeps resident to serve reads: the
+    /// whole matrix for `InCore`, one [`DEFAULT_PANEL_ROWS`]-row panel
+    /// for `OnDisk`. Billed into `CostSummary::x_panel_words` (max
+    /// across merges — the source is shared, residencies coexist).
+    pub fn panel_words(&self) -> u64 {
+        match self {
+            XSource::InCore(x) => (x.rows() * x.cols()) as u64,
+            XSource::OnDisk(d) => (DEFAULT_PANEL_ROWS.min(d.rows()) * d.cols()) as u64,
+        }
+    }
+
+    /// Gather the columns `idx` over every row: the executor's per-wave
+    /// sub-matrix extraction. Pure data movement — element-for-element
+    /// equal to `extract_columns` on the in-core matrix. The on-disk
+    /// arm streams [`DEFAULT_PANEL_ROWS`]-row panels so residency is
+    /// one panel plus the extracted sub-matrix.
+    pub fn extract_columns(&self, idx: &[usize]) -> Result<Mat> {
+        match self {
+            XSource::InCore(x) => {
+                Ok(Mat::from_fn(x.rows(), idx.len(), |r, k| x.get(r, idx[k])))
+            }
+            XSource::OnDisk(d) => {
+                let (n, p) = (d.rows(), d.cols());
+                let mut out = Mat::zeros(n, idx.len());
+                if idx.is_empty() {
+                    return Ok(out);
+                }
+                let mut f = d.open_file()?;
+                let panel = DEFAULT_PANEL_ROWS.min(n).max(1);
+                let mut buf = vec![0.0f64; panel * p];
+                let mut r0 = 0;
+                while r0 < n {
+                    let r1 = (r0 + panel).min(n);
+                    let rows = &mut buf[..(r1 - r0) * p];
+                    d.read_rows_into(&mut f, r0, r1, rows)?;
+                    for r in r0..r1 {
+                        let src = &rows[(r - r0) * p..(r - r0 + 1) * p];
+                        for (k, &j) in idx.iter().enumerate() {
+                            out.set(r, k, src[j]);
+                        }
+                    }
+                    r0 = r1;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Gather `(rows[i], idx[k])` — the executor's lazy subsample view
+    /// (stability selection's row-subsampled component solves). The
+    /// on-disk arm reads each requested row once, in the given order.
+    pub fn extract_rows_columns(&self, rows: &[usize], idx: &[usize]) -> Result<Mat> {
+        match self {
+            XSource::InCore(x) => {
+                Ok(Mat::from_fn(rows.len(), idx.len(), |i, k| x.get(rows[i], idx[k])))
+            }
+            XSource::OnDisk(d) => {
+                let p = d.cols();
+                let mut out = Mat::zeros(rows.len(), idx.len());
+                if rows.is_empty() || idx.is_empty() {
+                    return Ok(out);
+                }
+                let mut f = d.open_file()?;
+                let mut buf = vec![0.0f64; p];
+                for (i, &r) in rows.iter().enumerate() {
+                    assert!(r < d.rows(), "row {r} out of 0..{}", d.rows());
+                    d.read_rows_into(&mut f, r, r + 1, &mut buf)?;
+                    for (k, &j) in idx.iter().enumerate() {
+                        out.set(i, k, buf[j]);
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Materialize the full-width row subsample `rows` as an m × p
+    /// matrix (the stability coordinator's per-subsample screening
+    /// input). Bit-identical to gathering the same rows in core.
+    pub fn subsample(&self, rows: &[usize]) -> Result<Mat> {
+        match self {
+            XSource::InCore(x) => {
+                Ok(Mat::from_fn(rows.len(), x.cols(), |i, j| x.get(rows[i], j)))
+            }
+            XSource::OnDisk(d) => {
+                let p = d.cols();
+                let mut out = Mat::zeros(rows.len(), p);
+                let mut f = d.open_file()?;
+                let mut buf = vec![0.0f64; p];
+                for (i, &r) in rows.iter().enumerate() {
+                    assert!(r < d.rows(), "row {r} out of 0..{}", d.rows());
+                    d.read_rows_into(&mut f, r, r + 1, &mut buf)?;
+                    out.row_mut(i).copy_from_slice(&buf);
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn temp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hpcx_io_{}_{name}.xbin", std::process::id()))
+    }
+
+    fn random_mat(n: usize, p: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, p, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let x = random_mat(37, 5, 0xC0FFEE);
+        let path = temp("round_trip");
+        write_x(&path, &x).unwrap();
+        let d = XDisk::open(&path).unwrap();
+        assert_eq!((d.rows(), d.cols()), (37, 5));
+        let back = d.read_rows(0, 37).unwrap();
+        for (a, b) in x.data().iter().zip(back.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn in_core_and_on_disk_views_agree() {
+        let x = random_mat(23, 6, 7);
+        let path = temp("views");
+        write_x(&path, &x).unwrap();
+        let d = XDisk::open(&path).unwrap();
+        let idx = [4usize, 0, 5];
+        let rows = [22usize, 0, 11];
+        let a = XSource::InCore(&x);
+        let b = XSource::OnDisk(&d);
+        let (ca, cb) = (a.extract_columns(&idx).unwrap(), b.extract_columns(&idx).unwrap());
+        assert_eq!(ca.data(), cb.data());
+        let (ra, rb) = (
+            a.extract_rows_columns(&rows, &idx).unwrap(),
+            b.extract_rows_columns(&rows, &idx).unwrap(),
+        );
+        assert_eq!(ra.data(), rb.data());
+        let (sa, sb) = (a.subsample(&rows).unwrap(), b.subsample(&rows).unwrap());
+        assert_eq!(sa.data(), sb.data());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn panel_words_are_panels_not_the_matrix() {
+        let x = random_mat(DEFAULT_PANEL_ROWS + 44, 3, 9);
+        let path = temp("panel_words");
+        write_x(&path, &x).unwrap();
+        let d = XDisk::open(&path).unwrap();
+        assert_eq!(XSource::InCore(&x).panel_words(), ((DEFAULT_PANEL_ROWS + 44) * 3) as u64);
+        assert_eq!(XSource::OnDisk(&d).panel_words(), (DEFAULT_PANEL_ROWS * 3) as u64);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -99,6 +99,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod dist;
 pub mod gen;
+pub mod io;
 pub mod linalg;
 pub mod metrics;
 pub mod rng;

@@ -11,13 +11,14 @@ use anyhow::{anyhow, Result};
 
 use hpconcord::cli::{Args, USAGE};
 use hpconcord::concord::{
-    fit_distributed, fit_screened_distributed, fit_single_node, fit_with_screening,
-    ConcordConfig, ScreenedDistOptions, Variant,
+    fit_distributed, fit_screened_distributed, fit_screened_distributed_src, fit_single_node,
+    fit_with_screening, ConcordConfig, ScreenedDistOptions, Variant,
 };
 use hpconcord::config::Config;
 use hpconcord::coordinator::{
     run_sweep, run_sweep_screened, select_by_density, GridSchedule, GridSpec, SweepResult,
 };
+use hpconcord::io::{self, XDisk, XSource};
 use hpconcord::cost::ProblemShape;
 use hpconcord::gen;
 use hpconcord::linalg::{tile, Mat, TileConfig};
@@ -33,6 +34,7 @@ fn main() {
     let code = match args.subcommand() {
         Some("solve") => run(cmd_solve(&args)),
         Some("sweep") => run(cmd_sweep(&args)),
+        Some("convert") => run(cmd_convert(&args)),
         Some("cost") => run(cmd_cost(&args)),
         Some("fmri") => run(cmd_fmri(&args)),
         Some("engine") => run(cmd_engine(&args)),
@@ -137,6 +139,44 @@ fn screened_dist_options(args: &Args, file_cfg: &Config) -> Result<ScreenedDistO
     })
 }
 
+/// The on-disk X path, when one was given: CLI `--x-file`, TOML
+/// `solver.x_file`.
+fn resolve_x_file(args: &Args, cfg: &Config) -> Result<Option<String>> {
+    let path = args.str_or("x-file", cfg.str_or("solver.x_file", "")?);
+    Ok(if path.is_empty() { None } else { Some(path) })
+}
+
+/// `--x-file` replaces the in-core X on the screened distributed paths
+/// only — every other mode reads X through code that has no
+/// [`XSource`] seam — so using it elsewhere is a clean error rather
+/// than a silently ignored flag.
+fn validate_x_file_mode(x_file: Option<&str>, mode: &str, screen: bool) -> Result<()> {
+    if x_file.is_some() && !(mode == "dist" && screen) {
+        return Err(anyhow!(
+            "--x-file applies to --mode dist with --screen only (the on-disk X backend \
+             sits behind the screened distributed executor seam)"
+        ));
+    }
+    Ok(())
+}
+
+/// Open and validate an HPCX x-file against the generated workload:
+/// the generator still supplies the ground-truth omega0 the support
+/// metrics read, so the file must describe the same n × p problem.
+fn open_x_file(path: &str, problem: &gen::Problem) -> Result<XDisk> {
+    let xd = XDisk::open(std::path::Path::new(path))?;
+    let (n, p) = problem.x.shape();
+    if (xd.rows(), xd.cols()) != (n, p) {
+        return Err(anyhow!(
+            "x-file {path} holds a {}×{} matrix but the workload is {n}×{p} \
+             (write it with `convert` using the same workload options)",
+            xd.rows(),
+            xd.cols()
+        ));
+    }
+    Ok(xd)
+}
+
 /// Write an estimate as whitespace-separated rows with full f64
 /// round-trip precision (`--out-omega`): deterministic bytes, so two
 /// runs that claim bit-identical results can be compared with `cmp`.
@@ -222,6 +262,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let cfg = solver_config(args, &file_cfg)?;
     let mode = args.str_or("mode", "single");
     let screen = args.has("screen") || file_cfg.bool_or("solver.screen", false)?;
+    let x_file = resolve_x_file(args, &file_cfg)?;
+    validate_x_file_mode(x_file.as_deref(), &mode, screen)?;
     let t0 = std::time::Instant::now();
 
     let (fit, cost_line) = match mode.as_str() {
@@ -248,7 +290,15 @@ fn cmd_solve(args: &Args) -> Result<()> {
         }
         "dist" if screen => {
             let opts = screened_dist_options(args, &file_cfg)?;
-            let out = fit_screened_distributed(&problem.x, &cfg, &opts)?;
+            // Determinism rule 8: the on-disk branch is the in-core
+            // run's bit-exact twin — compare `--out-omega`s with cmp.
+            let out = match &x_file {
+                Some(path) => {
+                    let xd = open_x_file(path, &problem)?;
+                    fit_screened_distributed_src(XSource::OnDisk(&xd), &cfg, &opts)?
+                }
+                None => fit_screened_distributed(&problem.x, &cfg, &opts)?,
+            };
             println!(
                 "screening: {} components (largest {}) at λ1={}; \
                  screen pass comm {:.6}s",
@@ -382,6 +432,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     };
     let workers = args.usize_or("workers", 4)?;
     let screen = args.has("screen") || file_cfg.bool_or("solver.screen", false)?;
+    let x_file = resolve_x_file(args, &file_cfg)?;
+    validate_x_file_mode(x_file.as_deref(), &mode, screen)?;
     // Per-point component counts and modeled times, when the sweep mode
     // produces them (threaded into the table and the --out-csv rows).
     let mut components_col: Option<Vec<usize>> = None;
@@ -401,9 +453,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let opts = screened_dist_options(args, &file_cfg)?;
         let sched_mode =
             if args.has("per-point") { GridSchedule::PerPoint } else { GridSchedule::Packed };
-        let out = hpconcord::coordinator::run_sweep_screened_dist(
-            &problem.x, &grid, &base, &opts, sched_mode,
-        )?;
+        let out = match &x_file {
+            Some(path) => {
+                let xd = open_x_file(path, &problem)?;
+                hpconcord::coordinator::run_sweep_screened_dist_src(
+                    XSource::OnDisk(&xd),
+                    &grid,
+                    &base,
+                    &opts,
+                    sched_mode,
+                )?
+            }
+            None => hpconcord::coordinator::run_sweep_screened_dist(
+                &problem.x, &grid, &base, &opts, sched_mode,
+            )?,
+        };
         let comps: Vec<String> = out.components.iter().map(|c| c.to_string()).collect();
         println!(
             "screened dist sweep ({}): components per point = [{}]",
@@ -477,6 +541,31 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             println!("wrote selected omega to {out_omega}");
         }
     }
+    Ok(())
+}
+
+/// `convert`: generate the named workload and write its X to an HPCX
+/// file for later `--x-file` runs. The write is atomic (temp file +
+/// rename), and the fresh file is reopened through the validating
+/// reader so a convert that prints a summary is known readable.
+fn cmd_convert(args: &Args) -> Result<()> {
+    let file_cfg = load_config(args)?;
+    let problem = load_problem(args, &file_cfg)?;
+    let out = args.str_or("out", "");
+    if out.is_empty() {
+        return Err(anyhow!("convert requires --out FILE (the HPCX path to write)"));
+    }
+    let path = std::path::PathBuf::from(&out);
+    io::write_x(&path, &problem.x)?;
+    let xd = XDisk::open(&path)?;
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "wrote {}: HPCX v{} n={} p={} ({bytes} bytes)",
+        path.display(),
+        io::X_VERSION,
+        xd.rows(),
+        xd.cols()
+    );
     Ok(())
 }
 
@@ -609,5 +698,26 @@ mod tests {
     fn valid_sweep_modes_pass() {
         assert_eq!(sweep_mode(&parse("sweep")).unwrap(), "single");
         assert_eq!(sweep_mode(&parse("sweep --screen --mode dist --per-point")).unwrap(), "dist");
+    }
+
+    #[test]
+    fn x_file_outside_screened_dist_is_a_clean_error() {
+        for (mode, screen) in [("single", false), ("single", true), ("dist", false)] {
+            let err = validate_x_file_mode(Some("x.xbin"), mode, screen).unwrap_err();
+            assert!(
+                err.to_string().contains("--mode dist"),
+                "mode {mode} screen {screen}: {err}"
+            );
+        }
+        validate_x_file_mode(Some("x.xbin"), "dist", true).unwrap();
+        // No x-file: every mode is fine.
+        validate_x_file_mode(None, "single", false).unwrap();
+    }
+
+    #[test]
+    fn x_file_resolves_from_cli_over_config() {
+        let args = parse("solve --x-file cli.xbin");
+        assert_eq!(resolve_x_file(&args, &Config::default()).unwrap().as_deref(), Some("cli.xbin"));
+        assert_eq!(resolve_x_file(&parse("solve"), &Config::default()).unwrap(), None);
     }
 }

@@ -130,6 +130,14 @@ pub struct CostSummary {
     /// invert: concurrent phases are resident *together* (footprints
     /// add), sequential phases free one before the next (peaks max).
     pub peak_mem_words: u64,
+    /// Modeled words of the X *source* kept resident to serve reads
+    /// (determinism rule 8's residency term): the whole n·p matrix for
+    /// an in-core run, one row panel for an on-disk run
+    /// ([`crate::io::XSource::panel_words`]). Unlike `peak_mem_words`,
+    /// this maxes under *both* merges — the source backing storage is
+    /// shared across phases and waves, so residencies coexist rather
+    /// than accumulate.
+    pub x_panel_words: u64,
 }
 
 impl CostSummary {
@@ -146,6 +154,9 @@ impl CostSummary {
         // Sequential phases free their memory before the next starts:
         // the peak is the larger phase, not the sum.
         self.peak_mem_words = self.peak_mem_words.max(other.peak_mem_words);
+        // The X source is shared across phases: one resident panel (or
+        // matrix) serves both, so the term maxes rather than adds.
+        self.x_panel_words = self.x_panel_words.max(other.x_panel_words);
     }
 
     /// Fold another fabric's summary into this one under a *concurrent*
@@ -165,6 +176,10 @@ impl CostSummary {
         // Concurrent phases are resident together: footprints add —
         // the inverse of the time semantics above.
         self.peak_mem_words += other.peak_mem_words;
+        // Concurrent readers still share one X source (the backing
+        // matrix or file panel buffer is not duplicated per fabric):
+        // max under the concurrent fold too.
+        self.x_panel_words = self.x_panel_words.max(other.x_panel_words);
     }
 
     pub fn from_counters(per_rank: &[Counters], m: &MachineParams) -> Self {
@@ -391,6 +406,21 @@ mod tests {
         let mut bill = conc;
         bill.merge_sequential(&wave2);
         assert_eq!(bill.peak_mem_words, 160);
+    }
+
+    /// The X-source residency term maxes under *both* folds: the
+    /// backing matrix / panel buffer is shared, so neither a wave of
+    /// concurrent fabrics nor a sequence of phases duplicates it.
+    #[test]
+    fn x_panel_words_max_under_both_merges() {
+        let a = CostSummary { x_panel_words: 500, ..CostSummary::default() };
+        let b = CostSummary { x_panel_words: 120, ..CostSummary::default() };
+        let mut conc = a;
+        conc.merge_concurrent(&b);
+        assert_eq!(conc.x_panel_words, 500);
+        let mut seq = a;
+        seq.merge_sequential(&b);
+        assert_eq!(seq.x_panel_words, 500);
     }
 
     #[test]

@@ -3,6 +3,32 @@
 use hpconcord::linalg::Mat;
 use hpconcord::prelude::*;
 
+/// A temp-file path that removes itself on drop, unique per test name
+/// and process (parallel test binaries never collide). `dead_code` is
+/// allowed because every test binary compiles this module whether or
+/// not it uses the guard.
+#[allow(dead_code)]
+pub struct TempPath(pub std::path::PathBuf);
+
+#[allow(dead_code)]
+impl TempPath {
+    pub fn new(name: &str) -> TempPath {
+        TempPath(
+            std::env::temp_dir().join(format!("hpcx_test_{}_{name}", std::process::id())),
+        )
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.0
+    }
+}
+
+impl Drop for TempPath {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
 /// X whose column blocks are supported on disjoint sample rows: the
 /// cross-block entries of S = XᵀX/n are exactly 0.0, so screening is
 /// *guaranteed* to split between blocks at any λ₁ ≥ 0. Within-block

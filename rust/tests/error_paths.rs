@@ -10,6 +10,11 @@
 //! union-find). The CLI-flag guards themselves (`--per-point` outside
 //! `--mode dist`, unknown `--mode`) are unit-tested next to the parser
 //! in `src/main.rs`.
+//!
+//! PR 8 adds the on-disk X format's failure modes: a truncated,
+//! mis-magicked, wrong-version or length-inconsistent HPCX file — and a
+//! nonexistent `--x-file` path — are clean `anyhow` errors from
+//! `XDisk::open`, and a failed `write_x` leaves no partial output file.
 
 use hpconcord::concord::screening::{gram_components, nested_components};
 use hpconcord::concord::{
@@ -17,11 +22,13 @@ use hpconcord::concord::{
 };
 use hpconcord::coordinator::{run_sweep_screened_dist, GridSchedule, GridSpec};
 use hpconcord::cost::MemFootprint;
+use hpconcord::io::{write_x, XDisk};
+use hpconcord::linalg::Mat;
 use hpconcord::prelude::*;
 use hpconcord::runtime::native;
 
 mod common;
-use common::disjoint_blocks;
+use common::{disjoint_blocks, TempPath};
 
 fn base_cfg() -> ConcordConfig {
     ConcordConfig {
@@ -126,6 +133,86 @@ fn nan_cutoff_screens_to_all_singletons() {
     let levels = nested_components(&s, &[f64::NAN, 0.05]);
     assert_eq!(levels[0].count, p);
     assert_eq!(levels[1].comp, gram_components(&s, 0.05).comp);
+}
+
+/// A deterministic little matrix for corrupting HPCX files with.
+fn tiny_x() -> Mat {
+    Mat::from_fn(5, 3, |i, j| (i * 3 + j) as f64 - 6.5)
+}
+
+/// Write a valid HPCX file, then let `mangle` corrupt the raw bytes
+/// before reopening — the per-failure-mode harness.
+fn corrupted(name: &str, mangle: impl FnOnce(&mut Vec<u8>)) -> (TempPath, String) {
+    let tmp = TempPath::new(&format!("corrupt_{name}.xbin"));
+    write_x(tmp.path(), &tiny_x()).unwrap();
+    let mut bytes = std::fs::read(tmp.path()).unwrap();
+    mangle(&mut bytes);
+    std::fs::write(tmp.path(), &bytes).unwrap();
+    let err = XDisk::open(tmp.path()).unwrap_err();
+    let msg = format!("{err:#}");
+    (tmp, msg)
+}
+
+/// A file shorter than the 24-byte header is named as truncated (the
+/// first thing a mid-transfer copy looks like).
+#[test]
+fn x_file_truncated_header_is_a_clean_error() {
+    let (_tmp, msg) = corrupted("header", |b| b.truncate(10));
+    assert!(msg.contains("truncated header"), "unexpected error: {msg}");
+}
+
+/// Four wrong leading bytes — any non-HPCX file — are rejected before
+/// a single payload byte is interpreted.
+#[test]
+fn x_file_wrong_magic_is_a_clean_error() {
+    let (_tmp, msg) = corrupted("magic", |b| b[..4].copy_from_slice(b"JUNK"));
+    assert!(msg.contains("bad magic"), "unexpected error: {msg}");
+}
+
+/// A future (or garbage) format version is refused rather than
+/// misparsed.
+#[test]
+fn x_file_wrong_version_is_a_clean_error() {
+    let (_tmp, msg) = corrupted("version", |b| b[4..8].copy_from_slice(&9u32.to_le_bytes()));
+    assert!(msg.contains("unsupported HPCX version 9"), "unexpected error: {msg}");
+}
+
+/// A payload that disagrees with the header's n·p — truncated or with
+/// trailing garbage — is caught at open, not mid-solve in a panel read.
+#[test]
+fn x_file_length_mismatch_is_a_clean_error() {
+    let n = 5 * 3 * 8; // payload bytes of tiny_x
+    let (_tmp, short) = corrupted("short", |b| b.truncate(b.len() - 8));
+    assert!(short.contains("does not match header"), "unexpected error: {short}");
+    let (_tmp2, long) = corrupted("long", |b| b.extend_from_slice(&[0u8; 8]));
+    assert!(long.contains("does not match header"), "unexpected error: {long}");
+    // An honest header over an empty payload fails the same check.
+    let (_tmp3, empty) = corrupted("empty", |b| b.truncate(b.len() - n));
+    assert!(empty.contains("does not match header"), "unexpected error: {empty}");
+}
+
+/// A nonexistent `--x-file` path surfaces as a clean open error naming
+/// the path, not a panic.
+#[test]
+fn x_file_nonexistent_path_is_a_clean_error() {
+    let tmp = TempPath::new("does_not_exist.xbin");
+    let err = XDisk::open(tmp.path()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("opening x-file"), "unexpected error: {msg}");
+}
+
+/// `write_x` is atomic: a write that cannot complete (target directory
+/// missing here) errors cleanly and leaves neither a partial output
+/// file nor its temp sibling behind.
+#[test]
+fn failed_write_leaves_no_partial_file() {
+    let dir = TempPath::new("no_such_dir");
+    let target = dir.path().join("x.xbin");
+    let err = write_x(&target, &tiny_x()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("creating"), "unexpected error: {msg}");
+    assert!(!target.exists(), "partial output file left behind");
+    assert!(!dir.path().exists(), "temp sibling resurrected the directory");
 }
 
 /// The screened single-node fit under a NaN λ₁: every column is a

@@ -1,0 +1,331 @@
+//! Out-of-core X: the bit-identity test wall.
+//!
+//! The contract under test is **determinism rule 8** in
+//! `ARCHITECTURE.md`: the X backend (`InCore` vs `OnDisk`, the CLI's
+//! `--x-file`) is a **schedule-only** knob. Every code path that reads
+//! X — the streamed screening gram, the executor's per-wave column
+//! extraction, the stability coordinator's subsample row views, packed
+//! grid sweeps — must produce bit-identical omegas, objectives, and
+//! Lemma-3.3/3.5 counters on either backend, across the gram-block ×
+//! mem-budget × threads matrix. Only the modeled source residency
+//! (`CostSummary::x_panel_words`, and the screening pass's
+//! `peak_mem_words` when the effective panels differ) may move: an
+//! on-disk run's modeled peak under a tight budget sits strictly below
+//! the in-core unbounded run's.
+
+use hpconcord::concord::{
+    fit_screened_distributed, fit_screened_distributed_src, ConcordConfig, ScreenedDistOptions,
+    Variant,
+};
+use hpconcord::coordinator::{
+    run_sweep_screened_dist, run_sweep_screened_dist_src, stability_selection_dist,
+    stability_selection_dist_src, GridSchedule, GridSpec, StabilityConfig,
+};
+use hpconcord::cost::MemFootprint;
+use hpconcord::io::{write_x, XDisk, XSource, DEFAULT_PANEL_ROWS};
+use hpconcord::linalg::Mat;
+use hpconcord::prelude::*;
+
+mod common;
+use common::{disjoint_blocks, TempPath};
+
+fn bits(m: &Mat) -> Vec<u64> {
+    m.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Write `x` to a self-cleaning HPCX temp file and open it back.
+fn disk_fixture(name: &str, x: &Mat) -> (TempPath, XDisk) {
+    let tmp = TempPath::new(&format!("ooc_{name}.xbin"));
+    write_x(tmp.path(), x).expect("fixture write");
+    let xd = XDisk::open(tmp.path()).expect("fixture open");
+    (tmp, xd)
+}
+
+/// A machine whose flops dwarf its communication: the planner then
+/// gives even small screened components multi-rank fabrics, so every
+/// component enters the wave packer on both backends.
+fn flop_heavy() -> MachineParams {
+    MachineParams {
+        alpha: 1.0e-13,
+        beta: 1.0e-13,
+        gamma_dense: 1.0e-6,
+        gamma_sparse: 8.0e-6,
+        beta_mem: 0.0,
+    }
+}
+
+fn base_cfg(threads: usize, mem_budget: u64) -> ConcordConfig {
+    ConcordConfig {
+        lambda1: 0.02,
+        lambda2: 0.1,
+        tol: 0.0, // fixed budget: every component runs exactly max_iter
+        max_iter: 6,
+        variant: Variant::Cov,
+        threads,
+        ranks_budget: 32,
+        mem_budget,
+        ..Default::default()
+    }
+}
+
+fn dist_opts(gram_block: usize) -> ScreenedDistOptions {
+    ScreenedDistOptions {
+        total_ranks: 8,
+        machine: flop_heavy(),
+        small_cutoff: 0,
+        fixed: None,
+        sequential: false,
+        gram_block,
+    }
+}
+
+/// The tentpole matrix: `solve` on `InCore` vs `OnDisk` across
+/// gram-block {1, 7, n+13} × mem-budget {0, tight} × threads {1, 4} —
+/// omegas, objective bits, iterations, component counts, the
+/// Lemma-3.3/3.5 counters, both modeled times, and (the gram panels
+/// being equal at every `gram_block > 0`) the modeled peak are all
+/// bit-identical. The source residency is the only thing allowed to
+/// move, and only downward: on disk it never exceeds the in-core
+/// matrix, strictly undercutting it whenever the panel is smaller
+/// than X.
+#[test]
+fn solve_is_backend_invariant_across_the_knob_matrix() {
+    let x = disjoint_blocks(&[10, 10, 10, 10], 400, 0x9A1D);
+    let (n, p) = (x.rows(), x.cols());
+    let (_tmp, xd) = disk_fixture("solve_matrix", &x);
+    let tight = MemFootprint::for_component(n, 10).words();
+
+    for gram_block in [1usize, 7, n + 13] {
+        let opts = dist_opts(gram_block);
+        for mem_budget in [0u64, tight] {
+            for threads in [1usize, 4] {
+                let tag = format!("gram {gram_block} mem {mem_budget} threads {threads}");
+                let cfg = base_cfg(threads, mem_budget);
+                let incore = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+                let disk =
+                    fit_screened_distributed_src(XSource::OnDisk(&xd), &cfg, &opts).unwrap();
+
+                assert_eq!(bits(&disk.fit.omega), bits(&incore.fit.omega), "{tag}: omega");
+                assert_eq!(
+                    disk.fit.objective.to_bits(),
+                    incore.fit.objective.to_bits(),
+                    "{tag}: objective"
+                );
+                assert_eq!(disk.fit.iterations, incore.fit.iterations, "{tag}");
+                assert_eq!(disk.components, incore.components, "{tag}");
+                assert_eq!(disk.largest, incore.largest, "{tag}");
+                // Counters are machine facts: the backend cannot move
+                // a single message, word, or flop — or a priced
+                // second.
+                assert_eq!(disk.cost.total, incore.cost.total, "{tag}: counters");
+                assert_eq!(disk.cost.max_per_rank, incore.cost.max_per_rank, "{tag}");
+                assert_eq!(disk.cost.time.to_bits(), incore.cost.time.to_bits(), "{tag}");
+                assert_eq!(
+                    disk.cost.comm_time.to_bits(),
+                    incore.cost.comm_time.to_bits(),
+                    "{tag}"
+                );
+                // At gram_block > 0 both backends screen over the same
+                // effective panel, so even the modeled peak agrees.
+                assert_eq!(disk.cost.peak_mem_words, incore.cost.peak_mem_words, "{tag}");
+                // Source residency: panels on disk, the matrix in
+                // core. gram_block = n + 13 clamps to n — the one cell
+                // where the disk "panel" is the whole matrix.
+                assert_eq!(incore.cost.x_panel_words, (n * p) as u64, "{tag}");
+                if gram_block < n {
+                    assert!(
+                        disk.cost.x_panel_words < incore.cost.x_panel_words,
+                        "{tag}: disk residency {} must undercut in-core {}",
+                        disk.cost.x_panel_words,
+                        incore.cost.x_panel_words
+                    );
+                } else {
+                    assert_eq!(disk.cost.x_panel_words, incore.cost.x_panel_words, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+/// ISSUE acceptance: on the ragged `[12, 6, 6, 6]`-block fixture the
+/// on-disk tight-budget run reproduces the in-core unbounded run bit
+/// for bit while its modeled peak residency — default read panels plus
+/// one component footprint per wave — sits strictly below the in-core
+/// peak, with both sides' residency terms pinned to their closed
+/// forms.
+#[test]
+fn on_disk_tight_budget_peak_undercuts_in_core_unbounded() {
+    let x = disjoint_blocks(&[12, 6, 6, 6], 200, 0x51ab);
+    let (n, p) = (x.rows(), x.cols());
+    let (_tmp, xd) = disk_fixture("acceptance", &x);
+    let opts = dist_opts(0);
+
+    let incore = fit_screened_distributed(&x, &base_cfg(1, 0), &opts).unwrap();
+    let tight = MemFootprint::for_component(n, 12).words();
+    let disk =
+        fit_screened_distributed_src(XSource::OnDisk(&xd), &base_cfg(1, tight), &opts).unwrap();
+
+    // Same estimate, same counters — rules 7 and 8 jointly.
+    assert_eq!(bits(&disk.fit.omega), bits(&incore.fit.omega));
+    assert_eq!(disk.fit.objective.to_bits(), incore.fit.objective.to_bits());
+    assert_eq!(disk.cost.total, incore.cost.total);
+
+    // In-core unbounded: the screening pass holds all of X plus the
+    // gram rows — the modeled peak of the whole fit.
+    assert_eq!(incore.cost.peak_mem_words, ((n * p) + p * p) as u64);
+    assert_eq!(incore.cost.x_panel_words, (n * p) as u64);
+
+    // On disk under the tight budget the peak is the largest wave's
+    // single component footprint, and the X residency is one default
+    // read panel — both strictly below their in-core twins.
+    assert_eq!(disk.cost.peak_mem_words, tight);
+    assert_eq!(disk.cost.x_panel_words, (DEFAULT_PANEL_ROWS.min(n) * p) as u64);
+    assert!(
+        disk.cost.peak_mem_words < incore.cost.peak_mem_words,
+        "on-disk tight peak {} must undercut in-core unbounded peak {}",
+        disk.cost.peak_mem_words,
+        incore.cost.peak_mem_words
+    );
+    assert!(disk.cost.x_panel_words < incore.cost.x_panel_words);
+}
+
+/// `sweep --mode dist` on both grid schedules: every grid point's
+/// omega, density, iteration count and the grid bill's counters are
+/// backend-invariant — cross-job packing composes with the on-disk
+/// source.
+#[test]
+fn dist_sweep_is_backend_invariant_on_both_schedules() {
+    let x = disjoint_blocks(&[10, 10], 200, 0x0BAD);
+    let (_tmp, xd) = disk_fixture("sweep", &x);
+    let grid = GridSpec { lambda1: vec![0.01, 0.02], lambda2: vec![0.0, 0.1] };
+    let base = base_cfg(2, 0);
+    let opts = dist_opts(7);
+
+    for mode in [GridSchedule::Packed, GridSchedule::PerPoint] {
+        let incore = run_sweep_screened_dist(&x, &grid, &base, &opts, mode).unwrap();
+        let disk =
+            run_sweep_screened_dist_src(XSource::OnDisk(&xd), &grid, &base, &opts, mode).unwrap();
+        assert_eq!(disk.results.len(), incore.results.len(), "{mode:?}");
+        for (d, i) in disk.results.iter().zip(&incore.results) {
+            let tag = format!("{mode:?} job {}", i.job.id);
+            assert_eq!(d.job.id, i.job.id, "{tag}");
+            assert_eq!(bits(&d.fit.omega), bits(&i.fit.omega), "{tag}: omega");
+            assert_eq!(d.density.to_bits(), i.density.to_bits(), "{tag}: density");
+            assert_eq!(d.fit.iterations, i.fit.iterations, "{tag}");
+        }
+        assert_eq!(disk.components, incore.components, "{mode:?}");
+        assert_eq!(disk.cost.total, incore.cost.total, "{mode:?}: counters");
+        assert_eq!(disk.cost.max_per_rank, incore.cost.max_per_rank, "{mode:?}");
+        assert_eq!(disk.cost.time.to_bits(), incore.cost.time.to_bits(), "{mode:?}");
+        assert_eq!(disk.bill.per_job.len(), incore.bill.per_job.len(), "{mode:?}");
+        for (d, i) in disk.bill.per_job.iter().zip(&incore.bill.per_job) {
+            assert_eq!(d.total, i.total, "{mode:?}: per-job counters");
+        }
+    }
+}
+
+/// Stability selection: the on-disk subsample row views gather bit-for
+/// bit the in-core rows, so frequencies, stable edges and the bill's
+/// counters are backend-invariant — while the wave schedule's source
+/// residency shrinks to read panels.
+#[test]
+fn stability_selection_is_backend_invariant() {
+    let x = disjoint_blocks(&[8, 8, 8], 200, 0xF00D);
+    let (n, p) = (x.rows(), x.cols());
+    let (_tmp, xd) = disk_fixture("stability", &x);
+    let base = base_cfg(1, 0);
+    let cfg = StabilityConfig { subsamples: 4, fraction: 0.5, threshold: 0.6, seed: 7, workers: 2 };
+    let opts = ScreenedDistOptions { total_ranks: 4, ..dist_opts(0) };
+
+    let incore = stability_selection_dist(&x, &base, &cfg, &opts).unwrap();
+    let disk = stability_selection_dist_src(XSource::OnDisk(&xd), &base, &cfg, &opts).unwrap();
+
+    assert_eq!(bits(&disk.frequency), bits(&incore.frequency), "frequency drift");
+    assert_eq!(disk.edges, incore.edges);
+    assert_eq!(disk.subsamples, incore.subsamples);
+    assert_eq!(disk.cost.total, incore.cost.total, "counter drift");
+    assert_eq!(disk.cost.max_per_rank, incore.cost.max_per_rank);
+    assert_eq!(disk.bill.screen.total, incore.bill.screen.total);
+    assert_eq!(disk.bill.waves.total, incore.bill.waves.total);
+    // The executor's lazy row views read panels on disk, the whole
+    // matrix in core.
+    assert_eq!(incore.bill.waves.x_panel_words, (n * p) as u64);
+    assert_eq!(disk.bill.waves.x_panel_words, (DEFAULT_PANEL_ROWS.min(n) * p) as u64);
+    assert!(disk.bill.waves.x_panel_words < incore.bill.waves.x_panel_words);
+}
+
+fn random_mat(n: usize, p: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(n, p, |_, _| rng.normal())
+}
+
+/// Panel-read property: reads at every width — single-row panels, a
+/// ragged final panel, one whole-matrix panel, a panel wider than the
+/// matrix — concatenate to exactly the written rows.
+#[test]
+fn panel_reads_tile_the_matrix_at_every_width() {
+    let n = DEFAULT_PANEL_ROWS + 44; // forces a ragged default panel too
+    let x = random_mat(n, 7, 0xA11CE);
+    let (_tmp, xd) = disk_fixture("panel_widths", &x);
+    for width in [1usize, 7, n, n + 13] {
+        let mut got: Vec<u64> = Vec::with_capacity(n * 7);
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + width).min(n);
+            let panel = xd.read_rows(r0, r1).unwrap();
+            assert_eq!(panel.rows(), r1 - r0, "width {width}: panel {r0}..{r1}");
+            got.extend(panel.data().iter().map(|v| v.to_bits()));
+            r0 = r1;
+        }
+        assert_eq!(got, bits(&x), "width {width}: payload drift");
+    }
+}
+
+/// Column extraction property: empty, singleton, unsorted-with-repeats
+/// and full index lists all equal the in-core gather element for
+/// element — on a matrix tall enough that the on-disk walk crosses the
+/// default panel boundary mid-extraction.
+#[test]
+fn column_extraction_matches_in_core_for_every_index_shape() {
+    let n = DEFAULT_PANEL_ROWS + 44;
+    let x = random_mat(n, 7, 0xBEE);
+    let (_tmp, xd) = disk_fixture("extract_cols", &x);
+    let incore = XSource::InCore(&x);
+    let disk = XSource::OnDisk(&xd);
+    let full: Vec<usize> = (0..7).collect();
+    let cases: Vec<Vec<usize>> =
+        vec![vec![], vec![3], vec![6, 0, 2, 6], full, vec![5, 4, 3, 2, 1, 0]];
+    for idx in &cases {
+        let a = incore.extract_columns(idx).unwrap();
+        let b = disk.extract_columns(idx).unwrap();
+        assert_eq!((b.rows(), b.cols()), (a.rows(), a.cols()), "idx {idx:?}");
+        assert_eq!(bits(&b), bits(&a), "idx {idx:?}: element drift");
+    }
+}
+
+/// Row-and-column extraction property: row lists that sit on, straddle
+/// and repeat across the default panel boundary (and empty/singleton
+/// lists) equal the in-core gather bit for bit — the lazy subsample
+/// view the stability executor reads through.
+#[test]
+fn row_views_match_in_core_across_panel_boundaries() {
+    let n = DEFAULT_PANEL_ROWS + 44;
+    let x = random_mat(n, 6, 0xD15C);
+    let (_tmp, xd) = disk_fixture("row_views", &x);
+    let incore = XSource::InCore(&x);
+    let disk = XSource::OnDisk(&xd);
+    let straddle = vec![0, DEFAULT_PANEL_ROWS - 1, DEFAULT_PANEL_ROWS, n - 1];
+    let row_cases: Vec<Vec<usize>> =
+        vec![vec![], vec![n - 1], straddle, vec![3, 3, 2, DEFAULT_PANEL_ROWS]];
+    let idx_cases: Vec<Vec<usize>> = vec![vec![], vec![0], vec![5, 1, 1]];
+    for rows in &row_cases {
+        for idx in &idx_cases {
+            let a = incore.extract_rows_columns(rows, idx).unwrap();
+            let b = disk.extract_rows_columns(rows, idx).unwrap();
+            assert_eq!(bits(&b), bits(&a), "rows {rows:?} idx {idx:?}");
+        }
+        let a = incore.subsample(rows).unwrap();
+        let b = disk.subsample(rows).unwrap();
+        assert_eq!(bits(&b), bits(&a), "subsample rows {rows:?}");
+    }
+}

@@ -1,0 +1,253 @@
+#!/usr/bin/env python3
+"""Write HPCX x-files without the Rust toolchain (offline builder
+image companion to `hpconcord convert`; see tools/static_audit.sh for
+why the image cannot run cargo).
+
+The writer mirrors the Rust chain-workload generator bit-faithfully:
+
+  * SplitMix64 and the Box-Muller draw order are integer-level mirrors
+    of rust/src/rng.rs (the stream is checked against the published
+    SplitMix64 test vectors in --self-check);
+  * the banded Cholesky (bw = 1) and its transpose solve replay
+    rust/src/linalg/chol.rs op for op — every add, multiply, divide
+    and sqrt in the same order, so IEEE-754 gives the same bits;
+  * the HPCX layout (24-byte header: magic "HPCX", u32 LE version,
+    u64 LE n, u64 LE p; row-major LE f64 payload) matches
+    rust/src/io/mod.rs, and the reader validates exactly what
+    `XDisk::open` validates.
+
+So `make_x_fixture.py --p 256 --n 150 --seed 42 --out x.xbin` writes
+the same bytes `hpconcord convert --workload chain --p 256 --n 150
+--seed 42 --out x.xbin` writes (libm caveat: ln/sin/cos inside
+Box-Muller come from the platform libm in both languages; on the
+glibc images CI uses they agree to the bit).
+
+`--self-check` needs no numpy and is wired into the offline CI job;
+tools/verify_fixture_margins.py additionally cross-checks this
+module's chain sampler against its independent numpy mirror.
+"""
+
+import argparse
+import math
+import os
+import struct
+import sys
+import tempfile
+
+MASK = (1 << 64) - 1
+
+X_MAGIC = b"HPCX"
+X_VERSION = 1
+X_HEADER_BYTES = 24
+
+
+class Rng:
+    """SplitMix64 + Box-Muller pair cache — mirror of rust/src/rng.rs."""
+
+    def __init__(self, seed):
+        self.state = seed & MASK
+        self.spare = None
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return (z ^ (z >> 31)) & MASK
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self):
+        if self.spare is not None:
+            v, self.spare = self.spare, None
+            return v
+        u1 = 1.0 - self.uniform()
+        u2 = self.uniform()
+        r = math.sqrt(-2.0 * math.log(u1))
+        theta = 2.0 * math.pi * u2
+        self.spare = r * math.sin(theta)
+        return r * math.cos(theta)
+
+    def normal_vec(self, n):
+        return [self.normal() for _ in range(n)]
+
+
+def chain_entry(i, j):
+    """chain_precision(p) as an entry accessor: tridiagonal 1.25 / -0.5."""
+    if i == j:
+        return 1.25
+    if abs(i - j) == 1:
+        return -0.5
+    return 0.0
+
+
+def banded_cholesky_bw1(p, entry):
+    """rust/src/linalg/chol.rs::banded_cholesky at bw = 1, op for op.
+
+    Returns L as {(i, j): value} over the band j in [max(i-1,0), i].
+    """
+    l = {}
+    for i in range(p):
+        jmin = max(i - 1, 0)
+        for j in range(jmin, i + 1):
+            s = entry(i, j)
+            kmin = max(jmin, max(j - 1, 0))
+            for k in range(kmin, j):
+                s -= l[(i, k)] * l[(j, k)]
+            if i == j:
+                if s <= 0.0:
+                    raise ValueError(f"not positive definite (pivot {i}: {s})")
+                l[(i, i)] = math.sqrt(s)
+            else:
+                l[(i, j)] = s / l[(j, j)]
+    return l
+
+
+def solve_transpose_bw1(l, p, b):
+    """BandedChol::solve_transpose at bw = 1, op for op (backward)."""
+    x = [0.0] * p
+    for i in range(p - 1, -1, -1):
+        s = b[i]
+        kmax = min(i + 1, p - 1)
+        for k in range(i + 1, kmax + 1):
+            s -= l[(k, i)] * x[k]
+        x[i] = s / l[(i, i)]
+    return x
+
+
+def chain_x_rows(p, n, rng):
+    """gen::chain_problem(p, n, rng).x one row at a time: z ~ N(0, I),
+    x_i = L^-T z through the banded factor of the chain precision."""
+    l = banded_cholesky_bw1(p, chain_entry)
+    for _ in range(n):
+        z = rng.normal_vec(p)
+        yield solve_transpose_bw1(l, p, z)
+
+
+def write_hpcx(path, n, p, rows):
+    """Write an HPCX file atomically (temp sibling + rename, mirroring
+    io::write_x): header then row-major LE f64 rows from `rows`."""
+    tmp = path + ".tmp"
+    row_fmt = "<%dd" % p
+    try:
+        with open(tmp, "wb") as f:
+            f.write(struct.pack("<4sIQQ", X_MAGIC, X_VERSION, n, p))
+            count = 0
+            for row in rows:
+                f.write(struct.pack(row_fmt, *row))
+                count += 1
+            if count != n:
+                raise ValueError(f"row iterator yielded {count} rows, header says {n}")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
+
+
+def read_hpcx(path):
+    """Read and validate an HPCX file (the checks `XDisk::open` makes).
+
+    Returns (n, p, payload) with the payload as the raw bytes — bit
+    comparisons need no float round trip.
+    """
+    with open(path, "rb") as f:
+        header = f.read(X_HEADER_BYTES)
+        if len(header) < X_HEADER_BYTES:
+            raise ValueError(f"{path}: truncated header (want {X_HEADER_BYTES} bytes)")
+        magic, version, n, p = struct.unpack("<4sIQQ", header)
+        if magic != X_MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r} (want {X_MAGIC!r})")
+        if version != X_VERSION:
+            raise ValueError(f"{path}: unsupported HPCX version {version} (want {X_VERSION})")
+        payload = f.read()
+    if len(payload) != n * p * 8:
+        raise ValueError(
+            f"{path}: file length {X_HEADER_BYTES + len(payload)} does not match "
+            f"header n={n} p={p}"
+        )
+    return n, p, payload
+
+
+def self_check():
+    """Toolchain-free gate: RNG test vectors, bit-exact round trip,
+    atomicity, and every header-validation failure mode."""
+    # SplitMix64 reference stream (seed 0): the published test vector.
+    r = Rng(0)
+    got = [r.next_u64() for _ in range(3)]
+    want = [0xE220A8397B1DCDAF, 0x6E789E6AA1B965F4, 0x06C45D188009454F]
+    assert got == want, f"SplitMix64 mirror drifted: {[hex(v) for v in got]}"
+
+    p, n, seed = 8, 13, 0xC0DE
+    rows = list(chain_x_rows(p, n, Rng(seed)))
+    assert all(math.isfinite(v) for row in rows for v in row)
+    # The chain factor is exact on paper: L[0][0] = sqrt(1.25).
+    l = banded_cholesky_bw1(p, chain_entry)
+    assert l[(0, 0)] == math.sqrt(1.25)
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.xbin")
+        write_hpcx(path, n, p, iter(rows))
+        assert not os.path.exists(path + ".tmp"), "temp sibling left behind"
+        rn, rp, payload = read_hpcx(path)
+        assert (rn, rp) == (n, p)
+        want_payload = b"".join(struct.pack("<%dd" % p, *row) for row in rows)
+        assert payload == want_payload, "round trip is not bit-exact"
+
+        # A lying row iterator must not leave a file under the target.
+        bad = os.path.join(d, "bad.xbin")
+        try:
+            write_hpcx(bad, n + 1, p, iter(rows))
+            raise AssertionError("short row iterator accepted")
+        except ValueError:
+            pass
+        assert not os.path.exists(bad) and not os.path.exists(bad + ".tmp")
+
+        raw = open(path, "rb").read()
+
+        def expect_invalid(name, data):
+            broken = os.path.join(d, name)
+            with open(broken, "wb") as f:
+                f.write(data)
+            try:
+                read_hpcx(broken)
+                raise AssertionError(f"{name} accepted")
+            except ValueError:
+                pass
+
+        expect_invalid("trunc.xbin", raw[:10])
+        expect_invalid("magic.xbin", b"JUNK" + raw[4:])
+        expect_invalid("version.xbin", raw[:4] + struct.pack("<I", 9) + raw[8:])
+        expect_invalid("short.xbin", raw[:-8])
+        expect_invalid("long.xbin", raw + b"\x00" * 8)
+
+    print("make_x_fixture self-check: OK (RNG vectors, bit-exact round "
+          "trip, atomic write, header validation)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--p", type=int, default=32, help="variables (columns)")
+    ap.add_argument("--n", type=int, default=100, help="samples (rows)")
+    ap.add_argument("--seed", type=lambda s: int(s, 0), default=42,
+                    help="SplitMix64 seed (0x.. accepted); must match the solve run's --seed")
+    ap.add_argument("--out", help="HPCX output path")
+    ap.add_argument("--self-check", action="store_true",
+                    help="run the toolchain-free gate and exit")
+    args = ap.parse_args()
+    if args.self_check:
+        self_check()
+        return 0
+    if not args.out:
+        ap.error("--out FILE is required (or use --self-check)")
+    write_hpcx(args.out, args.n, args.p, chain_x_rows(args.p, args.n, Rng(args.seed)))
+    size = os.path.getsize(args.out)
+    print(f"wrote {args.out}: HPCX v{X_VERSION} n={args.n} p={args.p} ({size} bytes)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,9 +37,14 @@ rust/tests/common/mod.rs and the suites' fixture comments.
 """
 
 import math
+import os
 import sys
+import tempfile
 
 import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import make_x_fixture  # noqa: E402  (sibling tool: the HPCX writer mirror)
 
 MASK = (1 << 64) - 1
 
@@ -186,8 +191,39 @@ def analyze(name, sizes, n_each, seed, lambdas, x=None):
     return ok
 
 
+def check_x_fixture_writer():
+    """Cross-check tools/make_x_fixture.py against this script's
+    independent numpy mirror: the two chain samplers share the RNG
+    stream but factor the precision differently (op-for-op banded
+    Cholesky vs numpy's dense LAPACK), so agreement to float rounding
+    pins both; the written HPCX file must round-trip bit-exactly."""
+    p, n, seed = 12, 40, 0xC0DE
+    ours = chain_problem_x(p, n, Rng(seed))
+    rows = list(make_x_fixture.chain_x_rows(p, n, make_x_fixture.Rng(seed)))
+    theirs = np.array(rows)
+    drift = np.abs(ours - theirs).max()
+    if drift > 1e-10:
+        print(f"make_x_fixture writer: FAIL (chain sampler drift {drift:.2e})")
+        return False
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.xbin")
+        make_x_fixture.write_hpcx(path, n, p, iter(rows))
+        rn, rp, payload = make_x_fixture.read_hpcx(path)
+        back = np.frombuffer(payload, dtype="<f8").reshape(rn, rp)
+        if (rn, rp) != (n, p) or not (back == theirs).all():
+            print("make_x_fixture writer: FAIL (HPCX round trip not bit-exact)")
+            return False
+    print(f"make_x_fixture writer: OK (sampler drift {drift:.2e} <= 1e-10, "
+          "HPCX round trip bit-exact)")
+    return True
+
+
 def main():
     ok = True
+
+    # The HPCX fixture writer must mirror the generators this script
+    # (and `hpconcord convert`) mirrors.
+    ok &= check_x_fixture_writer()
 
     # screening_equivalence.rs: the connected acceptance fixture must
     # stay ONE component at lambda1 = 0.05.
