@@ -155,6 +155,31 @@ COMMANDS:
              offline model selection)
            [--select-density T] [--out-omega FILE]  (write the estimate
              whose off-diagonal density is closest to T; default 0.1)
+  serve    Long-running multi-tenant estimation service: admits solve /
+           sweep / stability jobs over a line-delimited JSON protocol
+           (one frame per line over TCP), packs concurrent jobs through
+           the shared wave executor under the operator's global budgets,
+           and reuses screening artifacts across jobs keyed on the
+           dataset fingerprint. A served result is byte-for-byte the
+           `--out-omega` of the equivalent CLI run (determinism rule 9).
+           [--addr HOST:PORT]  (bind address; default 127.0.0.1:7878,
+             TOML serve.addr; port 0 picks a free port, printed as
+             \"serving on ADDR\" at startup)
+           [--ranks-budget N] [--mem-budget N]  (global caps applied to
+             every admitted job — schedule-only: they override the
+             per-job knobs but never a result bit; TOML
+             serve.ranks_budget / serve.mem_budget)
+  client   Submit one job to a running server and wait for it
+           --addr HOST:PORT  [--kind solve|sweep|stability]
+           + the solve/sweep workload and solver options (the request
+             travels over the wire; the server loads or generates X)
+           [--subsamples N --fraction F --stab-threshold F
+             --stab-seed S]  (stability kind)
+           [--select-density T]  (sweep kind: which point's omega the
+             `result` op returns; default 0.1)
+           [--out-omega FILE]  (write the returned estimate — compares
+             equal via cmp with a local run's --out-omega)
+           [--shutdown]  (ask the server to exit instead of submitting)
   convert  Write a workload's X to an on-disk HPCX file for later
            `solve`/`sweep ... --x-file` runs (24-byte header — magic
            \"HPCX\", version, n, p — then row-major LE f64; written
@@ -173,6 +198,12 @@ COMMANDS:
   engine   List and smoke-run the AOT artifacts through PJRT
            [--artifacts DIR]
   help     Show this message
+
+NOTES:
+  Library users: the `_src`-suffixed screened entry points
+  (fit_screened_distributed_src and friends) are deprecated — the
+  canonical functions now take an XSource directly; `_mat` shims cover
+  in-core callers for one release.
 ";
 
 #[cfg(test)]

@@ -157,6 +157,22 @@ pub struct ExecutorRun {
     pub cost: CostSummary,
 }
 
+/// Partition task-submission-ordered outcomes back into contiguous
+/// per-job groups of the given lengths — the inverse of the submission
+/// convention every coordinator (and the serve layer) uses: job 0's
+/// tasks first, then job 1's, and so on. Panics if the counts don't
+/// cover the outcomes exactly; that is caller bookkeeping gone wrong,
+/// not a runtime condition.
+pub fn split_by_counts(outcomes: Vec<TaskOutcome>, counts: &[usize]) -> Vec<Vec<TaskOutcome>> {
+    assert_eq!(
+        counts.iter().sum::<usize>(),
+        outcomes.len(),
+        "per-job task counts must cover every outcome"
+    );
+    let mut it = outcomes.into_iter();
+    counts.iter().map(|&c| it.by_ref().take(c).collect()).collect()
+}
+
 /// The wave-execution engine: packs job-tagged component plans under a
 /// global rank budget and launches them. Pure configuration — build
 /// one per batch and call [`FabricExecutor::run`].
@@ -473,6 +489,32 @@ mod tests {
         assert!(format!("{err}").contains("memory budget"), "{err}");
         let fits = FabricExecutor { mem_budget: need, ..executor() };
         assert!(fits.run(&jobs, vec![single_node_task(0, 0, vec![0, 1, 2])]).is_ok());
+    }
+
+    /// `split_by_counts` is the exact inverse of contiguous per-job
+    /// submission: groups come back in job order with the job's tags.
+    #[test]
+    fn split_by_counts_inverts_contiguous_submission() {
+        let mut rng = Rng::new(9);
+        let prob = gen::chain_problem(6, 40, &mut rng);
+        let cfg = ConcordConfig { lambda1: 0.3, max_iter: 10, ..Default::default() };
+        let jobs = [
+            ExecutorJob { x: XSource::InCore(&prob.x), cfg, rows: None },
+            ExecutorJob { x: XSource::InCore(&prob.x), cfg, rows: None },
+        ];
+        let tasks = vec![
+            single_node_task(0, 0, vec![0, 1]),
+            single_node_task(0, 1, vec![2, 3]),
+            single_node_task(1, 0, vec![4, 5]),
+        ];
+        let run = executor().run(&jobs, tasks).unwrap();
+        let groups = split_by_counts(run.outcomes, &[2, 1]);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].len(), 2);
+        assert_eq!(groups[1].len(), 1);
+        assert_eq!(groups[0][0].tag, JobTag { job: 0, component: 0 });
+        assert_eq!(groups[0][1].tag, JobTag { job: 0, component: 1 });
+        assert_eq!(groups[1][0].tag, JobTag { job: 1, component: 0 });
     }
 
     /// A job carrying a row view solves exactly as if the row subset

@@ -37,16 +37,22 @@ pub mod dist_common;
 pub mod executor;
 pub mod obs;
 pub mod ops;
+pub mod request;
 pub mod screened_dist;
 pub mod screening;
 pub mod single_node;
 
-pub use executor::{ExecutorJob, ExecutorRun, ExecutorTask, FabricExecutor, TaskOutcome};
-pub use screened_dist::{
-    fit_screened_distributed, fit_screened_distributed_src, screen_distributed_multi,
-    screen_streamed, screen_streamed_src, MultiScreenPass, ScreenLevel, ScreenedDistFit,
-    ScreenedDistOptions,
+pub use executor::{
+    split_by_counts, ExecutorJob, ExecutorRun, ExecutorTask, FabricExecutor, TaskOutcome,
 };
+pub use request::{EstimationRequest, RequestKind, RequestOutcome, WorkloadSpec};
+pub use screened_dist::{
+    fit_screened_distributed, screen_distributed_multi, screen_streamed, screen_streamed_src,
+    MultiScreenPass, ScreenLevel, ScreenedDistFit, ScreenedDistOptions,
+};
+// Deprecated pre-`XSource` shims, re-exported for one release.
+#[allow(deprecated)]
+pub use screened_dist::{fit_screened_distributed_mat, fit_screened_distributed_src};
 pub use screening::{fit_with_screening, fit_with_screening_on, ComponentStat, ScreenedFit};
 pub use single_node::fit_single_node;
 

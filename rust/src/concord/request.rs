@@ -1,0 +1,326 @@
+//! The unified estimation request: one builder owning everything that
+//! used to be spread across [`ConcordConfig`], [`ScreenedDistOptions`]
+//! and ad-hoc CLI pin/budget plumbing in `main.rs`.
+//!
+//! Every front door — `solve`/`sweep` on the CLI, and every job the
+//! `serve` layer admits over the wire — constructs one
+//! [`EstimationRequest`] and executes it through [`EstimationRequest::run`],
+//! so the batch prologue (`batch_setup`: tile install, budget
+//! resolution, pin validation) has exactly one caller path by
+//! construction. A request is pure data (no open files, no threads):
+//! the X it runs over is supplied at execution time as an [`XSource`],
+//! which keeps determinism rule 8 intact — the same request over
+//! either backend returns bit-identical estimates.
+
+use anyhow::{anyhow, Result};
+
+use crate::cli::Args;
+use crate::config::Config;
+use crate::coordinator::{
+    run_sweep_screened_dist, stability_selection_dist, GridSchedule, GridSpec,
+    ScreenedDistSweepOutcome, StabilityConfig, StabilityDistOutcome,
+};
+use crate::gen;
+use crate::io::XSource;
+use crate::linalg::TileConfig;
+use crate::rng::Rng;
+use crate::simnet::cost::GridBill;
+use crate::simnet::MachineParams;
+
+use super::screened_dist::{solves_view, ScreenedDistFit};
+use super::{fit_screened_distributed, ConcordConfig, ScreenedDistOptions, Variant};
+
+/// The synthetic workload a request runs over when no `--x-file` is
+/// given: the generator's knobs, as pure data (the ground-truth omega
+/// the support metrics read comes from regenerating it).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Generator name: `chain` or `random`.
+    pub name: String,
+    pub p: usize,
+    pub n: usize,
+    /// Target degree (the `random` workload only).
+    pub deg: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec { name: "chain".to_string(), p: 256, n: 100, deg: 8, seed: 42 }
+    }
+}
+
+impl WorkloadSpec {
+    /// CLI/TOML resolution (CLI flags win): `--workload/--p/--n/--deg/
+    /// --seed`, TOML `workload`/`p`/`n`/`deg`.
+    pub fn from_args(args: &Args, cfg: &Config) -> Result<WorkloadSpec> {
+        Ok(WorkloadSpec {
+            name: args.str_or("workload", cfg.str_or("workload", "chain")?),
+            p: args.usize_or("p", cfg.usize_or("p", 256)?)?,
+            n: args.usize_or("n", cfg.usize_or("n", 100)?)?,
+            deg: args.usize_or("deg", cfg.usize_or("deg", 8)?)?,
+            seed: args.u64_or("seed", 42)?,
+        })
+    }
+
+    /// Generate the named problem; unknown names are a clean error.
+    pub fn generate(&self) -> Result<gen::Problem> {
+        let mut rng = Rng::new(self.seed);
+        match self.name.as_str() {
+            "chain" => Ok(gen::chain_problem(self.p, self.n, &mut rng)),
+            "random" => Ok(gen::random_problem(self.p, self.n, self.deg, &mut rng)),
+            other => Err(anyhow!("unknown workload {other:?} (chain|random)")),
+        }
+    }
+}
+
+/// What a request asks for: one screened distributed fit, a (λ₁, λ₂)
+/// grid sweep, or stability selection over row subsamples.
+#[derive(Debug, Clone)]
+pub enum RequestKind {
+    Solve,
+    Sweep {
+        grid: GridSpec,
+        /// Run the per-point reference schedule instead of the packed
+        /// grid schedule (bit-identical results; the bill changes).
+        per_point: bool,
+    },
+    Stability { stab: StabilityConfig },
+}
+
+/// The outcome of [`EstimationRequest::run`], one variant per
+/// [`RequestKind`].
+#[derive(Debug)]
+pub enum RequestOutcome {
+    Solve(Box<ScreenedDistFit>),
+    Sweep(ScreenedDistSweepOutcome),
+    Stability(StabilityDistOutcome),
+}
+
+impl RequestOutcome {
+    /// The grid-level billing view of any outcome: a single fit bills
+    /// its screening pass and wave schedule as a one-job grid.
+    pub fn bill(&self) -> GridBill {
+        match self {
+            RequestOutcome::Solve(fit) => GridBill {
+                screen: fit.screen_cost,
+                waves: fit.solve_cost,
+                per_job: vec![solves_view(&fit.solves)],
+            },
+            RequestOutcome::Sweep(out) => out.bill.clone(),
+            RequestOutcome::Stability(out) => out.bill.clone(),
+        }
+    }
+}
+
+/// One estimation request: the solver tuning, the distributed options,
+/// the workload (or on-disk X path) and the kind, in one place.
+#[derive(Debug, Clone)]
+pub struct EstimationRequest {
+    pub kind: RequestKind,
+    pub cfg: ConcordConfig,
+    pub opts: ScreenedDistOptions,
+    pub workload: WorkloadSpec,
+    /// HPCX path replacing the generated workload's X (the workload
+    /// still names the problem shape the file must match).
+    pub x_file: Option<String>,
+}
+
+impl EstimationRequest {
+    /// A request of the given kind with default tuning.
+    pub fn new(kind: RequestKind) -> EstimationRequest {
+        EstimationRequest {
+            kind,
+            cfg: ConcordConfig::default(),
+            opts: ScreenedDistOptions::default(),
+            workload: WorkloadSpec::default(),
+            x_file: None,
+        }
+    }
+
+    /// The CLI/TOML resolution path shared by `solve`, `sweep` and the
+    /// server's defaults: solver tuning from `--lambda1`/`[solver]`,
+    /// fabric knobs from `--ranks`/`--ranks-budget`/`--mem-budget`/
+    /// `[fabric]`, screening knobs from `--screen-cutoff`/
+    /// `--gram-block`/`[screen]`, replication pins from
+    /// `--cx`/`--comega`, and the workload/x-file pair. CLI flags win
+    /// over the config file; defaults match the type-level defaults.
+    pub fn from_args(kind: RequestKind, args: &Args, cfg: &Config) -> Result<EstimationRequest> {
+        let mut req = EstimationRequest::new(kind);
+        req.cfg = ConcordConfig {
+            lambda1: args.f64_or("lambda1", cfg.f64_or("solver.lambda1", 0.3)?)?,
+            lambda2: args.f64_or("lambda2", cfg.f64_or("solver.lambda2", 0.0)?)?,
+            tol: args.f64_or("tol", cfg.f64_or("solver.tol", 1e-5)?)?,
+            max_iter: args.usize_or("max-iter", cfg.usize_or("solver.max_iter", 500)?)?,
+            max_linesearch: args
+                .usize_or("max-linesearch", cfg.usize_or("solver.max_linesearch", 40)?)?,
+            variant: parse_variant(&args.str_or("variant", cfg.str_or("solver.variant", "auto")?)),
+            threads: node_threads(args, cfg)?,
+            tile: tile_config(args, cfg)?,
+            // Global concurrent rank budget for screened distributed
+            // solving (0 = "use --ranks"): CLI --ranks-budget, TOML
+            // fabric.budget.
+            ranks_budget: args.usize_or("ranks-budget", cfg.usize_or("fabric.budget", 0)?)?,
+            // Host-memory budget in f64 words for wave packing (0 =
+            // unbounded): CLI --mem-budget, TOML fabric.mem_budget. A
+            // schedule-only knob — results are bit-identical at any
+            // value that admits a schedule (determinism rule 7).
+            // Parsed as u64 end to end: no narrowing cast between
+            // user input and packer.
+            mem_budget: args.u64_or("mem-budget", cfg.u64_or("fabric.mem_budget", 0)?)?,
+        };
+        let ranks = args.usize_or("ranks", cfg.usize_or("fabric.ranks", 8)?)?;
+        let c_x = args.usize_or("cx", cfg.usize_or("fabric.cx", 1)?)?;
+        let c_o = args.usize_or("comega", cfg.usize_or("fabric.comega", 1)?)?;
+        let pinned = args.has("cx")
+            || args.has("comega")
+            || cfg.get("fabric.cx").is_some()
+            || cfg.get("fabric.comega").is_some();
+        req.opts = ScreenedDistOptions {
+            total_ranks: ranks,
+            machine: MachineParams::default(),
+            small_cutoff: args.usize_or("screen-cutoff", cfg.usize_or("screen.cutoff", 4)?)?,
+            fixed: if pinned { Some((ranks, c_x, c_o)) } else { None },
+            sequential: false,
+            // Row-panel width for the streamed gram pass (0 = in-core):
+            // CLI --gram-block, TOML screen.gram_block. Bit-identical
+            // to the in-core pass at any width (rules 1 and 7).
+            gram_block: args.usize_or("gram-block", cfg.usize_or("screen.gram_block", 0)?)?,
+        };
+        req.workload = WorkloadSpec::from_args(args, cfg)?;
+        let path = args.str_or("x-file", cfg.str_or("solver.x_file", "")?);
+        req.x_file = if path.is_empty() { None } else { Some(path) };
+        Ok(req)
+    }
+
+    /// The λ₁ thresholds this request's screening pass scans — the
+    /// screening-artifact cache keys on these (plus the dataset
+    /// fingerprint and the fabric/panel knobs).
+    pub fn thresholds(&self) -> Vec<f64> {
+        match &self.kind {
+            RequestKind::Sweep { grid, .. } => grid.lambda1.clone(),
+            _ => vec![self.cfg.lambda1],
+        }
+    }
+
+    /// Execute the request over `x` through the canonical `XSource`
+    /// entry points — the one shared path behind the CLI and the
+    /// server (determinism rule 9: any front door yields the bytes
+    /// this call yields).
+    pub fn run(&self, x: XSource<'_>) -> Result<RequestOutcome> {
+        match &self.kind {
+            RequestKind::Solve => {
+                let fit = fit_screened_distributed(x, &self.cfg, &self.opts)?;
+                Ok(RequestOutcome::Solve(Box::new(fit)))
+            }
+            RequestKind::Sweep { grid, per_point } => {
+                let mode =
+                    if *per_point { GridSchedule::PerPoint } else { GridSchedule::Packed };
+                let out = run_sweep_screened_dist(x, grid, &self.cfg, &self.opts, mode)?;
+                Ok(RequestOutcome::Sweep(out))
+            }
+            RequestKind::Stability { stab } => {
+                let out = stability_selection_dist(x, &self.cfg, stab, &self.opts)?;
+                Ok(RequestOutcome::Stability(out))
+            }
+        }
+    }
+}
+
+/// Variant names as the CLI and the wire protocol spell them; anything
+/// else falls back to `auto` (the historical CLI behavior).
+pub fn parse_variant(name: &str) -> Variant {
+    match name {
+        "cov" => Variant::Cov,
+        "obs" => Variant::Obs,
+        _ => Variant::Auto,
+    }
+}
+
+/// The kernel layer's cache-blocking shape: `--tile mc,kc,nc`, else the
+/// config file's `solver.tile = [mc, kc, nc]`, else the compile-time
+/// default. Bit-identical results at any value — a throughput knob.
+pub fn tile_config(args: &Args, cfg: &Config) -> Result<TileConfig> {
+    let raw = args.str_or("tile", "");
+    if !raw.is_empty() {
+        return TileConfig::parse(&raw);
+    }
+    let from_file = cfg.array_or("solver.tile", &[])?;
+    if from_file.is_empty() {
+        Ok(TileConfig::DEFAULT)
+    } else {
+        TileConfig::from_f64s(&from_file)
+    }
+}
+
+/// The node-local thread count (the paper's per-node t): `--threads N`,
+/// else the config file's `solver.threads`, else `--threads auto` /
+/// `solver.threads = 0` picks the host's available parallelism.
+pub fn node_threads(args: &Args, cfg: &Config) -> Result<usize> {
+    let raw = args.str_or("threads", "");
+    let n = if raw == "auto" {
+        0
+    } else if raw.is_empty() {
+        cfg.usize_or("solver.threads", 1)?
+    } else {
+        args.usize_or("threads", 1)?
+    };
+    Ok(if n == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        n
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(str::to_string).collect();
+        Args::parse(&argv)
+    }
+
+    #[test]
+    fn from_args_resolves_cli_over_defaults() {
+        let args = parse("solve --lambda1 0.45 --ranks 16 --ranks-budget 6 --mem-budget 999");
+        let req =
+            EstimationRequest::from_args(RequestKind::Solve, &args, &Config::default()).unwrap();
+        assert_eq!(req.cfg.lambda1, 0.45);
+        assert_eq!(req.opts.total_ranks, 16);
+        assert_eq!(req.cfg.ranks_budget, 6);
+        assert_eq!(req.cfg.mem_budget, 999);
+        assert!(req.opts.fixed.is_none());
+        assert!(req.x_file.is_none());
+    }
+
+    #[test]
+    fn pins_only_when_replication_is_explicit() {
+        let cfg = Config::default();
+        let none = EstimationRequest::from_args(RequestKind::Solve, &parse("solve"), &cfg);
+        assert!(none.unwrap().opts.fixed.is_none());
+        let some = EstimationRequest::from_args(
+            RequestKind::Solve,
+            &parse("solve --ranks 4 --cx 2"),
+            &cfg,
+        );
+        assert_eq!(some.unwrap().opts.fixed, Some((4, 2, 1)));
+    }
+
+    #[test]
+    fn thresholds_follow_the_kind() {
+        let solve = EstimationRequest::new(RequestKind::Solve);
+        assert_eq!(solve.thresholds(), vec![solve.cfg.lambda1]);
+        let grid = GridSpec { lambda1: vec![0.2, 0.5], lambda2: vec![0.0] };
+        let sweep =
+            EstimationRequest::new(RequestKind::Sweep { grid: grid.clone(), per_point: false });
+        assert_eq!(sweep.thresholds(), grid.lambda1);
+    }
+
+    #[test]
+    fn unknown_workload_is_a_clean_error() {
+        let spec = WorkloadSpec { name: "spiral".into(), ..Default::default() };
+        let err = spec.generate().unwrap_err();
+        assert!(err.to_string().contains("unknown workload"), "{err}");
+    }
+}

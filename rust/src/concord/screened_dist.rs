@@ -755,6 +755,29 @@ pub(crate) fn batch_setup(
     })
 }
 
+/// Deprecated `&Mat` shim for [`fit_screened_distributed`] — kept one
+/// release for out-of-tree callers of the pre-`XSource` signature.
+#[deprecated(since = "0.2.0", note = "use fit_screened_distributed(XSource::InCore(x), ..)")]
+pub fn fit_screened_distributed_mat(
+    x: &Mat,
+    cfg: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<ScreenedDistFit> {
+    fit_screened_distributed(XSource::InCore(x), cfg, opts)
+}
+
+/// Deprecated alias from when the `XSource` entry point was the `_src`
+/// twin of a `&Mat` wrapper; [`fit_screened_distributed`] *is* that
+/// function now.
+#[deprecated(since = "0.2.0", note = "renamed to fit_screened_distributed")]
+pub fn fit_screened_distributed_src(
+    x: XSource<'_>,
+    cfg: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<ScreenedDistFit> {
+    fit_screened_distributed(x, cfg, opts)
+}
+
 /// Fit with screening on the distributed path: screen on a fabric, give
 /// every non-trivial component a cost-model-sized fabric plan, and hand
 /// the job-tagged tasks to the [`FabricExecutor`] — waves of fabrics
@@ -763,21 +786,13 @@ pub(crate) fn batch_setup(
 /// Small components solve single-node; singletons use the closed form.
 /// This is the executor's thin single-job client; the grid
 /// coordinators submit many jobs into one shared schedule the same way.
-pub fn fit_screened_distributed(
-    x: &Mat,
-    cfg: &ConcordConfig,
-    opts: &ScreenedDistOptions,
-) -> Result<ScreenedDistFit> {
-    fit_screened_distributed_src(XSource::InCore(x), cfg, opts)
-}
-
-/// [`fit_screened_distributed`] over either X backend — the CLI's
-/// `--x-file` lands here. Determinism rule 8: the backend is a
+/// Takes either X backend ([`XSource::InCore`] or the CLI's `--x-file`
+/// via [`XSource::OnDisk`]); determinism rule 8 makes the backend a
 /// schedule-only knob, so the estimate, objective and every metered
-/// counter are bit-for-bit those of the in-core run; only the modeled
+/// counter are bit-for-bit identical across backends — only the modeled
 /// source residency (`x_panel_words`, and `peak_mem_words` of the
 /// screening pass) moves. `rust/tests/out_of_core.rs` is the wall.
-pub fn fit_screened_distributed_src(
+pub fn fit_screened_distributed(
     x: XSource<'_>,
     cfg: &ConcordConfig,
     opts: &ScreenedDistOptions,
@@ -920,7 +935,7 @@ mod tests {
         let prob = gen::chain_problem(3, 30, &mut rng);
         let cfg = ConcordConfig { lambda1: 0.3, max_iter: 30, ..Default::default() };
         let opts = ScreenedDistOptions { total_ranks: 16, ..Default::default() };
-        let out = fit_screened_distributed(&prob.x, &cfg, &opts).unwrap();
+        let out = fit_screened_distributed(XSource::InCore(&prob.x), &cfg, &opts).unwrap();
         assert_eq!(out.fit.omega.rows(), 3);
         assert!(out.components >= 1);
     }
@@ -932,8 +947,8 @@ mod tests {
         let mut rng = Rng::new(14);
         let prob = gen::chain_problem(8, 40, &mut rng);
         let cfg = ConcordConfig { lambda1: 50.0, lambda2: 0.25, ..Default::default() };
-        let out =
-            fit_screened_distributed(&prob.x, &cfg, &ScreenedDistOptions::default()).unwrap();
+        let opts = ScreenedDistOptions::default();
+        let out = fit_screened_distributed(XSource::InCore(&prob.x), &cfg, &opts).unwrap();
         assert_eq!(out.components, 8);
         assert_eq!(out.largest, 1);
         assert!(out.solves.is_empty());

@@ -203,6 +203,11 @@ verbose = true
 
 [fabric]
 ranks = 16
+
+[serve]
+addr = "127.0.0.1:9911"
+ranks_budget = 12
+mem_budget = 200000
 "#;
 
     #[test]
@@ -230,6 +235,20 @@ ranks = 16
         assert!(c.bool_or("p", false).is_err());
         assert_eq!(c.str_or("workload", "x").unwrap(), "chain");
         assert_eq!(c.array_or("solver.grid", &[]).unwrap(), vec![0.1, 0.2, 0.3]);
+    }
+
+    /// The `serve` subcommand reads its bind address and global budgets
+    /// from a `[serve]` section through the generic accessors — pin the
+    /// key spellings the launcher uses.
+    #[test]
+    fn serve_section_keys_resolve() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("serve.addr", "127.0.0.1:7878").unwrap(), "127.0.0.1:9911");
+        assert_eq!(c.usize_or("serve.ranks_budget", 0).unwrap(), 12);
+        assert_eq!(c.u64_or("serve.mem_budget", 0).unwrap(), 200_000);
+        // Absent section: the launcher defaults apply.
+        let empty = Config::default();
+        assert_eq!(empty.str_or("serve.addr", "127.0.0.1:7878").unwrap(), "127.0.0.1:7878");
     }
 
     #[test]

@@ -17,11 +17,15 @@ pub mod sweep;
 
 pub use fmri::{run_fmri_study, FmriOutcome, FmriParams, MethodScore};
 pub use stability::{
-    stability_selection, stability_selection_dist, stability_selection_dist_src, subsample_rows,
-    StabilityConfig, StabilityDistOutcome, StabilityOutcome,
+    stability_selection, stability_selection_dist, subsample_rows, StabilityConfig,
+    StabilityDistOutcome, StabilityOutcome,
 };
 pub use sweep::{
-    run_sweep, run_sweep_screened, run_sweep_screened_dist, run_sweep_screened_dist_src,
-    select_by_density, GridSchedule, GridSpec, ScreenedDistSweepOutcome, ScreenedSweepOutcome,
-    SweepJob, SweepOutcome, SweepResult,
+    run_sweep, run_sweep_screened, run_sweep_screened_dist, select_by_density, GridSchedule,
+    GridSpec, ScreenedDistSweepOutcome, ScreenedSweepOutcome, SweepJob, SweepOutcome, SweepResult,
 };
+// Deprecated pre-`XSource` shims, re-exported for one release.
+#[allow(deprecated)]
+pub use stability::{stability_selection_dist_mat, stability_selection_dist_src};
+#[allow(deprecated)]
+pub use sweep::{run_sweep_screened_dist_mat, run_sweep_screened_dist_src};

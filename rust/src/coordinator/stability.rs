@@ -11,9 +11,9 @@ use std::sync::{mpsc, Arc};
 
 use anyhow::Result;
 
-use crate::concord::executor::{ExecutorJob, FabricExecutor, TaskOutcome};
+use crate::concord::executor::{split_by_counts, ExecutorJob, FabricExecutor};
 use crate::concord::screened_dist::{batch_setup, plan_job_tasks, reassemble_job, solves_view};
-use crate::concord::{fit_single_node, screen_streamed, ConcordConfig, ScreenedDistOptions};
+use crate::concord::{fit_single_node, screen_streamed_src, ConcordConfig, ScreenedDistOptions};
 use crate::io::XSource;
 use crate::linalg::Mat;
 use crate::rng::Rng;
@@ -165,24 +165,15 @@ pub struct StabilityDistOutcome {
 /// of `x` ([`ExecutorJob`]), so peak residency is ~one subsample copy
 /// rather than all B at once — bit-identical either way
 /// (`rust/tests/memory_budget.rs`).
-pub fn stability_selection_dist(
-    x: &Mat,
-    base: &ConcordConfig,
-    cfg: &StabilityConfig,
-    opts: &ScreenedDistOptions,
-) -> Result<StabilityDistOutcome> {
-    stability_selection_dist_src(XSource::InCore(x), base, cfg, opts)
-}
-
-/// [`stability_selection_dist`] over either X backend — the CLI's
-/// stability path with `--x-file` lands here. Each subsample is
-/// materialized through [`XSource::subsample`] (a lazy row gather: on
-/// disk only the m × p subsample and one read row are ever resident)
-/// and the component solves rebuild their sub-matrices through the
-/// same source. Determinism rule 8: the gathered rows are bit-for-bit
-/// the in-core rows, so frequencies, edges and counters are
+/// Takes either X backend — the CLI's stability path with `--x-file`
+/// lands here via [`XSource::OnDisk`]. Each subsample is materialized
+/// through [`XSource::subsample`] (a lazy row gather: on disk only the
+/// m × p subsample and one read row are ever resident) and the
+/// component solves rebuild their sub-matrices through the same
+/// source. Determinism rule 8: the gathered rows are bit-for-bit the
+/// in-core rows, so frequencies, edges and counters are
 /// backend-invariant.
-pub fn stability_selection_dist_src(
+pub fn stability_selection_dist(
     x: XSource<'_>,
     base: &ConcordConfig,
     cfg: &StabilityConfig,
@@ -208,14 +199,14 @@ pub fn stability_selection_dist_src(
     for b in 0..cfg.subsamples {
         let rows = subsample_rows(n, m, cfg.seed, b);
         let sub = x.subsample(&rows)?;
-        let mut pass = screen_streamed(
-            &sub,
+        let mut pass = screen_streamed_src(
+            XSource::InCore(&sub),
             std::slice::from_ref(&base.lambda1),
             setup.screen_ranks,
             opts.machine,
             setup.threads,
             opts.gram_block,
-        );
+        )?;
         bill.screen.merge_sequential(&pass.cost);
         let level = pass.levels.pop().expect("one threshold, one level");
         let job_tasks = plan_job_tasks(b, &level, m, base, opts);
@@ -245,10 +236,9 @@ pub fn stability_selection_dist_src(
     // Reassemble per subsample in index order; the frequency matrix
     // accumulates in that fixed order whatever the launch order was.
     let mut freq = Mat::zeros(p, p);
-    let mut outcomes = run.outcomes.into_iter();
-    for (b, &count) in tasks_per_job.iter().enumerate() {
+    let groups = split_by_counts(run.outcomes, &tasks_per_job);
+    for (b, outs) in groups.into_iter().enumerate() {
         let (level, diag) = &levels[b];
-        let outs: Vec<TaskOutcome> = outcomes.by_ref().take(count).collect();
         let (screened, solves) = reassemble_job(&level.components, diag, base.lambda2, outs);
         bill.per_job.push(solves_view(&solves));
         for i in 0..p {
@@ -262,6 +252,31 @@ pub fn stability_selection_dist_src(
     let edges = stable_edges(&freq, cfg.threshold);
     let cost = bill.total();
     Ok(StabilityDistOutcome { frequency: freq, edges, subsamples: cfg.subsamples, bill, cost })
+}
+
+/// Deprecated `&Mat` shim for [`stability_selection_dist`] — kept one
+/// release for out-of-tree callers of the pre-`XSource` signature.
+#[deprecated(since = "0.2.0", note = "use stability_selection_dist(XSource::InCore(x), ..)")]
+pub fn stability_selection_dist_mat(
+    x: &Mat,
+    base: &ConcordConfig,
+    cfg: &StabilityConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<StabilityDistOutcome> {
+    stability_selection_dist(XSource::InCore(x), base, cfg, opts)
+}
+
+/// Deprecated alias from when the `XSource` entry point was the `_src`
+/// twin of a `&Mat` wrapper; [`stability_selection_dist`] *is* that
+/// function now.
+#[deprecated(since = "0.2.0", note = "renamed to stability_selection_dist")]
+pub fn stability_selection_dist_src(
+    x: XSource<'_>,
+    base: &ConcordConfig,
+    cfg: &StabilityConfig,
+    opts: &ScreenedDistOptions,
+) -> Result<StabilityDistOutcome> {
+    stability_selection_dist(x, base, cfg, opts)
 }
 
 #[cfg(test)]
@@ -334,8 +349,10 @@ mod tests {
         // β_mem = 0: planning must not race other tests' tile installs.
         let machine = MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() };
         let opts = ScreenedDistOptions { total_ranks: 4, machine, ..Default::default() };
-        let a = stability_selection_dist(&prob.x, &base_cfg(), &cfg, &opts).unwrap();
-        let b = stability_selection_dist(&prob.x, &base_cfg(), &cfg, &opts).unwrap();
+        let a = stability_selection_dist(XSource::InCore(&prob.x), &base_cfg(), &cfg, &opts)
+            .unwrap();
+        let b = stability_selection_dist(XSource::InCore(&prob.x), &base_cfg(), &cfg, &opts)
+            .unwrap();
         assert!(a.frequency.max_abs_diff(&b.frequency) == 0.0);
         assert_eq!(a.edges, b.edges);
         assert_eq!(a.cost.total, b.cost.total);

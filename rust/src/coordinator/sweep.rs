@@ -13,10 +13,13 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::concord::executor::{ExecutorJob, ExecutorTask, FabricExecutor, TaskOutcome};
-use crate::concord::screened_dist::{batch_setup, plan_job_tasks, reassemble_job, solves_view};
+use crate::concord::executor::{split_by_counts, ExecutorJob, ExecutorTask, FabricExecutor};
+use crate::concord::screened_dist::{
+    batch_setup, plan_job_tasks, reassemble_job, solves_view, BatchSetup,
+};
+use crate::concord::MultiScreenPass;
 use crate::concord::screening::{fit_with_screening_on, nested_components, Components};
-use crate::concord::{fit_screened_distributed_src, fit_single_node, ConcordConfig, ConcordFit};
+use crate::concord::{fit_screened_distributed, fit_single_node, ConcordConfig, ConcordFit};
 use crate::concord::{screen_streamed_src, ScreenedDistOptions};
 use crate::cost::schedule::ConcurrentSchedule;
 use crate::io::XSource;
@@ -248,23 +251,12 @@ pub struct ScreenedDistSweepOutcome {
 /// reassembled per job in job order and are bit-identical to running
 /// [`fit_screened_distributed`](crate::concord::fit_screened_distributed)
 /// point by point, at any budget and thread count
-/// (`rust/tests/grid_schedule.rs`).
+/// (`rust/tests/grid_schedule.rs`). Takes either X backend — the CLI's
+/// `sweep --mode dist --x-file` lands here via [`XSource::OnDisk`];
+/// determinism rule 8 makes the backend a schedule-only knob, so every
+/// grid point's estimate, density and metered counters are bit-for-bit
+/// the in-core sweep's and only the modeled source residency moves.
 pub fn run_sweep_screened_dist(
-    x: &Mat,
-    grid: &GridSpec,
-    base: &ConcordConfig,
-    opts: &ScreenedDistOptions,
-    mode: GridSchedule,
-) -> Result<ScreenedDistSweepOutcome> {
-    run_sweep_screened_dist_src(XSource::InCore(x), grid, base, opts, mode)
-}
-
-/// [`run_sweep_screened_dist`] over either X backend — the CLI's
-/// `sweep --mode dist --x-file` lands here. Determinism rule 8: the
-/// backend is a schedule-only knob, so every grid point's estimate,
-/// density and metered counters are bit-for-bit the in-core sweep's;
-/// only the modeled source residency moves.
-pub fn run_sweep_screened_dist_src(
     x: XSource<'_>,
     grid: &GridSpec,
     base: &ConcordConfig,
@@ -275,6 +267,33 @@ pub fn run_sweep_screened_dist_src(
         GridSchedule::Packed => sweep_dist_packed(x, grid, base, opts),
         GridSchedule::PerPoint => sweep_dist_per_point(x, grid, base, opts),
     }
+}
+
+/// Deprecated `&Mat` shim for [`run_sweep_screened_dist`] — kept one
+/// release for out-of-tree callers of the pre-`XSource` signature.
+#[deprecated(since = "0.2.0", note = "use run_sweep_screened_dist(XSource::InCore(x), ..)")]
+pub fn run_sweep_screened_dist_mat(
+    x: &Mat,
+    grid: &GridSpec,
+    base: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+    mode: GridSchedule,
+) -> Result<ScreenedDistSweepOutcome> {
+    run_sweep_screened_dist(XSource::InCore(x), grid, base, opts, mode)
+}
+
+/// Deprecated alias from when the `XSource` entry point was the `_src`
+/// twin of a `&Mat` wrapper; [`run_sweep_screened_dist`] *is* that
+/// function now.
+#[deprecated(since = "0.2.0", note = "renamed to run_sweep_screened_dist")]
+pub fn run_sweep_screened_dist_src(
+    x: XSource<'_>,
+    grid: &GridSpec,
+    base: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+    mode: GridSchedule,
+) -> Result<ScreenedDistSweepOutcome> {
+    run_sweep_screened_dist(x, grid, base, opts, mode)
 }
 
 /// The reference schedule: every grid point standalone, in job order.
@@ -289,7 +308,7 @@ fn sweep_dist_per_point(
     let mut schedules = Vec::new();
     let mut bill = GridBill::default();
     for job in grid.jobs(base) {
-        let out = fit_screened_distributed_src(x, &job.cfg, opts)?;
+        let out = fit_screened_distributed(x, &job.cfg, opts)?;
         bill.screen.merge_sequential(&out.screen_cost);
         bill.waves.merge_sequential(&out.solve_cost);
         bill.per_job.push(solves_view(&out.solves));
@@ -323,7 +342,27 @@ fn sweep_dist_packed(
         setup.threads,
         opts.gram_block,
     )?;
+    let screen_share = pass.cost;
+    sweep_dist_packed_with(x, grid, base, opts, &setup, &pass, screen_share)
+}
 
+/// The packed solve phase on a *supplied* screening pass: everything
+/// after screening, with the screening share of the bill given by the
+/// caller. The serve layer (`crate::serve`) enters here with a cached
+/// pass and a zero share — a cache hit changes the bill only, never a
+/// result bit, because the cached artifact is bit-identical to the one
+/// a fresh pass would compute (determinism rule 9). `pass.levels` must
+/// be aligned with `grid.lambda1` (screened at those thresholds, in
+/// order).
+pub(crate) fn sweep_dist_packed_with(
+    x: XSource<'_>,
+    grid: &GridSpec,
+    base: &ConcordConfig,
+    opts: &ScreenedDistOptions,
+    setup: &BatchSetup,
+    pass: &MultiScreenPass,
+    screen_share: CostSummary,
+) -> Result<ScreenedDistSweepOutcome> {
     // Plan each λ₁ level once — plans depend on the level (and the
     // shared variant/threads), never on λ₂ — then re-tag the level's
     // tasks for every job that shares it: exactly the plans the
@@ -359,13 +398,12 @@ fn sweep_dist_packed(
     // Reassemble per job in job order: accumulation order is a function
     // of each job's decomposition only, so cross-job packing is
     // invisible in every estimate.
-    let mut outcomes = run.outcomes.into_iter();
+    let groups = split_by_counts(run.outcomes, &tasks_per_job);
     let mut results = Vec::with_capacity(jobs.len());
     let mut components = Vec::with_capacity(jobs.len());
     let mut per_job = Vec::with_capacity(jobs.len());
-    for (job, &count) in jobs.iter().zip(&tasks_per_job) {
+    for (job, outs) in jobs.iter().zip(groups) {
         let level = &pass.levels[job.grid_pos.0];
-        let outs: Vec<TaskOutcome> = outcomes.by_ref().take(count).collect();
         let (screened, solves) =
             reassemble_job(&level.components, &pass.diag, job.cfg.lambda2, outs);
         per_job.push(solves_view(&solves));
@@ -373,7 +411,7 @@ fn sweep_dist_packed(
         let density = offdiag_density(&screened.fit.omega);
         results.push(SweepResult { job: *job, fit: screened.fit, density, worker: 0 });
     }
-    let bill = GridBill { screen: pass.cost, waves: run.cost, per_job };
+    let bill = GridBill { screen: screen_share, waves: run.cost, per_job };
     let cost = bill.total();
     Ok(ScreenedDistSweepOutcome {
         results,
@@ -510,7 +548,8 @@ mod tests {
         let machine = MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() };
         let opts = ScreenedDistOptions { total_ranks: 4, machine, ..Default::default() };
         for mode in [GridSchedule::Packed, GridSchedule::PerPoint] {
-            let out = run_sweep_screened_dist(&x, &grid, &base, &opts, mode).unwrap();
+            let out =
+                run_sweep_screened_dist(XSource::InCore(&x), &grid, &base, &opts, mode).unwrap();
             assert_eq!(out.results.len(), 4, "{mode:?}");
             assert_eq!(out.components.len(), 4, "{mode:?}");
             assert_eq!(out.bill.per_job.len(), 4, "{mode:?}");
@@ -519,8 +558,12 @@ mod tests {
                 GridSchedule::PerPoint => assert_eq!(out.schedules.len(), 4),
             }
             for r in &out.results {
-                let direct =
-                    crate::concord::fit_screened_distributed(&x, &r.job.cfg, &opts).unwrap();
+                let direct = crate::concord::fit_screened_distributed(
+                    XSource::InCore(&x),
+                    &r.job.cfg,
+                    &opts,
+                )
+                .unwrap();
                 assert!(
                     r.fit.omega.max_abs_diff(&direct.fit.omega) == 0.0,
                     "{mode:?}: job {} differs from the single-point solver",

@@ -337,6 +337,82 @@ impl<'a> XSource<'a> {
     }
 }
 
+/// How many evenly spaced sample rows [`x_fingerprint`] hashes (first
+/// and last rows always included when present).
+const FINGERPRINT_ROWS: usize = 8;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv1a(hash: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *hash ^= b as u64;
+        *hash = hash.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// Dataset fingerprint: a 64-bit FNV-1a hash of the logical header
+/// (n, p) plus up to [`FINGERPRINT_ROWS`] evenly spaced sample rows'
+/// f64 bit patterns. Defined over the *contents*, not the backend —
+/// an in-core matrix and its `convert`ed HPCX file fingerprint
+/// identically, so the serve layer's screening-artifact cache keys
+/// match across front doors. Sampled rather than exhaustive: reading
+/// eight row panels prices the check at a few positioned reads however
+/// many terabytes the payload is.
+pub fn x_fingerprint(x: XSource<'_>) -> Result<u64> {
+    let (n, p) = (x.rows(), x.cols());
+    let mut hash = FNV_OFFSET;
+    fnv1a(&mut hash, &(n as u64).to_le_bytes());
+    fnv1a(&mut hash, &(p as u64).to_le_bytes());
+    if n == 0 || p == 0 {
+        return Ok(hash);
+    }
+    let samples = FINGERPRINT_ROWS.min(n);
+    let mut row_bytes = vec![0u8; p * 8];
+    for k in 0..samples {
+        // Evenly spaced over [0, n): k·(n−1)/(samples−1), so the first
+        // and last rows are always sampled.
+        let r = if samples == 1 { 0 } else { k * (n - 1) / (samples - 1) };
+        fnv1a(&mut hash, &(r as u64).to_le_bytes());
+        match x {
+            XSource::InCore(m) => {
+                for (chunk, &v) in row_bytes.chunks_exact_mut(8).zip(&m.data()[r * p..(r + 1) * p])
+                {
+                    chunk.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            XSource::OnDisk(d) => {
+                let row = d.read_rows(r, r + 1)?;
+                for (chunk, &v) in row_bytes.chunks_exact_mut(8).zip(row.data()) {
+                    chunk.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        fnv1a(&mut hash, &row_bytes);
+    }
+    Ok(hash)
+}
+
+/// Render an estimate as whitespace-separated rows with full f64
+/// round-trip precision: the **one** byte format behind the CLI's
+/// `--out-omega` and the serve layer's result retrieval, so two runs
+/// that claim bit-identical results can be compared with `cmp`
+/// whichever front door produced them (determinism rule 9).
+pub fn format_omega(omega: &Mat) -> String {
+    use std::fmt::Write as _;
+    let mut text = String::new();
+    for i in 0..omega.rows() {
+        for j in 0..omega.cols() {
+            if j > 0 {
+                text.push(' ');
+            }
+            write!(text, "{:.17e}", omega.get(i, j)).expect("string write");
+        }
+        text.push('\n');
+    }
+    text
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -385,6 +461,42 @@ mod tests {
         let (sa, sb) = (a.subsample(&rows).unwrap(), b.subsample(&rows).unwrap());
         assert_eq!(sa.data(), sb.data());
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn fingerprint_is_backend_invariant_and_content_sensitive() {
+        let x = random_mat(41, 7, 0xF1A9);
+        let path = temp("fingerprint");
+        write_x(&path, &x).unwrap();
+        let d = XDisk::open(&path).unwrap();
+        let core = x_fingerprint(XSource::InCore(&x)).unwrap();
+        let disk = x_fingerprint(XSource::OnDisk(&d)).unwrap();
+        assert_eq!(core, disk, "same contents must fingerprint identically on both backends");
+        // Flip one sampled element (row 0 is always sampled): the
+        // fingerprint must move.
+        let mut y = x.clone();
+        y.set(0, 3, y.get(0, 3) + 1.0);
+        assert_ne!(core, x_fingerprint(XSource::InCore(&y)).unwrap());
+        // A different shape moves it even with an empty payload.
+        let a = x_fingerprint(XSource::InCore(&Mat::zeros(2, 3))).unwrap();
+        let b = x_fingerprint(XSource::InCore(&Mat::zeros(3, 2))).unwrap();
+        assert_ne!(a, b);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn format_omega_is_full_precision_rows() {
+        let m = Mat::from_fn(2, 2, |i, j| (i * 2 + j) as f64 + 0.5);
+        let text = format_omega(&m);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let row: Vec<f64> = line.split(' ').map(|t| t.parse().unwrap()).collect();
+            assert_eq!(row.len(), 2);
+            for (j, v) in row.iter().enumerate() {
+                assert_eq!(v.to_bits(), m.get(i, j).to_bits(), "round-trip at ({i},{j})");
+            }
+        }
     }
 
     #[test]

@@ -17,6 +17,10 @@
 //!   (Lemmas 3.1–3.5, [`cost`]), the QUIC-style second-order baseline
 //!   ([`bigquic`]), data generators, clustering and metrics for the fMRI
 //!   case study, and a tuning-grid sweep coordinator ([`coordinator`]).
+//!   A long-running multi-tenant estimation service ([`serve`]) fronts
+//!   the same pipelines over a line-delimited JSON protocol, packing
+//!   concurrent jobs through the shared executor and reusing screening
+//!   artifacts via a dataset-fingerprint cache.
 //! - **L2 (python/compile/model.py)** — CONCORD step graphs in JAX,
 //!   AOT-lowered once to HLO text artifacts.
 //! - **L1 (python/compile/kernels/)** — Pallas kernels (tiled GEMM, fused
@@ -104,6 +108,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod simnet;
 pub mod util;
 

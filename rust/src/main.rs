@@ -2,29 +2,39 @@
 //!
 //! Subcommands (see `hpconcord help`): `solve` (single problem, single
 //! node or simulated distributed), `sweep` (tuning-grid coordinator),
-//! `cost` (analytic Lemma 3.1–3.5 model + replication optimizer),
-//! `fmri` (the §5 synthetic-cortex pipeline), `engine` (PJRT artifact
-//! smoke runs). Python never runs here — artifacts are pre-built by
+//! `serve` (the long-running multi-tenant estimation service),
+//! `client` (submit a job to a running server), `cost` (analytic
+//! Lemma 3.1–3.5 model + replication optimizer), `fmri` (the §5
+//! synthetic-cortex pipeline), `engine` (PJRT artifact smoke runs).
+//! Python never runs here — artifacts are pre-built by
 //! `make artifacts`.
+//!
+//! `solve`, `sweep`, `client` and every served job all construct one
+//! [`EstimationRequest`] and execute through its canonical entry
+//! points, so the config-resolution prologue has a single owner and a
+//! served result is byte-identical to the CLI's (determinism rule 9).
 
 use anyhow::{anyhow, Result};
 
 use hpconcord::cli::{Args, USAGE};
+use hpconcord::concord::request::{node_threads, parse_variant, tile_config};
 use hpconcord::concord::{
-    fit_distributed, fit_screened_distributed, fit_screened_distributed_src, fit_single_node,
-    fit_with_screening, ConcordConfig, ScreenedDistOptions, Variant,
+    fit_distributed, fit_single_node, fit_with_screening, EstimationRequest, RequestKind,
+    RequestOutcome, ScreenedDistFit, WorkloadSpec,
 };
 use hpconcord::config::Config;
 use hpconcord::coordinator::{
-    run_sweep, run_sweep_screened, select_by_density, GridSchedule, GridSpec, SweepResult,
+    run_sweep, run_sweep_screened, select_by_density, GridSpec, ScreenedDistSweepOutcome,
+    StabilityConfig, SweepResult,
 };
-use hpconcord::io::{self, XDisk, XSource};
 use hpconcord::cost::ProblemShape;
 use hpconcord::gen;
-use hpconcord::linalg::{tile, Mat, TileConfig};
+use hpconcord::io::{self, XDisk, XSource};
+use hpconcord::linalg::{tile, Mat};
 use hpconcord::metrics::support_metrics;
 use hpconcord::rng::Rng;
 use hpconcord::runtime::Engine;
+use hpconcord::serve::{Client, ServeOptions, Server};
 use hpconcord::simnet::MachineParams;
 use hpconcord::util::Table;
 
@@ -34,6 +44,8 @@ fn main() {
     let code = match args.subcommand() {
         Some("solve") => run(cmd_solve(&args)),
         Some("sweep") => run(cmd_sweep(&args)),
+        Some("serve") => run(cmd_serve(&args)),
+        Some("client") => run(cmd_client(&args)),
         Some("convert") => run(cmd_convert(&args)),
         Some("cost") => run(cmd_cost(&args)),
         Some("fmri") => run(cmd_fmri(&args)),
@@ -68,82 +80,15 @@ fn load_config(args: &Args) -> Result<Config> {
     }
 }
 
-/// Build the workload named by --workload/--p/--n/--deg/--seed (or the
-/// --config file; CLI flags win).
-fn load_problem(args: &Args, cfg: &Config) -> Result<gen::Problem> {
-    let workload = args.str_or("workload", cfg.str_or("workload", "chain")?);
-    let p = args.usize_or("p", cfg.usize_or("p", 256)?)?;
-    let n = args.usize_or("n", cfg.usize_or("n", 100)?)?;
-    let deg = args.usize_or("deg", cfg.usize_or("deg", 8)?)?;
-    let seed = args.u64_or("seed", 42)?;
-    let mut rng = Rng::new(seed);
-    match workload.as_str() {
-        "chain" => Ok(gen::chain_problem(p, n, &mut rng)),
-        "random" => Ok(gen::random_problem(p, n, deg, &mut rng)),
-        other => Err(anyhow!("unknown workload {other:?} (chain|random)")),
+/// Validate `--mode` before any data is loaded (the fail-fast pattern
+/// every subcommand follows: flag misuse errors before an expensive
+/// problem generation or file read).
+fn solve_mode(args: &Args) -> Result<String> {
+    let mode = args.str_or("mode", "single");
+    if mode != "single" && mode != "dist" {
+        return Err(anyhow!("unknown --mode {mode:?} (single|dist)"));
     }
-}
-
-fn solver_config(args: &Args, cfg: &Config) -> Result<ConcordConfig> {
-    Ok(ConcordConfig {
-        lambda1: args.f64_or("lambda1", cfg.f64_or("solver.lambda1", 0.3)?)?,
-        lambda2: args.f64_or("lambda2", cfg.f64_or("solver.lambda2", 0.0)?)?,
-        tol: args.f64_or("tol", cfg.f64_or("solver.tol", 1e-5)?)?,
-        max_iter: args.usize_or("max-iter", cfg.usize_or("solver.max_iter", 500)?)?,
-        max_linesearch: args
-            .usize_or("max-linesearch", cfg.usize_or("solver.max_linesearch", 40)?)?,
-        variant: match args.str_or("variant", cfg.str_or("solver.variant", "auto")?).as_str() {
-            "cov" => Variant::Cov,
-            "obs" => Variant::Obs,
-            _ => Variant::Auto,
-        },
-        threads: node_threads(args, cfg)?,
-        tile: tile_config(args, cfg)?,
-        // Global concurrent rank budget for screened distributed
-        // solving (0 = "use --ranks"): CLI --ranks-budget, TOML
-        // fabric.budget.
-        ranks_budget: args.usize_or("ranks-budget", cfg.usize_or("fabric.budget", 0)?)?,
-        // Host-memory budget in f64 words for wave packing (0 =
-        // unbounded): CLI --mem-budget, TOML fabric.mem_budget. A
-        // schedule-only knob — results are bit-identical at any value
-        // that admits a schedule (determinism rule 7). Parsed as u64
-        // end to end: no narrowing cast between user input and packer.
-        mem_budget: args.u64_or("mem-budget", cfg.u64_or("fabric.mem_budget", 0)?)?,
-    })
-}
-
-/// Screened-distributed options shared by `solve --mode dist --screen`
-/// and `sweep --mode dist --screen`: `--ranks` caps the screening
-/// fabric and every component fabric, and explicit replication — CLI
-/// `--cx`/`--comega` or the config file's `fabric.cx`/`fabric.comega` —
-/// pins every component fabric; otherwise the cost model sizes each
-/// component's fabric on its own.
-fn screened_dist_options(args: &Args, file_cfg: &Config) -> Result<ScreenedDistOptions> {
-    let ranks = args.usize_or("ranks", file_cfg.usize_or("fabric.ranks", 8)?)?;
-    let c_x = args.usize_or("cx", file_cfg.usize_or("fabric.cx", 1)?)?;
-    let c_o = args.usize_or("comega", file_cfg.usize_or("fabric.comega", 1)?)?;
-    let pinned = args.has("cx")
-        || args.has("comega")
-        || file_cfg.get("fabric.cx").is_some()
-        || file_cfg.get("fabric.comega").is_some();
-    Ok(ScreenedDistOptions {
-        total_ranks: ranks,
-        machine: MachineParams::default(),
-        small_cutoff: args.usize_or("screen-cutoff", file_cfg.usize_or("screen.cutoff", 4)?)?,
-        fixed: if pinned { Some((ranks, c_x, c_o)) } else { None },
-        sequential: false,
-        // Row-panel width for the streamed gram pass (0 = in-core):
-        // CLI --gram-block, TOML screen.gram_block. Bit-identical to
-        // the in-core pass at any width (determinism rules 1 and 7).
-        gram_block: args.usize_or("gram-block", file_cfg.usize_or("screen.gram_block", 0)?)?,
-    })
-}
-
-/// The on-disk X path, when one was given: CLI `--x-file`, TOML
-/// `solver.x_file`.
-fn resolve_x_file(args: &Args, cfg: &Config) -> Result<Option<String>> {
-    let path = args.str_or("x-file", cfg.str_or("solver.x_file", "")?);
-    Ok(if path.is_empty() { None } else { Some(path) })
+    Ok(mode)
 }
 
 /// `--x-file` replaces the in-core X on the screened distributed paths
@@ -178,21 +123,13 @@ fn open_x_file(path: &str, problem: &gen::Problem) -> Result<XDisk> {
 }
 
 /// Write an estimate as whitespace-separated rows with full f64
-/// round-trip precision (`--out-omega`): deterministic bytes, so two
-/// runs that claim bit-identical results can be compared with `cmp`.
+/// round-trip precision (`--out-omega`): deterministic bytes
+/// ([`io::format_omega`] — the same bytes the serve protocol returns),
+/// so two runs that claim bit-identical results can be compared with
+/// `cmp`.
 fn write_omega(path: &str, omega: &Mat) -> Result<()> {
-    use std::fmt::Write as _;
-    let mut text = String::new();
-    for i in 0..omega.rows() {
-        for j in 0..omega.cols() {
-            if j > 0 {
-                text.push(' ');
-            }
-            write!(text, "{:.17e}", omega.get(i, j)).expect("string write");
-        }
-        text.push('\n');
-    }
-    std::fs::write(path, text).map_err(|e| anyhow!("writing omega to {path}: {e}"))
+    std::fs::write(path, io::format_omega(omega))
+        .map_err(|e| anyhow!("writing omega to {path}: {e}"))
 }
 
 /// Write grid results as CSV (`sweep --out-csv`): one row per (λ₁, λ₂)
@@ -221,53 +158,36 @@ fn write_sweep_csv(
     std::fs::write(path, text).map_err(|e| anyhow!("writing sweep csv to {path}: {e}"))
 }
 
-/// The kernel layer's cache-blocking shape: `--tile mc,kc,nc`, else the
-/// config file's `solver.tile = [mc, kc, nc]`, else the compile-time
-/// default. Bit-identical results at any value — a throughput knob.
-fn tile_config(args: &Args, cfg: &Config) -> Result<TileConfig> {
-    let raw = args.str_or("tile", "");
-    if !raw.is_empty() {
-        return TileConfig::parse(&raw);
-    }
-    let from_file = cfg.array_or("solver.tile", &[])?;
-    if from_file.is_empty() {
-        Ok(TileConfig::DEFAULT)
-    } else {
-        TileConfig::from_f64s(&from_file)
+/// Run a Solve request and unwrap its outcome variant.
+fn solve_outcome(req: &EstimationRequest, x: XSource<'_>) -> Result<ScreenedDistFit> {
+    match req.run(x)? {
+        RequestOutcome::Solve(fit) => Ok(*fit),
+        _ => Err(anyhow!("a Solve request must produce a Solve outcome")),
     }
 }
 
-/// The node-local thread count (the paper's per-node t): `--threads N`,
-/// else the config file's `solver.threads`, else `--threads auto` /
-/// `solver.threads = 0` picks the host's available parallelism.
-fn node_threads(args: &Args, cfg: &Config) -> Result<usize> {
-    let raw = args.str_or("threads", "");
-    let n = if raw == "auto" {
-        0
-    } else if raw.is_empty() {
-        cfg.usize_or("solver.threads", 1)?
-    } else {
-        args.usize_or("threads", 1)?
-    };
-    Ok(if n == 0 {
-        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
-    } else {
-        n
-    })
+/// Run a Sweep request and unwrap its outcome variant.
+fn sweep_outcome(req: &EstimationRequest, x: XSource<'_>) -> Result<ScreenedDistSweepOutcome> {
+    match req.run(x)? {
+        RequestOutcome::Sweep(out) => Ok(out),
+        _ => Err(anyhow!("a Sweep request must produce a Sweep outcome")),
+    }
 }
 
 fn cmd_solve(args: &Args) -> Result<()> {
+    // Fail-fast prologue: flags and config resolve into the request
+    // before any workload is generated or file opened.
     let file_cfg = load_config(args)?;
-    let problem = load_problem(args, &file_cfg)?;
-    let cfg = solver_config(args, &file_cfg)?;
-    let mode = args.str_or("mode", "single");
+    let mode = solve_mode(args)?;
     let screen = args.has("screen") || file_cfg.bool_or("solver.screen", false)?;
-    let x_file = resolve_x_file(args, &file_cfg)?;
-    validate_x_file_mode(x_file.as_deref(), &mode, screen)?;
+    let req = EstimationRequest::from_args(RequestKind::Solve, args, &file_cfg)?;
+    validate_x_file_mode(req.x_file.as_deref(), &mode, screen)?;
+    let problem = req.workload.generate()?;
+    let cfg = req.cfg;
     let t0 = std::time::Instant::now();
 
-    let (fit, cost_line) = match mode.as_str() {
-        "single" if screen => {
+    let (fit, cost_line) = match (mode.as_str(), screen) {
+        ("single", true) => {
             let out = fit_with_screening(&problem.x, &cfg)?;
             println!(
                 "screening: {} components (largest {}) at λ1={}",
@@ -275,7 +195,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
             );
             (out.fit, String::new())
         }
-        "single" => {
+        ("single", false) => {
             let artifacts = args.str_or("artifacts", "artifacts");
             let fit = match Engine::load(&artifacts) {
                 Ok(mut engine) if engine.has_trial(problem.x.cols()) => {
@@ -288,16 +208,15 @@ fn cmd_solve(args: &Args) -> Result<()> {
             };
             (fit, String::new())
         }
-        "dist" if screen => {
-            let opts = screened_dist_options(args, &file_cfg)?;
+        ("dist", true) => {
             // Determinism rule 8: the on-disk branch is the in-core
             // run's bit-exact twin — compare `--out-omega`s with cmp.
-            let out = match &x_file {
+            let out = match &req.x_file {
                 Some(path) => {
                     let xd = open_x_file(path, &problem)?;
-                    fit_screened_distributed_src(XSource::OnDisk(&xd), &cfg, &opts)?
+                    solve_outcome(&req, XSource::OnDisk(&xd))?
                 }
-                None => fit_screened_distributed(&problem.x, &cfg, &opts)?,
+                None => solve_outcome(&req, XSource::InCore(&problem.x))?,
             };
             println!(
                 "screening: {} components (largest {}) at λ1={}; \
@@ -357,10 +276,12 @@ fn cmd_solve(args: &Args) -> Result<()> {
             );
             (out.fit, line)
         }
-        "dist" => {
-            let ranks = args.usize_or("ranks", file_cfg.usize_or("fabric.ranks", 8)?)?;
-            let c_x = args.usize_or("cx", file_cfg.usize_or("fabric.cx", 1)?)?;
-            let c_o = args.usize_or("comega", file_cfg.usize_or("fabric.comega", 1)?)?;
+        ("dist", false) => {
+            let ranks = req.opts.total_ranks;
+            let (c_x, c_o) = match req.opts.fixed {
+                Some((_, c_x, c_o)) => (c_x, c_o),
+                None => (1, 1),
+            };
             let out = fit_distributed(&problem.x, &cfg, ranks, c_x, c_o, MachineParams::default());
             let s = out.cost;
             let line = format!(
@@ -369,7 +290,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
             );
             (out.fit, line)
         }
-        other => return Err(anyhow!("unknown --mode {other:?} (single|dist)")),
+        _ => unreachable!("solve_mode validated --mode"),
     };
 
     let wall = t0.elapsed().as_secs_f64();
@@ -424,16 +345,18 @@ fn sweep_mode(args: &Args) -> Result<String> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let mode = sweep_mode(args)?;
     let file_cfg = load_config(args)?;
-    let problem = load_problem(args, &file_cfg)?;
-    let base = solver_config(args, &file_cfg)?;
     let grid = GridSpec {
         lambda1: args.f64_list_or("l1", &[0.2, 0.3, 0.45])?,
         lambda2: args.f64_list_or("l2", &[0.0, 0.1])?,
     };
+    let per_point = args.has("per-point");
+    let kind = RequestKind::Sweep { grid: grid.clone(), per_point };
+    let req = EstimationRequest::from_args(kind, args, &file_cfg)?;
+    let base = req.cfg;
     let workers = args.usize_or("workers", 4)?;
     let screen = args.has("screen") || file_cfg.bool_or("solver.screen", false)?;
-    let x_file = resolve_x_file(args, &file_cfg)?;
-    validate_x_file_mode(x_file.as_deref(), &mode, screen)?;
+    validate_x_file_mode(req.x_file.as_deref(), &mode, screen)?;
+    let problem = req.workload.generate()?;
     // Per-point component counts and modeled times, when the sweep mode
     // produces them (threaded into the table and the --out-csv rows).
     let mut components_col: Option<Vec<usize>> = None;
@@ -450,31 +373,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                  component fabrics into waves (parallelism comes from the shared schedule)"
             );
         }
-        let opts = screened_dist_options(args, &file_cfg)?;
-        let sched_mode =
-            if args.has("per-point") { GridSchedule::PerPoint } else { GridSchedule::Packed };
-        let out = match &x_file {
+        let out = match &req.x_file {
             Some(path) => {
                 let xd = open_x_file(path, &problem)?;
-                hpconcord::coordinator::run_sweep_screened_dist_src(
-                    XSource::OnDisk(&xd),
-                    &grid,
-                    &base,
-                    &opts,
-                    sched_mode,
-                )?
+                sweep_outcome(&req, XSource::OnDisk(&xd))?
             }
-            None => hpconcord::coordinator::run_sweep_screened_dist(
-                &problem.x, &grid, &base, &opts, sched_mode,
-            )?,
+            None => sweep_outcome(&req, XSource::InCore(&problem.x))?,
         };
         let comps: Vec<String> = out.components.iter().map(|c| c.to_string()).collect();
         println!(
             "screened dist sweep ({}): components per point = [{}]",
-            match sched_mode {
-                GridSchedule::Packed => "packed",
-                GridSchedule::PerPoint => "per-point",
-            },
+            if per_point { "per-point" } else { "packed" },
             comps.join(", ")
         );
         if let [sched] = &out.schedules[..] {
@@ -544,17 +453,98 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve and validate the serve flags **before** binding or loading
+/// anything (the fail-fast hoist `sweep_mode` established): the bind
+/// address must look like host:port, and the global budgets parse as
+/// integers. CLI flags win over the `[serve]` config section.
+fn serve_options(args: &Args, cfg: &Config) -> Result<ServeOptions> {
+    let addr = args.str_or("addr", cfg.str_or("serve.addr", "127.0.0.1:7878")?);
+    if !addr.contains(':') {
+        return Err(anyhow!("--addr must be host:port, got {addr:?}"));
+    }
+    Ok(ServeOptions {
+        addr,
+        ranks_budget: args.usize_or("ranks-budget", cfg.usize_or("serve.ranks_budget", 0)?)?,
+        mem_budget: args.u64_or("mem-budget", cfg.u64_or("serve.mem_budget", 0)?)?,
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let file_cfg = load_config(args)?;
+    let opts = serve_options(args, &file_cfg)?;
+    let server = Server::start(opts)?;
+    // One parseable line for scripts (the CI smoke reads the port from
+    // it), then serve until a client sends the `shutdown` op.
+    println!("serving on {}", server.addr());
+    server.join();
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let file_cfg = load_config(args)?;
+    let addr = args.str_or("addr", file_cfg.str_or("serve.addr", "127.0.0.1:7878")?);
+    if !addr.contains(':') {
+        return Err(anyhow!("--addr must be host:port, got {addr:?}"));
+    }
+    if args.has("shutdown") {
+        Client::connect(&addr)?.shutdown()?;
+        println!("asked the server at {addr} to shut down");
+        return Ok(());
+    }
+    let kind = match args.str_or("kind", "solve").as_str() {
+        "solve" => RequestKind::Solve,
+        "sweep" => RequestKind::Sweep {
+            grid: GridSpec {
+                lambda1: args.f64_list_or("l1", &[0.2, 0.3, 0.45])?,
+                lambda2: args.f64_list_or("l2", &[0.0, 0.1])?,
+            },
+            per_point: args.has("per-point"),
+        },
+        "stability" => RequestKind::Stability {
+            stab: StabilityConfig {
+                subsamples: args.usize_or("subsamples", 8)?,
+                fraction: args.f64_or("fraction", 0.5)?,
+                threshold: args.f64_or("stab-threshold", 0.7)?,
+                seed: args.u64_or("stab-seed", 0)?,
+                ..StabilityConfig::default()
+            },
+        },
+        other => return Err(anyhow!("unknown --kind {other:?} (solve|sweep|stability)")),
+    };
+    let req = EstimationRequest::from_args(kind, args, &file_cfg)?;
+    let density = args.f64_or("select-density", 0.1)?;
+    let mut client = Client::connect(&addr)?;
+    let job = client.submit(&req, None, density)?;
+    println!("submitted job {job} to {addr}");
+    client.wait(job)?;
+    let bill = client.bill(job)?;
+    println!(
+        "job {job} done: modeled {:.4}s (screening {}: {:.4}s)",
+        bill.f64_or("total_time", 0.0)?,
+        if bill.bool_or("screen_cached", false)? { "cached" } else { "cold" },
+        bill.f64_or("screen_time", 0.0)?
+    );
+    let out_omega = args.str_or("out-omega", "");
+    if !out_omega.is_empty() {
+        let text = client.result_omega(job)?;
+        std::fs::write(&out_omega, text)
+            .map_err(|e| anyhow!("writing omega to {out_omega}: {e}"))?;
+        println!("wrote omega to {out_omega}");
+    }
+    Ok(())
+}
+
 /// `convert`: generate the named workload and write its X to an HPCX
 /// file for later `--x-file` runs. The write is atomic (temp file +
 /// rename), and the fresh file is reopened through the validating
 /// reader so a convert that prints a summary is known readable.
 fn cmd_convert(args: &Args) -> Result<()> {
     let file_cfg = load_config(args)?;
-    let problem = load_problem(args, &file_cfg)?;
     let out = args.str_or("out", "");
     if out.is_empty() {
         return Err(anyhow!("convert requires --out FILE (the HPCX path to write)"));
     }
+    let problem = WorkloadSpec::from_args(args, &file_cfg)?.generate()?;
     let path = std::path::PathBuf::from(&out);
     io::write_x(&path, &problem.x)?;
     let xd = XDisk::open(&path)?;
@@ -581,11 +571,7 @@ fn cmd_cost(args: &Args) -> Result<()> {
     let threads = node_threads(args, &Config::default())?;
     // The Lemma 3.5 pricing reads the installed tile's cache-reuse term.
     tile::install(tile_config(args, &Config::default())?);
-    let variant = match args.str_or("variant", "auto").as_str() {
-        "cov" => Variant::Cov,
-        "obs" => Variant::Obs,
-        _ => Variant::Auto,
-    };
+    let variant = parse_variant(&args.str_or("variant", "auto"));
     let machine = MachineParams::default();
     let best = hpconcord::cost::optimizer::optimize_replication_threaded(
         &shape,
@@ -695,6 +681,13 @@ mod tests {
     }
 
     #[test]
+    fn unknown_solve_mode_is_a_clean_error() {
+        let err = solve_mode(&parse("solve --mode quantum")).unwrap_err();
+        assert!(err.to_string().contains("unknown --mode"), "{err}");
+        assert_eq!(solve_mode(&parse("solve --mode dist")).unwrap(), "dist");
+    }
+
+    #[test]
     fn valid_sweep_modes_pass() {
         assert_eq!(sweep_mode(&parse("sweep")).unwrap(), "single");
         assert_eq!(sweep_mode(&parse("sweep --screen --mode dist --per-point")).unwrap(), "dist");
@@ -716,8 +709,39 @@ mod tests {
 
     #[test]
     fn x_file_resolves_from_cli_over_config() {
-        let args = parse("solve --x-file cli.xbin");
-        assert_eq!(resolve_x_file(&args, &Config::default()).unwrap().as_deref(), Some("cli.xbin"));
-        assert_eq!(resolve_x_file(&parse("solve"), &Config::default()).unwrap(), None);
+        let req = EstimationRequest::from_args(
+            RequestKind::Solve,
+            &parse("solve --x-file cli.xbin"),
+            &Config::default(),
+        )
+        .unwrap();
+        assert_eq!(req.x_file.as_deref(), Some("cli.xbin"));
+        let req =
+            EstimationRequest::from_args(RequestKind::Solve, &parse("solve"), &Config::default())
+                .unwrap();
+        assert_eq!(req.x_file, None);
+    }
+
+    /// The serve flags validate before anything binds: a bad address is
+    /// caught without touching the network, and the global budgets ride
+    /// the same fail-fast path.
+    #[test]
+    fn serve_flags_validate_before_binding() {
+        let err = serve_options(&parse("serve --addr nonsense"), &Config::default()).unwrap_err();
+        assert!(err.to_string().contains("host:port"), "{err}");
+        let ok = serve_options(
+            &parse("serve --addr 127.0.0.1:0 --ranks-budget 4 --mem-budget 100000"),
+            &Config::default(),
+        )
+        .unwrap();
+        assert_eq!(ok.addr, "127.0.0.1:0");
+        assert_eq!(ok.ranks_budget, 4);
+        assert_eq!(ok.mem_budget, 100_000);
+    }
+
+    #[test]
+    fn client_kind_validates_before_connecting() {
+        let err = cmd_client(&parse("client --kind spiral --addr 127.0.0.1:1")).unwrap_err();
+        assert!(err.to_string().contains("unknown --kind"), "{err}");
     }
 }

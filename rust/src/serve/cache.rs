@@ -1,0 +1,88 @@
+//! The screening-artifact cache: dataset-fingerprint-keyed reuse of
+//! [`MultiScreenPass`] results across jobs.
+//!
+//! Screening is a pure function of (dataset contents, λ₁ threshold
+//! list, screening fabric width, gram panel width) — the pass is
+//! deterministic and bit-identical across backends (rules 1, 7, 8) —
+//! so two jobs whose keys match would recompute the *same* components,
+//! degrees and diagonal. The cache hands the second job the first
+//! job's artifact instead: results are unchanged by construction
+//! (determinism rule 9), and the screening pass is billed exactly once
+//! — a cache hit contributes a zero screening share to its job's
+//! [`GridBill`](crate::simnet::cost::GridBill).
+//!
+//! Thresholds are keyed by their f64 **bit patterns**: exact-match
+//! semantics, no epsilon surprises (0.1 + 0.2 is a different key than
+//! 0.3, exactly as it is a different screening pass).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::concord::MultiScreenPass;
+
+/// What makes two screening passes interchangeable.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ScreenKey {
+    /// [`crate::io::x_fingerprint`] of the dataset.
+    pub fingerprint: u64,
+    /// λ₁ thresholds as f64 bit patterns, in request order (the level
+    /// list is order-aligned with the thresholds).
+    pub thresholds: Vec<u64>,
+    /// Screening fabric width (counters in the cached bill depend on
+    /// it, so passes at different widths are not interchanged).
+    pub screen_ranks: usize,
+    /// Gram panel width (bill-only, but keyed for the same reason).
+    pub gram_block: usize,
+}
+
+impl ScreenKey {
+    pub fn new(
+        fingerprint: u64,
+        thresholds: &[f64],
+        screen_ranks: usize,
+        gram_block: usize,
+    ) -> ScreenKey {
+        ScreenKey {
+            fingerprint,
+            thresholds: thresholds.iter().map(|t| t.to_bits()).collect(),
+            screen_ranks,
+            gram_block,
+        }
+    }
+}
+
+/// A thread-safe map from [`ScreenKey`] to the shared screening
+/// artifact. Entries are never evicted: a serve process holds one
+/// artifact per distinct (dataset, threshold list, fabric) it has
+/// screened, which is the working set the multi-tenant workload
+/// shares by design.
+#[derive(Default)]
+pub struct ScreenCache {
+    entries: Mutex<HashMap<ScreenKey, Arc<MultiScreenPass>>>,
+}
+
+impl ScreenCache {
+    pub fn new() -> ScreenCache {
+        ScreenCache::default()
+    }
+
+    /// The cached pass for `key`, if one exists (a hit: the caller
+    /// must bill its screening share as zero).
+    pub fn get(&self, key: &ScreenKey) -> Option<Arc<MultiScreenPass>> {
+        self.entries.lock().expect("screen cache poisoned").get(key).cloned()
+    }
+
+    /// Store a freshly computed pass under `key`.
+    pub fn insert(&self, key: ScreenKey, pass: Arc<MultiScreenPass>) {
+        self.entries.lock().expect("screen cache poisoned").insert(key, pass);
+    }
+
+    /// Number of cached artifacts (observability only).
+    pub fn len(&self) -> usize {
+        self.entries.lock().expect("screen cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

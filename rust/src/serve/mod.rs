@@ -1,0 +1,37 @@
+//! The multi-tenant estimation service: a long-running server that
+//! admits solve / sweep / stability jobs over a line-delimited JSON
+//! protocol, schedules them through the shared [`FabricExecutor`]
+//! under the operator's global rank and memory budgets, and reuses
+//! screening artifacts across jobs through a dataset-fingerprint-keyed
+//! cache.
+//!
+//! Layering (std only — `TcpListener` plus the hand-rolled JSON of
+//! [`protocol`], in the style of `util::bench_record`):
+//!
+//! - [`protocol`] — the wire format: one JSON frame per line, a
+//!   minimal value model with bit-exact f64 round-trips.
+//! - [`cache`] — the screening-artifact cache, keyed on
+//!   ([`crate::io::x_fingerprint`], λ₁ thresholds, fabric knobs).
+//! - [`server`] — the admission queue, the scheduler that drains it
+//!   into rolling executor cycles, and the [`Client`] half the CLI's
+//!   `client` subcommand and the CI smoke drive.
+//!
+//! **Determinism rule 9**: the service is a *schedule-only* layer.
+//! Admission order, cross-tenant wave packing, global budget
+//! overrides, and cache hits change when work runs and what the bill
+//! says — never a result bit. A served omega is byte-for-byte the
+//! `--out-omega` file of the equivalent CLI invocation
+//! (`rust/tests/service.rs` pins this).
+//!
+//! [`FabricExecutor`]: crate::concord::FabricExecutor
+//! [`Client`]: server::Client
+
+pub mod cache;
+pub mod protocol;
+pub mod server;
+
+pub use cache::{ScreenCache, ScreenKey};
+pub use protocol::Json;
+pub use server::{
+    omega_text, request_from_frame, request_to_frame, Client, ServeOptions, Server,
+};

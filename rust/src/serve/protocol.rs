@@ -1,0 +1,412 @@
+//! The wire protocol: line-delimited JSON, hand-rolled in the style of
+//! [`crate::util::bench_record`] (std only — no serde).
+//!
+//! Every request and every response is **one** JSON object on **one**
+//! line. The value model is the minimal JSON subset the service needs
+//! ([`Json`]): null, booleans, f64 numbers, strings, arrays, objects.
+//! Encoding is compact (the line protocol forbids raw newlines) with
+//! the same string-escaping conventions as the bench recorder; numbers
+//! ride Rust's shortest-round-trip f64 formatting, so a value parsed
+//! back from its own encoding is bit-identical. Values outside f64's
+//! exact integer range (the dataset fingerprint) travel as hex strings,
+//! never as numbers.
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed JSON value (the protocol's value model).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (first match; the protocol never repeats
+    /// keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Field as f64 with a default when absent; a present field of the
+    /// wrong type is a clean error, not a silent default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64().ok_or_else(|| anyhow!("field {key:?} must be a number")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        let v = self.f64_or(key, default as f64)?;
+        if v < 0.0 || v.fract() != 0.0 {
+            bail!("field {key:?} must be a non-negative integer, got {v}");
+        }
+        Ok(v as usize)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        let v = self.f64_or(key, default as f64)?;
+        if v < 0.0 || v.fract() != 0.0 {
+            bail!("field {key:?} must be a non-negative integer, got {v}");
+        }
+        Ok(v as u64)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_bool().ok_or_else(|| anyhow!("field {key:?} must be a boolean")),
+        }
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(String::from)
+                .ok_or_else(|| anyhow!("field {key:?} must be a string")),
+        }
+    }
+
+    /// Field as a list of f64 with a default when absent.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => {
+                let items =
+                    v.as_arr().ok_or_else(|| anyhow!("field {key:?} must be an array"))?;
+                items
+                    .iter()
+                    .map(|it| {
+                        it.as_f64()
+                            .ok_or_else(|| anyhow!("field {key:?} must hold numbers only"))
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Compact single-line encoding (the line protocol's frame body).
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => out.push_str(&json_num(*v)),
+            Json::Str(s) => out.push_str(&json_str(s)),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, it) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    it.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&json_str(k));
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse one JSON value from `text` (the whole line must be the
+    /// value — trailing garbage is a clean error, exactly what a framed
+    /// line protocol wants).
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing bytes after the JSON value at offset {pos}");
+        }
+        Ok(value)
+    }
+}
+
+/// Escape a string the same way the bench recorder does: `"`, `\`,
+/// newline, tab, carriage return, and all other control bytes as
+/// `\u00XX`.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Numbers use Rust's shortest-round-trip f64 formatting; JSON has no
+/// non-finite literals, so those degrade to null (the reader treats a
+/// null bill field as absent).
+fn json_num(v: f64) -> String {
+    // `{}` is shortest-round-trip and omits a trailing `.0` for
+    // integral values — fine for JSON, which does not distinguish 1
+    // from 1.0.
+    if v.is_finite() { format!("{v}") } else { "null".to_string() }
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\r' | b'\n') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, want: u8) -> Result<()> {
+    if *pos < bytes.len() && bytes[*pos] == want {
+        *pos += 1;
+        Ok(())
+    } else {
+        bail!("expected {:?} at offset {}", want as char, *pos);
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => bail!("unexpected end of input"),
+        Some(b'n') => parse_lit(bytes, pos, "null", Json::Null),
+        Some(b't') => parse_lit(bytes, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(bytes, pos, "false", Json::Bool(false)),
+        Some(b'"') => Ok(Json::Str(parse_string(bytes, pos)?)),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(bytes, pos)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => bail!("expected ',' or ']' in array at offset {}", *pos),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                let key = parse_string(bytes, pos)?;
+                skip_ws(bytes, pos);
+                expect(bytes, pos, b':')?;
+                let value = parse_value(bytes, pos)?;
+                fields.push((key, value));
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => bail!("expected ',' or '}}' in object at offset {}", *pos),
+                }
+            }
+        }
+        Some(_) => parse_number(bytes, pos),
+    }
+}
+
+fn parse_lit(bytes: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        bail!("bad literal at offset {}", *pos);
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&bytes[start..*pos]).expect("ascii number bytes");
+    text.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| anyhow!("bad number {text:?} at offset {start}"))
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => bail!("unterminated string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000C}'),
+                    Some(b'u') => {
+                        let hex = bytes
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| anyhow!("truncated \\u escape"))?;
+                        let hex = std::str::from_utf8(hex)
+                            .map_err(|_| anyhow!("non-ascii \\u escape"))?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| anyhow!("bad \\u escape {hex:?}"))?;
+                        // The protocol only ever emits BMP escapes
+                        // (control bytes); surrogates are a clean error.
+                        let c = char::from_u32(code)
+                            .ok_or_else(|| anyhow!("\\u{hex} is not a scalar value"))?;
+                        out.push(c);
+                        *pos += 4;
+                    }
+                    _ => bail!("bad escape at offset {}", *pos),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Consume one UTF-8 scalar (multi-byte sequences pass
+                // through unmodified — the input is a &str).
+                let rest = std::str::from_utf8(&bytes[*pos..]).expect("valid utf8 tail");
+                let c = rest.chars().next().expect("non-empty tail");
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+/// Shorthand for building response/request objects.
+pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// The uniform error frame: `{"ok":false,"error":...}`.
+pub fn error_frame(message: &str) -> Json {
+    obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(message.to_string()))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_every_value_shape() {
+        let v = obj(vec![
+            ("null", Json::Null),
+            ("flag", Json::Bool(true)),
+            ("num", Json::Num(-12.5e-3)),
+            ("text", Json::Str("line\nbreak \"quoted\" \\ tab\t".to_string())),
+            ("arr", Json::Arr(vec![Json::Num(1.0), Json::Bool(false), Json::Str("x".into())])),
+            ("nested", obj(vec![("k", Json::Num(3.0))])),
+        ]);
+        let encoded = v.encode();
+        assert!(!encoded.contains('\n'), "frames must be single lines: {encoded:?}");
+        assert_eq!(Json::parse(&encoded).unwrap(), v);
+    }
+
+    #[test]
+    fn f64_round_trip_is_bit_exact() {
+        for v in [0.45, 1.0 / 3.0, 6.02214076e23, -0.0, f64::MIN_POSITIVE] {
+            let encoded = Json::Num(v).encode();
+            let back = Json::parse(&encoded).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} -> {encoded}");
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_clean_errors() {
+        for bad in ["", "{", "[1,", "{\"a\" 1}", "tru", "\"unterminated", "{} trailing", "1e"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn typed_accessors_reject_wrong_types() {
+        let v = obj(vec![("s", Json::Str("x".into())), ("n", Json::Num(1.5))]);
+        assert!(v.f64_or("s", 0.0).is_err());
+        assert!(v.usize_or("n", 0).is_err(), "1.5 is not an integer");
+        assert!(v.str_or("n", "").is_err());
+        assert_eq!(v.f64_or("absent", 7.0).unwrap(), 7.0);
+    }
+}

@@ -1,0 +1,1003 @@
+//! The estimation server: admission queue, scheduler, and the TCP
+//! front door speaking the line protocol of [`super::protocol`].
+//!
+//! One listener thread accepts connections; each connection gets a
+//! reader thread that parses one frame per line and replies with one
+//! frame per line. `submit` frames become queued jobs; a single
+//! scheduler thread drains the queue in admission order, packing every
+//! queued **solve** into one shared [`FabricExecutor`] run per cycle
+//! (waves may mix fabrics from different tenants) and running sweeps
+//! and stability selections through the same canonical entry points
+//! the CLI uses. Screening artifacts are reused across jobs through
+//! the fingerprint-keyed [`ScreenCache`].
+//!
+//! **Determinism rule 9**: the service is a schedule-only layer. Every
+//! job's estimate is produced by the same screening pass (cached or
+//! fresh — bit-identical either way), the same per-component plans,
+//! and the same executor math as the equivalent CLI invocation, so a
+//! served omega is byte-for-byte the CLI's `--out-omega` file
+//! (`rust/tests/service.rs`). Only bills and wave schedules reflect
+//! the multi-tenant packing.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::concord::executor::{split_by_counts, ExecutorJob, FabricExecutor};
+use crate::concord::request::parse_variant;
+use crate::concord::screened_dist::{
+    batch_setup, plan_job_tasks, reassemble_job, solves_view, BatchSetup,
+};
+use crate::concord::{
+    screen_streamed_src, EstimationRequest, MultiScreenPass, RequestKind, RequestOutcome,
+    Variant, WorkloadSpec,
+};
+use crate::coordinator::sweep::sweep_dist_packed_with;
+use crate::coordinator::{select_by_density, GridSpec, StabilityConfig};
+use crate::io::{format_omega, x_fingerprint, XDisk, XSource};
+use crate::linalg::Mat;
+use crate::simnet::cost::{CostSummary, GridBill};
+
+use super::cache::{ScreenCache, ScreenKey};
+use super::protocol::{error_frame, obj, Json};
+
+/// Server configuration. The global budgets, when nonzero, override
+/// every admitted job's own `--ranks-budget`/`--mem-budget`: the
+/// operator's capacity wins over tenant requests. Both are
+/// schedule-only knobs (rule 7), so overriding them never changes a
+/// result bit.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address, `host:port`; port 0 binds an ephemeral port
+    /// (reported by [`Server::addr`]).
+    pub addr: String,
+    /// Global concurrent rank budget (0 = honor per-job budgets).
+    pub ranks_budget: usize,
+    /// Global memory budget in f64 words (0 = honor per-job budgets).
+    pub mem_budget: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { addr: "127.0.0.1:0".to_string(), ranks_budget: 0, mem_budget: 0 }
+    }
+}
+
+/// Job lifecycle, as the `status`/`wait` ops report it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+fn phase_name(p: Phase) -> &'static str {
+    match p {
+        Phase::Queued => "queued",
+        Phase::Running => "running",
+        Phase::Done => "done",
+        Phase::Failed => "failed",
+    }
+}
+
+/// What a finished job hands back over the wire.
+struct JobResult {
+    /// [`format_omega`] bytes of the job's estimate — the exact bytes
+    /// the CLI's `--out-omega` writes (rule 9's contract).
+    omega: String,
+    bill: GridBill,
+    /// Whether the screening pass was a cache hit (`bill.screen` is
+    /// then zero: the pass was billed once by the job that computed
+    /// it).
+    screen_cached: bool,
+}
+
+struct Job {
+    req: EstimationRequest,
+    /// Client-claimed dataset fingerprint (hex over the wire); a
+    /// mismatch with the dataset is a clean per-job failure.
+    claim: Option<u64>,
+    /// Sweep model-selection target density for the returned omega.
+    select_density: f64,
+    phase: Phase,
+    result: Option<JobResult>,
+    error: Option<String>,
+}
+
+struct State {
+    jobs: Vec<Job>,
+    queue: VecDeque<usize>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    cv: Condvar,
+    cache: ScreenCache,
+    opts: ServeOptions,
+    addr: SocketAddr,
+}
+
+impl Shared {
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().expect("server state poisoned")
+    }
+}
+
+/// A running estimation server. Drop-safe: [`Server::join`] blocks
+/// until a client's `shutdown` frame (or [`Server::shutdown`]) stops
+/// the accept loop and the scheduler.
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    sched: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving. The listener, the scheduler and the
+    /// per-connection readers are all spawned here; the call returns
+    /// as soon as the socket is bound (the bound address is
+    /// [`Server::addr`]).
+    pub fn start(opts: ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding serve address {:?}", opts.addr))?;
+        let addr = listener.local_addr().context("reading the bound serve address")?;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { jobs: Vec::new(), queue: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            cache: ScreenCache::new(),
+            opts,
+            addr,
+        });
+        let sched = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || scheduler(&shared))
+        };
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(listener, &shared))
+        };
+        Ok(Server { addr, shared, accept: Some(accept), sched: Some(sched) })
+    }
+
+    /// The bound listen address (resolves port 0 to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the server to stop: already-queued jobs finish, new
+    /// submissions are refused, and the accept loop unblocks.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Block until the server has fully stopped (scheduler drained,
+    /// accept loop exited).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sched.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.lock().shutdown {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let shared = Arc::clone(shared);
+        std::thread::spawn(move || handle_conn(stream, &shared));
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: &Arc<Shared>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let reader = BufReader::new(read_half);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply =
+            handle_frame(&line, shared).unwrap_or_else(|e| error_frame(&format!("{e:#}")));
+        if writeln!(writer, "{}", reply.encode()).is_err() {
+            break;
+        }
+        if shared.lock().shutdown {
+            // Unblock the accept loop so the whole server can exit.
+            let _ = TcpStream::connect(shared.addr);
+            break;
+        }
+    }
+}
+
+/// One frame in, one frame out. Every error becomes a uniform
+/// `{"ok":false,"error":...}` reply; the connection survives bad
+/// frames (malformed JSON, unknown ops, bad field types).
+fn handle_frame(line: &str, shared: &Shared) -> Result<Json> {
+    let frame = Json::parse(line)?;
+    let op = frame.str_or("op", "")?;
+    match op.as_str() {
+        "ping" => Ok(obj(vec![("ok", Json::Bool(true)), ("op", Json::Str("pong".into()))])),
+        "submit" => submit(&frame, shared),
+        "status" => {
+            let st = shared.lock();
+            let id = job_id(&frame, &st)?;
+            Ok(status_frame(&st, id))
+        }
+        "wait" => {
+            let mut st = shared.lock();
+            let id = job_id(&frame, &st)?;
+            while matches!(st.jobs[id].phase, Phase::Queued | Phase::Running) {
+                st = shared.cv.wait(st).expect("server state poisoned");
+            }
+            Ok(status_frame(&st, id))
+        }
+        "result" => {
+            let st = shared.lock();
+            let id = job_id(&frame, &st)?;
+            let r = finished(&st, id)?;
+            let rows: Vec<Json> =
+                r.omega.lines().map(|row| Json::Str(row.to_string())).collect();
+            Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("result".into())),
+                ("job", Json::Num(id as f64)),
+                ("omega", Json::Arr(rows)),
+            ]))
+        }
+        "bill" => {
+            let st = shared.lock();
+            let id = job_id(&frame, &st)?;
+            let r = finished(&st, id)?;
+            Ok(bill_frame(id, r))
+        }
+        "shutdown" => {
+            {
+                let mut st = shared.lock();
+                st.shutdown = true;
+            }
+            shared.cv.notify_all();
+            Ok(obj(vec![("ok", Json::Bool(true)), ("op", Json::Str("shutdown".into()))]))
+        }
+        other => {
+            bail!("unknown op {other:?} (submit|status|wait|result|bill|ping|shutdown)")
+        }
+    }
+}
+
+fn job_id(frame: &Json, st: &State) -> Result<usize> {
+    if frame.get("job").is_none() {
+        bail!("this op needs a \"job\" field");
+    }
+    let id = frame.usize_or("job", 0)?;
+    if id >= st.jobs.len() {
+        bail!("unknown job {id} ({} submitted)", st.jobs.len());
+    }
+    Ok(id)
+}
+
+fn finished<'a>(st: &'a State, id: usize) -> Result<&'a JobResult> {
+    match st.jobs[id].phase {
+        Phase::Done => Ok(st.jobs[id].result.as_ref().expect("done job has a result")),
+        Phase::Failed => {
+            let msg = st.jobs[id].error.clone().unwrap_or_else(|| "unknown".to_string());
+            bail!("job {id} failed: {msg}")
+        }
+        other => bail!("job {id} is not done (state {})", phase_name(other)),
+    }
+}
+
+fn status_frame(st: &State, id: usize) -> Json {
+    let job = &st.jobs[id];
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("status".into())),
+        ("job", Json::Num(id as f64)),
+        ("state", Json::Str(phase_name(job.phase).to_string())),
+    ];
+    if let Some(err) = &job.error {
+        fields.push(("error", Json::Str(err.clone())));
+    }
+    obj(fields)
+}
+
+fn bill_frame(id: usize, r: &JobResult) -> Json {
+    let total = r.bill.total();
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("bill".into())),
+        ("job", Json::Num(id as f64)),
+        ("screen_cached", Json::Bool(r.screen_cached)),
+        ("screen_time", Json::Num(r.bill.screen.time)),
+        ("waves_time", Json::Num(r.bill.waves.time)),
+        ("total_time", Json::Num(total.time)),
+        ("comm_time", Json::Num(total.comm_time)),
+        ("messages", Json::Num(total.total.messages as f64)),
+        ("words", Json::Num(total.total.words as f64)),
+        ("flops_dense", Json::Num(total.total.flops_dense as f64)),
+        ("flops_sparse", Json::Num(total.total.flops_sparse as f64)),
+        ("peak_mem_words", Json::Num(total.peak_mem_words as f64)),
+    ])
+}
+
+fn submit(frame: &Json, shared: &Shared) -> Result<Json> {
+    let (req, claim, select_density) = request_from_frame(frame)?;
+    let id = {
+        let mut st = shared.lock();
+        if st.shutdown {
+            bail!("server is shutting down");
+        }
+        let id = st.jobs.len();
+        st.jobs.push(Job {
+            req,
+            claim,
+            select_density,
+            phase: Phase::Queued,
+            result: None,
+            error: None,
+        });
+        st.queue.push_back(id);
+        id
+    };
+    shared.cv.notify_all();
+    Ok(obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("submit".into())),
+        ("job", Json::Num(id as f64)),
+    ]))
+}
+
+/// Decode a `submit` frame into a request plus the serve-only fields
+/// (fingerprint claim, sweep selection density). Field names mirror
+/// the CLI flags with `_` for `-`; absent fields take the same
+/// defaults [`EstimationRequest::from_args`] resolves.
+pub fn request_from_frame(frame: &Json) -> Result<(EstimationRequest, Option<u64>, f64)> {
+    let kind = match frame.str_or("kind", "solve")?.as_str() {
+        "solve" => RequestKind::Solve,
+        "sweep" => RequestKind::Sweep {
+            grid: GridSpec {
+                lambda1: frame.f64_list_or("l1", &[0.2, 0.3, 0.45])?,
+                lambda2: frame.f64_list_or("l2", &[0.0])?,
+            },
+            per_point: frame.bool_or("per_point", false)?,
+        },
+        "stability" => RequestKind::Stability {
+            stab: StabilityConfig {
+                subsamples: frame.usize_or("subsamples", 8)?,
+                fraction: frame.f64_or("fraction", 0.5)?,
+                threshold: frame.f64_or("stab_threshold", 0.7)?,
+                seed: frame.u64_or("stab_seed", 0)?,
+                ..StabilityConfig::default()
+            },
+        },
+        other => bail!("unknown kind {other:?} (solve|sweep|stability)"),
+    };
+    let mut req = EstimationRequest::new(kind);
+    req.cfg.lambda1 = frame.f64_or("lambda1", req.cfg.lambda1)?;
+    req.cfg.lambda2 = frame.f64_or("lambda2", req.cfg.lambda2)?;
+    req.cfg.tol = frame.f64_or("tol", req.cfg.tol)?;
+    req.cfg.max_iter = frame.usize_or("max_iter", req.cfg.max_iter)?;
+    req.cfg.max_linesearch = frame.usize_or("max_linesearch", req.cfg.max_linesearch)?;
+    req.cfg.variant = parse_variant(&frame.str_or("variant", "auto")?);
+    req.cfg.threads = frame.usize_or("threads", 1)?.max(1);
+    req.cfg.ranks_budget = frame.usize_or("ranks_budget", 0)?;
+    req.cfg.mem_budget = frame.u64_or("mem_budget", 0)?;
+    req.opts.total_ranks = frame.usize_or("ranks", req.opts.total_ranks)?;
+    req.opts.small_cutoff = frame.usize_or("screen_cutoff", req.opts.small_cutoff)?;
+    req.opts.gram_block = frame.usize_or("gram_block", req.opts.gram_block)?;
+    if frame.get("cx").is_some() || frame.get("comega").is_some() {
+        let c_x = frame.usize_or("cx", 1)?;
+        let c_o = frame.usize_or("comega", 1)?;
+        req.opts.fixed = Some((req.opts.total_ranks, c_x, c_o));
+    }
+    if let Some(w) = frame.get("workload") {
+        req.workload = WorkloadSpec {
+            name: w.str_or("name", &req.workload.name)?,
+            p: w.usize_or("p", req.workload.p)?,
+            n: w.usize_or("n", req.workload.n)?,
+            deg: w.usize_or("deg", req.workload.deg)?,
+            seed: w.u64_or("seed", req.workload.seed)?,
+        };
+    }
+    let path = frame.str_or("x_file", "")?;
+    req.x_file = if path.is_empty() { None } else { Some(path) };
+    let claim = frame.str_or("fingerprint", "")?;
+    let claim = if claim.is_empty() {
+        None
+    } else {
+        Some(u64::from_str_radix(&claim, 16).map_err(|_| {
+            anyhow!("field \"fingerprint\" must be a hex u64, got {claim:?}")
+        })?)
+    };
+    let density = frame.f64_or("select_density", 0.1)?;
+    Ok((req, claim, density))
+}
+
+/// Encode a request as the `submit` frame [`request_from_frame`]
+/// decodes — the client side of the protocol. Lossless for every
+/// field the wire carries (`rust/tests/service.rs` round-trips it).
+pub fn request_to_frame(
+    req: &EstimationRequest,
+    fingerprint: Option<u64>,
+    select_density: f64,
+) -> Json {
+    let num = Json::Num;
+    let mut fields: Vec<(&str, Json)> = vec![("op", Json::Str("submit".into()))];
+    match &req.kind {
+        RequestKind::Solve => fields.push(("kind", Json::Str("solve".into()))),
+        RequestKind::Sweep { grid, per_point } => {
+            fields.push(("kind", Json::Str("sweep".into())));
+            let l1 = grid.lambda1.iter().map(|&v| num(v)).collect();
+            let l2 = grid.lambda2.iter().map(|&v| num(v)).collect();
+            fields.push(("l1", Json::Arr(l1)));
+            fields.push(("l2", Json::Arr(l2)));
+            fields.push(("per_point", Json::Bool(*per_point)));
+        }
+        RequestKind::Stability { stab } => {
+            fields.push(("kind", Json::Str("stability".into())));
+            fields.push(("subsamples", num(stab.subsamples as f64)));
+            fields.push(("fraction", num(stab.fraction)));
+            fields.push(("stab_threshold", num(stab.threshold)));
+            fields.push(("stab_seed", num(stab.seed as f64)));
+        }
+    }
+    let variant = match req.cfg.variant {
+        Variant::Cov => "cov",
+        Variant::Obs => "obs",
+        Variant::Auto => "auto",
+    };
+    fields.push(("lambda1", num(req.cfg.lambda1)));
+    fields.push(("lambda2", num(req.cfg.lambda2)));
+    fields.push(("tol", num(req.cfg.tol)));
+    fields.push(("max_iter", num(req.cfg.max_iter as f64)));
+    fields.push(("max_linesearch", num(req.cfg.max_linesearch as f64)));
+    fields.push(("variant", Json::Str(variant.to_string())));
+    fields.push(("threads", num(req.cfg.threads as f64)));
+    fields.push(("ranks_budget", num(req.cfg.ranks_budget as f64)));
+    fields.push(("mem_budget", num(req.cfg.mem_budget as f64)));
+    fields.push(("ranks", num(req.opts.total_ranks as f64)));
+    fields.push(("screen_cutoff", num(req.opts.small_cutoff as f64)));
+    fields.push(("gram_block", num(req.opts.gram_block as f64)));
+    if let Some((_, c_x, c_o)) = req.opts.fixed {
+        fields.push(("cx", num(c_x as f64)));
+        fields.push(("comega", num(c_o as f64)));
+    }
+    let w = &req.workload;
+    fields.push((
+        "workload",
+        obj(vec![
+            ("name", Json::Str(w.name.clone())),
+            ("p", num(w.p as f64)),
+            ("n", num(w.n as f64)),
+            ("deg", num(w.deg as f64)),
+            ("seed", num(w.seed as f64)),
+        ]),
+    ));
+    if let Some(path) = &req.x_file {
+        fields.push(("x_file", Json::Str(path.clone())));
+    }
+    if let Some(fp) = fingerprint {
+        fields.push(("fingerprint", Json::Str(format!("{fp:016x}"))));
+    }
+    fields.push(("select_density", num(select_density)));
+    obj(fields)
+}
+
+// ---------------------------------------------------------------- //
+// Scheduler: admission-ordered cycles over the shared executor.    //
+// ---------------------------------------------------------------- //
+
+fn scheduler(shared: &Arc<Shared>) {
+    loop {
+        let batch: Vec<usize> = {
+            let mut st = shared.lock();
+            loop {
+                if !st.queue.is_empty() {
+                    break;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.cv.wait(st).expect("server state poisoned");
+            }
+            let batch: Vec<usize> = st.queue.drain(..).collect();
+            for &id in &batch {
+                st.jobs[id].phase = Phase::Running;
+            }
+            batch
+        };
+        run_cycle(shared, &batch);
+    }
+}
+
+fn finish_ok(shared: &Shared, id: usize, result: JobResult) {
+    {
+        let mut st = shared.lock();
+        st.jobs[id].phase = Phase::Done;
+        st.jobs[id].result = Some(result);
+    }
+    shared.cv.notify_all();
+}
+
+fn finish_err(shared: &Shared, id: usize, err: &anyhow::Error) {
+    {
+        let mut st = shared.lock();
+        st.jobs[id].phase = Phase::Failed;
+        st.jobs[id].error = Some(format!("{err:#}"));
+    }
+    shared.cv.notify_all();
+}
+
+/// A job's dataset for one cycle: the generated workload matrix or the
+/// opened on-disk file. Held for the cycle's duration so executor jobs
+/// can borrow [`XSource`] views of it.
+enum Data {
+    Mem(Mat),
+    Disk(XDisk),
+}
+
+impl Data {
+    fn source(&self) -> XSource<'_> {
+        match self {
+            Data::Mem(m) => XSource::InCore(m),
+            Data::Disk(d) => XSource::OnDisk(d),
+        }
+    }
+}
+
+/// One admitted job, validated and bound to its dataset.
+struct Prep {
+    id: usize,
+    req: EstimationRequest,
+    select_density: f64,
+    data: Data,
+    fingerprint: u64,
+}
+
+/// Resolve a job's dataset and fingerprint, applying the server's
+/// global budget overrides. A claimed fingerprint that does not match
+/// the dataset is the protocol's "cached artifact does not describe
+/// this X" error — caught here, before any screening or solving.
+fn prepare(
+    opts: &ServeOptions,
+    req: &mut EstimationRequest,
+    claim: Option<u64>,
+) -> Result<(Data, u64)> {
+    if opts.ranks_budget > 0 {
+        req.cfg.ranks_budget = opts.ranks_budget;
+    }
+    if opts.mem_budget > 0 {
+        req.cfg.mem_budget = opts.mem_budget;
+    }
+    let data = match &req.x_file {
+        Some(path) => Data::Disk(XDisk::open(Path::new(path))?),
+        None => Data::Mem(req.workload.generate()?.x),
+    };
+    let fp = x_fingerprint(data.source())?;
+    if let Some(want) = claim {
+        if want != fp {
+            bail!(
+                "dataset fingerprint mismatch: request pins {want:016x} but the dataset \
+                 fingerprints to {fp:016x} — cached artifacts for the pinned X do not \
+                 describe this one"
+            );
+        }
+    }
+    Ok((data, fp))
+}
+
+fn run_cycle(shared: &Shared, batch: &[usize]) {
+    // Snapshot the batch's requests outside any long-held lock.
+    let specs: Vec<(usize, EstimationRequest, Option<u64>, f64)> = {
+        let st = shared.lock();
+        batch
+            .iter()
+            .map(|&id| {
+                let j = &st.jobs[id];
+                (id, j.req.clone(), j.claim, j.select_density)
+            })
+            .collect()
+    };
+
+    let mut preps: Vec<Prep> = Vec::new();
+    for (id, mut req, claim, select_density) in specs {
+        match prepare(&shared.opts, &mut req, claim) {
+            Ok((data, fingerprint)) => {
+                preps.push(Prep { id, req, select_density, data, fingerprint });
+            }
+            Err(e) => finish_err(shared, id, &e),
+        }
+    }
+
+    // Every queued solve shares one executor run (cross-tenant wave
+    // packing); sweeps and stability selections run in admission order
+    // through the same canonical pipelines the CLI drives.
+    let (solves, others): (Vec<&Prep>, Vec<&Prep>) =
+        preps.iter().partition(|p| matches!(p.req.kind, RequestKind::Solve));
+    for (id, result) in run_solve_group(shared, &solves) {
+        match result {
+            Ok(r) => finish_ok(shared, id, r),
+            Err(e) => finish_err(shared, id, &e),
+        }
+    }
+    for p in others {
+        match run_single(shared, p) {
+            Ok(r) => finish_ok(shared, p.id, r),
+            Err(e) => finish_err(shared, p.id, &e),
+        }
+    }
+}
+
+/// Get the screening pass for `key`, computing and caching it on a
+/// miss. The boolean is `true` on a hit — the caller's bill then
+/// carries a zero screening share (the pass was billed once, by the
+/// job that computed it).
+fn screen_or_reuse(
+    shared: &Shared,
+    key: ScreenKey,
+    x: XSource<'_>,
+    thresholds: &[f64],
+    setup: &BatchSetup,
+    req: &EstimationRequest,
+) -> Result<(Arc<MultiScreenPass>, bool)> {
+    if let Some(pass) = shared.cache.get(&key) {
+        return Ok((pass, true));
+    }
+    let pass = Arc::new(screen_streamed_src(
+        x,
+        thresholds,
+        setup.screen_ranks,
+        req.opts.machine,
+        setup.threads,
+        req.opts.gram_block,
+    )?);
+    shared.cache.insert(key, Arc::clone(&pass));
+    Ok((pass, false))
+}
+
+/// One solve job past its prologue: budgets resolved, screening pass
+/// in hand (cached or fresh), ready to plan into the shared run.
+struct Ready<'a> {
+    p: &'a Prep,
+    setup: BatchSetup,
+    pass: Arc<MultiScreenPass>,
+    cached: bool,
+}
+
+/// The standalone solver's prologue for one admitted job: batch setup
+/// (tile install, budget resolution, pin validation) and the screening
+/// pass, via the cache.
+fn solve_prologue<'a>(shared: &Shared, p: &'a Prep) -> Result<Ready<'a>> {
+    let x = p.data.source();
+    let setup = batch_setup(x.cols(), &p.req.cfg, &p.req.opts)?;
+    let thresholds = [p.req.cfg.lambda1];
+    let key =
+        ScreenKey::new(p.fingerprint, &thresholds, setup.screen_ranks, p.req.opts.gram_block);
+    let (pass, cached) = screen_or_reuse(shared, key, x, &thresholds, &setup, &p.req)?;
+    Ok(Ready { p, setup, pass, cached })
+}
+
+/// All of a cycle's solve jobs through one shared executor run. Each
+/// job screens (or reuses) its own pass, plans its components exactly
+/// as the standalone solver would, and the flat task list is packed
+/// into one cross-tenant wave schedule. Outcomes reassemble per job in
+/// submission order — bit-identical to each job's standalone run
+/// (rules 6, 7 and 9).
+fn run_solve_group<'a>(
+    shared: &Shared,
+    group: &[&'a Prep],
+) -> Vec<(usize, Result<JobResult>)> {
+    let mut out: Vec<(usize, Result<JobResult>)> = Vec::new();
+    let mut ready: Vec<Ready<'a>> = Vec::new();
+    for &p in group {
+        match solve_prologue(shared, p) {
+            Ok(r) => ready.push(r),
+            Err(e) => out.push((p.id, Err(e))),
+        }
+    }
+    if ready.is_empty() {
+        return out;
+    }
+
+    // Plan each job under its own installed tile (exactly the
+    // standalone prologue), tagging tasks with the job's slot in this
+    // cycle so the packed outcomes split back per job.
+    let mut exec_jobs: Vec<ExecutorJob<'_>> = Vec::with_capacity(ready.len());
+    let mut tasks = Vec::new();
+    let mut counts = Vec::with_capacity(ready.len());
+    for (slot, r) in ready.iter().enumerate() {
+        crate::linalg::tile::install(r.p.req.cfg.tile);
+        let x = r.p.data.source();
+        let level = &r.pass.levels[0];
+        let mut job_tasks = plan_job_tasks(slot, level, x.rows(), &r.p.req.cfg, &r.p.req.opts);
+        counts.push(job_tasks.len());
+        tasks.append(&mut job_tasks);
+        exec_jobs.push(ExecutorJob { x, cfg: r.p.req.cfg, rows: None });
+    }
+
+    // One budget pair for the shared schedule: the widest admitted
+    // rank budget, and a memory bound no tighter than any job asked
+    // for (0 = some job ran unbounded). Schedule-only (rule 7).
+    let budget = ready.iter().map(|r| r.setup.budget).max().unwrap_or(1);
+    let threads = ready.iter().map(|r| r.setup.threads).max().unwrap_or(1);
+    let mem_budget = if ready.iter().any(|r| r.p.req.cfg.mem_budget == 0) {
+        0
+    } else {
+        ready.iter().map(|r| r.p.req.cfg.mem_budget).max().unwrap_or(0)
+    };
+    let executor = FabricExecutor {
+        budget,
+        mem_budget,
+        threads,
+        machine: ready[0].p.req.opts.machine,
+        sequential: false,
+    };
+    let run = match executor.run(&exec_jobs, tasks) {
+        Ok(run) => run,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for r in &ready {
+                out.push((r.p.id, Err(anyhow!("shared solve wave failed: {msg}"))));
+            }
+            return out;
+        }
+    };
+
+    let groups = split_by_counts(run.outcomes, &counts);
+    for (r, outs) in ready.iter().zip(groups) {
+        let level = &r.pass.levels[0];
+        let (screened, solves) =
+            reassemble_job(&level.components, &r.pass.diag, r.p.req.cfg.lambda2, outs);
+        let screen = if r.cached { CostSummary::default() } else { r.pass.cost };
+        let own = solves_view(&solves);
+        let bill = GridBill { screen, waves: own, per_job: vec![own] };
+        out.push((
+            r.p.id,
+            Ok(JobResult {
+                omega: format_omega(&screened.fit.omega),
+                bill,
+                screen_cached: r.cached,
+            }),
+        ));
+    }
+    out
+}
+
+/// One sweep or stability job. The packed sweep path reuses cached
+/// screening passes (one pass per distinct dataset/threshold-list
+/// key); the per-point reference sweep and stability selection go
+/// through [`EstimationRequest::run`] unchanged — stability screens
+/// per subsample, and subsamples are never cache candidates (each has
+/// its own row set, hence its own fingerprint-less data).
+fn run_single(shared: &Shared, p: &Prep) -> Result<JobResult> {
+    let x = p.data.source();
+    if let RequestKind::Sweep { grid, per_point: false } = &p.req.kind {
+        let setup = batch_setup(x.cols(), &p.req.cfg, &p.req.opts)?;
+        let key =
+            ScreenKey::new(p.fingerprint, &grid.lambda1, setup.screen_ranks, p.req.opts.gram_block);
+        let (pass, cached) = screen_or_reuse(shared, key, x, &grid.lambda1, &setup, &p.req)?;
+        let screen = if cached { CostSummary::default() } else { pass.cost };
+        let out =
+            sweep_dist_packed_with(x, grid, &p.req.cfg, &p.req.opts, &setup, &pass, screen)?;
+        let sel = select_by_density(&out.results, p.select_density)
+            .ok_or_else(|| anyhow!("sweep produced no results (empty grid)"))?;
+        return Ok(JobResult {
+            omega: format_omega(&sel.fit.omega),
+            bill: out.bill.clone(),
+            screen_cached: cached,
+        });
+    }
+    let outcome = p.req.run(x)?;
+    let omega = match &outcome {
+        RequestOutcome::Solve(fit) => format_omega(&fit.fit.omega),
+        RequestOutcome::Sweep(out) => {
+            let sel = select_by_density(&out.results, p.select_density)
+                .ok_or_else(|| anyhow!("sweep produced no results (empty grid)"))?;
+            format_omega(&sel.fit.omega)
+        }
+        RequestOutcome::Stability(out) => format_omega(&out.frequency),
+    };
+    Ok(JobResult { omega, bill: outcome.bill(), screen_cached: false })
+}
+
+// ---------------------------------------------------------------- //
+// Client half: the framing's other end, shared by the CLI `client`  //
+// subcommand, the tests, and the CI smoke.                          //
+// ---------------------------------------------------------------- //
+
+/// A blocking protocol client over one TCP connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let writer = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to estimation server at {addr}"))?;
+        let reader = BufReader::new(writer.try_clone().context("cloning client socket")?);
+        Ok(Client { reader, writer })
+    }
+
+    /// Send one frame, read one reply. A `{"ok":false}` reply becomes
+    /// the error it carries.
+    pub fn call(&mut self, frame: &Json) -> Result<Json> {
+        writeln!(self.writer, "{}", frame.encode()).context("writing request frame")?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("reading reply frame")?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        let reply = Json::parse(line.trim_end())?;
+        if !reply.bool_or("ok", false)? {
+            bail!("server error: {}", reply.str_or("error", "unknown")?);
+        }
+        Ok(reply)
+    }
+
+    /// Submit a request and return its job id.
+    pub fn submit(
+        &mut self,
+        req: &EstimationRequest,
+        fingerprint: Option<u64>,
+        select_density: f64,
+    ) -> Result<usize> {
+        let reply = self.call(&request_to_frame(req, fingerprint, select_density))?;
+        if reply.get("job").is_none() {
+            bail!("submit reply carried no job id");
+        }
+        reply.usize_or("job", 0)
+    }
+
+    /// Block until the job reaches a terminal state; errors if it
+    /// failed.
+    pub fn wait(&mut self, job: usize) -> Result<()> {
+        let frame =
+            obj(vec![("op", Json::Str("wait".into())), ("job", Json::Num(job as f64))]);
+        let reply = self.call(&frame)?;
+        let state = reply.str_or("state", "")?;
+        if state != "done" {
+            bail!("job {job} ended in state {state:?}: {}", reply.str_or("error", "unknown")?);
+        }
+        Ok(())
+    }
+
+    /// Fetch a finished job's omega as the exact `--out-omega` bytes.
+    pub fn result_omega(&mut self, job: usize) -> Result<String> {
+        let frame =
+            obj(vec![("op", Json::Str("result".into())), ("job", Json::Num(job as f64))]);
+        let reply = self.call(&frame)?;
+        omega_text(&reply)
+    }
+
+    /// Fetch a finished job's bill frame.
+    pub fn bill(&mut self, job: usize) -> Result<Json> {
+        let frame =
+            obj(vec![("op", Json::Str("bill".into())), ("job", Json::Num(job as f64))]);
+        self.call(&frame)
+    }
+
+    /// Ask the server to shut down (idempotent).
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.call(&obj(vec![("op", Json::Str("shutdown".into()))]))?;
+        Ok(())
+    }
+}
+
+/// Rebuild the `--out-omega` byte stream from a `result` reply: one
+/// row per array entry, newline-terminated — byte-identical to
+/// [`format_omega`] on the server side (the rows travel as JSON
+/// strings containing only `[0-9.e+- ]`, which escape to themselves).
+pub fn omega_text(reply: &Json) -> Result<String> {
+    let rows = reply
+        .get("omega")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("reply has no \"omega\" rows"))?;
+    let mut text = String::new();
+    for row in rows {
+        text.push_str(row.as_str().ok_or_else(|| anyhow!("omega rows must be strings"))?);
+        text.push('\n');
+    }
+    Ok(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_solve() -> EstimationRequest {
+        let mut req = EstimationRequest::new(RequestKind::Solve);
+        req.workload = WorkloadSpec { p: 16, n: 40, ..WorkloadSpec::default() };
+        req.cfg.max_iter = 30;
+        req.opts.total_ranks = 4;
+        req
+    }
+
+    #[test]
+    fn submit_wait_result_bill_round_trip() {
+        let server = Server::start(ServeOptions::default()).unwrap();
+        let addr = server.addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        let job = client.submit(&tiny_solve(), None, 0.1).unwrap();
+        client.wait(job).unwrap();
+        let omega = client.result_omega(job).unwrap();
+        assert_eq!(omega.lines().count(), 16, "one row per variable");
+        let bill = client.bill(job).unwrap();
+        assert!(!bill.bool_or("screen_cached", true).unwrap(), "first pass is cold");
+        client.shutdown().unwrap();
+        server.join();
+    }
+
+    #[test]
+    fn second_identical_job_hits_the_screen_cache() {
+        let server = Server::start(ServeOptions::default()).unwrap();
+        let addr = server.addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        let a = client.submit(&tiny_solve(), None, 0.1).unwrap();
+        client.wait(a).unwrap();
+        let b = client.submit(&tiny_solve(), None, 0.1).unwrap();
+        client.wait(b).unwrap();
+        assert_eq!(client.result_omega(a).unwrap(), client.result_omega(b).unwrap());
+        let cold = client.bill(a).unwrap();
+        let warm = client.bill(b).unwrap();
+        assert!(!cold.bool_or("screen_cached", true).unwrap());
+        assert!(warm.bool_or("screen_cached", false).unwrap());
+        assert_eq!(warm.f64_or("screen_time", -1.0).unwrap(), 0.0);
+        assert!(
+            warm.f64_or("total_time", 0.0).unwrap()
+                < cold.f64_or("total_time", 0.0).unwrap(),
+            "amortized screening must strictly shrink the bill"
+        );
+        client.shutdown().unwrap();
+        server.join();
+    }
+
+    #[test]
+    fn malformed_and_unknown_frames_get_error_replies() {
+        let server = Server::start(ServeOptions::default()).unwrap();
+        let addr = server.addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        // Unknown op: clean error, connection survives.
+        let err = client.call(&obj(vec![("op", Json::Str("frobnicate".into()))]));
+        assert!(err.unwrap_err().to_string().contains("unknown op"));
+        // Unknown job id.
+        let err = client
+            .call(&obj(vec![("op", Json::Str("status".into())), ("job", Json::Num(7.0))]));
+        assert!(err.unwrap_err().to_string().contains("unknown job"));
+        // Still alive for a valid frame on the same connection.
+        client.call(&obj(vec![("op", Json::Str("ping".into()))])).unwrap();
+        client.shutdown().unwrap();
+        server.join();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_fails_the_job_cleanly() {
+        let server = Server::start(ServeOptions::default()).unwrap();
+        let addr = server.addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        let job = client.submit(&tiny_solve(), Some(0xdead_beef), 0.1).unwrap();
+        let err = client.wait(job).unwrap_err();
+        assert!(err.to_string().contains("fingerprint mismatch"), "{err}");
+        client.shutdown().unwrap();
+        server.join();
+    }
+}

@@ -182,6 +182,19 @@ impl CostSummary {
         self.x_panel_words = self.x_panel_words.max(other.x_panel_words);
     }
 
+    /// True when nothing was metered into this summary. This is the
+    /// shape a cache-amortized screening share takes in a serve-layer
+    /// bill (`crate::serve`): the pass was billed once by the job that
+    /// computed it, and every later hit carries a zero share.
+    pub fn is_unbilled(&self) -> bool {
+        self.time == 0.0
+            && self.comm_time == 0.0
+            && self.total == Counters::default()
+            && self.max_per_rank == Counters::default()
+            && self.peak_mem_words == 0
+            && self.x_panel_words == 0
+    }
+
     pub fn from_counters(per_rank: &[Counters], m: &MachineParams) -> Self {
         let mut s = CostSummary::default();
         for c in per_rank {
@@ -227,6 +240,13 @@ impl GridBill {
         let mut t = self.screen;
         t.merge_sequential(&self.waves);
         t
+    }
+
+    /// True when this bill's screening share was amortized away — the
+    /// job reused a cached pass and billed nothing for component
+    /// discovery. The serve protocol reports this as `screen_cached`.
+    pub fn screen_amortized(&self) -> bool {
+        self.screen.is_unbilled()
     }
 
     /// What the same screening + solves would have billed with *no*
@@ -421,6 +441,23 @@ mod tests {
         let mut seq = a;
         seq.merge_sequential(&b);
         assert_eq!(seq.x_panel_words, 500);
+    }
+
+    /// A default (all-zero) screening share reads as amortized; any
+    /// metered screening share does not.
+    #[test]
+    fn amortized_screen_share_is_detectable() {
+        assert!(CostSummary::default().is_unbilled());
+        let m = MachineParams::edison_like();
+        let metered = CostSummary::from_counters(
+            &[Counters { messages: 1, words: 2, flops_dense: 3, flops_sparse: 0 }],
+            &m,
+        );
+        assert!(!metered.is_unbilled());
+        let warm = GridBill { screen: CostSummary::default(), ..GridBill::default() };
+        assert!(warm.screen_amortized());
+        let cold = GridBill { screen: metered, ..GridBill::default() };
+        assert!(!cold.screen_amortized());
     }
 
     #[test]

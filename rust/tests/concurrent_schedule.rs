@@ -21,6 +21,7 @@ use hpconcord::concord::screening::gram_components;
 use hpconcord::concord::{
     fit_screened_distributed, ConcordConfig, ScreenedDistFit, ScreenedDistOptions, Variant,
 };
+use hpconcord::io::XSource;
 use hpconcord::linalg::Mat;
 use hpconcord::prelude::*;
 use hpconcord::runtime::native;
@@ -69,7 +70,7 @@ fn run(x: &Mat, threads: usize, budget: usize, sequential: bool) -> ScreenedDist
         sequential,
         gram_block: 0,
     };
-    fit_screened_distributed(x, &k_block_cfg(threads, budget), &opts).unwrap()
+    fit_screened_distributed(XSource::InCore(x), &k_block_cfg(threads, budget), &opts).unwrap()
 }
 
 /// Every non-singleton component appears in exactly one wave, and no

@@ -22,7 +22,7 @@ use hpconcord::concord::{
 };
 use hpconcord::coordinator::{run_sweep_screened_dist, GridSchedule, GridSpec};
 use hpconcord::cost::MemFootprint;
-use hpconcord::io::{write_x, XDisk};
+use hpconcord::io::{write_x, XDisk, XSource};
 use hpconcord::linalg::Mat;
 use hpconcord::prelude::*;
 use hpconcord::runtime::native;
@@ -74,13 +74,13 @@ fn pinned_fabric_over_ranks_budget_is_a_clean_error() {
     let mut cfg = base_cfg();
     cfg.ranks_budget = 4;
     let opts = ScreenedDistOptions { fixed: Some((8, 1, 1)), ..dist_opts() };
-    let err = fit_screened_distributed(&x, &cfg, &opts).unwrap_err();
+    let err = fit_screened_distributed(XSource::InCore(&x), &cfg, &opts).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("exceeds the concurrent rank budget"), "unexpected error: {msg}");
     assert!(msg.contains("--ranks-budget"), "message should name the knob: {msg}");
     // The boundary case — pin exactly at the budget — still runs.
     cfg.ranks_budget = 8;
-    assert!(fit_screened_distributed(&x, &cfg, &opts).is_ok());
+    assert!(fit_screened_distributed(XSource::InCore(&x), &cfg, &opts).is_ok());
 }
 
 /// A pin the 1.5D rank programs cannot execute (`c_X·c_Ω > P` here) is
@@ -89,7 +89,7 @@ fn pinned_fabric_over_ranks_budget_is_a_clean_error() {
 fn non_runnable_pin_is_a_clean_error() {
     let x = disjoint_blocks(&[10, 8], 400, 0xB17);
     let opts = ScreenedDistOptions { fixed: Some((8, 4, 4)), ..dist_opts() };
-    let err = fit_screened_distributed(&x, &base_cfg(), &opts).unwrap_err();
+    let err = fit_screened_distributed(XSource::InCore(&x), &base_cfg(), &opts).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("not runnable"), "unexpected error: {msg}");
 }
@@ -106,7 +106,8 @@ fn sweep_mem_budget_below_largest_component_is_a_clean_error() {
     // (tools/verify_fixture_margins.py on seed 0x0BAD).
     let grid = GridSpec { lambda1: vec![0.01, 0.02], lambda2: vec![0.1] };
     for mode in [GridSchedule::Packed, GridSchedule::PerPoint] {
-        let err = run_sweep_screened_dist(&x, &grid, &cfg, &dist_opts(), mode).unwrap_err();
+        let err = run_sweep_screened_dist(XSource::InCore(&x), &grid, &cfg, &dist_opts(), mode)
+            .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("memory budget"), "unexpected error ({mode:?}): {msg}");
     }
@@ -114,7 +115,8 @@ fn sweep_mem_budget_below_largest_component_is_a_clean_error() {
     // schedules in both modes.
     cfg.mem_budget = MemFootprint::for_component(x.rows(), 10).words();
     for mode in [GridSchedule::Packed, GridSchedule::PerPoint] {
-        assert!(run_sweep_screened_dist(&x, &grid, &cfg, &dist_opts(), mode).is_ok());
+        let ok = run_sweep_screened_dist(XSource::InCore(&x), &grid, &cfg, &dist_opts(), mode);
+        assert!(ok.is_ok());
     }
 }
 

@@ -18,6 +18,7 @@ use hpconcord::coordinator::{
     subsample_rows, GridSchedule, GridSpec, StabilityConfig, SweepResult,
 };
 use hpconcord::cost::MemFootprint;
+use hpconcord::io::XSource;
 use hpconcord::linalg::Mat;
 use hpconcord::prelude::*;
 
@@ -86,10 +87,9 @@ fn packed_sweep_bit_identical_to_standalone_points() {
             let base = base_cfg(threads, budget);
             let tag = format!("budget {budget} threads {threads}");
             let packed =
-                run_sweep_screened_dist(&x, &grid, &base, &opts, GridSchedule::Packed).unwrap();
+                run_sweep_screened_dist(xs, &grid, &base, &opts, GridSchedule::Packed).unwrap();
             let per_point =
-                run_sweep_screened_dist(&x, &grid, &base, &opts, GridSchedule::PerPoint)
-                    .unwrap();
+                run_sweep_screened_dist(xs, &grid, &base, &opts, GridSchedule::PerPoint).unwrap();
             assert_eq!(packed.results.len(), 4, "{tag}");
             assert_eq!(packed.results.len(), per_point.results.len(), "{tag}");
             for (rp, rs) in packed.results.iter().zip(&per_point.results) {
@@ -102,7 +102,7 @@ fn packed_sweep_bit_identical_to_standalone_points() {
                 );
             }
             for r in &packed.results {
-                let direct = fit_screened_distributed(&x, &r.job.cfg, &opts).unwrap();
+                let direct = fit_screened_distributed(xs, &r.job.cfg, &opts).unwrap();
                 assert_eq!(
                     bits(&r.fit.omega),
                     bits(&direct.fit.omega),
@@ -134,12 +134,13 @@ fn grid_bill_undercuts_per_point_fold_and_gram_is_billed_once() {
     // schedules the four jobs' p = 12 fabrics first, and 4 × 8 ranks
     // fill wave 0 with four different jobs.
     let x = disjoint_blocks(&[12, 6, 6, 6], 800, 0x6B11);
+    let xs = XSource::InCore(&x);
     let grid = grid();
     let base = base_cfg(1, 32);
     let opts = dist_opts();
-    let packed = run_sweep_screened_dist(&x, &grid, &base, &opts, GridSchedule::Packed).unwrap();
+    let packed = run_sweep_screened_dist(xs, &grid, &base, &opts, GridSchedule::Packed).unwrap();
     let per_point =
-        run_sweep_screened_dist(&x, &grid, &base, &opts, GridSchedule::PerPoint).unwrap();
+        run_sweep_screened_dist(xs, &grid, &base, &opts, GridSchedule::PerPoint).unwrap();
 
     // The shared schedule really packs across jobs: some wave holds
     // fabrics from at least two different grid points.
@@ -156,7 +157,8 @@ fn grid_bill_undercuts_per_point_fold_and_gram_is_billed_once() {
     // single standalone point's, not four of them — and the labeling
     // collective's messages are paid once too (allgather messages are
     // payload-size independent).
-    let standalone = fit_screened_distributed(&x, &packed.results[0].job.cfg, &opts).unwrap();
+    let standalone =
+        fit_screened_distributed(xs, &packed.results[0].job.cfg, &opts).unwrap();
     assert_eq!(
         packed.bill.screen.total.flops_dense, standalone.screen_cost.total.flops_dense,
         "amortized screening must form the gram exactly once"
@@ -192,13 +194,14 @@ fn grid_bill_undercuts_per_point_fold_and_gram_is_billed_once() {
 #[test]
 fn packed_sweep_sequential_reference_is_bit_identical() {
     let x = disjoint_blocks(&[10, 10, 10, 10], 800, 0x5E9);
+    let xs = XSource::InCore(&x);
     let grid = grid();
     let base = base_cfg(2, 32);
-    let conc = run_sweep_screened_dist(&x, &grid, &base, &dist_opts(), GridSchedule::Packed)
-        .unwrap();
+    let conc =
+        run_sweep_screened_dist(xs, &grid, &base, &dist_opts(), GridSchedule::Packed).unwrap();
     let seq_opts = ScreenedDistOptions { sequential: true, ..dist_opts() };
     let seq =
-        run_sweep_screened_dist(&x, &grid, &base, &seq_opts, GridSchedule::Packed).unwrap();
+        run_sweep_screened_dist(xs, &grid, &base, &seq_opts, GridSchedule::Packed).unwrap();
     for (a, b) in conc.results.iter().zip(&seq.results) {
         assert_eq!(bits(&a.fit.omega), bits(&b.fit.omega), "job {}", a.job.id);
     }
@@ -213,15 +216,15 @@ fn packed_sweep_sequential_reference_is_bit_identical() {
 #[test]
 fn packed_sweep_bit_identical_under_tight_memory_budget() {
     let x = disjoint_blocks(&[10, 10, 10, 10], 800, 0x9A1D);
+    let xs = XSource::InCore(&x);
     let grid = grid();
     let opts = dist_opts();
     let unbounded =
-        run_sweep_screened_dist(&x, &grid, &base_cfg(4, 32), &opts, GridSchedule::Packed)
-            .unwrap();
+        run_sweep_screened_dist(xs, &grid, &base_cfg(4, 32), &opts, GridSchedule::Packed).unwrap();
     // Every component is a 10-column block of the 3200-row fixture.
     let tight = MemFootprint::for_component(x.rows(), 10).words();
     let base = ConcordConfig { mem_budget: tight, ..base_cfg(4, 32) };
-    let bounded = run_sweep_screened_dist(&x, &grid, &base, &opts, GridSchedule::Packed).unwrap();
+    let bounded = run_sweep_screened_dist(xs, &grid, &base, &opts, GridSchedule::Packed).unwrap();
     for (a, b) in bounded.results.iter().zip(&unbounded.results) {
         assert_eq!(a.job.id, b.job.id);
         assert_eq!(bits(&a.fit.omega), bits(&b.fit.omega), "job {}", a.job.id);
@@ -263,14 +266,14 @@ fn stability_dist_subsample_wiring_matches_direct_fits() {
     let cfg = StabilityConfig { subsamples: 3, seed: 17, workers: 1, ..Default::default() };
     let machine = MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() };
     let opts = ScreenedDistOptions { total_ranks: 4, machine, ..Default::default() };
-    let out = stability_selection_dist(&prob.x, &base, &cfg, &opts).unwrap();
+    let out = stability_selection_dist(XSource::InCore(&prob.x), &base, &cfg, &opts).unwrap();
 
     let m = ((n as f64) * cfg.fraction).round().max(2.0) as usize;
     let mut want = Mat::zeros(p, p);
     for b in 0..cfg.subsamples {
         let rows = subsample_rows(n, m, cfg.seed, b);
         let sub = Mat::from_fn(m, p, |i, j| prob.x.get(rows[i], j));
-        let fit = fit_screened_distributed(&sub, &base, &opts).unwrap();
+        let fit = fit_screened_distributed(XSource::InCore(&sub), &base, &opts).unwrap();
         for i in 0..p {
             for j in 0..p {
                 if i != j && fit.fit.omega.get(i, j) != 0.0 {
@@ -297,7 +300,7 @@ fn stability_dist_thread_count_invariant() {
     let mut runs = Vec::new();
     for threads in [1usize, 4, 1] {
         let base = ConcordConfig { threads, ..stability_base() };
-        runs.push(stability_selection_dist(&prob.x, &base, &cfg, &opts).unwrap());
+        runs.push(stability_selection_dist(XSource::InCore(&prob.x), &base, &cfg, &opts).unwrap());
     }
     for r in &runs[1..] {
         assert!(runs[0].frequency.max_abs_diff(&r.frequency) == 0.0);
@@ -328,7 +331,7 @@ fn stability_dist_stable_edges_agree_with_single_node_path() {
     let machine = MachineParams { beta_mem: 0.0, ..MachineParams::edison_like() };
     let opts = ScreenedDistOptions { total_ranks: 4, machine, ..Default::default() };
     let single = stability_selection(&x, &base, &cfg);
-    let dist = stability_selection_dist(&x, &base, &cfg, &opts).unwrap();
+    let dist = stability_selection_dist(XSource::InCore(&x), &base, &cfg, &opts).unwrap();
     assert!(!dist.edges.is_empty(), "no stable edges found");
     assert_eq!(dist.edges, single.edges, "stable edge sets must agree");
     // No stable edge crosses the (exactly screened-apart) blocks.

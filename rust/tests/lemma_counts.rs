@@ -12,6 +12,7 @@ use hpconcord::concord::{
     ScreenedDistOptions, Variant,
 };
 use hpconcord::dist::{rotate_parts, Block, RepGrid};
+use hpconcord::io::XSource;
 use hpconcord::linalg::Mat;
 use hpconcord::prelude::*;
 
@@ -189,7 +190,7 @@ fn screening_leaves_subfabric_counts_unchanged() {
             sequential: false,
             gram_block: 0,
         };
-        let screened = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+        let screened = fit_screened_distributed(XSource::InCore(&x), &cfg, &opts).unwrap();
         assert_eq!(screened.solves.len(), 2, "{variant:?}: expected one fabric per block");
         for sv in &screened.solves {
             assert_eq!(sv.counters.len(), 4, "{variant:?}: sized sub-fabric has P = 4");

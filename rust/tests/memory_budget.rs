@@ -16,6 +16,7 @@ use hpconcord::concord::{
 };
 use hpconcord::coordinator::{stability_selection_dist, StabilityConfig};
 use hpconcord::cost::MemFootprint;
+use hpconcord::io::XSource;
 use hpconcord::linalg::Mat;
 use hpconcord::prelude::*;
 
@@ -85,7 +86,7 @@ fn mem_budget_is_a_schedule_only_knob() {
     // seed (tools/verify_fixture_margins.py).
     let x = disjoint_blocks(&[10, 10, 10, 10], 400, 0x9A1D);
     let opts = dist_opts();
-    let baseline = fit_screened_distributed(&x, &base_cfg(1, 0), &opts).unwrap();
+    let baseline = fit_screened_distributed(XSource::InCore(&x), &base_cfg(1, 0), &opts).unwrap();
     let per = footprints(&baseline);
     assert_eq!(per.len(), 4, "fixture must screen into 4 fabric components");
     let tight = per.iter().copied().max().unwrap();
@@ -98,7 +99,9 @@ fn mem_budget_is_a_schedule_only_knob() {
     for budget in [0u64, tight, one_wave] {
         for threads in [1usize, 4] {
             let tag = format!("mem budget {budget} threads {threads}");
-            let out = fit_screened_distributed(&x, &base_cfg(threads, budget), &opts).unwrap();
+            let out =
+                fit_screened_distributed(XSource::InCore(&x), &base_cfg(threads, budget), &opts)
+                    .unwrap();
             assert_eq!(bits(&out.fit.omega), bits(&baseline.fit.omega), "{tag}: omega drift");
             assert_eq!(
                 out.fit.objective.to_bits(),
@@ -124,7 +127,8 @@ fn mem_budget_is_a_schedule_only_knob() {
     // The tight budget really splits waves: one equal-footprint
     // component per wave, and the modeled peak drops strictly below
     // the unbounded schedule's.
-    let tight_run = fit_screened_distributed(&x, &base_cfg(1, tight), &opts).unwrap();
+    let tight_run =
+        fit_screened_distributed(XSource::InCore(&x), &base_cfg(1, tight), &opts).unwrap();
     assert_eq!(tight_run.schedule.waves.len(), per.len(), "tight budget: one wave each");
     assert!(tight_run.schedule.peak_mem_words() < baseline.schedule.peak_mem_words());
 }
@@ -135,13 +139,13 @@ fn mem_budget_is_a_schedule_only_knob() {
 fn budget_below_largest_component_is_a_clean_error() {
     let x = disjoint_blocks(&[10, 10, 10, 10], 400, 0x9A1D);
     let opts = dist_opts();
-    let err = fit_screened_distributed(&x, &base_cfg(1, 100), &opts).unwrap_err();
+    let err = fit_screened_distributed(XSource::InCore(&x), &base_cfg(1, 100), &opts).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("memory budget"), "unexpected error: {msg}");
     // The smallest feasible budget — exactly the largest component —
     // still schedules.
     let need = MemFootprint::for_component(x.rows(), 10).words();
-    assert!(fit_screened_distributed(&x, &base_cfg(1, need), &opts).is_ok());
+    assert!(fit_screened_distributed(XSource::InCore(&x), &base_cfg(1, need), &opts).is_ok());
 }
 
 /// Ragged [12, 6, 6, 6] blocks: packing under the tight budget keeps
@@ -151,13 +155,14 @@ fn budget_below_largest_component_is_a_clean_error() {
 fn tight_budget_bounds_the_modeled_peak() {
     let x = disjoint_blocks(&[12, 6, 6, 6], 200, 0x51ab);
     let opts = dist_opts();
-    let unbounded = fit_screened_distributed(&x, &base_cfg(1, 0), &opts).unwrap();
+    let unbounded = fit_screened_distributed(XSource::InCore(&x), &base_cfg(1, 0), &opts).unwrap();
     let per = footprints(&unbounded);
     assert_eq!(per.len(), 4);
     let tight = per.iter().copied().max().unwrap();
     assert_eq!(tight, MemFootprint::for_component(x.rows(), 12).words());
 
-    let bounded = fit_screened_distributed(&x, &base_cfg(1, tight), &opts).unwrap();
+    let bounded =
+        fit_screened_distributed(XSource::InCore(&x), &base_cfg(1, tight), &opts).unwrap();
     for wave in &bounded.schedule.waves {
         assert!(wave.mem_words() <= tight);
     }
@@ -253,7 +258,7 @@ fn stability_screen_peak_models_one_subsample() {
         sequential: false,
         gram_block: 0,
     };
-    let out = stability_selection_dist(&x, &base, &cfg, &opts).unwrap();
+    let out = stability_selection_dist(XSource::InCore(&x), &base, &cfg, &opts).unwrap();
     let m = ((n as f64) * cfg.fraction).round() as usize;
     // Every pass screens one m × p subsample; the serial fold maxes
     // equal peaks, so the bill reports exactly one copy's residency.

@@ -13,13 +13,9 @@
 //! on-disk run's modeled peak under a tight budget sits strictly below
 //! the in-core unbounded run's.
 
-use hpconcord::concord::{
-    fit_screened_distributed, fit_screened_distributed_src, ConcordConfig, ScreenedDistOptions,
-    Variant,
-};
+use hpconcord::concord::{fit_screened_distributed, ConcordConfig, ScreenedDistOptions, Variant};
 use hpconcord::coordinator::{
-    run_sweep_screened_dist, run_sweep_screened_dist_src, stability_selection_dist,
-    stability_selection_dist_src, GridSchedule, GridSpec, StabilityConfig,
+    run_sweep_screened_dist, stability_selection_dist, GridSchedule, GridSpec, StabilityConfig,
 };
 use hpconcord::cost::MemFootprint;
 use hpconcord::io::{write_x, XDisk, XSource, DEFAULT_PANEL_ROWS};
@@ -101,9 +97,9 @@ fn solve_is_backend_invariant_across_the_knob_matrix() {
             for threads in [1usize, 4] {
                 let tag = format!("gram {gram_block} mem {mem_budget} threads {threads}");
                 let cfg = base_cfg(threads, mem_budget);
-                let incore = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+                let incore = fit_screened_distributed(XSource::InCore(&x), &cfg, &opts).unwrap();
                 let disk =
-                    fit_screened_distributed_src(XSource::OnDisk(&xd), &cfg, &opts).unwrap();
+                    fit_screened_distributed(XSource::OnDisk(&xd), &cfg, &opts).unwrap();
 
                 assert_eq!(bits(&disk.fit.omega), bits(&incore.fit.omega), "{tag}: omega");
                 assert_eq!(
@@ -160,10 +156,10 @@ fn on_disk_tight_budget_peak_undercuts_in_core_unbounded() {
     let (_tmp, xd) = disk_fixture("acceptance", &x);
     let opts = dist_opts(0);
 
-    let incore = fit_screened_distributed(&x, &base_cfg(1, 0), &opts).unwrap();
+    let incore = fit_screened_distributed(XSource::InCore(&x), &base_cfg(1, 0), &opts).unwrap();
     let tight = MemFootprint::for_component(n, 12).words();
     let disk =
-        fit_screened_distributed_src(XSource::OnDisk(&xd), &base_cfg(1, tight), &opts).unwrap();
+        fit_screened_distributed(XSource::OnDisk(&xd), &base_cfg(1, tight), &opts).unwrap();
 
     // Same estimate, same counters — rules 7 and 8 jointly.
     assert_eq!(bits(&disk.fit.omega), bits(&incore.fit.omega));
@@ -202,9 +198,10 @@ fn dist_sweep_is_backend_invariant_on_both_schedules() {
     let opts = dist_opts(7);
 
     for mode in [GridSchedule::Packed, GridSchedule::PerPoint] {
-        let incore = run_sweep_screened_dist(&x, &grid, &base, &opts, mode).unwrap();
+        let incore =
+            run_sweep_screened_dist(XSource::InCore(&x), &grid, &base, &opts, mode).unwrap();
         let disk =
-            run_sweep_screened_dist_src(XSource::OnDisk(&xd), &grid, &base, &opts, mode).unwrap();
+            run_sweep_screened_dist(XSource::OnDisk(&xd), &grid, &base, &opts, mode).unwrap();
         assert_eq!(disk.results.len(), incore.results.len(), "{mode:?}");
         for (d, i) in disk.results.iter().zip(&incore.results) {
             let tag = format!("{mode:?} job {}", i.job.id);
@@ -237,8 +234,8 @@ fn stability_selection_is_backend_invariant() {
     let cfg = StabilityConfig { subsamples: 4, fraction: 0.5, threshold: 0.6, seed: 7, workers: 2 };
     let opts = ScreenedDistOptions { total_ranks: 4, ..dist_opts(0) };
 
-    let incore = stability_selection_dist(&x, &base, &cfg, &opts).unwrap();
-    let disk = stability_selection_dist_src(XSource::OnDisk(&xd), &base, &cfg, &opts).unwrap();
+    let incore = stability_selection_dist(XSource::InCore(&x), &base, &cfg, &opts).unwrap();
+    let disk = stability_selection_dist(XSource::OnDisk(&xd), &base, &cfg, &opts).unwrap();
 
     assert_eq!(bits(&disk.frequency), bits(&incore.frequency), "frequency drift");
     assert_eq!(disk.edges, incore.edges);

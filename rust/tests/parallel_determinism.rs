@@ -23,6 +23,7 @@ use hpconcord::concord::{
     fit_distributed, fit_screened_distributed, fit_single_node, fit_with_screening,
     ConcordConfig, ScreenedDistOptions, Variant,
 };
+use hpconcord::io::XSource;
 use hpconcord::linalg::{Csr, Mat, TileConfig};
 use hpconcord::prelude::*;
 use hpconcord::prop_assert;
@@ -362,7 +363,7 @@ fn fit_screened_distributed_is_byte_identical_across_thread_counts() {
             sequential: false,
             gram_block: 0,
         };
-        fit_screened_distributed(&x, &cfg, &opts).unwrap()
+        fit_screened_distributed(XSource::InCore(&x), &cfg, &opts).unwrap()
     };
     let base = run(1);
     assert_eq!(base.components, 2, "fixture must split in two");
@@ -408,7 +409,7 @@ fn fit_screened_distributed_is_byte_identical_across_budgets_and_threads() {
             sequential,
             gram_block: 0,
         };
-        fit_screened_distributed(&x, &cfg, &opts).unwrap()
+        fit_screened_distributed(XSource::InCore(&x), &cfg, &opts).unwrap()
     };
     let base = run(1, 4, true);
     assert_eq!(base.solves.len(), 2);

@@ -22,6 +22,7 @@ use hpconcord::concord::{
     fit_distributed, fit_screened_distributed, fit_single_node, fit_with_screening,
     ConcordConfig, ScreenedDistOptions, Variant,
 };
+use hpconcord::io::XSource;
 use hpconcord::linalg::Mat;
 use hpconcord::prelude::*;
 use hpconcord::prop_assert;
@@ -179,7 +180,7 @@ fn connected_problem_screened_dist_identical_to_unscreened() {
         sequential: false,
         gram_block: 0,
     };
-    let screened = fit_screened_distributed(&problem.x, &cfg, &opts).unwrap();
+    let screened = fit_screened_distributed(XSource::InCore(&problem.x), &cfg, &opts).unwrap();
 
     assert_eq!(screened.components, 1);
     assert_eq!(screened.solves.len(), 1);
@@ -214,7 +215,7 @@ fn k_block_problem_runs_k_smaller_fabrics() {
         sequential: false,
         gram_block: 0,
     };
-    let screened = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+    let screened = fit_screened_distributed(XSource::InCore(&x), &cfg, &opts).unwrap();
 
     assert_eq!(screened.components, sizes.len());
     assert_eq!(screened.solves.len(), sizes.len(), "every block gets its own fabric");
@@ -266,7 +267,7 @@ fn screened_paths_match_single_node_bitwise_per_block() {
         sequential: false,
         gram_block: 0,
     };
-    let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+    let sdist = fit_screened_distributed(XSource::InCore(&x), &cfg, &opts).unwrap();
     assert_eq!(sdist.components, 2);
     assert_eq!(
         bits(&screened.fit.omega),
@@ -304,7 +305,7 @@ fn screened_dist_fabric_blocks_match_single_node_closely() {
         sequential: false,
         gram_block: 0,
     };
-    let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+    let sdist = fit_screened_distributed(XSource::InCore(&x), &cfg, &opts).unwrap();
     assert_eq!(sdist.components, 2);
     for sv in &sdist.solves {
         let sub = fit_single_node(&extract_columns(&x, &sv.indices), &cfg).unwrap();
@@ -372,7 +373,7 @@ fn iteration_stats_sum_across_components() {
         sequential: false,
         gram_block: 0,
     };
-    let sdist = fit_screened_distributed(&x, &cfg, &opts).unwrap();
+    let sdist = fit_screened_distributed(XSource::InCore(&x), &cfg, &opts).unwrap();
     assert_eq!(sdist.fit.iterations, a.iterations + b.iterations);
     assert_eq!(sdist.per_component.len(), 2);
 }

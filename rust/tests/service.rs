@@ -1,0 +1,369 @@
+//! The multi-tenant estimation service: protocol and equivalence suite.
+//!
+//! The contract under test is determinism rule 9 in `ARCHITECTURE.md`:
+//! the service is a **schedule-only** layer. A served job's omega is
+//! byte-for-byte the `--out-omega` bytes of the equivalent CLI
+//! invocation — across thread counts, memory budgets, cross-tenant
+//! packing, and screening-cache hits — while only the bills and wave
+//! schedules reflect the multi-tenancy. Alongside that wall:
+//!
+//! - the `submit` frame codec round-trips every request field the wire
+//!   carries, for every request kind (the client encodes exactly what
+//!   the server decodes);
+//! - concurrent clients get distinct job ids and each job's result is
+//!   its own request's standalone answer (admission interleaving never
+//!   leaks one tenant's result into another's);
+//! - a repeated same-dataset sweep bills its screening pass exactly
+//!   once: the warm bill reports `screen_cached` with a zero screening
+//!   share and a strictly smaller total;
+//! - malformed frames (non-JSON lines, unknown kinds, bad fingerprint
+//!   claims, missing fields) get clean `{"ok":false}` replies and the
+//!   connection survives.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use hpconcord::concord::{
+    fit_screened_distributed, EstimationRequest, RequestKind, WorkloadSpec,
+};
+use hpconcord::coordinator::{
+    run_sweep_screened_dist, stability_selection_dist, GridSchedule, GridSpec, StabilityConfig,
+};
+use hpconcord::io::{format_omega, XSource};
+use hpconcord::serve::{request_from_frame, request_to_frame, Client, Json, ServeOptions, Server};
+
+/// A small solve request the suite reuses: p=24 keeps every fit fast
+/// while still splitting across fabric plans worth packing.
+fn solve_req(lambda1: f64, threads: usize, mem_budget: u64) -> EstimationRequest {
+    let mut req = EstimationRequest::new(RequestKind::Solve);
+    req.workload = WorkloadSpec { p: 24, n: 60, ..WorkloadSpec::default() };
+    req.cfg.lambda1 = lambda1;
+    req.cfg.max_iter = 30;
+    req.cfg.threads = threads;
+    req.cfg.mem_budget = mem_budget;
+    req.opts.total_ranks = 4;
+    req
+}
+
+/// The CLI path's bytes for a solve request: exactly what
+/// `hpconcord solve --mode dist --screen --out-omega` writes.
+fn cli_solve_bytes(req: &EstimationRequest) -> String {
+    let x = req.workload.generate().unwrap().x;
+    let fit = fit_screened_distributed(XSource::InCore(&x), &req.cfg, &req.opts).unwrap();
+    format_omega(&fit.fit.omega)
+}
+
+// ---------------------------------------------------------------- //
+// Frame codec round-trips                                          //
+// ---------------------------------------------------------------- //
+
+/// Encode → decode and compare every field the wire carries. (The
+/// tile shape is deliberately not a wire field — it is a node-local
+/// throughput knob the server chooses — so requests here keep the
+/// default tile.)
+fn assert_round_trip(req: &EstimationRequest, fp: Option<u64>, density: f64) {
+    let frame = request_to_frame(req, fp, density);
+    // Through the actual wire representation, not just the value tree.
+    let frame = Json::parse(&frame.encode()).unwrap();
+    let (back, claim, sel) = request_from_frame(&frame).unwrap();
+    match (&req.kind, &back.kind) {
+        (RequestKind::Solve, RequestKind::Solve) => {}
+        (
+            RequestKind::Sweep { grid: a, per_point: pa },
+            RequestKind::Sweep { grid: b, per_point: pb },
+        ) => {
+            assert_eq!(a.lambda1, b.lambda1);
+            assert_eq!(a.lambda2, b.lambda2);
+            assert_eq!(pa, pb);
+        }
+        (RequestKind::Stability { stab: a }, RequestKind::Stability { stab: b }) => {
+            assert_eq!(a.subsamples, b.subsamples);
+            assert_eq!(a.fraction.to_bits(), b.fraction.to_bits());
+            assert_eq!(a.threshold.to_bits(), b.threshold.to_bits());
+            assert_eq!(a.seed, b.seed);
+        }
+        (a, b) => panic!("kind changed over the wire: {a:?} vs {b:?}"),
+    }
+    assert_eq!(req.cfg.lambda1.to_bits(), back.cfg.lambda1.to_bits());
+    assert_eq!(req.cfg.lambda2.to_bits(), back.cfg.lambda2.to_bits());
+    assert_eq!(req.cfg.tol.to_bits(), back.cfg.tol.to_bits());
+    assert_eq!(req.cfg.max_iter, back.cfg.max_iter);
+    assert_eq!(req.cfg.max_linesearch, back.cfg.max_linesearch);
+    assert_eq!(req.cfg.variant, back.cfg.variant);
+    assert_eq!(req.cfg.threads.max(1), back.cfg.threads);
+    assert_eq!(req.cfg.ranks_budget, back.cfg.ranks_budget);
+    assert_eq!(req.cfg.mem_budget, back.cfg.mem_budget);
+    assert_eq!(req.opts.total_ranks, back.opts.total_ranks);
+    assert_eq!(req.opts.small_cutoff, back.opts.small_cutoff);
+    assert_eq!(req.opts.gram_block, back.opts.gram_block);
+    assert_eq!(req.opts.fixed, back.opts.fixed);
+    assert_eq!(req.workload.name, back.workload.name);
+    assert_eq!(req.workload.p, back.workload.p);
+    assert_eq!(req.workload.n, back.workload.n);
+    assert_eq!(req.workload.deg, back.workload.deg);
+    assert_eq!(req.workload.seed, back.workload.seed);
+    assert_eq!(req.x_file, back.x_file);
+    assert_eq!(fp, claim);
+    assert_eq!(density.to_bits(), sel.to_bits());
+}
+
+#[test]
+fn submit_frame_round_trips_for_every_kind() {
+    assert_round_trip(&EstimationRequest::new(RequestKind::Solve), None, 0.1);
+    assert_round_trip(&solve_req(0.27, 4, 12_345), Some(0xfeed_f00d_dead_beef), 0.05);
+
+    // A heavily tuned solve: pinned replication, on-disk X, odd knobs.
+    let mut tuned = solve_req(0.31, 2, 0);
+    tuned.cfg.tol = 3.5e-7;
+    tuned.cfg.max_linesearch = 17;
+    tuned.cfg.ranks_budget = 6;
+    tuned.opts.fixed = Some((tuned.opts.total_ranks, 2, 1));
+    tuned.opts.small_cutoff = 9;
+    tuned.opts.gram_block = 37;
+    tuned.workload = WorkloadSpec { name: "random".into(), p: 96, n: 50, deg: 5, seed: 99 };
+    tuned.x_file = Some("fixtures/x.xbin".to_string());
+    assert_round_trip(&tuned, Some(1), 0.25);
+
+    for per_point in [false, true] {
+        let grid = GridSpec { lambda1: vec![0.21, 0.34, 0.55], lambda2: vec![0.0, 0.07] };
+        let mut req =
+            EstimationRequest::new(RequestKind::Sweep { grid: grid.clone(), per_point });
+        req.cfg.lambda1 = 0.4; // kind's grid wins server-side; still carried
+        assert_round_trip(&req, None, 0.12);
+    }
+
+    let stab = StabilityConfig {
+        subsamples: 13,
+        fraction: 0.61,
+        threshold: 0.82,
+        seed: 7,
+        ..StabilityConfig::default()
+    };
+    assert_round_trip(&EstimationRequest::new(RequestKind::Stability { stab }), None, 0.1);
+}
+
+#[test]
+fn bad_submit_fields_are_clean_decode_errors() {
+    let bad_kind = Json::parse(r#"{"op":"submit","kind":"spiral"}"#).unwrap();
+    let err = request_from_frame(&bad_kind).unwrap_err();
+    assert!(err.to_string().contains("unknown kind"), "{err}");
+
+    let bad_fp =
+        Json::parse(r#"{"op":"submit","kind":"solve","fingerprint":"xyzzy"}"#).unwrap();
+    let err = request_from_frame(&bad_fp).unwrap_err();
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+}
+
+// ---------------------------------------------------------------- //
+// Rule 9: served bytes == CLI bytes                                //
+// ---------------------------------------------------------------- //
+
+/// The tentpole wall: across threads {1, 4} × memory budget
+/// {unbounded, tight}, a served solve returns byte-for-byte the bytes
+/// the CLI's `--out-omega` writes for the same request.
+#[test]
+fn served_solve_is_bit_identical_to_the_cli_path() {
+    // A tight-but-admitting budget: the unbounded schedule's own peak
+    // residency (any admitted budget is bit-identical, rule 7).
+    let probe = solve_req(0.3, 1, 0);
+    let x = probe.workload.generate().unwrap().x;
+    let unbounded =
+        fit_screened_distributed(XSource::InCore(&x), &probe.cfg, &probe.opts).unwrap();
+    let tight = unbounded.schedule.peak_mem_words().max(1);
+
+    let server = Server::start(ServeOptions::default()).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    for threads in [1usize, 4] {
+        for mem_budget in [0u64, tight] {
+            let req = solve_req(0.3, threads, mem_budget);
+            let expected = cli_solve_bytes(&req);
+            let job = client.submit(&req, None, 0.1).unwrap();
+            client.wait(job).unwrap();
+            let served = client.result_omega(job).unwrap();
+            assert_eq!(
+                served, expected,
+                "threads {threads} mem {mem_budget}: served bytes differ from the CLI's"
+            );
+        }
+    }
+    client.shutdown().unwrap();
+    server.join();
+}
+
+/// Stability selection over the wire returns the same frequency matrix
+/// bytes as the direct coordinator call.
+#[test]
+fn served_stability_matches_the_direct_path() {
+    let stab = StabilityConfig {
+        subsamples: 4,
+        fraction: 0.5,
+        threshold: 0.7,
+        seed: 3,
+        ..StabilityConfig::default()
+    };
+    let mut req = EstimationRequest::new(RequestKind::Stability { stab });
+    req.workload = WorkloadSpec { p: 16, n: 48, ..WorkloadSpec::default() };
+    req.cfg.max_iter = 30;
+    req.opts.total_ranks = 4;
+
+    let x = req.workload.generate().unwrap().x;
+    let direct =
+        stability_selection_dist(XSource::InCore(&x), &req.cfg, &stab, &req.opts).unwrap();
+    let expected = format_omega(&direct.frequency);
+
+    let server = Server::start(ServeOptions::default()).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let job = client.submit(&req, None, 0.1).unwrap();
+    client.wait(job).unwrap();
+    assert_eq!(client.result_omega(job).unwrap(), expected);
+    client.shutdown().unwrap();
+    server.join();
+}
+
+// ---------------------------------------------------------------- //
+// Multi-tenancy                                                    //
+// ---------------------------------------------------------------- //
+
+/// Two clients submitting concurrently get distinct job ids, and every
+/// job's result is its own request's standalone answer — cross-tenant
+/// wave packing never mixes results (rules 6 and 9).
+#[test]
+fn concurrent_clients_get_distinct_jobs_and_standalone_results() {
+    let server = Server::start(ServeOptions::default()).unwrap();
+    let addr = server.addr().to_string();
+    // Distinct λ₁ per submission so every job has a distinguishable
+    // right answer.
+    let lambdas = [0.26, 0.30, 0.34, 0.38];
+    let mut handles = Vec::new();
+    for pair in lambdas.chunks(2) {
+        let addr = addr.clone();
+        let pair: Vec<f64> = pair.to_vec();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let mut submitted = Vec::new();
+            for l1 in pair {
+                let job = client.submit(&solve_req(l1, 1, 0), None, 0.1).unwrap();
+                submitted.push((job, l1));
+            }
+            for &(job, _) in &submitted {
+                client.wait(job).unwrap();
+            }
+            submitted
+                .into_iter()
+                .map(|(job, l1)| (job, l1, client.result_omega(job).unwrap()))
+                .collect::<Vec<_>>()
+        }));
+    }
+    let mut seen: Vec<usize> = Vec::new();
+    for h in handles {
+        for (job, l1, served) in h.join().unwrap() {
+            assert!(!seen.contains(&job), "job id {job} assigned twice");
+            seen.push(job);
+            let expected = cli_solve_bytes(&solve_req(l1, 1, 0));
+            assert_eq!(served, expected, "job {job} (λ1={l1}) is not its standalone answer");
+        }
+    }
+    assert_eq!(seen.len(), lambdas.len());
+    let mut client = Client::connect(&addr).unwrap();
+    client.shutdown().unwrap();
+    server.join();
+}
+
+// ---------------------------------------------------------------- //
+// Screening-cache billing                                          //
+// ---------------------------------------------------------------- //
+
+/// A repeated same-dataset sweep reuses the cached screening pass: the
+/// warm bill reports the hit, carries a zero screening share, and its
+/// total is strictly below the cold bill — while the returned bytes
+/// (and the CLI sweep's selected omega) stay identical.
+#[test]
+fn warm_sweep_bills_screening_once_and_keeps_the_bytes() {
+    let grid = GridSpec { lambda1: vec![0.25, 0.3, 0.4], lambda2: vec![0.0] };
+    let mut req =
+        EstimationRequest::new(RequestKind::Sweep { grid: grid.clone(), per_point: false });
+    req.workload = WorkloadSpec { p: 24, n: 60, ..WorkloadSpec::default() };
+    req.cfg.max_iter = 30;
+    req.opts.total_ranks = 4;
+
+    // The CLI twin: packed screened dist sweep + density selection.
+    let x = req.workload.generate().unwrap().x;
+    let cli = run_sweep_screened_dist(
+        XSource::InCore(&x),
+        &grid,
+        &req.cfg,
+        &req.opts,
+        GridSchedule::Packed,
+    )
+    .unwrap();
+    let expected = format_omega(
+        &hpconcord::coordinator::select_by_density(&cli.results, 0.1).unwrap().fit.omega,
+    );
+
+    let server = Server::start(ServeOptions::default()).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let cold_job = client.submit(&req, None, 0.1).unwrap();
+    client.wait(cold_job).unwrap();
+    let warm_job = client.submit(&req, None, 0.1).unwrap();
+    client.wait(warm_job).unwrap();
+
+    assert_eq!(client.result_omega(cold_job).unwrap(), expected);
+    assert_eq!(client.result_omega(warm_job).unwrap(), expected);
+
+    let cold = client.bill(cold_job).unwrap();
+    let warm = client.bill(warm_job).unwrap();
+    assert!(!cold.bool_or("screen_cached", true).unwrap(), "first sweep must be cold");
+    assert!(warm.bool_or("screen_cached", false).unwrap(), "second sweep must hit the cache");
+    assert!(cold.f64_or("screen_time", 0.0).unwrap() > 0.0);
+    assert_eq!(warm.f64_or("screen_time", -1.0).unwrap(), 0.0);
+    assert!(
+        warm.f64_or("total_time", 0.0).unwrap() < cold.f64_or("total_time", 0.0).unwrap(),
+        "amortized screening must strictly shrink the bill"
+    );
+    client.shutdown().unwrap();
+    server.join();
+}
+
+// ---------------------------------------------------------------- //
+// Error paths on the wire                                          //
+// ---------------------------------------------------------------- //
+
+/// Raw-socket misuse: a non-JSON line, an unknown kind, and a missing
+/// job field all get `{"ok":false}` replies on a connection that keeps
+/// working afterwards.
+#[test]
+fn malformed_frames_get_error_replies_and_the_connection_survives() {
+    let server = Server::start(ServeOptions::default()).unwrap();
+    let addr = server.addr();
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut ask = |line: &str| -> Json {
+        writeln!(writer, "{line}").unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        Json::parse(reply.trim_end()).unwrap()
+    };
+
+    let r = ask("this is not json");
+    assert!(!r.bool_or("ok", true).unwrap());
+
+    let r = ask(r#"{"op":"submit","kind":"spiral"}"#);
+    assert!(!r.bool_or("ok", true).unwrap());
+    assert!(r.str_or("error", "").unwrap().contains("unknown kind"));
+
+    let r = ask(r#"{"op":"wait"}"#);
+    assert!(!r.bool_or("ok", true).unwrap());
+    assert!(r.str_or("error", "").unwrap().contains("job"));
+
+    // The connection is still serviceable.
+    let r = ask(r#"{"op":"ping"}"#);
+    assert!(r.bool_or("ok", false).unwrap());
+
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    client.shutdown().unwrap();
+    server.join();
+}

@@ -19,6 +19,15 @@ Checks (each a numbered section below):
   7. feature gates       — every cfg(feature = "x") is declared in Cargo.toml
   8. pub-item resolution — the terminal item of each crate-path use exists as
                            a pub definition in the resolved module file
+  9. entry points        — every declared bench/example/bin file has a `fn main`
+ 10. doc-tests           — fenced /// examples balance and their crate paths
+                           resolve (they compile under `cargo test --doc`)
+ 11. struct literals     — grown option structs are built with full field
+                           coverage or a `..` default tail
+ 12. format arguments    — positional placeholder counts match the argument
+                           lists of the std/anyhow format macros
+ 13. deprecated wrappers — the `_mat`/`_src` compatibility shims are only
+                           spelled in their definition and re-export files
 
 Exit 0 iff every check passes.  Run via tools/static_audit.sh.
 """
@@ -642,6 +651,40 @@ def check_format_args():
                     f"but {len(tail)} argument(s)")
 
 
+# ---------------------------------------------------------------------------
+# 13: deprecated-wrapper containment.  The `_mat`/`_src` compatibility shims
+# around the canonical XSource entry points survive for one release, but no
+# non-compat code may call them: only the files that define the shims and the
+# two `#[allow(deprecated)]` re-export relays may spell the names.  Comments
+# and string literals (USAGE text) are stripped before matching.
+# ---------------------------------------------------------------------------
+DEPRECATED_WRAPPERS = [
+    "fit_screened_distributed_mat", "fit_screened_distributed_src",
+    "run_sweep_screened_dist_mat", "run_sweep_screened_dist_src",
+    "stability_selection_dist_mat", "stability_selection_dist_src",
+]
+WRAPPER_HOMES = {
+    "rust/src/concord/screened_dist.rs",  # defines fit_screened_distributed_{mat,src}
+    "rust/src/coordinator/sweep.rs",      # defines run_sweep_screened_dist_{mat,src}
+    "rust/src/coordinator/stability.rs",  # defines stability_selection_dist_{mat,src}
+    "rust/src/concord/mod.rs",            # deprecation re-export relay
+    "rust/src/coordinator/mod.rs",        # deprecation re-export relay
+}
+
+
+def check_deprecated_wrappers():
+    pat = re.compile(r"\b(" + "|".join(DEPRECATED_WRAPPERS) + r")\b")
+    for path in rust_files():
+        if str(path.relative_to(REPO)) in WRAPPER_HOMES:
+            continue
+        code = code_of(path)
+        for m in pat.finditer(code):
+            lineno = code[: m.start()].count("\n") + 1
+            err(path, lineno,
+                f"{m.group(1)} is a deprecated compatibility shim — call the "
+                "canonical XSource-taking entry point instead")
+
+
 def main():
     check_balance_and_lines()
     check_cargo_targets()
@@ -653,6 +696,7 @@ def main():
     check_doc_tests(tree)
     check_struct_literals()
     check_format_args()
+    check_deprecated_wrappers()
     n_files = sum(1 for _ in rust_files())
     if errors:
         for e in errors:
@@ -660,7 +704,7 @@ def main():
         print(f"\nstatic audit: {len(errors)} finding(s) across {n_files} Rust files",
               file=sys.stderr)
         return 1
-    print(f"static audit: OK ({n_files} Rust files, 12 check classes)")
+    print(f"static audit: OK ({n_files} Rust files, 13 check classes)")
     return 0
 
 
