@@ -19,7 +19,7 @@
 //! the repo root is the committed first point.
 
 use hpconcord::concord::{fit_single_node, ops, ConcordConfig, Variant};
-use hpconcord::linalg::{Csr, Mat, TileConfig};
+use hpconcord::linalg::{simd, Csr, KernelLane, Mat, TileConfig};
 use hpconcord::prelude::*;
 use hpconcord::runtime::{native, Engine};
 use hpconcord::util::{time_fn, BenchRecord, BenchRecorder, Table};
@@ -290,6 +290,51 @@ fn main() {
         print!("{table}");
     }
 
+    // --- Kernel ISA lanes (runtime-dispatched microkernels) -------------
+    {
+        let p = if smoke { 96 } else { 512 };
+        println!("\n=== GEMM kernel lanes (p={p}, every lane bitwise == scalar) ===");
+        let mut table = Table::new(&["lane", "median (ms)", "GFLOP/s", "vs scalar"]);
+        let a = random_mat(&mut rng, p, p);
+        let b = random_mat(&mut rng, p, p);
+        let flops = 2.0 * (p as f64).powi(3);
+        let oracle = a.matmul_naive(&b);
+        let prev = simd::active();
+        let mut scalar_median = 0.0;
+        for lane in [KernelLane::Scalar, KernelLane::Avx2, KernelLane::Avx512] {
+            if !lane.available() {
+                println!("  {} lane: host lacks it — skipped", lane.as_str());
+                continue;
+            }
+            simd::install(lane);
+            let (stats, c) = time_fn(1, reps, || a.matmul(&b));
+            // Determinism rule 10, asserted in the bench itself: every
+            // lane reproduces the scalar oracle's exact bits.
+            assert!(bitwise_eq(&oracle, &c), "{} lane != naive at p={p}", lane.as_str());
+            if lane == KernelLane::Scalar {
+                scalar_median = stats.median;
+            }
+            recorder.push(BenchRecord {
+                name: format!("gemm_kernel_{}", lane.as_str()),
+                shape: format!("p={p}"),
+                threads: 1,
+                tile: default_tile.clone(),
+                gflops: rate(flops, stats.median),
+                wall_s: stats.median,
+                reps,
+                oracle: "bitwise == matmul_naive (rule 10: lanes are value-preserving)".into(),
+            });
+            table.row(vec![
+                lane.as_str().to_string(),
+                format!("{:.2}", stats.median * 1e3),
+                gflops(flops, stats.median),
+                format!("{:.2}×", scalar_median / stats.median),
+            ]);
+        }
+        simd::install(prev);
+        print!("{table}");
+    }
+
     // --- Fused elementwise passes ---------------------------------------
     let fused_p = if smoke { 128 } else { 512 };
     println!("\n=== fused CONCORD passes (p={fused_p}) ===");
@@ -336,6 +381,21 @@ fn main() {
     bench("prox (in-place)", 3.0, &mut || {
         ops::prox_block_into(&omega, &g, 0, 0.5, 0.3, &mut out);
     });
+    bench("gradient+prox (composed)", 7.0, &mut || {
+        let g = ops::gradient_block(&omega, &w, &wt, 0, 0.1);
+        std::hint::black_box(ops::prox_block(&omega, &g, 0, 0.5, 0.3));
+    });
+    bench("gradient+prox (fused)", 7.0, &mut || {
+        std::hint::black_box(ops::fused_gradient_prox_block(&omega, &w, &wt, 0, 0.5, 0.3, 0.1));
+    });
+    // The fused pass's oracle, asserted here too: identical bits to the
+    // composed pair (the ops unit test covers the _mt variants).
+    {
+        let g1 = ops::gradient_block(&omega, &w, &wt, 0, 0.1);
+        let composed = ops::prox_block(&omega, &g1, 0, 0.5, 0.3);
+        let fused = ops::fused_gradient_prox_block(&omega, &w, &wt, 0, 0.5, 0.3, 0.1);
+        assert!(bitwise_eq(&composed, &fused), "fused pass != composed at p={p}");
+    }
     bench("objective", 4.0, &mut || {
         std::hint::black_box(ops::objective_parts_block(&omega, &w, 0));
     });

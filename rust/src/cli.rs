@@ -101,9 +101,25 @@ COMMANDS:
            --lambda1 F --lambda2 F [--tol F] [--max-iter N]
            --mode single|dist  [--ranks P --cx C --comega C]
            [--threads N|auto]  (node-local worker threads, the paper's t)
-           [--tile mc,kc,nc]  (cache-blocking shape of the packed
+           [--tile mc,kc,nc|auto]  (cache-blocking shape of the packed
              GEMM/SpMM kernels; results are bit-identical at any tile —
-             only throughput moves. Default 128,256,512)
+             only throughput moves. Default 128,256,512. `auto` runs a
+             short measured sweep over published candidates at startup
+             and installs the winner — sound at any outcome, since the
+             tile is value-preserving. TOML: solver.tile = [mc,kc,nc]
+             or solver.tile_auto = true)
+           [--kernel scalar|avx2|avx512|auto]  (GEMM microkernel ISA
+             lane, dispatched once at startup. Every lane runs the
+             scalar kernel's exact per-element op sequence — one mul +
+             one add per k, never FMA — so results are bit-identical
+             on every lane (determinism rule 10); auto (the default)
+             picks the widest lane the host supports, and forcing a
+             lane the host lacks is a clean error. TOML: solver.kernel)
+           [--pin-cores]  (pin pool workers to cores, worker i → CPU
+             i mod available_parallelism, so packed panels stop
+             migrating between per-core caches; schedule-only — bits
+             never move; no-op where unsupported. TOML:
+             solver.pin_cores)
            [--variant cov|obs|auto]  [--config FILE]  [--artifacts DIR]
            [--screen]  (exact-thresholding screening: split into the
              connected components of {|S_ij| > λ1}; in dist mode the
@@ -193,6 +209,9 @@ COMMANDS:
            --p N --n N --s F --t F --d F --procs P [--threads N]
            [--variant cov|obs]  [--tile mc,kc,nc]  (prices the dense
              flops with the tile's cache-reuse term)
+           [--kernel scalar|avx2|avx512|auto]  (prices γ_dense at the
+             lane's measured speedup over the scalar blocked kernel —
+             see BENCH_simd_baseline.json)
   fmri     Synthetic-cortex parcellation pipeline (paper §5, scaled)
            [--p-hemi N] [--parcels K] [--samples N] [--seed S]
   engine   List and smoke-run the AOT artifacts through PJRT

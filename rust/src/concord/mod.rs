@@ -144,6 +144,27 @@ pub struct ConcordConfig {
     ///
     /// [`MemFootprint`]: crate::cost::MemFootprint
     pub mem_budget: u64,
+    /// Microkernel ISA lane for the packed GEMM layer
+    /// ([`crate::linalg::simd`]). Installed process-wide when a fit
+    /// starts. Every lane runs the scalar microkernel's exact
+    /// per-element op sequence (one multiply + one add per k, ascending,
+    /// never FMA), so — like `tile` — this is value-preserving
+    /// (determinism rule 10): results are bit-identical on every lane,
+    /// only throughput moves. [`KernelLane::Auto`] (the default) picks
+    /// the widest lane the host supports; a forced lane the host lacks
+    /// is rejected at the front door. CLI: `--kernel
+    /// scalar|avx2|avx512|auto`; TOML: `solver.kernel`.
+    ///
+    /// [`KernelLane::Auto`]: crate::linalg::KernelLane::Auto
+    pub kernel: crate::linalg::KernelLane,
+    /// Pin pool workers to cores (`worker i` → logical CPU
+    /// `i % available_parallelism`) so packed panels stop migrating
+    /// between per-core caches mid-solve. Schedule-only like `threads`
+    /// (rule 10): the partition and per-chunk op sequences are
+    /// unchanged, so results are bit-identical pinned or not; a no-op
+    /// where the platform lacks `sched_setaffinity`. CLI:
+    /// `--pin-cores`; TOML: `solver.pin_cores`.
+    pub pin_cores: bool,
 }
 
 impl Default for ConcordConfig {
@@ -159,6 +180,8 @@ impl Default for ConcordConfig {
             tile: crate::linalg::TileConfig::DEFAULT,
             ranks_budget: 0,
             mem_budget: 0,
+            kernel: crate::linalg::KernelLane::Auto,
+            pin_cores: false,
         }
     }
 }
@@ -300,6 +323,8 @@ pub fn run_distributed(
     machine: MachineParams,
 ) -> DistRun {
     crate::linalg::tile::install(cfg.tile);
+    crate::linalg::simd::install(cfg.kernel);
+    crate::util::pool::set_pin_cores(cfg.pin_cores);
     let variant = resolve_variant(x, cfg);
     let x = Arc::new(x.clone());
     let cfg = *cfg;

@@ -174,6 +174,87 @@ pub fn prox_block_into_mt(
     par_rows_mut(out.data_mut(), p, &ranges, |_i, s, e, orows| body(s, e, orows));
 }
 
+/// Fused gradient+prox slab (Algorithm 2 lines 6 and 9 in one pass):
+/// the gradient of each row lands in a p-word scratch buffer that is
+/// still L1-hot when the prox loop reads it back, eliminating the
+/// slab-sized G round trip through memory that the composed pair pays.
+/// Serial form of [`fused_gradient_prox_block_mt`].
+///
+/// Per-element operations are the composed pair's **verbatim** — the
+/// gradient loop of [`gradient_block`], then the prox loop of
+/// [`prox_block`], per row — so the result is bit-identical to
+/// `prox_block(omega, &gradient_block(omega, w, wt, row_offset, lam2),
+/// row_offset, tau, lam1)`. The C mirror measures the win
+/// (`fused_concord_pass` vs `concord_gradient_prox_composed` in
+/// `BENCH_simd_baseline.json`). The solver loop keeps the composed
+/// pair, because it reuses one G across every line-search trial; this
+/// pass serves callers that need exactly one (gradient, prox)
+/// evaluation.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_gradient_prox_block(
+    omega: &Mat,
+    w: &Mat,
+    wt: &Mat,
+    row_offset: usize,
+    tau: f64,
+    lam1: f64,
+    lam2: f64,
+) -> Mat {
+    fused_gradient_prox_block_mt(omega, w, wt, row_offset, tau, lam1, lam2, 1)
+}
+
+/// [`fused_gradient_prox_block`] on `threads` node-local workers. Rows
+/// are independent and each worker owns its scratch buffer, so the
+/// result is bit-identical at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_gradient_prox_block_mt(
+    omega: &Mat,
+    w: &Mat,
+    wt: &Mat,
+    row_offset: usize,
+    tau: f64,
+    lam1: f64,
+    lam2: f64,
+    threads: usize,
+) -> Mat {
+    let (rows, p) = omega.shape();
+    debug_assert_eq!(w.shape(), (rows, p));
+    debug_assert_eq!(wt.shape(), (rows, p));
+    let thresh = tau * lam1;
+    let mut out = Mat::zeros(rows, p);
+    let body = |s: usize, e: usize, orows: &mut [f64]| {
+        let mut gbuf = vec![0.0f64; p];
+        for i in s..e {
+            let orow = omega.row(i);
+            let wrow = w.row(i);
+            let wtrow = wt.row(i);
+            let dcol = row_offset + i;
+            // Gradient loop of gradient_block, into the hot buffer.
+            for j in 0..p {
+                gbuf[j] = 0.5 * (wrow[j] + wtrow[j]) + lam2 * orow[j];
+            }
+            if dcol < p {
+                gbuf[dcol] -= 1.0 / orow[dcol];
+            }
+            // Prox loop of prox_block_into, from the hot buffer.
+            let dst = &mut orows[(i - s) * p..(i - s + 1) * p];
+            for j in 0..p {
+                dst[j] = soft(orow[j] - tau * gbuf[j], thresh);
+            }
+            if dcol < p {
+                dst[dcol] = orow[dcol] - tau * gbuf[dcol];
+            }
+        }
+    };
+    if threads <= 1 || rows < 2 || rows * p < crate::util::pool::SPAWN_MIN_WORK {
+        body(0, rows, out.data_mut());
+        return out;
+    }
+    let ranges = chunk_ranges(rows, threads, 1);
+    par_rows_mut(out.data_mut(), p, &ranges, |_i, s, e, orows| body(s, e, orows));
+    out
+}
+
 /// [`objective_parts_block`] over a sub-range of slab rows (absolute
 /// diagonal offsets still come from `row_offset + i`).
 fn objective_parts_range(
@@ -469,6 +550,38 @@ mod tests {
             let mut out = Mat::zeros(rows, p);
             prox_block_into_mt(&omega, &g, 3, 0.5, 0.3, &mut out, threads);
             assert!(out.max_abs_diff(&prox_serial) == 0.0, "prox-into t={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_pass_is_bitwise_the_composed_pair() {
+        let mut rng = Rng::new(0xF5);
+        // Above the spawn cutoff so the _mt path really fans out, with
+        // a row_offset so the diagonal fixup lands mid-slab.
+        let rows = 300;
+        let p = 310;
+        let omega = {
+            let mut m = Mat::from_fn(rows, p, |_, _| 0.1 * rng.normal());
+            for i in 0..rows {
+                m.set(i, (7 + i).min(p - 1), 1.5 + rng.uniform());
+            }
+            m
+        };
+        let w = Mat::from_fn(rows, p, |_, _| rng.normal());
+        let wt = Mat::from_fn(rows, p, |_, _| rng.normal());
+        let (off, tau, lam1, lam2) = (7, 0.5, 0.3, 0.2);
+        let composed = prox_block(
+            &omega,
+            &gradient_block(&omega, &w, &wt, off, lam2),
+            off,
+            tau,
+            lam1,
+        );
+        let fused = fused_gradient_prox_block(&omega, &w, &wt, off, tau, lam1, lam2);
+        assert!(fused.max_abs_diff(&composed) == 0.0, "serial fused != composed");
+        for threads in 2..=8 {
+            let mt = fused_gradient_prox_block_mt(&omega, &w, &wt, off, tau, lam1, lam2, threads);
+            assert!(mt.max_abs_diff(&composed) == 0.0, "fused t={threads}");
         }
     }
 

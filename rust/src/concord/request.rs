@@ -22,7 +22,7 @@ use crate::coordinator::{
 };
 use crate::gen;
 use crate::io::XSource;
-use crate::linalg::TileConfig;
+use crate::linalg::{KernelLane, TileConfig, TileSpec};
 use crate::rng::Rng;
 use crate::simnet::cost::GridBill;
 use crate::simnet::MachineParams;
@@ -147,6 +147,7 @@ impl EstimationRequest {
     /// over the config file; defaults match the type-level defaults.
     pub fn from_args(kind: RequestKind, args: &Args, cfg: &Config) -> Result<EstimationRequest> {
         let mut req = EstimationRequest::new(kind);
+        let kernel = kernel_lane(args, cfg)?;
         req.cfg = ConcordConfig {
             lambda1: args.f64_or("lambda1", cfg.f64_or("solver.lambda1", 0.3)?)?,
             lambda2: args.f64_or("lambda2", cfg.f64_or("solver.lambda2", 0.0)?)?,
@@ -156,7 +157,11 @@ impl EstimationRequest {
                 .usize_or("max-linesearch", cfg.usize_or("solver.max_linesearch", 40)?)?,
             variant: parse_variant(&args.str_or("variant", cfg.str_or("solver.variant", "auto")?)),
             threads: node_threads(args, cfg)?,
-            tile: tile_config(args, cfg)?,
+            tile: resolve_tile(args, cfg, kernel)?,
+            kernel,
+            // Pool worker→core pinning: CLI --pin-cores (a bare flag),
+            // TOML solver.pin_cores. Schedule-only (rule 10).
+            pin_cores: args.has("pin-cores") || cfg.bool_or("solver.pin_cores", false)?,
             // Global concurrent rank budget for screened distributed
             // solving (0 = "use --ranks"): CLI --ranks-budget, TOML
             // fabric.budget.
@@ -253,6 +258,53 @@ pub fn tile_config(args: &Args, cfg: &Config) -> Result<TileConfig> {
     }
 }
 
+/// The microkernel ISA lane: `--kernel scalar|avx2|avx512|auto`, else
+/// the config file's `solver.kernel`, else `auto`. A forced concrete
+/// lane this host cannot run is a clean error here — the install-time
+/// fallback would silently hand back the scalar kernel, and a user who
+/// forced a lane wants to know it did not happen.
+pub fn kernel_lane(args: &Args, cfg: &Config) -> Result<KernelLane> {
+    let raw = args.str_or("kernel", cfg.str_or("solver.kernel", "auto")?);
+    let lane = KernelLane::parse(&raw)?;
+    if !lane.available() {
+        return Err(anyhow!(
+            "--kernel {}: this host does not support the {} lane \
+             (use --kernel auto to pick the best available)",
+            lane.as_str(),
+            lane.as_str()
+        ));
+    }
+    Ok(lane)
+}
+
+/// Resolve the tile shape including `--tile auto` (TOML:
+/// `solver.tile_auto = true`): a short deterministic calibration sweep
+/// times the [`crate::linalg::tile::AUTO_CANDIDATES`] on a fixed
+/// synthetic workload and installs the fastest. The sweep runs under
+/// `kernel` — the lane the solve itself will run — so the winner
+/// reflects real throughput. Calibration is sound at any outcome:
+/// tiles are value-preserving, so a noisy timer can only cost
+/// wall-clock, never a result bit.
+fn resolve_tile(args: &Args, cfg: &Config, kernel: KernelLane) -> Result<TileConfig> {
+    let raw = args.str_or("tile", "");
+    let spec = if !raw.is_empty() {
+        TileSpec::parse(&raw)?
+    } else if cfg.bool_or("solver.tile_auto", false)? {
+        TileSpec::Auto
+    } else {
+        TileSpec::Fixed(tile_config(args, cfg)?)
+    };
+    match spec {
+        TileSpec::Fixed(t) => Ok(t),
+        TileSpec::Auto => {
+            crate::linalg::simd::install(kernel);
+            let cal = crate::linalg::dense::calibrate_tile();
+            println!("{}", cal.summary());
+            Ok(cal.winner)
+        }
+    }
+}
+
 /// The node-local thread count (the paper's per-node t): `--threads N`,
 /// else the config file's `solver.threads`, else `--threads auto` /
 /// `solver.threads = 0` picks the host's available parallelism.
@@ -315,6 +367,47 @@ mod tests {
         let sweep =
             EstimationRequest::new(RequestKind::Sweep { grid: grid.clone(), per_point: false });
         assert_eq!(sweep.thresholds(), grid.lambda1);
+    }
+
+    #[test]
+    fn kernel_and_pinning_resolve_from_cli() {
+        let cfg = Config::default();
+        let req = EstimationRequest::from_args(
+            RequestKind::Solve,
+            &parse("solve --kernel scalar --pin-cores"),
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(req.cfg.kernel, KernelLane::Scalar);
+        assert!(req.cfg.pin_cores);
+        let def = EstimationRequest::from_args(RequestKind::Solve, &parse("solve"), &cfg).unwrap();
+        assert_eq!(def.cfg.kernel, KernelLane::Auto);
+        assert!(!def.cfg.pin_cores);
+    }
+
+    #[test]
+    fn garbage_kernel_is_a_clean_error() {
+        let err = EstimationRequest::from_args(
+            RequestKind::Solve,
+            &parse("solve --kernel mmx"),
+            &Config::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("scalar|avx2|avx512|auto"), "{err}");
+    }
+
+    #[test]
+    fn tile_auto_calibrates_to_a_candidate() {
+        // The calibration sweep must install one of the published
+        // candidates; which one wins is host-dependent (and harmless —
+        // tiles are value-preserving).
+        let req = EstimationRequest::from_args(
+            RequestKind::Solve,
+            &parse("solve --tile auto --kernel scalar"),
+            &Config::default(),
+        )
+        .unwrap();
+        assert!(crate::linalg::tile::AUTO_CANDIDATES.contains(&req.cfg.tile));
     }
 
     #[test]

@@ -746,6 +746,8 @@ pub(crate) fn batch_setup(
 ) -> Result<BatchSetup> {
     assert!(opts.total_ranks >= 1, "need at least one rank");
     crate::linalg::tile::install(cfg.tile);
+    crate::linalg::simd::install(cfg.kernel);
+    crate::util::pool::set_pin_cores(cfg.pin_cores);
     let budget = resolve_budget(cfg, opts);
     validate_pin(opts, cfg.variant, budget)?;
     Ok(BatchSetup {

@@ -342,9 +342,11 @@ impl ScreenAccum {
 /// component independently with the single-node solver, and reassemble
 /// the block-diagonal estimate.
 pub fn fit_with_screening(x: &Mat, cfg: &ConcordConfig) -> Result<ScreenedFit> {
-    // Blocking shape for the gram pass (throughput only; the
-    // per-component fits re-install the same value).
+    // Blocking shape, kernel lane and pinning for the gram pass
+    // (throughput only; per-component fits re-install the same values).
     crate::linalg::tile::install(cfg.tile);
+    crate::linalg::simd::install(cfg.kernel);
+    crate::util::pool::set_pin_cores(cfg.pin_cores);
     let s = native::gram_mt(x, cfg.threads.max(1));
     let comps = gram_components(&s, cfg.lambda1);
     fit_with_screening_on(x, &s, &comps, cfg)

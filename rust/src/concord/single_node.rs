@@ -49,6 +49,8 @@ pub fn fit_single_node_with_engine(
 
 fn fit_impl(x: &Mat, cfg: &ConcordConfig, mut engine: Option<&mut Engine>) -> Result<ConcordFit> {
     crate::linalg::tile::install(cfg.tile);
+    crate::linalg::simd::install(cfg.kernel);
+    crate::util::pool::set_pin_cores(cfg.pin_cores);
     let p = x.cols();
     let use_engine = engine.as_ref().map(|e| e.has_trial(p)).unwrap_or(false);
     let threads = cfg.threads.max(1);

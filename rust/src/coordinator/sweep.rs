@@ -184,9 +184,11 @@ pub fn run_sweep_screened(
     base: &ConcordConfig,
     workers: usize,
 ) -> ScreenedSweepOutcome {
-    // Blocking shape for the shared gram pass (throughput only; the
-    // per-job fits re-install the same value).
+    // Blocking shape, kernel lane and pinning for the shared gram pass
+    // (throughput only; the per-job fits re-install the same values).
     crate::linalg::tile::install(base.tile);
+    crate::linalg::simd::install(base.kernel);
+    crate::util::pool::set_pin_cores(base.pin_cores);
     let s = Arc::new(native::gram_mt(x, base.threads.max(1)));
     let comps: Arc<Vec<Components>> = Arc::new(nested_components(&s, &grid.lambda1));
     let components_per_l1 = comps.iter().map(|c| c.count).collect();

@@ -26,6 +26,7 @@
 
 use std::fmt;
 
+use super::simd;
 use super::tile::{self, MR, NR, TileConfig};
 
 /// Row-major dense matrix of f64.
@@ -415,6 +416,11 @@ fn gemm_rows(a: &[f64], kk: usize, b: &[f64], n: usize, c: &mut [f64], tile: &Ti
     let mc = tile.mc.max(1).min(m);
     let kc = tile.kc.max(1).min(kk);
     let nc = tile.nc.max(1).min(n);
+    // The full-tile microkernel of the installed ISA lane (scalar,
+    // AVX2, or AVX-512) — hoisted out of the nest; every lane is
+    // bit-identical to `micro_full` (see `linalg::simd`), so dispatch
+    // is as value-free as the tile shape itself.
+    let micro = simd::active_micro();
     // Packed panels, padded up to whole MR slabs / NR slivers. Pad
     // lanes are never read (edge kernels bound by irb/jrb), they only
     // keep the slab/sliver stride uniform.
@@ -440,7 +446,7 @@ fn gemm_rows(a: &[f64], kk: usize, b: &[f64], n: usize, c: &mut [f64], tile: &Ti
                         let aslab = &apack[s * kb * MR..(s + 1) * kb * MR];
                         let coff = (ic + ir) * n + jc + jr;
                         if irb == MR && jrb == NR {
-                            micro_full(aslab, bs, kb, &mut c[coff..], n);
+                            micro(aslab, bs, kb, &mut c[coff..], n);
                         } else {
                             micro_edge(aslab, bs, kb, &mut c[coff..], n, irb, jrb);
                         }
@@ -484,14 +490,17 @@ fn pack_b(b: &[f64], n: usize, k0: usize, kb: usize, j0: usize, jb: usize, bpack
     }
 }
 
-/// The register microkernel: a full [`MR`]`×`[`NR`] block of C
+/// The scalar register microkernel: a full [`MR`]`×`[`NR`] block of C
 /// (row-stride `ldc`, starting at `c[0]`) accumulates one `kb`-deep
 /// packed panel pair. The `MR × NR` accumulator array is loaded from
 /// C, updated with one multiply-add per (element, k) in ascending k,
 /// and stored back — LLVM keeps the 32 f64 accumulators in vector
 /// registers and autovectorizes the [`NR`]-wide j-loop.
+///
+/// This is the determinism oracle of the dispatched ISA lanes in
+/// [`crate::linalg::simd`]: every lane must reproduce its bits.
 #[inline]
-fn micro_full(apanel: &[f64], bpanel: &[f64], kb: usize, c: &mut [f64], ldc: usize) {
+pub(crate) fn micro_full(apanel: &[f64], bpanel: &[f64], kb: usize, c: &mut [f64], ldc: usize) {
     let mut acc = [[0.0f64; NR]; MR];
     for (r, accr) in acc.iter_mut().enumerate() {
         accr.copy_from_slice(&c[r * ldc..r * ldc + NR]);
@@ -533,6 +542,34 @@ fn micro_edge(
             c[r * ldc + j] = acc;
         }
     }
+}
+
+/// One `--tile auto` calibration sweep: time every
+/// [`tile::AUTO_CANDIDATES`] shape on a fixed synthetic p = 256 GEMM
+/// and return the winner plus the timing table for the bill line.
+///
+/// The workload is formula-filled (no RNG state consumed, so running a
+/// sweep cannot perturb anything seeded) and runs through the normal
+/// blocked path with the *installed* kernel lane — callers install the
+/// configured [`simd::KernelLane`] first so the sweep times what the
+/// solve will run. Which candidate wins may vary with machine noise;
+/// that is sound by construction, because tiles are schedule-only
+/// (determinism rule 3) — `--tile auto` can move wall-clock, never a
+/// byte. Cost: ~15 blocked p = 256 products, a few tens of ms.
+pub fn calibrate_tile() -> tile::Calibration {
+    const P: usize = 256;
+    let a = Mat::from_fn(P, P, |i, j| ((i * 31 + j * 17) % 64) as f64 * 0.125 - 3.0);
+    let b = Mat::from_fn(P, P, |i, j| ((i * 13 + j * 29) % 64) as f64 * 0.125 - 3.0);
+    let mut c = Mat::zeros(P, P);
+    let mut timings = Vec::with_capacity(tile::AUTO_CANDIDATES.len());
+    for cand in tile::AUTO_CANDIDATES {
+        let (stats, _) = crate::util::bench::time_fn(1, 2, || {
+            c.data_mut().iter_mut().for_each(|v| *v = 0.0);
+            a.matmul_into_with(&b, &mut c, &cand);
+        });
+        timings.push((cand, stats.min));
+    }
+    tile::Calibration::pick(timings)
 }
 
 /// y += a * x over contiguous slices; 4-way unrolled for
@@ -627,6 +664,44 @@ mod tests {
                 assert_eq!(bits(&c), bits(&naive), "{m}x{k}x{n} tile {tile:?}");
             }
         }
+    }
+
+    /// End-to-end dispatch oracle: the blocked product under every
+    /// *available* ISA lane is bitwise the naive product. Unavailable
+    /// lanes are skipped (install clamps them to scalar, which the
+    /// first iteration already covers).
+    #[test]
+    fn blocked_matmul_is_bitwise_naive_across_kernel_lanes() {
+        use super::super::simd::{self, KernelLane};
+        let mut rng = Rng::new(0xD15);
+        // Big enough to clear the SMALL_GEMM_FLOPS cutoff so the
+        // microkernel path actually runs, with ragged edges.
+        let (m, k, n) = (131, 67, 75);
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let naive = a.matmul_naive(&b);
+        let prev = simd::active();
+        for lane in [KernelLane::Scalar, KernelLane::Avx2, KernelLane::Avx512, KernelLane::Auto] {
+            if !lane.available() {
+                eprintln!("skipping {} lane: not available on this host", lane.as_str());
+                continue;
+            }
+            simd::install(lane);
+            // Other tests may race an install; sound either way — every
+            // lane produces identical bits, which is what we assert.
+            let mut c = Mat::zeros(m, n);
+            a.matmul_into_with(&b, &mut c, &TileConfig::DEFAULT);
+            assert_eq!(bits(&c), bits(&naive), "lane {}", lane.as_str());
+        }
+        simd::install(prev);
+    }
+
+    #[test]
+    fn calibrate_tile_returns_a_candidate() {
+        let cal = calibrate_tile();
+        assert!(tile::AUTO_CANDIDATES.contains(&cal.winner));
+        assert_eq!(cal.timings.len(), tile::AUTO_CANDIDATES.len());
+        assert!(cal.timings.iter().all(|(_, s)| *s > 0.0));
     }
 
     #[test]

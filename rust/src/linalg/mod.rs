@@ -11,8 +11,11 @@
 //!   cost model),
 //! - [`tile`]: the `mc × kc × nc` blocking shapes both kernels read —
 //!   compile-time defaults, a process-wide override (`--tile` /
-//!   `ConcordConfig::tile`), and the traffic model the cost layer
-//!   prices,
+//!   `ConcordConfig::tile`), the `--tile auto` calibration sweep, and
+//!   the traffic model the cost layer prices,
+//! - [`simd`]: runtime-dispatched AVX2/AVX-512 microkernel lanes
+//!   (`--kernel`), every one bit-identical to the retained scalar
+//!   microkernel (the determinism oracle),
 //! - [`chol`]: dense and banded Cholesky factorizations (used by the data
 //!   generators to sample X ~ N(0, (Ω⁰)⁻¹) without ever forming Σ).
 //!
@@ -26,10 +29,12 @@
 
 pub mod chol;
 pub mod dense;
+pub mod simd;
 pub mod sparse;
 pub mod tile;
 
 pub use chol::{banded_cholesky, cholesky, solve_lower, solve_lower_transpose, BandedChol};
 pub use dense::Mat;
+pub use simd::KernelLane;
 pub use sparse::Csr;
-pub use tile::TileConfig;
+pub use tile::{TileConfig, TileSpec};

@@ -1,0 +1,426 @@
+//! Runtime-dispatched SIMD lanes for the packed GEMM microkernel.
+//!
+//! The scalar microkernel ([`crate::linalg::dense`]'s `micro_full`)
+//! accumulates each output element in strictly ascending-k order, one
+//! multiply and one add per k. The lanes here perform the *same*
+//! per-element operation sequence with the [`NR`]-wide j-loop run 4- or
+//! 8-wide: vectorizing across the eight **independent** output columns
+//! reorders nothing within any one element, and every step is an
+//! explicit vector multiply followed by an explicit vector add
+//! (`vmulpd` + `vaddpd` — never a fused `vfmadd`, which would round
+//! once instead of twice and change bits). Each lane is therefore
+//! **bit-identical** to the scalar microkernel, which remains the
+//! determinism oracle (ARCHITECTURE.md, determinism rule 10); the lane
+//! is a pure throughput knob like threads and tiles.
+//!
+//! Dispatch: solver entry points call [`install`] with the configured
+//! [`KernelLane`] (CLI `--kernel`, TOML `solver.kernel`; default
+//! `auto`). `Auto` resolves to the best lane
+//! `std::arch::is_x86_feature_detected!` reports; a forced lane the
+//! host lacks falls back to scalar (the front doors reject it with a
+//! clean error first — see `concord::request`). The blocked GEMM reads
+//! the installed lane once per call via [`active_micro`].
+//!
+//! Measured on the container this repo grows in (single Xeon core,
+//! `BENCH_simd_baseline.json`): scalar blocked 3.2, AVX2 17.9, AVX-512
+//! 22.2 GFLOP/s at p = 512 — with the inline bitwise-vs-naive oracle
+//! asserted for every lane. [`KernelLane::gamma_scale`] feeds those
+//! ratios to the cost model.
+//!
+//! ## `unsafe` containment
+//!
+//! This file (plus the `vendor/affinity` libc shim) is the only place
+//! in the tree allowed to spell `unsafe` — `tools/static_audit.py`
+//! check 14 enforces that. Soundness of the two `target_feature`
+//! microkernels rests on [`active_micro`]: it is the sole source of
+//! their function pointers and re-checks feature detection before
+//! handing one out.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use anyhow::{anyhow, Result};
+
+use super::dense;
+
+/// Microkernel signature shared by every lane: `(apanel, bpanel, kb,
+/// c, ldc)` exactly as the scalar `micro_full`.
+pub(crate) type MicroFn = fn(&[f64], &[f64], usize, &mut [f64], usize);
+
+/// The GEMM microkernel ISA lane. A pure throughput knob: every lane
+/// returns bit-identical results (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelLane {
+    /// The retained portable microkernel — the determinism oracle.
+    Scalar,
+    /// 4-wide f64 (`__m256d`), two vectors per [`NR`]-sliver row.
+    Avx2,
+    /// 8-wide f64 (`__m512d`), one vector per [`NR`]-sliver row.
+    Avx512,
+    /// Resolve to the best detected lane at install time.
+    Auto,
+}
+
+impl KernelLane {
+    /// Parse the CLI/TOML form: `scalar`, `avx2`, `avx512`, or `auto`.
+    pub fn parse(s: &str) -> Result<KernelLane> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(KernelLane::Scalar),
+            "avx2" => Ok(KernelLane::Avx2),
+            "avx512" => Ok(KernelLane::Avx512),
+            "auto" => Ok(KernelLane::Auto),
+            other => Err(anyhow!(
+                "--kernel expects scalar|avx2|avx512|auto, got {other:?}"
+            )),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelLane::Scalar => "scalar",
+            KernelLane::Avx2 => "avx2",
+            KernelLane::Avx512 => "avx512",
+            KernelLane::Auto => "auto",
+        }
+    }
+
+    /// Whether this host can run the lane (`Scalar`/`Auto`: always).
+    pub fn available(&self) -> bool {
+        match self {
+            KernelLane::Scalar | KernelLane::Auto => true,
+            KernelLane::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelLane::Avx512 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx512f")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// The concrete lane this resolves to on this host: `Auto` becomes
+    /// the best detected lane, an unavailable forced lane degrades to
+    /// `Scalar` (callers that prefer an error over the fallback check
+    /// [`KernelLane::available`] first).
+    pub fn resolve(&self) -> KernelLane {
+        match self {
+            KernelLane::Auto => detect_best(),
+            lane if lane.available() => *lane,
+            _ => KernelLane::Scalar,
+        }
+    }
+
+    /// Dense-GEMM throughput of the resolved lane relative to the
+    /// scalar blocked kernel, from the C-mirror measurement committed
+    /// in `BENCH_simd_baseline.json` (scalar 3.9, AVX2 19.1, AVX-512
+    /// 24.4 GFLOP/s at p = 512 single-thread). The cost model divides
+    /// `MachineParams::gamma_dense` by this
+    /// (`MachineParams::with_dense_rate_scale`) so fabric pricing
+    /// tracks the installed lane.
+    pub fn gamma_scale(&self) -> f64 {
+        match self.resolve() {
+            KernelLane::Avx2 => 4.9,
+            KernelLane::Avx512 => 6.3,
+            _ => 1.0,
+        }
+    }
+}
+
+impl Default for KernelLane {
+    fn default() -> Self {
+        KernelLane::Auto
+    }
+}
+
+/// Best lane the host supports, most capable first.
+fn detect_best() -> KernelLane {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return KernelLane::Avx512;
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return KernelLane::Avx2;
+        }
+    }
+    KernelLane::Scalar
+}
+
+const LANE_SCALAR: u8 = 0;
+const LANE_AVX2: u8 = 1;
+const LANE_AVX512: u8 = 2;
+
+/// The installed lane. Starts scalar (the oracle) so library callers
+/// that never install get the portable kernel; solver entry points
+/// install the configured lane alongside `tile::install`.
+static ACTIVE: AtomicU8 = AtomicU8::new(LANE_SCALAR);
+
+/// Install `lane` as the process-wide microkernel lane and return the
+/// concrete lane it resolved to (for the solve/serve bill line).
+/// Concurrent installs are benign for the same reason concurrent
+/// [`super::tile::install`]s are: every lane produces identical bits,
+/// so a racing reader can only see a different throughput.
+pub fn install(lane: KernelLane) -> KernelLane {
+    let resolved = lane.resolve();
+    let code = match resolved {
+        KernelLane::Avx2 => LANE_AVX2,
+        KernelLane::Avx512 => LANE_AVX512,
+        _ => LANE_SCALAR,
+    };
+    ACTIVE.store(code, Ordering::Relaxed);
+    resolved
+}
+
+/// The currently-installed concrete lane.
+pub fn active() -> KernelLane {
+    match ACTIVE.load(Ordering::Relaxed) {
+        LANE_AVX2 => KernelLane::Avx2,
+        LANE_AVX512 => KernelLane::Avx512,
+        _ => KernelLane::Scalar,
+    }
+}
+
+/// The microkernel of the installed lane. Feature detection is
+/// re-checked here — the returned pointer is the only way to reach the
+/// `target_feature` kernels, so a pointer is only ever handed out on a
+/// host that detection approved (the soundness gate of the module
+/// docs). Hoist the call out of the panel nest; one relaxed load plus
+/// one detection read per GEMM call.
+pub(crate) fn active_micro() -> MicroFn {
+    #[cfg(target_arch = "x86_64")]
+    {
+        match active() {
+            KernelLane::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+                return x86::micro_avx2;
+            }
+            KernelLane::Avx512 if std::arch::is_x86_feature_detected!("avx512f") => {
+                return x86::micro_avx512;
+            }
+            _ => {}
+        }
+    }
+    dense::micro_full
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::{
+        _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_storeu_pd,
+        _mm512_add_pd, _mm512_loadu_pd, _mm512_mul_pd, _mm512_set1_pd, _mm512_storeu_pd,
+    };
+
+    use super::super::tile::{MR, NR};
+
+    // The register layouts below spell out MR = 4 rows × NR = 8 cols.
+    const _: () = assert!(MR == 4 && NR == 8, "SIMD microkernels assume a 4x8 register block");
+
+    /// Safe AVX2 entry. Only reachable through `active_micro`, which
+    /// verified `is_x86_feature_detected!("avx2")` before returning
+    /// this pointer.
+    pub(super) fn micro_avx2(apanel: &[f64], bpanel: &[f64], kb: usize, c: &mut [f64], ldc: usize) {
+        // SAFETY: AVX2 availability was checked by the sole supplier of
+        // this function pointer (`active_micro`) and by the tests that
+        // call it directly; slice bounds are asserted in the kernel.
+        unsafe { micro_full_avx2(apanel, bpanel, kb, c, ldc) }
+    }
+
+    /// Safe AVX-512 entry; same contract as [`micro_avx2`].
+    pub(super) fn micro_avx512(
+        apanel: &[f64],
+        bpanel: &[f64],
+        kb: usize,
+        c: &mut [f64],
+        ldc: usize,
+    ) {
+        // SAFETY: as micro_avx2, with "avx512f".
+        unsafe { micro_full_avx512(apanel, bpanel, kb, c, ldc) }
+    }
+
+    /// 4×8 microkernel, two `__m256d` accumulators per row (8 vector
+    /// accumulators + 2 B vectors + 1 broadcast = 11 of 16 registers).
+    /// Per output element: one `vmulpd` lane-product and one `vaddpd`
+    /// lane-sum per k, ascending k — the scalar kernel's op sequence.
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure AVX2 is available. Slice layout is
+    /// `micro_full`'s: `apanel` ≥ `kb·MR`, `bpanel` ≥ `kb·NR`, `c` ≥
+    /// `(MR-1)·ldc + NR` (asserted).
+    #[target_feature(enable = "avx2")]
+    unsafe fn micro_full_avx2(
+        apanel: &[f64],
+        bpanel: &[f64],
+        kb: usize,
+        c: &mut [f64],
+        ldc: usize,
+    ) {
+        assert!(apanel.len() >= kb * MR && bpanel.len() >= kb * NR);
+        assert!(ldc >= NR && c.len() >= (MR - 1) * ldc + NR);
+        let ap = apanel.as_ptr();
+        let bp = bpanel.as_ptr();
+        let cp = c.as_mut_ptr();
+        let mut s00 = _mm256_loadu_pd(cp);
+        let mut s01 = _mm256_loadu_pd(cp.add(4));
+        let mut s10 = _mm256_loadu_pd(cp.add(ldc));
+        let mut s11 = _mm256_loadu_pd(cp.add(ldc + 4));
+        let mut s20 = _mm256_loadu_pd(cp.add(2 * ldc));
+        let mut s21 = _mm256_loadu_pd(cp.add(2 * ldc + 4));
+        let mut s30 = _mm256_loadu_pd(cp.add(3 * ldc));
+        let mut s31 = _mm256_loadu_pd(cp.add(3 * ldc + 4));
+        for k in 0..kb {
+            let b0 = _mm256_loadu_pd(bp.add(k * NR));
+            let b1 = _mm256_loadu_pd(bp.add(k * NR + 4));
+            let a0 = _mm256_set1_pd(*ap.add(k * MR));
+            s00 = _mm256_add_pd(s00, _mm256_mul_pd(a0, b0));
+            s01 = _mm256_add_pd(s01, _mm256_mul_pd(a0, b1));
+            let a1 = _mm256_set1_pd(*ap.add(k * MR + 1));
+            s10 = _mm256_add_pd(s10, _mm256_mul_pd(a1, b0));
+            s11 = _mm256_add_pd(s11, _mm256_mul_pd(a1, b1));
+            let a2 = _mm256_set1_pd(*ap.add(k * MR + 2));
+            s20 = _mm256_add_pd(s20, _mm256_mul_pd(a2, b0));
+            s21 = _mm256_add_pd(s21, _mm256_mul_pd(a2, b1));
+            let a3 = _mm256_set1_pd(*ap.add(k * MR + 3));
+            s30 = _mm256_add_pd(s30, _mm256_mul_pd(a3, b0));
+            s31 = _mm256_add_pd(s31, _mm256_mul_pd(a3, b1));
+        }
+        _mm256_storeu_pd(cp, s00);
+        _mm256_storeu_pd(cp.add(4), s01);
+        _mm256_storeu_pd(cp.add(ldc), s10);
+        _mm256_storeu_pd(cp.add(ldc + 4), s11);
+        _mm256_storeu_pd(cp.add(2 * ldc), s20);
+        _mm256_storeu_pd(cp.add(2 * ldc + 4), s21);
+        _mm256_storeu_pd(cp.add(3 * ldc), s30);
+        _mm256_storeu_pd(cp.add(3 * ldc + 4), s31);
+    }
+
+    /// 4×8 microkernel, one `__m512d` accumulator per row.
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure AVX-512F is available; slice layout as
+    /// [`micro_full_avx2`].
+    #[target_feature(enable = "avx512f")]
+    unsafe fn micro_full_avx512(
+        apanel: &[f64],
+        bpanel: &[f64],
+        kb: usize,
+        c: &mut [f64],
+        ldc: usize,
+    ) {
+        assert!(apanel.len() >= kb * MR && bpanel.len() >= kb * NR);
+        assert!(ldc >= NR && c.len() >= (MR - 1) * ldc + NR);
+        let ap = apanel.as_ptr();
+        let bp = bpanel.as_ptr();
+        let cp = c.as_mut_ptr();
+        let mut s0 = _mm512_loadu_pd(cp);
+        let mut s1 = _mm512_loadu_pd(cp.add(ldc));
+        let mut s2 = _mm512_loadu_pd(cp.add(2 * ldc));
+        let mut s3 = _mm512_loadu_pd(cp.add(3 * ldc));
+        for k in 0..kb {
+            let bv = _mm512_loadu_pd(bp.add(k * NR));
+            s0 = _mm512_add_pd(s0, _mm512_mul_pd(_mm512_set1_pd(*ap.add(k * MR)), bv));
+            s1 = _mm512_add_pd(s1, _mm512_mul_pd(_mm512_set1_pd(*ap.add(k * MR + 1)), bv));
+            s2 = _mm512_add_pd(s2, _mm512_mul_pd(_mm512_set1_pd(*ap.add(k * MR + 2)), bv));
+            s3 = _mm512_add_pd(s3, _mm512_mul_pd(_mm512_set1_pd(*ap.add(k * MR + 3)), bv));
+        }
+        _mm512_storeu_pd(cp, s0);
+        _mm512_storeu_pd(cp.add(ldc), s1);
+        _mm512_storeu_pd(cp.add(2 * ldc), s2);
+        _mm512_storeu_pd(cp.add(3 * ldc), s3);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn parse_and_render_roundtrip() {
+        for lane in [KernelLane::Scalar, KernelLane::Avx2, KernelLane::Avx512, KernelLane::Auto] {
+            assert_eq!(KernelLane::parse(lane.as_str()).unwrap(), lane);
+        }
+        assert_eq!(KernelLane::parse(" AVX2 ").unwrap(), KernelLane::Avx2);
+        assert!(KernelLane::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn resolve_is_concrete_and_available() {
+        for lane in [KernelLane::Scalar, KernelLane::Avx2, KernelLane::Avx512, KernelLane::Auto] {
+            let resolved = lane.resolve();
+            assert_ne!(resolved, KernelLane::Auto);
+            assert!(resolved.available(), "{lane:?} resolved to unavailable {resolved:?}");
+        }
+        assert_eq!(KernelLane::Scalar.gamma_scale(), 1.0);
+        assert!(KernelLane::Auto.gamma_scale() >= 1.0);
+    }
+
+    #[test]
+    fn install_roundtrips_and_clamps() {
+        let prev = active();
+        for lane in [KernelLane::Scalar, KernelLane::Avx2, KernelLane::Avx512, KernelLane::Auto] {
+            let resolved = install(lane);
+            // A racing test may re-install concurrently, so assert on
+            // the returned lane (race-free), not on active().
+            assert!(resolved.available());
+            assert_ne!(resolved, KernelLane::Auto);
+        }
+        install(prev);
+    }
+
+    /// Every available SIMD lane must reproduce the scalar microkernel
+    /// bit-for-bit on packed panels, partial C accumulation included —
+    /// the determinism-rule-10 oracle at the smallest grain.
+    #[test]
+    fn simd_micro_lanes_are_bitwise_scalar() {
+        #[cfg(target_arch = "x86_64")]
+        {
+            use super::super::tile::{MR, NR};
+            let mut rng = Rng::new(0xC0FFEE);
+            for kb in [1usize, 2, 7, 64, 256] {
+                for ldc in [NR, NR + 3, 40] {
+                    let apanel: Vec<f64> = (0..kb * MR).map(|_| rng.normal()).collect();
+                    let bpanel: Vec<f64> = (0..kb * NR).map(|_| rng.normal()).collect();
+                    let c0: Vec<f64> = (0..(MR - 1) * ldc + NR).map(|_| rng.normal()).collect();
+                    let mut want = c0.clone();
+                    dense::micro_full(&apanel, &bpanel, kb, &mut want, ldc);
+                    let mut lanes_run = 0;
+                    if std::arch::is_x86_feature_detected!("avx2") {
+                        let mut got = c0.clone();
+                        x86::micro_avx2(&apanel, &bpanel, kb, &mut got, ldc);
+                        assert!(
+                            want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                            "avx2 kb={kb} ldc={ldc}"
+                        );
+                        lanes_run += 1;
+                    }
+                    if std::arch::is_x86_feature_detected!("avx512f") {
+                        let mut got = c0.clone();
+                        x86::micro_avx512(&apanel, &bpanel, kb, &mut got, ldc);
+                        assert!(
+                            want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                            "avx512 kb={kb} ldc={ldc}"
+                        );
+                        lanes_run += 1;
+                    }
+                    if lanes_run == 0 {
+                        eprintln!("skipping SIMD lane oracle: host has neither avx2 nor avx512f");
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}

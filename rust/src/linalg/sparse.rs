@@ -193,10 +193,7 @@ impl Csr {
         let n = b.cols();
         let mut c = Mat::zeros(self.rows, n);
         let nc = tile.nc.max(1);
-        // Packing pays once a panel is a strict subset of B's width and
-        // the nonzeros reuse packed rows at all; either path is bitwise
-        // identical, the predicate only picks the faster one.
-        let pack = n > nc && self.nnz() >= b.rows();
+        let pack = self.should_pack(b.rows(), n, tile);
         let body = |s: usize, e: usize, crows: &mut [f64]| {
             if !pack {
                 self.spmm_rows_direct(b, s, e, crows);
@@ -229,6 +226,32 @@ impl Csr {
             body(s, e, crows)
         });
         c
+    }
+
+    /// Whether the column-blocked SpMM should pack B panels for an
+    /// `n`-column product, under the traffic model. Packing pays only
+    /// when all of:
+    ///
+    /// - the output is wider than one panel (`n > nc`) — otherwise the
+    ///   copy buys nothing,
+    /// - the packed `b_rows × nc` panel fits the tile's `kc`-resident
+    ///   B budget, the residency [`TileConfig::gemm_words_per_flop`]
+    ///   assumes — a larger panel is re-streamed from slow memory per
+    ///   row band and the copy is pure overhead (this is the condition
+    ///   the old `nnz >= rows` predicate missed: at p = 1024, d = 0.02
+    ///   the committed C-mirror baseline measured the packed path
+    ///   *slower* than the reference),
+    /// - the copy (`b_rows` words per panel column) amortizes against
+    ///   the modeled naive-vs-blocked traffic gap over the panel's
+    ///   `2·nnz` flops per column.
+    ///
+    /// Either path is bitwise identical — the predicate only picks the
+    /// faster one, re-measured in `BENCH_simd_baseline.json` on both a
+    /// pack-win and a fallback shape.
+    pub fn should_pack(&self, b_rows: usize, n: usize, tile: &TileConfig) -> bool {
+        let nc = tile.nc.max(1);
+        let gap = TileConfig::NAIVE_WORDS_PER_FLOP - tile.gemm_words_per_flop();
+        n > nc && b_rows <= tile.kc && (b_rows as f64) <= 2.0 * self.nnz() as f64 * gap
     }
 
     /// Flop count of `spmm` against an n-column dense operand: 2·nnz·n.
@@ -306,13 +329,15 @@ mod tests {
         let mut rng = Rng::new(0xB1);
         // The last case's nnz·n exceeds pool::SPAWN_MIN_WORK, so the
         // parallel path genuinely fans out; the small ones cover the
-        // serial-cutoff branch. Tiny nc panels force the packed path
-        // (n > nc) with ragged final panels; the huge tile forces the
-        // direct path.
+        // serial-cutoff branch. The narrow-nc/deep-kc tiles make the
+        // traffic predicate pack (n > nc, rows ≤ kc, positive modeled
+        // gap) with ragged final panels; the degenerate and huge tiles
+        // land on the direct path (negative gap / n ≤ nc).
         let tiles = [
             TileConfig::new(1, 1, 1),
             TileConfig::new(2, 2, 3),
-            TileConfig::new(4, 4, 7),
+            TileConfig::new(64, 256, 3),
+            TileConfig::new(32, 512, 7),
             TileConfig::DEFAULT,
             TileConfig::new(4096, 4096, 4096),
         ];
@@ -336,6 +361,28 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The sweep above must genuinely exercise both kernels: the
+    /// traffic predicate packs for the deep-kc/narrow-nc tiles on the
+    /// denser shapes and falls back for the degenerate ones.
+    #[test]
+    fn pack_predicate_splits_the_tile_zoo() {
+        let mut rng = Rng::new(0xB3);
+        let a = random_sparse(&mut rng, 150, 200, 0.4);
+        assert!(a.should_pack(200, 60, &TileConfig::new(64, 256, 3)));
+        assert!(a.should_pack(200, 60, &TileConfig::new(32, 512, 7)));
+        // Tiny tiles model *more* traffic than naive (negative gap).
+        assert!(!a.should_pack(200, 60, &TileConfig::new(1, 1, 1)));
+        // One-panel output: nothing to reuse.
+        assert!(!a.should_pack(200, 60, &TileConfig::new(4096, 4096, 4096)));
+        // The measured regression shape (square p = 1024, d = 0.02
+        // scaled down): B taller than the kc residency budget.
+        assert!(!a.should_pack(1024, 1024, &TileConfig::DEFAULT));
+        // A near-empty matrix can never amortize the panel copy.
+        let sparse = random_sparse(&mut rng, 100, 200, 0.001);
+        assert!(sparse.nnz() < 100, "fixture drifted: want a near-empty matrix");
+        assert!(!sparse.should_pack(200, 2048, &TileConfig::DEFAULT));
     }
 
     #[test]

@@ -32,9 +32,12 @@
 //! Compile-time defaults ([`TileConfig::DEFAULT`]) are chosen for a
 //! ~256 KiB-L2 / few-MiB-L3 core. Override per process with
 //! [`install`] (the solvers install `ConcordConfig::tile` on entry; the
-//! CLI exposes `--tile mc,kc,nc`). The cost model prices the active
-//! tile through [`TileConfig::gemm_words_per_flop`] (see
-//! `CostBreakdown::time_with_tile` in [`crate::cost`]).
+//! CLI exposes `--tile mc,kc,nc`), or let `--tile auto` run the short
+//! measured sweep over [`AUTO_CANDIDATES`]
+//! (`crate::linalg::dense::calibrate_tile`) and install the winner —
+//! sound at any outcome because tiles are schedule-only. The cost model
+//! prices the active tile through [`TileConfig::gemm_words_per_flop`]
+//! (see `CostBreakdown::time_with_tile` in [`crate::cost`]).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -161,6 +164,88 @@ impl Default for TileConfig {
     }
 }
 
+impl std::fmt::Display for TileConfig {
+    /// The CLI form `mc,kc,nc` — [`TileConfig::parse`]'s inverse.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{},{},{}", self.mc, self.kc, self.nc)
+    }
+}
+
+/// The candidate shapes `--tile auto` times, bracketing the default
+/// from "half-size everything" (small shared caches) to "taller A
+/// block" (big-L2 cores). All dimensions are [`MR`]/[`NR`] multiples so
+/// the sweep never times ragged-edge slabs. Order is fixed — ties in
+/// the sweep break to the earlier candidate.
+pub const AUTO_CANDIDATES: [TileConfig; 5] = [
+    TileConfig { mc: 64, kc: 128, nc: 256 },
+    TileConfig { mc: 96, kc: 192, nc: 384 },
+    TileConfig::DEFAULT,
+    TileConfig { mc: 192, kc: 384, nc: 768 },
+    TileConfig { mc: 256, kc: 256, nc: 512 },
+];
+
+/// Result of one `--tile auto` calibration sweep
+/// (`crate::linalg::dense::calibrate_tile`): the installed winner plus
+/// the full timing table for the bill line. Whatever shape wins, the
+/// solve's bytes are unchanged (determinism rule 3) — only wall-clock
+/// rides on the choice.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// The fastest candidate (earliest wins ties).
+    pub winner: TileConfig,
+    /// `(candidate, best-rep seconds)` in sweep order.
+    pub timings: Vec<(TileConfig, f64)>,
+}
+
+impl Calibration {
+    /// Pick the winner from a sweep's timing table: minimum time, ties
+    /// broken to the earlier (fixed-order) candidate.
+    pub fn pick(timings: Vec<(TileConfig, f64)>) -> Calibration {
+        assert!(!timings.is_empty(), "calibration sweep must time at least one candidate");
+        let mut winner = timings[0];
+        for &t in &timings[1..] {
+            if t.1 < winner.1 {
+                winner = t;
+            }
+        }
+        Calibration { winner: winner.0, timings }
+    }
+
+    /// One-line record for the solve/serve bill.
+    pub fn summary(&self) -> String {
+        let best = self.timings.iter().find(|(t, _)| *t == self.winner).map_or(0.0, |(_, s)| *s);
+        format!(
+            "tile auto: calibrated {} candidates, installed {} ({:.2} ms/rep)",
+            self.timings.len(),
+            self.winner,
+            best * 1e3
+        )
+    }
+}
+
+/// A `--tile` value before resolution: an explicit shape, or the
+/// `auto` sentinel that triggers the calibration sweep at request
+/// build time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileSpec {
+    /// An explicit `mc,kc,nc` shape.
+    Fixed(TileConfig),
+    /// Run the calibration sweep and install the winner.
+    Auto,
+}
+
+impl TileSpec {
+    /// Parse the CLI form: `auto`, or `mc,kc,nc` as
+    /// [`TileConfig::parse`].
+    pub fn parse(s: &str) -> Result<TileSpec> {
+        if s.trim().eq_ignore_ascii_case("auto") {
+            Ok(TileSpec::Auto)
+        } else {
+            TileConfig::parse(s).map(TileSpec::Fixed)
+        }
+    }
+}
+
 /// Install `cfg` as the process-wide tile shape read by the kernel
 /// entry points without an explicit `_with` tile argument
 /// (`matmul_into`, `spmm`, …) and by the cost model's default pricing.
@@ -228,6 +313,42 @@ mod tests {
                 < TileConfig::new(8, 8, 8).gemm_words_per_flop()
         );
         assert!(TileConfig::DEFAULT.gemm_words_per_flop() < TileConfig::NAIVE_WORDS_PER_FLOP);
+    }
+
+    #[test]
+    fn tile_spec_parses_auto_and_fixed() {
+        assert_eq!(TileSpec::parse(" Auto ").unwrap(), TileSpec::Auto);
+        assert_eq!(
+            TileSpec::parse("16,32,64").unwrap(),
+            TileSpec::Fixed(TileConfig::new(16, 32, 64))
+        );
+        assert!(TileSpec::parse("fastest").is_err());
+    }
+
+    #[test]
+    fn calibration_picks_min_with_stable_ties() {
+        let a = TileConfig::new(1, 2, 3);
+        let b = TileConfig::new(4, 5, 6);
+        let c = TileConfig::new(7, 8, 9);
+        let cal = Calibration::pick(vec![(a, 2.0), (b, 1.0), (c, 1.0)]);
+        assert_eq!(cal.winner, b, "ties break to the earlier candidate");
+        assert_eq!(cal.timings.len(), 3);
+        assert!(cal.summary().contains("4,5,6"), "{}", cal.summary());
+    }
+
+    #[test]
+    fn auto_candidates_are_microkernel_aligned() {
+        assert!(AUTO_CANDIDATES.contains(&TileConfig::DEFAULT));
+        for cand in AUTO_CANDIDATES {
+            assert_eq!(cand.mc % MR, 0, "{cand}");
+            assert_eq!(cand.nc % NR, 0, "{cand}");
+        }
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        let t = TileConfig::new(24, 48, 96);
+        assert_eq!(TileConfig::parse(&t.to_string()).unwrap(), t);
     }
 
     #[test]

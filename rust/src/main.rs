@@ -17,7 +17,7 @@
 use anyhow::{anyhow, Result};
 
 use hpconcord::cli::{Args, USAGE};
-use hpconcord::concord::request::{node_threads, parse_variant, tile_config};
+use hpconcord::concord::request::{kernel_lane, node_threads, parse_variant, tile_config};
 use hpconcord::concord::{
     fit_distributed, fit_single_node, fit_with_screening, EstimationRequest, RequestKind,
     RequestOutcome, ScreenedDistFit, WorkloadSpec,
@@ -317,6 +317,15 @@ fn cmd_solve(args: &Args) -> Result<()> {
     if !cost_line.is_empty() {
         println!("{cost_line}");
     }
+    // The kernel-layer bill: which ISA lane and tile shape actually ran
+    // (the resolved lane, not the `auto` the user typed — rule 10 says
+    // neither can move a result bit, so this line is throughput only).
+    println!(
+        "kernel: {} lane, tile {}{}",
+        cfg.kernel.resolve().as_str(),
+        cfg.tile,
+        if cfg.pin_cores { ", cores pinned" } else { "" }
+    );
     let out_omega = args.str_or("out-omega", "");
     if !out_omega.is_empty() {
         write_omega(&out_omega, &fit.omega)?;
@@ -572,7 +581,11 @@ fn cmd_cost(args: &Args) -> Result<()> {
     // The Lemma 3.5 pricing reads the installed tile's cache-reuse term.
     tile::install(tile_config(args, &Config::default())?);
     let variant = parse_variant(&args.str_or("variant", "auto"));
-    let machine = MachineParams::default();
+    // Per-ISA pricing: γ_dense is divided by the lane's measured
+    // speedup over the scalar blocked kernel (BENCH_simd_baseline.json)
+    // — the planner itself stays lane-agnostic.
+    let kernel = kernel_lane(args, &Config::default())?;
+    let machine = MachineParams::default().with_dense_rate_scale(kernel.gamma_scale());
     let best = hpconcord::cost::optimizer::optimize_replication_threaded(
         &shape,
         procs,
@@ -583,11 +596,12 @@ fn cmd_cost(args: &Args) -> Result<()> {
     )
     .ok_or_else(|| anyhow!("no feasible configuration"))?;
     println!(
-        "best: {:?} with c_X={} c_Ω={} (t={threads} node threads) → modeled {:.4}s \
+        "best: {:?} with c_X={} c_Ω={} (t={threads} node threads, {} lane) → modeled {:.4}s \
          (mem {:.1} MWords/proc)",
         best.variant,
         best.choice.c_x,
         best.choice.c_omega,
+        kernel.resolve().as_str(),
         best.time,
         best.cost.memory_words / 1e6
     );

@@ -726,6 +726,8 @@ fn run_solve_group<'a>(
     let mut counts = Vec::with_capacity(ready.len());
     for (slot, r) in ready.iter().enumerate() {
         crate::linalg::tile::install(r.p.req.cfg.tile);
+        crate::linalg::simd::install(r.p.req.cfg.kernel);
+        crate::util::pool::set_pin_cores(r.p.req.cfg.pin_cores);
         let x = r.p.data.source();
         let level = &r.pass.levels[0];
         let mut job_tasks = plan_job_tasks(slot, level, x.rows(), &r.p.req.cfg, &r.p.req.opts);

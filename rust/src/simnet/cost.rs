@@ -60,6 +60,20 @@ impl MachineParams {
             beta_mem: 2.0 * gamma_dense,
         }
     }
+
+    /// Speed the modeled dense flop rate up by `scale` (> 1 = faster),
+    /// leaving every other constant alone — the per-ISA pricing hook
+    /// for `--kernel` (`cost --kernel avx512` divides γ_dense by the
+    /// lane's measured speedup, `linalg::KernelLane::gamma_scale`).
+    /// Only γ_dense moves: the SIMD lanes vectorize the dense
+    /// microkernel, while the sparse gather and the network are
+    /// untouched — which is exactly why a wider lane shifts the
+    /// Cov/Obs crossover and the best replication choice.
+    pub fn with_dense_rate_scale(mut self, scale: f64) -> Self {
+        assert!(scale > 0.0, "dense rate scale must be positive, got {scale}");
+        self.gamma_dense /= scale;
+        self
+    }
 }
 
 impl Default for MachineParams {
@@ -458,6 +472,19 @@ mod tests {
         assert!(warm.screen_amortized());
         let cold = GridBill { screen: metered, ..GridBill::default() };
         assert!(!cold.screen_amortized());
+    }
+
+    #[test]
+    fn dense_rate_scale_moves_only_gamma_dense() {
+        let base = MachineParams::edison_like();
+        let fast = base.with_dense_rate_scale(4.0);
+        assert_eq!(fast.gamma_dense, base.gamma_dense / 4.0);
+        assert_eq!(fast.gamma_sparse, base.gamma_sparse);
+        assert_eq!(fast.alpha, base.alpha);
+        assert_eq!(fast.beta, base.beta);
+        assert_eq!(fast.beta_mem, base.beta_mem);
+        // scale 1 is the identity.
+        assert_eq!(base.with_dense_rate_scale(1.0), base);
     }
 
     #[test]

@@ -17,12 +17,28 @@
 //!   over *fixed-size blocks* (see `ops::REDUCE_BLOCK_ROWS`) whose
 //!   partials are concatenated by block index, so the combination order
 //!   is a function of the problem shape only, never of `threads`;
-//! - workers are `std::thread::scope` threads (no external deps, no
-//!   unsafe); chunk 0 runs on the calling thread.
+//! - workers are `std::thread::scope` threads; chunk 0 runs on the
+//!   calling thread. This file itself spells no `unsafe`: the only
+//!   platform call it makes — optional worker→CPU pinning — lives in
+//!   the vendored `affinity` shim (see `vendor/affinity`), which with
+//!   `linalg/simd.rs` is the tree's whole unsafe surface
+//!   (`tools/static_audit.py` check 14).
 //!
 //! The entry points are [`chunk_ranges`] (the partition), [`par_map`]
 //! (gather per-chunk results in chunk order) and [`par_rows_mut`]
 //! (write disjoint row ranges of one output buffer in place).
+//!
+//! ## Core pinning (`--pin-cores`)
+//!
+//! With [`set_pin_cores`]`(true)`, each spawned worker pins itself to
+//! logical CPU `chunk_index % available_parallelism` before running,
+//! so the mc×kc packed panels a worker touches stop migrating between
+//! per-core L2s mid-solve. Chunk 0 is **never** pinned: it runs on the
+//! calling thread, and `sched_setaffinity` outlives the call — pinning
+//! it would leak a one-core mask into the rest of the process.
+//! Pinning is schedule-only (determinism rule 10): the partition and
+//! every per-chunk op sequence are unchanged, so bits cannot move; on
+//! unsupported platforms or denied masks it silently no-ops.
 
 /// Minimum work (output elements × inner length, or nnz·n for SpMM)
 /// below which the `_mt` kernels stay serial: a scoped spawn+join
@@ -32,6 +48,36 @@
 /// are bit-identical, so the cutoff never changes results — only
 /// where the wall-clock win starts.
 pub const SPAWN_MIN_WORK: usize = 1 << 16;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Process-wide `--pin-cores` switch (default off). Like
+/// `linalg::tile::install`, concurrent writers are benign: pinning is
+/// schedule-only, so a racing reader only gains or loses the affinity
+/// hint, never a bit.
+static PIN_CORES: AtomicBool = AtomicBool::new(false);
+
+/// Enable or disable worker→CPU pinning for subsequent pool launches
+/// (the solvers install `ConcordConfig::pin_cores` on entry).
+pub fn set_pin_cores(pin: bool) {
+    PIN_CORES.store(pin, Ordering::Relaxed);
+}
+
+/// Whether worker pinning is currently enabled.
+pub fn pin_cores() -> bool {
+    PIN_CORES.load(Ordering::Relaxed)
+}
+
+/// Pin the calling worker to its chunk's CPU if `--pin-cores` is on.
+/// Failures (unsupported platform, restricted cpuset) are ignored:
+/// the worker just runs unpinned.
+fn maybe_pin(chunk_index: usize) {
+    if !PIN_CORES.load(Ordering::Relaxed) {
+        return;
+    }
+    let cpus = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let _ = affinity::pin_to_cpu(chunk_index % cpus);
+}
 
 /// Split `items` into at most `threads` contiguous ranges with
 /// boundaries aligned down to multiples of `align` (the trailing range
@@ -74,7 +120,12 @@ where
         let fr = &f;
         let handles: Vec<_> = work[1..]
             .iter()
-            .map(|&(i, s, e)| scope.spawn(move || fr(i, s, e)))
+            .map(|&(i, s, e)| {
+                scope.spawn(move || {
+                    maybe_pin(i);
+                    fr(i, s, e)
+                })
+            })
             .collect();
         let (i0, s0, e0) = work[0];
         let mut out = vec![fr(i0, s0, e0)];
@@ -116,7 +167,12 @@ where
         let mut iter = slices.into_iter();
         let first = iter.next().expect("len > 1");
         let handles: Vec<_> = iter
-            .map(|(i, s, e, sl)| scope.spawn(move || fr(i, s, e, sl)))
+            .map(|(i, s, e, sl)| {
+                scope.spawn(move || {
+                    maybe_pin(i);
+                    fr(i, s, e, sl)
+                })
+            })
             .collect();
         let (i, s, e, sl) = first;
         fr(i, s, e, sl);
@@ -189,6 +245,19 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pinning_is_schedule_only() {
+        // Same partition, same per-chunk results, with pinning on and
+        // off — the knob may only move which core runs a worker.
+        let ranges = chunk_ranges(64, 4, 1);
+        let run = || par_map(&ranges, |i, s, e| (i, (s..e).map(|v| v as f64).sum::<f64>()));
+        let unpinned = run();
+        set_pin_cores(true);
+        let pinned = run();
+        set_pin_cores(false);
+        assert_eq!(unpinned, pinned);
     }
 
     #[test]

@@ -1,0 +1,179 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_*.json files and fail on a >10% throughput regression.
+
+Rule:
+  Records are matched across the two files by their "name" field.  A
+  record whose "oracle" string names a reference record ("bitwise ==
+  NAME ...") present in both files compares by its SPEEDUP over that
+  reference (record gflops / reference gflops), baseline vs candidate —
+  a candidate speedup below  (1 - tolerance) * baseline speedup  is a
+  regression.  Normalizing by the in-file reference cancels host-speed
+  drift: CI runners and the recording image differ in absolute GF/s,
+  but blocked-vs-naive and SIMD-vs-scalar ratios are architectural.
+
+  Shared records without a resolvable reference fall back to absolute
+  comparison — gflops when both sides report one, wall_s otherwise —
+  except that *reference* records (named as some other record's oracle
+  reference) are informational only: they are the measuring stick, and
+  an absolute move there means the host changed speed, not the code.
+
+  The tolerance defaults to 0.10 — right for two runs on the same host
+  in the same thermal window.  `--tolerance F` overrides it: the CI
+  gate passes 0.5, because across hosts and time windows AVX-512
+  frequency licensing and shared-VM steal swing honest SIMD-vs-scalar
+  ratios by ±40%, while the defect classes the gate exists for (a
+  vector lane silently degrading to scalar ≈ −80%, a lost SpMM pack
+  win, a lost fusion win) sit far below −50%.
+
+  Records present in only one file are reported but never fail the
+  diff (the benchmark surface is allowed to grow).  Improvements are
+  printed for the log and never fail.
+
+Exit status: 0 when no shared record regresses past the tolerance, 1
+otherwise (and 2 on malformed input).
+
+Usage:
+  python3 tools/bench_diff.py [--tolerance F] BASELINE.json CANDIDATE.json
+  python3 tools/bench_diff.py --help
+
+CI runs this after the C-mirror bench regenerates BENCH_c_mirror.json,
+with the committed BENCH_simd_baseline.json as the baseline, so a code
+change that silently slows a measured kernel relative to its own
+reference fails the offline job.
+"""
+
+import json
+import re
+import sys
+from pathlib import Path
+
+DEFAULT_TOLERANCE = 0.10
+ORACLE_REF_RE = re.compile(r"bitwise == (\w+)")
+
+
+def load_records(path):
+    try:
+        doc = json.loads(Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    records = doc.get("records")
+    if not isinstance(records, list):
+        print(f"bench_diff: {path} has no \"records\" array", file=sys.stderr)
+        sys.exit(2)
+    out = {}
+    for rec in records:
+        name = rec.get("name")
+        if not name:
+            print(f"bench_diff: {path}: record without a name: {rec}", file=sys.stderr)
+            sys.exit(2)
+        if name in out:
+            print(f"bench_diff: {path}: duplicate record name {name!r}", file=sys.stderr)
+            sys.exit(2)
+        out[name] = rec
+    return out
+
+
+def gf(rec):
+    return float(rec.get("gflops", 0.0))
+
+
+def reference_of(rec, records):
+    """Name of the record this one's oracle compares against, if the
+    oracle string names one that exists in `records` with a rate."""
+    m = ORACLE_REF_RE.search(str(rec.get("oracle", "")))
+    if m and m.group(1) in records and gf(records[m.group(1)]) > 0.0:
+        return m.group(1)
+    return None
+
+
+def main(argv):
+    if "--help" in argv or "-h" in argv:
+        print(__doc__)
+        return 0
+    tol = DEFAULT_TOLERANCE
+    if "--tolerance" in argv:
+        i = argv.index("--tolerance")
+        try:
+            tol = float(argv[i + 1])
+            if not 0.0 < tol < 1.0:
+                raise ValueError
+        except (IndexError, ValueError):
+            print("bench_diff: --tolerance needs a number in (0, 1)", file=sys.stderr)
+            return 2
+        argv = argv[:i] + argv[i + 2:]
+    if len(argv) != 2:
+        print("usage: bench_diff.py [--tolerance F] BASELINE.json CANDIDATE.json "
+              "(see --help)", file=sys.stderr)
+        return 2
+    base_path, cand_path = argv
+    base = load_records(base_path)
+    cand = load_records(cand_path)
+
+    shared = sorted(set(base) & set(cand))
+    only_base = sorted(set(base) - set(cand))
+    only_cand = sorted(set(cand) - set(base))
+    if not shared:
+        print("bench_diff: the two files share no record names — nothing to compare",
+              file=sys.stderr)
+        return 2
+
+    # A record is a "reference" if any shared record's oracle names it
+    # on both sides; references are the measuring stick, never gated.
+    ref_names = set()
+    for name in shared:
+        rb = reference_of(base[name], base)
+        rc = reference_of(cand[name], cand)
+        if rb and rb == rc:
+            ref_names.add(rb)
+
+    regressions = []
+    print(f"bench_diff: {base_path} vs {cand_path} "
+          f"({len(shared)} shared record(s), tolerance {tol:.0%})")
+    for name in shared:
+        b, c = base[name], cand[name]
+        rb = reference_of(b, base)
+        rc = reference_of(c, cand)
+        if rb and rb == rc and gf(b) > 0.0 and gf(c) > 0.0:
+            bs = gf(b) / gf(base[rb])
+            cs = gf(c) / gf(cand[rb])
+            ratio = cs / bs
+            regressed = cs < (1.0 - tol) * bs
+            detail = (f"{bs:.2f}x -> {cs:.2f}x vs {rb} "
+                      f"({ratio - 1.0:+.1%} relative to baseline)")
+        elif name in ref_names:
+            print(f"  =  {name}: reference record ({gf(b):.4f} -> {gf(c):.4f} GF/s; "
+                  "gated through the ratios above, host-speed drift expected)")
+            continue
+        elif gf(b) > 0.0 and gf(c) > 0.0:
+            ratio = gf(c) / gf(b)
+            regressed = gf(c) < (1.0 - tol) * gf(b)
+            detail = f"{gf(b):.4f} -> {gf(c):.4f} GF/s ({ratio - 1.0:+.1%} vs baseline)"
+        else:
+            bw, cw = float(b.get("wall_s", 0.0)), float(c.get("wall_s", 0.0))
+            if bw <= 0.0 or cw <= 0.0:
+                print(f"  ?  {name}: no usable gflops or wall_s on one side — skipped")
+                continue
+            ratio = bw / cw  # >1 means the candidate got faster
+            regressed = cw > (1.0 + tol) * bw
+            detail = f"{bw:.6f}s -> {cw:.6f}s wall ({ratio - 1.0:+.1%} vs baseline)"
+        mark = "FAIL" if regressed else ("  + " if ratio > 1.0 else "  ok")
+        print(f"{mark} {name}: {detail}")
+        if regressed:
+            regressions.append(name)
+
+    for name in only_base:
+        print(f"  -  {name}: only in baseline (informational)")
+    for name in only_cand:
+        print(f"  +  {name}: only in candidate (informational)")
+
+    if regressions:
+        print(f"\nbench_diff: {len(regressions)} record(s) regressed by more than "
+              f"{tol:.0%}: {', '.join(regressions)}", file=sys.stderr)
+        return 1
+    print(f"bench_diff: OK — no shared record regressed by more than {tol:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,6 +1,6 @@
-/* C mirror of the repo's three hot kernels, used to record a *measured*
- * BENCH_baseline.json in the offline builder image (which ships gcc and
- * python but no Rust toolchain — see tools/static_audit.sh for the full
+/* C mirror of the repo's hot kernels, used to record a *measured*
+ * baseline in the offline builder image (which ships gcc and python
+ * but no Rust toolchain — see tools/static_audit.sh for the full
  * rationale).
  *
  * Each benchmark mirrors the Rust kernel's floating-point semantics
@@ -12,12 +12,25 @@
  *   1. gemm_blocked vs gemm_naive   (rust/src/linalg/dense.rs::gemm_rows
  *      vs Mat::matmul_naive; BLIS jc->pc->ic nest, packed B panel,
  *      per-element ascending-k accumulation)
+ *   1b. gemm_blocked_avx2 / gemm_blocked_avx512 vs gemm_naive
+ *      (rust/src/linalg/simd.rs microkernel lanes: the j loop over the
+ *      packed panel runs 4- or 8-wide with explicit vmulpd+vaddpd —
+ *      never FMA — so each output element still sees one mul and one
+ *      add per k in ascending k, and every lane is bit-identical to
+ *      the scalar kernel; lanes picked by __builtin_cpu_supports, the
+ *      C twin of std::arch::is_x86_feature_detected!)
  *   2. spmm_blocked vs spmm_reference (rust/src/linalg/sparse.rs::
  *      Csr::spmm vs spmm_reference; column panels, packed panel, CSR
- *      nonzeros applied in ascending order)
+ *      nonzeros applied in ascending order). The pack predicate is the
+ *      traffic-model one: pack only when the panel fits the tile's
+ *      kc-resident B budget and the copy amortizes against the modeled
+ *      naive-vs-blocked words/flop gap — measured here both where it
+ *      engages (and wins) and where it falls back to the direct path.
  *   3. fused_concord_pass vs composed gradient+prox
  *      (rust/src/concord/ops.rs::gradient_block / prox_block_into; the
- *      fused single sweep must reproduce the two-pass composition)
+ *      fused sweep stages each row's gradient in an L1-resident row
+ *      buffer instead of a p×p G round trip — same per-element op
+ *      sequence, so it must reproduce the two-pass composition)
  *
  * Any oracle failure aborts with a nonzero exit — a baseline is only
  * written when every equivalence holds bitwise.
@@ -39,6 +52,10 @@
 #include <time.h>
 #include <unistd.h>
 
+#if defined(__x86_64__)
+#include <immintrin.h>
+#endif
+
 #ifndef M_PI
 #define M_PI 3.14159265358979323846
 #endif
@@ -47,6 +64,11 @@
 #define MC 128
 #define KC 256
 #define NC 512
+
+/* TileConfig::NAIVE_WORDS_PER_FLOP and gemm_words_per_flop() for the
+ * default tile: the traffic model the SpMM pack predicate prices. */
+#define NAIVE_WORDS_PER_FLOP 0.5
+#define TILE_WORDS_PER_FLOP (1.0 / (2.0 * NC) + 1.0 / (2.0 * MC) + 1.0 / KC)
 
 static double now_s(void) {
     struct timespec ts;
@@ -59,9 +81,12 @@ static int cmp_f64(const void *a, const void *b) {
     return (x > y) - (x < y);
 }
 
-static double median(double *v, int n) {
+/* Best-of-reps: on shared/steal-prone hosts interference only ever
+ * slows a rep down, so the minimum is the least-noisy estimate of the
+ * kernel's true rate (and what the >10% bench_diff gate compares). */
+static double best_of(double *v, int n) {
     qsort(v, n, sizeof(double), cmp_f64);
-    return (n % 2) ? v[n / 2] : 0.5 * (v[n / 2 - 1] + v[n / 2]);
+    return v[0];
 }
 
 /* xorshift64* — any fixed deterministic stream will do here; the
@@ -84,6 +109,23 @@ static double rng_normal(void) { /* Box–Muller, one branch of the pair */
 
 static int bits_equal(const double *a, const double *b, size_t n) {
     return memcmp(a, b, n * sizeof(double)) == 0;
+}
+
+/* Runtime ISA detection — the C twin of the Rust dispatcher's
+ * std::arch::is_x86_feature_detected! calls. */
+static int has_avx2(void) {
+#if defined(__x86_64__)
+    return __builtin_cpu_supports("avx2");
+#else
+    return 0;
+#endif
+}
+static int has_avx512(void) {
+#if defined(__x86_64__)
+    return __builtin_cpu_supports("avx512f");
+#else
+    return 0;
+#endif
 }
 
 /* --- 1. GEMM: naive reference vs blocked packed ---------------------- */
@@ -125,6 +167,166 @@ static void gemm_blocked(const double *a, const double *b, double *c, int p, dou
         }
     }
 }
+
+#if defined(__x86_64__)
+
+/* SIMD microkernel lanes — C twins of rust/src/linalg/simd.rs.
+ *
+ * Structure: the same jc->pc->ic panel nest, but inside a panel a 4-row
+ * MR slab accumulates an 8-wide NR sliver in registers across the whole
+ * kb sweep (partials loaded from / parked back into C, exactly like the
+ * Rust micro_full). The vectorization is across the 8 *independent*
+ * output columns, and every step is an explicit mul intrinsic followed
+ * by an add intrinsic (vmulpd+vaddpd, never vfmadd): per output element
+ * that is still one multiply and one add per k, in ascending k — the
+ * identical op sequence as the scalar kernel, hence bit-identical.
+ * Ragged row/column tails fall back to the scalar order. */
+
+__attribute__((target("avx2"))) static void gemm_blocked_avx2(const double *a, const double *b,
+                                                              double *c, int p, double *bpack) {
+    memset(c, 0, (size_t)p * p * sizeof(double));
+    for (int jc = 0; jc < p; jc += NC) {
+        int jb = (p - jc < NC) ? p - jc : NC;
+        for (int pc = 0; pc < p; pc += KC) {
+            int kb = (p - pc < KC) ? p - pc : KC;
+            for (int k = 0; k < kb; k++)
+                memcpy(bpack + (size_t)k * jb, b + (size_t)(pc + k) * p + jc,
+                       (size_t)jb * sizeof(double));
+            for (int ic = 0; ic < p; ic += MC) {
+                int ib = (p - ic < MC) ? p - ic : MC;
+                int iend4 = ic + (ib / 4) * 4;
+                int jend8 = (jb / 8) * 8;
+                for (int i = ic; i < iend4; i += 4) {
+                    const double *a0 = a + (size_t)i * p + pc;
+                    const double *a1 = a0 + p, *a2 = a1 + p, *a3 = a2 + p;
+                    double *c0 = c + (size_t)i * p + jc;
+                    double *c1 = c0 + p, *c2 = c1 + p, *c3 = c2 + p;
+                    for (int j = 0; j < jend8; j += 8) {
+                        __m256d s00 = _mm256_loadu_pd(c0 + j), s01 = _mm256_loadu_pd(c0 + j + 4);
+                        __m256d s10 = _mm256_loadu_pd(c1 + j), s11 = _mm256_loadu_pd(c1 + j + 4);
+                        __m256d s20 = _mm256_loadu_pd(c2 + j), s21 = _mm256_loadu_pd(c2 + j + 4);
+                        __m256d s30 = _mm256_loadu_pd(c3 + j), s31 = _mm256_loadu_pd(c3 + j + 4);
+                        for (int k = 0; k < kb; k++) {
+                            const double *brow = bpack + (size_t)k * jb + j;
+                            __m256d b0 = _mm256_loadu_pd(brow);
+                            __m256d b1 = _mm256_loadu_pd(brow + 4);
+                            __m256d av;
+                            av = _mm256_set1_pd(a0[k]);
+                            s00 = _mm256_add_pd(s00, _mm256_mul_pd(av, b0));
+                            s01 = _mm256_add_pd(s01, _mm256_mul_pd(av, b1));
+                            av = _mm256_set1_pd(a1[k]);
+                            s10 = _mm256_add_pd(s10, _mm256_mul_pd(av, b0));
+                            s11 = _mm256_add_pd(s11, _mm256_mul_pd(av, b1));
+                            av = _mm256_set1_pd(a2[k]);
+                            s20 = _mm256_add_pd(s20, _mm256_mul_pd(av, b0));
+                            s21 = _mm256_add_pd(s21, _mm256_mul_pd(av, b1));
+                            av = _mm256_set1_pd(a3[k]);
+                            s30 = _mm256_add_pd(s30, _mm256_mul_pd(av, b0));
+                            s31 = _mm256_add_pd(s31, _mm256_mul_pd(av, b1));
+                        }
+                        _mm256_storeu_pd(c0 + j, s00);
+                        _mm256_storeu_pd(c0 + j + 4, s01);
+                        _mm256_storeu_pd(c1 + j, s10);
+                        _mm256_storeu_pd(c1 + j + 4, s11);
+                        _mm256_storeu_pd(c2 + j, s20);
+                        _mm256_storeu_pd(c2 + j + 4, s21);
+                        _mm256_storeu_pd(c3 + j, s30);
+                        _mm256_storeu_pd(c3 + j + 4, s31);
+                    }
+                    for (int j = jend8; j < jb; j++) {
+                        double s0 = c0[j], s1 = c1[j], s2 = c2[j], s3 = c3[j];
+                        for (int k = 0; k < kb; k++) {
+                            double bv = bpack[(size_t)k * jb + j];
+                            s0 += a0[k] * bv;
+                            s1 += a1[k] * bv;
+                            s2 += a2[k] * bv;
+                            s3 += a3[k] * bv;
+                        }
+                        c0[j] = s0;
+                        c1[j] = s1;
+                        c2[j] = s2;
+                        c3[j] = s3;
+                    }
+                }
+                for (int i = iend4; i < ic + ib; i++) {
+                    double *crow = c + (size_t)i * p + jc;
+                    for (int k = 0; k < kb; k++) {
+                        double aik = a[(size_t)i * p + pc + k];
+                        const double *brow = bpack + (size_t)k * jb;
+                        for (int j = 0; j < jb; j++) crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+__attribute__((target("avx512f"))) static void gemm_blocked_avx512(const double *a,
+                                                                   const double *b, double *c,
+                                                                   int p, double *bpack) {
+    memset(c, 0, (size_t)p * p * sizeof(double));
+    for (int jc = 0; jc < p; jc += NC) {
+        int jb = (p - jc < NC) ? p - jc : NC;
+        for (int pc = 0; pc < p; pc += KC) {
+            int kb = (p - pc < KC) ? p - pc : KC;
+            for (int k = 0; k < kb; k++)
+                memcpy(bpack + (size_t)k * jb, b + (size_t)(pc + k) * p + jc,
+                       (size_t)jb * sizeof(double));
+            for (int ic = 0; ic < p; ic += MC) {
+                int ib = (p - ic < MC) ? p - ic : MC;
+                int iend4 = ic + (ib / 4) * 4;
+                int jend8 = (jb / 8) * 8;
+                for (int i = ic; i < iend4; i += 4) {
+                    const double *a0 = a + (size_t)i * p + pc;
+                    const double *a1 = a0 + p, *a2 = a1 + p, *a3 = a2 + p;
+                    double *c0 = c + (size_t)i * p + jc;
+                    double *c1 = c0 + p, *c2 = c1 + p, *c3 = c2 + p;
+                    for (int j = 0; j < jend8; j += 8) {
+                        __m512d s0 = _mm512_loadu_pd(c0 + j);
+                        __m512d s1 = _mm512_loadu_pd(c1 + j);
+                        __m512d s2 = _mm512_loadu_pd(c2 + j);
+                        __m512d s3 = _mm512_loadu_pd(c3 + j);
+                        for (int k = 0; k < kb; k++) {
+                            __m512d bv = _mm512_loadu_pd(bpack + (size_t)k * jb + j);
+                            s0 = _mm512_add_pd(s0, _mm512_mul_pd(_mm512_set1_pd(a0[k]), bv));
+                            s1 = _mm512_add_pd(s1, _mm512_mul_pd(_mm512_set1_pd(a1[k]), bv));
+                            s2 = _mm512_add_pd(s2, _mm512_mul_pd(_mm512_set1_pd(a2[k]), bv));
+                            s3 = _mm512_add_pd(s3, _mm512_mul_pd(_mm512_set1_pd(a3[k]), bv));
+                        }
+                        _mm512_storeu_pd(c0 + j, s0);
+                        _mm512_storeu_pd(c1 + j, s1);
+                        _mm512_storeu_pd(c2 + j, s2);
+                        _mm512_storeu_pd(c3 + j, s3);
+                    }
+                    for (int j = jend8; j < jb; j++) {
+                        double s0 = c0[j], s1 = c1[j], s2 = c2[j], s3 = c3[j];
+                        for (int k = 0; k < kb; k++) {
+                            double bv = bpack[(size_t)k * jb + j];
+                            s0 += a0[k] * bv;
+                            s1 += a1[k] * bv;
+                            s2 += a2[k] * bv;
+                            s3 += a3[k] * bv;
+                        }
+                        c0[j] = s0;
+                        c1[j] = s1;
+                        c2[j] = s2;
+                        c3[j] = s3;
+                    }
+                }
+                for (int i = iend4; i < ic + ib; i++) {
+                    double *crow = c + (size_t)i * p + jc;
+                    for (int k = 0; k < kb; k++) {
+                        double aik = a[(size_t)i * p + pc + k];
+                        const double *brow = bpack + (size_t)k * jb;
+                        for (int j = 0; j < jb; j++) crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#endif /* __x86_64__ */
 
 /* --- 2. SpMM: row-at-a-time reference vs column-blocked -------------- */
 
@@ -176,10 +378,25 @@ static void spmm_reference(const Csr *a, const double *b, double *c, int n) {
     }
 }
 
-/* Column-blocked mirror of Csr::spmm_mt_with (serial): NC-wide panels
- * of B packed contiguous, nonzeros applied in ascending CSR order per
- * panel — per element the same ascending-k op sequence as reference. */
-static void spmm_blocked(const Csr *a, const double *b, double *c, int n, double *bpack) {
+/* Traffic-model pack predicate, mirroring Csr::spmm_mt_with: pack a
+ * column panel only when (a) the output is wider than one panel, (b)
+ * the packed b->rows × NC panel fits the tile's kc-resident B budget —
+ * the residency gemm_words_per_flop assumes; a bigger panel is
+ * re-streamed from slow memory and the copy is pure overhead — and (c)
+ * the copy (rows·jb words) amortizes against the modeled traffic gap
+ * between the naive stream and the blocked schedule across the panel's
+ * 2·nnz·jb flops. Either path is bitwise identical; the predicate only
+ * picks the faster one. */
+static int spmm_should_pack(const Csr *a, int b_rows, int n) {
+    double gap = NAIVE_WORDS_PER_FLOP - TILE_WORDS_PER_FLOP;
+    return n > NC && b_rows <= KC && (double)b_rows <= 2.0 * (double)a->nnz * gap;
+}
+
+/* Column-blocked packed path of Csr::spmm_mt_with (serial): NC-wide
+ * panels of B packed contiguous, nonzeros applied in ascending CSR
+ * order per panel — per element the same ascending-k op sequence as
+ * reference. */
+static void spmm_packed(const Csr *a, const double *b, double *c, int n, double *bpack) {
     memset(c, 0, (size_t)a->rows * n * sizeof(double));
     for (int jc = 0; jc < n; jc += NC) {
         int jb = (n - jc < NC) ? n - jc : NC;
@@ -194,6 +411,15 @@ static void spmm_blocked(const Csr *a, const double *b, double *c, int n, double
             }
         }
     }
+}
+
+/* The predicated kernel the Rust spmm_mt_with now is: the traffic
+ * model picks the packed or the direct path. */
+static void spmm_blocked(const Csr *a, const double *b, double *c, int n, double *bpack) {
+    if (spmm_should_pack(a, a->cols, n))
+        spmm_packed(a, b, c, n, bpack);
+    else
+        spmm_reference(a, b, c, n);
 }
 
 /* --- 3. fused CONCORD gradient+prox pass ----------------------------- */
@@ -224,20 +450,26 @@ static void concord_composed(const double *omega, const double *w, const double 
     }
 }
 
-/* Fused single sweep: same per-element op sequence, no G round trip. */
+/* Fused sweep, row-buffered: each row's gradient is staged in `gbuf`
+ * (p doubles, L1-resident) instead of a p×p G matrix round trip, then
+ * the prox applies from the hot buffer. The two inner loops are
+ * composed's loops verbatim — same per-element op sequence — so the
+ * result is bitwise identical; only the G traffic is gone. (The
+ * earlier fused form interleaved the branchy soft() with the gradient
+ * math per element, which both defeated vectorization of the gradient
+ * arithmetic and still measured *slower* than composed — see
+ * BENCH_baseline.json.) */
 static void concord_fused(const double *omega, const double *w, const double *wt, double *out,
-                          int p, double lam1, double lam2, double tau) {
+                          double *gbuf, int p, double lam1, double lam2, double tau) {
     double thresh = tau * lam1;
     for (int i = 0; i < p; i++) {
         const double *orow = omega + (size_t)i * p;
         double *dst = out + (size_t)i * p;
-        for (int j = 0; j < p; j++) {
-            double gij = 0.5 * (w[(size_t)i * p + j] + wt[(size_t)i * p + j]) + lam2 * orow[j];
-            dst[j] = soft(orow[j] - tau * gij, thresh);
-        }
-        double gii = 0.5 * (w[(size_t)i * p + i] + wt[(size_t)i * p + i]) + lam2 * orow[i]
-                     - 1.0 / orow[i];
-        dst[i] = orow[i] - tau * gii;
+        for (int j = 0; j < p; j++)
+            gbuf[j] = 0.5 * (w[(size_t)i * p + j] + wt[(size_t)i * p + j]) + lam2 * orow[j];
+        gbuf[i] -= 1.0 / orow[i];
+        for (int j = 0; j < p; j++) dst[j] = soft(orow[j] - tau * gbuf[j], thresh);
+        dst[i] = orow[i] - tau * gbuf[i];
     }
 }
 
@@ -258,21 +490,37 @@ static double *rand_mat(int r, int c) {
     return m;
 }
 
+typedef void (*GemmFn)(const double *, const double *, double *, int, double *);
+
+static double time_gemm(GemmFn f, const double *a, const double *b, double *c, int p,
+                        double *bpack, int reps) {
+    double t[16], t0;
+    for (int r = 0; r < reps; r++) {
+        t0 = now_s();
+        f(a, b, c, p, bpack);
+        t[r] = now_s() - t0;
+    }
+    return best_of(t, reps);
+}
+
 int main(int argc, char **argv) {
     const char *git_rev = argc > 1 ? argv[1] : "unknown";
     const char *date = argc > 2 ? argv[2] : "unknown";
-    const int reps = 5;
+    /* Best-of-15: interference on shared hosts only slows reps down,
+     * so more reps tighten the minimum toward the true rate (the
+     * sub-50ms SpMM/fused records jitter ~5% at best-of-5). */
+    const int reps = 15;
     double t[16], t0;
     char shape[64];
     long cpus = sysconf(_SC_NPROCESSORS_ONLN);
 
-    printf("{\n  \"bench\": \"baseline\",\n  \"git_rev\": \"%s\",\n  \"date\": \"%s\",\n",
+    printf("{\n  \"bench\": \"simd_baseline\",\n  \"git_rev\": \"%s\",\n  \"date\": \"%s\",\n",
            git_rev, date);
     printf("  \"harness\": \"tools/bench_mirror.c — C mirror of the Rust kernels (same loop "
            "order and f64 op sequence, -ffp-contract=off), measured in the offline builder "
            "image; no Rust toolchain is available there, see tools/static_audit.sh\",\n");
-    printf("  \"host\": {\n    \"os\": \"linux\",\n    \"arch\": \"%s\",\n    \"cpus\": %ld\n"
-           "  },\n  \"records\": [\n",
+    printf("  \"host\": {\n    \"os\": \"linux\",\n    \"arch\": \"%s\",\n    \"cpus\": %ld,\n"
+           "    \"simd\": \"%s%s%s\"\n  },\n  \"records\": [\n",
 #if defined(__x86_64__)
            "x86_64",
 #elif defined(__aarch64__)
@@ -280,9 +528,10 @@ int main(int argc, char **argv) {
 #else
            "unknown",
 #endif
-           cpus > 0 ? cpus : 1);
+           cpus > 0 ? cpus : 1, "scalar", has_avx2() ? " avx2" : "",
+           has_avx512() ? " avx512f" : "");
 
-    /* 1. GEMM blocked vs naive, p = 512. */
+    /* 1. GEMM lanes vs naive, p = 512. */
     {
         int p = 512;
         double flops = 2.0 * (double)p * p * p;
@@ -295,13 +544,8 @@ int main(int argc, char **argv) {
             gemm_naive(a, b, cn, p);
             t[r] = now_s() - t0;
         }
-        double naive_s = median(t, reps);
-        for (int r = 0; r < reps; r++) {
-            t0 = now_s();
-            gemm_blocked(a, b, cb, p, bpack);
-            t[r] = now_s() - t0;
-        }
-        double blk_s = median(t, reps);
+        double naive_s = best_of(t, reps);
+        double blk_s = time_gemm(gemm_blocked, a, b, cb, p, bpack, reps);
         if (!bits_equal(cn, cb, (size_t)p * p)) {
             fprintf(stderr, "FATAL: blocked GEMM != naive bitwise at p=%d\n", p);
             return 1;
@@ -310,10 +554,100 @@ int main(int argc, char **argv) {
         emit("gemm_naive", shape, 1, "-", flops / naive_s / 1e9, naive_s, reps, "");
         emit("gemm_blocked", shape, 1, "128,256,512", flops / blk_s / 1e9, blk_s, reps,
              "bitwise == gemm_naive (asserted this run)");
-        free(a); free(b); free(cn); free(cb); free(bpack);
+#if defined(__x86_64__)
+        if (has_avx2()) {
+            double s = time_gemm(gemm_blocked_avx2, a, b, cb, p, bpack, reps);
+            if (!bits_equal(cn, cb, (size_t)p * p)) {
+                fprintf(stderr, "FATAL: AVX2 GEMM != naive bitwise at p=%d\n", p);
+                return 1;
+            }
+            emit("gemm_blocked_avx2", shape, 1, "128,256,512", flops / s / 1e9, s, reps,
+                 "bitwise == gemm_naive (asserted this run; vmulpd+vaddpd, no FMA)");
+        }
+        if (has_avx512()) {
+            double s = time_gemm(gemm_blocked_avx512, a, b, cb, p, bpack, reps);
+            if (!bits_equal(cn, cb, (size_t)p * p)) {
+                fprintf(stderr, "FATAL: AVX-512 GEMM != naive bitwise at p=%d\n", p);
+                return 1;
+            }
+            emit("gemm_blocked_avx512", shape, 1, "128,256,512", flops / s / 1e9, s, reps,
+                 "bitwise == gemm_naive (asserted this run; vmulpd+vaddpd, no FMA)");
+        }
+        /* The dispatched lane (__builtin_cpu_supports, best available)
+         * — what the Rust side's --kernel auto resolves to. */
+        {
+            GemmFn best = has_avx512() ? gemm_blocked_avx512
+                          : has_avx2() ? gemm_blocked_avx2
+                                       : gemm_blocked;
+            const char *lane = has_avx512() ? "avx512" : has_avx2() ? "avx2" : "scalar";
+            double s = time_gemm(best, a, b, cb, p, bpack, reps);
+            if (!bits_equal(cn, cb, (size_t)p * p)) {
+                fprintf(stderr, "FATAL: dispatched GEMM != naive bitwise at p=%d\n", p);
+                return 1;
+            }
+            char oracle[96];
+            snprintf(oracle, sizeof oracle,
+                     "dispatch picked %s; bitwise == gemm_naive (asserted this run)", lane);
+            emit("gemm_kernel_auto", shape, 1, "128,256,512", flops / s / 1e9, s, reps, oracle);
+        }
+#endif
+        free(a);
+        free(b);
+        free(cn);
+        free(cb);
+        free(bpack);
     }
 
-    /* 2. SpMM blocked vs reference, p = 1024, density 0.02. */
+    /* 2a. SpMM where the traffic model says pack: short B (rows <= KC,
+     * panel resident) and a wide output (n >> NC, so the direct path
+     * re-streams a crow far beyond L1 per nonzero). */
+    {
+        int rows = 128, n = 8192;
+        double density = 0.5;
+        Csr m = csr_random(rows, density);
+        double *b = rand_mat(rows, n);
+        double *cr = malloc((size_t)rows * n * sizeof(double));
+        double *cb = malloc((size_t)rows * n * sizeof(double));
+        double *bpack = malloc((size_t)rows * NC * sizeof(double));
+        double flops = 2.0 * (double)m.nnz * n;
+        if (!spmm_should_pack(&m, rows, n)) {
+            fprintf(stderr, "FATAL: pack predicate refused the pack-profitable shape\n");
+            return 1;
+        }
+        for (int r = 0; r < reps; r++) {
+            t0 = now_s();
+            spmm_reference(&m, b, cr, n);
+            t[r] = now_s() - t0;
+        }
+        double ref_s = best_of(t, reps);
+        for (int r = 0; r < reps; r++) {
+            t0 = now_s();
+            spmm_blocked(&m, b, cb, n, bpack);
+            t[r] = now_s() - t0;
+        }
+        double blk_s = best_of(t, reps);
+        if (!bits_equal(cr, cb, (size_t)rows * n)) {
+            fprintf(stderr, "FATAL: blocked SpMM != reference bitwise (packed path)\n");
+            return 1;
+        }
+        snprintf(shape, sizeof shape, "rows=%d n=%d density=%.2f", rows, n, density);
+        emit("spmm_reference", shape, 1, "-", flops / ref_s / 1e9, ref_s, reps, "");
+        emit("spmm_blocked", shape, 1, "128,256,512", flops / blk_s / 1e9, blk_s, reps,
+             "bitwise == spmm_reference (asserted this run; predicate packed)");
+        free(m.indptr);
+        free(m.indices);
+        free(m.values);
+        free(b);
+        free(cr);
+        free(cb);
+        free(bpack);
+    }
+
+    /* 2b. The old square shape (p=1024, d=0.02) where packing measured
+     * *slower* than reference in BENCH_baseline.json: the predicate now
+     * prices the 1024-row panel over the kc=256 residency budget and
+     * takes the direct path, so the regression is gone by construction
+     * — recorded to pin that the fallback costs nothing. */
     {
         int p = 1024;
         double density = 0.02;
@@ -323,28 +657,37 @@ int main(int argc, char **argv) {
         double *cb = malloc((size_t)p * p * sizeof(double));
         double *bpack = malloc((size_t)p * NC * sizeof(double));
         double flops = 2.0 * (double)m.nnz * p;
+        if (spmm_should_pack(&m, p, p)) {
+            fprintf(stderr, "FATAL: pack predicate packed the regression shape\n");
+            return 1;
+        }
         for (int r = 0; r < reps; r++) {
             t0 = now_s();
             spmm_reference(&m, b, cr, p);
             t[r] = now_s() - t0;
         }
-        double ref_s = median(t, reps);
+        double ref_s = best_of(t, reps);
         for (int r = 0; r < reps; r++) {
             t0 = now_s();
             spmm_blocked(&m, b, cb, p, bpack);
             t[r] = now_s() - t0;
         }
-        double blk_s = median(t, reps);
+        double blk_s = best_of(t, reps);
         if (!bits_equal(cr, cb, (size_t)p * p)) {
-            fprintf(stderr, "FATAL: blocked SpMM != reference bitwise at p=%d\n", p);
+            fprintf(stderr, "FATAL: blocked SpMM != reference bitwise (direct path)\n");
             return 1;
         }
         snprintf(shape, sizeof shape, "p=%d density=%.2f", p, density);
-        emit("spmm_reference", shape, 1, "-", flops / ref_s / 1e9, ref_s, reps, "");
-        emit("spmm_blocked", shape, 1, "128,256,512", flops / blk_s / 1e9, blk_s, reps,
-             "bitwise == spmm_reference (asserted this run)");
-        free(m.indptr); free(m.indices); free(m.values);
-        free(b); free(cr); free(cb); free(bpack);
+        emit("spmm_reference_square", shape, 1, "-", flops / ref_s / 1e9, ref_s, reps, "");
+        emit("spmm_auto_square", shape, 1, "128,256,512", flops / blk_s / 1e9, blk_s, reps,
+             "bitwise == spmm_reference_square (asserted this run; predicate took direct path)");
+        free(m.indptr);
+        free(m.indices);
+        free(m.values);
+        free(b);
+        free(cr);
+        free(cb);
+        free(bpack);
     }
 
     /* 3. Fused CONCORD gradient+prox pass vs composed, p = 512. */
@@ -366,6 +709,7 @@ int main(int argc, char **argv) {
         for (int i = 0; i < p; i++)
             for (int j = 0; j < p; j++) wt[(size_t)i * p + j] = w[(size_t)j * p + i];
         double *g = malloc((size_t)p * p * sizeof(double));
+        double *gbuf = malloc((size_t)p * sizeof(double));
         double *oc = malloc((size_t)p * p * sizeof(double));
         double *of = malloc((size_t)p * p * sizeof(double));
         double lam1 = 0.3, lam2 = 0.1, tau = 0.5;
@@ -374,13 +718,13 @@ int main(int argc, char **argv) {
             concord_composed(omega, w, wt, g, oc, p, lam1, lam2, tau);
             t[r] = now_s() - t0;
         }
-        double comp_s = median(t, reps);
+        double comp_s = best_of(t, reps);
         for (int r = 0; r < reps; r++) {
             t0 = now_s();
-            concord_fused(omega, w, wt, of, p, lam1, lam2, tau);
+            concord_fused(omega, w, wt, of, gbuf, p, lam1, lam2, tau);
             t[r] = now_s() - t0;
         }
-        double fused_s = median(t, reps);
+        double fused_s = best_of(t, reps);
         if (!bits_equal(oc, of, (size_t)p * p)) {
             fprintf(stderr, "FATAL: fused CONCORD pass != composed bitwise at p=%d\n", p);
             return 1;
@@ -391,8 +735,14 @@ int main(int argc, char **argv) {
         emit("concord_gradient_prox_composed", shape, 1, "-", flops / comp_s / 1e9, comp_s,
              reps, "");
         emit("fused_concord_pass", shape, 1, "-", flops / fused_s / 1e9, fused_s, reps,
-             "bitwise == composed gradient+prox (asserted this run)");
-        free(omega); free(w); free(wt); free(g); free(oc); free(of);
+             "bitwise == concord_gradient_prox_composed (asserted this run; row-buffered)");
+        free(omega);
+        free(w);
+        free(wt);
+        free(g);
+        free(gbuf);
+        free(oc);
+        free(of);
     }
 
     printf("\n  ]\n}\n");

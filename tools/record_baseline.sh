@@ -1,5 +1,10 @@
 #!/bin/sh
-# Record BENCH_baseline.json via the C mirror harness.
+# Record BENCH_simd_baseline.json via the C mirror harness.
+#
+# (BENCH_baseline.json, recorded before the SIMD kernel tier landed, is
+# kept committed as the scalar-era historical record; this script now
+# writes the superseding record with the AVX2/AVX-512 lanes, the
+# predicated SpMM, and the row-buffered fused pass.)
 #
 # The preferred recorder is the Rust one:
 #
@@ -17,7 +22,7 @@ set -e
 cd "$(dirname "$0")/.."
 
 CC="${CC:-cc}"
-OUT="${1:-BENCH_baseline.json}"
+OUT="${1:-BENCH_simd_baseline.json}"
 BIN="$(mktemp -t bench_mirror.XXXXXX)"
 trap 'rm -f "$BIN"' EXIT
 

@@ -28,6 +28,10 @@ Checks (each a numbered section below):
                            lists of the std/anyhow format macros
  13. deprecated wrappers — the `_mat`/`_src` compatibility shims are only
                            spelled in their definition and re-export files
+ 14. unsafe containment  — the `unsafe` keyword is only spelled in the two
+                           audited homes (the SIMD microkernel module and
+                           the vendored affinity shim); every other file
+                           stays in safe Rust
 
 Exit 0 iff every check passes.  Run via tools/static_audit.sh.
 """
@@ -685,7 +689,48 @@ def check_deprecated_wrappers():
                 "canonical XSource-taking entry point instead")
 
 
+# ---------------------------------------------------------------------------
+# 14: unsafe containment.  Determinism rule 10 rests on exactly two audited
+# unsafe surfaces: the `target_feature` SIMD microkernels (whose safe wrappers
+# re-check CPU support) and the vendored sched_setaffinity shim.  No other
+# file may spell `unsafe` — a third unsafe block must either move into one of
+# these homes or grow this allowlist in review.  Comments and string literals
+# are stripped first, so prose about unsafety stays legal.
+# ---------------------------------------------------------------------------
+UNSAFE_HOMES = {
+    "rust/src/linalg/simd.rs",    # AVX2/AVX-512 microkernels + safe wrappers
+    "vendor/affinity/src/lib.rs", # sched_setaffinity syscall shim
+}
+
+
+def check_unsafe_containment():
+    pat = re.compile(r"\bunsafe\b")
+    for path in rust_files():
+        if str(path.relative_to(REPO)) in UNSAFE_HOMES:
+            continue
+        code = code_of(path)
+        for m in pat.finditer(code):
+            lineno = code[: m.start()].count("\n") + 1
+            err(path, lineno,
+                "`unsafe` outside the audited homes (rust/src/linalg/simd.rs, "
+                "vendor/affinity/src/lib.rs) — keep new code in safe Rust or "
+                "grow the check-14 allowlist in review")
+
+
+def selftest_unsafe_containment():
+    """Negative self-test: the check must flag an unsafe block in a
+    non-allowlisted file and stay quiet about one in an audited home."""
+    code = strip_noncode("fn f() { unsafe { core::hint::unreachable_unchecked() } }\n"
+                         "// unsafe in a comment is fine\n"
+                         'let s = "unsafe in a string is fine";\n')
+    hits = list(re.finditer(r"\bunsafe\b", code))
+    assert len(hits) == 1, "check 14 self-test: lexer must keep exactly the code `unsafe`"
+    assert "rust/src/linalg/simd.rs" in UNSAFE_HOMES and len(UNSAFE_HOMES) == 2, \
+        "check 14 self-test: allowlist drifted"
+
+
 def main():
+    selftest_unsafe_containment()
     check_balance_and_lines()
     check_cargo_targets()
     tree = check_mod_tree()
@@ -697,6 +742,7 @@ def main():
     check_struct_literals()
     check_format_args()
     check_deprecated_wrappers()
+    check_unsafe_containment()
     n_files = sum(1 for _ in rust_files())
     if errors:
         for e in errors:
@@ -704,7 +750,7 @@ def main():
         print(f"\nstatic audit: {len(errors)} finding(s) across {n_files} Rust files",
               file=sys.stderr)
         return 1
-    print(f"static audit: OK ({n_files} Rust files, 13 check classes)")
+    print(f"static audit: OK ({n_files} Rust files, 14 check classes)")
     return 0
 
 

@@ -5,12 +5,12 @@
 # no network), so `cargo build --release && cargo test -q` cannot run
 # there.  This script is the documented fallback named by ISSUE-7's
 # acceptance criteria: it runs the Rust-aware static audit
-# (tools/static_audit.py, 13 check classes: delimiter balance, line
+# (tools/static_audit.py, 14 check classes: delimiter balance, line
 # discipline, cargo target paths, module tree, anyhow shim coverage,
 # crate-path/use resolution, feature gates, pub-item resolution, bench
 # entry points, doc-test examples, struct-literal field coverage,
-# format-argument counts, deprecated-wrapper containment) and exits
-# non-zero on any finding.
+# format-argument counts, deprecated-wrapper containment, unsafe
+# containment) and exits non-zero on any finding.
 #
 # When a real toolchain IS present (GitHub CI), run the tier-1 commands
 # instead — this audit is a floor, not a substitute:

@@ -1,0 +1,72 @@
+//! Thread→CPU affinity, vendored (no crates.io access in the offline
+//! build image): a thin binding to Linux's `sched_setaffinity(2)` for
+//! the pool's `--pin-cores` knob, and a no-op returning `false` on
+//! every other platform.
+//!
+//! Pinning is a **schedule-only** knob (ARCHITECTURE.md determinism
+//! rule 10): it decides which core runs a worker, never what the
+//! worker computes — so a failed or unsupported pin is silently
+//! ignored and the caller just runs unpinned.
+//!
+//! This file and `rust/src/linalg/simd.rs` are the only places in the
+//! tree allowed to spell `unsafe` (`tools/static_audit.py` check 14).
+//! The single unsafe block is the FFI call itself; the mask is a local
+//! fixed-size bit array matching the kernel's `cpu_set_t` layout
+//! (1024 bits), and `pid = 0` addresses the calling thread only.
+
+/// Number of 64-bit words in the affinity mask — 1024 CPUs, the
+/// default kernel `CPU_SETSIZE`.
+#[cfg(target_os = "linux")]
+const MASK_WORDS: usize = 16;
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    /// `int sched_setaffinity(pid_t pid, size_t cpusetsize, const cpu_set_t *mask)`
+    fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+}
+
+/// Pin the **calling thread** to `cpu` (a 0-based logical CPU index).
+/// Returns `true` if the kernel accepted the mask; `false` on any
+/// failure, on out-of-range indices, and on non-Linux platforms —
+/// callers treat `false` as "run unpinned", never as an error.
+#[cfg(target_os = "linux")]
+pub fn pin_to_cpu(cpu: usize) -> bool {
+    if cpu >= MASK_WORDS * 64 {
+        return false;
+    }
+    let mut mask = [0u64; MASK_WORDS];
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    // SAFETY: the mask is a live, properly-sized local buffer for the
+    // whole call; pid 0 means the calling thread; sched_setaffinity
+    // only reads `cpusetsize` bytes from it.
+    let rc = unsafe { sched_setaffinity(0, MASK_WORDS * 8, mask.as_ptr()) };
+    rc == 0
+}
+
+/// Non-Linux platforms: affinity is unsupported; report "not pinned".
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_cpu(_cpu: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_of_range_is_refused() {
+        assert!(!pin_to_cpu(usize::MAX));
+        assert!(!pin_to_cpu(16 * 64));
+    }
+
+    #[test]
+    fn pinning_is_a_clean_yes_or_no() {
+        // On non-Linux this is the documented no-op; on Linux the call
+        // succeeds unless the cgroup's cpuset excludes CPU 0 (possible
+        // in constrained CI sandboxes). Either answer is legitimate —
+        // what the shim guarantees is a panic-free bool, and that a
+        // success can only happen where the platform supports it.
+        let pinned = pin_to_cpu(0);
+        assert!(!pinned || cfg!(target_os = "linux"));
+    }
+}
